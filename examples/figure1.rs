@@ -1,0 +1,60 @@
+//! End-to-end driver: regenerate the paper's Fig. 1 (relative error vs
+//! time for FPA vs FISTA / GRock / Gauss-Seidel / ADMM) on a real
+//! workload, exercising the full stack: Nesterov datagen → problems →
+//! all six solvers → greedy coordinator → simulated-parallel cost model
+//! → CSV + ASCII rendering.
+//!
+//! Run (scaled panels, a few minutes):
+//!   cargo run --release --example figure1
+//! Options:
+//!   cargo run --release --example figure1 -- --panel d --scale 0.05
+//!   cargo run --release --example figure1 -- --full      # paper sizes
+//!
+//! The per-panel CSV series land in results/; EXPERIMENTS.md records the
+//! paper-vs-measured comparison for the checked-in run.
+
+use flexa::bench::fig1::{paper_algos, run_panel, PanelSpec};
+use flexa::cli::Command;
+use std::path::Path;
+
+fn main() -> anyhow::Result<()> {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let cmd = Command::new("figure1", "regenerate the paper's Fig. 1 panels")
+        .opt("panel", Some("all"), "a | b | c | d | all")
+        .opt("scale", Some("0.2"), "problem-size scale (1.0 = paper size)")
+        .opt("realizations", Some("1"), "instances averaged per panel")
+        .opt("budget", Some("60"), "per-solver wall-clock budget (s)")
+        .opt("out", Some("results"), "output directory")
+        .flag("full", "run the paper-size panels (hours on one core)");
+    let p = cmd.parse(&args)?;
+
+    let panels: Vec<char> = match p.str("panel")? {
+        "all" => vec!['a', 'b', 'c', 'd'],
+        s => vec![s.chars().next().unwrap()],
+    };
+    let scale = if p.flag("full") { 1.0 } else { p.f64("scale")? };
+    let out = Path::new(p.str("out")?).to_path_buf();
+
+    for panel in panels {
+        // Panel d is 10x the work of a-c; shrink it further by default so
+        // the default run stays laptop-sized.
+        let eff_scale = if panel == 'd' && !p.flag("full") { scale * 0.25 } else { scale };
+        let spec = PanelSpec::paper(panel)?
+            .scaled(eff_scale)
+            .with_realizations(p.usize("realizations")?)
+            .with_budget(p.f64("budget")?);
+        let algos = paper_algos(spec.procs);
+        println!(
+            "\n=== panel ({panel}): {}x{}, {:.0}% nnz, {} simulated procs ===",
+            spec.rows,
+            spec.cols,
+            spec.sparsity * 100.0,
+            spec.procs
+        );
+        let result = run_panel(&spec, &algos, Some(&out))?;
+        println!("{}", result.render(true));
+        println!("{}", result.summary_table(true));
+    }
+    println!("CSV series in {}", out.display());
+    Ok(())
+}

@@ -1,0 +1,59 @@
+//! Group Lasso (paper §2, third bullet): `min ‖Ax−b‖² + c·Σᵢ‖xᵢ‖₂`.
+//!
+//! Demonstrates the framework's block flexibility (`nᵢ > 1`): the same
+//! Algorithm 1 with the block soft-threshold best-response recovers
+//! group-sparse structure, and the greedy ρ-selection operates on whole
+//! blocks. Compares FPA against FISTA and block Gauss-Seidel.
+//!
+//! Run: `cargo run --release --example group_lasso`
+
+use flexa::algos::fista::Fista;
+use flexa::algos::fpa::Fpa;
+use flexa::algos::gauss_seidel::GaussSeidel;
+use flexa::algos::{SolveOptions, Solver};
+use flexa::datagen::NesterovLasso;
+use flexa::linalg::ops;
+use flexa::problems::group_lasso::GroupLasso;
+use flexa::problems::CompositeProblem;
+
+fn main() {
+    let (m, n, block) = (300, 1200, 4);
+    // Plant a group-sparse signal: reuse the Nesterov instance for A and
+    // b (its scalar-sparse x* also has group structure at block level).
+    let inst = NesterovLasso::new(m, n, 0.1, 1.0).seed(11).generate();
+    let problem = GroupLasso::new(inst.a, inst.b, 1.0, block);
+    println!(
+        "group lasso: A {}x{}, {} blocks of {} variables",
+        m,
+        n,
+        problem.layout().num_blocks(),
+        block
+    );
+
+    let opts = SolveOptions::default().with_max_iters(4000).with_target(0.0);
+    let mut results = Vec::new();
+    results.push(("fpa", Fpa::paper_defaults(&problem).solve(&problem, &opts)));
+    results.push(("fista", Fista::default().solve(&problem, &opts)));
+    results.push(("block-gs", GaussSeidel::default().solve(&problem, &opts)));
+
+    // No planted V* for the group problem: use the best found across all
+    // methods as the reference and report gaps.
+    let v_best = results
+        .iter()
+        .map(|(_, r)| r.objective)
+        .fold(f64::INFINITY, f64::min);
+    println!("best objective found: {v_best:.6}");
+    for (name, r) in &results {
+        let gap = (r.objective - v_best) / v_best.abs().max(1.0);
+        // Count active (non-zero) groups of the solution.
+        let active = (0..problem.layout().num_blocks())
+            .filter(|&i| ops::nrm2(&r.x[problem.layout().range(i)]) > 1e-6)
+            .count();
+        println!(
+            "  {name:<10} V = {:.6}  gap = {gap:.2e}  active groups = {active}  iters = {}  t = {:.2}s",
+            r.objective,
+            r.iterations,
+            r.trace.last().map(|l| l.time_s).unwrap_or(0.0)
+        );
+    }
+}

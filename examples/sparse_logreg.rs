@@ -1,0 +1,68 @@
+//! Sparse logistic regression (paper §2, fourth bullet):
+//! `min Σⱼ log(1 + exp(−aⱼ yⱼᵀx)) + c‖x‖₁`.
+//!
+//! Exercises the framework on a *non-quadratic* smooth loss: FPA uses
+//! the diagonal second-order surrogate (a valid `Pᵢ` satisfying P1–P3)
+//! and still converges per Theorem 1. Reports classification accuracy
+//! and support recovery against the generating hyperplane.
+//!
+//! Run: `cargo run --release --example sparse_logreg`
+
+use flexa::algos::fista::Fista;
+use flexa::algos::fpa::Fpa;
+use flexa::algos::{SolveOptions, Solver};
+use flexa::datagen::SparseClassification;
+use flexa::linalg::{ops, MatVec};
+use flexa::problems::logreg::SparseLogReg;
+
+fn main() {
+    let (samples, features) = (600, 1500);
+    let gen = SparseClassification::new(samples, features, 0.05)
+        .seed(23)
+        .label_noise(0.02);
+    let inst = gen.generate();
+    let w_true = inst.w_true.clone();
+    println!(
+        "sparse logistic regression: {samples} samples, {features} features, true support = {}",
+        ops::nnz(&w_true, 0.0)
+    );
+
+    let problem = SparseLogReg::new(inst.m, 2.0);
+    let opts = SolveOptions {
+        max_iters: 3000,
+        max_seconds: 60.0,
+        target_rel_err: 0.0, // no planted V*: run to budget
+        ..Default::default()
+    };
+
+    let fpa = Fpa::paper_defaults(&problem).solve(&problem, &opts);
+    let fista = Fista::default().solve(&problem, &opts);
+
+    for (name, r) in [("fpa", &fpa), ("fista", &fista)] {
+        // Label-scaled margins: row i of M is a_i * y_i, so a correct
+        // prediction is margin > 0.
+        let mut z = vec![0.0; samples];
+        problem.margins(&r.x, &mut z);
+        let correct = z.iter().filter(|&&zi| zi > 0.0).count();
+        println!(
+            "  {name:<6} V = {:.4}  train acc = {:.1}%  ‖x‖₀ = {}  iters = {}  t = {:.2}s",
+            r.objective,
+            100.0 * correct as f64 / samples as f64,
+            ops::nnz(&r.x, 1e-6),
+            r.iterations,
+            r.trace.last().map(|l| l.time_s).unwrap_or(0.0)
+        );
+    }
+
+    // Support recovery vs the generating hyperplane.
+    let recovered = fpa
+        .x
+        .iter()
+        .zip(&w_true)
+        .filter(|(xi, wi)| (xi.abs() > 1e-6) && (wi.abs() > 0.0))
+        .count();
+    println!(
+        "FPA recovered {recovered} of {} true-support coordinates",
+        ops::nnz(&w_true, 0.0)
+    );
+}

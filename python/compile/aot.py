@@ -1,0 +1,139 @@
+"""AOT lowering: jit the L2 graphs, lower to HLO TEXT, write artifacts.
+
+HLO *text* (not `.serialize()`d protos) is the interchange format: jax
+>= 0.5 emits protos with 64-bit instruction ids which the image's
+xla_extension 0.5.1 rejects (`proto.id() <= INT_MAX`); the text parser
+reassigns ids and round-trips cleanly. See /opt/xla-example/README.md and
+gen_hlo.py there.
+
+Usage (from python/):
+
+    python -m compile.aot --out-dir ../artifacts \
+        --shapes 100x400,200x1000 [--medium]
+
+Writes `<graph>.<m>x<n>.hlo.txt` per graph/shape plus `manifest.txt`
+(the contract consumed by rust/src/runtime/registry.rs).
+"""
+
+import argparse
+import functools
+import os
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import model
+
+DTYPE = jnp.float32
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO -> XlaComputation -> HLO text (id-safe interchange)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def spec(shape):
+    return jax.ShapeDtypeStruct(shape, DTYPE)
+
+
+def scalar():
+    return jax.ShapeDtypeStruct((), DTYPE)
+
+
+def lower_fpa_lasso_step(m, n):
+    fn = jax.jit(model.fpa_lasso_step)
+    return fn.lower(
+        spec((m, n)), spec((m,)), spec((n,)), spec((n,)),
+        scalar(), scalar(), scalar(), scalar(),
+    )
+
+
+def lower_objective(m, n):
+    fn = jax.jit(model.objective)
+    return fn.lower(spec((m, n)), spec((m,)), spec((n,)), scalar())
+
+
+def lower_fista_step(m, n):
+    fn = jax.jit(model.fista_step)
+    return fn.lower(
+        spec((m, n)), spec((m,)), spec((n,)), spec((n,)),
+        scalar(), scalar(), scalar(),
+    )
+
+
+def lower_fpa_group_step(m, n, block_size):
+    fn = jax.jit(functools.partial(model.fpa_group_lasso_step, block_size=block_size))
+    return fn.lower(
+        spec((m, n)), spec((m,)), spec((n,)), spec((n,)),
+        scalar(), scalar(), scalar(), scalar(),
+    )
+
+
+GRAPHS = {
+    "fpa_lasso_step": lower_fpa_lasso_step,
+    "objective": lower_objective,
+    "fista_step": lower_fista_step,
+}
+
+
+def build(out_dir, shapes, group_block=4):
+    os.makedirs(out_dir, exist_ok=True)
+    manifest_lines = ["# artifacts built by python/compile/aot.py"]
+    for (m, n) in shapes:
+        for graph, lower in GRAPHS.items():
+            name = f"{graph}.{m}x{n}"
+            fname = f"{name}.hlo.txt"
+            text = to_hlo_text(lower(m, n))
+            with open(os.path.join(out_dir, fname), "w") as f:
+                f.write(text)
+            manifest_lines.append(f"{name} {fname} rows={m} cols={n} dtype=f32")
+            print(f"wrote {fname} ({len(text)} chars)")
+        # Group-lasso step only for shapes divisible by the block size.
+        if n % group_block == 0:
+            name = f"fpa_group{group_block}_step.{m}x{n}"
+            fname = f"{name}.hlo.txt"
+            text = to_hlo_text(lower_fpa_group_step(m, n, group_block))
+            with open(os.path.join(out_dir, fname), "w") as f:
+                f.write(text)
+            manifest_lines.append(f"{name} {fname} rows={m} cols={n} dtype=f32")
+            print(f"wrote {fname} ({len(text)} chars)")
+    with open(os.path.join(out_dir, "manifest.txt"), "w") as f:
+        f.write("\n".join(manifest_lines) + "\n")
+    print(f"manifest: {len(manifest_lines) - 1} artifacts")
+
+
+def parse_shapes(s):
+    shapes = []
+    for part in s.split(","):
+        m, n = part.strip().split("x")
+        shapes.append((int(m), int(n)))
+    return shapes
+
+
+def main():
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out-dir", default="../artifacts")
+    ap.add_argument(
+        "--shapes",
+        default="100x400,200x1000",
+        help="comma-separated MxN shape classes to AOT",
+    )
+    ap.add_argument(
+        "--medium",
+        action="store_true",
+        help="also AOT the paper's medium panel shape (2000x10000; slow)",
+    )
+    args = ap.parse_args()
+    shapes = parse_shapes(args.shapes)
+    if args.medium:
+        shapes.append((2000, 10000))
+    build(args.out_dir, shapes)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,5 @@
+"""Pallas kernels (L1) and their pure-jnp oracles."""
+
+from . import group_prox, matvec, ref, soft_threshold
+
+__all__ = ["group_prox", "matvec", "ref", "soft_threshold"]

@@ -1,0 +1,50 @@
+"""L1 Pallas kernel: block (group) soft-threshold — the group-Lasso
+best-response prox (paper §2, third bullet).
+
+Each grid instance handles a tile of whole blocks: reshapes its
+(TILE_BLOCKS * block_size,) slab to (TILE_BLOCKS, block_size), computes
+per-block norms on the VPU, and rescales. Block boundaries never cross
+tile boundaries by construction.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+TILE_BLOCKS = 128
+
+
+def _group_kernel(block_size, v_ref, t_ref, out_ref):
+    v = v_ref[...].reshape(-1, block_size)
+    t = t_ref[0]
+    norms = jnp.sqrt(jnp.sum(v * v, axis=1, keepdims=True))
+    scale = jnp.maximum(0.0, 1.0 - t / jnp.maximum(norms, 1e-30))
+    out_ref[...] = (v * scale).reshape(-1)
+
+
+@functools.partial(jax.jit, static_argnames=("block_size", "tile_blocks"))
+def group_soft_threshold(v, t, *, block_size, tile_blocks=TILE_BLOCKS):
+    """Per-block prox of t*||.||_2 over contiguous equal-size blocks."""
+    n = v.shape[0]
+    assert n % block_size == 0, "n must be divisible by block_size"
+    nb = n // block_size
+    nb_pad = (nb + tile_blocks - 1) // tile_blocks * tile_blocks
+    vp = jnp.pad(v, (0, (nb_pad - nb) * block_size))
+    t_arr = jnp.asarray([t], dtype=v.dtype)
+    tile = tile_blocks * block_size
+    grid = (nb_pad // tile_blocks,)
+    kernel = functools.partial(_group_kernel, block_size)
+    out = pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((tile,), lambda i: (i,)),
+            pl.BlockSpec((1,), lambda i: (0,)),
+        ],
+        out_specs=pl.BlockSpec((tile,), lambda i: (i,)),
+        out_shape=jax.ShapeDtypeStruct((nb_pad * block_size,), v.dtype),
+        interpret=True,
+    )(vp, t_arr)
+    return out[:n]

@@ -1,0 +1,85 @@
+"""Pure-jnp oracles for every Pallas kernel.
+
+These are the CORE correctness signal of the compile path: pytest checks
+each Pallas kernel (interpret=True) against these references over a sweep
+of shapes and dtypes (hypothesis), and the L2 model graph against the
+composed reference step. The Rust integration tests then check the
+AOT-compiled artifacts against the native Rust implementation, closing
+the three-layer loop.
+"""
+
+import jax.numpy as jnp
+
+
+def soft_threshold(v, t):
+    """S_t(v) = sign(v) * max(|v| - t, 0) (prox of t*|.|, paper eq. (6))."""
+    return jnp.sign(v) * jnp.maximum(jnp.abs(v) - t, 0.0)
+
+
+def matvec(a, x):
+    """y = A @ x."""
+    return a @ x
+
+
+def rmatvec(a, r):
+    """g = A.T @ r."""
+    return a.T @ r
+
+
+def best_response(x, g, d, tau, c):
+    """Fused Lasso best-response (paper eq. (6)) + error bound.
+
+    xhat_j = S_{c/(d_j+tau)}(x_j - g_j/(d_j+tau)),  e_j = |xhat_j - x_j|.
+    """
+    denom = d + tau
+    v = x - g / denom
+    xhat = soft_threshold(v, c / denom)
+    return xhat, jnp.abs(xhat - x)
+
+
+def group_soft_threshold(v, t, block_size):
+    """Block soft-threshold over contiguous blocks (group Lasso prox).
+
+    v has length divisible by block_size; threshold t applies per block:
+    out_blk = max(0, 1 - t/||v_blk||) * v_blk.
+    """
+    vb = v.reshape(-1, block_size)
+    norms = jnp.linalg.norm(vb, axis=1, keepdims=True)
+    scale = jnp.maximum(0.0, 1.0 - t / jnp.maximum(norms, 1e-30))
+    return (vb * scale).reshape(-1)
+
+
+def objective(a, b, x, c):
+    """V(x) = ||Ax - b||^2 + c*||x||_1."""
+    r = a @ x - b
+    return jnp.sum(r * r) + c * jnp.sum(jnp.abs(x))
+
+
+def fpa_lasso_step(a, b, x, d, tau, gamma, rho, c):
+    """One full FPA iteration (Algorithm 1, Example #2 with eq. (6)).
+
+    Returns (x_next, V(x), max_E). Selection (S.3) is the greedy rho-rule
+    fused in-graph; the step (S.4) uses gamma.
+    """
+    r = a @ x - b
+    f = jnp.sum(r * r)
+    g = 2.0 * (a.T @ r)
+    xhat, e = best_response(x, g, d, tau, c)
+    m = jnp.max(e)
+    mask = e >= rho * m
+    x_next = jnp.where(mask, x + gamma * (xhat - x), x)
+    v = f + c * jnp.sum(jnp.abs(x))
+    return x_next, v, m
+
+
+def fista_step(a, b, y, x_prev, t, inv_l, c):
+    """One FISTA iteration on the Lasso.
+
+    Returns (x_next, y_next, t_next).
+    """
+    r = a @ y - b
+    g = 2.0 * (a.T @ r)
+    x_next = soft_threshold(y - inv_l * g, inv_l * c)
+    t_next = 0.5 * (1.0 + jnp.sqrt(1.0 + 4.0 * t * t))
+    y_next = x_next + ((t - 1.0) / t_next) * (x_next - x_prev)
+    return x_next, y_next, t_next

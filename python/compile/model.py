@@ -1,0 +1,91 @@
+"""L2: the FPA iteration and companion graphs as jitted JAX functions.
+
+Each function here is lowered once by `aot.py` to an HLO-text artifact
+that the Rust coordinator loads via PJRT. The hot operations call the L1
+Pallas kernels (interpret=True, so the lowering is plain HLO the CPU
+client can run); the glue (selection, step, reductions) is jnp.
+
+Python is BUILD-TIME ONLY: nothing in this package is imported at solve
+time.
+"""
+
+import jax.numpy as jnp
+
+from .kernels import matvec as mv
+from .kernels import soft_threshold as st
+from .kernels import group_prox as gp
+
+
+def fpa_lasso_step(a, b, x, d, tau, gamma, rho, c):
+    """One FPA iteration (Algorithm 1, Example #2, eq. (6) best-response).
+
+    Steps fused in-graph:
+      (S.2) residual + gradient (Pallas matvec kernels) and the fused
+            soft-threshold best-response + error bound (Pallas kernel);
+      (S.3) greedy rho-selection: update blocks with E_i >= rho * max E;
+      (S.4) x_next = x + gamma * (xhat - x) on the selected set.
+
+    Returns (x_next, V(x), max_E); V is at the *input* iterate (the Rust
+    host compares consecutive values for the tau adaptation).
+    """
+    r = mv.matvec(a, x) - b
+    f = jnp.sum(r * r)
+    g = 2.0 * mv.rmatvec(a, r)
+    xhat, e = st.best_response(x, g, d, tau, c)
+    m = jnp.max(e)
+    mask = e >= rho * m
+    x_next = jnp.where(mask, x + gamma * (xhat - x), x)
+    v = f + c * jnp.sum(jnp.abs(x))
+    return x_next, v, m
+
+
+def objective(a, b, x, c):
+    """V(x) = ||Ax-b||^2 + c||x||_1 (Pallas matvec for the residual)."""
+    r = mv.matvec(a, x) - b
+    return (jnp.sum(r * r) + c * jnp.sum(jnp.abs(x)),)
+
+
+def fista_step(a, b, y, x_prev, t, inv_l, c):
+    """One FISTA iteration on the Lasso (parallel benchmark).
+
+    Returns (x_next, y_next, t_next).
+    """
+    r = mv.matvec(a, y) - b
+    g = 2.0 * mv.rmatvec(a, r)
+    n = y.shape[0]
+    ones = jnp.ones((n,), dtype=y.dtype)
+    # Reuse the fused BR kernel with d = 0, tau = 1/inv_l: it computes
+    # S_{c*inv_l}(y - inv_l * g) exactly.
+    x_next, _ = st.best_response(y, g, 0.0 * ones, 1.0 / inv_l, c)
+    t_next = 0.5 * (1.0 + jnp.sqrt(1.0 + 4.0 * t * t))
+    y_next = x_next + ((t - 1.0) / t_next) * (x_next - x_prev)
+    return x_next, y_next, t_next
+
+
+def fpa_group_lasso_step(a, b, x, d, tau, gamma, rho, c, *, block_size):
+    """FPA iteration for the group Lasso (block soft-threshold prox).
+
+    Same structure as `fpa_lasso_step` but the prox is the Pallas group
+    kernel and the error bound / selection operate per block.
+    """
+    n = x.shape[0]
+    assert n % block_size == 0
+    r = mv.matvec(a, x) - b
+    f = jnp.sum(r * r)
+    g = 2.0 * mv.rmatvec(a, r)
+    denom = d + tau  # d is constant within each block by construction
+    v = x - g / denom
+    # Per-block threshold: c/denom is constant within a block; the group
+    # kernel takes a scalar, so scale v by denom first:
+    # prox_{c/denom * ||.||}(v) = (1/denom) * prox_{c * ||.||}(denom * v).
+    xhat = gp.group_soft_threshold(v * denom, c, block_size=block_size) / denom
+    e_coord = (xhat - x) ** 2
+    e_blocks = jnp.sqrt(jnp.sum(e_coord.reshape(-1, block_size), axis=1))
+    m = jnp.max(e_blocks)
+    mask_blocks = e_blocks >= rho * m
+    mask = jnp.repeat(mask_blocks, block_size)
+    x_next = jnp.where(mask, x + gamma * (xhat - x), x)
+    v_obj = f + c * jnp.sum(
+        jnp.sqrt(jnp.sum((x.reshape(-1, block_size)) ** 2, axis=1))
+    )
+    return x_next, v_obj, m

@@ -1,0 +1,153 @@
+"""L1 correctness: every Pallas kernel vs its pure-jnp oracle.
+
+Hypothesis sweeps shapes and dtypes; assert_allclose against ref.py is
+the core correctness signal of the compile path.
+"""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+import jax
+import jax.numpy as jnp
+
+# The artifacts are f32, but the kernels are dtype-generic; enable x64 so
+# the float64 sweep exercises a genuinely different dtype.
+jax.config.update("jax_enable_x64", True)
+
+from compile.kernels import group_prox, matvec, ref, soft_threshold
+
+SETTINGS = dict(max_examples=25, deadline=None)
+
+
+def rng_arrays(seed, *shapes, dtype=np.float32):
+    r = np.random.default_rng(seed)
+    return [r.standard_normal(s).astype(dtype) for s in shapes]
+
+
+# ---------------------------------------------------------------- fused BR
+
+
+@settings(**SETTINGS)
+@given(
+    n=st.integers(min_value=1, max_value=3000),
+    seed=st.integers(min_value=0, max_value=2**31),
+    tau=st.floats(min_value=1e-3, max_value=1e3),
+    c=st.floats(min_value=1e-3, max_value=10.0),
+)
+def test_best_response_matches_ref(n, seed, tau, c):
+    x, g = rng_arrays(seed, n, n)
+    d = np.abs(rng_arrays(seed + 1, n)[0]) + 0.1
+    xhat, e = soft_threshold.best_response(x, g, d, tau, c)
+    xhat_ref, e_ref = ref.best_response(x, g, d, tau, c)
+    np.testing.assert_allclose(xhat, xhat_ref, rtol=1e-5, atol=1e-6)
+    np.testing.assert_allclose(e, e_ref, rtol=1e-5, atol=1e-6)
+
+
+@pytest.mark.parametrize("dtype", [np.float32, np.float64])
+def test_best_response_dtypes(dtype):
+    x, g = rng_arrays(3, 100, 100, dtype=dtype)
+    d = np.abs(rng_arrays(4, 100, dtype=dtype)[0]) + 0.5
+    xhat, e = soft_threshold.best_response(x, g, d, dtype(2.0), dtype(0.5))
+    xr, er = ref.best_response(x, g, d, 2.0, 0.5)
+    np.testing.assert_allclose(xhat, xr, rtol=1e-5, atol=1e-6)
+    np.testing.assert_allclose(e, er, rtol=1e-5, atol=1e-6)
+    assert xhat.dtype == dtype
+
+
+def test_best_response_prox_property():
+    """xhat minimizes the scalar surrogate: perturbations don't improve."""
+    x, g = rng_arrays(5, 50, 50)
+    d = np.abs(rng_arrays(6, 50)[0]) + 0.2
+    tau, c = 1.3, 0.7
+    xhat, _ = soft_threshold.best_response(x, g, d, tau, c)
+    xhat = np.asarray(xhat)
+
+    def surrogate(z):
+        return g * (z - x) + 0.5 * (d + tau) * (z - x) ** 2 + c * np.abs(z)
+
+    base = surrogate(xhat)
+    for dz in (-1e-3, 1e-3):
+        assert np.all(base <= surrogate(xhat + dz) + 1e-9)
+
+
+def test_best_response_exact_zero_region():
+    """Coordinates with |v| <= threshold land exactly at 0."""
+    n = 64
+    x = np.zeros(n, np.float32)
+    g = np.full(n, 0.01, np.float32)  # tiny gradient, big threshold
+    d = np.ones(n, np.float32)
+    xhat, e = soft_threshold.best_response(x, g, d, 1.0, 5.0)
+    assert np.all(np.asarray(xhat) == 0.0)
+    assert np.all(np.asarray(e) == 0.0)
+
+
+# ---------------------------------------------------------------- matvec
+
+
+@settings(**SETTINGS)
+@given(
+    m=st.integers(min_value=1, max_value=400),
+    n=st.integers(min_value=1, max_value=400),
+    seed=st.integers(min_value=0, max_value=2**31),
+)
+def test_matvec_matches_ref(m, n, seed):
+    a, x = rng_arrays(seed, (m, n), n)
+    y = matvec.matvec(a, x)
+    np.testing.assert_allclose(y, ref.matvec(a, x), rtol=1e-4, atol=1e-4)
+
+
+@settings(**SETTINGS)
+@given(
+    m=st.integers(min_value=1, max_value=400),
+    n=st.integers(min_value=1, max_value=400),
+    seed=st.integers(min_value=0, max_value=2**31),
+)
+def test_rmatvec_matches_ref(m, n, seed):
+    a, r = rng_arrays(seed, (m, n), m)
+    g = matvec.rmatvec(a, r)
+    np.testing.assert_allclose(g, ref.rmatvec(a, r), rtol=1e-4, atol=1e-4)
+
+
+def test_matvec_non_divisible_tiles():
+    """Shapes that don't divide the tile sizes are padded correctly."""
+    a, x = rng_arrays(9, (131, 257), 257)
+    np.testing.assert_allclose(
+        matvec.matvec(a, x), ref.matvec(a, x), rtol=1e-4, atol=1e-4
+    )
+    r = rng_arrays(10, 131)[0]
+    np.testing.assert_allclose(
+        matvec.rmatvec(a, r), ref.rmatvec(a, r), rtol=1e-4, atol=1e-4
+    )
+
+
+# ---------------------------------------------------------------- group prox
+
+
+@settings(**SETTINGS)
+@given(
+    nb=st.integers(min_value=1, max_value=300),
+    block=st.sampled_from([1, 2, 4, 8]),
+    t=st.floats(min_value=1e-3, max_value=10.0),
+    seed=st.integers(min_value=0, max_value=2**31),
+)
+def test_group_prox_matches_ref(nb, block, t, seed):
+    v = rng_arrays(seed, nb * block)[0]
+    out = group_prox.group_soft_threshold(v, t, block_size=block)
+    out_ref = ref.group_soft_threshold(v, t, block)
+    np.testing.assert_allclose(out, out_ref, rtol=1e-5, atol=1e-6)
+
+
+def test_group_prox_kills_small_blocks():
+    v = np.asarray([0.3, 0.4, 30.0, 40.0], np.float32)  # norms 0.5, 50
+    out = np.asarray(group_prox.group_soft_threshold(v, 1.0, block_size=2))
+    assert np.all(out[:2] == 0.0)
+    np.testing.assert_allclose(np.linalg.norm(out[2:]), 49.0, rtol=1e-5)
+
+
+def test_group_prox_block1_equals_soft_threshold():
+    v = rng_arrays(11, 200)[0]
+    out = group_prox.group_soft_threshold(v, 0.3, block_size=1)
+    np.testing.assert_allclose(
+        out, np.asarray(ref.soft_threshold(v, 0.3)), rtol=1e-5, atol=1e-6
+    )

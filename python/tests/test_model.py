@@ -1,0 +1,117 @@
+"""L2 correctness: the model graphs vs the composed pure-jnp reference,
+plus semantic checks (descent, selection, objective identity)."""
+
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+import jax.numpy as jnp
+
+from compile import model
+from compile.kernels import ref
+
+SETTINGS = dict(max_examples=15, deadline=None)
+
+
+def instance(seed, m=40, n=120):
+    r = np.random.default_rng(seed)
+    a = r.standard_normal((m, n)).astype(np.float32)
+    x_true = np.zeros(n, np.float32)
+    idx = r.choice(n, n // 10, replace=False)
+    x_true[idx] = r.standard_normal(len(idx)).astype(np.float32)
+    b = (a @ x_true + 0.1 * r.standard_normal(m)).astype(np.float32)
+    x = r.standard_normal(n).astype(np.float32) * 0.1
+    d = (2.0 * (a * a).sum(axis=0)).astype(np.float32)
+    return a, b, x, d
+
+
+@settings(**SETTINGS)
+@given(seed=st.integers(min_value=0, max_value=2**31))
+def test_fpa_step_matches_ref(seed):
+    a, b, x, d = instance(seed)
+    args = (a, b, x, d, np.float32(3.0), np.float32(0.9), np.float32(0.5), np.float32(1.0))
+    x1, v1, m1 = model.fpa_lasso_step(*args)
+    x2, v2, m2 = ref.fpa_lasso_step(*args)
+    np.testing.assert_allclose(x1, x2, rtol=1e-4, atol=1e-5)
+    np.testing.assert_allclose(v1, v2, rtol=1e-4)
+    np.testing.assert_allclose(m1, m2, rtol=1e-4)
+
+
+def test_objective_identity():
+    a, b, x, _ = instance(7)
+    (v,) = model.objective(a, b, x, np.float32(0.5))
+    r = a @ x - b
+    expect = (r * r).sum() + 0.5 * np.abs(x).sum()
+    np.testing.assert_allclose(v, expect, rtol=1e-5)
+
+
+def test_fpa_iterations_descend():
+    """Iterating the step decreases V.
+
+    With a fixed tau at the majorizer scale (max d) the Jacobi map
+    descends without needing the host-side tau adaptation.
+    """
+    a, b, x, d = instance(13)
+    tau = np.float32(d.max())
+    c = np.float32(1.0)
+    v_prev = float(model.objective(a, b, x, c)[0])
+    for _ in range(30):
+        x, v_at_x, _ = model.fpa_lasso_step(
+            a, b, x, d, tau, np.float32(0.9), np.float32(0.5), c
+        )
+    v_final = float(model.objective(a, b, np.asarray(x), c)[0])
+    assert v_final < v_prev, f"{v_final} !< {v_prev}"
+
+
+def test_fpa_step_fixed_point():
+    """Iterating the map with a majorizer-scale tau drives max_E down
+    (approach to a fixed point = stationary point, Prop. 3(b))."""
+    a, b, x, d = instance(17)
+    tau = np.float32(d.max())
+    c = np.float32(1.0)
+    _, _, m0 = model.fpa_lasso_step(a, b, x, d, tau, np.float32(0.9), np.float32(0.5), c)
+    z = x
+    for _ in range(300):
+        z, _, m = model.fpa_lasso_step(a, b, z, d, tau, np.float32(0.9), np.float32(0.5), c)
+    assert float(m) < 0.05 * float(m0), f"max_E {float(m)} vs initial {float(m0)}"
+
+
+@settings(**SETTINGS)
+@given(seed=st.integers(min_value=0, max_value=2**31))
+def test_fista_step_matches_ref(seed):
+    a, b, y, _ = instance(seed)
+    x_prev = y * 0.5
+    inv_l = np.float32(1e-3)
+    args = (a, b, y, x_prev, np.float32(1.0), inv_l, np.float32(1.0))
+    x1, y1, t1 = model.fista_step(*args)
+    x2, y2, t2 = ref.fista_step(*args)
+    np.testing.assert_allclose(x1, x2, rtol=1e-4, atol=1e-5)
+    np.testing.assert_allclose(y1, y2, rtol=1e-4, atol=1e-5)
+    np.testing.assert_allclose(t1, t2, rtol=1e-6)
+
+
+def test_group_step_matches_scalar_when_block1():
+    a, b, x, d = instance(19, m=30, n=80)
+    args = (a, b, x, d, np.float32(2.0), np.float32(0.8), np.float32(0.5), np.float32(1.0))
+    x_g, v_g, m_g = model.fpa_group_lasso_step(*args, block_size=1)
+    x_s, v_s, m_s = model.fpa_lasso_step(*args)
+    np.testing.assert_allclose(x_g, x_s, rtol=1e-4, atol=1e-5)
+    np.testing.assert_allclose(v_g, v_s, rtol=1e-4)
+    np.testing.assert_allclose(m_g, m_s, rtol=1e-3, atol=1e-6)
+
+
+def test_group_step_blocks_descend():
+    a, b, x, d = instance(23, m=30, n=80)
+    c = np.float32(1.0)
+    tau = np.float32(5.0)
+    # Block-constant curvature for blocks of 4.
+    d4 = d.reshape(-1, 4).sum(axis=1)
+    d = np.repeat(d4, 4).astype(np.float32)
+    v0 = None
+    z = x
+    for _ in range(25):
+        z, v, _ = model.fpa_group_lasso_step(
+            a, b, z, d, tau, np.float32(0.9), np.float32(0.5), c, block_size=4
+        )
+        if v0 is None:
+            v0 = float(v)
+    assert float(v) < v0

@@ -1,0 +1,45 @@
+//! Regenerates Fig. 1 panel (d): the 5 000 × 100 000 Lasso group at 5%
+//! solution sparsity, 32 simulated processes.
+//!
+//! Default scale is 0.1 (500 × 10 000, ~40 MB matrix) so the bench run
+//! stays minutes-sized; FLEXA_BENCH_SCALE=1.0 runs the paper-size
+//! problem (2 GB matrix f64, tens of minutes per solver on one core).
+//! The paper's observation to reproduce: sequential methods (GS, ADMM)
+//! fall behind at this scale while the parallel methods keep working;
+//! GRock's advantage fades as dimensions grow.
+
+use flexa::bench::fig1::{paper_algos, run_panel, PanelSpec};
+use std::path::Path;
+
+fn env_f64(key: &str, default: f64) -> f64 {
+    std::env::var(key).ok().and_then(|v| v.parse().ok()).unwrap_or(default)
+}
+
+fn env_usize(key: &str, default: usize) -> usize {
+    std::env::var(key).ok().and_then(|v| v.parse().ok()).unwrap_or(default)
+}
+
+fn main() -> anyhow::Result<()> {
+    let scale = env_f64("FLEXA_BENCH_SCALE", 0.1);
+    let realizations = env_usize("FLEXA_BENCH_REALIZATIONS", 1);
+    let budget = env_f64("FLEXA_BENCH_BUDGET", 60.0);
+    let out = Path::new("results");
+
+    let spec = PanelSpec::paper('d')?
+        .scaled(scale)
+        .with_realizations(realizations)
+        .with_budget(budget);
+    let algos = paper_algos(spec.procs);
+    eprintln!(
+        "panel (d): {}x{} ({:.0}% nnz), {} realization(s), budget {budget}s/solver",
+        spec.rows,
+        spec.cols,
+        spec.sparsity * 100.0,
+        spec.realizations
+    );
+    let result = run_panel(&spec, &algos, Some(out))?;
+    println!("{}", result.render(true));
+    println!("{}", result.summary_table(true));
+    println!("CSV series written to results/");
+    Ok(())
+}

@@ -1,0 +1,46 @@
+//! Regenerates Fig. 1 panels (a), (b), (c): the 2 000 × 10 000 Lasso
+//! groups at 20% / 10% / 5% solution sparsity, 16 simulated processes.
+//!
+//! Default runs at FLEXA_BENCH_SCALE (default 0.25 ⇒ 500 × 2 500) so a
+//! full `cargo bench` stays in the tens of minutes on one core; set
+//! FLEXA_BENCH_SCALE=1.0 for the paper-size panels. Results (CSV per
+//! algorithm) land in results/, and an ASCII rendering + paper-style
+//! time-to-accuracy table prints per panel.
+
+use flexa::bench::fig1::{paper_algos, run_panel, PanelSpec};
+use std::path::Path;
+
+fn env_f64(key: &str, default: f64) -> f64 {
+    std::env::var(key).ok().and_then(|v| v.parse().ok()).unwrap_or(default)
+}
+
+fn env_usize(key: &str, default: usize) -> usize {
+    std::env::var(key).ok().and_then(|v| v.parse().ok()).unwrap_or(default)
+}
+
+fn main() -> anyhow::Result<()> {
+    let scale = env_f64("FLEXA_BENCH_SCALE", 0.25);
+    let realizations = env_usize("FLEXA_BENCH_REALIZATIONS", 1);
+    let budget = env_f64("FLEXA_BENCH_BUDGET", 45.0);
+    let out = Path::new("results");
+
+    for panel in ['a', 'b', 'c'] {
+        let spec = PanelSpec::paper(panel)?
+            .scaled(scale)
+            .with_realizations(realizations)
+            .with_budget(budget);
+        let algos = paper_algos(spec.procs);
+        eprintln!(
+            "panel ({panel}): {}x{} ({:.0}% nnz), {} realization(s), budget {budget}s/solver",
+            spec.rows,
+            spec.cols,
+            spec.sparsity * 100.0,
+            spec.realizations
+        );
+        let result = run_panel(&spec, &algos, Some(out))?;
+        println!("{}", result.render(true));
+        println!("{}", result.summary_table(true));
+    }
+    println!("CSV series written to results/");
+    Ok(())
+}

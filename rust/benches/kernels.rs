@@ -1,0 +1,91 @@
+//! Kernel microbenches: the native hot-path operations (matvec, rmatvec,
+//! fused best-response, full FPA iteration) and, when artifacts are
+//! present, the XLA-executed counterparts (per-iteration latency of the
+//! AOT fpa_lasso_step graph).
+//!
+//! Throughput is reported in FLOP/s for the matvecs (2mn each) so the
+//! §Perf roofline comparison in EXPERIMENTS.md can be regenerated.
+
+use flexa::algos::fpa::Fpa;
+use flexa::algos::{SolveOptions, Solver};
+use flexa::bench::Bench;
+use flexa::datagen::NesterovLasso;
+use flexa::linalg::{ops, MatVec};
+use flexa::problems::lasso::Lasso;
+use flexa::problems::CompositeProblem;
+
+fn main() -> anyhow::Result<()> {
+    let (m, n) = (1000usize, 5000usize);
+    let inst = NesterovLasso::new(m, n, 0.1, 1.0).seed(0xBE7C).generate();
+    let problem = Lasso::new(inst.a, inst.b, inst.c).with_opt_value(inst.v_star);
+    let a = problem.matrix();
+
+    let mut bench = Bench::new(&format!("native kernels {m}x{n}")).warmup(2).reps(7);
+    let mut x = vec![0.0; n];
+    let mut rng = flexa::prng::Xoshiro256pp::seed_from_u64(3);
+    rng.fill_normal(&mut x);
+    let mut y = vec![0.0; m];
+    let mut g = vec![0.0; n];
+    let flops_mv = (2 * m * n) as u64;
+
+    bench.measure("matvec (y = Ax)", || {
+        a.matvec(&x, &mut y);
+        flops_mv
+    });
+    bench.measure("rmatvec (g = A'r)", || {
+        a.matvec_t(&y, &mut g);
+        flops_mv
+    });
+    bench.measure("grad_and_smooth (fused)", || {
+        let _ = problem.grad_and_smooth(&x, &mut g);
+        2 * flops_mv
+    });
+    let mut d = vec![0.0; n];
+    problem.curvature(&x, &mut d);
+    let mut xhat = vec![0.0; n];
+    bench.measure("best-response + E (fused)", || {
+        for j in 0..n {
+            let denom = d[j] + 3.0;
+            xhat[j] = ops::soft_threshold(x[j] - g[j] / denom, 1.0 / denom);
+        }
+        (6 * n) as u64
+    });
+    bench.measure("full FPA iteration", || {
+        let mut solver = Fpa::paper_defaults(&problem);
+        let r = solver.solve(
+            &problem,
+            &SolveOptions::default().with_max_iters(1).with_target(0.0),
+        );
+        std::hint::black_box(r.iterations);
+        2 * flops_mv
+    });
+    bench.print();
+
+    // XLA path (needs `make artifacts` with a matching shape class).
+    if flexa::runtime::artifacts_available(flexa::runtime::DEFAULT_ARTIFACT_DIR) {
+        let mut engine = flexa::runtime::Engine::cpu(flexa::runtime::DEFAULT_ARTIFACT_DIR)?;
+        let variants: Vec<(String, usize, usize)> = engine
+            .manifest()
+            .variants("fpa_lasso_step")
+            .iter()
+            .map(|e| (e.name.clone(), e.rows, e.cols))
+            .collect();
+        for (name, am, an) in variants {
+            let inst = NesterovLasso::new(am, an, 0.1, 1.0).seed(9).generate();
+            let p = Lasso::new(inst.a, inst.b, inst.c).with_opt_value(inst.v_star);
+            let mut solver = flexa::runtime::XlaFpaLasso::new(&mut engine, am, an)?;
+            let mut bench = Bench::new(&format!("xla artifact {name}")).warmup(1).reps(5);
+            bench.measure("20 fpa iterations via PJRT", || {
+                let r = solver
+                    .solve(&p, &SolveOptions::default().with_max_iters(20).with_target(0.0))
+                    .expect("xla solve");
+                std::hint::black_box(r.iterations);
+                (20 * 2 * 2 * am * an) as u64
+            });
+            bench.print();
+        }
+    } else {
+        eprintln!("(skipping XLA kernel benches: run `make artifacts` first)");
+    }
+    Ok(())
+}

@@ -1,0 +1,249 @@
+//! ADMM for Lasso (Boyd et al. 2011, in the form of Luo & Hong 2012 —
+//! refs. \[31\]/\[32\] of the paper): the paper's sequential splitting
+//! benchmark.
+//!
+//! Splitting `min ‖Ax−b‖² + c‖z‖₁  s.t.  x = z`:
+//!
+//! * x-update: `(ρI + 2AᵀA)x = 2Aᵀb + ρ(z − u)` — solved either by a
+//!   cached Cholesky factorization of the m×m Woodbury system
+//!   `(ρ/2)I + AAᵀ` (small problems) or matrix-free by warm-started CG
+//!   (large problems, where forming `AAᵀ` at `O(m²n)` is prohibitive).
+//! * z-update: `z = S_{c/ρ}(x + u)`.
+//! * dual:     `u ← u + x − z`.
+//!
+//! The reported iterate is `z` (feasible and sparse). ADMM parallelizes
+//! poorly for this splitting (the x-update is a global solve), which is
+//! why the paper runs it on a single process — we do the same (whole
+//! iteration counted as serial time in the cost model).
+
+use super::{Recorder, SolveOptions, SolveReport, Solver};
+use crate::linalg::{cg, ops, Cholesky, DenseMatrix};
+use crate::problems::LeastSquares;
+use std::time::Instant;
+
+/// How the x-update linear system is solved.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum XSolve {
+    /// Cached Cholesky of the m×m Woodbury system (O(m²n) setup).
+    Cholesky,
+    /// Warm-started matrix-free CG (no setup; per-iteration matvecs).
+    Cg { tol_exp: i32, max_iters: usize },
+    /// Cholesky when `m ≤ threshold`, else CG.
+    Auto { threshold: usize },
+}
+
+/// ADMM configuration.
+#[derive(Clone, Copy, Debug)]
+pub struct AdmmOptions {
+    /// Penalty parameter ρ.
+    pub rho: f64,
+    pub x_solve: XSolve,
+}
+
+impl Default for AdmmOptions {
+    fn default() -> Self {
+        Self { rho: 1.0, x_solve: XSolve::Auto { threshold: 600 } }
+    }
+}
+
+/// The ADMM solver (Lasso-specialized; requires the least-squares
+/// structure for the x-update).
+pub struct Admm {
+    pub opts: AdmmOptions,
+}
+
+impl Default for Admm {
+    fn default() -> Self {
+        Self { opts: AdmmOptions::default() }
+    }
+}
+
+impl Admm {
+    pub fn new(opts: AdmmOptions) -> Self {
+        Self { opts }
+    }
+
+    pub fn with_rho(rho: f64) -> Self {
+        Self { opts: AdmmOptions { rho, ..Default::default() } }
+    }
+}
+
+enum XSolver {
+    /// Woodbury: `x = q/ρ − Aᵀ M⁻¹ (A q) / ρ²` with `M = (ρ/2)I + AAᵀ`.
+    Chol(Cholesky),
+    Cg { tol: f64, max_iters: usize },
+}
+
+impl<P: LeastSquares> Solver<P> for Admm {
+    fn name(&self) -> String {
+        "admm".into()
+    }
+
+    fn solve(&mut self, problem: &P, opts: &SolveOptions) -> SolveReport {
+        let n = problem.n();
+        let m = problem.rows();
+        let layout = problem.layout().clone();
+        let nb = layout.num_blocks();
+        let rho = self.opts.rho;
+        assert!(rho > 0.0, "rho must be positive");
+        let mut recorder = Recorder::new("admm", problem, opts);
+
+        // --- setup ---
+        let use_chol = match self.opts.x_solve {
+            XSolve::Cholesky => true,
+            XSolve::Cg { .. } => false,
+            XSolve::Auto { threshold } => m <= threshold,
+        };
+        let xsolver = if use_chol {
+            // M = (ρ/2)I + AAᵀ via column-wise rank-1 accumulation.
+            let mut gram = DenseMatrix::zeros(m, m);
+            let mut col = vec![0.0; m];
+            let mut e = vec![0.0; n];
+            for j in 0..n {
+                e[j] = 1.0;
+                problem.apply(&e, &mut col);
+                e[j] = 0.0;
+                for q in 0..m {
+                    let cq = col[q];
+                    if cq != 0.0 {
+                        for p_ in 0..m {
+                            let v = gram.get(p_, q) + col[p_] * cq;
+                            gram.set(p_, q, v);
+                        }
+                    }
+                }
+            }
+            for i in 0..m {
+                gram.set(i, i, gram.get(i, i) + rho / 2.0);
+            }
+            XSolver::Chol(Cholesky::factor(&gram).expect("(ρ/2)I + AAᵀ is SPD"))
+        } else {
+            let (tol, max_iters) = match self.opts.x_solve {
+                XSolve::Cg { tol_exp, max_iters } => (10f64.powi(tol_exp), max_iters),
+                _ => (1e-8, 200),
+            };
+            XSolver::Cg { tol, max_iters }
+        };
+
+        // 2Aᵀb precomputed.
+        let mut atb2 = vec![0.0; n];
+        problem.apply_t(problem.rhs(), &mut atb2);
+        ops::scal(2.0, &mut atb2);
+
+        let mut x = opts.x0.clone().unwrap_or_else(|| vec![0.0; n]);
+        let mut z = x.clone();
+        let mut u = vec![0.0; n];
+        let mut q = vec![0.0; n];
+        let mut scratch_m = vec![0.0; m];
+        let mut scratch_m2 = vec![0.0; m];
+        let mut scratch_n = vec![0.0; n];
+        recorder.setup_done();
+
+        let mut iterations = 0;
+        let mut converged = false;
+        for k in 0..opts.max_iters {
+            iterations = k + 1;
+            let t0 = Instant::now();
+
+            // q = 2Aᵀb + ρ(z − u)
+            for j in 0..n {
+                q[j] = atb2[j] + rho * (z[j] - u[j]);
+            }
+            // x-update.
+            match &xsolver {
+                XSolver::Chol(ch) => {
+                    // x = q/ρ − Aᵀ M⁻¹ (A q) / ρ²  (Woodbury)
+                    problem.apply(&q, &mut scratch_m);
+                    ch.solve(&scratch_m.clone(), &mut scratch_m2);
+                    problem.apply_t(&scratch_m2, &mut scratch_n);
+                    for j in 0..n {
+                        x[j] = q[j] / rho - scratch_n[j] / (rho * rho);
+                    }
+                }
+                XSolver::Cg { tol, max_iters } => {
+                    // Warm start from previous x.
+                    let apply = |v: &[f64], out: &mut [f64]| {
+                        let mut av = vec![0.0; m];
+                        problem.apply(v, &mut av);
+                        problem.apply_t(&av, out);
+                        for j in 0..n {
+                            out[j] = rho * v[j] + 2.0 * out[j];
+                        }
+                    };
+                    cg::conjugate_gradient(apply, &q, &mut x, *tol, *max_iters);
+                }
+            }
+            // z-update (block soft-threshold via the problem's prox) and dual.
+            for i in 0..nb {
+                let r = layout.range(i);
+                let (lo, hi) = (r.start, r.end);
+                let v_block: Vec<f64> = (lo..hi).map(|j| x[j] + u[j]).collect();
+                problem.prox_block(i, &v_block, 1.0 / rho, &mut z[lo..hi]);
+            }
+            for j in 0..n {
+                u[j] += x[j] - z[j];
+            }
+            let t_iter = t0.elapsed().as_secs_f64();
+
+            // Sequential algorithm: all serial time.
+            recorder.add_sim_time(opts.cost_model.iter_time(0.0, t_iter, 0));
+            let err = recorder.record(k, &z, nb);
+            if recorder.reached(err) {
+                converged = true;
+                break;
+            }
+            if recorder.elapsed_s() > opts.max_seconds {
+                break;
+            }
+        }
+
+        let objective = problem.objective(&z);
+        SolveReport { x: z, objective, iterations, converged, trace: recorder.into_trace() }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::datagen::NesterovLasso;
+    use crate::problems::lasso::Lasso;
+
+    fn planted(seed: u64) -> Lasso {
+        let inst = NesterovLasso::new(30, 80, 0.1, 1.0).seed(seed).generate();
+        let v = inst.v_star;
+        Lasso::new(inst.a, inst.b, inst.c).with_opt_value(v)
+    }
+
+    #[test]
+    fn cholesky_path_converges() {
+        let p = planted(91);
+        let mut solver = Admm::new(AdmmOptions { rho: 1.0, x_solve: XSolve::Cholesky });
+        let report = solver.solve(&p, &SolveOptions::default().with_max_iters(5000).with_target(1e-5));
+        assert!(report.trace.best_rel_err() < 1e-4, "best {:.3e}", report.trace.best_rel_err());
+    }
+
+    #[test]
+    fn cg_path_matches_cholesky() {
+        let p = planted(92);
+        let opts = SolveOptions::default().with_max_iters(300).with_target(0.0);
+        let r_chol = Admm::new(AdmmOptions { rho: 1.0, x_solve: XSolve::Cholesky }).solve(&p, &opts);
+        let r_cg = Admm::new(AdmmOptions {
+            rho: 1.0,
+            x_solve: XSolve::Cg { tol_exp: -10, max_iters: 400 },
+        })
+        .solve(&p, &opts);
+        // Same fixed-point iteration up to CG tolerance.
+        let d = ops::dist2(&r_chol.x, &r_cg.x);
+        assert!(d < 1e-5, "Cholesky and CG solutions differ by {d}");
+    }
+
+    #[test]
+    fn iterate_is_sparse() {
+        let p = planted(93);
+        let mut solver = Admm::default();
+        let report = solver.solve(&p, &SolveOptions::default().with_max_iters(1000).with_target(1e-4));
+        // z comes out of a soft-threshold: exact zeros expected.
+        let nnz = ops::nnz(&report.x, 1e-12);
+        assert!(nnz < 80, "z should be sparse, nnz = {nnz}");
+    }
+}

@@ -1,0 +1,93 @@
+//! ISTA — plain proximal gradient (no momentum). Not in the paper's
+//! Fig. 1, but the natural ablation between FISTA and the FPA `Linear`
+//! surrogate: FPA with `Pᵢ` = linearization, `Sᵏ = N` and unit-ish steps
+//! is a (Jacobi) proximal-gradient method with per-block step sizes.
+
+use super::{Recorder, SolveOptions, SolveReport, Solver};
+use crate::problems::CompositeProblem;
+use std::time::Instant;
+
+/// The ISTA solver.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct Ista {
+    /// Step override (None → 1/L_∇F).
+    pub step: Option<f64>,
+}
+
+impl<P: CompositeProblem> Solver<P> for Ista {
+    fn name(&self) -> String {
+        "ista".into()
+    }
+
+    fn solve(&mut self, problem: &P, opts: &SolveOptions) -> SolveReport {
+        let n = problem.n();
+        let layout = problem.layout().clone();
+        let nb = layout.num_blocks();
+        let mut recorder = Recorder::new("ista", problem, opts);
+
+        let l = self.step.map(|s| 1.0 / s).unwrap_or_else(|| problem.lipschitz_grad());
+        let step = if l > 0.0 { 1.0 / l } else { 1.0 };
+        let mut x = opts.x0.clone().unwrap_or_else(|| vec![0.0; n]);
+        let mut g = vec![0.0; n];
+        let mut x_new = vec![0.0; n];
+        let reduce_bytes = 8 * (n.min(1 << 20) + 16);
+        recorder.setup_done();
+
+        let mut iterations = 0;
+        let mut converged = false;
+        for k in 0..opts.max_iters {
+            iterations = k + 1;
+            let t0 = Instant::now();
+            problem.grad_smooth(&x, &mut g);
+            for i in 0..nb {
+                let r = layout.range(i);
+                let (lo, hi) = (r.start, r.end);
+                let v_block: Vec<f64> = (lo..hi).map(|j| x[j] - step * g[j]).collect();
+                problem.prox_block(i, &v_block, step, &mut x_new[lo..hi]);
+            }
+            std::mem::swap(&mut x, &mut x_new);
+            let t_parallel = t0.elapsed().as_secs_f64();
+
+            recorder.add_sim_time(opts.cost_model.iter_time(t_parallel, 0.0, reduce_bytes));
+            let err = recorder.record(k, &x, nb);
+            if recorder.reached(err) {
+                converged = true;
+                break;
+            }
+            if recorder.elapsed_s() > opts.max_seconds {
+                break;
+            }
+        }
+
+        let objective = problem.objective(&x);
+        SolveReport { x, objective, iterations, converged, trace: recorder.into_trace() }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::datagen::NesterovLasso;
+    use crate::problems::lasso::Lasso;
+
+    #[test]
+    fn converges_slowly_but_surely() {
+        let inst = NesterovLasso::new(30, 60, 0.1, 1.0).seed(61).generate();
+        let p = Lasso::new(inst.a, inst.b, inst.c).with_opt_value(inst.v_star);
+        let mut solver = Ista::default();
+        let report = solver.solve(&p, &SolveOptions::default().with_max_iters(20000).with_target(1e-4));
+        assert!(report.trace.best_rel_err() < 1e-3, "best {:.3e}", report.trace.best_rel_err());
+    }
+
+    #[test]
+    fn monotone_descent() {
+        let inst = NesterovLasso::new(20, 40, 0.2, 1.0).seed(62).generate();
+        let p = Lasso::new(inst.a, inst.b, inst.c).with_opt_value(inst.v_star);
+        let mut solver = Ista::default();
+        let report = solver.solve(&p, &SolveOptions::default().with_max_iters(200).with_target(0.0));
+        let objs: Vec<f64> = report.trace.records.iter().map(|r| r.objective).collect();
+        for w in objs.windows(2) {
+            assert!(w[1] <= w[0] + 1e-9, "ISTA must descend monotonically");
+        }
+    }
+}

@@ -1,0 +1,206 @@
+//! Solver framework: the paper's Algorithm 1 ([`fpa`]) plus every baseline
+//! its evaluation compares against ([`fista`], [`ista`], [`grock`],
+//! [`gauss_seidel`], [`admm`]).
+//!
+//! All solvers implement [`Solver`] over a problem type and produce a
+//! [`SolveReport`] whose [`crate::metrics::Trace`] is the data behind the
+//! paper's Fig. 1 (relative error vs time).
+
+pub mod admm;
+pub mod fista;
+pub mod fpa;
+pub mod gauss_seidel;
+pub mod grock;
+pub mod ista;
+
+use crate::coordinator::costmodel::CostModel;
+use crate::linalg::ops;
+use crate::metrics::{IterRecord, Stopwatch, Trace};
+use crate::problems::CompositeProblem;
+
+/// Common solve options.
+#[derive(Clone, Debug)]
+pub struct SolveOptions {
+    /// Iteration cap.
+    pub max_iters: usize,
+    /// Wall-clock cap in seconds (measured, not simulated).
+    pub max_seconds: f64,
+    /// Stop once `(V − V*)/V* ≤ target` (requires a known `V*`).
+    pub target_rel_err: f64,
+    /// Starting point (zeros when `None`, as in the paper).
+    pub x0: Option<Vec<f64>>,
+    /// Parallel cost model for simulated times.
+    pub cost_model: CostModel,
+    /// Record a trace row every `record_every` iterations (1 = all).
+    pub record_every: usize,
+}
+
+impl Default for SolveOptions {
+    fn default() -> Self {
+        Self {
+            max_iters: 2000,
+            max_seconds: 60.0,
+            target_rel_err: 1e-6,
+            x0: None,
+            cost_model: CostModel::serial(),
+            record_every: 1,
+        }
+    }
+}
+
+impl SolveOptions {
+    pub fn with_max_iters(mut self, k: usize) -> Self {
+        self.max_iters = k;
+        self
+    }
+    pub fn with_target(mut self, t: f64) -> Self {
+        self.target_rel_err = t;
+        self
+    }
+    pub fn with_cost_model(mut self, m: CostModel) -> Self {
+        self.cost_model = m;
+        self
+    }
+    pub fn with_x0(mut self, x0: Vec<f64>) -> Self {
+        self.x0 = Some(x0);
+        self
+    }
+}
+
+/// Result of a solve.
+#[derive(Clone, Debug)]
+pub struct SolveReport {
+    /// Final iterate.
+    pub x: Vec<f64>,
+    /// Final objective `V(x)`.
+    pub objective: f64,
+    /// Iterations performed.
+    pub iterations: usize,
+    /// Whether `target_rel_err` was reached.
+    pub converged: bool,
+    /// Per-iteration trace.
+    pub trace: Trace,
+}
+
+/// A solver for problems of type `P`.
+pub trait Solver<P: CompositeProblem + ?Sized> {
+    /// Display name (used in legends/CSV).
+    fn name(&self) -> String;
+    /// Run the solver.
+    fn solve(&mut self, problem: &P, opts: &SolveOptions) -> SolveReport;
+}
+
+/// Relative error `(V − V*)/V*`, or NaN when `V*` is unknown.
+pub fn rel_err(objective: f64, v_star: Option<f64>) -> f64 {
+    match v_star {
+        Some(v) if v != 0.0 => (objective - v) / v,
+        Some(_) => objective,
+        None => f64::NAN,
+    }
+}
+
+/// Shared trace-recording helper: computes objective/rel-err while the
+/// stopwatch is paused (metric evaluation is not part of solver time —
+/// the paper's curves likewise sample the objective out of band).
+pub struct Recorder<'a> {
+    trace: Trace,
+    v_star: Option<f64>,
+    sim_time_s: f64,
+    stopwatch: Stopwatch,
+    target: f64,
+    record_every: usize,
+    last_objective: f64,
+    problem: &'a dyn CompositeProblem,
+}
+
+impl<'a> Recorder<'a> {
+    pub fn new(algo: &str, problem: &'a dyn CompositeProblem, opts: &SolveOptions) -> Self {
+        Self {
+            trace: Trace::new(algo),
+            v_star: problem.opt_value(),
+            sim_time_s: 0.0,
+            stopwatch: Stopwatch::start(),
+            target: opts.target_rel_err,
+            record_every: opts.record_every.max(1),
+            last_objective: f64::INFINITY,
+            problem,
+        }
+    }
+
+    /// Objective at the most recent [`Self::record`] call.
+    pub fn last_objective(&self) -> f64 {
+        self.last_objective
+    }
+
+    /// Note setup time (counted into measured and simulated clocks; the
+    /// paper includes pre-iteration computations in its time axis).
+    pub fn setup_done(&mut self) {
+        let t = self.stopwatch.elapsed_s();
+        self.trace.setup_s = t;
+        self.sim_time_s += t;
+    }
+
+    /// Measured seconds so far (excludes paused metric evaluation).
+    pub fn elapsed_s(&self) -> f64 {
+        self.stopwatch.elapsed_s()
+    }
+
+    /// Advance the simulated clock by one iteration's estimate.
+    pub fn add_sim_time(&mut self, seconds: f64) {
+        self.sim_time_s += seconds;
+    }
+
+    /// Record iteration `k` with current iterate `x`; returns the relative
+    /// error (NaN if unknown). Pauses the stopwatch during evaluation.
+    pub fn record(&mut self, k: usize, x: &[f64], updated_blocks: usize) -> f64 {
+        self.stopwatch.pause();
+        let objective = self.problem.objective(x);
+        self.last_objective = objective;
+        let e = rel_err(objective, self.v_star);
+        if k % self.record_every == 0 || (e.is_finite() && e <= self.target) {
+            self.trace.push(IterRecord {
+                iter: k,
+                time_s: self.stopwatch.elapsed_s(),
+                sim_time_s: self.sim_time_s,
+                objective,
+                rel_err: e,
+                nnz: ops::nnz(x, 1e-9),
+                updated_blocks,
+            });
+        }
+        self.stopwatch.resume();
+        e
+    }
+
+    /// Whether the target accuracy is reached.
+    pub fn reached(&self, e: f64) -> bool {
+        e.is_finite() && e <= self.target
+    }
+
+    pub fn into_trace(self) -> Trace {
+        self.trace
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn rel_err_cases() {
+        assert!((rel_err(2.0, Some(1.0)) - 1.0).abs() < 1e-15);
+        assert!(rel_err(2.0, None).is_nan());
+        assert_eq!(rel_err(2.0, Some(0.0)), 2.0);
+    }
+
+    #[test]
+    fn options_builders() {
+        let o = SolveOptions::default()
+            .with_max_iters(7)
+            .with_target(1e-3)
+            .with_x0(vec![1.0]);
+        assert_eq!(o.max_iters, 7);
+        assert_eq!(o.target_rel_err, 1e-3);
+        assert_eq!(o.x0.as_deref(), Some(&[1.0][..]));
+    }
+}

@@ -1,0 +1,360 @@
+//! Fig. 1 panel runner — the shared engine behind `cargo bench`, the
+//! `figure1` example and the CLI `figure1` subcommand.
+//!
+//! A panel is one of the paper's four experiment groups (§4):
+//!
+//! | panel | m × n            | solution nnz | procs |
+//! |-------|------------------|--------------|-------|
+//! | a     | 2 000 × 10 000   | 20 %         | 16    |
+//! | b     | 2 000 × 10 000   | 10 %         | 16    |
+//! | c     | 2 000 × 10 000   | 5 %          | 16    |
+//! | d     | 5 000 × 100 000  | 5 %          | 32    |
+//!
+//! The runner generates the Nesterov instance(s), runs the paper's
+//! algorithm set (FPA, parallel FISTA, GRock-1, GRock-P, sequential GS,
+//! sequential ADMM), records relative-error-vs-time traces (measured and
+//! simulated-parallel clocks) and writes one CSV per algorithm.
+
+use crate::algos::admm::Admm;
+use crate::algos::fista::Fista;
+use crate::algos::fpa::{Fpa, FpaOptions};
+use crate::algos::gauss_seidel::GaussSeidel;
+use crate::algos::grock::Grock;
+use crate::algos::{SolveOptions, Solver};
+use crate::coordinator::CostModel;
+use crate::datagen::NesterovLasso;
+use crate::metrics::{write_trace_csv, AsciiPlot, Trace};
+use crate::problems::lasso::Lasso;
+use crate::select::SelectionRule;
+use anyhow::{bail, Result};
+use std::path::Path;
+
+/// One experiment group of the paper's Fig. 1.
+#[derive(Clone, Debug)]
+pub struct PanelSpec {
+    pub name: String,
+    pub rows: usize,
+    pub cols: usize,
+    pub sparsity: f64,
+    pub c: f64,
+    /// Simulated MPI process count (paper: 16 / 32).
+    pub procs: usize,
+    /// Instances averaged (paper: 10 / 3; default 1 for bench runtime).
+    pub realizations: usize,
+    pub max_iters: usize,
+    pub max_seconds: f64,
+    pub target_rel_err: f64,
+    pub seed: u64,
+}
+
+impl PanelSpec {
+    /// The paper's panel definitions.
+    pub fn paper(panel: char) -> Result<Self> {
+        let (rows, cols, sparsity, procs) = match panel {
+            'a' => (2000, 10000, 0.20, 16),
+            'b' => (2000, 10000, 0.10, 16),
+            'c' => (2000, 10000, 0.05, 16),
+            'd' => (5000, 100000, 0.05, 32),
+            other => bail!("unknown panel `{other}` (expected a, b, c or d)"),
+        };
+        Ok(Self {
+            name: format!("fig1{panel}"),
+            rows,
+            cols,
+            sparsity,
+            c: 1.0,
+            procs,
+            realizations: 1,
+            max_iters: 20_000,
+            max_seconds: 90.0,
+            target_rel_err: 1e-6,
+            seed: 0x1311_2444 + panel as u64,
+        })
+    }
+
+    /// Linearly scale the problem size by `f` (for laptop-budget runs);
+    /// keeps sparsity and process counts.
+    pub fn scaled(mut self, f: f64) -> Self {
+        assert!(f > 0.0 && f <= 1.0);
+        self.rows = ((self.rows as f64 * f).round() as usize).max(20);
+        self.cols = ((self.cols as f64 * f).round() as usize).max(60);
+        if f < 1.0 {
+            self.name = format!("{}_s{:.3}", self.name, f);
+        }
+        self
+    }
+
+    pub fn with_realizations(mut self, r: usize) -> Self {
+        self.realizations = r.max(1);
+        self
+    }
+
+    pub fn with_budget(mut self, max_seconds: f64) -> Self {
+        self.max_seconds = max_seconds;
+        self
+    }
+}
+
+/// The paper's algorithm line-up for a panel (`grock_p` = process count).
+pub fn paper_algos(procs: usize) -> Vec<String> {
+    vec![
+        "fpa".into(),
+        "fista".into(),
+        "grock-1".into(),
+        format!("grock-{procs}"),
+        "gauss-seidel".into(),
+        "admm".into(),
+    ]
+}
+
+/// Run one named solver on a Lasso instance.
+pub fn run_solver(name: &str, problem: &Lasso, opts: &SolveOptions) -> Result<Trace> {
+    let report = match name {
+        // The least-squares fast path (incremental residual) — same
+        // mathematics as `solve`, ~1.5x faster per iteration.
+        "fpa" => Fpa::paper_defaults(problem).solve_ls(problem, opts),
+        "fpa-jacobi" => Fpa::new(FpaOptions {
+            selection: SelectionRule::FullJacobi,
+            ..FpaOptions::default()
+        })
+        .solve_ls(problem, opts),
+        "fista" => Fista::default().solve(problem, opts),
+        "ista" => crate::algos::ista::Ista::default().solve(problem, opts),
+        "gauss-seidel" => GaussSeidel::default().solve(problem, opts),
+        "admm" => Admm::default().solve(problem, opts),
+        other => {
+            if let Some(p) = other.strip_prefix("grock-") {
+                let p: usize = p.parse().map_err(|_| anyhow::anyhow!("bad grock P `{p}`"))?;
+                Grock::new(p).solve(problem, opts)
+            } else if let Some(rho) = other.strip_prefix("fpa-rho-") {
+                let rho: f64 = rho.parse()?;
+                Fpa::new(FpaOptions {
+                    selection: SelectionRule::GreedyRho { rho },
+                    ..FpaOptions::default()
+                })
+                .solve_ls(problem, opts)
+            } else {
+                bail!("unknown solver `{other}`");
+            }
+        }
+    };
+    Ok(report.trace)
+}
+
+/// Average several traces over realizations: aligns by iteration index
+/// and averages times/objectives/errors (the paper averages its curves
+/// over 10 / 3 realizations the same way).
+pub fn average_traces(traces: &[Trace]) -> Trace {
+    assert!(!traces.is_empty());
+    if traces.len() == 1 {
+        return traces[0].clone();
+    }
+    let mut out = Trace::new(&traces[0].algo);
+    out.setup_s = traces.iter().map(|t| t.setup_s).sum::<f64>() / traces.len() as f64;
+    let min_len = traces.iter().map(|t| t.records.len()).min().unwrap_or(0);
+    for k in 0..min_len {
+        let mut acc = traces[0].records[k];
+        let mut rel_sum = 0.0;
+        let mut time_sum = 0.0;
+        let mut sim_sum = 0.0;
+        let mut obj_sum = 0.0;
+        for t in traces {
+            let r = &t.records[k];
+            rel_sum += r.rel_err.max(0.0);
+            time_sum += r.time_s;
+            sim_sum += r.sim_time_s;
+            obj_sum += r.objective;
+        }
+        let n = traces.len() as f64;
+        acc.rel_err = rel_sum / n;
+        acc.time_s = time_sum / n;
+        acc.sim_time_s = sim_sum / n;
+        acc.objective = obj_sum / n;
+        out.records.push(acc);
+    }
+    out
+}
+
+/// Result of a panel run.
+pub struct PanelResult {
+    pub spec: PanelSpec,
+    /// Averaged trace per algorithm.
+    pub traces: Vec<Trace>,
+}
+
+impl PanelResult {
+    /// ASCII rendering (relative error vs simulated parallel time).
+    pub fn render(&self, simulated: bool) -> String {
+        let mut plot = AsciiPlot::new(
+            &format!(
+                "{}: {}x{}, {:.0}% nnz, {} procs ({} clock)",
+                self.spec.name,
+                self.spec.rows,
+                self.spec.cols,
+                self.spec.sparsity * 100.0,
+                self.spec.procs,
+                if simulated { "simulated" } else { "measured" }
+            ),
+            72,
+            20,
+        );
+        for t in &self.traces {
+            let pts: Vec<(f64, f64)> = t
+                .records
+                .iter()
+                .map(|r| (if simulated { r.sim_time_s } else { r.time_s }, r.rel_err))
+                .collect();
+            plot.add_series(&t.algo, &pts);
+        }
+        plot.render()
+    }
+
+    /// Paper-style summary table: time to reach each accuracy.
+    pub fn summary_table(&self, simulated: bool) -> String {
+        let targets = [1e-2, 1e-4, 1e-6];
+        let mut s = format!(
+            "{:<16} {:>12} {:>12} {:>12} {:>10}\n",
+            "algorithm", "t(1e-2)", "t(1e-4)", "t(1e-6)", "best"
+        );
+        for t in &self.traces {
+            let cells: Vec<String> = targets
+                .iter()
+                .map(|&tg| match t.time_to_rel_err(tg, simulated) {
+                    Some(x) => format!("{x:.2}s"),
+                    None => "-".into(),
+                })
+                .collect();
+            s.push_str(&format!(
+                "{:<16} {:>12} {:>12} {:>12} {:>10.1e}\n",
+                t.algo,
+                cells[0],
+                cells[1],
+                cells[2],
+                t.best_rel_err()
+            ));
+        }
+        s
+    }
+}
+
+/// Run a full panel: all algorithms × realizations, CSVs into `out_dir`.
+pub fn run_panel(spec: &PanelSpec, algos: &[String], out_dir: Option<&Path>) -> Result<PanelResult> {
+    let mut averaged = Vec::new();
+    for algo in algos {
+        let mut traces = Vec::new();
+        for real in 0..spec.realizations {
+            let gen = NesterovLasso::new(spec.rows, spec.cols, spec.sparsity, spec.c)
+                .seed(spec.seed.wrapping_add(real as u64 * 0x9E37));
+            let inst = gen.generate();
+            let problem = Lasso::new(inst.a, inst.b, inst.c).with_opt_value(inst.v_star);
+            let opts = SolveOptions {
+                max_iters: spec.max_iters,
+                max_seconds: spec.max_seconds,
+                target_rel_err: spec.target_rel_err,
+                x0: None,
+                cost_model: CostModel::mpi_node(spec.procs),
+                record_every: 1,
+            };
+            traces.push(run_solver(algo, &problem, &opts)?);
+        }
+        let avg = average_traces(&traces);
+        if let Some(dir) = out_dir {
+            let path = dir.join(format!("{}_{}.csv", spec.name, avg.algo.replace('/', "_")));
+            write_trace_csv(&path, &avg)?;
+        }
+        averaged.push(avg);
+    }
+    Ok(PanelResult { spec: spec.clone(), traces: averaged })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn paper_panels_defined() {
+        for p in ['a', 'b', 'c', 'd'] {
+            let spec = PanelSpec::paper(p).unwrap();
+            assert!(spec.rows >= 2000);
+            assert!(spec.sparsity <= 0.2);
+        }
+        assert!(PanelSpec::paper('x').is_err());
+        let d = PanelSpec::paper('d').unwrap();
+        assert_eq!(d.procs, 32);
+        assert_eq!(d.cols, 100000);
+    }
+
+    #[test]
+    fn scaled_panel_shrinks() {
+        let s = PanelSpec::paper('b').unwrap().scaled(0.1);
+        assert_eq!(s.rows, 200);
+        assert_eq!(s.cols, 1000);
+        assert!(s.name.contains("s0.100"));
+    }
+
+    #[test]
+    fn tiny_panel_end_to_end() {
+        let spec = PanelSpec {
+            name: "tiny".into(),
+            rows: 40,
+            cols: 120,
+            sparsity: 0.1,
+            c: 1.0,
+            procs: 4,
+            realizations: 2,
+            max_iters: 500,
+            max_seconds: 20.0,
+            target_rel_err: 1e-4,
+            seed: 42,
+        };
+        let algos = vec!["fpa".to_string(), "gauss-seidel".to_string()];
+        let result = run_panel(&spec, &algos, None).unwrap();
+        assert_eq!(result.traces.len(), 2);
+        for t in &result.traces {
+            assert!(t.best_rel_err() < 1e-2, "{}: {:.3e}", t.algo, t.best_rel_err());
+        }
+        let table = result.summary_table(true);
+        assert!(table.contains("fpa"));
+        let plot = result.render(false);
+        assert!(plot.contains("tiny"));
+    }
+
+    #[test]
+    fn average_traces_means() {
+        let mut t1 = Trace::new("x");
+        let mut t2 = Trace::new("x");
+        for k in 0..3 {
+            t1.push(crate::metrics::IterRecord {
+                iter: k,
+                time_s: 1.0,
+                sim_time_s: 2.0,
+                objective: 10.0,
+                rel_err: 0.1,
+                nnz: 5,
+                updated_blocks: 1,
+            });
+            t2.push(crate::metrics::IterRecord {
+                iter: k,
+                time_s: 3.0,
+                sim_time_s: 4.0,
+                objective: 20.0,
+                rel_err: 0.3,
+                nnz: 5,
+                updated_blocks: 1,
+            });
+        }
+        let avg = average_traces(&[t1, t2]);
+        assert_eq!(avg.records.len(), 3);
+        assert!((avg.records[0].time_s - 2.0).abs() < 1e-12);
+        assert!((avg.records[0].rel_err - 0.2).abs() < 1e-12);
+        assert!((avg.records[0].objective - 15.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn unknown_solver_rejected() {
+        let inst = NesterovLasso::new(10, 30, 0.1, 1.0).seed(1).generate();
+        let p = Lasso::new(inst.a, inst.b, inst.c);
+        assert!(run_solver("bogus", &p, &SolveOptions::default()).is_err());
+        assert!(run_solver("grock-x", &p, &SolveOptions::default()).is_err());
+    }
+}

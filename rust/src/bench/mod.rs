@@ -1,0 +1,204 @@
+//! Bench-harness substrate (no `criterion` in the offline crate cache).
+//!
+//! Provides warmup + repeated timing with robust statistics and a table
+//! printer, plus the Fig. 1 panel runner ([`fig1`]). The
+//! `rust/benches/*.rs` targets (declared `harness = false`) use these to
+//! regenerate the paper's tables/figures.
+
+pub mod fig1;
+
+use std::time::Instant;
+
+/// Timing statistics over repetitions, in seconds.
+#[derive(Clone, Copy, Debug)]
+pub struct Stats {
+    pub reps: usize,
+    pub mean: f64,
+    pub median: f64,
+    pub min: f64,
+    pub max: f64,
+    pub p10: f64,
+    pub p90: f64,
+    pub std_dev: f64,
+}
+
+impl Stats {
+    /// Compute from raw per-rep durations.
+    pub fn from_samples(mut samples: Vec<f64>) -> Stats {
+        assert!(!samples.is_empty(), "Stats::from_samples: empty");
+        samples.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let reps = samples.len();
+        let mean = samples.iter().sum::<f64>() / reps as f64;
+        let var = samples.iter().map(|s| (s - mean) * (s - mean)).sum::<f64>() / reps as f64;
+        let pct = |q: f64| -> f64 {
+            let pos = q * (reps - 1) as f64;
+            let lo = pos.floor() as usize;
+            let hi = pos.ceil() as usize;
+            if lo == hi {
+                samples[lo]
+            } else {
+                samples[lo] + (pos - lo as f64) * (samples[hi] - samples[lo])
+            }
+        };
+        Stats {
+            reps,
+            mean,
+            median: pct(0.5),
+            min: samples[0],
+            max: samples[reps - 1],
+            p10: pct(0.1),
+            p90: pct(0.9),
+            std_dev: var.sqrt(),
+        }
+    }
+}
+
+/// Benchmark runner: named measurements with warmup.
+pub struct Bench {
+    name: String,
+    warmup: usize,
+    reps: usize,
+    results: Vec<(String, Stats, f64)>, // (label, stats, work-units/sec)
+}
+
+impl Bench {
+    pub fn new(name: &str) -> Self {
+        Self { name: name.to_string(), warmup: 1, reps: 5, results: Vec::new() }
+    }
+
+    pub fn warmup(mut self, warmup: usize) -> Self {
+        self.warmup = warmup;
+        self
+    }
+
+    pub fn reps(mut self, reps: usize) -> Self {
+        self.reps = reps;
+        self
+    }
+
+    /// Time `f` (which returns a work-unit count, e.g. FLOPs or items, for
+    /// throughput reporting; return 0 to skip throughput).
+    pub fn measure(&mut self, label: &str, mut f: impl FnMut() -> u64) -> Stats {
+        for _ in 0..self.warmup {
+            std::hint::black_box(f());
+        }
+        let mut samples = Vec::with_capacity(self.reps);
+        let mut work = 0u64;
+        for _ in 0..self.reps {
+            let t = Instant::now();
+            work = std::hint::black_box(f());
+            samples.push(t.elapsed().as_secs_f64());
+        }
+        let stats = Stats::from_samples(samples);
+        let throughput = if work > 0 && stats.median > 0.0 {
+            work as f64 / stats.median
+        } else {
+            0.0
+        };
+        self.results.push((label.to_string(), stats, throughput));
+        stats
+    }
+
+    /// Render the result table.
+    pub fn table(&self) -> String {
+        let mut out = String::new();
+        out.push_str(&format!("\n=== bench: {} ===\n", self.name));
+        out.push_str(&format!(
+            "{:<42} {:>10} {:>10} {:>10} {:>10} {:>12}\n",
+            "case", "median", "mean", "p10", "p90", "work/s"
+        ));
+        for (label, s, tput) in &self.results {
+            out.push_str(&format!(
+                "{:<42} {:>10} {:>10} {:>10} {:>10} {:>12}\n",
+                label,
+                fmt_time(s.median),
+                fmt_time(s.mean),
+                fmt_time(s.p10),
+                fmt_time(s.p90),
+                fmt_throughput(*tput),
+            ));
+        }
+        out
+    }
+
+    pub fn print(&self) {
+        print!("{}", self.table());
+    }
+}
+
+/// Human time formatting.
+pub fn fmt_time(s: f64) -> String {
+    if s >= 1.0 {
+        format!("{s:.3}s")
+    } else if s >= 1e-3 {
+        format!("{:.3}ms", s * 1e3)
+    } else if s >= 1e-6 {
+        format!("{:.3}us", s * 1e6)
+    } else {
+        format!("{:.1}ns", s * 1e9)
+    }
+}
+
+/// Human throughput formatting.
+pub fn fmt_throughput(t: f64) -> String {
+    if t == 0.0 {
+        "-".into()
+    } else if t >= 1e9 {
+        format!("{:.2}G/s", t / 1e9)
+    } else if t >= 1e6 {
+        format!("{:.2}M/s", t / 1e6)
+    } else if t >= 1e3 {
+        format!("{:.2}K/s", t / 1e3)
+    } else {
+        format!("{t:.2}/s")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn stats_percentiles() {
+        let s = Stats::from_samples(vec![1.0, 2.0, 3.0, 4.0, 5.0]);
+        assert_eq!(s.median, 3.0);
+        assert_eq!(s.min, 1.0);
+        assert_eq!(s.max, 5.0);
+        assert_eq!(s.mean, 3.0);
+        assert!((s.p10 - 1.4).abs() < 1e-12);
+        assert!((s.p90 - 4.6).abs() < 1e-12);
+        // Unsorted input is fine.
+        let s2 = Stats::from_samples(vec![5.0, 1.0, 3.0, 2.0, 4.0]);
+        assert_eq!(s2.median, 3.0);
+    }
+
+    #[test]
+    fn measure_runs_and_reports() {
+        let mut b = Bench::new("unit").warmup(1).reps(3);
+        let mut count = 0u64;
+        let s = b.measure("noop-ish", || {
+            count += 1;
+            let mut acc = 0u64;
+            for i in 0..1000u64 {
+                acc = acc.wrapping_add(i * i);
+            }
+            std::hint::black_box(acc);
+            1000
+        });
+        assert_eq!(count, 4); // 1 warmup + 3 reps
+        assert!(s.median >= 0.0);
+        let t = b.table();
+        assert!(t.contains("noop-ish"));
+    }
+
+    #[test]
+    fn formatting() {
+        assert_eq!(fmt_time(2.5), "2.500s");
+        assert!(fmt_time(2.5e-3).ends_with("ms"));
+        assert!(fmt_time(2.5e-6).ends_with("us"));
+        assert!(fmt_time(2.5e-10).ends_with("ns"));
+        assert_eq!(fmt_throughput(0.0), "-");
+        assert!(fmt_throughput(2.5e9).ends_with("G/s"));
+        assert!(fmt_throughput(2.5e6).ends_with("M/s"));
+    }
+}

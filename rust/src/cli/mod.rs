@@ -1,0 +1,181 @@
+//! Argument-parser substrate (no `clap` in the offline crate cache).
+//!
+//! Supports: subcommands, `--flag`, `--key value`, `--key=value`,
+//! positionals, typed accessors with defaults, and generated `--help` text.
+
+use anyhow::{anyhow, bail, Result};
+use std::collections::BTreeMap;
+
+/// Declarative spec for one option.
+#[derive(Clone, Debug)]
+pub struct OptSpec {
+    pub name: &'static str,
+    pub help: &'static str,
+    /// Boolean flags take no value.
+    pub is_flag: bool,
+    pub default: Option<&'static str>,
+}
+
+/// A parser for one (sub)command.
+#[derive(Clone, Debug, Default)]
+pub struct Command {
+    pub name: &'static str,
+    pub about: &'static str,
+    opts: Vec<OptSpec>,
+}
+
+impl Command {
+    pub fn new(name: &'static str, about: &'static str) -> Self {
+        Self { name, about, opts: Vec::new() }
+    }
+
+    pub fn flag(mut self, name: &'static str, help: &'static str) -> Self {
+        self.opts.push(OptSpec { name, help, is_flag: true, default: None });
+        self
+    }
+
+    pub fn opt(mut self, name: &'static str, default: Option<&'static str>, help: &'static str) -> Self {
+        self.opts.push(OptSpec { name, help, is_flag: false, default });
+        self
+    }
+
+    /// Render help text.
+    pub fn help(&self) -> String {
+        let mut s = format!("{} — {}\n\noptions:\n", self.name, self.about);
+        for o in &self.opts {
+            let kind = if o.is_flag { "" } else { " <value>" };
+            let default = o.default.map(|d| format!(" [default: {d}]")).unwrap_or_default();
+            s.push_str(&format!("  --{}{kind}\t{}{default}\n", o.name, o.help));
+        }
+        s
+    }
+
+    /// Parse `args` (not including the program / subcommand name).
+    pub fn parse(&self, args: &[String]) -> Result<Parsed> {
+        let mut values: BTreeMap<String, String> = BTreeMap::new();
+        let mut flags: Vec<String> = Vec::new();
+        let mut positionals: Vec<String> = Vec::new();
+        for o in &self.opts {
+            if let Some(d) = o.default {
+                values.insert(o.name.to_string(), d.to_string());
+            }
+        }
+        let mut it = args.iter().peekable();
+        while let Some(arg) = it.next() {
+            if let Some(body) = arg.strip_prefix("--") {
+                if body == "help" {
+                    bail!("{}", self.help());
+                }
+                let (key, inline) = match body.split_once('=') {
+                    Some((k, v)) => (k, Some(v.to_string())),
+                    None => (body, None),
+                };
+                let spec = self
+                    .opts
+                    .iter()
+                    .find(|o| o.name == key)
+                    .ok_or_else(|| anyhow!("unknown option --{key}\n\n{}", self.help()))?;
+                if spec.is_flag {
+                    if inline.is_some() {
+                        bail!("flag --{key} takes no value");
+                    }
+                    flags.push(key.to_string());
+                } else {
+                    let v = match inline {
+                        Some(v) => v,
+                        None => it
+                            .next()
+                            .ok_or_else(|| anyhow!("option --{key} requires a value"))?
+                            .clone(),
+                    };
+                    values.insert(key.to_string(), v);
+                }
+            } else {
+                positionals.push(arg.clone());
+            }
+        }
+        Ok(Parsed { values, flags, positionals })
+    }
+}
+
+/// Parsed arguments with typed accessors.
+#[derive(Clone, Debug, Default)]
+pub struct Parsed {
+    values: BTreeMap<String, String>,
+    flags: Vec<String>,
+    positionals: Vec<String>,
+}
+
+impl Parsed {
+    pub fn flag(&self, name: &str) -> bool {
+        self.flags.iter().any(|f| f == name)
+    }
+    pub fn get(&self, name: &str) -> Option<&str> {
+        self.values.get(name).map(String::as_str)
+    }
+    pub fn str(&self, name: &str) -> Result<&str> {
+        self.get(name).ok_or_else(|| anyhow!("missing required option --{name}"))
+    }
+    pub fn usize(&self, name: &str) -> Result<usize> {
+        self.str(name)?.parse().map_err(|_| anyhow!("--{name} must be an unsigned integer"))
+    }
+    pub fn u64(&self, name: &str) -> Result<u64> {
+        self.str(name)?.parse().map_err(|_| anyhow!("--{name} must be an unsigned integer"))
+    }
+    pub fn f64(&self, name: &str) -> Result<f64> {
+        self.str(name)?.parse().map_err(|_| anyhow!("--{name} must be a number"))
+    }
+    pub fn positionals(&self) -> &[String] {
+        &self.positionals
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn cmd() -> Command {
+        Command::new("solve", "solve a problem")
+            .opt("rows", Some("2000"), "rows of A")
+            .opt("algo", Some("fpa"), "algorithm")
+            .opt("rho", Some("0.5"), "selection threshold")
+            .flag("verbose", "chatty output")
+    }
+
+    fn args(list: &[&str]) -> Vec<String> {
+        list.iter().map(|s| s.to_string()).collect()
+    }
+
+    #[test]
+    fn defaults_and_overrides() {
+        let p = cmd().parse(&args(&["--rows", "100", "--rho=0.9"])).unwrap();
+        assert_eq!(p.usize("rows").unwrap(), 100);
+        assert_eq!(p.f64("rho").unwrap(), 0.9);
+        assert_eq!(p.str("algo").unwrap(), "fpa");
+        assert!(!p.flag("verbose"));
+    }
+
+    #[test]
+    fn flags_and_positionals() {
+        let p = cmd().parse(&args(&["--verbose", "config.toml"])).unwrap();
+        assert!(p.flag("verbose"));
+        assert_eq!(p.positionals(), &["config.toml".to_string()]);
+    }
+
+    #[test]
+    fn error_paths() {
+        assert!(cmd().parse(&args(&["--bogus"])).is_err());
+        assert!(cmd().parse(&args(&["--rows"])).is_err());
+        assert!(cmd().parse(&args(&["--verbose=1"])).is_err());
+        let p = cmd().parse(&args(&["--rows", "abc"])).unwrap();
+        assert!(p.usize("rows").is_err());
+    }
+
+    #[test]
+    fn help_renders() {
+        let h = cmd().help();
+        assert!(h.contains("--rows"));
+        assert!(h.contains("default: 2000"));
+        assert!(cmd().parse(&args(&["--help"])).is_err());
+    }
+}

@@ -1,0 +1,316 @@
+//! Typed experiment configuration consumed by the CLI, the figure-1
+//! regenerators and the bench harness.
+
+use super::toml::{self, Document, Value};
+use anyhow::{anyhow, bail, Context, Result};
+
+/// Which composite problem to instantiate.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum ProblemKind {
+    /// ℓ₁-regularized least squares (the paper's evaluation).
+    Lasso,
+    /// Group Lasso with equal-size blocks.
+    GroupLasso,
+    /// ℓ₁-regularized logistic regression.
+    Logreg,
+    /// ℓ₁-regularized ℓ₂-loss SVM.
+    Svm,
+}
+
+impl ProblemKind {
+    pub fn parse(s: &str) -> Result<Self> {
+        Ok(match s {
+            "lasso" => Self::Lasso,
+            "group_lasso" | "group-lasso" => Self::GroupLasso,
+            "logreg" | "logistic" => Self::Logreg,
+            "svm" => Self::Svm,
+            other => bail!("unknown problem kind `{other}`"),
+        })
+    }
+    pub fn name(&self) -> &'static str {
+        match self {
+            Self::Lasso => "lasso",
+            Self::GroupLasso => "group_lasso",
+            Self::Logreg => "logreg",
+            Self::Svm => "svm",
+        }
+    }
+}
+
+/// Problem-instance parameters (fed to `datagen`).
+#[derive(Clone, Debug)]
+pub struct ProblemConfig {
+    pub kind: ProblemKind,
+    /// Rows of A / number of samples (paper: 2 000 or 5 000).
+    pub rows: usize,
+    /// Columns of A / number of variables (paper: 10 000 or 100 000).
+    pub cols: usize,
+    /// Fraction of non-zeros in the planted solution (paper: 0.2/0.1/0.05).
+    pub sparsity: f64,
+    /// Regularization weight c.
+    pub c: f64,
+    /// Variables per block (1 = scalar blocks as in the paper's Lasso runs).
+    pub block_size: usize,
+}
+
+impl Default for ProblemConfig {
+    fn default() -> Self {
+        Self { kind: ProblemKind::Lasso, rows: 2000, cols: 10000, sparsity: 0.1, c: 1.0, block_size: 1 }
+    }
+}
+
+/// Per-algorithm configuration: name + free-form numeric parameters.
+#[derive(Clone, Debug, Default)]
+pub struct AlgoConfig {
+    pub name: String,
+    pub params: Vec<(String, f64)>,
+}
+
+impl AlgoConfig {
+    pub fn new(name: &str) -> Self {
+        Self { name: name.to_string(), params: Vec::new() }
+    }
+    pub fn with(mut self, key: &str, value: f64) -> Self {
+        self.params.push((key.to_string(), value));
+        self
+    }
+    pub fn get(&self, key: &str) -> Option<f64> {
+        self.params.iter().rev().find(|(k, _)| k == key).map(|(_, v)| *v)
+    }
+    pub fn get_or(&self, key: &str, default: f64) -> f64 {
+        self.get(key).unwrap_or(default)
+    }
+}
+
+/// A full experiment: one problem family × several solvers × realizations.
+#[derive(Clone, Debug)]
+pub struct ExperimentConfig {
+    pub name: String,
+    pub seed: u64,
+    /// Independent random instances to average over (paper: 10 / 3).
+    pub realizations: usize,
+    pub problem: ProblemConfig,
+    pub algos: Vec<AlgoConfig>,
+    /// Stop once relative error reaches this (paper plots down to ~1e-6).
+    pub target_rel_err: f64,
+    /// Hard iteration cap per solver.
+    pub max_iters: usize,
+    /// Hard wall-clock cap per solver run, seconds.
+    pub max_seconds: f64,
+    /// Simulated process count for the parallel cost model (paper: 16/32).
+    pub procs: usize,
+    /// Output directory for CSV series.
+    pub out_dir: String,
+}
+
+impl Default for ExperimentConfig {
+    fn default() -> Self {
+        Self {
+            name: "experiment".into(),
+            seed: 20131311, // arXiv 1311.2444
+            realizations: 1,
+            problem: ProblemConfig::default(),
+            algos: vec![AlgoConfig::new("fpa")],
+            target_rel_err: 1e-6,
+            max_iters: 5000,
+            max_seconds: 120.0,
+            procs: 16,
+            out_dir: "results".into(),
+        }
+    }
+}
+
+impl ExperimentConfig {
+    /// Parse from TOML text.
+    pub fn from_toml(text: &str) -> Result<Self> {
+        let doc = toml::parse(text).map_err(|e| anyhow!("{e}"))?;
+        Self::from_doc(&doc)
+    }
+
+    /// Load from a file path.
+    pub fn from_file(path: &str) -> Result<Self> {
+        let text = std::fs::read_to_string(path).with_context(|| format!("reading {path}"))?;
+        Self::from_toml(&text)
+    }
+
+    fn from_doc(doc: &Document) -> Result<Self> {
+        let mut cfg = Self::default();
+        if let Some(v) = doc.get("name") {
+            cfg.name = req_str(v, "name")?;
+        }
+        if let Some(v) = doc.get("seed") {
+            cfg.seed = req_int(v, "seed")? as u64;
+        }
+        if let Some(v) = doc.get("realizations") {
+            cfg.realizations = req_int(v, "realizations")? as usize;
+        }
+        if let Some(v) = doc.get("target_rel_err") {
+            cfg.target_rel_err = req_float(v, "target_rel_err")?;
+        }
+        if let Some(v) = doc.get("max_iters") {
+            cfg.max_iters = req_int(v, "max_iters")? as usize;
+        }
+        if let Some(v) = doc.get("max_seconds") {
+            cfg.max_seconds = req_float(v, "max_seconds")?;
+        }
+        if let Some(v) = doc.get("procs") {
+            cfg.procs = req_int(v, "procs")? as usize;
+        }
+        if let Some(v) = doc.get("out_dir") {
+            cfg.out_dir = req_str(v, "out_dir")?;
+        }
+        // [problem]
+        if let Some(v) = doc.get("problem.kind") {
+            cfg.problem.kind = ProblemKind::parse(&req_str(v, "problem.kind")?)?;
+        }
+        if let Some(v) = doc.get("problem.rows") {
+            cfg.problem.rows = req_int(v, "problem.rows")? as usize;
+        }
+        if let Some(v) = doc.get("problem.cols") {
+            cfg.problem.cols = req_int(v, "problem.cols")? as usize;
+        }
+        if let Some(v) = doc.get("problem.sparsity") {
+            cfg.problem.sparsity = req_float(v, "problem.sparsity")?;
+        }
+        if let Some(v) = doc.get("problem.c") {
+            cfg.problem.c = req_float(v, "problem.c")?;
+        }
+        if let Some(v) = doc.get("problem.block_size") {
+            cfg.problem.block_size = req_int(v, "problem.block_size")? as usize;
+        }
+        // algos = ["fpa", "fista", ...]; per-algo params under [algo.<name>].
+        if let Some(v) = doc.get("algos") {
+            let arr = v.as_array().ok_or_else(|| anyhow!("algos must be an array"))?;
+            cfg.algos = arr
+                .iter()
+                .map(|a| {
+                    a.as_str()
+                        .map(AlgoConfig::new)
+                        .ok_or_else(|| anyhow!("algos entries must be strings"))
+                })
+                .collect::<Result<Vec<_>>>()?;
+        }
+        for algo in cfg.algos.iter_mut() {
+            let prefix = format!("algo.{}.", algo.name);
+            for (k, v) in doc.iter() {
+                if let Some(param) = k.strip_prefix(&prefix) {
+                    let f = v
+                        .as_float()
+                        .ok_or_else(|| anyhow!("algo param `{k}` must be numeric"))?;
+                    algo.params.push((param.to_string(), f));
+                }
+            }
+        }
+        cfg.validate()?;
+        Ok(cfg)
+    }
+
+    /// Sanity-check parameter ranges.
+    pub fn validate(&self) -> Result<()> {
+        if self.problem.rows == 0 || self.problem.cols == 0 {
+            bail!("problem dimensions must be positive");
+        }
+        if !(0.0..=1.0).contains(&self.problem.sparsity) {
+            bail!("sparsity must be in [0, 1]");
+        }
+        if self.problem.c <= 0.0 {
+            bail!("regularization weight c must be positive");
+        }
+        if self.problem.block_size == 0 || self.problem.block_size > self.problem.cols {
+            bail!("block_size must be in [1, cols]");
+        }
+        if self.realizations == 0 {
+            bail!("realizations must be >= 1");
+        }
+        if self.algos.is_empty() {
+            bail!("at least one algorithm required");
+        }
+        if self.procs == 0 {
+            bail!("procs must be >= 1");
+        }
+        Ok(())
+    }
+}
+
+fn req_str(v: &Value, key: &str) -> Result<String> {
+    v.as_str().map(str::to_string).ok_or_else(|| anyhow!("`{key}` must be a string"))
+}
+fn req_int(v: &Value, key: &str) -> Result<i64> {
+    v.as_int().ok_or_else(|| anyhow!("`{key}` must be an integer"))
+}
+fn req_float(v: &Value, key: &str) -> Result<f64> {
+    v.as_float().ok_or_else(|| anyhow!("`{key}` must be a number"))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = r#"
+        name = "fig1b"
+        seed = 7
+        realizations = 10
+        target_rel_err = 1e-6
+        max_iters = 2000
+        procs = 16
+        algos = ["fpa", "fista", "grock"]
+
+        [problem]
+        kind = "lasso"
+        rows = 2000
+        cols = 10000
+        sparsity = 0.1
+        c = 1.0
+
+        [algo.fpa]
+        rho = 0.5
+        gamma0 = 0.9
+        theta = 1e-5
+
+        [algo.grock]
+        p = 16
+    "#;
+
+    #[test]
+    fn parses_full_experiment() {
+        let cfg = ExperimentConfig::from_toml(SAMPLE).unwrap();
+        assert_eq!(cfg.name, "fig1b");
+        assert_eq!(cfg.realizations, 10);
+        assert_eq!(cfg.problem.kind, ProblemKind::Lasso);
+        assert_eq!(cfg.problem.cols, 10000);
+        assert_eq!(cfg.algos.len(), 3);
+        let fpa = &cfg.algos[0];
+        assert_eq!(fpa.get("rho"), Some(0.5));
+        assert_eq!(fpa.get("theta"), Some(1e-5));
+        let grock = &cfg.algos[2];
+        assert_eq!(grock.get("p"), Some(16.0));
+        assert_eq!(grock.get("missing"), None);
+        assert_eq!(grock.get_or("missing", 3.0), 3.0);
+    }
+
+    #[test]
+    fn defaults_fill_missing_fields() {
+        let cfg = ExperimentConfig::from_toml("name = \"x\"").unwrap();
+        assert_eq!(cfg.problem.rows, 2000);
+        assert_eq!(cfg.algos.len(), 1);
+        assert_eq!(cfg.algos[0].name, "fpa");
+    }
+
+    #[test]
+    fn validation_rejects_bad_configs() {
+        assert!(ExperimentConfig::from_toml("[problem]\nsparsity = 1.5").is_err());
+        assert!(ExperimentConfig::from_toml("[problem]\nc = -1.0").is_err());
+        assert!(ExperimentConfig::from_toml("[problem]\nrows = 0").is_err());
+        assert!(ExperimentConfig::from_toml("realizations = 0").is_err());
+        assert!(ExperimentConfig::from_toml("algos = []").is_err());
+        assert!(ExperimentConfig::from_toml("algos = [1]").is_err());
+    }
+
+    #[test]
+    fn problem_kind_roundtrip() {
+        for k in ["lasso", "group_lasso", "logreg", "svm"] {
+            assert_eq!(ProblemKind::parse(k).unwrap().name(), k);
+        }
+        assert!(ProblemKind::parse("bogus").is_err());
+    }
+}

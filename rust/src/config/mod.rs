@@ -1,0 +1,12 @@
+//! Experiment configuration: a minimal TOML-subset parser plus the typed
+//! config structs the CLI and bench harness consume.
+//!
+//! No `serde`/`toml` in the offline crate cache, so [`toml`] implements the
+//! subset the configs need: tables (`[section]`), key = value with strings,
+//! integers, floats, booleans, and homogeneous arrays, `#` comments.
+
+pub mod experiment;
+pub mod toml;
+
+pub use experiment::{AlgoConfig, ExperimentConfig, ProblemConfig};
+pub use toml::{parse, TomlError, Value};

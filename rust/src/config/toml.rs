@@ -1,0 +1,351 @@
+//! Minimal TOML-subset parser.
+//!
+//! Supports the config surface the experiments use:
+//!
+//! * top-level and `[table]` sections (single nesting level is enough;
+//!   dotted table names are kept as the full string key),
+//! * `key = value` with values: basic strings (`"…"` with escapes),
+//!   integers, floats (including `inf`/`nan` forms), booleans,
+//!   homogeneous arrays (`[1, 2, 3]`),
+//! * `#` comments and blank lines.
+//!
+//! Errors carry line numbers for usable diagnostics.
+
+use std::collections::BTreeMap;
+use std::fmt;
+
+/// A parsed TOML value.
+#[derive(Clone, Debug, PartialEq)]
+pub enum Value {
+    String(String),
+    Integer(i64),
+    Float(f64),
+    Boolean(bool),
+    Array(Vec<Value>),
+}
+
+impl Value {
+    pub fn as_str(&self) -> Option<&str> {
+        match self {
+            Value::String(s) => Some(s),
+            _ => None,
+        }
+    }
+    pub fn as_int(&self) -> Option<i64> {
+        match self {
+            Value::Integer(i) => Some(*i),
+            _ => None,
+        }
+    }
+    /// Floats accept integer literals too (`tau = 1` is a valid float).
+    pub fn as_float(&self) -> Option<f64> {
+        match self {
+            Value::Float(f) => Some(*f),
+            Value::Integer(i) => Some(*i as f64),
+            _ => None,
+        }
+    }
+    pub fn as_bool(&self) -> Option<bool> {
+        match self {
+            Value::Boolean(b) => Some(*b),
+            _ => None,
+        }
+    }
+    pub fn as_array(&self) -> Option<&[Value]> {
+        match self {
+            Value::Array(a) => Some(a),
+            _ => None,
+        }
+    }
+}
+
+/// Parse error with 1-based line number.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct TomlError {
+    pub line: usize,
+    pub message: String,
+}
+
+impl fmt::Display for TomlError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "toml parse error at line {}: {}", self.line, self.message)
+    }
+}
+
+impl std::error::Error for TomlError {}
+
+/// Parsed document: map from `"table.key"` (or `"key"` at top level) to value.
+pub type Document = BTreeMap<String, Value>;
+
+/// Parse a TOML-subset document.
+pub fn parse(input: &str) -> Result<Document, TomlError> {
+    let mut doc = Document::new();
+    let mut section = String::new();
+    for (lineno, raw) in input.lines().enumerate() {
+        let line = lineno + 1;
+        let s = strip_comment(raw).trim();
+        if s.is_empty() {
+            continue;
+        }
+        if let Some(rest) = s.strip_prefix('[') {
+            let name = rest
+                .strip_suffix(']')
+                .ok_or_else(|| err(line, "unterminated table header"))?
+                .trim();
+            if name.is_empty() {
+                return Err(err(line, "empty table name"));
+            }
+            validate_key(name, line)?;
+            section = name.to_string();
+            continue;
+        }
+        let eq = s.find('=').ok_or_else(|| err(line, "expected `key = value`"))?;
+        let key = s[..eq].trim();
+        if key.is_empty() {
+            return Err(err(line, "empty key"));
+        }
+        validate_key(key, line)?;
+        let value_src = s[eq + 1..].trim();
+        if value_src.is_empty() {
+            return Err(err(line, "missing value"));
+        }
+        let value = parse_value(value_src, line)?;
+        let full_key =
+            if section.is_empty() { key.to_string() } else { format!("{section}.{key}") };
+        if doc.insert(full_key.clone(), value).is_some() {
+            return Err(err(line, &format!("duplicate key `{full_key}`")));
+        }
+    }
+    Ok(doc)
+}
+
+fn err(line: usize, message: &str) -> TomlError {
+    TomlError { line, message: message.to_string() }
+}
+
+/// Strip a `#` comment, respecting string literals.
+fn strip_comment(line: &str) -> &str {
+    let mut in_str = false;
+    let mut escaped = false;
+    for (i, c) in line.char_indices() {
+        match c {
+            '"' if !escaped => in_str = !in_str,
+            '#' if !in_str => return &line[..i],
+            _ => {}
+        }
+        escaped = c == '\\' && !escaped;
+    }
+    line
+}
+
+fn validate_key(key: &str, line: usize) -> Result<(), TomlError> {
+    let ok = key
+        .chars()
+        .all(|c| c.is_ascii_alphanumeric() || c == '_' || c == '-' || c == '.');
+    if ok {
+        Ok(())
+    } else {
+        Err(err(line, &format!("invalid key `{key}`")))
+    }
+}
+
+fn parse_value(src: &str, line: usize) -> Result<Value, TomlError> {
+    let s = src.trim();
+    if s.starts_with('"') {
+        return parse_string(s, line);
+    }
+    if s.starts_with('[') {
+        return parse_array(s, line);
+    }
+    match s {
+        "true" => return Ok(Value::Boolean(true)),
+        "false" => return Ok(Value::Boolean(false)),
+        _ => {}
+    }
+    // Integer (no dot/exponent/inf/nan markers).
+    let looks_float = s.contains('.')
+        || s.contains('e')
+        || s.contains('E')
+        || s.contains("inf")
+        || s.contains("nan");
+    if !looks_float {
+        if let Ok(i) = s.replace('_', "").parse::<i64>() {
+            return Ok(Value::Integer(i));
+        }
+    }
+    let f = s
+        .replace('_', "")
+        .parse::<f64>()
+        .map_err(|_| err(line, &format!("cannot parse value `{s}`")))?;
+    Ok(Value::Float(f))
+}
+
+fn parse_string(s: &str, line: usize) -> Result<Value, TomlError> {
+    let inner = &s[1..];
+    let mut out = String::new();
+    let mut chars = inner.chars();
+    loop {
+        match chars.next() {
+            None => return Err(err(line, "unterminated string")),
+            Some('"') => break,
+            Some('\\') => match chars.next() {
+                Some('n') => out.push('\n'),
+                Some('t') => out.push('\t'),
+                Some('\\') => out.push('\\'),
+                Some('"') => out.push('"'),
+                Some(c) => return Err(err(line, &format!("unknown escape `\\{c}`"))),
+                None => return Err(err(line, "dangling escape")),
+            },
+            Some(c) => out.push(c),
+        }
+    }
+    let rest: String = chars.collect();
+    if !rest.trim().is_empty() {
+        return Err(err(line, "trailing characters after string"));
+    }
+    Ok(Value::String(out))
+}
+
+fn parse_array(s: &str, line: usize) -> Result<Value, TomlError> {
+    let inner = s
+        .strip_prefix('[')
+        .and_then(|t| t.trim_end().strip_suffix(']'))
+        .ok_or_else(|| err(line, "unterminated array"))?;
+    let mut items = Vec::new();
+    for part in split_top_level(inner) {
+        let p = part.trim();
+        if p.is_empty() {
+            continue;
+        }
+        items.push(parse_value(p, line)?);
+    }
+    // Homogeneity check (integers are allowed inside float arrays).
+    let mixed = items.windows(2).any(|w| {
+        std::mem::discriminant(&w[0]) != std::mem::discriminant(&w[1])
+            && !matches!(
+                (&w[0], &w[1]),
+                (Value::Integer(_), Value::Float(_)) | (Value::Float(_), Value::Integer(_))
+            )
+    });
+    if mixed {
+        return Err(err(line, "mixed-type array"));
+    }
+    Ok(Value::Array(items))
+}
+
+/// Split on commas that are not inside nested brackets or strings.
+fn split_top_level(s: &str) -> Vec<String> {
+    let mut parts = Vec::new();
+    let mut depth = 0usize;
+    let mut in_str = false;
+    let mut cur = String::new();
+    for c in s.chars() {
+        match c {
+            '"' => {
+                in_str = !in_str;
+                cur.push(c);
+            }
+            '[' if !in_str => {
+                depth += 1;
+                cur.push(c);
+            }
+            ']' if !in_str => {
+                depth = depth.saturating_sub(1);
+                cur.push(c);
+            }
+            ',' if !in_str && depth == 0 => {
+                parts.push(std::mem::take(&mut cur));
+            }
+            _ => cur.push(c),
+        }
+    }
+    if !cur.trim().is_empty() {
+        parts.push(cur);
+    }
+    parts
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_basic_document() {
+        let doc = parse(
+            r#"
+            # experiment
+            name = "fig1a"
+            seed = 42
+            rho = 0.5
+            verbose = true
+
+            [problem]
+            rows = 2000
+            cols = 10_000
+            sparsity = 0.2
+            algos = ["fpa", "fista"]
+            "#,
+        )
+        .unwrap();
+        assert_eq!(doc["name"], Value::String("fig1a".into()));
+        assert_eq!(doc["seed"], Value::Integer(42));
+        assert_eq!(doc["rho"], Value::Float(0.5));
+        assert_eq!(doc["verbose"], Value::Boolean(true));
+        assert_eq!(doc["problem.rows"], Value::Integer(2000));
+        assert_eq!(doc["problem.cols"], Value::Integer(10000));
+        assert_eq!(
+            doc["problem.algos"],
+            Value::Array(vec![Value::String("fpa".into()), Value::String("fista".into())])
+        );
+    }
+
+    #[test]
+    fn value_accessors_and_coercion() {
+        let doc = parse("a = 3\nb = 2.5\n").unwrap();
+        assert_eq!(doc["a"].as_int(), Some(3));
+        assert_eq!(doc["a"].as_float(), Some(3.0)); // int coerces to float
+        assert_eq!(doc["b"].as_float(), Some(2.5));
+        assert_eq!(doc["b"].as_int(), None);
+    }
+
+    #[test]
+    fn string_escapes_and_comments_in_strings() {
+        let doc = parse(r#"s = "a#b\n\"q\"" # trailing comment"#).unwrap();
+        assert_eq!(doc["s"].as_str(), Some("a#b\n\"q\""));
+    }
+
+    #[test]
+    fn floats_exponent_and_special() {
+        let doc = parse("x = 1e-5\ny = -2.5E3\nz = inf\n").unwrap();
+        assert_eq!(doc["x"].as_float(), Some(1e-5));
+        assert_eq!(doc["y"].as_float(), Some(-2500.0));
+        assert_eq!(doc["z"].as_float(), Some(f64::INFINITY));
+    }
+
+    #[test]
+    fn nested_arrays() {
+        let doc = parse("m = [[1, 2], [3, 4]]").unwrap();
+        let outer = doc["m"].as_array().unwrap();
+        assert_eq!(outer.len(), 2);
+        assert_eq!(outer[1].as_array().unwrap()[0], Value::Integer(3));
+    }
+
+    #[test]
+    fn errors_carry_line_numbers() {
+        let e = parse("ok = 1\nbroken").unwrap_err();
+        assert_eq!(e.line, 2);
+        let e = parse("x = \"unterminated").unwrap_err();
+        assert_eq!(e.line, 1);
+        let e = parse("[t\nx = 1").unwrap_err();
+        assert_eq!(e.line, 1);
+        let e = parse("a = 1\na = 2").unwrap_err();
+        assert!(e.message.contains("duplicate"));
+    }
+
+    #[test]
+    fn mixed_array_rejected_numeric_ok() {
+        assert!(parse("a = [1, \"x\"]").is_err());
+        let doc = parse("a = [1, 2.5]").unwrap(); // int+float is fine
+        assert_eq!(doc["a"].as_array().unwrap().len(), 2);
+    }
+}

@@ -1,0 +1,119 @@
+//! Bulk-synchronous parallel cost model.
+//!
+//! The paper's experiments ran on a 32-core MPI node (16 or 32 processes).
+//! This container has a single core, so real thread-parallel wall-clock
+//! cannot show the paper's scaling. Instead, every solver separates its
+//! per-iteration work into a *parallelizable* phase (block-partitioned:
+//! matvecs, best-responses, error bounds) and a *serial* phase (the
+//! leader's reduction: max-E selection, γ/τ updates), and the cost model
+//! converts measured single-core phase times into the bulk-synchronous
+//! P-process estimate:
+//!
+//! `T_P = T_parallel / P + T_serial + T_allreduce(P, bytes)`
+//!
+//! with the standard recursive-doubling allreduce estimate
+//! `T_allreduce = 2·log₂(P)·(latency + bytes/bandwidth)`.
+//!
+//! With `procs = 1` the model is the identity (no comm, no scaling), so
+//! measured and simulated times coincide — integration tests assert this.
+
+/// Cost model parameters.
+#[derive(Clone, Copy, Debug)]
+pub struct CostModel {
+    /// Number of simulated processes `P`.
+    pub procs: usize,
+    /// Link bandwidth in bytes/second (default: Infiniband-class 5 GB/s,
+    /// matching the paper's testbed interconnect).
+    pub bandwidth: f64,
+    /// Per-message latency in seconds (default 5 µs).
+    pub latency: f64,
+}
+
+impl CostModel {
+    /// Identity model: 1 process, no communication.
+    pub fn serial() -> Self {
+        Self { procs: 1, bandwidth: f64::INFINITY, latency: 0.0 }
+    }
+
+    /// Infiniband-class cluster node with `procs` processes (the paper's
+    /// testbed: one 32-core node, 16 or 32 MPI processes).
+    pub fn mpi_node(procs: usize) -> Self {
+        assert!(procs >= 1);
+        Self { procs, bandwidth: 5e9, latency: 5e-6 }
+    }
+
+    /// Estimated allreduce time for `bytes` across `procs` ranks
+    /// (recursive doubling).
+    pub fn allreduce_s(&self, bytes: usize) -> f64 {
+        if self.procs <= 1 {
+            return 0.0;
+        }
+        let rounds = (self.procs as f64).log2().ceil();
+        2.0 * rounds * (self.latency + bytes as f64 / self.bandwidth)
+    }
+
+    /// Simulated wall-clock for one bulk-synchronous iteration.
+    ///
+    /// * `parallel_s` — measured single-core time of the block-partitioned
+    ///   phase (assumed perfectly divisible across `procs`; the paper's
+    ///   workloads partition columns evenly so this is accurate),
+    /// * `serial_s` — measured leader-side time,
+    /// * `reduce_bytes` — bytes allreduced per iteration (residual m-vector
+    ///   + error-bound scalars for FPA).
+    pub fn iter_time(&self, parallel_s: f64, serial_s: f64, reduce_bytes: usize) -> f64 {
+        parallel_s / self.procs as f64 + serial_s + self.allreduce_s(reduce_bytes)
+    }
+}
+
+impl Default for CostModel {
+    fn default() -> Self {
+        Self::serial()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn serial_is_identity() {
+        let m = CostModel::serial();
+        assert_eq!(m.iter_time(2.0, 0.5, 1_000_000), 2.5);
+        assert_eq!(m.allreduce_s(1 << 20), 0.0);
+    }
+
+    #[test]
+    fn parallel_phase_scales() {
+        let m = CostModel { procs: 16, bandwidth: f64::INFINITY, latency: 0.0 };
+        let t = m.iter_time(1.6, 0.1, 0);
+        assert!((t - 0.2).abs() < 1e-12);
+    }
+
+    #[test]
+    fn allreduce_grows_with_procs_and_bytes() {
+        let m2 = CostModel::mpi_node(2);
+        let m32 = CostModel::mpi_node(32);
+        assert!(m32.allreduce_s(1 << 20) > m2.allreduce_s(1 << 20));
+        assert!(m32.allreduce_s(1 << 20) > m32.allreduce_s(1 << 10));
+        // 2 ranks, 5 GB/s, 5 us latency, 1 MB: 2*1*(5e-6 + 2.097e-4).
+        let expect = 2.0 * (5e-6 + (1 << 20) as f64 / 5e9);
+        assert!((m2.allreduce_s(1 << 20) - expect).abs() < 1e-12);
+    }
+
+    #[test]
+    fn more_procs_never_slower_without_comm() {
+        let m1 = CostModel { procs: 1, bandwidth: f64::INFINITY, latency: 0.0 };
+        let m8 = CostModel { procs: 8, bandwidth: f64::INFINITY, latency: 0.0 };
+        assert!(m8.iter_time(1.0, 0.1, 0) < m1.iter_time(1.0, 0.1, 0));
+    }
+
+    #[test]
+    fn comm_can_dominate_small_problems() {
+        // Tiny parallel work, big message: 32 procs slower than 2.
+        let m2 = CostModel::mpi_node(2);
+        let m32 = CostModel::mpi_node(32);
+        let t2 = m2.iter_time(1e-6, 0.0, 8 << 20);
+        let t32 = m32.iter_time(1e-6, 0.0, 8 << 20);
+        assert!(t32 > t2);
+    }
+}

@@ -1,0 +1,16 @@
+//! L3 parallel coordinator: leader/worker block decomposition.
+//!
+//! Mirrors the paper's MPI structure with threads: the leader owns the
+//! iterate schedule (γ, τ, selection) and the workers own contiguous
+//! column shards, computing partial residual products, block
+//! best-responses and error bounds. See [`costmodel`] for how measured
+//! single-core phase times are converted to the paper's 16/32-process
+//! wall-clock estimates.
+
+pub mod costmodel;
+pub mod shard;
+pub mod worker;
+
+pub use costmodel::CostModel;
+pub use shard::ShardPlan;
+pub use worker::ParallelFpa;

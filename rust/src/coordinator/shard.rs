@@ -1,0 +1,129 @@
+//! Block sharding: assigning variable blocks to workers.
+//!
+//! Shards are contiguous block ranges balanced by variable count, matching
+//! the paper's even column partition across MPI processes (column-major
+//! storage makes each shard one contiguous slab of `A`).
+
+use crate::problems::BlockLayout;
+
+/// A plan assigning each of `N` blocks to one of `W` workers.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct ShardPlan {
+    /// `bounds[w]..bounds[w+1]` are the blocks of worker `w`.
+    bounds: Vec<usize>,
+}
+
+impl ShardPlan {
+    /// Balance blocks across `workers` by variable count (greedy
+    /// contiguous partition: each shard takes blocks until it reaches the
+    /// ideal share).
+    pub fn balanced(layout: &BlockLayout, workers: usize) -> Self {
+        let workers = workers.max(1);
+        let nb = layout.num_blocks();
+        let total_vars = layout.dim();
+        let ideal = total_vars as f64 / workers as f64;
+        let mut bounds = Vec::with_capacity(workers + 1);
+        bounds.push(0);
+        let mut acc = 0usize;
+        let mut next_target = ideal;
+        for i in 0..nb {
+            acc += layout.len(i);
+            // Close the shard when reaching the target, leaving enough
+            // blocks for the remaining workers.
+            let shards_done = bounds.len() - 1;
+            let remaining_shards = workers - shards_done;
+            let remaining_blocks = nb - (i + 1);
+            if shards_done < workers - 1
+                && (acc as f64 >= next_target || remaining_blocks < remaining_shards)
+            {
+                bounds.push(i + 1);
+                next_target += ideal;
+            }
+        }
+        while bounds.len() < workers + 1 {
+            bounds.push(nb);
+        }
+        Self { bounds }
+    }
+
+    /// Number of workers.
+    pub fn workers(&self) -> usize {
+        self.bounds.len() - 1
+    }
+
+    /// Block range of worker `w`.
+    pub fn blocks(&self, w: usize) -> std::ops::Range<usize> {
+        self.bounds[w]..self.bounds[w + 1]
+    }
+
+    /// Variable range of worker `w` under `layout`.
+    pub fn vars(&self, w: usize, layout: &BlockLayout) -> std::ops::Range<usize> {
+        let blocks = self.blocks(w);
+        if blocks.is_empty() {
+            return 0..0;
+        }
+        layout.range(blocks.start).start..layout.range(blocks.end - 1).end
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn covers_all_blocks_disjointly() {
+        let layout = BlockLayout::scalar(100);
+        let plan = ShardPlan::balanced(&layout, 7);
+        assert_eq!(plan.workers(), 7);
+        let mut covered = vec![false; 100];
+        for w in 0..7 {
+            for b in plan.blocks(w) {
+                assert!(!covered[b], "block {b} assigned twice");
+                covered[b] = true;
+            }
+        }
+        assert!(covered.iter().all(|&c| c));
+    }
+
+    #[test]
+    fn balanced_within_one_block() {
+        let layout = BlockLayout::scalar(1000);
+        let plan = ShardPlan::balanced(&layout, 16);
+        for w in 0..16 {
+            let len = plan.blocks(w).len();
+            assert!((62..=63).contains(&len), "worker {w} has {len} blocks");
+        }
+    }
+
+    #[test]
+    fn more_workers_than_blocks() {
+        let layout = BlockLayout::scalar(3);
+        let plan = ShardPlan::balanced(&layout, 8);
+        let nonempty = (0..8).filter(|&w| !plan.blocks(w).is_empty()).count();
+        assert_eq!(nonempty, 3);
+        // All blocks covered exactly once.
+        let total: usize = (0..8).map(|w| plan.blocks(w).len()).sum();
+        assert_eq!(total, 3);
+    }
+
+    #[test]
+    fn variable_ranges_contiguous() {
+        let layout = BlockLayout::uniform(20, 3); // 7 blocks: 3,3,3,3,3,3,2
+        let plan = ShardPlan::balanced(&layout, 3);
+        let mut last_end = 0;
+        for w in 0..3 {
+            let vr = plan.vars(w, &layout);
+            assert_eq!(vr.start, last_end);
+            last_end = vr.end;
+        }
+        assert_eq!(last_end, 20);
+    }
+
+    #[test]
+    fn single_worker_takes_everything() {
+        let layout = BlockLayout::uniform(10, 2);
+        let plan = ShardPlan::balanced(&layout, 1);
+        assert_eq!(plan.blocks(0), 0..5);
+        assert_eq!(plan.vars(0, &layout), 0..10);
+    }
+}

@@ -1,0 +1,289 @@
+//! Problem-instance generators.
+//!
+//! [`NesterovLasso`] reimplements the random generation technique of
+//! Nesterov, *"Gradient methods for minimizing composite functions"*
+//! (Math. Prog. 2012, §6), which the paper uses for all four Fig. 1
+//! groups: it plants a solution `x*` with a prescribed number of
+//! non-zeros and yields the *exact* optimal value `V* = V(x*)`, enabling
+//! the relative-error metric `(V(xᵏ) − V*)/V*`.
+//!
+//! Construction (for `min ‖Ax−b‖² + c‖x‖₁`, i.e. `∇F = 2Aᵀ(Ax−b)`):
+//!
+//! 1. draw `B ∈ R^{m×n}` with i.i.d. `N(0,1)` entries and `y* ∈ R^m`,
+//!    normalized to `‖y*‖ = 1`;
+//! 2. pick a support `S` of the prescribed size; stationarity of `x*`
+//!    requires `2Aᵀ(Ax*−b) ∈ −c·∂‖x*‖₁`, which with `r* ≜ Ax*−b = −y*`
+//!    reads `A_jᵀy* = (c/2)·sign(x*_j)` on `S` and `|A_jᵀy*| ≤ c/2` off it;
+//! 3. rescale each column of `B` to satisfy exactly that: on the support
+//!    `A_j = B_j·(c·σ_j)/(2·B_jᵀy*)` with `σ_j = ±1` random; off the
+//!    support, if `|B_jᵀy*| > c/2`, shrink by a uniform factor so the
+//!    bound holds strictly;
+//! 4. draw the support magnitudes of `x*`, set `b = A x* + y*`.
+//!
+//! Then `V* = ‖y*‖² + c‖x*‖₁ = 1 + c‖x*‖₁` exactly.
+
+use crate::linalg::{DenseMatrix, MatVec};
+use crate::prng::Xoshiro256pp;
+
+/// A planted Lasso instance with known solution and optimal value.
+pub struct LassoInstance {
+    /// Design matrix.
+    pub a: DenseMatrix,
+    /// Right-hand side.
+    pub b: Vec<f64>,
+    /// Regularization weight.
+    pub c: f64,
+    /// Planted solution.
+    pub x_star: Vec<f64>,
+    /// Exact optimal value `V(x*)`.
+    pub v_star: f64,
+}
+
+/// Nesterov's Lasso instance generator.
+#[derive(Clone, Debug)]
+pub struct NesterovLasso {
+    m: usize,
+    n: usize,
+    /// Fraction of non-zeros in `x*` (paper: 0.2 / 0.1 / 0.05).
+    sparsity: f64,
+    c: f64,
+    seed: u64,
+    /// Magnitude scale of the planted non-zeros.
+    magnitude: f64,
+}
+
+impl NesterovLasso {
+    pub fn new(m: usize, n: usize, sparsity: f64, c: f64) -> Self {
+        assert!(m > 0 && n > 0, "dimensions must be positive");
+        assert!((0.0..=1.0).contains(&sparsity), "sparsity in [0,1]");
+        assert!(c > 0.0, "c must be positive");
+        Self { m, n, sparsity, c, seed: 0x1311_2444, magnitude: 1.0 }
+    }
+
+    pub fn seed(mut self, seed: u64) -> Self {
+        self.seed = seed;
+        self
+    }
+
+    pub fn magnitude(mut self, magnitude: f64) -> Self {
+        self.magnitude = magnitude;
+        self
+    }
+
+    /// Generate one instance.
+    pub fn generate(&self) -> LassoInstance {
+        let mut rng = Xoshiro256pp::seed_from_u64(self.seed);
+        let (m, n, c) = (self.m, self.n, self.c);
+
+        // 1. Random B and normalized dual certificate y*.
+        let mut a = DenseMatrix::randn(m, n, &mut rng);
+        let mut y = vec![0.0; m];
+        rng.fill_normal(&mut y);
+        let ny = crate::linalg::ops::nrm2(&y);
+        for v in y.iter_mut() {
+            *v /= ny;
+        }
+
+        // 2.–3. Support selection + column scaling, following Nesterov's
+        // construction: compute the dual correlations `ξ_j = B_jᵀy*`,
+        // take the support as the `nnz` indices with the LARGEST |ξ_j|
+        // and rescale those columns by `(c/2)/|ξ_j|` — a shrink-only
+        // factor (the top correlations exceed c/2 in any non-degenerate
+        // draw), so conditioning stays healthy. Off-support columns with
+        // |ξ_j| > c/2 are shrunk strictly inside the dual ball. This
+        // makes `x*` (signs = sign(ξ_j)) exactly stationary with
+        // r* = −y*.
+        let nnz = ((n as f64) * self.sparsity).round() as usize;
+        let half_c = c / 2.0;
+        let mut xi: Vec<f64> = (0..n).map(|j| crate::linalg::ops::dot(a.col(j), &y)).collect();
+        let mut order: Vec<usize> = (0..n).collect();
+        order.sort_unstable_by(|&p, &q| xi[q].abs().partial_cmp(&xi[p].abs()).unwrap());
+        let mut on_support = vec![false; n];
+        for &j in order.iter().take(nnz) {
+            on_support[j] = true;
+        }
+        let mut x_star = vec![0.0; n];
+        for j in 0..n {
+            let h = xi[j];
+            if on_support[j] {
+                // Degenerate |h| ≈ 0 can only happen when nnz ≈ n; fall
+                // back to an additive correction along y* in that case.
+                if h.abs() < half_c {
+                    let sigma = if h == 0.0 { rng.sign() } else { h.signum() };
+                    crate::linalg::ops::axpy(half_c * sigma - h, &y, a.col_mut(j));
+                    xi[j] = half_c * sigma;
+                } else {
+                    a.scale_col(j, half_c / h.abs());
+                }
+                let sigma = xi[j].signum();
+                x_star[j] = sigma * self.magnitude * (0.1 + 0.9 * rng.next_f64());
+            } else if h.abs() > half_c {
+                // Pull strictly inside the dual ball: |A_jᵀy*| = u·(c/2).
+                let u = 0.05 + 0.9 * rng.next_f64();
+                a.scale_col(j, u * half_c / h.abs());
+            }
+        }
+
+        // 4. b = A x* + y*  ⇒  r* = Ax* − b = −y*.
+        let mut b = vec![0.0; m];
+        a.matvec(&x_star, &mut b);
+        for (bi, yi) in b.iter_mut().zip(&y) {
+            *bi += yi;
+        }
+
+        let v_star = 1.0 + c * crate::linalg::ops::nrm1(&x_star);
+        LassoInstance { a, b, c, x_star, v_star }
+    }
+
+    /// Generate `count` instances with decorrelated seeds (for the paper's
+    /// averaged realizations).
+    pub fn generate_batch(&self, count: usize) -> Vec<LassoInstance> {
+        (0..count)
+            .map(|k| self.clone().seed(self.seed.wrapping_add(0x9E37 * (k as u64 + 1))).generate())
+            .collect()
+    }
+}
+
+/// A planted binary-classification instance for logistic regression / SVM.
+pub struct ClassificationInstance {
+    /// Label-scaled sample matrix (rows `aⱼ·yⱼᵀ`).
+    pub m: DenseMatrix,
+    /// The generating hyperplane (sparse).
+    pub w_true: Vec<f64>,
+}
+
+/// Generator for sparse classification instances: a sparse ground-truth
+/// hyperplane, Gaussian samples, labels from the sign of the margin with
+/// a controlled flip rate.
+#[derive(Clone, Debug)]
+pub struct SparseClassification {
+    pub samples: usize,
+    pub features: usize,
+    pub sparsity: f64,
+    pub label_noise: f64,
+    pub seed: u64,
+}
+
+impl SparseClassification {
+    pub fn new(samples: usize, features: usize, sparsity: f64) -> Self {
+        Self { samples, features, sparsity, label_noise: 0.02, seed: 0xC1A55 }
+    }
+
+    pub fn seed(mut self, seed: u64) -> Self {
+        self.seed = seed;
+        self
+    }
+
+    pub fn label_noise(mut self, p: f64) -> Self {
+        assert!((0.0..0.5).contains(&p));
+        self.label_noise = p;
+        self
+    }
+
+    pub fn generate(&self) -> ClassificationInstance {
+        let mut rng = Xoshiro256pp::seed_from_u64(self.seed);
+        let (m, n) = (self.samples, self.features);
+        let mut w = vec![0.0; n];
+        let nnz = ((n as f64) * self.sparsity).round().max(1.0) as usize;
+        for &j in rng.sample_indices(n, nnz).iter() {
+            w[j] = rng.normal(0.0, 2.0);
+        }
+        let mut data = DenseMatrix::randn(m, n, &mut rng);
+        // Scale rows by the label: row_i *= a_i where a_i = sign(x_iᵀw),
+        // flipped with probability label_noise.
+        for i in 0..m {
+            let mut margin = 0.0;
+            for j in 0..n {
+                margin += data.get(i, j) * w[j];
+            }
+            let mut label = if margin >= 0.0 { 1.0 } else { -1.0 };
+            if rng.next_f64() < self.label_noise {
+                label = -label;
+            }
+            if label < 0.0 {
+                for j in 0..n {
+                    let v = data.get(i, j);
+                    data.set(i, j, -v);
+                }
+            }
+        }
+        ClassificationInstance { m: data, w_true: w }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::ops;
+    use crate::problems::lasso::Lasso;
+    use crate::problems::CompositeProblem;
+
+    #[test]
+    fn planted_solution_is_stationary() {
+        let inst = NesterovLasso::new(40, 120, 0.1, 1.0).seed(1).generate();
+        let p = Lasso::new(inst.a, inst.b, inst.c);
+        let mut g = vec![0.0; 120];
+        p.grad_smooth(&inst.x_star, &mut g);
+        // KKT: g_j = -c·sign(x*_j) on the support, |g_j| <= c off it.
+        for j in 0..120 {
+            if inst.x_star[j] != 0.0 {
+                let target = -inst.c * inst.x_star[j].signum();
+                assert!(
+                    (g[j] - target).abs() < 1e-8,
+                    "support coord {j}: grad {} vs {target}",
+                    g[j]
+                );
+            } else {
+                assert!(g[j].abs() <= inst.c + 1e-8, "off-support coord {j}: |{}| > c", g[j]);
+            }
+        }
+    }
+
+    #[test]
+    fn v_star_is_objective_at_x_star_and_optimal() {
+        let inst = NesterovLasso::new(30, 80, 0.05, 0.8).seed(2).generate();
+        let x_star = inst.x_star.clone();
+        let v_star = inst.v_star;
+        let p = Lasso::new(inst.a, inst.b, inst.c);
+        let v_at_star = p.objective(&x_star);
+        assert!((v_at_star - v_star).abs() < 1e-9, "{v_at_star} vs {v_star}");
+        // Perturbations do not decrease the objective (convexity + optimality).
+        let mut rng = Xoshiro256pp::seed_from_u64(3);
+        for _ in 0..20 {
+            let mut xp = x_star.clone();
+            for v in xp.iter_mut() {
+                *v += 1e-3 * rng.next_normal();
+            }
+            assert!(p.objective(&xp) >= v_star - 1e-9);
+        }
+    }
+
+    #[test]
+    fn sparsity_is_controlled() {
+        let inst = NesterovLasso::new(20, 200, 0.2, 1.0).seed(4).generate();
+        assert_eq!(ops::nnz(&inst.x_star, 0.0), 40);
+        let dense = NesterovLasso::new(20, 200, 1.0, 1.0).seed(5).generate();
+        assert_eq!(ops::nnz(&dense.x_star, 0.0), 200);
+        let empty = NesterovLasso::new(20, 200, 0.0, 1.0).seed(6).generate();
+        assert_eq!(ops::nnz(&empty.x_star, 0.0), 0);
+    }
+
+    #[test]
+    fn batch_instances_differ() {
+        let batch = NesterovLasso::new(10, 30, 0.1, 1.0).seed(7).generate_batch(3);
+        assert_eq!(batch.len(), 3);
+        assert_ne!(batch[0].b, batch[1].b);
+        assert_ne!(batch[1].b, batch[2].b);
+    }
+
+    #[test]
+    fn classification_labels_consistent() {
+        let gen = SparseClassification::new(50, 20, 0.3).seed(8).label_noise(0.0);
+        let inst = gen.generate();
+        // With zero label noise, every label-scaled margin is >= 0.
+        let mut z = vec![0.0; 50];
+        inst.m.matvec(&inst.w_true, &mut z);
+        let violations = z.iter().filter(|&&zi| zi < 0.0).count();
+        assert_eq!(violations, 0);
+    }
+}

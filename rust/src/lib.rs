@@ -1,0 +1,58 @@
+//! # FLEXA — Flexible Parallel Algorithms for Big Data Optimization
+//!
+//! A production-grade reproduction of
+//! *F. Facchinei, S. Sagratella, G. Scutari, "Flexible Parallel Algorithms
+//! for Big Data Optimization" (2013)* as a three-layer Rust + JAX + Pallas
+//! stack:
+//!
+//! * **L3 (this crate)** — the parallel coordinator: leader/worker block
+//!   decomposition, greedy ρ-selection, diminishing step-size and τ
+//!   adaptation schedules, metrics, CLI, and a PJRT runtime that executes
+//!   AOT-compiled JAX/Pallas iteration graphs from `artifacts/*.hlo.txt`.
+//! * **L2 (python/compile/model.py)** — the FPA iteration map, objective and
+//!   baseline steps as jitted JAX graphs, lowered once at build time.
+//! * **L1 (python/compile/kernels/)** — Pallas kernels for the fused
+//!   soft-threshold best-response and tiled matvecs.
+//!
+//! The crate also contains every substrate the paper's evaluation needs —
+//! dense/sparse linear algebra, Nesterov's Lasso instance generator, the
+//! FISTA / GRock / Gauss-Seidel / ADMM baselines — plus, because this build
+//! environment is offline, from-scratch replacements for the usual
+//! ecosystem crates (PRNG, TOML config parser, CLI parser, bench harness,
+//! property-testing helper).
+//!
+//! ## Quick start
+//!
+//! ```no_run
+//! use flexa::datagen::NesterovLasso;
+//! use flexa::problems::lasso::Lasso;
+//! use flexa::algos::{fpa::Fpa, Solver, SolveOptions};
+//!
+//! let gen = NesterovLasso::new(200, 1000, 0.05, 1.0).seed(7);
+//! let inst = gen.generate();
+//! let problem = Lasso::new(inst.a, inst.b, inst.c);
+//! let mut solver = Fpa::paper_defaults(&problem);
+//! let report = solver.solve(&problem, &SolveOptions::default());
+//! println!("V = {:.6}, iters = {}", report.objective, report.iterations);
+//! ```
+
+pub mod algos;
+pub mod bench;
+pub mod cli;
+pub mod config;
+pub mod coordinator;
+pub mod datagen;
+pub mod linalg;
+pub mod metrics;
+pub mod prng;
+pub mod problems;
+pub mod proptest;
+pub mod runtime;
+pub mod select;
+pub mod stepsize;
+
+/// Crate-wide result alias.
+pub type Result<T> = anyhow::Result<T>;
+
+/// Version string reported by the CLI.
+pub const VERSION: &str = env!("CARGO_PKG_VERSION");

@@ -1,0 +1,131 @@
+//! Cholesky factorization for symmetric positive-definite systems.
+//!
+//! Substrate for the ADMM baseline: its x-update solves
+//! `(ρI + 2AᵀA)x = rhs`, which via the Woodbury identity reduces to an
+//! `m × m` SPD solve with `M = (ρ/2)I + AAᵀ` factorized once up front.
+
+use super::DenseMatrix;
+
+/// Lower-triangular Cholesky factor `L` with `M = L Lᵀ`.
+#[derive(Clone, Debug)]
+pub struct Cholesky {
+    n: usize,
+    /// Column-major lower triangle (full matrix storage for simplicity).
+    l: DenseMatrix,
+}
+
+impl Cholesky {
+    /// Factorize SPD matrix `m` (only the lower triangle is read).
+    ///
+    /// Returns `None` if a non-positive pivot is found (matrix not PD).
+    pub fn factor(m: &DenseMatrix) -> Option<Self> {
+        assert_eq!(m.rows(), m.cols(), "Cholesky: matrix must be square");
+        let n = m.rows();
+        let mut l = DenseMatrix::zeros(n, n);
+        for j in 0..n {
+            // d = M[j,j] - sum_k L[j,k]^2
+            let mut d = m.get(j, j);
+            for k in 0..j {
+                let ljk = l.get(j, k);
+                d -= ljk * ljk;
+            }
+            if d <= 0.0 {
+                return None;
+            }
+            let djj = d.sqrt();
+            l.set(j, j, djj);
+            // Column j below the diagonal.
+            for i in (j + 1)..n {
+                let mut s = m.get(i, j);
+                for k in 0..j {
+                    s -= l.get(i, k) * l.get(j, k);
+                }
+                l.set(i, j, s / djj);
+            }
+        }
+        Some(Self { n, l })
+    }
+
+    /// Solve `L y = b` (forward substitution).
+    pub fn solve_lower(&self, b: &[f64], y: &mut [f64]) {
+        assert_eq!(b.len(), self.n);
+        assert_eq!(y.len(), self.n);
+        for i in 0..self.n {
+            let mut s = b[i];
+            for k in 0..i {
+                s -= self.l.get(i, k) * y[k];
+            }
+            y[i] = s / self.l.get(i, i);
+        }
+    }
+
+    /// Solve `Lᵀ x = y` (backward substitution).
+    pub fn solve_upper(&self, y: &[f64], x: &mut [f64]) {
+        assert_eq!(y.len(), self.n);
+        assert_eq!(x.len(), self.n);
+        for i in (0..self.n).rev() {
+            let mut s = y[i];
+            for k in (i + 1)..self.n {
+                s -= self.l.get(k, i) * x[k];
+            }
+            x[i] = s / self.l.get(i, i);
+        }
+    }
+
+    /// Solve `M x = b` with `M = L Lᵀ`.
+    pub fn solve(&self, b: &[f64], x: &mut [f64]) {
+        let mut y = vec![0.0; self.n];
+        self.solve_lower(b, &mut y);
+        self.solve_upper(&y, x);
+    }
+
+    /// Dimension of the factored matrix.
+    pub fn dim(&self) -> usize {
+        self.n
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::{MatVec, ops};
+    use crate::prng::Xoshiro256pp;
+
+    #[test]
+    fn factor_known_matrix() {
+        // M = [[4, 2], [2, 3]] => L = [[2, 0], [1, sqrt(2)]]
+        let m = DenseMatrix::from_row_major(2, 2, &[4.0, 2.0, 2.0, 3.0]);
+        let ch = Cholesky::factor(&m).expect("PD");
+        assert!((ch.l.get(0, 0) - 2.0).abs() < 1e-12);
+        assert!((ch.l.get(1, 0) - 1.0).abs() < 1e-12);
+        assert!((ch.l.get(1, 1) - 2f64.sqrt()).abs() < 1e-12);
+    }
+
+    #[test]
+    fn solve_random_spd() {
+        let mut rng = Xoshiro256pp::seed_from_u64(17);
+        let n = 25;
+        let a = DenseMatrix::randn(n + 5, n, &mut rng);
+        // M = AᵀA + I is SPD.
+        let mut m = a.gram();
+        for i in 0..n {
+            m.set(i, i, m.get(i, i) + 1.0);
+        }
+        let ch = Cholesky::factor(&m).expect("PD");
+        let mut x_true = vec![0.0; n];
+        rng.fill_normal(&mut x_true);
+        let mut b = vec![0.0; n];
+        m.matvec(&x_true, &mut b);
+        let mut x = vec![0.0; n];
+        ch.solve(&b, &mut x);
+        assert!(ops::dist2(&x, &x_true) < 1e-8, "residual too large");
+    }
+
+    #[test]
+    fn non_pd_rejected() {
+        let m = DenseMatrix::from_row_major(2, 2, &[1.0, 2.0, 2.0, 1.0]); // eig -1
+        assert!(Cholesky::factor(&m).is_none());
+        let z = DenseMatrix::zeros(2, 2);
+        assert!(Cholesky::factor(&z).is_none());
+    }
+}

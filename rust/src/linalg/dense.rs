@@ -1,0 +1,319 @@
+//! Column-major dense matrix.
+//!
+//! Column-major is the natural layout for block-coordinate methods: a
+//! variable block is a contiguous range of columns, so a worker's shard is
+//! one contiguous slab of memory, single columns are contiguous slices, and
+//! `Aᵀr` over a column shard streams memory linearly.
+
+use super::ops;
+use super::MatVec;
+use crate::prng::Xoshiro256pp;
+
+/// Dense `m × n` matrix, column-major storage.
+#[derive(Clone, Debug, PartialEq)]
+pub struct DenseMatrix {
+    rows: usize,
+    cols: usize,
+    /// `data[j*rows + i]` is `A[i, j]`.
+    data: Vec<f64>,
+}
+
+impl DenseMatrix {
+    /// Zero matrix.
+    pub fn zeros(rows: usize, cols: usize) -> Self {
+        Self { rows, cols, data: vec![0.0; rows * cols] }
+    }
+
+    /// Build from a closure `f(i, j)`.
+    pub fn from_fn(rows: usize, cols: usize, mut f: impl FnMut(usize, usize) -> f64) -> Self {
+        let mut m = Self::zeros(rows, cols);
+        for j in 0..cols {
+            for i in 0..rows {
+                m.data[j * rows + i] = f(i, j);
+            }
+        }
+        m
+    }
+
+    /// Build from column-major data.
+    pub fn from_col_major(rows: usize, cols: usize, data: Vec<f64>) -> Self {
+        assert_eq!(data.len(), rows * cols, "from_col_major: bad length");
+        Self { rows, cols, data }
+    }
+
+    /// Build from row-major data (transposing copy).
+    pub fn from_row_major(rows: usize, cols: usize, data: &[f64]) -> Self {
+        assert_eq!(data.len(), rows * cols, "from_row_major: bad length");
+        Self::from_fn(rows, cols, |i, j| data[i * cols + j])
+    }
+
+    /// i.i.d. standard normal entries.
+    pub fn randn(rows: usize, cols: usize, rng: &mut Xoshiro256pp) -> Self {
+        let mut m = Self::zeros(rows, cols);
+        rng.fill_normal(&mut m.data);
+        m
+    }
+
+    #[inline]
+    pub fn rows(&self) -> usize {
+        self.rows
+    }
+
+    #[inline]
+    pub fn cols(&self) -> usize {
+        self.cols
+    }
+
+    /// Immutable view of column `j`.
+    #[inline]
+    pub fn col(&self, j: usize) -> &[f64] {
+        debug_assert!(j < self.cols);
+        &self.data[j * self.rows..(j + 1) * self.rows]
+    }
+
+    /// Mutable view of column `j`.
+    #[inline]
+    pub fn col_mut(&mut self, j: usize) -> &mut [f64] {
+        debug_assert!(j < self.cols);
+        &mut self.data[j * self.rows..(j + 1) * self.rows]
+    }
+
+    /// Contiguous view of the column range `[j0, j1)` — a worker shard.
+    #[inline]
+    pub fn cols_range(&self, j0: usize, j1: usize) -> &[f64] {
+        debug_assert!(j0 <= j1 && j1 <= self.cols);
+        &self.data[j0 * self.rows..j1 * self.rows]
+    }
+
+    #[inline]
+    pub fn get(&self, i: usize, j: usize) -> f64 {
+        self.data[j * self.rows + i]
+    }
+
+    #[inline]
+    pub fn set(&mut self, i: usize, j: usize, v: f64) {
+        self.data[j * self.rows + i] = v;
+    }
+
+    /// Raw column-major data.
+    pub fn data(&self) -> &[f64] {
+        &self.data
+    }
+
+    /// Scale column `j` by `s`.
+    pub fn scale_col(&mut self, j: usize, s: f64) {
+        ops::scal(s, self.col_mut(j));
+    }
+
+    /// Frobenius norm squared (= tr(AᵀA)).
+    pub fn fro_sq(&self) -> f64 {
+        ops::nrm2_sq(&self.data)
+    }
+
+    /// Dense transpose (used by tests and the ADMM setup).
+    pub fn transpose(&self) -> DenseMatrix {
+        DenseMatrix::from_fn(self.cols, self.rows, |i, j| self.get(j, i))
+    }
+
+    /// `C = AᵀA` (n×n). Only used for small n in tests.
+    pub fn gram(&self) -> DenseMatrix {
+        let n = self.cols;
+        let mut g = DenseMatrix::zeros(n, n);
+        for j in 0..n {
+            for i in 0..=j {
+                let v = ops::dot(self.col(i), self.col(j));
+                g.set(i, j, v);
+                g.set(j, i, v);
+            }
+        }
+        g
+    }
+
+    /// `C = AAᵀ` (m×m). Used by the ADMM baseline's Woodbury factorization.
+    pub fn outer_gram(&self) -> DenseMatrix {
+        let m = self.rows;
+        let mut g = DenseMatrix::zeros(m, m);
+        // Accumulate rank-1 updates column by column: cache-friendly since
+        // each column is contiguous.
+        for j in 0..self.cols {
+            let col = self.col(j);
+            for q in 0..m {
+                let cq = col[q];
+                if cq == 0.0 {
+                    continue;
+                }
+                let gcol = &mut g.data[q * m..(q + 1) * m];
+                for p in 0..m {
+                    gcol[p] += col[p] * cq;
+                }
+            }
+        }
+        g
+    }
+}
+
+impl MatVec for DenseMatrix {
+    fn rows(&self) -> usize {
+        self.rows
+    }
+
+    fn cols(&self) -> usize {
+        self.cols
+    }
+
+    /// `y = A x`: 4-column blocked accumulation. Relative to the naive
+    /// one-axpy-per-column sweep this quarters the read/write traffic on
+    /// `y` (the matrix itself is streamed once either way), which is the
+    /// difference between ~2.3 and ~4+ GFLOP/s on DRAM-resident matrices
+    /// (see EXPERIMENTS.md §Perf).
+    fn matvec(&self, x: &[f64], y: &mut [f64]) {
+        assert_eq!(x.len(), self.cols, "matvec: x length");
+        assert_eq!(y.len(), self.rows, "matvec: y length");
+        y.fill(0.0);
+        let m = self.rows;
+        let blocks = self.cols / 4;
+        for b in 0..blocks {
+            let j = 4 * b;
+            let (x0, x1, x2, x3) = (x[j], x[j + 1], x[j + 2], x[j + 3]);
+            if x0 == 0.0 && x1 == 0.0 && x2 == 0.0 && x3 == 0.0 {
+                continue;
+            }
+            let base = &self.data[j * m..(j + 4) * m];
+            let (c0, rest) = base.split_at(m);
+            let (c1, rest) = rest.split_at(m);
+            let (c2, c3) = rest.split_at(m);
+            for i in 0..m {
+                y[i] += x0 * c0[i] + x1 * c1[i] + x2 * c2[i] + x3 * c3[i];
+            }
+        }
+        for j in 4 * blocks..self.cols {
+            let xj = x[j];
+            if xj != 0.0 {
+                ops::axpy(xj, self.col(j), y);
+            }
+        }
+    }
+
+    /// `y = Aᵀ x`: 4-column blocked dot products (shares the read of `x`
+    /// across the block; the matrix stream dominates and this runs at
+    /// effective-bandwidth roofline).
+    fn matvec_t(&self, x: &[f64], y: &mut [f64]) {
+        assert_eq!(x.len(), self.rows, "matvec_t: x length");
+        assert_eq!(y.len(), self.cols, "matvec_t: y length");
+        let m = self.rows;
+        let blocks = self.cols / 4;
+        for b in 0..blocks {
+            let j = 4 * b;
+            let base = &self.data[j * m..(j + 4) * m];
+            let (c0, rest) = base.split_at(m);
+            let (c1, rest) = rest.split_at(m);
+            let (c2, c3) = rest.split_at(m);
+            let (mut s0, mut s1, mut s2, mut s3) = (0.0, 0.0, 0.0, 0.0);
+            for i in 0..m {
+                let xi = x[i];
+                s0 += c0[i] * xi;
+                s1 += c1[i] * xi;
+                s2 += c2[i] * xi;
+                s3 += c3[i] * xi;
+            }
+            y[j] = s0;
+            y[j + 1] = s1;
+            y[j + 2] = s2;
+            y[j + 3] = s3;
+        }
+        for j in 4 * blocks..self.cols {
+            y[j] = ops::dot(self.col(j), x);
+        }
+    }
+
+    fn col_sq_norms(&self, out: &mut [f64]) {
+        assert_eq!(out.len(), self.cols);
+        for j in 0..self.cols {
+            out[j] = ops::nrm2_sq(self.col(j));
+        }
+    }
+
+    fn axpy_col(&self, j: usize, alpha: f64, y: &mut [f64]) {
+        ops::axpy(alpha, self.col(j), y);
+    }
+
+    fn dot_col(&self, j: usize, x: &[f64]) -> f64 {
+        ops::dot(self.col(j), x)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn small() -> DenseMatrix {
+        // [[1, 2, 3],
+        //  [4, 5, 6]]
+        DenseMatrix::from_row_major(2, 3, &[1.0, 2.0, 3.0, 4.0, 5.0, 6.0])
+    }
+
+    #[test]
+    fn layout_and_accessors() {
+        let a = small();
+        assert_eq!(a.rows(), 2);
+        assert_eq!(a.cols(), 3);
+        assert_eq!(a.get(0, 1), 2.0);
+        assert_eq!(a.get(1, 2), 6.0);
+        assert_eq!(a.col(1), &[2.0, 5.0]);
+        assert_eq!(a.cols_range(1, 3), &[2.0, 5.0, 3.0, 6.0]);
+    }
+
+    #[test]
+    fn matvec_and_transpose() {
+        let a = small();
+        let mut y = vec![0.0; 2];
+        a.matvec(&[1.0, 0.0, -1.0], &mut y);
+        assert_eq!(y, vec![-2.0, -2.0]);
+        let mut z = vec![0.0; 3];
+        a.matvec_t(&[1.0, 1.0], &mut z);
+        assert_eq!(z, vec![5.0, 7.0, 9.0]);
+        let at = a.transpose();
+        assert_eq!(at.get(2, 1), 6.0);
+    }
+
+    #[test]
+    fn col_sq_norms_and_trace_gram() {
+        let a = small();
+        let mut sq = vec![0.0; 3];
+        a.col_sq_norms(&mut sq);
+        assert_eq!(sq, vec![17.0, 29.0, 45.0]);
+        assert!((a.trace_gram() - 91.0).abs() < 1e-12);
+        assert!((a.fro_sq() - 91.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn gram_matrices() {
+        let a = small();
+        let g = a.gram();
+        // AᵀA[0,1] = 1*2 + 4*5 = 22
+        assert_eq!(g.get(0, 1), 22.0);
+        assert_eq!(g.get(1, 0), 22.0);
+        let og = a.outer_gram();
+        // AAᵀ[0,0] = 1+4+9 = 14, [0,1] = 4+10+18 = 32
+        assert_eq!(og.get(0, 0), 14.0);
+        assert_eq!(og.get(0, 1), 32.0);
+        assert_eq!(og.get(1, 1), 77.0);
+    }
+
+    #[test]
+    fn axpy_col_matches_manual() {
+        let a = small();
+        let mut y = vec![1.0, 1.0];
+        a.axpy_col(2, 2.0, &mut y);
+        assert_eq!(y, vec![7.0, 13.0]);
+        assert_eq!(a.dot_col(1, &[1.0, -1.0]), -3.0);
+    }
+
+    #[test]
+    fn randn_shape_and_scale() {
+        let mut rng = Xoshiro256pp::seed_from_u64(1);
+        let a = DenseMatrix::randn(50, 40, &mut rng);
+        let mean: f64 = a.data().iter().sum::<f64>() / 2000.0;
+        assert!(mean.abs() < 0.1);
+    }
+}

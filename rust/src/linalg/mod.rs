@@ -1,0 +1,50 @@
+//! Dense / sparse linear-algebra substrate (the native compute backend).
+//!
+//! The paper's implementation uses GSL BLAS; the offline crate cache has no
+//! BLAS binding, so the operations the algorithms need are implemented here:
+//!
+//! * [`dense`] — column-major dense matrices, matvec / transposed matvec
+//!   (the per-iteration hot spot), column views, scaling.
+//! * [`sparse`] — CSC sparse matrices for sparse design matrices.
+//! * [`ops`] — BLAS-1 style vector kernels (dot, axpy, norms,
+//!   soft-threshold) written to auto-vectorize.
+//! * [`chol`] — Cholesky factorization + triangular solves (ADMM baseline).
+//! * [`power`] — power iteration for `λ_max(AᵀA)` (FISTA's Lipschitz
+//!   constant; the paper notes this dominates FISTA's setup time).
+
+pub mod cg;
+pub mod chol;
+pub mod dense;
+pub mod ops;
+pub mod power;
+pub mod sparse;
+
+pub use chol::Cholesky;
+pub use dense::DenseMatrix;
+pub use sparse::CscMatrix;
+
+/// A design matrix that both dense and sparse storages implement; the
+/// problems layer is generic over this so every algorithm runs unchanged
+/// on dense or sparse data.
+pub trait MatVec: Sync + Send {
+    /// Number of rows.
+    fn rows(&self) -> usize;
+    /// Number of columns.
+    fn cols(&self) -> usize;
+    /// `y = A x` (overwrites `y`).
+    fn matvec(&self, x: &[f64], y: &mut [f64]);
+    /// `y = Aᵀ x` (overwrites `y`).
+    fn matvec_t(&self, x: &[f64], y: &mut [f64]);
+    /// `out[j] = ‖A_j‖²` for every column `j`.
+    fn col_sq_norms(&self, out: &mut [f64]);
+    /// `y += alpha * A_j` — rank-one residual maintenance for CD sweeps.
+    fn axpy_col(&self, j: usize, alpha: f64, y: &mut [f64]);
+    /// `A_jᵀ x` — single-column inner product.
+    fn dot_col(&self, j: usize, x: &[f64]) -> f64;
+    /// `Σ_j ‖A_j‖² = tr(AᵀA) = ‖A‖_F²` (paper's τ initialization).
+    fn trace_gram(&self) -> f64 {
+        let mut sq = vec![0.0; self.cols()];
+        self.col_sq_norms(&mut sq);
+        sq.iter().sum()
+    }
+}

@@ -1,0 +1,220 @@
+//! CSC (compressed sparse column) matrix.
+//!
+//! Column-compressed to match the block-coordinate access pattern: a
+//! variable block is a set of columns, and `Aᵀr` over a shard touches only
+//! that shard's arrays.
+
+use super::MatVec;
+
+/// Sparse `m × n` matrix in CSC format.
+#[derive(Clone, Debug)]
+pub struct CscMatrix {
+    rows: usize,
+    cols: usize,
+    /// Column pointers, length `cols + 1`.
+    col_ptr: Vec<usize>,
+    /// Row indices, length nnz, sorted within each column.
+    row_idx: Vec<usize>,
+    /// Values, length nnz.
+    values: Vec<f64>,
+}
+
+impl CscMatrix {
+    /// Build from triplets `(row, col, value)`; duplicates are summed.
+    pub fn from_triplets(
+        rows: usize,
+        cols: usize,
+        triplets: impl IntoIterator<Item = (usize, usize, f64)>,
+    ) -> Self {
+        let mut per_col: Vec<Vec<(usize, f64)>> = vec![Vec::new(); cols];
+        for (i, j, v) in triplets {
+            assert!(i < rows && j < cols, "triplet out of bounds: ({i},{j})");
+            per_col[j].push((i, v));
+        }
+        let mut col_ptr = Vec::with_capacity(cols + 1);
+        let mut row_idx = Vec::new();
+        let mut values = Vec::new();
+        col_ptr.push(0);
+        for col in per_col.iter_mut() {
+            col.sort_unstable_by_key(|&(i, _)| i);
+            let mut k = 0;
+            while k < col.len() {
+                let (i, mut v) = col[k];
+                let mut k2 = k + 1;
+                while k2 < col.len() && col[k2].0 == i {
+                    v += col[k2].1;
+                    k2 += 1;
+                }
+                if v != 0.0 {
+                    row_idx.push(i);
+                    values.push(v);
+                }
+                k = k2;
+            }
+            col_ptr.push(row_idx.len());
+        }
+        Self { rows, cols, col_ptr, row_idx, values }
+    }
+
+    /// Convert a dense matrix, dropping entries with `|v| <= tol`.
+    pub fn from_dense(a: &super::DenseMatrix, tol: f64) -> Self {
+        let mut triplets = Vec::new();
+        for j in 0..a.cols() {
+            for (i, &v) in a.col(j).iter().enumerate() {
+                if v.abs() > tol {
+                    triplets.push((i, j, v));
+                }
+            }
+        }
+        Self::from_triplets(a.rows(), a.cols(), triplets)
+    }
+
+    /// Number of stored non-zeros.
+    pub fn nnz(&self) -> usize {
+        self.values.len()
+    }
+
+    /// Iterator over `(row, value)` of column `j`.
+    pub fn col_iter(&self, j: usize) -> impl Iterator<Item = (usize, f64)> + '_ {
+        let lo = self.col_ptr[j];
+        let hi = self.col_ptr[j + 1];
+        self.row_idx[lo..hi].iter().copied().zip(self.values[lo..hi].iter().copied())
+    }
+
+    /// Density (nnz / size).
+    pub fn density(&self) -> f64 {
+        self.nnz() as f64 / (self.rows * self.cols) as f64
+    }
+}
+
+impl MatVec for CscMatrix {
+    fn rows(&self) -> usize {
+        self.rows
+    }
+
+    fn cols(&self) -> usize {
+        self.cols
+    }
+
+    fn matvec(&self, x: &[f64], y: &mut [f64]) {
+        assert_eq!(x.len(), self.cols);
+        assert_eq!(y.len(), self.rows);
+        y.fill(0.0);
+        for j in 0..self.cols {
+            let xj = x[j];
+            if xj == 0.0 {
+                continue;
+            }
+            for k in self.col_ptr[j]..self.col_ptr[j + 1] {
+                y[self.row_idx[k]] += self.values[k] * xj;
+            }
+        }
+    }
+
+    fn matvec_t(&self, x: &[f64], y: &mut [f64]) {
+        assert_eq!(x.len(), self.rows);
+        assert_eq!(y.len(), self.cols);
+        for j in 0..self.cols {
+            let mut s = 0.0;
+            for k in self.col_ptr[j]..self.col_ptr[j + 1] {
+                s += self.values[k] * x[self.row_idx[k]];
+            }
+            y[j] = s;
+        }
+    }
+
+    fn col_sq_norms(&self, out: &mut [f64]) {
+        assert_eq!(out.len(), self.cols);
+        for j in 0..self.cols {
+            let mut s = 0.0;
+            for k in self.col_ptr[j]..self.col_ptr[j + 1] {
+                s += self.values[k] * self.values[k];
+            }
+            out[j] = s;
+        }
+    }
+
+    fn axpy_col(&self, j: usize, alpha: f64, y: &mut [f64]) {
+        for k in self.col_ptr[j]..self.col_ptr[j + 1] {
+            y[self.row_idx[k]] += alpha * self.values[k];
+        }
+    }
+
+    fn dot_col(&self, j: usize, x: &[f64]) -> f64 {
+        let mut s = 0.0;
+        for k in self.col_ptr[j]..self.col_ptr[j + 1] {
+            s += self.values[k] * x[self.row_idx[k]];
+        }
+        s
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::DenseMatrix;
+    use crate::prng::Xoshiro256pp;
+
+    #[test]
+    fn from_triplets_dedup_and_sort() {
+        let a = CscMatrix::from_triplets(3, 2, vec![(2, 0, 1.0), (0, 0, 2.0), (2, 0, 3.0), (1, 1, 5.0)]);
+        assert_eq!(a.nnz(), 3);
+        let col0: Vec<_> = a.col_iter(0).collect();
+        assert_eq!(col0, vec![(0, 2.0), (2, 4.0)]);
+    }
+
+    #[test]
+    fn zero_sum_duplicates_dropped() {
+        let a = CscMatrix::from_triplets(2, 1, vec![(0, 0, 1.0), (0, 0, -1.0)]);
+        assert_eq!(a.nnz(), 0);
+    }
+
+    #[test]
+    fn matches_dense_ops() {
+        let mut rng = Xoshiro256pp::seed_from_u64(42);
+        let mut d = DenseMatrix::randn(20, 30, &mut rng);
+        // Sparsify ~ 70%.
+        for j in 0..30 {
+            for i in 0..20 {
+                if rng.next_f64() < 0.7 {
+                    d.set(i, j, 0.0);
+                }
+            }
+        }
+        let s = CscMatrix::from_dense(&d, 0.0);
+        assert!(s.density() < 0.5);
+
+        let x: Vec<f64> = (0..30).map(|i| (i as f64).cos()).collect();
+        let r: Vec<f64> = (0..20).map(|i| (i as f64).sin()).collect();
+
+        let (mut yd, mut ys) = (vec![0.0; 20], vec![0.0; 20]);
+        d.matvec(&x, &mut yd);
+        s.matvec(&x, &mut ys);
+        for i in 0..20 {
+            assert!((yd[i] - ys[i]).abs() < 1e-12);
+        }
+
+        let (mut zd, mut zs) = (vec![0.0; 30], vec![0.0; 30]);
+        d.matvec_t(&r, &mut zd);
+        s.matvec_t(&r, &mut zs);
+        for j in 0..30 {
+            assert!((zd[j] - zs[j]).abs() < 1e-12);
+        }
+
+        let (mut nd, mut ns) = (vec![0.0; 30], vec![0.0; 30]);
+        d.col_sq_norms(&mut nd);
+        s.col_sq_norms(&mut ns);
+        for j in 0..30 {
+            assert!((nd[j] - ns[j]).abs() < 1e-12);
+            assert!((d.dot_col(j, &r) - s.dot_col(j, &r)).abs() < 1e-12);
+        }
+
+        let (mut ad, mut as_) = (r.clone(), r.clone());
+        d.axpy_col(3, 1.5, &mut ad);
+        s.axpy_col(3, 1.5, &mut as_);
+        for i in 0..20 {
+            assert!((ad[i] - as_[i]).abs() < 1e-12);
+        }
+        assert!((d.trace_gram() - s.trace_gram()).abs() < 1e-9);
+    }
+}

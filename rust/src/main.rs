@@ -1,0 +1,277 @@
+//! `flexa` — CLI for the FLEXA/FPA reproduction.
+//!
+//! Subcommands:
+//!
+//! * `solve`      — generate a planted instance and run one solver.
+//! * `experiment` — run a TOML experiment config (multi-algo, multi-
+//!                  realization), writing CSV series + ASCII plots.
+//! * `figure1`    — regenerate a panel of the paper's Fig. 1.
+//! * `artifacts`  — list the AOT artifact manifest and smoke-run one.
+//! * `version`    — print the version.
+
+use flexa::algos::SolveOptions;
+use flexa::bench::fig1::{paper_algos, run_panel, run_solver, PanelSpec};
+use flexa::cli::Command;
+use flexa::config::ExperimentConfig;
+use flexa::coordinator::CostModel;
+use flexa::datagen::NesterovLasso;
+use flexa::metrics::write_trace_csv;
+use flexa::problems::lasso::Lasso;
+use std::path::Path;
+
+fn main() {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let code = match dispatch(&args) {
+        Ok(()) => 0,
+        Err(e) => {
+            eprintln!("error: {e:#}");
+            1
+        }
+    };
+    std::process::exit(code);
+}
+
+fn dispatch(args: &[String]) -> anyhow::Result<()> {
+    let sub = args.first().map(String::as_str).unwrap_or("help");
+    let rest = if args.is_empty() { &[][..] } else { &args[1..] };
+    match sub {
+        "solve" => cmd_solve(rest),
+        "experiment" => cmd_experiment(rest),
+        "figure1" => cmd_figure1(rest),
+        "artifacts" => cmd_artifacts(rest),
+        "summarize" => cmd_summarize(rest),
+        "version" => {
+            println!("flexa {}", flexa::VERSION);
+            Ok(())
+        }
+        _ => {
+            println!(
+                "flexa {} — Flexible Parallel Algorithms for Big Data Optimization\n\n\
+                 usage: flexa <subcommand> [options]\n\n\
+                 subcommands:\n\
+                 \x20 solve       run one solver on a planted Lasso instance\n\
+                 \x20 experiment  run a TOML experiment config\n\
+                 \x20 figure1     regenerate a panel of the paper's Fig. 1\n\
+                 \x20 artifacts   inspect the AOT artifact manifest\n\
+                 \x20 summarize   time-to-accuracy table from trace CSVs\n\
+                 \x20 version     print version\n\n\
+                 run `flexa <subcommand> --help` for options",
+                flexa::VERSION
+            );
+            Ok(())
+        }
+    }
+}
+
+fn cmd_solve(args: &[String]) -> anyhow::Result<()> {
+    let cmd = Command::new("solve", "run one solver on a planted Lasso instance")
+        .opt("rows", Some("500"), "rows of A")
+        .opt("cols", Some("2500"), "columns of A (variables)")
+        .opt("sparsity", Some("0.1"), "fraction of non-zeros in x*")
+        .opt("c", Some("1.0"), "regularization weight")
+        .opt("algo", Some("fpa"), "solver: fpa | fpa-jacobi | fpa-rho-<r> | fista | ista | grock-<P> | gauss-seidel | admm")
+        .opt("seed", Some("20131311"), "instance seed")
+        .opt("max-iters", Some("10000"), "iteration cap")
+        .opt("max-seconds", Some("60"), "wall-clock cap")
+        .opt("target", Some("1e-6"), "target relative error")
+        .opt("procs", Some("1"), "simulated process count (cost model)")
+        .opt("csv", None, "write the trace CSV to this path")
+        .opt("backend", Some("native"), "native | xla (xla needs `make artifacts` + matching shape)")
+        .flag("quiet", "suppress the per-target table");
+    let p = cmd.parse(args)?;
+
+    let (rows, cols) = (p.usize("rows")?, p.usize("cols")?);
+    let gen = NesterovLasso::new(rows, cols, p.f64("sparsity")?, p.f64("c")?).seed(p.u64("seed")?);
+    let inst = gen.generate();
+    let v_star = inst.v_star;
+    let problem = Lasso::new(inst.a, inst.b, inst.c).with_opt_value(v_star);
+    let opts = SolveOptions {
+        max_iters: p.usize("max-iters")?,
+        max_seconds: p.f64("max-seconds")?,
+        target_rel_err: p.f64("target")?,
+        x0: None,
+        cost_model: CostModel::mpi_node(p.usize("procs")?),
+        record_every: 1,
+    };
+
+    let trace = match p.str("backend")? {
+        "native" => run_solver(p.str("algo")?, &problem, &opts)?,
+        "xla" => {
+            let mut engine = flexa::runtime::Engine::cpu(flexa::runtime::DEFAULT_ARTIFACT_DIR)?;
+            let mut solver = flexa::runtime::XlaFpaLasso::new(&mut engine, rows, cols)?;
+            solver.solve(&problem, &opts)?.trace
+        }
+        other => anyhow::bail!("unknown backend `{other}`"),
+    };
+
+    let last = trace.last().cloned();
+    println!(
+        "algo={} iters={} best_rel_err={:.3e} setup={:.3}s",
+        trace.algo,
+        trace.len(),
+        trace.best_rel_err(),
+        trace.setup_s
+    );
+    if let Some(r) = last {
+        println!(
+            "final: V={:.8e} rel_err={:.3e} nnz={} t={:.2}s (sim {:.2}s @ {} procs)",
+            r.objective,
+            r.rel_err,
+            r.nnz,
+            r.time_s,
+            r.sim_time_s,
+            p.usize("procs")?
+        );
+    }
+    if !p.flag("quiet") {
+        for target in [1e-2, 1e-4, 1e-6] {
+            match trace.time_to_rel_err(target, true) {
+                Some(t) => println!("  reach {target:.0e}: {t:.3}s (simulated)"),
+                None => println!("  reach {target:.0e}: not reached"),
+            }
+        }
+    }
+    if let Some(csv) = p.get("csv") {
+        write_trace_csv(Path::new(csv), &trace)?;
+        println!("trace written to {csv}");
+    }
+    Ok(())
+}
+
+fn cmd_experiment(args: &[String]) -> anyhow::Result<()> {
+    let cmd = Command::new("experiment", "run a TOML experiment config")
+        .opt("out", Some("results"), "output directory for CSV series");
+    let p = cmd.parse(args)?;
+    let path = p
+        .positionals()
+        .first()
+        .ok_or_else(|| anyhow::anyhow!("usage: flexa experiment <config.toml>"))?;
+    let cfg = ExperimentConfig::from_file(path)?;
+    anyhow::ensure!(
+        cfg.problem.kind == flexa::config::experiment::ProblemKind::Lasso,
+        "experiment runner currently drives the paper's Lasso evaluation; \
+         use the library API for other problem kinds"
+    );
+    let spec = PanelSpec {
+        name: cfg.name.clone(),
+        rows: cfg.problem.rows,
+        cols: cfg.problem.cols,
+        sparsity: cfg.problem.sparsity,
+        c: cfg.problem.c,
+        procs: cfg.procs,
+        realizations: cfg.realizations,
+        max_iters: cfg.max_iters,
+        max_seconds: cfg.max_seconds,
+        target_rel_err: cfg.target_rel_err,
+        seed: cfg.seed,
+    };
+    let algos: Vec<String> = cfg.algos.iter().map(|a| a.name.clone()).collect();
+    let out = Path::new(p.str("out")?).to_path_buf();
+    let result = run_panel(&spec, &algos, Some(&out))?;
+    println!("{}", result.render(true));
+    println!("{}", result.summary_table(true));
+    println!("CSV series in {}", out.display());
+    Ok(())
+}
+
+fn cmd_figure1(args: &[String]) -> anyhow::Result<()> {
+    let cmd = Command::new("figure1", "regenerate a panel of the paper's Fig. 1")
+        .opt("panel", Some("b"), "panel: a | b | c | d")
+        .opt("scale", Some("0.2"), "problem-size scale factor (1.0 = paper size)")
+        .opt("realizations", Some("1"), "instances to average")
+        .opt("budget", Some("90"), "per-solver wall-clock budget, seconds")
+        .opt("out", Some("results"), "output directory")
+        .flag("full", "paper-size problems (scale = 1.0)");
+    let p = cmd.parse(args)?;
+    let panel = p.str("panel")?.chars().next().unwrap_or('b');
+    let scale = if p.flag("full") { 1.0 } else { p.f64("scale")? };
+    let spec = PanelSpec::paper(panel)?
+        .scaled(scale)
+        .with_realizations(p.usize("realizations")?)
+        .with_budget(p.f64("budget")?);
+    let algos = paper_algos(spec.procs);
+    println!(
+        "panel {panel}: {}x{} ({:.0}% nnz), algos: {:?}",
+        spec.rows, spec.cols, spec.sparsity * 100.0, algos
+    );
+    let out = Path::new(p.str("out")?).to_path_buf();
+    let result = run_panel(&spec, &algos, Some(&out))?;
+    println!("{}", result.render(true));
+    println!("{}", result.summary_table(true));
+    Ok(())
+}
+
+/// Summarize trace CSVs (written by `figure1` / `experiment` / `solve
+/// --csv`) into the paper-style time-to-accuracy table.
+fn cmd_summarize(args: &[String]) -> anyhow::Result<()> {
+    let cmd = Command::new("summarize", "time-to-accuracy table from trace CSVs")
+        .flag("measured", "use the measured single-core clock (default: simulated)");
+    let p = cmd.parse(args)?;
+    let simulated = !p.flag("measured");
+    anyhow::ensure!(!p.positionals().is_empty(), "usage: flexa summarize <trace.csv>...");
+    println!(
+        "{:<28} {:>10} {:>10} {:>10} {:>10}  ({} clock)",
+        "algo (file)",
+        "t(1e-2)",
+        "t(1e-4)",
+        "t(1e-6)",
+        "best",
+        if simulated { "simulated" } else { "measured" }
+    );
+    for path in p.positionals() {
+        let trace = flexa::metrics::read_series_csv(Path::new(path))?;
+        let cell = |t: Option<f64>| t.map(|x| format!("{x:.2}s")).unwrap_or_else(|| "-".into());
+        println!(
+            "{:<28} {:>10} {:>10} {:>10} {:>10.1e}",
+            trace.algo,
+            cell(trace.time_to_rel_err(1e-2, simulated)),
+            cell(trace.time_to_rel_err(1e-4, simulated)),
+            cell(trace.time_to_rel_err(1e-6, simulated)),
+            trace.best_rel_err(),
+        );
+    }
+    Ok(())
+}
+
+fn cmd_artifacts(args: &[String]) -> anyhow::Result<()> {
+    let cmd = Command::new("artifacts", "inspect the AOT artifact manifest")
+        .opt("dir", Some("artifacts"), "artifact directory")
+        .flag("smoke", "compile + run the first fpa_lasso_step artifact");
+    let p = cmd.parse(args)?;
+    let dir = p.str("dir")?;
+    if !flexa::runtime::artifacts_available(dir) {
+        anyhow::bail!("no manifest in `{dir}` — run `make artifacts` first");
+    }
+    let mut engine = flexa::runtime::Engine::cpu(dir)?;
+    println!("platform: {}", engine.platform());
+    let names: Vec<(String, usize, usize)> = {
+        let manifest = engine.manifest();
+        let mut v: Vec<(String, usize, usize)> = Vec::new();
+        for g in ["fpa_lasso_step", "objective", "fista_step"] {
+            for e in manifest.variants(g) {
+                v.push((e.name.clone(), e.rows, e.cols));
+            }
+        }
+        v
+    };
+    for (name, rows, cols) in &names {
+        println!("  {name}  [{rows}x{cols}]");
+    }
+    if p.flag("smoke") {
+        if let Some((name, rows, cols)) = names.iter().find(|(n, _, _)| n.starts_with("fpa_lasso_step")) {
+            let inst = NesterovLasso::new(*rows, *cols, 0.1, 1.0).seed(1).generate();
+            let problem = Lasso::new(inst.a, inst.b, inst.c).with_opt_value(inst.v_star);
+            let mut solver = flexa::runtime::XlaFpaLasso::new(&mut engine, *rows, *cols)?;
+            let report = solver.solve(
+                &problem,
+                &SolveOptions::default().with_max_iters(50).with_target(1e-3),
+            )?;
+            println!(
+                "smoke `{name}`: {} iters, rel_err {:.3e} — OK",
+                report.iterations,
+                report.trace.best_rel_err()
+            );
+        }
+    }
+    Ok(())
+}

@@ -1,0 +1,109 @@
+//! CSV serialization of solver traces (the figure regenerators write one
+//! CSV per algorithm per panel; plots are rendered from these).
+
+use super::trace::{IterRecord, Trace};
+use anyhow::{bail, Context, Result};
+use std::io::Write;
+use std::path::Path;
+
+/// Column header shared by all trace CSVs.
+pub const HEADER: &str = "iter,time_s,sim_time_s,objective,rel_err,nnz,updated_blocks";
+
+/// Write a trace to `path` (creates parent directories).
+pub fn write_trace_csv(path: &Path, trace: &Trace) -> Result<()> {
+    if let Some(parent) = path.parent() {
+        std::fs::create_dir_all(parent).with_context(|| format!("mkdir {parent:?}"))?;
+    }
+    let mut f = std::fs::File::create(path).with_context(|| format!("create {path:?}"))?;
+    writeln!(f, "# algo={} setup_s={:.6}", trace.algo, trace.setup_s)?;
+    writeln!(f, "{HEADER}")?;
+    for r in &trace.records {
+        writeln!(
+            f,
+            "{},{:.6},{:.6},{:.12e},{:.12e},{},{}",
+            r.iter, r.time_s, r.sim_time_s, r.objective, r.rel_err, r.nnz, r.updated_blocks
+        )?;
+    }
+    Ok(())
+}
+
+/// Read a trace CSV written by [`write_trace_csv`].
+pub fn read_series_csv(path: &Path) -> Result<Trace> {
+    let text = std::fs::read_to_string(path).with_context(|| format!("read {path:?}"))?;
+    let mut trace = Trace::new("unknown");
+    for (lineno, line) in text.lines().enumerate() {
+        let line = line.trim();
+        if line.is_empty() {
+            continue;
+        }
+        if let Some(meta) = line.strip_prefix('#') {
+            for part in meta.split_whitespace() {
+                if let Some(v) = part.strip_prefix("algo=") {
+                    trace.algo = v.to_string();
+                } else if let Some(v) = part.strip_prefix("setup_s=") {
+                    trace.setup_s = v.parse().unwrap_or(0.0);
+                }
+            }
+            continue;
+        }
+        if line == HEADER {
+            continue;
+        }
+        let cols: Vec<&str> = line.split(',').collect();
+        if cols.len() != 7 {
+            bail!("{path:?}:{}: expected 7 columns, got {}", lineno + 1, cols.len());
+        }
+        trace.push(IterRecord {
+            iter: cols[0].parse().with_context(|| format!("line {}", lineno + 1))?,
+            time_s: cols[1].parse()?,
+            sim_time_s: cols[2].parse()?,
+            objective: cols[3].parse()?,
+            rel_err: cols[4].parse()?,
+            nnz: cols[5].parse()?,
+            updated_blocks: cols[6].parse()?,
+        });
+    }
+    Ok(trace)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn roundtrip() {
+        let mut tr = Trace::new("fpa");
+        tr.setup_s = 0.125;
+        for i in 0..5 {
+            tr.push(IterRecord {
+                iter: i,
+                time_s: i as f64 * 0.1,
+                sim_time_s: i as f64 * 0.05,
+                objective: 100.0 / (i + 1) as f64,
+                rel_err: 10f64.powi(-(i as i32)),
+                nnz: 42 + i,
+                updated_blocks: 7,
+            });
+        }
+        let dir = std::env::temp_dir().join("flexa_csv_test");
+        let path = dir.join("sub/trace.csv");
+        write_trace_csv(&path, &tr).unwrap();
+        let back = read_series_csv(&path).unwrap();
+        assert_eq!(back.algo, "fpa");
+        assert!((back.setup_s - 0.125).abs() < 1e-9);
+        assert_eq!(back.records.len(), 5);
+        assert_eq!(back.records[3].nnz, 45);
+        assert!((back.records[4].rel_err - 1e-4).abs() < 1e-16);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn malformed_rejected() {
+        let dir = std::env::temp_dir().join("flexa_csv_bad");
+        std::fs::create_dir_all(&dir).unwrap();
+        let p = dir.join("bad.csv");
+        std::fs::write(&p, "1,2,3\n").unwrap();
+        assert!(read_series_csv(&p).is_err());
+        std::fs::remove_dir_all(&dir).ok();
+    }
+}

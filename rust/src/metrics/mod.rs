@@ -1,0 +1,10 @@
+//! Metrics: solver traces (the data behind the paper's Fig. 1), CSV
+//! serialization, and an ASCII plotter for terminal-rendered figures.
+
+pub mod csv;
+pub mod plot;
+pub mod trace;
+
+pub use csv::{read_series_csv, write_trace_csv};
+pub use plot::AsciiPlot;
+pub use trace::{IterRecord, Stopwatch, Trace};

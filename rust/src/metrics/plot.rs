@@ -1,0 +1,146 @@
+//! ASCII plotter: renders the paper's Fig. 1 panels (relative error vs
+//! time, log-log) directly in the terminal and into EXPERIMENTS.md.
+
+/// A multi-series scatter/line plot on log-log axes.
+#[derive(Clone, Debug)]
+pub struct AsciiPlot {
+    title: String,
+    width: usize,
+    height: usize,
+    series: Vec<(String, Vec<(f64, f64)>)>,
+    x_label: String,
+    y_label: String,
+}
+
+/// Glyphs assigned to series in order.
+const GLYPHS: &[char] = &['*', 'o', '+', 'x', '#', '@', '%', '&'];
+
+impl AsciiPlot {
+    pub fn new(title: &str, width: usize, height: usize) -> Self {
+        Self {
+            title: title.to_string(),
+            width: width.max(20),
+            height: height.max(8),
+            series: Vec::new(),
+            x_label: "time (s)".into(),
+            y_label: "rel err".into(),
+        }
+    }
+
+    pub fn labels(mut self, x: &str, y: &str) -> Self {
+        self.x_label = x.into();
+        self.y_label = y.into();
+        self
+    }
+
+    /// Add a series of (x, y) points; non-finite or non-positive values are
+    /// dropped (log axes).
+    pub fn add_series(&mut self, name: &str, points: &[(f64, f64)]) {
+        let clean: Vec<(f64, f64)> = points
+            .iter()
+            .copied()
+            .filter(|(x, y)| x.is_finite() && y.is_finite() && *x > 0.0 && *y > 0.0)
+            .collect();
+        self.series.push((name.to_string(), clean));
+    }
+
+    /// Render to a string.
+    pub fn render(&self) -> String {
+        let mut out = String::new();
+        out.push_str(&format!("── {} ──\n", self.title));
+        let pts: Vec<(f64, f64)> =
+            self.series.iter().flat_map(|(_, p)| p.iter().copied()).collect();
+        if pts.is_empty() {
+            out.push_str("(no positive finite data)\n");
+            return out;
+        }
+        let (mut x0, mut x1, mut y0, mut y1) =
+            (f64::INFINITY, f64::NEG_INFINITY, f64::INFINITY, f64::NEG_INFINITY);
+        for (x, y) in &pts {
+            x0 = x0.min(x.log10());
+            x1 = x1.max(x.log10());
+            y0 = y0.min(y.log10());
+            y1 = y1.max(y.log10());
+        }
+        if (x1 - x0).abs() < 1e-12 {
+            x1 = x0 + 1.0;
+        }
+        if (y1 - y0).abs() < 1e-12 {
+            y1 = y0 + 1.0;
+        }
+        let mut grid = vec![vec![' '; self.width]; self.height];
+        for (si, (_, points)) in self.series.iter().enumerate() {
+            let glyph = GLYPHS[si % GLYPHS.len()];
+            for (x, y) in points {
+                let cx = (((x.log10() - x0) / (x1 - x0)) * (self.width - 1) as f64).round() as usize;
+                let cy = (((y.log10() - y0) / (y1 - y0)) * (self.height - 1) as f64).round() as usize;
+                let row = self.height - 1 - cy.min(self.height - 1);
+                let col = cx.min(self.width - 1);
+                // First-come wins so early series stay visible.
+                if grid[row][col] == ' ' {
+                    grid[row][col] = glyph;
+                }
+            }
+        }
+        for (i, row) in grid.iter().enumerate() {
+            let ytick = if i == 0 {
+                format!("1e{:+.0}", y1)
+            } else if i == self.height - 1 {
+                format!("1e{:+.0}", y0)
+            } else {
+                String::new()
+            };
+            out.push_str(&format!("{ytick:>7} |"));
+            out.extend(row.iter());
+            out.push('\n');
+        }
+        out.push_str(&format!("{:>8}+{}\n", "", "-".repeat(self.width)));
+        out.push_str(&format!(
+            "{:>8} 1e{:+.0}{:>width$}1e{:+.0}  ({} vs {})\n",
+            "",
+            x0,
+            "",
+            x1,
+            self.y_label,
+            self.x_label,
+            width = self.width.saturating_sub(10)
+        ));
+        for (si, (name, _)) in self.series.iter().enumerate() {
+            out.push_str(&format!("  {} {}\n", GLYPHS[si % GLYPHS.len()], name));
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn renders_series_and_legend() {
+        let mut p = AsciiPlot::new("test panel", 40, 10);
+        p.add_series("fpa", &[(0.1, 1.0), (1.0, 1e-3), (10.0, 1e-6)]);
+        p.add_series("fista", &[(0.2, 1.0), (2.0, 1e-2), (20.0, 1e-4)]);
+        let s = p.render();
+        assert!(s.contains("test panel"));
+        assert!(s.contains("* fpa"));
+        assert!(s.contains("o fista"));
+        assert!(s.contains('*'));
+    }
+
+    #[test]
+    fn drops_nonpositive_points() {
+        let mut p = AsciiPlot::new("empty", 30, 8);
+        p.add_series("bad", &[(0.0, 1.0), (-1.0, 2.0), (1.0, f64::NAN)]);
+        let s = p.render();
+        assert!(s.contains("no positive finite data"));
+    }
+
+    #[test]
+    fn single_point_does_not_panic() {
+        let mut p = AsciiPlot::new("one", 30, 8);
+        p.add_series("s", &[(1.0, 1.0)]);
+        let s = p.render();
+        assert!(s.contains("one"));
+    }
+}

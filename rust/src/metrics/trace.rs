@@ -1,0 +1,220 @@
+//! Per-iteration solver traces.
+//!
+//! Every solver records one [`IterRecord`] per iteration: measured
+//! wall-clock, simulated parallel wall-clock (see
+//! [`crate::coordinator::costmodel`]), objective, relative error and
+//! support size. These series are exactly what the paper's Fig. 1 plots
+//! (relative error vs time).
+
+use std::time::Instant;
+
+/// One row of a solver trace.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct IterRecord {
+    /// Iteration counter (0 = after the first update).
+    pub iter: usize,
+    /// Measured wall-clock seconds since solve start (includes setup).
+    pub time_s: f64,
+    /// Simulated parallel wall-clock seconds (cost-model; equals `time_s`
+    /// for sequential solvers run with 1 process).
+    pub sim_time_s: f64,
+    /// Objective V(x) = F(x) + G(x).
+    pub objective: f64,
+    /// Relative error (V(x) − V*) / V* when V* is known, else NaN.
+    pub rel_err: f64,
+    /// Support size ‖x‖₀ (entries with |xᵢ| > 1e-9).
+    pub nnz: usize,
+    /// Number of blocks updated this iteration (|Sᵏ|).
+    pub updated_blocks: usize,
+}
+
+/// A named series of iteration records.
+#[derive(Clone, Debug, Default)]
+pub struct Trace {
+    pub algo: String,
+    pub records: Vec<IterRecord>,
+    /// Setup time (e.g. FISTA's ‖A‖₂² power method) in seconds; included
+    /// in `time_s` of every record, recorded separately for reporting.
+    pub setup_s: f64,
+}
+
+impl Trace {
+    pub fn new(algo: &str) -> Self {
+        Self { algo: algo.to_string(), records: Vec::new(), setup_s: 0.0 }
+    }
+
+    pub fn push(&mut self, rec: IterRecord) {
+        self.records.push(rec);
+    }
+
+    pub fn len(&self) -> usize {
+        self.records.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.records.is_empty()
+    }
+
+    pub fn last(&self) -> Option<&IterRecord> {
+        self.records.last()
+    }
+
+    /// First measured time at which `rel_err <= target` (linear
+    /// interpolation between the bracketing records), or `None`.
+    pub fn time_to_rel_err(&self, target: f64, simulated: bool) -> Option<f64> {
+        let t = |r: &IterRecord| if simulated { r.sim_time_s } else { r.time_s };
+        let mut prev: Option<&IterRecord> = None;
+        for r in &self.records {
+            if r.rel_err.is_finite() && r.rel_err <= target {
+                if let Some(p) = prev {
+                    if p.rel_err.is_finite() && p.rel_err > target && p.rel_err > r.rel_err {
+                        // Interpolate in log(rel_err) for smoothness.
+                        let (e0, e1) = (p.rel_err.max(1e-300).ln(), r.rel_err.max(1e-300).ln());
+                        let frac = (target.max(1e-300).ln() - e0) / (e1 - e0);
+                        return Some(t(p) + frac.clamp(0.0, 1.0) * (t(r) - t(p)));
+                    }
+                }
+                return Some(t(r));
+            }
+            prev = Some(r);
+        }
+        None
+    }
+
+    /// Best (smallest) relative error reached.
+    pub fn best_rel_err(&self) -> f64 {
+        self.records
+            .iter()
+            .map(|r| r.rel_err)
+            .filter(|e| e.is_finite())
+            .fold(f64::INFINITY, f64::min)
+    }
+
+    /// Downsample to at most `max_points` records (keeps first/last; used
+    /// before writing plot CSVs for the 100k-variable runs).
+    pub fn downsample(&self, max_points: usize) -> Trace {
+        if self.records.len() <= max_points || max_points < 2 {
+            return self.clone();
+        }
+        let mut out = Trace::new(&self.algo);
+        out.setup_s = self.setup_s;
+        let n = self.records.len();
+        for k in 0..max_points {
+            let idx = k * (n - 1) / (max_points - 1);
+            out.records.push(self.records[idx]);
+        }
+        out.records.dedup_by_key(|r| r.iter);
+        out
+    }
+}
+
+/// Monotonic stopwatch with pause support (used to exclude trace-recording
+/// overhead from measured solver time).
+#[derive(Debug)]
+pub struct Stopwatch {
+    start: Instant,
+    paused_total: f64,
+    pause_start: Option<Instant>,
+}
+
+impl Stopwatch {
+    pub fn start() -> Self {
+        Self { start: Instant::now(), paused_total: 0.0, pause_start: None }
+    }
+
+    /// Seconds elapsed, excluding paused intervals.
+    pub fn elapsed_s(&self) -> f64 {
+        let raw = self.start.elapsed().as_secs_f64();
+        let paused_now = self
+            .pause_start
+            .map(|p| p.elapsed().as_secs_f64())
+            .unwrap_or(0.0);
+        raw - self.paused_total - paused_now
+    }
+
+    /// Pause (bookkeeping sections don't count against solver time).
+    pub fn pause(&mut self) {
+        if self.pause_start.is_none() {
+            self.pause_start = Some(Instant::now());
+        }
+    }
+
+    /// Resume after [`Self::pause`].
+    pub fn resume(&mut self) {
+        if let Some(p) = self.pause_start.take() {
+            self.paused_total += p.elapsed().as_secs_f64();
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn rec(iter: usize, t: f64, e: f64) -> IterRecord {
+        IterRecord {
+            iter,
+            time_s: t,
+            sim_time_s: t / 2.0,
+            objective: 1.0 + e,
+            rel_err: e,
+            nnz: 10,
+            updated_blocks: 5,
+        }
+    }
+
+    #[test]
+    fn time_to_rel_err_interpolates() {
+        let mut tr = Trace::new("fpa");
+        tr.push(rec(0, 1.0, 1e-1));
+        tr.push(rec(1, 2.0, 1e-3));
+        tr.push(rec(2, 3.0, 1e-5));
+        // 1e-2 is between records 0 and 1: expect t in (1, 2).
+        let t = tr.time_to_rel_err(1e-2, false).unwrap();
+        assert!(t > 1.0 && t < 2.0, "t = {t}");
+        // log-interp: 1e-2 is halfway between 1e-1 and 1e-3 in log space.
+        assert!((t - 1.5).abs() < 1e-9);
+        // Simulated clock is half the measured one here.
+        let ts = tr.time_to_rel_err(1e-2, true).unwrap();
+        assert!((ts - 0.75).abs() < 1e-9);
+        // Unreachable target.
+        assert!(tr.time_to_rel_err(1e-9, false).is_none());
+        // Already-satisfied target returns the first record's time.
+        assert_eq!(tr.time_to_rel_err(0.5, false), Some(1.0));
+    }
+
+    #[test]
+    fn best_rel_err_ignores_nan() {
+        let mut tr = Trace::new("x");
+        tr.push(rec(0, 1.0, f64::NAN));
+        tr.push(rec(1, 2.0, 1e-4));
+        assert_eq!(tr.best_rel_err(), 1e-4);
+    }
+
+    #[test]
+    fn downsample_keeps_endpoints() {
+        let mut tr = Trace::new("x");
+        for i in 0..100 {
+            tr.push(rec(i, i as f64, 1.0 / (i + 1) as f64));
+        }
+        let d = tr.downsample(10);
+        assert!(d.len() <= 10);
+        assert_eq!(d.records.first().unwrap().iter, 0);
+        assert_eq!(d.records.last().unwrap().iter, 99);
+        // No-op when already small.
+        assert_eq!(d.downsample(50).len(), d.len());
+    }
+
+    #[test]
+    fn stopwatch_pause_excluded() {
+        let mut sw = Stopwatch::start();
+        std::thread::sleep(std::time::Duration::from_millis(10));
+        sw.pause();
+        let t0 = sw.elapsed_s();
+        std::thread::sleep(std::time::Duration::from_millis(20));
+        let t1 = sw.elapsed_s();
+        sw.resume();
+        assert!((t1 - t0).abs() < 5e-3, "paused time must not accrue");
+        assert!(t0 >= 0.009);
+    }
+}

@@ -1,0 +1,286 @@
+//! The group Lasso problem `min ‖Ax − b‖² + c·Σᵢ‖xᵢ‖₂`
+//! (Yuan & Lin 2006, paper §2 third bullet).
+
+use super::{BlockLayout, CompositeProblem, LeastSquares, Regularizer};
+use crate::linalg::{ops, power, DenseMatrix, MatVec};
+use std::sync::OnceLock;
+
+/// Group Lasso with an arbitrary block layout.
+pub struct GroupLasso<M: MatVec = DenseMatrix> {
+    a: M,
+    b: Vec<f64>,
+    c: f64,
+    layout: BlockLayout,
+    col_sq: Vec<f64>,
+    /// Per-block curvature bound `d_i = 2·λ_max(A_iᵀA_i)` upper-bounded by
+    /// `2·Σ_{j∈i}‖A_j‖²` (trace bound; exact for scalar blocks).
+    block_curv: Vec<f64>,
+    trace_gram: f64,
+    lambda_max: OnceLock<f64>,
+    opt: Option<f64>,
+}
+
+impl<M: MatVec> GroupLasso<M> {
+    /// Equal-size blocks of `block_size` variables.
+    pub fn new(a: M, b: Vec<f64>, c: f64, block_size: usize) -> Self {
+        let layout = BlockLayout::uniform(a.cols(), block_size);
+        Self::with_layout(a, b, c, layout)
+    }
+
+    /// Explicit layout.
+    pub fn with_layout(a: M, b: Vec<f64>, c: f64, layout: BlockLayout) -> Self {
+        assert_eq!(a.rows(), b.len(), "GroupLasso: A rows must match b length");
+        assert!(c > 0.0, "GroupLasso: c must be positive");
+        assert_eq!(layout.dim(), a.cols(), "GroupLasso: layout must cover all columns");
+        let n = a.cols();
+        let mut col_sq = vec![0.0; n];
+        a.col_sq_norms(&mut col_sq);
+        let trace_gram = col_sq.iter().sum();
+        // Exact per-block curvature 2·λ_max(A_iᵀA_i) for small blocks
+        // (power iteration on the w×w block Gram — w is the block size,
+        // so this is O(n·w·m) once); the trace bound for large blocks.
+        let block_curv = (0..layout.num_blocks())
+            .map(|i| {
+                let r = layout.range(i);
+                let w = r.len();
+                let trace_bound = 2.0 * r.clone().map(|j| col_sq[j]).sum::<f64>();
+                if w == 1 {
+                    return trace_bound; // exact for scalars
+                }
+                if w > 32 {
+                    return trace_bound;
+                }
+                // Form the block Gram.
+                let mut gram = vec![0.0; w * w];
+                let mut cols: Vec<Vec<f64>> = Vec::with_capacity(w);
+                for j in r.clone() {
+                    let mut col = vec![0.0; a.rows()];
+                    a.axpy_col(j, 1.0, &mut col);
+                    cols.push(col);
+                }
+                for p in 0..w {
+                    for q in p..w {
+                        let v = crate::linalg::ops::dot(&cols[p], &cols[q]);
+                        gram[p * w + q] = v;
+                        gram[q * w + p] = v;
+                    }
+                }
+                // Power iteration on the symmetric PSD gram.
+                let mut v = vec![1.0 / (w as f64).sqrt(); w];
+                let mut lam = 0.0;
+                for _ in 0..50 {
+                    let mut gv = vec![0.0; w];
+                    for p in 0..w {
+                        let mut s = 0.0;
+                        for q in 0..w {
+                            s += gram[p * w + q] * v[q];
+                        }
+                        gv[p] = s;
+                    }
+                    let nrm = crate::linalg::ops::nrm2(&gv);
+                    if nrm == 0.0 {
+                        break;
+                    }
+                    for p in 0..w {
+                        v[p] = gv[p] / nrm;
+                    }
+                    lam = nrm;
+                }
+                (2.0 * lam).min(trace_bound).max(1e-12)
+            })
+            .collect();
+        Self { a, b, c, layout, col_sq, block_curv, trace_gram, lambda_max: OnceLock::new(), opt: None }
+    }
+
+    /// Attach the known optimal value (planted instances).
+    pub fn with_opt_value(mut self, v_star: f64) -> Self {
+        self.opt = Some(v_star);
+        self
+    }
+
+    /// Per-block curvature bounds (used by the FPA surrogate).
+    pub fn block_curvatures(&self) -> &[f64] {
+        &self.block_curv
+    }
+
+    pub fn c(&self) -> f64 {
+        self.c
+    }
+}
+
+impl<M: MatVec> CompositeProblem for GroupLasso<M> {
+    fn n(&self) -> usize {
+        self.a.cols()
+    }
+
+    fn layout(&self) -> &BlockLayout {
+        &self.layout
+    }
+
+    fn smooth(&self, x: &[f64]) -> f64 {
+        let mut r = vec![0.0; self.a.rows()];
+        self.residual(x, &mut r);
+        ops::nrm2_sq(&r)
+    }
+
+    fn reg(&self, x: &[f64]) -> f64 {
+        Regularizer::GroupL2 { c: self.c }.value(x, &self.layout)
+    }
+
+    fn grad_smooth(&self, x: &[f64], g: &mut [f64]) {
+        let mut r = vec![0.0; self.a.rows()];
+        self.residual(x, &mut r);
+        self.a.matvec_t(&r, g);
+        ops::scal(2.0, g);
+    }
+
+    /// One residual pass yields both `∇F` and `F` (hot-path fusion).
+    fn grad_and_smooth(&self, x: &[f64], g: &mut [f64]) -> f64 {
+        let mut r = vec![0.0; self.a.rows()];
+        self.residual(x, &mut r);
+        let f = ops::nrm2_sq(&r);
+        self.a.matvec_t(&r, g);
+        ops::scal(2.0, g);
+        f
+    }
+
+    /// Per-coordinate value is the enclosing block's curvature bound, so
+    /// block-wise surrogates can read any coordinate of the block.
+    fn curvature(&self, _x: &[f64], d: &mut [f64]) {
+        for i in 0..self.layout.num_blocks() {
+            let c = self.block_curv[i];
+            for j in self.layout.range(i) {
+                d[j] = c;
+            }
+        }
+    }
+
+    fn lipschitz_grad(&self) -> f64 {
+        *self
+            .lambda_max
+            .get_or_init(|| 2.0 * power::lambda_max_gram(&self.a, 1e-9, 500, 0x11B).lambda_max)
+    }
+
+    fn prox_block(&self, _i: usize, v: &[f64], t: f64, out: &mut [f64]) {
+        ops::group_soft_threshold(v, t * self.c, out);
+    }
+
+    fn regularizer(&self) -> Regularizer {
+        Regularizer::GroupL2 { c: self.c }
+    }
+
+    fn curvature_trace(&self) -> f64 {
+        self.trace_gram
+    }
+
+    fn is_quadratic(&self) -> bool {
+        true
+    }
+
+    fn opt_value(&self) -> Option<f64> {
+        self.opt
+    }
+}
+
+impl<M: MatVec> LeastSquares for GroupLasso<M> {
+    fn residual(&self, x: &[f64], r: &mut [f64]) {
+        self.a.matvec(x, r);
+        for (ri, bi) in r.iter_mut().zip(&self.b) {
+            *ri -= bi;
+        }
+    }
+    fn rhs(&self) -> &[f64] {
+        &self.b
+    }
+    fn rows(&self) -> usize {
+        self.a.rows()
+    }
+    fn col_dot(&self, j: usize, v: &[f64]) -> f64 {
+        self.a.dot_col(j, v)
+    }
+    fn col_axpy(&self, j: usize, alpha: f64, r: &mut [f64]) {
+        self.a.axpy_col(j, alpha, r);
+    }
+    fn col_sq_norms(&self) -> &[f64] {
+        &self.col_sq
+    }
+    fn apply(&self, v: &[f64], y: &mut [f64]) {
+        self.a.matvec(v, y);
+    }
+    fn apply_t(&self, v: &[f64], y: &mut [f64]) {
+        self.a.matvec_t(v, y);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::prng::Xoshiro256pp;
+
+    fn problem() -> GroupLasso {
+        let mut rng = Xoshiro256pp::seed_from_u64(21);
+        let a = DenseMatrix::randn(10, 6, &mut rng);
+        let mut b = vec![0.0; 10];
+        rng.fill_normal(&mut b);
+        GroupLasso::new(a, b, 0.7, 2)
+    }
+
+    #[test]
+    fn layout_and_reg_value() {
+        let p = problem();
+        assert_eq!(p.layout().num_blocks(), 3);
+        let x = vec![3.0, 4.0, 0.0, 0.0, 1.0, 0.0];
+        // G = 0.7 * (5 + 0 + 1)
+        assert!((p.reg(&x) - 0.7 * 6.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn gradient_matches_finite_difference() {
+        let p = problem();
+        let mut rng = Xoshiro256pp::seed_from_u64(22);
+        let mut x = vec![0.0; 6];
+        rng.fill_normal(&mut x);
+        let mut g = vec![0.0; 6];
+        p.grad_smooth(&x, &mut g);
+        let h = 1e-6;
+        for j in 0..6 {
+            let mut xp = x.clone();
+            xp[j] += h;
+            let mut xm = x.clone();
+            xm[j] -= h;
+            let fd = (p.smooth(&xp) - p.smooth(&xm)) / (2.0 * h);
+            assert!((fd - g[j]).abs() < 1e-4);
+        }
+    }
+
+    #[test]
+    fn block_curvature_bounds_block_gram() {
+        let p = problem();
+        let mut d = vec![0.0; 6];
+        p.curvature(&[0.0; 6], &mut d);
+        // Within a block all coordinates share the bound.
+        assert_eq!(d[0], d[1]);
+        assert_eq!(d[2], d[3]);
+        let cs = p.col_sq_norms();
+        // 2·λ_max of the block gram: between the largest column norm and
+        // the trace bound.
+        assert!(d[0] <= 2.0 * (cs[0] + cs[1]) + 1e-9);
+        assert!(d[0] >= 2.0 * cs[0].max(cs[1]) - 1e-6);
+        // L_F upper-bounds... the global curvature trace bound is larger.
+        assert!(p.lipschitz_grad() <= 2.0 * p.curvature_trace() + 1e-9);
+        // Every block curvature is below the global Lipschitz constant.
+        for i in 0..3 {
+            assert!(p.block_curvatures()[i] <= p.lipschitz_grad() + 1e-6);
+        }
+    }
+
+    #[test]
+    fn prox_is_group_soft_threshold() {
+        let p = problem();
+        let mut out = vec![0.0; 2];
+        p.prox_block(0, &[3.0, 4.0], 1.0, &mut out); // threshold 0.7
+        let scale: f64 = 1.0 - 0.7 / 5.0;
+        assert!((out[0] - 3.0 * scale).abs() < 1e-12);
+        assert!((out[1] - 4.0 * scale).abs() < 1e-12);
+    }
+}

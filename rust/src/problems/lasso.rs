@@ -1,0 +1,265 @@
+//! The Lasso problem `min ‖Ax − b‖² + c‖x‖₁` — the paper's evaluation
+//! workload (Tibshirani 1996, paper §2 second bullet).
+
+use super::{BlockLayout, CompositeProblem, LeastSquares, Regularizer};
+use crate::linalg::{ops, power, DenseMatrix, MatVec};
+use std::sync::OnceLock;
+
+/// Lasso over a dense or sparse design matrix.
+pub struct Lasso<M: MatVec = DenseMatrix> {
+    a: M,
+    b: Vec<f64>,
+    c: f64,
+    layout: BlockLayout,
+    col_sq: Vec<f64>,
+    trace_gram: f64,
+    /// `λ_max(AᵀA)` cache — the power method runs once on first use.
+    lambda_max: OnceLock<f64>,
+    /// Known optimum for planted instances.
+    opt: Option<f64>,
+}
+
+impl<M: MatVec> Lasso<M> {
+    /// Scalar-block Lasso (paper's Fig. 1 setting).
+    pub fn new(a: M, b: Vec<f64>, c: f64) -> Self {
+        Self::with_layout(a, b, c, None)
+    }
+
+    /// Lasso with an explicit block layout (blocks only affect the
+    /// decomposition, not the objective).
+    pub fn with_layout(a: M, b: Vec<f64>, c: f64, layout: Option<BlockLayout>) -> Self {
+        assert_eq!(a.rows(), b.len(), "Lasso: A rows must match b length");
+        assert!(c > 0.0, "Lasso: c must be positive");
+        let n = a.cols();
+        let mut col_sq = vec![0.0; n];
+        a.col_sq_norms(&mut col_sq);
+        let trace_gram = col_sq.iter().sum();
+        let layout = layout.unwrap_or_else(|| BlockLayout::scalar(n));
+        assert_eq!(layout.dim(), n, "Lasso: layout must cover all columns");
+        Self { a, b, c, layout, col_sq, trace_gram, lambda_max: OnceLock::new(), opt: None }
+    }
+
+    /// Attach the known optimal value (planted instances).
+    pub fn with_opt_value(mut self, v_star: f64) -> Self {
+        self.opt = Some(v_star);
+        self
+    }
+
+    /// Design matrix access.
+    pub fn matrix(&self) -> &M {
+        &self.a
+    }
+
+    /// Regularization weight.
+    pub fn c(&self) -> f64 {
+        self.c
+    }
+}
+
+impl<M: MatVec> CompositeProblem for Lasso<M> {
+    fn n(&self) -> usize {
+        self.a.cols()
+    }
+
+    fn layout(&self) -> &BlockLayout {
+        &self.layout
+    }
+
+    fn smooth(&self, x: &[f64]) -> f64 {
+        let mut r = vec![0.0; self.a.rows()];
+        self.residual(x, &mut r);
+        ops::nrm2_sq(&r)
+    }
+
+    fn reg(&self, x: &[f64]) -> f64 {
+        self.c * ops::nrm1(x)
+    }
+
+    /// `∇F = 2Aᵀ(Ax − b)`.
+    fn grad_smooth(&self, x: &[f64], g: &mut [f64]) {
+        let mut r = vec![0.0; self.a.rows()];
+        self.residual(x, &mut r);
+        self.a.matvec_t(&r, g);
+        ops::scal(2.0, g);
+    }
+
+    /// One residual pass yields both `∇F` and `F` (hot-path fusion).
+    fn grad_and_smooth(&self, x: &[f64], g: &mut [f64]) -> f64 {
+        let mut r = vec![0.0; self.a.rows()];
+        self.residual(x, &mut r);
+        let f = ops::nrm2_sq(&r);
+        self.a.matvec_t(&r, g);
+        ops::scal(2.0, g);
+        f
+    }
+
+    /// `d_j = 2‖A_j‖²` — the exact diagonal of `∇²F`.
+    fn curvature(&self, _x: &[f64], d: &mut [f64]) {
+        for (o, &s) in d.iter_mut().zip(&self.col_sq) {
+            *o = 2.0 * s;
+        }
+    }
+
+    fn lipschitz_grad(&self) -> f64 {
+        *self
+            .lambda_max
+            .get_or_init(|| 2.0 * power::lambda_max_gram(&self.a, 1e-9, 500, 0x11A).lambda_max)
+    }
+
+    fn prox_block(&self, _i: usize, v: &[f64], t: f64, out: &mut [f64]) {
+        let thr = t * self.c;
+        for (o, &vi) in out.iter_mut().zip(v) {
+            *o = ops::soft_threshold(vi, thr);
+        }
+    }
+
+    fn regularizer(&self) -> Regularizer {
+        Regularizer::L1 { c: self.c }
+    }
+
+    fn curvature_trace(&self) -> f64 {
+        self.trace_gram
+    }
+
+    fn is_quadratic(&self) -> bool {
+        true
+    }
+
+    fn opt_value(&self) -> Option<f64> {
+        self.opt
+    }
+}
+
+impl<M: MatVec> LeastSquares for Lasso<M> {
+    fn residual(&self, x: &[f64], r: &mut [f64]) {
+        self.a.matvec(x, r);
+        for (ri, bi) in r.iter_mut().zip(&self.b) {
+            *ri -= bi;
+        }
+    }
+
+    fn rhs(&self) -> &[f64] {
+        &self.b
+    }
+
+    fn rows(&self) -> usize {
+        self.a.rows()
+    }
+
+    fn col_dot(&self, j: usize, v: &[f64]) -> f64 {
+        self.a.dot_col(j, v)
+    }
+
+    fn col_axpy(&self, j: usize, alpha: f64, r: &mut [f64]) {
+        self.a.axpy_col(j, alpha, r);
+    }
+
+    fn col_sq_norms(&self) -> &[f64] {
+        &self.col_sq
+    }
+
+    fn apply(&self, v: &[f64], y: &mut [f64]) {
+        self.a.matvec(v, y);
+    }
+
+    fn apply_t(&self, v: &[f64], y: &mut [f64]) {
+        self.a.matvec_t(v, y);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::prng::Xoshiro256pp;
+
+    fn tiny() -> Lasso {
+        // A = [[1, 0], [0, 2]], b = [1, 2], c = 1
+        let a = DenseMatrix::from_row_major(2, 2, &[1.0, 0.0, 0.0, 2.0]);
+        Lasso::new(a, vec![1.0, 2.0], 1.0)
+    }
+
+    #[test]
+    fn objective_pieces() {
+        let p = tiny();
+        let x = vec![1.0, 1.0];
+        // Ax - b = [0, 0]; F = 0; G = 2.
+        assert_eq!(p.smooth(&x), 0.0);
+        assert_eq!(p.reg(&x), 2.0);
+        assert_eq!(p.objective(&x), 2.0);
+        let x0 = vec![0.0, 0.0];
+        assert_eq!(p.smooth(&x0), 5.0);
+    }
+
+    #[test]
+    fn gradient_matches_finite_difference() {
+        let mut rng = Xoshiro256pp::seed_from_u64(4);
+        let a = DenseMatrix::randn(8, 5, &mut rng);
+        let mut b = vec![0.0; 8];
+        rng.fill_normal(&mut b);
+        let p = Lasso::new(a, b, 0.5);
+        let mut x = vec![0.0; 5];
+        rng.fill_normal(&mut x);
+        let mut g = vec![0.0; 5];
+        p.grad_smooth(&x, &mut g);
+        let h = 1e-6;
+        for j in 0..5 {
+            let mut xp = x.clone();
+            xp[j] += h;
+            let mut xm = x.clone();
+            xm[j] -= h;
+            let fd = (p.smooth(&xp) - p.smooth(&xm)) / (2.0 * h);
+            assert!((fd - g[j]).abs() < 1e-4, "coord {j}: fd {fd} vs {}", g[j]);
+        }
+    }
+
+    #[test]
+    fn curvature_is_hessian_diagonal() {
+        let p = tiny();
+        let mut d = vec![0.0; 2];
+        p.curvature(&[0.0, 0.0], &mut d);
+        assert_eq!(d, vec![2.0, 8.0]); // 2*||A_j||^2
+        assert_eq!(p.curvature_trace(), 5.0);
+        assert!(p.is_quadratic());
+    }
+
+    #[test]
+    fn lipschitz_upper_bounds_curvature() {
+        let mut rng = Xoshiro256pp::seed_from_u64(5);
+        let a = DenseMatrix::randn(20, 10, &mut rng);
+        let p = Lasso::new(a, vec![0.0; 20], 1.0);
+        let l = p.lipschitz_grad();
+        let mut d = vec![0.0; 10];
+        p.curvature(&[0.0; 10], &mut d);
+        let dmax = d.iter().cloned().fold(0.0, f64::max);
+        assert!(l >= dmax - 1e-6, "L = {l} < max d = {dmax}");
+        // Cached on second call.
+        assert_eq!(p.lipschitz_grad(), l);
+    }
+
+    #[test]
+    fn residual_maintenance_consistency() {
+        let p = tiny();
+        let x = vec![0.5, -0.5];
+        let mut r = vec![0.0; 2];
+        p.residual(&x, &mut r);
+        assert_eq!(r, vec![-0.5, -3.0]);
+        // col_axpy updates residual exactly like recomputing it.
+        let mut r2 = r.clone();
+        p.col_axpy(1, 1.0, &mut r2); // x1 += 1
+        let mut r3 = vec![0.0; 2];
+        p.residual(&[0.5, 0.5], &mut r3);
+        assert_eq!(r2, r3);
+        assert_eq!(p.col_dot(1, &r), -6.0);
+    }
+
+    #[test]
+    fn prox_block_soft_threshold() {
+        let p = tiny();
+        let mut out = vec![0.0; 1];
+        p.prox_block(0, &[2.0], 0.5, &mut out);
+        assert_eq!(out, vec![1.5]);
+        assert_eq!(p.opt_value(), None);
+        let p2 = tiny().with_opt_value(1.25);
+        assert_eq!(p2.opt_value(), Some(1.25));
+    }
+}

@@ -1,0 +1,247 @@
+//! Sparse logistic regression
+//! `min Σⱼ log(1 + exp(−aⱼ yⱼᵀ x)) + c‖x‖₁`
+//! (Shevade & Keerthi 2003; Meier et al. 2008 — paper §2 fourth bullet).
+//!
+//! `F` is convex but *not quadratic*, so the exact best-response has no
+//! closed form — this is the problem family that exercises the framework's
+//! inexact subproblem solves (Theorem 1's εᵏ schedule).
+
+use super::{BlockLayout, CompositeProblem, Regularizer};
+use crate::linalg::{ops, power, DenseMatrix, MatVec};
+use std::sync::OnceLock;
+
+/// Numerically-stable `log(1 + e^{-z})`.
+#[inline]
+pub fn log1p_exp_neg(z: f64) -> f64 {
+    if z > 0.0 {
+        (-z).exp().ln_1p()
+    } else {
+        -z + z.exp().ln_1p()
+    }
+}
+
+/// Logistic sigmoid `1 / (1 + e^{-z})`, stable for large |z|.
+#[inline]
+pub fn sigmoid(z: f64) -> f64 {
+    if z >= 0.0 {
+        1.0 / (1.0 + (-z).exp())
+    } else {
+        let e = z.exp();
+        e / (1.0 + e)
+    }
+}
+
+/// ℓ₁-regularized logistic regression. The design matrix stores the rows
+/// already scaled by their labels: `M[j,:] = aⱼ·yⱼᵀ`, so
+/// `F(x) = Σⱼ log(1 + exp(−(Mx)ⱼ))`.
+pub struct SparseLogReg<M: MatVec = DenseMatrix> {
+    m: M,
+    c: f64,
+    layout: BlockLayout,
+    col_sq: Vec<f64>,
+    trace: f64,
+    lambda_max: OnceLock<f64>,
+    opt: Option<f64>,
+}
+
+impl<M: MatVec> SparseLogReg<M> {
+    /// Build from a label-scaled design matrix (rows `aⱼ·yⱼᵀ`).
+    pub fn new(m: M, c: f64) -> Self {
+        Self::with_layout(m, c, None)
+    }
+
+    pub fn with_layout(m: M, c: f64, layout: Option<BlockLayout>) -> Self {
+        assert!(c > 0.0, "SparseLogReg: c must be positive");
+        let n = m.cols();
+        let mut col_sq = vec![0.0; n];
+        m.col_sq_norms(&mut col_sq);
+        // Hessian diag: Σⱼ M_ji² σ(z)σ(−z) ≤ ‖M_j‖²/4; trace analogue /4.
+        let trace = col_sq.iter().sum::<f64>() / 4.0;
+        let layout = layout.unwrap_or_else(|| BlockLayout::scalar(n));
+        assert_eq!(layout.dim(), n);
+        Self { m, c, layout, col_sq, trace, lambda_max: OnceLock::new(), opt: None }
+    }
+
+    /// Attach a reference optimal value (computed by a long high-accuracy
+    /// run; used for relative-error reporting).
+    pub fn with_opt_value(mut self, v_star: f64) -> Self {
+        self.opt = Some(v_star);
+        self
+    }
+
+    /// Margins `z = Mx`.
+    pub fn margins(&self, x: &[f64], z: &mut [f64]) {
+        self.m.matvec(x, z);
+    }
+
+    pub fn samples(&self) -> usize {
+        self.m.rows()
+    }
+
+    pub fn c(&self) -> f64 {
+        self.c
+    }
+}
+
+impl<M: MatVec> CompositeProblem for SparseLogReg<M> {
+    fn n(&self) -> usize {
+        self.m.cols()
+    }
+
+    fn layout(&self) -> &BlockLayout {
+        &self.layout
+    }
+
+    fn smooth(&self, x: &[f64]) -> f64 {
+        let mut z = vec![0.0; self.m.rows()];
+        self.m.matvec(x, &mut z);
+        z.iter().map(|&zi| log1p_exp_neg(zi)).sum()
+    }
+
+    fn reg(&self, x: &[f64]) -> f64 {
+        self.c * ops::nrm1(x)
+    }
+
+    /// `∇F = Mᵀ w`, `wⱼ = −σ(−zⱼ)`.
+    fn grad_smooth(&self, x: &[f64], g: &mut [f64]) {
+        let mut z = vec![0.0; self.m.rows()];
+        self.m.matvec(x, &mut z);
+        for zi in z.iter_mut() {
+            *zi = -sigmoid(-*zi);
+        }
+        self.m.matvec_t(&z, g);
+    }
+
+    /// One margin pass yields both `∇F` and `F` (hot-path fusion).
+    fn grad_and_smooth(&self, x: &[f64], g: &mut [f64]) -> f64 {
+        let mut z = vec![0.0; self.m.rows()];
+        self.m.matvec(x, &mut z);
+        let mut f = 0.0;
+        for zi in z.iter_mut() {
+            f += log1p_exp_neg(*zi);
+            *zi = -sigmoid(-*zi);
+        }
+        self.m.matvec_t(&z, g);
+        f
+    }
+
+    /// Upper bound on the Hessian diagonal: `‖M_j‖²/4`.
+    fn curvature(&self, _x: &[f64], d: &mut [f64]) {
+        for (o, &s) in d.iter_mut().zip(&self.col_sq) {
+            *o = s / 4.0;
+        }
+    }
+
+    fn lipschitz_grad(&self) -> f64 {
+        *self
+            .lambda_max
+            .get_or_init(|| 0.25 * power::lambda_max_gram(&self.m, 1e-9, 500, 0x11C).lambda_max)
+    }
+
+    fn prox_block(&self, _i: usize, v: &[f64], t: f64, out: &mut [f64]) {
+        let thr = t * self.c;
+        for (o, &vi) in out.iter_mut().zip(v) {
+            *o = ops::soft_threshold(vi, thr);
+        }
+    }
+
+    fn regularizer(&self) -> Regularizer {
+        Regularizer::L1 { c: self.c }
+    }
+
+    fn curvature_trace(&self) -> f64 {
+        self.trace
+    }
+
+    fn opt_value(&self) -> Option<f64> {
+        self.opt
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::prng::Xoshiro256pp;
+
+    #[test]
+    fn stable_scalar_functions() {
+        assert!((log1p_exp_neg(0.0) - 2f64.ln()).abs() < 1e-12);
+        // Large positive: ~0; large negative: ~ -z.
+        assert!(log1p_exp_neg(800.0) < 1e-300);
+        assert!((log1p_exp_neg(-800.0) - 800.0).abs() < 1e-9);
+        assert!((sigmoid(0.0) - 0.5).abs() < 1e-12);
+        assert!(sigmoid(800.0) <= 1.0);
+        assert!(sigmoid(-800.0) >= 0.0);
+        assert!((sigmoid(2.0) + sigmoid(-2.0) - 1.0).abs() < 1e-12);
+    }
+
+    fn problem() -> SparseLogReg {
+        let mut rng = Xoshiro256pp::seed_from_u64(31);
+        let mut m = DenseMatrix::randn(15, 8, &mut rng);
+        // Scale rows by random labels.
+        for j in 0..8 {
+            for i in 0..15 {
+                if i % 3 == 0 {
+                    m.set(i, j, -m.get(i, j));
+                }
+            }
+        }
+        SparseLogReg::new(m, 0.3)
+    }
+
+    #[test]
+    fn objective_positive_and_decreasing_along_gradient() {
+        let p = problem();
+        let x = vec![0.0; 8];
+        let f0 = p.smooth(&x);
+        assert!((f0 - 15.0 * 2f64.ln()).abs() < 1e-9, "F(0) = m log 2");
+        let mut g = vec![0.0; 8];
+        p.grad_smooth(&x, &mut g);
+        // Small gradient step decreases F.
+        let step = 1e-3;
+        let x1: Vec<f64> = x.iter().zip(&g).map(|(xi, gi)| xi - step * gi).collect();
+        assert!(p.smooth(&x1) < f0);
+    }
+
+    #[test]
+    fn gradient_matches_finite_difference() {
+        let p = problem();
+        let mut rng = Xoshiro256pp::seed_from_u64(32);
+        let mut x = vec![0.0; 8];
+        rng.fill_normal(&mut x);
+        let mut g = vec![0.0; 8];
+        p.grad_smooth(&x, &mut g);
+        let h = 1e-6;
+        for j in 0..8 {
+            let mut xp = x.clone();
+            xp[j] += h;
+            let mut xm = x.clone();
+            xm[j] -= h;
+            let fd = (p.smooth(&xp) - p.smooth(&xm)) / (2.0 * h);
+            assert!((fd - g[j]).abs() < 1e-5, "coord {j}: {fd} vs {}", g[j]);
+        }
+    }
+
+    #[test]
+    fn curvature_upper_bounds_fd_hessian_diag() {
+        let p = problem();
+        let x = vec![0.1; 8];
+        let mut d = vec![0.0; 8];
+        p.curvature(&x, &mut d);
+        let h = 1e-4;
+        let mut g_p = vec![0.0; 8];
+        let mut g_m = vec![0.0; 8];
+        for j in 0..8 {
+            let mut xp = x.clone();
+            xp[j] += h;
+            let mut xm = x.clone();
+            xm[j] -= h;
+            p.grad_smooth(&xp, &mut g_p);
+            p.grad_smooth(&xm, &mut g_m);
+            let hjj = (g_p[j] - g_m[j]) / (2.0 * h);
+            assert!(hjj <= d[j] + 1e-6, "coord {j}: H_jj {hjj} > bound {}", d[j]);
+            assert!(hjj >= 0.0, "convexity");
+        }
+        assert!(!p.is_quadratic());
+    }
+}

@@ -1,0 +1,270 @@
+//! Composite problems `min V(x) = F(x) + G(x)` (paper eq. (1)).
+//!
+//! `F` is smooth (not necessarily convex), `G(x) = Σᵢ gᵢ(xᵢ)` is
+//! block-separable convex, and the feasible set is a Cartesian product of
+//! per-block sets (here `X = Rⁿ`, the setting of every experiment in the
+//! paper). The four instances the paper lists are implemented:
+//!
+//! * [`lasso::Lasso`] — `F = ‖Ax−b‖²`, `G = c‖x‖₁` (the evaluation workload),
+//! * [`group_lasso::GroupLasso`] — `G = c·Σᵢ‖xᵢ‖₂` over blocks,
+//! * [`logreg::SparseLogReg`] — logistic loss + `c‖x‖₁`,
+//! * [`svm::L1L2Svm`] — squared hinge loss + `c‖x‖₁`.
+
+pub mod group_lasso;
+pub mod lasso;
+pub mod logreg;
+pub mod svm;
+
+use crate::linalg::ops;
+
+/// Partition of the variable vector `0..n` into `N` contiguous blocks
+/// (the paper's `x = (x₁, …, x_N)`).
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct BlockLayout {
+    /// `offsets[i]..offsets[i+1]` is block `i`; length `N + 1`.
+    offsets: Vec<usize>,
+}
+
+impl BlockLayout {
+    /// Uniform blocks of `block_size` variables (last block may be short).
+    pub fn uniform(n: usize, block_size: usize) -> Self {
+        assert!(block_size >= 1, "block_size must be >= 1");
+        assert!(n >= 1, "empty layout");
+        let mut offsets = Vec::with_capacity(n / block_size + 2);
+        let mut o = 0;
+        while o < n {
+            offsets.push(o);
+            o += block_size;
+        }
+        offsets.push(n);
+        Self { offsets }
+    }
+
+    /// Scalar blocks (`nᵢ = 1`), the paper's Lasso setting.
+    pub fn scalar(n: usize) -> Self {
+        Self::uniform(n, 1)
+    }
+
+    /// Arbitrary block sizes.
+    pub fn from_sizes(sizes: &[usize]) -> Self {
+        assert!(!sizes.is_empty(), "at least one block");
+        let mut offsets = Vec::with_capacity(sizes.len() + 1);
+        let mut o = 0;
+        offsets.push(0);
+        for &s in sizes {
+            assert!(s >= 1, "empty block");
+            o += s;
+            offsets.push(o);
+        }
+        Self { offsets }
+    }
+
+    /// Number of blocks `N`.
+    #[inline]
+    pub fn num_blocks(&self) -> usize {
+        self.offsets.len() - 1
+    }
+
+    /// Total number of variables `n`.
+    #[inline]
+    pub fn dim(&self) -> usize {
+        *self.offsets.last().unwrap()
+    }
+
+    /// Index range of block `i`.
+    #[inline]
+    pub fn range(&self, i: usize) -> std::ops::Range<usize> {
+        self.offsets[i]..self.offsets[i + 1]
+    }
+
+    /// Length of block `i`.
+    #[inline]
+    pub fn len(&self, i: usize) -> usize {
+        self.offsets[i + 1] - self.offsets[i]
+    }
+
+    /// Block containing variable `j`.
+    pub fn block_of(&self, j: usize) -> usize {
+        debug_assert!(j < self.dim());
+        match self.offsets.binary_search(&j) {
+            Ok(i) if i == self.num_blocks() => i - 1,
+            Ok(i) => i,
+            Err(i) => i - 1,
+        }
+    }
+
+    /// True if every block is a single variable.
+    pub fn is_scalar(&self) -> bool {
+        self.dim() == self.num_blocks()
+    }
+}
+
+/// The block-separable regularizers used by the paper's instances.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum Regularizer {
+    /// `gᵢ(xᵢ) = c·‖xᵢ‖₁` (Lasso, sparse logistic regression, ℓ₁-SVM).
+    L1 { c: f64 },
+    /// `gᵢ(xᵢ) = c·‖xᵢ‖₂` (group Lasso).
+    GroupL2 { c: f64 },
+}
+
+impl Regularizer {
+    /// Regularizer value over the whole vector given a layout.
+    pub fn value(&self, x: &[f64], layout: &BlockLayout) -> f64 {
+        match *self {
+            Regularizer::L1 { c } => c * ops::nrm1(x),
+            Regularizer::GroupL2 { c } => {
+                let mut s = 0.0;
+                for i in 0..layout.num_blocks() {
+                    s += ops::nrm2(&x[layout.range(i)]);
+                }
+                c * s
+            }
+        }
+    }
+
+    /// Block proximal operator: `argmin_z ½‖z−v‖² + t·gᵢ(z)` into `out`.
+    pub fn prox_block(&self, v: &[f64], t: f64, out: &mut [f64]) {
+        match *self {
+            Regularizer::L1 { c } => {
+                let thr = t * c;
+                for (o, &vi) in out.iter_mut().zip(v) {
+                    *o = ops::soft_threshold(vi, thr);
+                }
+            }
+            Regularizer::GroupL2 { c } => ops::group_soft_threshold(v, t * c, out),
+        }
+    }
+
+    /// The weight `c`.
+    pub fn weight(&self) -> f64 {
+        match *self {
+            Regularizer::L1 { c } | Regularizer::GroupL2 { c } => c,
+        }
+    }
+}
+
+/// A composite optimization problem (paper eq. (1)) over `X = Rⁿ`.
+///
+/// The interface exposes exactly what the algorithmic framework needs:
+/// objective pieces, the full gradient of `F` (Algorithm 1 computes all
+/// block best-responses each iteration, so the full gradient is the
+/// natural unit of work), per-coordinate surrogate curvatures for the `Pᵢ`
+/// choices, and the block prox of `G`.
+pub trait CompositeProblem: Sync {
+    /// Number of variables.
+    fn n(&self) -> usize;
+    /// Block partition.
+    fn layout(&self) -> &BlockLayout;
+    /// Smooth part `F(x)`.
+    fn smooth(&self, x: &[f64]) -> f64;
+    /// Nonsmooth part `G(x)`.
+    fn reg(&self, x: &[f64]) -> f64;
+    /// `V(x) = F(x) + G(x)`.
+    fn objective(&self, x: &[f64]) -> f64 {
+        self.smooth(x) + self.reg(x)
+    }
+    /// Full gradient `∇F(x)` into `g`.
+    fn grad_smooth(&self, x: &[f64], g: &mut [f64]);
+    /// Fused `∇F(x)` + `F(x)` — one residual/margin pass instead of two
+    /// (the hot-path entry point; overridden by every concrete problem).
+    fn grad_and_smooth(&self, x: &[f64], g: &mut [f64]) -> f64 {
+        self.grad_smooth(x, g);
+        self.smooth(x)
+    }
+    /// Per-coordinate surrogate curvature `d_j` at `x` — the diagonal
+    /// second-order model used by the "exact"/Newton-flavoured `Pᵢ`
+    /// (for quadratic `F` this makes the scalar-block best-response exact,
+    /// paper eq. (6)).
+    fn curvature(&self, x: &[f64], d: &mut [f64]);
+    /// Gradient Lipschitz constant `L_F` (FISTA/ISTA step size).
+    fn lipschitz_grad(&self) -> f64;
+    /// Block prox: `argmin_z ½‖z−v‖² + t·gᵢ(z)`.
+    fn prox_block(&self, i: usize, v: &[f64], t: f64, out: &mut [f64]);
+    /// The regularizer (weight + shape).
+    fn regularizer(&self) -> Regularizer;
+    /// `tr(AᵀA)`-style curvature trace for the paper's τ initialization
+    /// (`τᵢ = tr(AᵀA)/2n` for Lasso).
+    fn curvature_trace(&self) -> f64;
+    /// True if `F` is quadratic, so the diagonal model with `d_j` is the
+    /// exact scalar-block best-response.
+    fn is_quadratic(&self) -> bool {
+        false
+    }
+    /// Known optimal value `V*` for planted instances (drives the
+    /// relative-error metric of Fig. 1).
+    fn opt_value(&self) -> Option<f64> {
+        None
+    }
+}
+
+/// Extension trait for `F(x) = ‖Ax − b‖²` problems: exposes the residual
+/// structure the sequential baselines (Gauss–Seidel, ADMM) exploit for
+/// `O(m)` single-coordinate updates.
+pub trait LeastSquares: CompositeProblem {
+    /// `r = Ax − b` into `r`.
+    fn residual(&self, x: &[f64], r: &mut [f64]);
+    /// Right-hand side `b`.
+    fn rhs(&self) -> &[f64];
+    /// Rows of `A` / length of the residual.
+    fn rows(&self) -> usize;
+    /// `A_jᵀ v` for a single column.
+    fn col_dot(&self, j: usize, v: &[f64]) -> f64;
+    /// `r += alpha · A_j`.
+    fn col_axpy(&self, j: usize, alpha: f64, r: &mut [f64]);
+    /// `‖A_j‖²` per column (precomputed).
+    fn col_sq_norms(&self) -> &[f64];
+    /// `y = A v`.
+    fn apply(&self, v: &[f64], y: &mut [f64]);
+    /// `y = Aᵀ v`.
+    fn apply_t(&self, v: &[f64], y: &mut [f64]);
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn layout_uniform_and_scalar() {
+        let l = BlockLayout::uniform(10, 3);
+        assert_eq!(l.num_blocks(), 4);
+        assert_eq!(l.dim(), 10);
+        assert_eq!(l.range(0), 0..3);
+        assert_eq!(l.range(3), 9..10);
+        assert_eq!(l.len(3), 1);
+        assert!(!l.is_scalar());
+        let s = BlockLayout::scalar(5);
+        assert_eq!(s.num_blocks(), 5);
+        assert!(s.is_scalar());
+    }
+
+    #[test]
+    fn layout_block_of() {
+        let l = BlockLayout::from_sizes(&[2, 3, 1]);
+        assert_eq!(l.dim(), 6);
+        let blocks: Vec<usize> = (0..6).map(|j| l.block_of(j)).collect();
+        assert_eq!(blocks, vec![0, 0, 1, 1, 1, 2]);
+    }
+
+    #[test]
+    fn l1_regularizer_value_and_prox() {
+        let l = BlockLayout::scalar(3);
+        let r = Regularizer::L1 { c: 2.0 };
+        assert_eq!(r.value(&[1.0, -2.0, 0.5], &l), 7.0);
+        let mut out = vec![0.0];
+        r.prox_block(&[3.0], 0.5, &mut out); // threshold 1.0
+        assert_eq!(out, vec![2.0]);
+        assert_eq!(r.weight(), 2.0);
+    }
+
+    #[test]
+    fn group_regularizer_value_and_prox() {
+        let l = BlockLayout::uniform(4, 2);
+        let r = Regularizer::GroupL2 { c: 1.0 };
+        // blocks [3,4] (norm 5) and [0,0] (norm 0)
+        assert_eq!(r.value(&[3.0, 4.0, 0.0, 0.0], &l), 5.0);
+        let mut out = vec![0.0; 2];
+        r.prox_block(&[3.0, 4.0], 2.5, &mut out);
+        assert!((ops::nrm2(&out) - 2.5).abs() < 1e-12);
+    }
+}

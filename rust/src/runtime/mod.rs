@@ -1,0 +1,31 @@
+//! PJRT runtime: loads AOT-compiled JAX/Pallas artifacts and executes them
+//! from the Rust hot path.
+//!
+//! The interchange format is **HLO text** (`artifacts/*.hlo.txt`) — the
+//! image's xla_extension 0.5.1 rejects jax ≥ 0.5 serialized protos
+//! (64-bit instruction ids), while the text parser reassigns ids and
+//! round-trips cleanly (see `/opt/xla-example/README.md`).
+//!
+//! * [`engine::Engine`] — PJRT CPU client + compiled-executable cache.
+//! * [`registry::Manifest`] — the artifact manifest written by
+//!   `python/compile/aot.py` (name → file → shapes).
+//! * [`fpa_xla::XlaFpaLasso`] — the L2 FPA iteration graph executed via
+//!   PJRT with a device-resident design matrix (the `--backend xla`
+//!   solve path).
+
+pub mod engine;
+pub mod fpa_xla;
+pub mod registry;
+
+pub use engine::Engine;
+pub use fpa_xla::XlaFpaLasso;
+pub use registry::{ArtifactEntry, Manifest};
+
+/// Default artifact directory (relative to the repo root).
+pub const DEFAULT_ARTIFACT_DIR: &str = "artifacts";
+
+/// True if the artifact directory exists and contains a manifest —
+/// used by integration tests to skip gracefully before `make artifacts`.
+pub fn artifacts_available(dir: &str) -> bool {
+    std::path::Path::new(dir).join("manifest.txt").exists()
+}

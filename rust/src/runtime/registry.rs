@@ -1,0 +1,145 @@
+//! Artifact manifest: the contract between `python/compile/aot.py` (which
+//! writes it) and the Rust runtime (which loads it).
+//!
+//! Format — one artifact per line:
+//!
+//! ```text
+//! <name> <file> rows=<m> cols=<n> dtype=<f32|f64>
+//! ```
+//!
+//! `name` encodes the graph + shape class, e.g. `fpa_lasso_step.200x1000`.
+
+use anyhow::{bail, Context, Result};
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+
+/// One artifact's metadata.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct ArtifactEntry {
+    pub name: String,
+    pub file: PathBuf,
+    pub rows: usize,
+    pub cols: usize,
+    pub dtype: String,
+}
+
+/// The parsed manifest.
+#[derive(Clone, Debug, Default)]
+pub struct Manifest {
+    entries: BTreeMap<String, ArtifactEntry>,
+    dir: PathBuf,
+}
+
+impl Manifest {
+    /// Load `dir/manifest.txt`.
+    pub fn load(dir: &str) -> Result<Self> {
+        let dir_path = PathBuf::from(dir);
+        let path = dir_path.join("manifest.txt");
+        let text = std::fs::read_to_string(&path).with_context(|| format!("reading {path:?}"))?;
+        Self::parse(&text, dir_path)
+    }
+
+    /// Parse manifest text (exposed for tests).
+    pub fn parse(text: &str, dir: PathBuf) -> Result<Self> {
+        let mut entries = BTreeMap::new();
+        for (lineno, line) in text.lines().enumerate() {
+            let line = line.trim();
+            if line.is_empty() || line.starts_with('#') {
+                continue;
+            }
+            let mut parts = line.split_whitespace();
+            let name = parts.next().map(str::to_string).unwrap_or_default();
+            let file = parts.next().map(str::to_string).unwrap_or_default();
+            if name.is_empty() || file.is_empty() {
+                bail!("manifest line {}: expected `<name> <file> k=v...`", lineno + 1);
+            }
+            let mut rows = 0;
+            let mut cols = 0;
+            let mut dtype = "f32".to_string();
+            for kv in parts {
+                match kv.split_once('=') {
+                    Some(("rows", v)) => rows = v.parse().context("rows")?,
+                    Some(("cols", v)) => cols = v.parse().context("cols")?,
+                    Some(("dtype", v)) => dtype = v.to_string(),
+                    _ => bail!("manifest line {}: bad key-value `{kv}`", lineno + 1),
+                }
+            }
+            let entry =
+                ArtifactEntry { name: name.clone(), file: dir.join(&file), rows, cols, dtype };
+            if entries.insert(name.clone(), entry).is_some() {
+                bail!("manifest: duplicate artifact `{name}`");
+            }
+        }
+        Ok(Self { entries, dir })
+    }
+
+    /// Look up an artifact by exact name.
+    pub fn get(&self, name: &str) -> Option<&ArtifactEntry> {
+        self.entries.get(name)
+    }
+
+    /// Find an artifact for graph `graph` with the given shape.
+    pub fn find_shape(&self, graph: &str, rows: usize, cols: usize) -> Option<&ArtifactEntry> {
+        self.entries.get(&format!("{graph}.{rows}x{cols}"))
+    }
+
+    /// All entries for a graph prefix.
+    pub fn variants(&self, graph: &str) -> Vec<&ArtifactEntry> {
+        let prefix = format!("{graph}.");
+        self.entries.values().filter(|e| e.name.starts_with(&prefix)).collect()
+    }
+
+    pub fn len(&self) -> usize {
+        self.entries.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.entries.is_empty()
+    }
+
+    pub fn dir(&self) -> &Path {
+        &self.dir
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = "\
+# artifacts built by aot.py
+fpa_lasso_step.200x1000 fpa_lasso_step.200x1000.hlo.txt rows=200 cols=1000 dtype=f32
+objective.200x1000 objective.200x1000.hlo.txt rows=200 cols=1000 dtype=f32
+fpa_lasso_step.100x400 fpa_lasso_step.100x400.hlo.txt rows=100 cols=400 dtype=f32
+";
+
+    #[test]
+    fn parses_and_indexes() {
+        let m = Manifest::parse(SAMPLE, PathBuf::from("artifacts")).unwrap();
+        assert_eq!(m.len(), 3);
+        let e = m.get("objective.200x1000").unwrap();
+        assert_eq!(e.rows, 200);
+        assert_eq!(e.cols, 1000);
+        assert_eq!(e.dtype, "f32");
+        assert_eq!(e.file, PathBuf::from("artifacts/objective.200x1000.hlo.txt"));
+        let f = m.find_shape("fpa_lasso_step", 100, 400).unwrap();
+        assert_eq!(f.name, "fpa_lasso_step.100x400");
+        assert!(m.find_shape("fpa_lasso_step", 1, 1).is_none());
+        assert_eq!(m.variants("fpa_lasso_step").len(), 2);
+    }
+
+    #[test]
+    fn rejects_malformed() {
+        assert!(Manifest::parse("justonename", PathBuf::new()).is_err());
+        assert!(Manifest::parse("a b badkv", PathBuf::new()).is_err());
+        assert!(Manifest::parse("a f rows=x", PathBuf::new()).is_err());
+        let dup = "a f rows=1 cols=1\na f rows=1 cols=1";
+        assert!(Manifest::parse(dup, PathBuf::new()).is_err());
+    }
+
+    #[test]
+    fn comments_and_blanks_ignored() {
+        let m = Manifest::parse("\n# hi\n\n", PathBuf::new()).unwrap();
+        assert!(m.is_empty());
+    }
+}

@@ -1,0 +1,240 @@
+//! Block-selection rules (Algorithm 1, step S.3).
+//!
+//! Theorem 1 requires only that the updated set `Sᵏ` contain at least one
+//! block with `Eᵢ(xᵏ) ≥ ρ·maxⱼ Eⱼ(xᵏ)`. The rules here are the ones the
+//! paper discusses plus the natural top-P variant used by GRock-style
+//! methods:
+//!
+//! * [`SelectionRule::FullJacobi`] — `Sᵏ = N` (update everything; no `Eᵢ`
+//!   computation needed),
+//! * [`SelectionRule::GreedyRho`] — all blocks with `Eᵢ ≥ ρ·M` (the
+//!   paper's experiments use this with ρ = 0.5),
+//! * [`SelectionRule::GaussSouthwell`] — only the maximizing block,
+//! * [`SelectionRule::TopP`] — the `P` largest blocks by `Eᵢ`,
+//! * [`SelectionRule::Cyclic`] — round-robin block batches (always
+//!   includes the maximizer to satisfy the theorem's condition),
+//! * [`SelectionRule::Random`] — a random subset plus the maximizer.
+
+use crate::prng::Xoshiro256pp;
+
+/// A block-selection rule.
+#[derive(Clone, Debug, PartialEq)]
+pub enum SelectionRule {
+    /// Update every block.
+    FullJacobi,
+    /// Update blocks within factor `rho ∈ (0, 1]` of the max error bound.
+    GreedyRho { rho: f64 },
+    /// Update only the block with the largest error bound.
+    GaussSouthwell,
+    /// Update the `p` blocks with the largest error bounds.
+    TopP { p: usize },
+    /// Round-robin batches of `batch` blocks (+ the maximizer).
+    Cyclic { batch: usize },
+    /// Random subset of `count` blocks (+ the maximizer).
+    Random { count: usize, seed: u64 },
+}
+
+/// Stateful selector (cyclic position / RNG stream).
+#[derive(Clone, Debug)]
+pub struct Selector {
+    rule: SelectionRule,
+    cursor: usize,
+    rng: Option<Xoshiro256pp>,
+}
+
+impl Selector {
+    pub fn new(rule: SelectionRule) -> Self {
+        let rng = match &rule {
+            SelectionRule::Random { seed, .. } => Some(Xoshiro256pp::seed_from_u64(*seed)),
+            _ => None,
+        };
+        Self { rule, cursor: 0, rng }
+    }
+
+    pub fn rule(&self) -> &SelectionRule {
+        &self.rule
+    }
+
+    /// Whether this rule needs the error bounds `Eᵢ` at all (Full Jacobi
+    /// does not — the paper notes `Eᵢ` can then be skipped entirely).
+    pub fn needs_error_bounds(&self) -> bool {
+        !matches!(self.rule, SelectionRule::FullJacobi)
+    }
+
+    /// Compute `Sᵏ` as a boolean mask over blocks given error bounds `e`.
+    ///
+    /// Every rule guarantees the theorem's condition: the returned set
+    /// always contains an index attaining `max_i e[i]`.
+    pub fn select(&mut self, e: &[f64], mask: &mut [bool]) -> usize {
+        assert_eq!(e.len(), mask.len(), "select: length mismatch");
+        let nb = e.len();
+        assert!(nb > 0, "select: no blocks");
+        let argmax = argmax(e);
+        let mut count = 0;
+        match &self.rule {
+            SelectionRule::FullJacobi => {
+                mask.fill(true);
+                count = nb;
+            }
+            SelectionRule::GreedyRho { rho } => {
+                assert!(*rho > 0.0 && *rho <= 1.0, "rho must be in (0, 1]");
+                let threshold = rho * e[argmax];
+                for i in 0..nb {
+                    mask[i] = e[i] >= threshold && e[i] > 0.0;
+                    count += mask[i] as usize;
+                }
+                // Degenerate all-zero E: keep the maximizer so the
+                // iteration is well-defined (it is a fixed point anyway).
+                if count == 0 {
+                    mask[argmax] = true;
+                    count = 1;
+                }
+            }
+            SelectionRule::GaussSouthwell => {
+                mask.fill(false);
+                mask[argmax] = true;
+                count = 1;
+            }
+            SelectionRule::TopP { p } => {
+                let p = (*p).clamp(1, nb);
+                let mut idx: Vec<usize> = (0..nb).collect();
+                idx.sort_unstable_by(|&a, &b| e[b].partial_cmp(&e[a]).unwrap());
+                mask.fill(false);
+                for &i in idx.iter().take(p) {
+                    mask[i] = true;
+                }
+                count = p;
+            }
+            SelectionRule::Cyclic { batch } => {
+                let batch = (*batch).clamp(1, nb);
+                mask.fill(false);
+                for k in 0..batch {
+                    mask[(self.cursor + k) % nb] = true;
+                }
+                self.cursor = (self.cursor + batch) % nb;
+                if !mask[argmax] {
+                    mask[argmax] = true;
+                }
+                count = mask.iter().filter(|&&b| b).count();
+            }
+            SelectionRule::Random { count: want, .. } => {
+                let want = (*want).clamp(1, nb);
+                let rng = self.rng.as_mut().expect("random selector has rng");
+                mask.fill(false);
+                for i in rng.sample_indices(nb, want) {
+                    mask[i] = true;
+                }
+                if !mask[argmax] {
+                    mask[argmax] = true;
+                }
+                count = mask.iter().filter(|&&b| b).count();
+            }
+        }
+        count
+    }
+}
+
+/// Index of the maximum (first on ties); NaNs are treated as −∞.
+pub fn argmax(e: &[f64]) -> usize {
+    let mut best = 0;
+    let mut best_v = f64::NEG_INFINITY;
+    for (i, &v) in e.iter().enumerate() {
+        if v > best_v {
+            best_v = v;
+            best = i;
+        }
+    }
+    best
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn e() -> Vec<f64> {
+        vec![0.1, 0.9, 0.5, 0.45, 0.0]
+    }
+
+    #[test]
+    fn full_jacobi_selects_all() {
+        let mut s = Selector::new(SelectionRule::FullJacobi);
+        let mut mask = vec![false; 5];
+        assert_eq!(s.select(&e(), &mut mask), 5);
+        assert!(mask.iter().all(|&b| b));
+        assert!(!s.needs_error_bounds());
+    }
+
+    #[test]
+    fn greedy_rho_threshold() {
+        let mut s = Selector::new(SelectionRule::GreedyRho { rho: 0.5 });
+        let mut mask = vec![false; 5];
+        let count = s.select(&e(), &mut mask);
+        // threshold = 0.45: blocks 1, 2, 3.
+        assert_eq!(count, 3);
+        assert_eq!(mask, vec![false, true, true, true, false]);
+        // rho = 1.0 keeps only the max.
+        let mut s1 = Selector::new(SelectionRule::GreedyRho { rho: 1.0 });
+        let count = s1.select(&e(), &mut mask);
+        assert_eq!(count, 1);
+        assert!(mask[1]);
+    }
+
+    #[test]
+    fn greedy_rho_all_zero_errors() {
+        let mut s = Selector::new(SelectionRule::GreedyRho { rho: 0.5 });
+        let mut mask = vec![false; 3];
+        let count = s.select(&[0.0, 0.0, 0.0], &mut mask);
+        assert_eq!(count, 1);
+    }
+
+    #[test]
+    fn gauss_southwell_picks_argmax() {
+        let mut s = Selector::new(SelectionRule::GaussSouthwell);
+        let mut mask = vec![false; 5];
+        assert_eq!(s.select(&e(), &mut mask), 1);
+        assert_eq!(mask, vec![false, true, false, false, false]);
+    }
+
+    #[test]
+    fn top_p_selects_largest() {
+        let mut s = Selector::new(SelectionRule::TopP { p: 2 });
+        let mut mask = vec![false; 5];
+        assert_eq!(s.select(&e(), &mut mask), 2);
+        assert_eq!(mask, vec![false, true, true, false, false]);
+        // p larger than n clamps.
+        let mut s_all = Selector::new(SelectionRule::TopP { p: 99 });
+        assert_eq!(s_all.select(&e(), &mut mask), 5);
+    }
+
+    #[test]
+    fn cyclic_covers_everything_and_keeps_max() {
+        let mut s = Selector::new(SelectionRule::Cyclic { batch: 2 });
+        let mut seen = vec![false; 5];
+        let mut mask = vec![false; 5];
+        for _ in 0..3 {
+            s.select(&e(), &mut mask);
+            assert!(mask[1], "maximizer always included");
+            for i in 0..5 {
+                seen[i] |= mask[i];
+            }
+        }
+        assert!(seen.iter().all(|&b| b), "cyclic must cover all blocks");
+    }
+
+    #[test]
+    fn random_includes_max_and_count() {
+        let mut s = Selector::new(SelectionRule::Random { count: 2, seed: 9 });
+        let mut mask = vec![false; 5];
+        for _ in 0..10 {
+            let count = s.select(&e(), &mut mask);
+            assert!(mask[1]);
+            assert!((2..=3).contains(&count));
+        }
+    }
+
+    #[test]
+    fn argmax_ties_and_nan() {
+        assert_eq!(argmax(&[1.0, 3.0, 3.0]), 1);
+        assert_eq!(argmax(&[f64::NAN, 2.0]), 1);
+    }
+}

@@ -1,0 +1,178 @@
+//! Step-size schedules `γᵏ` (Algorithm 1, step S.4).
+//!
+//! Theorem 1 needs `γᵏ ∈ (0,1]`, `γᵏ → 0`, `Σγᵏ = ∞`, `Σ(γᵏ)² < ∞`.
+//! The paper's experiments use the recursive diminishing rule (eq. (4))
+//! `γᵏ = γᵏ⁻¹(1 − θ·γᵏ⁻¹)` with `γ⁰ = 0.9`, `θ = 1e−5`; a constant rule
+//! and an Armijo line search are also provided (the journal version
+//! proves convergence for suitable variants of both).
+
+/// A step-size schedule.
+#[derive(Clone, Debug, PartialEq)]
+pub enum StepSize {
+    /// Paper eq. (4): `γᵏ = γᵏ⁻¹(1 − θ γᵏ⁻¹)`.
+    Diminishing { gamma0: f64, theta: f64 },
+    /// Fixed step (must be suitably small for convergence).
+    Constant { gamma: f64 },
+    /// Armijo backtracking on V along the direction `ẑ − x` (not in line
+    /// with the parallel philosophy — needs extra objective evaluations —
+    /// but useful as a baseline; see paper's remark after eq. (4)).
+    Armijo { beta: f64, sigma: f64, max_backtracks: usize },
+}
+
+/// Stateful schedule evaluator.
+#[derive(Clone, Debug)]
+pub struct Schedule {
+    rule: StepSize,
+    current: f64,
+    k: usize,
+}
+
+impl Schedule {
+    /// The paper's experimental setting: `γ⁰ = 0.9`, `θ = 1e−5`.
+    pub fn paper_default() -> Self {
+        Self::new(StepSize::Diminishing { gamma0: 0.9, theta: 1e-5 })
+    }
+
+    pub fn new(rule: StepSize) -> Self {
+        let current = match &rule {
+            StepSize::Diminishing { gamma0, theta } => {
+                assert!(*gamma0 > 0.0 && *gamma0 <= 1.0, "gamma0 in (0,1]");
+                assert!(*theta > 0.0 && *theta < 1.0, "theta in (0,1)");
+                *gamma0
+            }
+            StepSize::Constant { gamma } => {
+                assert!(*gamma > 0.0 && *gamma <= 1.0, "gamma in (0,1]");
+                *gamma
+            }
+            StepSize::Armijo { beta, sigma, .. } => {
+                assert!(*beta > 0.0 && *beta < 1.0, "beta in (0,1)");
+                assert!(*sigma > 0.0 && *sigma < 1.0, "sigma in (0,1)");
+                1.0
+            }
+        };
+        Self { rule, current, k: 0 }
+    }
+
+    /// Current γ (the value to use this iteration) for non-line-search
+    /// rules.
+    pub fn gamma(&self) -> f64 {
+        self.current
+    }
+
+    /// Advance to the next iteration's γ.
+    pub fn advance(&mut self) {
+        self.k += 1;
+        if let StepSize::Diminishing { theta, .. } = self.rule {
+            // γᵏ = γᵏ⁻¹ (1 − θ γᵏ⁻¹): positive, strictly decreasing, → 0,
+            // Σγ = ∞, Σγ² < ∞ (paper eq. (4)).
+            self.current *= 1.0 - theta * self.current;
+        }
+    }
+
+    /// Armijo line search: find γ = βᵗ (t = 0, 1, …) with
+    /// `V(x + γ d) ≤ V(x) + σ·γ·Δ`, where `Δ` is the directional model
+    /// decrease (negative). `eval` maps γ to `V(x + γ d)`.
+    ///
+    /// Returns the accepted γ (the smallest trial if none passes).
+    pub fn armijo(&self, v0: f64, delta: f64, mut eval: impl FnMut(f64) -> f64) -> f64 {
+        let (beta, sigma, max_bt) = match self.rule {
+            StepSize::Armijo { beta, sigma, max_backtracks } => (beta, sigma, max_backtracks),
+            _ => panic!("armijo() called on a non-Armijo schedule"),
+        };
+        let mut gamma = 1.0;
+        for _ in 0..max_bt {
+            if eval(gamma) <= v0 + sigma * gamma * delta {
+                return gamma;
+            }
+            gamma *= beta;
+        }
+        gamma
+    }
+
+    pub fn iteration(&self) -> usize {
+        self.k
+    }
+
+    pub fn rule(&self) -> &StepSize {
+        &self.rule
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn diminishing_satisfies_theorem_conditions() {
+        let mut s = Schedule::new(StepSize::Diminishing { gamma0: 0.9, theta: 1e-3 });
+        let mut prev = s.gamma();
+        let mut sum = 0.0;
+        let mut sum_sq = 0.0;
+        for _ in 0..200_000 {
+            let g = s.gamma();
+            assert!(g > 0.0 && g <= 1.0);
+            assert!(g <= prev, "strictly non-increasing");
+            prev = g;
+            sum += g;
+            sum_sq += g * g;
+            s.advance();
+        }
+        // γ → 0 and the partial sums behave like Σγ = ∞, Σγ² < ∞.
+        assert!(s.gamma() < 0.01, "gamma should decay, got {}", s.gamma());
+        assert!(sum > 100.0, "divergent sum expected, got {sum}");
+        assert!(sum_sq < 1000.0, "square-summable expected, got {sum_sq}");
+    }
+
+    #[test]
+    fn paper_default_values() {
+        let s = Schedule::paper_default();
+        assert!((s.gamma() - 0.9).abs() < 1e-15);
+        match s.rule() {
+            StepSize::Diminishing { theta, .. } => assert!((theta - 1e-5).abs() < 1e-18),
+            _ => panic!(),
+        }
+    }
+
+    #[test]
+    fn constant_never_changes() {
+        let mut s = Schedule::new(StepSize::Constant { gamma: 0.3 });
+        for _ in 0..10 {
+            assert_eq!(s.gamma(), 0.3);
+            s.advance();
+        }
+        assert_eq!(s.iteration(), 10);
+    }
+
+    #[test]
+    fn armijo_accepts_sufficient_decrease() {
+        let s = Schedule::new(StepSize::Armijo { beta: 0.5, sigma: 0.1, max_backtracks: 20 });
+        // Quadratic toy: V(γ) = (γ - 0.4)² with V(0) = 0.16, Δ = -0.8·...
+        // Directional derivative at 0 is -0.8.
+        let v0 = 0.16;
+        let delta = -0.8;
+        let gamma = s.armijo(v0, delta, |g| (g - 0.4) * (g - 0.4));
+        // Check the Armijo condition holds at the accepted γ.
+        assert!((gamma - 0.4) * (gamma - 0.4) <= v0 + 0.1 * gamma * delta + 1e-12);
+        assert!(gamma > 0.0 && gamma <= 1.0);
+    }
+
+    #[test]
+    fn armijo_gives_up_gracefully() {
+        let s = Schedule::new(StepSize::Armijo { beta: 0.5, sigma: 0.9, max_backtracks: 3 });
+        // Increasing function: no γ passes; returns smallest trial.
+        let gamma = s.armijo(0.0, -1e-12, |g| 1.0 + g);
+        assert!((gamma - 0.125).abs() < 1e-12);
+    }
+
+    #[test]
+    #[should_panic(expected = "non-Armijo")]
+    fn armijo_on_wrong_rule_panics() {
+        Schedule::paper_default().armijo(0.0, -1.0, |_| 0.0);
+    }
+
+    #[test]
+    #[should_panic]
+    fn invalid_parameters_rejected() {
+        Schedule::new(StepSize::Diminishing { gamma0: 1.5, theta: 1e-5 });
+    }
+}

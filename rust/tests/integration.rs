@@ -1,0 +1,173 @@
+//! Cross-module integration tests: datagen → problems → every solver →
+//! metrics, plus the threaded coordinator and the config/CLI plumbing.
+
+use flexa::algos::admm::Admm;
+use flexa::algos::fista::Fista;
+use flexa::algos::fpa::{Fpa, FpaOptions};
+use flexa::algos::gauss_seidel::GaussSeidel;
+use flexa::algos::grock::Grock;
+use flexa::algos::{SolveOptions, Solver};
+use flexa::config::ExperimentConfig;
+use flexa::coordinator::{CostModel, ParallelFpa};
+use flexa::datagen::NesterovLasso;
+use flexa::linalg::ops;
+use flexa::metrics::{read_series_csv, write_trace_csv};
+use flexa::problems::lasso::Lasso;
+use flexa::problems::CompositeProblem;
+use flexa::select::SelectionRule;
+
+fn planted(m: usize, n: usize, sp: f64, seed: u64) -> Lasso {
+    let inst = NesterovLasso::new(m, n, sp, 1.0).seed(seed).generate();
+    let v = inst.v_star;
+    Lasso::new(inst.a, inst.b, inst.c).with_opt_value(v)
+}
+
+/// Every solver reaches at least a modest accuracy on the same planted
+/// instance, and all agree on the final objective within tolerance.
+#[test]
+fn all_solvers_agree_on_planted_instance() {
+    let p = planted(60, 200, 0.1, 301);
+    let opts = SolveOptions::default().with_max_iters(6000).with_target(1e-5);
+
+    let fpa = Fpa::paper_defaults(&p).solve(&p, &opts);
+    let fista = Fista::default().solve(&p, &opts);
+    let gs = GaussSeidel::default().solve(&p, &opts);
+    let admm = Admm::default().solve(&p, &opts);
+    let grock1 = Grock::new(1).solve(&p, &opts);
+
+    for (name, r) in [
+        ("fpa", &fpa),
+        ("fista", &fista),
+        ("gs", &gs),
+        ("admm", &admm),
+        ("grock1", &grock1),
+    ] {
+        assert!(
+            r.trace.best_rel_err() < 1e-3,
+            "{name}: best rel err {:.3e}",
+            r.trace.best_rel_err()
+        );
+    }
+    // Objectives agree to the loosest solver tolerance.
+    let v = p.opt_value().unwrap();
+    for r in [&fpa, &fista, &gs, &admm, &grock1] {
+        assert!((r.objective - v).abs() / v < 2e-3);
+    }
+}
+
+/// The solutions (not just values) agree: Lasso here has a unique
+/// minimizer with high probability.
+#[test]
+fn solutions_coincide_across_methods() {
+    let p = planted(50, 150, 0.08, 302);
+    let opts = SolveOptions::default().with_max_iters(20000).with_target(1e-9);
+    let x_fpa = Fpa::paper_defaults(&p).solve(&p, &opts).x;
+    let x_gs = GaussSeidel::default().solve(&p, &opts).x;
+    let d = ops::dist2(&x_fpa, &x_gs) / ops::nrm2(&x_gs).max(1.0);
+    assert!(d < 1e-3, "FPA and GS solutions differ by {d}");
+}
+
+/// Threaded coordinator matches the serial solver and respects the cost
+/// model.
+#[test]
+fn coordinator_end_to_end() {
+    let p = planted(40, 120, 0.1, 303);
+    let opts = SolveOptions::default()
+        .with_max_iters(500)
+        .with_target(1e-5)
+        .with_cost_model(CostModel::mpi_node(16));
+    let serial = Fpa::paper_defaults(&p).solve(&p, &opts);
+    let par = ParallelFpa::paper_defaults(3).solve(&p, &opts);
+    assert_eq!(serial.iterations, par.iterations);
+    assert!(ops::dist2(&serial.x, &par.x) < 1e-8);
+    // Simulated clock populated and positive.
+    let last = par.trace.last().unwrap();
+    assert!(last.sim_time_s > 0.0);
+}
+
+/// Traces round-trip through CSV and time_to_rel_err is monotone in the
+/// target.
+#[test]
+fn metrics_roundtrip_and_monotonicity() {
+    let p = planted(40, 120, 0.1, 304);
+    let report = Fpa::paper_defaults(&p)
+        .solve(&p, &SolveOptions::default().with_max_iters(2000).with_target(1e-6));
+    let dir = std::env::temp_dir().join("flexa_integration");
+    let path = dir.join("fpa.csv");
+    write_trace_csv(&path, &report.trace).unwrap();
+    let back = read_series_csv(&path).unwrap();
+    assert_eq!(back.records.len(), report.trace.records.len());
+    let t3 = back.time_to_rel_err(1e-3, false);
+    let t5 = back.time_to_rel_err(1e-5, false);
+    if let (Some(a), Some(b)) = (t3, t5) {
+        assert!(a <= b, "tighter target cannot be reached earlier");
+    }
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+/// Experiment configs drive solver construction end-to-end.
+#[test]
+fn config_to_solver_pipeline() {
+    let cfg = ExperimentConfig::from_toml(
+        r#"
+        name = "itest"
+        seed = 99
+        algos = ["fpa"]
+        [problem]
+        rows = 40
+        cols = 120
+        sparsity = 0.1
+        c = 1.0
+        [algo.fpa]
+        rho = 0.7
+        "#,
+    )
+    .unwrap();
+    let gen = NesterovLasso::new(cfg.problem.rows, cfg.problem.cols, cfg.problem.sparsity, cfg.problem.c)
+        .seed(cfg.seed);
+    let inst = gen.generate();
+    let p = Lasso::new(inst.a, inst.b, inst.c).with_opt_value(inst.v_star);
+    let rho = cfg.algos[0].get_or("rho", 0.5);
+    let mut solver = Fpa::new(FpaOptions {
+        selection: SelectionRule::GreedyRho { rho },
+        ..FpaOptions::default()
+    });
+    let report = solver.solve(&p, &SolveOptions::default().with_max_iters(2000));
+    assert!(report.trace.best_rel_err() < 1e-3);
+}
+
+/// GRock's guard fires on dense problems with large P (the failure mode
+/// the paper predicts), while FPA keeps making progress.
+#[test]
+fn grock_unstable_where_fpa_is_stable() {
+    // Dense solution: correlated active set.
+    let p = planted(40, 100, 0.5, 305);
+    let opts = SolveOptions::default().with_max_iters(3000).with_target(1e-5);
+    let grock = Grock::new(32).solve(&p, &opts);
+    let fpa = Fpa::paper_defaults(&p).solve(&p, &opts);
+    assert!(
+        fpa.trace.best_rel_err() < grock.trace.best_rel_err() * 1.01,
+        "fpa {:.3e} vs grock {:.3e}",
+        fpa.trace.best_rel_err(),
+        grock.trace.best_rel_err()
+    );
+}
+
+/// Larger planted instances: sanity-check the medium-scale path used by
+/// the figure regenerators (kept small enough for CI).
+#[test]
+fn medium_scale_smoke() {
+    let p = planted(300, 1500, 0.1, 306);
+    let opts = SolveOptions {
+        max_iters: 1500,
+        max_seconds: 60.0,
+        target_rel_err: 1e-4,
+        ..Default::default()
+    };
+    let fpa = Fpa::paper_defaults(&p).solve(&p, &opts);
+    assert!(
+        fpa.trace.best_rel_err() < 1e-3,
+        "best {:.3e}",
+        fpa.trace.best_rel_err()
+    );
+}

@@ -1,0 +1,223 @@
+//! Property-based tests (via the in-crate mini-proptest substrate) over
+//! solver/coordinator invariants: selection correctness, best-response
+//! optimality, fixed-point characterization, sharding, generators.
+
+use flexa::coordinator::ShardPlan;
+use flexa::datagen::NesterovLasso;
+use flexa::linalg::{ops, DenseMatrix, MatVec};
+use flexa::problems::lasso::Lasso;
+use flexa::problems::{BlockLayout, CompositeProblem};
+use flexa::proptest::{assert_close, run_prop, CaseResult, PropConfig};
+use flexa::select::{SelectionRule, Selector};
+
+/// S.3 invariant (Theorem 1's condition): every selection rule returns a
+/// set containing at least one index with E_i >= rho * max E (rho = 1 for
+/// the max itself).
+#[test]
+fn prop_selection_contains_near_max_block() {
+    run_prop("selection-near-max", PropConfig::default(), |rng, size| {
+        let nb = 1 + rng.next_below(8 * size as u64 + 4) as usize;
+        let mut e = vec![0.0; nb];
+        rng.fill_uniform(&mut e, 0.0, 1.0);
+        let rules = [
+            SelectionRule::FullJacobi,
+            SelectionRule::GreedyRho { rho: 0.5 },
+            SelectionRule::GreedyRho { rho: 1.0 },
+            SelectionRule::GaussSouthwell,
+            SelectionRule::TopP { p: 1 + rng.next_below(nb as u64) as usize },
+            SelectionRule::Cyclic { batch: 1 + rng.next_below(nb as u64) as usize },
+            SelectionRule::Random { count: 1 + rng.next_below(nb as u64) as usize, seed: rng.next_u64() },
+        ];
+        let max_e = e.iter().cloned().fold(0.0, f64::max);
+        for rule in rules {
+            let mut sel = Selector::new(rule.clone());
+            let mut mask = vec![false; nb];
+            let count = sel.select(&e, &mut mask);
+            if count == 0 || !mask.iter().any(|&b| b) {
+                return CaseResult::Fail(format!("{rule:?}: empty selection"));
+            }
+            if count != mask.iter().filter(|&&b| b).count() {
+                return CaseResult::Fail(format!("{rule:?}: count mismatch"));
+            }
+            // Theorem condition with rho = 1 (max included) or the rule's rho.
+            let has_near_max = mask
+                .iter()
+                .enumerate()
+                .any(|(i, &b)| b && e[i] >= 0.5 * max_e);
+            if !has_near_max && max_e > 0.0 {
+                return CaseResult::Fail(format!("{rule:?}: no near-max block selected"));
+            }
+        }
+        CaseResult::Pass
+    });
+}
+
+/// The scalar best-response is the exact minimizer of the block
+/// surrogate h̃ (paper eq. (2)): random perturbations never improve it.
+#[test]
+fn prop_best_response_minimizes_surrogate() {
+    run_prop("br-optimality", PropConfig::default(), |rng, size| {
+        let (x, g) = (rng.normal(0.0, 2.0), rng.normal(0.0, 5.0));
+        let d = 0.1 + rng.next_f64() * 10.0 * size as f64;
+        let tau = 0.1 + rng.next_f64() * 5.0;
+        let c = 0.05 + rng.next_f64() * 3.0;
+        let denom = d + tau;
+        let z = ops::soft_threshold(x - g / denom, c / denom);
+        // Surrogate: g*(z-x) + (d+tau)/2 (z-x)^2 + c|z|.
+        let h = |z: f64| g * (z - x) + 0.5 * denom * (z - x) * (z - x) + c * z.abs();
+        let base = h(z);
+        for _ in 0..20 {
+            let dz = rng.normal(0.0, 0.5);
+            if h(z + dz) < base - 1e-10 {
+                return CaseResult::Fail(format!(
+                    "perturbation improved surrogate: h({})={} < h({z})={base}",
+                    z + dz,
+                    h(z + dz)
+                ));
+            }
+        }
+        CaseResult::Pass
+    });
+}
+
+/// Fixed points of the best-response map are exactly the KKT points
+/// (Prop. 3(b)): on planted instances, x* is a fixed point for any tau.
+#[test]
+fn prop_planted_solution_is_fixed_point() {
+    run_prop("xstar-fixed-point", PropConfig { cases: 16, seed: 0xF1E7A }, |rng, size| {
+        let m = 10 + 3 * size;
+        let n = 3 * m;
+        let inst = NesterovLasso::new(m, n, 0.1, 0.5 + rng.next_f64()).seed(rng.next_u64()).generate();
+        let p = Lasso::new(inst.a, inst.b, inst.c);
+        let tau = 0.5 + rng.next_f64() * 10.0;
+        let mut g = vec![0.0; n];
+        p.grad_smooth(&inst.x_star, &mut g);
+        let mut d = vec![0.0; n];
+        p.curvature(&inst.x_star, &mut d);
+        let mut z = vec![0.0; n];
+        for j in 0..n {
+            let denom = d[j] + tau;
+            z[j] = ops::soft_threshold(inst.x_star[j] - g[j] / denom, inst.c / denom);
+        }
+        assert_close(&z, &inst.x_star, 1e-7, "best response at x*")
+    });
+}
+
+/// Shard plans: disjoint cover, preserved order, near-balanced.
+#[test]
+fn prop_shard_plan_partitions() {
+    run_prop("shard-partition", PropConfig::default(), |rng, size| {
+        let n = 1 + rng.next_below(200 * size as u64 + 10) as usize;
+        let bs = 1 + rng.next_below(7) as usize;
+        let layout = BlockLayout::uniform(n, bs);
+        let workers = 1 + rng.next_below(17) as usize;
+        let plan = ShardPlan::balanced(&layout, workers);
+        let mut covered = vec![false; layout.num_blocks()];
+        let mut prev_end = 0usize;
+        for w in 0..plan.workers() {
+            let blocks = plan.blocks(w);
+            if blocks.start != prev_end {
+                return CaseResult::Fail(format!("gap at worker {w}"));
+            }
+            prev_end = blocks.end;
+            for b in blocks {
+                if covered[b] {
+                    return CaseResult::Fail(format!("block {b} covered twice"));
+                }
+                covered[b] = true;
+            }
+        }
+        if prev_end != layout.num_blocks() || !covered.iter().all(|&b| b) {
+            return CaseResult::Fail("incomplete cover".into());
+        }
+        CaseResult::Pass
+    });
+}
+
+/// Nesterov instances: KKT certificate holds for every generated
+/// configuration (the relative-error metric depends on it).
+#[test]
+fn prop_generator_kkt() {
+    run_prop("nesterov-kkt", PropConfig { cases: 12, seed: 7 }, |rng, size| {
+        let m = 8 + 4 * size;
+        let n = 2 * m + rng.next_below(m as u64) as usize;
+        let sp = [0.05, 0.1, 0.2, 0.5][rng.next_below(4) as usize];
+        let c = 0.3 + 2.0 * rng.next_f64();
+        let inst = NesterovLasso::new(m, n, sp, c).seed(rng.next_u64()).generate();
+        let p = Lasso::new(inst.a.clone(), inst.b.clone(), inst.c);
+        let mut g = vec![0.0; n];
+        p.grad_smooth(&inst.x_star, &mut g);
+        for j in 0..n {
+            if inst.x_star[j] != 0.0 {
+                let want = -c * inst.x_star[j].signum();
+                if (g[j] - want).abs() > 1e-7 * (1.0 + c) {
+                    return CaseResult::Fail(format!("support KKT at {j}: {} vs {want}", g[j]));
+                }
+            } else if g[j].abs() > c + 1e-7 {
+                return CaseResult::Fail(format!("off-support KKT at {j}: |{}| > {c}", g[j]));
+            }
+        }
+        // V* is the objective at x*.
+        let v = p.objective(&inst.x_star);
+        if (v - inst.v_star).abs() > 1e-8 * v.abs().max(1.0) {
+            return CaseResult::Fail(format!("v* mismatch: {v} vs {}", inst.v_star));
+        }
+        CaseResult::Pass
+    });
+}
+
+/// Dense and sparse storage produce identical operator behaviour.
+#[test]
+fn prop_dense_sparse_parity() {
+    run_prop("dense-sparse-parity", PropConfig::default(), |rng, size| {
+        let m = 2 + rng.next_below(10 * size as u64 + 5) as usize;
+        let n = 2 + rng.next_below(10 * size as u64 + 5) as usize;
+        let mut dense = DenseMatrix::randn(m, n, rng);
+        for j in 0..n {
+            for i in 0..m {
+                if rng.next_f64() < 0.6 {
+                    dense.set(i, j, 0.0);
+                }
+            }
+        }
+        let sparse = flexa::linalg::CscMatrix::from_dense(&dense, 0.0);
+        let mut x = vec![0.0; n];
+        rng.fill_normal(&mut x);
+        let (mut yd, mut ys) = (vec![0.0; m], vec![0.0; m]);
+        dense.matvec(&x, &mut yd);
+        sparse.matvec(&x, &mut ys);
+        if let CaseResult::Fail(msg) = assert_close(&yd, &ys, 1e-10, "matvec") {
+            return CaseResult::Fail(msg);
+        }
+        let mut r = vec![0.0; m];
+        rng.fill_normal(&mut r);
+        let (mut gd, mut gs) = (vec![0.0; n], vec![0.0; n]);
+        dense.matvec_t(&r, &mut gd);
+        sparse.matvec_t(&r, &mut gs);
+        assert_close(&gd, &gs, 1e-10, "matvec_t")
+    });
+}
+
+/// The FPA iterate stays bounded (coercivity + safeguards): run a short
+/// solve from random starts on random instances and check no blow-up.
+#[test]
+fn prop_fpa_iterates_bounded() {
+    use flexa::algos::fpa::Fpa;
+    use flexa::algos::{SolveOptions, Solver};
+    run_prop("fpa-bounded", PropConfig { cases: 8, seed: 11 }, |rng, size| {
+        let m = 15 + 5 * size;
+        let n = 2 * m;
+        let inst = NesterovLasso::new(m, n, 0.2, 1.0).seed(rng.next_u64()).generate();
+        let p = Lasso::new(inst.a, inst.b, inst.c).with_opt_value(inst.v_star);
+        let mut x0 = vec![0.0; n];
+        rng.fill_normal(&mut x0);
+        let report = Fpa::paper_defaults(&p).solve(
+            &p,
+            &SolveOptions::default().with_max_iters(300).with_target(0.0).with_x0(x0),
+        );
+        let norm = ops::nrm2(&report.x);
+        CaseResult::check(norm.is_finite() && norm < 1e4, || {
+            format!("iterate blew up: ‖x‖ = {norm}")
+        })
+    });
+}

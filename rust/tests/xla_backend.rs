@@ -1,0 +1,194 @@
+//! Three-layer integration: AOT artifacts (L1 Pallas + L2 JAX) executed
+//! via PJRT from Rust (L3), checked against the native Rust solver.
+//!
+//! Requires `make artifacts`; every test skips (passes vacuously) when
+//! the artifact directory is missing so plain `cargo test` still works.
+
+use flexa::algos::{fpa::Fpa, SolveOptions, Solver};
+use flexa::datagen::NesterovLasso;
+use flexa::linalg::ops;
+use flexa::problems::lasso::Lasso;
+use flexa::problems::{CompositeProblem, LeastSquares};
+use flexa::runtime::{artifacts_available, Engine, XlaFpaLasso, DEFAULT_ARTIFACT_DIR};
+
+fn engine() -> Option<Engine> {
+    if !artifacts_available(DEFAULT_ARTIFACT_DIR) {
+        eprintln!("skipping: run `make artifacts` first");
+        return None;
+    }
+    Some(Engine::cpu(DEFAULT_ARTIFACT_DIR).expect("engine"))
+}
+
+fn planted(m: usize, n: usize, seed: u64) -> Lasso {
+    let inst = NesterovLasso::new(m, n, 0.1, 1.0).seed(seed).generate();
+    let v = inst.v_star;
+    Lasso::new(inst.a, inst.b, inst.c).with_opt_value(v)
+}
+
+#[test]
+fn objective_artifact_matches_native() {
+    let Some(mut engine) = engine() else { return };
+    let p = planted(100, 400, 201);
+    let mut rng = flexa::prng::Xoshiro256pp::seed_from_u64(5);
+    let mut x = vec![0.0; 400];
+    rng.fill_normal(&mut x);
+
+    // Row-major A upload.
+    let (m, n) = (100, 400);
+    let mut a_host = vec![0.0; m * n];
+    for j in 0..n {
+        let col = p.matrix().col(j);
+        for i in 0..m {
+            a_host[i * n + j] = col[i];
+        }
+    }
+    let a_buf = engine.buffer_f32(&a_host, &[m, n]).unwrap();
+    let b_buf = engine.buffer_f32(p.rhs(), &[m]).unwrap();
+    let x_buf = engine.buffer_f32(&x, &[n]).unwrap();
+    let c_buf = engine.scalar_f32(p.c()).unwrap();
+    let outs = engine
+        .run("objective.100x400", &[&a_buf, &b_buf, &x_buf, &c_buf])
+        .expect("objective run");
+    assert_eq!(outs.len(), 1);
+    let v_xla = Engine::to_f64_vec(&outs[0]).unwrap()[0];
+    let v_native = p.objective(&x);
+    let rel = (v_xla - v_native).abs() / v_native.abs().max(1.0);
+    assert!(rel < 1e-4, "objective mismatch: xla {v_xla} vs native {v_native}");
+}
+
+#[test]
+fn xla_step_matches_native_step() {
+    // One FPA iteration via the artifact vs the same math in f64.
+    let Some(mut engine) = engine() else { return };
+    let p = planted(100, 400, 202);
+    let n = 400;
+    let mut rng = flexa::prng::Xoshiro256pp::seed_from_u64(6);
+    let mut x = vec![0.0; n];
+    rng.fill_normal(&mut x);
+    for v in x.iter_mut() {
+        *v *= 0.1;
+    }
+    let (tau, gamma, rho) = (5.0, 0.9, 0.5);
+
+    // Native reference step.
+    let mut g = vec![0.0; n];
+    let f_val = p.grad_and_smooth(&x, &mut g);
+    let mut d = vec![0.0; n];
+    p.curvature(&x, &mut d);
+    let mut xhat = vec![0.0; n];
+    let mut e = vec![0.0; n];
+    for j in 0..n {
+        let denom = d[j] + tau;
+        xhat[j] = ops::soft_threshold(x[j] - g[j] / denom, p.c() / denom);
+        e[j] = (xhat[j] - x[j]).abs();
+    }
+    let max_e = e.iter().cloned().fold(0.0, f64::max);
+    let mut x_next = x.clone();
+    for j in 0..n {
+        if e[j] >= rho * max_e {
+            x_next[j] = x[j] + gamma * (xhat[j] - x[j]);
+        }
+    }
+    let v_native = f_val + p.reg(&x);
+
+    // XLA step.
+    let (m, n_cols) = (100, 400);
+    let mut a_host = vec![0.0; m * n_cols];
+    for j in 0..n_cols {
+        let col = p.matrix().col(j);
+        for i in 0..m {
+            a_host[i * n_cols + j] = col[i];
+        }
+    }
+    let a_buf = engine.buffer_f32(&a_host, &[m, n_cols]).unwrap();
+    let b_buf = engine.buffer_f32(p.rhs(), &[m]).unwrap();
+    let x_buf = engine.buffer_f32(&x, &[n_cols]).unwrap();
+    let d_buf = engine.buffer_f32(&d, &[n_cols]).unwrap();
+    let tau_b = engine.scalar_f32(tau).unwrap();
+    let gam_b = engine.scalar_f32(gamma).unwrap();
+    let rho_b = engine.scalar_f32(rho).unwrap();
+    let c_b = engine.scalar_f32(p.c()).unwrap();
+    let outs = engine
+        .run(
+            "fpa_lasso_step.100x400",
+            &[&a_buf, &b_buf, &x_buf, &d_buf, &tau_b, &gam_b, &rho_b, &c_b],
+        )
+        .expect("fpa step run");
+    assert_eq!(outs.len(), 3);
+    let x_xla = Engine::to_f64_vec(&outs[0]).unwrap();
+    let v_xla = Engine::to_f64_vec(&outs[1]).unwrap()[0];
+    let m_xla = Engine::to_f64_vec(&outs[2]).unwrap()[0];
+
+    assert!((v_xla - v_native).abs() / v_native < 1e-4, "{v_xla} vs {v_native}");
+    assert!((m_xla - max_e).abs() / max_e.max(1e-9) < 1e-3, "{m_xla} vs {max_e}");
+    let mut worst = 0.0f64;
+    for j in 0..n_cols {
+        worst = worst.max((x_xla[j] - x_next[j]).abs());
+    }
+    assert!(worst < 1e-4, "x_next mismatch: max abs diff {worst}");
+}
+
+#[test]
+fn xla_solver_converges_like_native() {
+    let Some(mut engine) = engine() else { return };
+    let p = planted(200, 1000, 203);
+    let opts = SolveOptions::default().with_max_iters(800).with_target(5e-5);
+
+    let native = Fpa::paper_defaults(&p).solve(&p, &opts);
+    let mut xla = XlaFpaLasso::new(&mut engine, 200, 1000).expect("artifact");
+    let xla_report = xla.solve(&p, &opts).expect("xla solve");
+
+    // f32 artifacts bottom out around 1e-6 relative; both must reach the
+    // 5e-5 target or get close.
+    assert!(
+        native.trace.best_rel_err() < 1e-4,
+        "native best {:.3e}",
+        native.trace.best_rel_err()
+    );
+    assert!(
+        xla_report.trace.best_rel_err() < 1e-3,
+        "xla best {:.3e}",
+        xla_report.trace.best_rel_err()
+    );
+}
+
+#[test]
+fn fista_artifact_runs() {
+    let Some(mut engine) = engine() else { return };
+    let p = planted(100, 400, 204);
+    let (m, n) = (100, 400);
+    let mut a_host = vec![0.0; m * n];
+    for j in 0..n {
+        let col = p.matrix().col(j);
+        for i in 0..m {
+            a_host[i * n + j] = col[i];
+        }
+    }
+    let l = p.lipschitz_grad();
+    let a_buf = engine.buffer_f32(&a_host, &[m, n]).unwrap();
+    let b_buf = engine.buffer_f32(p.rhs(), &[m]).unwrap();
+    let mut y = vec![0.0; n];
+    let mut x_prev = vec![0.0; n];
+    let mut t = 1.0f64;
+    let mut v_first = None;
+    for _ in 0..50 {
+        let y_buf = engine.buffer_f32(&y, &[n]).unwrap();
+        let xp_buf = engine.buffer_f32(&x_prev, &[n]).unwrap();
+        let t_buf = engine.scalar_f32(t).unwrap();
+        let il_buf = engine.scalar_f32(1.0 / l).unwrap();
+        let c_buf = engine.scalar_f32(p.c()).unwrap();
+        let outs = engine
+            .run("fista_step.100x400", &[&a_buf, &b_buf, &y_buf, &xp_buf, &t_buf, &il_buf, &c_buf])
+            .expect("fista step");
+        let x_next = Engine::to_f64_vec(&outs[0]).unwrap();
+        let y_next = Engine::to_f64_vec(&outs[1]).unwrap();
+        t = Engine::to_f64_vec(&outs[2]).unwrap()[0];
+        x_prev = x_next;
+        y = y_next;
+        if v_first.is_none() {
+            v_first = Some(p.objective(&x_prev));
+        }
+    }
+    let v_final = p.objective(&x_prev);
+    assert!(v_final < v_first.unwrap(), "FISTA via artifact must descend");
+}
