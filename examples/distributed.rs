@@ -1,30 +1,35 @@
 //! Distributed coordinator demo: the threaded leader/worker FPA
 //! (mirroring the paper's MPI layout) with the bulk-synchronous cost
-//! model projecting single-core measurements onto 1–32 processes.
+//! model projecting single-core measurements onto 1–32 processes —
+//! driven entirely through the session API (`fpa` vs `pfpa` registry
+//! solvers).
 //!
 //! Shows (i) exact parity between the serial and the threaded solver,
 //! and (ii) the simulated speedup curve for the paper's process counts.
 //!
 //! Run: `cargo run --release --example distributed`
 
-use flexa::algos::fpa::Fpa;
-use flexa::algos::{SolveOptions, Solver};
-use flexa::coordinator::{CostModel, ParallelFpa};
-use flexa::datagen::NesterovLasso;
+use flexa::algos::SolveOptions;
+use flexa::api::{ProblemSpec, Session, SolverSpec};
+use flexa::coordinator::CostModel;
 use flexa::linalg::ops;
-use flexa::problems::lasso::Lasso;
 
-fn main() {
+fn main() -> anyhow::Result<()> {
     let (m, n) = (500, 2500);
-    let inst = NesterovLasso::new(m, n, 0.1, 1.0).seed(31).generate();
-    let problem = Lasso::new(inst.a, inst.b, inst.c).with_opt_value(inst.v_star);
+    let spec = ProblemSpec::lasso(m, n).with_sparsity(0.1).with_seed(31);
     println!("instance: {m}x{n}, 10% nnz\n");
 
     // 1. Parity: threaded coordinator == serial solver, iteration for
     //    iteration (only float reduction order differs).
     let opts = SolveOptions::default().with_max_iters(300).with_target(1e-5);
-    let serial = Fpa::paper_defaults(&problem).solve(&problem, &opts);
-    let threaded = ParallelFpa::paper_defaults(4).solve(&problem, &opts);
+    let serial = Session::problem(spec.clone())
+        .solver_named("fpa")?
+        .options(opts.clone())
+        .run()?;
+    let threaded = Session::problem(spec.clone())
+        .solver(SolverSpec::new("pfpa").with_param("workers", 4.0))
+        .options(opts)
+        .run()?;
     println!(
         "parity: serial {} iters vs threaded {} iters, ‖x_serial − x_threaded‖ = {:.2e}\n",
         serial.iterations,
@@ -43,9 +48,12 @@ fn main() {
             .with_max_iters(2000)
             .with_target(1e-4)
             .with_cost_model(CostModel::mpi_node(procs));
-        let report = ParallelFpa::paper_defaults(procs.min(8)).solve(&problem, &opts);
-        let measured = report.trace.time_to_rel_err(1e-4, false);
-        let simulated = report.trace.time_to_rel_err(1e-4, true);
+        let run = Session::problem(spec.clone())
+            .solver(SolverSpec::new("pfpa").with_param("workers", procs.min(8) as f64))
+            .options(opts)
+            .run()?;
+        let measured = run.report.trace.time_to_rel_err(1e-4, false);
+        let simulated = run.report.trace.time_to_rel_err(1e-4, true);
         if let (Some(ms), Some(ss)) = (measured, simulated) {
             let t1v = *t1.get_or_insert(ss);
             println!("{procs:>8} {ms:>14.3} {ss:>14.3} {:>9.1}x", t1v / ss);
@@ -55,4 +63,5 @@ fn main() {
     }
     println!("\n(threads timeshare one core here; the simulated clock is the");
     println!(" max-over-workers BSP estimate the paper's 16/32-process curves use)");
+    Ok(())
 }

@@ -1,8 +1,8 @@
 //! End-to-end driver: regenerate the paper's Fig. 1 (relative error vs
 //! time for FPA vs FISTA / GRock / Gauss-Seidel / ADMM) on a real
-//! workload, exercising the full stack: Nesterov datagen → problems →
-//! all six solvers → greedy coordinator → simulated-parallel cost model
-//! → CSV + ASCII rendering.
+//! workload, exercising the full stack: problem/solver specs → the
+//! `flexa::api` session registry → all six solvers → simulated-parallel
+//! cost model → CSV + ASCII rendering.
 //!
 //! Run (scaled panels, a few minutes):
 //!   cargo run --release --example figure1

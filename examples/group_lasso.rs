@@ -1,40 +1,35 @@
 //! Group Lasso (paper §2, third bullet): `min ‖Ax−b‖² + c·Σᵢ‖xᵢ‖₂`.
 //!
-//! Demonstrates the framework's block flexibility (`nᵢ > 1`): the same
-//! Algorithm 1 with the block soft-threshold best-response recovers
-//! group-sparse structure, and the greedy ρ-selection operates on whole
-//! blocks. Compares FPA against FISTA and block Gauss-Seidel.
+//! Demonstrates the framework's block flexibility (`nᵢ > 1`) through the
+//! unified session API: the same `group_lasso` problem spec runs against
+//! FPA (block soft-threshold best-response, greedy ρ-selection over
+//! whole blocks), FISTA and block Gauss–Seidel, by registry name alone.
 //!
 //! Run: `cargo run --release --example group_lasso`
 
-use flexa::algos::fista::Fista;
-use flexa::algos::fpa::Fpa;
-use flexa::algos::gauss_seidel::GaussSeidel;
-use flexa::algos::{SolveOptions, Solver};
-use flexa::datagen::NesterovLasso;
+use flexa::algos::SolveOptions;
+use flexa::api::{ProblemSpec, Session};
 use flexa::linalg::ops;
-use flexa::problems::group_lasso::GroupLasso;
-use flexa::problems::CompositeProblem;
+use flexa::problems::BlockLayout;
 
-fn main() {
+fn main() -> anyhow::Result<()> {
     let (m, n, block) = (300, 1200, 4);
-    // Plant a group-sparse signal: reuse the Nesterov instance for A and
-    // b (its scalar-sparse x* also has group structure at block level).
-    let inst = NesterovLasso::new(m, n, 0.1, 1.0).seed(11).generate();
-    let problem = GroupLasso::new(inst.a, inst.b, 1.0, block);
-    println!(
-        "group lasso: A {}x{}, {} blocks of {} variables",
-        m,
-        n,
-        problem.layout().num_blocks(),
-        block
-    );
+    let spec = ProblemSpec::group_lasso(m, n, block)
+        .with_sparsity(0.1)
+        .with_c(1.0)
+        .with_seed(11);
+    let layout = BlockLayout::uniform(n, block);
+    println!("group lasso: A {m}x{n}, {} blocks of {block} variables", layout.num_blocks());
 
     let opts = SolveOptions::default().with_max_iters(4000).with_target(0.0);
     let mut results = Vec::new();
-    results.push(("fpa", Fpa::paper_defaults(&problem).solve(&problem, &opts)));
-    results.push(("fista", Fista::default().solve(&problem, &opts)));
-    results.push(("block-gs", GaussSeidel::default().solve(&problem, &opts)));
+    for algo in ["fpa", "fista", "gauss-seidel"] {
+        let run = Session::problem(spec.clone())
+            .solver_named(algo)?
+            .options(opts.clone())
+            .run()?;
+        results.push((algo, run));
+    }
 
     // No planted V* for the group problem: use the best found across all
     // methods as the reference and report gaps.
@@ -46,14 +41,15 @@ fn main() {
     for (name, r) in &results {
         let gap = (r.objective - v_best) / v_best.abs().max(1.0);
         // Count active (non-zero) groups of the solution.
-        let active = (0..problem.layout().num_blocks())
-            .filter(|&i| ops::nrm2(&r.x[problem.layout().range(i)]) > 1e-6)
+        let active = (0..layout.num_blocks())
+            .filter(|&i| ops::nrm2(&r.x[layout.range(i)]) > 1e-6)
             .count();
         println!(
-            "  {name:<10} V = {:.6}  gap = {gap:.2e}  active groups = {active}  iters = {}  t = {:.2}s",
+            "  {name:<14} V = {:.6}  gap = {gap:.2e}  active groups = {active}  iters = {}  t = {:.2}s",
             r.objective,
             r.iterations,
-            r.trace.last().map(|l| l.time_s).unwrap_or(0.0)
+            r.report.trace.last().map(|l| l.time_s).unwrap_or(0.0)
         );
     }
+    Ok(())
 }

@@ -1,59 +1,71 @@
-//! Quickstart: generate a planted Lasso instance, solve it with FPA
-//! (the paper's Algorithm 1, Example #2 configuration), and inspect the
-//! convergence trace.
+//! Quickstart: describe a planted Lasso instance and the paper's
+//! Algorithm 1 as specs, run them through the unified `flexa::api`
+//! session, and watch the solve stream live iteration events.
 //!
 //! Run: `cargo run --release --example quickstart`
 
-use flexa::algos::{fpa::Fpa, SolveOptions, Solver};
+use flexa::algos::SolveOptions;
+use flexa::api::{CollectObserver, ProblemSpec, Session, SolverSpec};
 use flexa::datagen::NesterovLasso;
 use flexa::linalg::ops;
-use flexa::problems::lasso::Lasso;
 
-fn main() {
+fn main() -> anyhow::Result<()> {
     // A 500 x 2 500 Lasso instance with 10% non-zeros in the planted
     // solution (Nesterov's generator: x* and V* are known exactly).
-    let gen = NesterovLasso::new(500, 2500, 0.10, 1.0).seed(7);
-    let inst = gen.generate();
-    println!(
-        "instance: A is {}x{}, ‖x*‖₀ = {}, V* = {:.6}",
-        500,
-        2500,
-        ops::nnz(&inst.x_star, 0.0),
-        inst.v_star
-    );
+    // The spec is a complete, serializable description of the instance.
+    let spec = ProblemSpec::lasso(500, 2500).with_sparsity(0.10).with_c(1.0).with_seed(7);
+    println!("problem spec: {spec}");
 
-    let x_star = inst.x_star.clone();
-    let problem = Lasso::new(inst.a, inst.b, inst.c).with_opt_value(inst.v_star);
+    // FPA with the paper's parameters: exact best-response (6), greedy
+    // selection with rho = 0.5, gamma rule (4), adaptive tau. Any other
+    // registry name works here: "fista", "grock-16", "fpa-rho-0.9", ...
+    let solver = SolverSpec::parse("fpa")?;
 
-    // FPA with the paper's parameters: exact best-response (6),
-    // greedy selection with rho = 0.5, gamma rule (4), adaptive tau.
-    let mut solver = Fpa::paper_defaults(&problem);
-    let opts = SolveOptions::default().with_max_iters(5000).with_target(1e-6);
-    let report = solver.solve(&problem, &opts);
+    // The observer streams (iter, gamma, tau, |S^k|, objective) per
+    // iteration — a dashboard would subscribe exactly like this.
+    let observer = CollectObserver::new();
+    let run = Session::problem(spec)
+        .solver(solver)
+        .options(SolveOptions::default().with_max_iters(5000).with_target(1e-6))
+        .observer(observer.clone())
+        .run()?;
 
     println!(
         "solved: {} iterations, V = {:.6}, rel err = {:.2e}, converged = {}",
-        report.iterations,
-        report.objective,
-        report.trace.best_rel_err(),
-        report.converged
+        run.iterations,
+        run.objective,
+        run.report.trace.best_rel_err(),
+        run.converged
     );
+    let first = observer.events().first().copied();
+    println!(
+        "streamed {} events; first: gamma = {:.3}, |S| = {} of {} blocks",
+        observer.len(),
+        first.map(|e| e.gamma).unwrap_or(f64::NAN),
+        first.map(|e| e.updated_blocks).unwrap_or(0),
+        observer.dim(),
+    );
+
+    // Spec-driven generation is deterministic, so the planted solution is
+    // reproducible outside the session for evaluation.
+    let inst = NesterovLasso::new(500, 2500, 0.10, 1.0).seed(7).generate();
     println!(
         "support recovered: {} / {} coordinates match x*",
-        report
-            .x
+        run.x
             .iter()
-            .zip(&x_star)
+            .zip(&inst.x_star)
             .filter(|(a, b)| (a.abs() > 1e-6) == (b.abs() > 1e-6))
             .count(),
-        x_star.len()
+        inst.x_star.len()
     );
 
     // Milestones from the trace (the data behind the paper's Fig. 1).
     for target in [1e-2, 1e-4, 1e-6] {
-        match report.trace.time_to_rel_err(target, false) {
+        match run.report.trace.time_to_rel_err(target, false) {
             Some(t) => println!("  rel err {target:.0e} reached at {t:.3}s"),
             None => println!("  rel err {target:.0e} not reached"),
         }
     }
+    println!("nnz of solution: {}", ops::nnz(&run.x, 1e-6));
+    Ok(())
 }

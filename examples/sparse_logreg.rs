@@ -1,48 +1,56 @@
 //! Sparse logistic regression (paper §2, fourth bullet):
 //! `min Σⱼ log(1 + exp(−aⱼ yⱼᵀx)) + c‖x‖₁`.
 //!
-//! Exercises the framework on a *non-quadratic* smooth loss: FPA uses
-//! the diagonal second-order surrogate (a valid `Pᵢ` satisfying P1–P3)
-//! and still converges per Theorem 1. Reports classification accuracy
-//! and support recovery against the generating hyperplane.
+//! Exercises the framework on a *non-quadratic* smooth loss through the
+//! session API: the `logreg` registry problem runs against FPA (diagonal
+//! second-order surrogate, a valid `Pᵢ` satisfying P1–P3) and FISTA.
+//! Reports classification accuracy and support recovery against the
+//! generating hyperplane — the spec-driven generators are deterministic,
+//! so the evaluation rebuilds the same instance outside the session.
 //!
 //! Run: `cargo run --release --example sparse_logreg`
 
-use flexa::algos::fista::Fista;
-use flexa::algos::fpa::Fpa;
-use flexa::algos::{SolveOptions, Solver};
+use flexa::algos::SolveOptions;
+use flexa::api::{ProblemSpec, Session};
 use flexa::datagen::SparseClassification;
 use flexa::linalg::{ops, MatVec};
-use flexa::problems::logreg::SparseLogReg;
 
-fn main() {
+fn main() -> anyhow::Result<()> {
     let (samples, features) = (600, 1500);
-    let gen = SparseClassification::new(samples, features, 0.05)
+    let spec = ProblemSpec::logreg(samples, features)
+        .with_sparsity(0.05)
+        .with_c(2.0)
+        .with_seed(23)
+        .with_label_noise(0.02);
+
+    // The same deterministic instance the registry builds, regenerated
+    // here for the evaluation (margins + support recovery).
+    let inst = SparseClassification::new(samples, features, 0.05)
         .seed(23)
-        .label_noise(0.02);
-    let inst = gen.generate();
+        .label_noise(0.02)
+        .generate();
     let w_true = inst.w_true.clone();
     println!(
         "sparse logistic regression: {samples} samples, {features} features, true support = {}",
         ops::nnz(&w_true, 0.0)
     );
 
-    let problem = SparseLogReg::new(inst.m, 2.0);
-    let opts = SolveOptions {
-        max_iters: 3000,
-        max_seconds: 60.0,
-        target_rel_err: 0.0, // no planted V*: run to budget
-        ..Default::default()
-    };
+    let opts = SolveOptions::default()
+        .with_max_iters(3000)
+        .with_max_seconds(60.0)
+        .with_target(0.0); // no planted V*: run to budget
 
-    let fpa = Fpa::paper_defaults(&problem).solve(&problem, &opts);
-    let fista = Fista::default().solve(&problem, &opts);
+    let mut runs = Vec::new();
+    for algo in ["fpa", "fista"] {
+        let run = Session::problem(spec.clone()).solver_named(algo)?.options(opts.clone()).run()?;
+        runs.push((algo, run));
+    }
 
-    for (name, r) in [("fpa", &fpa), ("fista", &fista)] {
+    for (name, r) in &runs {
         // Label-scaled margins: row i of M is a_i * y_i, so a correct
         // prediction is margin > 0.
         let mut z = vec![0.0; samples];
-        problem.margins(&r.x, &mut z);
+        inst.m.matvec(&r.x, &mut z);
         let correct = z.iter().filter(|&&zi| zi > 0.0).count();
         println!(
             "  {name:<6} V = {:.4}  train acc = {:.1}%  ‖x‖₀ = {}  iters = {}  t = {:.2}s",
@@ -50,11 +58,12 @@ fn main() {
             100.0 * correct as f64 / samples as f64,
             ops::nnz(&r.x, 1e-6),
             r.iterations,
-            r.trace.last().map(|l| l.time_s).unwrap_or(0.0)
+            r.report.trace.last().map(|l| l.time_s).unwrap_or(0.0)
         );
     }
 
     // Support recovery vs the generating hyperplane.
+    let fpa = &runs[0].1;
     let recovered = fpa
         .x
         .iter()
@@ -65,4 +74,5 @@ fn main() {
         "FPA recovered {recovered} of {} true-support coordinates",
         ops::nnz(&w_true, 0.0)
     );
+    Ok(())
 }

@@ -74,7 +74,7 @@ enum XSolver {
     Cg { tol: f64, max_iters: usize },
 }
 
-impl<P: LeastSquares> Solver<P> for Admm {
+impl<P: LeastSquares + ?Sized> Solver<P> for Admm {
     fn name(&self) -> String {
         "admm".into()
     }

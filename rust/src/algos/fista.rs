@@ -39,7 +39,7 @@ impl Fista {
     }
 }
 
-impl<P: CompositeProblem> Solver<P> for Fista {
+impl<P: CompositeProblem + ?Sized> Solver<P> for Fista {
     fn name(&self) -> String {
         if self.opts.adaptive_restart { "fista-restart".into() } else { "fista".into() }
     }

@@ -47,7 +47,7 @@ pub enum Surrogate {
 }
 
 /// Theorem 1(v) inexactness schedule for the subproblem solves.
-#[derive(Clone, Copy, Debug)]
+#[derive(Clone, Copy, Debug, PartialEq)]
 pub struct Inexactness {
     pub alpha1: f64,
     pub alpha2: f64,
@@ -121,9 +121,15 @@ impl Fpa {
         self.label = label.to_string();
         self
     }
+
+    /// Display label without needing a problem type (used by the
+    /// session-layer adapters).
+    pub fn label(&self) -> &str {
+        &self.label
+    }
 }
 
-impl<P: CompositeProblem> Solver<P> for Fpa {
+impl<P: CompositeProblem + ?Sized> Solver<P> for Fpa {
     fn name(&self) -> String {
         self.label.clone()
     }
@@ -310,6 +316,7 @@ impl<P: CompositeProblem> Solver<P> for Fpa {
             let t_serial = t1.elapsed().as_secs_f64();
 
             recorder.add_sim_time(opts.cost_model.iter_time(t_parallel, t_serial, reduce_bytes));
+            recorder.note_step(gamma, tau);
             let err = recorder.record(k, &x, updated);
             if recorder.reached(err) {
                 converged = true;
@@ -340,7 +347,7 @@ impl Fpa {
     /// With the paper's ρ-selection this is a 1.5–1.9× hot-path win
     /// (EXPERIMENTS.md §Perf). The residual is recomputed from scratch
     /// every 512 iterations to bound float drift.
-    pub fn solve_ls<P: LeastSquares>(&mut self, problem: &P, opts: &SolveOptions) -> SolveReport {
+    pub fn solve_ls<P: LeastSquares + ?Sized>(&mut self, problem: &P, opts: &SolveOptions) -> SolveReport {
         let n = problem.n();
         let m = problem.rows();
         let layout = problem.layout().clone();
@@ -477,6 +484,7 @@ impl Fpa {
             let t_serial = t1.elapsed().as_secs_f64();
 
             recorder.add_sim_time(opts.cost_model.iter_time(t_parallel, t_serial, reduce_bytes));
+            recorder.note_step(gamma, tau);
             let err = recorder.record(k, &x, updated);
             if recorder.reached(err) {
                 converged = true;
@@ -513,7 +521,7 @@ fn perturb_within(z: &mut [f64], eps: f64, rng: &mut Xoshiro256pp) {
 
 /// Length of the per-iteration allreduce payload (the residual-size proxy:
 /// for `F = ‖Ax−b‖²` this is `m`; generically we use `n` as the safe bound).
-fn problem_reduce_len<P: CompositeProblem>(p: &P) -> usize {
+fn problem_reduce_len<P: CompositeProblem + ?Sized>(p: &P) -> usize {
     p.n().min(1 << 20)
 }
 

@@ -35,7 +35,7 @@ impl Default for GaussSeidel {
     }
 }
 
-impl<P: LeastSquares> Solver<P> for GaussSeidel {
+impl<P: LeastSquares + ?Sized> Solver<P> for GaussSeidel {
     fn name(&self) -> String {
         "gauss-seidel".into()
     }

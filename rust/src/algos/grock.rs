@@ -45,7 +45,7 @@ impl Grock {
     }
 }
 
-impl<P: CompositeProblem> Solver<P> for Grock {
+impl<P: CompositeProblem + ?Sized> Solver<P> for Grock {
     fn name(&self) -> String {
         format!("grock-{}", self.opts.p)
     }

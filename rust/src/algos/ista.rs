@@ -14,7 +14,7 @@ pub struct Ista {
     pub step: Option<f64>,
 }
 
-impl<P: CompositeProblem> Solver<P> for Ista {
+impl<P: CompositeProblem + ?Sized> Solver<P> for Ista {
     fn name(&self) -> String {
         "ista".into()
     }

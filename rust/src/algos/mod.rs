@@ -13,13 +13,15 @@ pub mod gauss_seidel;
 pub mod grock;
 pub mod ista;
 
+use crate::api::events::{EventObserver, IterEvent};
 use crate::coordinator::costmodel::CostModel;
 use crate::linalg::ops;
 use crate::metrics::{IterRecord, Stopwatch, Trace};
 use crate::problems::CompositeProblem;
+use std::sync::Arc;
 
 /// Common solve options.
-#[derive(Clone, Debug)]
+#[derive(Clone)]
 pub struct SolveOptions {
     /// Iteration cap.
     pub max_iters: usize,
@@ -31,8 +33,26 @@ pub struct SolveOptions {
     pub x0: Option<Vec<f64>>,
     /// Parallel cost model for simulated times.
     pub cost_model: CostModel,
-    /// Record a trace row every `record_every` iterations (1 = all).
+    /// Record a trace row every `record_every` iterations (1 = all; the
+    /// final iterate is always recorded regardless).
     pub record_every: usize,
+    /// Streaming observer notified once per iteration (see
+    /// [`crate::api::events`]); `None` = no streaming.
+    pub observer: Option<Arc<dyn EventObserver>>,
+}
+
+impl std::fmt::Debug for SolveOptions {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("SolveOptions")
+            .field("max_iters", &self.max_iters)
+            .field("max_seconds", &self.max_seconds)
+            .field("target_rel_err", &self.target_rel_err)
+            .field("x0", &self.x0.as_ref().map(Vec::len))
+            .field("cost_model", &self.cost_model)
+            .field("record_every", &self.record_every)
+            .field("observer", &self.observer.is_some())
+            .finish()
+    }
 }
 
 impl Default for SolveOptions {
@@ -44,6 +64,7 @@ impl Default for SolveOptions {
             x0: None,
             cost_model: CostModel::serial(),
             record_every: 1,
+            observer: None,
         }
     }
 }
@@ -51,6 +72,10 @@ impl Default for SolveOptions {
 impl SolveOptions {
     pub fn with_max_iters(mut self, k: usize) -> Self {
         self.max_iters = k;
+        self
+    }
+    pub fn with_max_seconds(mut self, seconds: f64) -> Self {
+        self.max_seconds = seconds;
         self
     }
     pub fn with_target(mut self, t: f64) -> Self {
@@ -63,6 +88,14 @@ impl SolveOptions {
     }
     pub fn with_x0(mut self, x0: Vec<f64>) -> Self {
         self.x0 = Some(x0);
+        self
+    }
+    pub fn with_record_every(mut self, every: usize) -> Self {
+        self.record_every = every.max(1);
+        self
+    }
+    pub fn with_observer(mut self, observer: Arc<dyn EventObserver>) -> Self {
+        self.observer = Some(observer);
         self
     }
 }
@@ -102,7 +135,13 @@ pub fn rel_err(objective: f64, v_star: Option<f64>) -> f64 {
 /// Shared trace-recording helper: computes objective/rel-err while the
 /// stopwatch is paused (metric evaluation is not part of solver time —
 /// the paper's curves likewise sample the objective out of band).
-pub struct Recorder<'a> {
+///
+/// Also the single emission point for streaming [`IterEvent`]s: when the
+/// options carry an observer, every [`Self::record`] call fires
+/// `on_iteration` (regardless of the trace cadence), so all solvers
+/// stream events without per-solver plumbing. Solvers with γ/τ dynamics
+/// report them via [`Self::note_step`].
+pub struct Recorder<'a, P: CompositeProblem + ?Sized> {
     trace: Trace,
     v_star: Option<f64>,
     sim_time_s: f64,
@@ -110,11 +149,20 @@ pub struct Recorder<'a> {
     target: f64,
     record_every: usize,
     last_objective: f64,
-    problem: &'a dyn CompositeProblem,
+    problem: &'a P,
+    observer: Option<Arc<dyn EventObserver>>,
+    gamma: f64,
+    tau: f64,
+    /// Most recent row skipped by the cadence; flushed by
+    /// [`Self::into_trace`] so the final iterate is never dropped.
+    pending: Option<IterRecord>,
 }
 
-impl<'a> Recorder<'a> {
-    pub fn new(algo: &str, problem: &'a dyn CompositeProblem, opts: &SolveOptions) -> Self {
+impl<'a, P: CompositeProblem + ?Sized> Recorder<'a, P> {
+    pub fn new(algo: &str, problem: &'a P, opts: &SolveOptions) -> Self {
+        if let Some(obs) = &opts.observer {
+            obs.on_start(algo, problem.n());
+        }
         Self {
             trace: Trace::new(algo),
             v_star: problem.opt_value(),
@@ -124,7 +172,18 @@ impl<'a> Recorder<'a> {
             record_every: opts.record_every.max(1),
             last_objective: f64::INFINITY,
             problem,
+            observer: opts.observer.clone(),
+            gamma: f64::NAN,
+            tau: f64::NAN,
+            pending: None,
         }
+    }
+
+    /// Report the step-size γ and proximal weight τ used this iteration
+    /// (streamed in the next [`Self::record`]'s event; NaN when unset).
+    pub fn note_step(&mut self, gamma: f64, tau: f64) {
+        self.gamma = gamma;
+        self.tau = tau;
     }
 
     /// Objective at the most recent [`Self::record`] call.
@@ -152,21 +211,42 @@ impl<'a> Recorder<'a> {
 
     /// Record iteration `k` with current iterate `x`; returns the relative
     /// error (NaN if unknown). Pauses the stopwatch during evaluation.
+    ///
+    /// The row enters the trace on the `record_every` cadence (or when the
+    /// target is reached); a row skipped by the cadence is kept pending so
+    /// [`Self::into_trace`] can flush the final iterate. The streaming
+    /// observer sees *every* iteration either way.
     pub fn record(&mut self, k: usize, x: &[f64], updated_blocks: usize) -> f64 {
         self.stopwatch.pause();
         let objective = self.problem.objective(x);
         self.last_objective = objective;
         let e = rel_err(objective, self.v_star);
-        if k % self.record_every == 0 || (e.is_finite() && e <= self.target) {
-            self.trace.push(IterRecord {
+        let rec = IterRecord {
+            iter: k,
+            time_s: self.stopwatch.elapsed_s(),
+            sim_time_s: self.sim_time_s,
+            objective,
+            rel_err: e,
+            nnz: ops::nnz(x, 1e-9),
+            updated_blocks,
+        };
+        if let Some(obs) = &self.observer {
+            obs.on_iteration(&IterEvent {
                 iter: k,
-                time_s: self.stopwatch.elapsed_s(),
-                sim_time_s: self.sim_time_s,
+                gamma: self.gamma,
+                tau: self.tau,
+                updated_blocks,
                 objective,
                 rel_err: e,
-                nnz: ops::nnz(x, 1e-9),
-                updated_blocks,
+                time_s: rec.time_s,
+                sim_time_s: rec.sim_time_s,
             });
+        }
+        if k % self.record_every == 0 || (e.is_finite() && e <= self.target) {
+            self.trace.push(rec);
+            self.pending = None;
+        } else {
+            self.pending = Some(rec);
         }
         self.stopwatch.resume();
         e
@@ -177,7 +257,13 @@ impl<'a> Recorder<'a> {
         e.is_finite() && e <= self.target
     }
 
-    pub fn into_trace(self) -> Trace {
+    /// Finish recording. Flushes the pending row (if the cadence skipped
+    /// the last recorded iteration) so the final iterate always appears in
+    /// the trace — time-to-accuracy summaries read the trace tail.
+    pub fn into_trace(mut self) -> Trace {
+        if let Some(rec) = self.pending.take() {
+            self.trace.push(rec);
+        }
         self.trace
     }
 }
@@ -197,10 +283,70 @@ mod tests {
     fn options_builders() {
         let o = SolveOptions::default()
             .with_max_iters(7)
+            .with_max_seconds(2.5)
             .with_target(1e-3)
-            .with_x0(vec![1.0]);
+            .with_x0(vec![1.0])
+            .with_record_every(10);
         assert_eq!(o.max_iters, 7);
+        assert_eq!(o.max_seconds, 2.5);
         assert_eq!(o.target_rel_err, 1e-3);
         assert_eq!(o.x0.as_deref(), Some(&[1.0][..]));
+        assert_eq!(o.record_every, 10);
+        // record_every is clamped to >= 1.
+        assert_eq!(SolveOptions::default().with_record_every(0).record_every, 1);
+        assert!(o.observer.is_none());
+        let obs = crate::api::CollectObserver::new();
+        let o = o.with_observer(obs);
+        assert!(o.observer.is_some());
+        // Debug impl elides the observer but does not panic.
+        assert!(format!("{o:?}").contains("observer: true"));
+    }
+
+    #[test]
+    fn recorder_flushes_final_iterate_despite_cadence() {
+        let inst = crate::datagen::NesterovLasso::new(10, 20, 0.1, 1.0).seed(3).generate();
+        let p = crate::problems::lasso::Lasso::new(inst.a, inst.b, inst.c);
+        let opts = SolveOptions::default().with_record_every(3).with_target(0.0);
+        let x = vec![0.0; 20];
+        let mut rec = Recorder::new("test", &p, &opts);
+        for k in 0..5 {
+            rec.record(k, &x, 1);
+        }
+        let trace = rec.into_trace();
+        // Cadence keeps k = 0, 3; the flush must add the final k = 4.
+        let iters: Vec<usize> = trace.records.iter().map(|r| r.iter).collect();
+        assert_eq!(iters, vec![0, 3, 4]);
+        // When the cadence already recorded the last call, nothing extra
+        // is flushed.
+        let mut rec = Recorder::new("test", &p, &opts);
+        for k in 0..4 {
+            rec.record(k, &x, 1);
+        }
+        let iters: Vec<usize> = rec.into_trace().records.iter().map(|r| r.iter).collect();
+        assert_eq!(iters, vec![0, 3]);
+    }
+
+    #[test]
+    fn recorder_streams_every_iteration_with_step_state() {
+        let inst = crate::datagen::NesterovLasso::new(10, 20, 0.1, 1.0).seed(4).generate();
+        let p = crate::problems::lasso::Lasso::new(inst.a, inst.b, inst.c);
+        let obs = crate::api::CollectObserver::new();
+        let opts = SolveOptions::default()
+            .with_record_every(100)
+            .with_target(0.0)
+            .with_observer(obs.clone());
+        let x = vec![0.0; 20];
+        let mut rec = Recorder::new("streamer", &p, &opts);
+        rec.note_step(0.9, 2.0);
+        rec.record(0, &x, 5);
+        rec.record(1, &x, 4);
+        assert_eq!(obs.algo(), "streamer");
+        assert_eq!(obs.dim(), 20);
+        let events = obs.events();
+        assert_eq!(events.len(), 2, "observer sees every iteration, not just the cadence");
+        assert_eq!(events[0].gamma, 0.9);
+        assert_eq!(events[0].tau, 2.0);
+        assert_eq!(events[1].updated_blocks, 4);
+        assert!(events[0].objective.is_finite());
     }
 }

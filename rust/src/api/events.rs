@@ -1,0 +1,198 @@
+//! Streaming iteration events.
+//!
+//! Every solver that records through [`crate::algos::Recorder`] emits one
+//! [`IterEvent`] per iteration to the observer attached via
+//! [`crate::algos::SolveOptions::with_observer`] (or
+//! [`super::Session::observer`]). This lets servers and dashboards watch a
+//! solve *live* — iteration counter, step size γᵏ, regularization τ,
+//! selected-set size |Sᵏ| and objective — instead of parsing the trace
+//! after the fact.
+//!
+//! Observers are shared (`Arc`) and must be `Send + Sync`: the threaded
+//! coordinator and any future async server call them from worker contexts.
+//! Callbacks run with the recorder's stopwatch paused, so a slow observer
+//! does not pollute the measured solver time — but it does block the
+//! solve, so keep `on_iteration` cheap (push to a channel, update an
+//! atomic, append to a buffer).
+
+use std::sync::{Arc, Mutex};
+
+/// One per-iteration event.
+///
+/// Fields a solver has no notion of are `NaN` (e.g. FISTA has no τ;
+/// sequential Gauss–Seidel has no γ).
+#[derive(Clone, Copy, Debug)]
+pub struct IterEvent {
+    /// Iteration counter `k` (0-based).
+    pub iter: usize,
+    /// Step size γᵏ used this iteration (NaN if not applicable).
+    pub gamma: f64,
+    /// Current proximal weight τ (NaN if not applicable).
+    pub tau: f64,
+    /// Number of blocks updated this iteration, |Sᵏ|.
+    pub updated_blocks: usize,
+    /// Objective `V(xᵏ)` after the update.
+    pub objective: f64,
+    /// Relative error `(V − V*)/V*` (NaN when `V*` is unknown).
+    pub rel_err: f64,
+    /// Measured wall-clock seconds since solve start.
+    pub time_s: f64,
+    /// Simulated parallel wall-clock seconds (cost model).
+    pub sim_time_s: f64,
+}
+
+/// Callback interface for streaming solve progress.
+///
+/// All methods have empty defaults so an observer only implements what it
+/// cares about. `on_start`/`on_iteration` are fired by the shared
+/// [`crate::algos::Recorder`] (so every solver streams them);
+/// `on_finish` is fired by [`super::Session::run`].
+pub trait EventObserver: Send + Sync {
+    /// Solve is starting: solver display name and problem dimension.
+    fn on_start(&self, _algo: &str, _n: usize) {}
+    /// One iteration completed.
+    fn on_iteration(&self, _event: &IterEvent) {}
+    /// Solve finished (fired by the session layer).
+    fn on_finish(&self, _algo: &str, _converged: bool, _objective: f64) {}
+}
+
+/// An observer that buffers everything it sees — the building block for
+/// tests, dashboards and post-hoc inspection of streamed solves.
+#[derive(Default)]
+pub struct CollectObserver {
+    inner: Mutex<Collected>,
+}
+
+#[derive(Default)]
+struct Collected {
+    algo: String,
+    n: usize,
+    events: Vec<IterEvent>,
+    finished: bool,
+    converged: bool,
+}
+
+impl CollectObserver {
+    /// New shared collector (ready to pass to a session).
+    pub fn new() -> Arc<Self> {
+        Arc::new(Self::default())
+    }
+
+    /// Snapshot of all events seen so far.
+    pub fn events(&self) -> Vec<IterEvent> {
+        self.inner.lock().unwrap().events.clone()
+    }
+
+    /// Number of iteration events seen.
+    pub fn len(&self) -> usize {
+        self.inner.lock().unwrap().events.len()
+    }
+
+    /// True if no iteration event arrived yet.
+    pub fn is_empty(&self) -> bool {
+        self.inner.lock().unwrap().events.is_empty()
+    }
+
+    /// Solver name reported by `on_start` (empty before the solve).
+    pub fn algo(&self) -> String {
+        self.inner.lock().unwrap().algo.clone()
+    }
+
+    /// Problem dimension reported by `on_start`.
+    pub fn dim(&self) -> usize {
+        self.inner.lock().unwrap().n
+    }
+
+    /// True once `on_finish` fired.
+    pub fn finished(&self) -> bool {
+        self.inner.lock().unwrap().finished
+    }
+
+    /// Convergence flag reported by `on_finish`.
+    pub fn converged(&self) -> bool {
+        self.inner.lock().unwrap().converged
+    }
+}
+
+impl EventObserver for CollectObserver {
+    fn on_start(&self, algo: &str, n: usize) {
+        let mut c = self.inner.lock().unwrap();
+        c.algo = algo.to_string();
+        c.n = n;
+    }
+
+    fn on_iteration(&self, event: &IterEvent) {
+        self.inner.lock().unwrap().events.push(*event);
+    }
+
+    fn on_finish(&self, _algo: &str, converged: bool, _objective: f64) {
+        let mut c = self.inner.lock().unwrap();
+        c.finished = true;
+        c.converged = converged;
+    }
+}
+
+/// Adapter turning a closure into an iteration observer:
+/// `FnObserver::new(|e| println!("k={} V={}", e.iter, e.objective))`.
+pub struct FnObserver<F: Fn(&IterEvent) + Send + Sync> {
+    f: F,
+}
+
+impl<F: Fn(&IterEvent) + Send + Sync> FnObserver<F> {
+    pub fn new(f: F) -> Arc<Self> {
+        Arc::new(Self { f })
+    }
+}
+
+impl<F: Fn(&IterEvent) + Send + Sync> EventObserver for FnObserver<F> {
+    fn on_iteration(&self, event: &IterEvent) {
+        (self.f)(event)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn event(iter: usize) -> IterEvent {
+        IterEvent {
+            iter,
+            gamma: 0.9,
+            tau: 1.0,
+            updated_blocks: 3,
+            objective: 1.0,
+            rel_err: 0.1,
+            time_s: 0.0,
+            sim_time_s: 0.0,
+        }
+    }
+
+    #[test]
+    fn collect_observer_buffers_in_order() {
+        let obs = CollectObserver::new();
+        obs.on_start("fpa", 10);
+        obs.on_iteration(&event(0));
+        obs.on_iteration(&event(1));
+        obs.on_finish("fpa", true, 1.0);
+        assert_eq!(obs.algo(), "fpa");
+        assert_eq!(obs.dim(), 10);
+        assert_eq!(obs.len(), 2);
+        assert!(!obs.is_empty());
+        assert!(obs.finished());
+        assert!(obs.converged());
+        let evs = obs.events();
+        assert_eq!(evs[0].iter, 0);
+        assert_eq!(evs[1].iter, 1);
+    }
+
+    #[test]
+    fn fn_observer_invokes_closure() {
+        let count = std::sync::atomic::AtomicUsize::new(0);
+        let obs = FnObserver::new(|_e| {
+            count.fetch_add(1, std::sync::atomic::Ordering::SeqCst);
+        });
+        obs.on_iteration(&event(0));
+        obs.on_iteration(&event(1));
+        assert_eq!(count.load(std::sync::atomic::Ordering::SeqCst), 2);
+    }
+}

@@ -1,0 +1,41 @@
+//! # `flexa::api` — the unified solve API
+//!
+//! One way to construct and run solves, whatever the caller (CLI, TOML
+//! experiment configs, the bench harness, a server):
+//!
+//! 1. describe the problem and solver with serializable descriptors
+//!    ([`ProblemSpec`], [`SolverSpec`]);
+//! 2. resolve them through the [`Registry`] (name → constructor, typo
+//!    suggestions, runtime registration of custom solvers);
+//! 3. run through the fluent [`Session`] builder, optionally streaming
+//!    per-iteration [`IterEvent`]s to an [`EventObserver`].
+//!
+//! ```no_run
+//! use flexa::api::{ProblemSpec, Session, SolverSpec};
+//!
+//! # fn main() -> anyhow::Result<()> {
+//! let run = Session::problem(ProblemSpec::lasso(500, 2500).with_sparsity(0.1))
+//!     .solver(SolverSpec::parse("fpa-rho-0.5")?)
+//!     .run()?;
+//! println!("{} solved {}: V = {:.6}", run.solver, run.problem, run.objective);
+//! # Ok(())
+//! # }
+//! ```
+//!
+//! The registry mirrors how the follow-up frameworks (FLEXA's journal
+//! version, parallel coordinate-descent suites) generalize the same
+//! iteration scheme across problems and selection rules: problems and
+//! solvers meet only through [`ProblemHandle`] / [`DynSolver`], so a new
+//! problem family works with every registered solver immediately (modulo
+//! structural requirements such as least-squares-only baselines, which
+//! fail with a clear error instead of being unrepresentable).
+
+pub mod events;
+pub mod registry;
+pub mod session;
+pub mod spec;
+
+pub use events::{CollectObserver, EventObserver, FnObserver, IterEvent};
+pub use registry::{ProblemCtor, Registry, SolverCtor};
+pub use session::{DynSolver, ProblemHandle, Session, SessionReport};
+pub use spec::{ProblemSpec, SolverSpec};

@@ -1,0 +1,518 @@
+//! Name → constructor registry for problems and solvers.
+//!
+//! The registry is the single wiring point between descriptor specs and
+//! live objects: the CLI, the TOML config layer and the bench harness all
+//! resolve names here, so adding a problem family or a solver is one
+//! `register_*` call away — including at runtime, for custom user solvers
+//! ([`Registry::register_solver`]).
+//!
+//! Unknown names never panic: lookups fail with an error naming the
+//! nearest registered name (edit distance) plus the full list.
+
+use super::session::{DynSolver, ProblemHandle};
+use super::spec::{ProblemSpec, SolverSpec};
+use crate::algos::admm::{Admm, AdmmOptions};
+use crate::algos::fista::{Fista, FistaOptions};
+use crate::algos::fpa::{Fpa, FpaOptions};
+use crate::algos::gauss_seidel::{GaussSeidel, SweepOrder};
+use crate::algos::grock::Grock;
+use crate::algos::ista::Ista;
+use crate::algos::{SolveOptions, SolveReport, Solver};
+use crate::coordinator::ParallelFpa;
+use crate::datagen::{NesterovLasso, SparseClassification};
+use crate::problems::group_lasso::GroupLasso;
+use crate::problems::lasso::Lasso;
+use crate::problems::logreg::SparseLogReg;
+use crate::problems::svm::L1L2Svm;
+use crate::problems::BlockLayout;
+use anyhow::{anyhow, bail, Result};
+use std::collections::BTreeMap;
+
+/// Constructor turning a [`ProblemSpec`] into a live instance.
+pub type ProblemCtor = Box<dyn Fn(&ProblemSpec) -> Result<ProblemHandle> + Send + Sync>;
+
+/// Constructor turning a [`SolverSpec`] into a runnable solver.
+pub type SolverCtor = Box<dyn Fn(&SolverSpec) -> Result<Box<dyn DynSolver>> + Send + Sync>;
+
+struct Entry<C> {
+    ctor: C,
+    about: String,
+}
+
+/// The problem/solver registry.
+pub struct Registry {
+    problems: BTreeMap<String, Entry<ProblemCtor>>,
+    solvers: BTreeMap<String, Entry<SolverCtor>>,
+}
+
+impl Default for Registry {
+    fn default() -> Self {
+        Self::with_defaults()
+    }
+}
+
+impl Registry {
+    /// An empty registry (for fully custom setups).
+    pub fn empty() -> Self {
+        Self { problems: BTreeMap::new(), solvers: BTreeMap::new() }
+    }
+
+    /// The built-in line-up: the paper's four problem families and six
+    /// algorithm families (plus ISTA and the threaded coordinator).
+    pub fn with_defaults() -> Self {
+        let mut r = Self::empty();
+
+        r.register_problem(
+            "lasso",
+            "l1-regularized least squares on a planted Nesterov instance (known V*)",
+            Box::new(build_lasso),
+        );
+        r.register_problem(
+            "group_lasso",
+            "group Lasso (block l2 regularizer) on a planted least-squares instance",
+            Box::new(build_group_lasso),
+        );
+        r.register_problem(
+            "logreg",
+            "l1-regularized logistic regression on a planted classification instance",
+            Box::new(build_logreg),
+        );
+        r.register_problem(
+            "svm",
+            "l1-regularized squared-hinge SVM on a planted classification instance",
+            Box::new(build_svm),
+        );
+
+        r.register_solver(
+            "fpa",
+            "the paper's Algorithm 1 (FLEXA): any surrogate/selection/step/tau/inexactness mix",
+            Box::new(build_fpa),
+        );
+        r.register_solver(
+            "pfpa",
+            "threaded leader/worker FPA (param: workers); least-squares problems only",
+            Box::new(build_pfpa),
+        );
+        r.register_solver("fista", "parallel FISTA benchmark (params: step, restart)", Box::new(build_fista));
+        r.register_solver("ista", "plain proximal gradient (param: step)", Box::new(build_ista));
+        r.register_solver(
+            "grock",
+            "GRock greedy parallel coordinate descent (param: p = updates/iter)",
+            Box::new(build_grock),
+        );
+        r.register_solver(
+            "gauss-seidel",
+            "sequential Gauss-Seidel best-response sweeps (params: symmetric, damping); least-squares only",
+            Box::new(build_gauss_seidel),
+        );
+        r.register_solver(
+            "admm",
+            "sequential ADMM baseline (param: rho); least-squares only",
+            Box::new(build_admm),
+        );
+        r
+    }
+
+    /// Register (or replace) a problem constructor.
+    pub fn register_problem(&mut self, name: &str, about: &str, ctor: ProblemCtor) {
+        self.problems.insert(name.to_string(), Entry { ctor, about: about.to_string() });
+    }
+
+    /// Register (or replace) a solver constructor.
+    pub fn register_solver(&mut self, name: &str, about: &str, ctor: SolverCtor) {
+        self.solvers.insert(name.to_string(), Entry { ctor, about: about.to_string() });
+    }
+
+    /// Registered problem names (sorted).
+    pub fn problem_names(&self) -> Vec<String> {
+        self.problems.keys().cloned().collect()
+    }
+
+    /// Registered solver names (sorted).
+    pub fn solver_names(&self) -> Vec<String> {
+        self.solvers.keys().cloned().collect()
+    }
+
+    /// Human-readable listing (the CLI `registry` subcommand).
+    pub fn describe(&self) -> String {
+        let mut s = String::from("problems:\n");
+        for (name, e) in &self.problems {
+            s.push_str(&format!("  {name:<14} {}\n", e.about));
+        }
+        s.push_str("solvers:\n");
+        for (name, e) in &self.solvers {
+            s.push_str(&format!("  {name:<14} {}\n", e.about));
+        }
+        s
+    }
+
+    /// Build a problem instance from its spec.
+    pub fn build_problem(&self, spec: &ProblemSpec) -> Result<ProblemHandle> {
+        spec.validate()?;
+        let name = canonical_problem_name(&spec.kind);
+        let entry = self
+            .problems
+            .get(name)
+            .ok_or_else(|| unknown_name_error("problem", name, self.problems.keys()))?;
+        (entry.ctor)(spec)
+    }
+
+    /// Build a solver from its spec.
+    pub fn build_solver(&self, spec: &SolverSpec) -> Result<Box<dyn DynSolver>> {
+        let entry = self
+            .solvers
+            .get(&spec.name)
+            .ok_or_else(|| unknown_name_error("solver", &spec.name, self.solvers.keys()))?;
+        (entry.ctor)(spec)
+    }
+}
+
+/// Aliases accepted for problem kinds (the TOML grammar allows both
+/// spellings; `logistic` matches the config layer).
+fn canonical_problem_name(name: &str) -> &str {
+    match name {
+        "group-lasso" => "group_lasso",
+        "logistic" => "logreg",
+        other => other,
+    }
+}
+
+/// Build the "unknown name" error: nearest registered name + full list.
+fn unknown_name_error<'a>(
+    what: &str,
+    name: &str,
+    known: impl Iterator<Item = &'a String>,
+) -> anyhow::Error {
+    let known: Vec<&String> = known.collect();
+    let suggestion = known
+        .iter()
+        .map(|k| (edit_distance(name, k.as_str()), *k))
+        .min()
+        .map(|(_, k)| format!(" — did you mean `{k}`?"))
+        .unwrap_or_default();
+    let list = known.iter().map(|s| s.as_str()).collect::<Vec<_>>().join(", ");
+    anyhow!("unknown {what} `{name}`{suggestion} (registered: {list})")
+}
+
+/// Levenshtein edit distance (small inputs; O(|a|·|b|)).
+fn edit_distance(a: &str, b: &str) -> usize {
+    let a: Vec<char> = a.chars().collect();
+    let b: Vec<char> = b.chars().collect();
+    let mut prev: Vec<usize> = (0..=b.len()).collect();
+    let mut cur = vec![0; b.len() + 1];
+    for (i, &ca) in a.iter().enumerate() {
+        cur[0] = i + 1;
+        for (j, &cb) in b.iter().enumerate() {
+            let sub = prev[j] + usize::from(ca != cb);
+            cur[j + 1] = sub.min(prev[j + 1] + 1).min(cur[j] + 1);
+        }
+        std::mem::swap(&mut prev, &mut cur);
+    }
+    prev[b.len()]
+}
+
+// ---------------------------------------------------------------------------
+// Default problem constructors.
+// ---------------------------------------------------------------------------
+
+fn build_lasso(spec: &ProblemSpec) -> Result<ProblemHandle> {
+    let inst = NesterovLasso::new(spec.rows, spec.cols, spec.sparsity, spec.c)
+        .seed(spec.seed)
+        .generate();
+    let layout =
+        (spec.block_size > 1).then(|| BlockLayout::uniform(spec.cols, spec.block_size));
+    let problem =
+        Lasso::with_layout(inst.a, inst.b, inst.c, layout).with_opt_value(inst.v_star);
+    Ok(ProblemHandle::least_squares(problem))
+}
+
+fn build_group_lasso(spec: &ProblemSpec) -> Result<ProblemHandle> {
+    // Reuse the Nesterov generator for A and b: its scalar-sparse planted
+    // solution has group structure at block level. The group-l2 objective
+    // differs from the generator's l1 certificate, so no V* is planted.
+    let inst = NesterovLasso::new(spec.rows, spec.cols, spec.sparsity, spec.c)
+        .seed(spec.seed)
+        .generate();
+    let problem = GroupLasso::new(inst.a, inst.b, inst.c, spec.block_size);
+    Ok(ProblemHandle::least_squares(problem))
+}
+
+fn build_logreg(spec: &ProblemSpec) -> Result<ProblemHandle> {
+    let inst = SparseClassification::new(spec.rows, spec.cols, spec.sparsity)
+        .seed(spec.seed)
+        .label_noise(spec.label_noise)
+        .generate();
+    Ok(ProblemHandle::general(SparseLogReg::new(inst.m, spec.c)))
+}
+
+fn build_svm(spec: &ProblemSpec) -> Result<ProblemHandle> {
+    let inst = SparseClassification::new(spec.rows, spec.cols, spec.sparsity)
+        .seed(spec.seed)
+        .label_noise(spec.label_noise)
+        .generate();
+    Ok(ProblemHandle::general(L1L2Svm::new(inst.m, spec.c)))
+}
+
+// ---------------------------------------------------------------------------
+// Default solver constructors + DynSolver adapters.
+// ---------------------------------------------------------------------------
+
+/// Merge a spec's typed option fields into [`FpaOptions`].
+fn fpa_options_from_spec(spec: &SolverSpec) -> FpaOptions {
+    let mut o = FpaOptions::default();
+    if let Some(s) = spec.surrogate {
+        o.surrogate = s;
+    }
+    if let Some(sel) = &spec.selection {
+        o.selection = sel.clone();
+    }
+    if let Some(step) = &spec.step {
+        o.step = step.clone();
+    }
+    if spec.tau0.is_some() {
+        o.tau0 = spec.tau0;
+    }
+    if let Some(adapt) = spec.tau_adapt {
+        o.tau_adapt = adapt;
+    }
+    if spec.inexact.is_some() {
+        o.inexact = spec.inexact;
+    }
+    o
+}
+
+struct FpaDyn {
+    inner: Fpa,
+}
+
+impl DynSolver for FpaDyn {
+    fn name(&self) -> String {
+        self.inner.label().to_string()
+    }
+
+    fn solve_session(&mut self, problem: &ProblemHandle, opts: &SolveOptions) -> Result<SolveReport> {
+        Ok(match problem {
+            // Least-squares fast path: incremental residual maintenance.
+            ProblemHandle::LeastSquares(p) => self.inner.solve_ls(p.as_ref(), opts),
+            ProblemHandle::General(p) => self.inner.solve(p.as_ref(), opts),
+        })
+    }
+}
+
+fn build_fpa(spec: &SolverSpec) -> Result<Box<dyn DynSolver>> {
+    Ok(Box::new(FpaDyn { inner: Fpa::new(fpa_options_from_spec(spec)) }))
+}
+
+struct ParallelFpaDyn {
+    inner: ParallelFpa,
+}
+
+impl DynSolver for ParallelFpaDyn {
+    fn name(&self) -> String {
+        format!("pfpa-w{}", self.inner.workers)
+    }
+
+    fn solve_session(&mut self, problem: &ProblemHandle, opts: &SolveOptions) -> Result<SolveReport> {
+        match problem {
+            ProblemHandle::LeastSquares(p) => Ok(self.inner.solve(p.as_ref(), opts)),
+            ProblemHandle::General(_) => bail!(
+                "solver `pfpa` requires least-squares structure (F = ‖Ax−b‖²); \
+                 use problems `lasso` or `group_lasso`, or solver `fpa`"
+            ),
+        }
+    }
+}
+
+fn build_pfpa(spec: &SolverSpec) -> Result<Box<dyn DynSolver>> {
+    let workers = spec.param_or("workers", 4.0) as usize;
+    if workers == 0 {
+        bail!("pfpa: `workers` must be >= 1");
+    }
+    Ok(Box::new(ParallelFpaDyn { inner: ParallelFpa::new(workers, fpa_options_from_spec(spec)) }))
+}
+
+struct FistaDyn {
+    inner: Fista,
+    label: String,
+}
+
+impl DynSolver for FistaDyn {
+    fn name(&self) -> String {
+        self.label.clone()
+    }
+
+    fn solve_session(&mut self, problem: &ProblemHandle, opts: &SolveOptions) -> Result<SolveReport> {
+        Ok(match problem {
+            ProblemHandle::LeastSquares(p) => self.inner.solve(p.as_ref(), opts),
+            ProblemHandle::General(p) => self.inner.solve(p.as_ref(), opts),
+        })
+    }
+}
+
+fn build_fista(spec: &SolverSpec) -> Result<Box<dyn DynSolver>> {
+    let opts = FistaOptions {
+        step: spec.param("step"),
+        adaptive_restart: spec.param_or("restart", 0.0) != 0.0,
+    };
+    let label = if opts.adaptive_restart { "fista-restart" } else { "fista" };
+    Ok(Box::new(FistaDyn { inner: Fista::new(opts), label: label.to_string() }))
+}
+
+struct IstaDyn {
+    inner: Ista,
+}
+
+impl DynSolver for IstaDyn {
+    fn name(&self) -> String {
+        "ista".into()
+    }
+
+    fn solve_session(&mut self, problem: &ProblemHandle, opts: &SolveOptions) -> Result<SolveReport> {
+        Ok(match problem {
+            ProblemHandle::LeastSquares(p) => self.inner.solve(p.as_ref(), opts),
+            ProblemHandle::General(p) => self.inner.solve(p.as_ref(), opts),
+        })
+    }
+}
+
+fn build_ista(spec: &SolverSpec) -> Result<Box<dyn DynSolver>> {
+    Ok(Box::new(IstaDyn { inner: Ista { step: spec.param("step") } }))
+}
+
+struct GrockDyn {
+    inner: Grock,
+}
+
+impl DynSolver for GrockDyn {
+    fn name(&self) -> String {
+        format!("grock-{}", self.inner.opts.p)
+    }
+
+    fn solve_session(&mut self, problem: &ProblemHandle, opts: &SolveOptions) -> Result<SolveReport> {
+        Ok(match problem {
+            ProblemHandle::LeastSquares(p) => self.inner.solve(p.as_ref(), opts),
+            ProblemHandle::General(p) => self.inner.solve(p.as_ref(), opts),
+        })
+    }
+}
+
+fn build_grock(spec: &SolverSpec) -> Result<Box<dyn DynSolver>> {
+    let p = spec.param_or("p", 16.0) as usize;
+    if p == 0 {
+        bail!("grock: `p` must be >= 1");
+    }
+    Ok(Box::new(GrockDyn { inner: Grock::new(p) }))
+}
+
+struct GaussSeidelDyn {
+    inner: GaussSeidel,
+}
+
+impl DynSolver for GaussSeidelDyn {
+    fn name(&self) -> String {
+        "gauss-seidel".into()
+    }
+
+    fn solve_session(&mut self, problem: &ProblemHandle, opts: &SolveOptions) -> Result<SolveReport> {
+        match problem {
+            ProblemHandle::LeastSquares(p) => Ok(self.inner.solve(p.as_ref(), opts)),
+            ProblemHandle::General(_) => bail!(
+                "solver `gauss-seidel` requires least-squares structure (F = ‖Ax−b‖²); \
+                 use problems `lasso` or `group_lasso`, or a gradient-based solver"
+            ),
+        }
+    }
+}
+
+fn build_gauss_seidel(spec: &SolverSpec) -> Result<Box<dyn DynSolver>> {
+    let order = if spec.param_or("symmetric", 0.0) != 0.0 {
+        SweepOrder::Symmetric
+    } else {
+        SweepOrder::Cyclic
+    };
+    let damping = spec.param_or("damping", 0.0);
+    Ok(Box::new(GaussSeidelDyn { inner: GaussSeidel { order, damping } }))
+}
+
+struct AdmmDyn {
+    inner: Admm,
+}
+
+impl DynSolver for AdmmDyn {
+    fn name(&self) -> String {
+        "admm".into()
+    }
+
+    fn solve_session(&mut self, problem: &ProblemHandle, opts: &SolveOptions) -> Result<SolveReport> {
+        match problem {
+            ProblemHandle::LeastSquares(p) => Ok(self.inner.solve(p.as_ref(), opts)),
+            ProblemHandle::General(_) => bail!(
+                "solver `admm` requires least-squares structure (F = ‖Ax−b‖²); \
+                 use problems `lasso` or `group_lasso`, or a gradient-based solver"
+            ),
+        }
+    }
+}
+
+fn build_admm(spec: &SolverSpec) -> Result<Box<dyn DynSolver>> {
+    let rho = spec.param_or("rho", 1.0);
+    if rho <= 0.0 {
+        bail!("admm: `rho` must be positive");
+    }
+    Ok(Box::new(AdmmDyn { inner: Admm::new(AdmmOptions { rho, ..AdmmOptions::default() }) }))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn default_registry_lists_everything() {
+        let r = Registry::with_defaults();
+        let problems = r.problem_names();
+        for p in ["lasso", "group_lasso", "logreg", "svm"] {
+            assert!(problems.iter().any(|n| n == p), "missing problem {p}");
+        }
+        let solvers = r.solver_names();
+        for s in ["fpa", "pfpa", "fista", "ista", "grock", "gauss-seidel", "admm"] {
+            assert!(solvers.iter().any(|n| n == s), "missing solver {s}");
+        }
+        let d = r.describe();
+        assert!(d.contains("lasso") && d.contains("gauss-seidel"));
+    }
+
+    #[test]
+    fn unknown_names_suggest_nearest() {
+        let r = Registry::with_defaults();
+        let err = r.build_solver(&SolverSpec::new("fpaa")).unwrap_err().to_string();
+        assert!(err.contains("did you mean `fpa`"), "{err}");
+        assert!(err.contains("registered:"), "{err}");
+        let err = r.build_problem(&ProblemSpec::new("laso").with_seed(1)).unwrap_err().to_string();
+        assert!(err.contains("did you mean `lasso`"), "{err}");
+    }
+
+    #[test]
+    fn problem_aliases_resolve() {
+        let r = Registry::with_defaults();
+        // Tiny instances to keep the test fast.
+        let tiny = |kind: &str| ProblemSpec { kind: kind.into(), rows: 10, cols: 20, ..Default::default() };
+        assert!(r.build_problem(&tiny("group-lasso")).unwrap().is_least_squares());
+        assert!(!r.build_problem(&tiny("logistic")).unwrap().is_least_squares());
+    }
+
+    #[test]
+    fn edit_distance_basics() {
+        assert_eq!(edit_distance("fpa", "fpa"), 0);
+        assert_eq!(edit_distance("fpaa", "fpa"), 1);
+        assert_eq!(edit_distance("gaus-seidel", "gauss-seidel"), 1);
+        assert_eq!(edit_distance("", "abc"), 3);
+    }
+
+    #[test]
+    fn runtime_registration_overrides_and_extends() {
+        let mut r = Registry::with_defaults();
+        r.register_solver("my-ista", "custom", Box::new(build_ista));
+        assert!(r.solver_names().iter().any(|n| n == "my-ista"));
+        assert!(r.build_solver(&SolverSpec::new("my-ista")).is_ok());
+    }
+}

@@ -1,0 +1,266 @@
+//! The fluent [`Session`] builder — the one way to construct and run a
+//! solve — plus the type-erased problem/solver handles it operates on.
+
+use super::events::EventObserver;
+use super::registry::Registry;
+use super::spec::{ProblemSpec, SolverSpec};
+use crate::algos::{SolveOptions, SolveReport};
+use crate::problems::{CompositeProblem, LeastSquares};
+use anyhow::{bail, Result};
+use std::sync::Arc;
+
+/// A type-erased problem instance.
+///
+/// The two variants record the *capability* of the underlying problem:
+/// least-squares problems (`F = ‖Ax − b‖²`) expose the residual structure
+/// that the sequential baselines (Gauss–Seidel, ADMM) and the FPA
+/// incremental-residual fast path exploit; general composite problems
+/// (logistic regression, SVM) only expose [`CompositeProblem`].
+pub enum ProblemHandle {
+    /// A general composite problem `min F(x) + G(x)`.
+    General(Box<dyn CompositeProblem + Send>),
+    /// A problem with least-squares smooth part.
+    LeastSquares(Box<dyn LeastSquares + Send>),
+}
+
+impl ProblemHandle {
+    /// Wrap a general composite problem.
+    pub fn general(problem: impl CompositeProblem + Send + 'static) -> Self {
+        Self::General(Box::new(problem))
+    }
+
+    /// Wrap a least-squares problem (keeps the fast-path capability).
+    pub fn least_squares(problem: impl LeastSquares + Send + 'static) -> Self {
+        Self::LeastSquares(Box::new(problem))
+    }
+
+    /// Number of variables.
+    pub fn n(&self) -> usize {
+        match self {
+            Self::General(p) => p.n(),
+            Self::LeastSquares(p) => p.n(),
+        }
+    }
+
+    /// Number of blocks in the decomposition.
+    pub fn num_blocks(&self) -> usize {
+        match self {
+            Self::General(p) => p.layout().num_blocks(),
+            Self::LeastSquares(p) => p.layout().num_blocks(),
+        }
+    }
+
+    /// Objective `V(x)`.
+    pub fn objective(&self, x: &[f64]) -> f64 {
+        match self {
+            Self::General(p) => p.objective(x),
+            Self::LeastSquares(p) => p.objective(x),
+        }
+    }
+
+    /// Known optimal value for planted instances.
+    pub fn opt_value(&self) -> Option<f64> {
+        match self {
+            Self::General(p) => p.opt_value(),
+            Self::LeastSquares(p) => p.opt_value(),
+        }
+    }
+
+    /// True if the problem exposes the least-squares structure.
+    pub fn is_least_squares(&self) -> bool {
+        matches!(self, Self::LeastSquares(_))
+    }
+}
+
+/// A type-erased, session-runnable solver.
+///
+/// Implementations adapt the statically-typed [`crate::algos::Solver`]
+/// machinery to [`ProblemHandle`]s: solvers that need least-squares
+/// structure return an error on general problems (rather than panicking),
+/// and least-squares-aware solvers pick their fast path when the handle
+/// provides it.
+pub trait DynSolver {
+    /// Display name (legends, CSV, event stream).
+    fn name(&self) -> String;
+    /// Run the solve.
+    fn solve_session(&mut self, problem: &ProblemHandle, opts: &SolveOptions)
+        -> Result<SolveReport>;
+}
+
+/// Result of a [`Session`] run: the underlying [`SolveReport`] plus the
+/// resolved problem/solver names (useful when the session was built from
+/// specs parsed out of a config file or an RPC payload).
+pub struct SessionReport {
+    /// Problem registry name (or `custom` for pre-built handles).
+    pub problem: String,
+    /// Solver display name.
+    pub solver: String,
+    /// The solve result.
+    pub report: SolveReport,
+}
+
+impl std::ops::Deref for SessionReport {
+    type Target = SolveReport;
+    fn deref(&self) -> &SolveReport {
+        &self.report
+    }
+}
+
+/// Fluent builder for one solve.
+///
+/// ```no_run
+/// use flexa::api::{CollectObserver, ProblemSpec, Session, SolverSpec};
+///
+/// # fn main() -> anyhow::Result<()> {
+/// let observer = CollectObserver::new();
+/// let run = Session::problem(ProblemSpec::lasso(200, 1000).with_seed(7))
+///     .solver(SolverSpec::parse("fpa")?)
+///     .options(flexa::algos::SolveOptions::default().with_target(1e-6))
+///     .observer(observer.clone())
+///     .run()?;
+/// println!("{}: V = {:.6} after {} iterations ({} events streamed)",
+///     run.solver, run.objective, run.iterations, observer.len());
+/// # Ok(())
+/// # }
+/// ```
+pub struct Session {
+    problem_spec: Option<ProblemSpec>,
+    problem: Option<ProblemHandle>,
+    solver_spec: Option<SolverSpec>,
+    solver: Option<Box<dyn DynSolver>>,
+    opts: SolveOptions,
+    observer: Option<Arc<dyn EventObserver>>,
+    registry: Option<Registry>,
+}
+
+impl Session {
+    fn empty() -> Self {
+        Self {
+            problem_spec: None,
+            problem: None,
+            solver_spec: None,
+            solver: None,
+            opts: SolveOptions::default(),
+            observer: None,
+            registry: None,
+        }
+    }
+
+    /// Start a session from a problem descriptor (the registry builds the
+    /// instance at [`Self::run`] time).
+    pub fn problem(spec: ProblemSpec) -> Self {
+        Self { problem_spec: Some(spec), ..Self::empty() }
+    }
+
+    /// Start a session from a pre-built problem instance (e.g. a problem
+    /// over user data that no generator describes).
+    pub fn with_problem(handle: ProblemHandle) -> Self {
+        Self { problem: Some(handle), ..Self::empty() }
+    }
+
+    /// Choose the solver by descriptor.
+    pub fn solver(mut self, spec: SolverSpec) -> Self {
+        self.solver_spec = Some(spec);
+        self
+    }
+
+    /// Choose the solver by CLI-grammar name (`"fpa-rho-0.5"`, …).
+    pub fn solver_named(self, name: &str) -> Result<Self> {
+        Ok(self.solver(SolverSpec::parse(name)?))
+    }
+
+    /// Use a pre-built solver (bypasses the registry; the escape hatch for
+    /// solvers with un-serializable state, e.g. the XLA-backed FPA).
+    pub fn with_solver(mut self, solver: Box<dyn DynSolver>) -> Self {
+        self.solver = Some(solver);
+        self
+    }
+
+    /// Solve options (iteration/time caps, cost model, trace cadence).
+    pub fn options(mut self, opts: SolveOptions) -> Self {
+        self.opts = opts;
+        self
+    }
+
+    /// Attach a streaming observer (overrides any observer already set on
+    /// the options).
+    pub fn observer(mut self, observer: Arc<dyn EventObserver>) -> Self {
+        self.observer = Some(observer);
+        self
+    }
+
+    /// Use a custom registry (defaults to [`Registry::with_defaults`]).
+    pub fn registry(mut self, registry: Registry) -> Self {
+        self.registry = Some(registry);
+        self
+    }
+
+    /// Resolve specs through the registry and run the solve.
+    pub fn run(self) -> Result<SessionReport> {
+        let Session { problem_spec, problem, solver_spec, solver, mut opts, observer, registry } =
+            self;
+        let default_registry;
+        let registry = match &registry {
+            Some(r) => r,
+            None => {
+                default_registry = Registry::with_defaults();
+                &default_registry
+            }
+        };
+
+        let problem_name = match (&problem, &problem_spec) {
+            (Some(_), _) => "custom".to_string(),
+            (None, Some(spec)) => spec.kind.clone(),
+            (None, None) => bail!(
+                "session has no problem: start with Session::problem(spec) or Session::with_problem(handle)"
+            ),
+        };
+        let problem = match (problem, &problem_spec) {
+            (Some(h), _) => h,
+            (None, Some(spec)) => registry.build_problem(spec)?,
+            (None, None) => unreachable!("checked above"),
+        };
+
+        let mut solver = match (solver, &solver_spec) {
+            (Some(s), _) => s,
+            (None, Some(spec)) => registry.build_solver(spec)?,
+            (None, None) => bail!(
+                "session has no solver: add .solver(spec), .solver_named(name) or .with_solver(boxed)"
+            ),
+        };
+
+        if let Some(obs) = observer {
+            opts.observer = Some(obs);
+        }
+        let report = solver.solve_session(&problem, &opts)?;
+        if let Some(obs) = &opts.observer {
+            obs.on_finish(&solver.name(), report.converged, report.objective);
+        }
+        Ok(SessionReport { problem: problem_name, solver: solver.name(), report })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn session_requires_problem_and_solver() {
+        let err = Session::empty().run().unwrap_err().to_string();
+        assert!(err.contains("no problem"), "{err}");
+        let err = Session::problem(ProblemSpec::lasso(10, 20)).run().unwrap_err().to_string();
+        assert!(err.contains("no solver"), "{err}");
+    }
+
+    #[test]
+    fn handle_capability_flags() {
+        let inst = crate::datagen::NesterovLasso::new(10, 20, 0.1, 1.0).seed(5).generate();
+        let lasso = crate::problems::lasso::Lasso::new(inst.a, inst.b, inst.c);
+        let h = ProblemHandle::least_squares(lasso);
+        assert!(h.is_least_squares());
+        assert_eq!(h.n(), 20);
+        assert_eq!(h.num_blocks(), 20);
+        assert!(h.opt_value().is_none());
+        assert!(h.objective(&vec![0.0; 20]).is_finite());
+    }
+}

@@ -1,0 +1,647 @@
+//! Serializable problem/solver descriptors.
+//!
+//! A [`ProblemSpec`] describes a *planted instance* of one of the paper's
+//! four problem families; a [`SolverSpec`] names a solver plus the full
+//! option space of the framework (surrogate `Pᵢ`, selection rule `Sᵏ`,
+//! step-size rule γᵏ, τ adaptation, Theorem 1(v) inexactness). Both are
+//! plain data: they can be built fluently, parsed from the CLI/TOML string
+//! grammar, rendered back to TOML, and shipped across a process boundary —
+//! the [`super::Registry`] turns them into live objects.
+
+use crate::algos::fpa::{Inexactness, Surrogate};
+use crate::config::experiment::AlgoConfig;
+use crate::select::SelectionRule;
+use crate::stepsize::StepSize;
+use anyhow::{anyhow, bail, Result};
+
+/// Descriptor of a planted problem instance.
+///
+/// `kind` is a registry name (`lasso`, `group_lasso`, `logreg`, `svm` by
+/// default). Generation is deterministic in `seed`, so a spec is a
+/// complete, reproducible description of the instance.
+#[derive(Clone, Debug, PartialEq)]
+pub struct ProblemSpec {
+    /// Registry name of the problem family.
+    pub kind: String,
+    /// Rows of `A` / number of samples.
+    pub rows: usize,
+    /// Columns of `A` / number of variables.
+    pub cols: usize,
+    /// Fraction of non-zeros in the planted solution / true hyperplane.
+    pub sparsity: f64,
+    /// Regularization weight `c`.
+    pub c: f64,
+    /// Variables per block (1 = scalar blocks, the paper's Lasso setting).
+    pub block_size: usize,
+    /// Instance seed (generation is a pure function of the spec).
+    pub seed: u64,
+    /// Label-flip probability for the classification generators
+    /// (`logreg`, `svm`); ignored by the least-squares families.
+    pub label_noise: f64,
+}
+
+impl Default for ProblemSpec {
+    fn default() -> Self {
+        Self {
+            kind: "lasso".into(),
+            rows: 2000,
+            cols: 10000,
+            sparsity: 0.1,
+            c: 1.0,
+            block_size: 1,
+            seed: 20131311, // arXiv 1311.2444
+            label_noise: 0.02,
+        }
+    }
+}
+
+impl ProblemSpec {
+    /// Spec for an arbitrary registry problem name.
+    pub fn new(kind: &str) -> Self {
+        Self { kind: kind.to_string(), ..Default::default() }
+    }
+
+    /// ℓ₁-regularized least squares (the paper's evaluation workload).
+    pub fn lasso(rows: usize, cols: usize) -> Self {
+        Self { rows, cols, ..Self::new("lasso") }
+    }
+
+    /// Group Lasso with uniform blocks of `block_size` variables.
+    pub fn group_lasso(rows: usize, cols: usize, block_size: usize) -> Self {
+        Self { rows, cols, block_size, ..Self::new("group_lasso") }
+    }
+
+    /// ℓ₁-regularized logistic regression on a planted classification
+    /// instance (`rows` samples × `cols` features).
+    pub fn logreg(samples: usize, features: usize) -> Self {
+        Self { rows: samples, cols: features, ..Self::new("logreg") }
+    }
+
+    /// ℓ₁-regularized squared-hinge SVM on a planted classification
+    /// instance.
+    pub fn svm(samples: usize, features: usize) -> Self {
+        Self { rows: samples, cols: features, ..Self::new("svm") }
+    }
+
+    pub fn with_dims(mut self, rows: usize, cols: usize) -> Self {
+        self.rows = rows;
+        self.cols = cols;
+        self
+    }
+
+    pub fn with_sparsity(mut self, sparsity: f64) -> Self {
+        self.sparsity = sparsity;
+        self
+    }
+
+    pub fn with_c(mut self, c: f64) -> Self {
+        self.c = c;
+        self
+    }
+
+    pub fn with_block_size(mut self, block_size: usize) -> Self {
+        self.block_size = block_size;
+        self
+    }
+
+    pub fn with_seed(mut self, seed: u64) -> Self {
+        self.seed = seed;
+        self
+    }
+
+    pub fn with_label_noise(mut self, p: f64) -> Self {
+        self.label_noise = p;
+        self
+    }
+
+    /// Sanity-check parameter ranges (mirrors the TOML config validation).
+    pub fn validate(&self) -> Result<()> {
+        if self.kind.is_empty() {
+            bail!("problem kind must be non-empty");
+        }
+        if self.rows == 0 || self.cols == 0 {
+            bail!("problem dimensions must be positive");
+        }
+        if !(0.0..=1.0).contains(&self.sparsity) {
+            bail!("sparsity must be in [0, 1]");
+        }
+        if self.c <= 0.0 {
+            bail!("regularization weight c must be positive");
+        }
+        if self.block_size == 0 || self.block_size > self.cols {
+            bail!("block_size must be in [1, cols]");
+        }
+        if !(0.0..0.5).contains(&self.label_noise) {
+            bail!("label_noise must be in [0, 0.5)");
+        }
+        Ok(())
+    }
+
+    /// Render as a TOML `[problem]` table (round-trips via
+    /// [`Self::from_toml`]).
+    pub fn to_toml(&self) -> String {
+        format!(
+            "[problem]\nkind = \"{}\"\nrows = {}\ncols = {}\nsparsity = {}\nc = {}\nblock_size = {}\nseed = {}\nlabel_noise = {}\n",
+            self.kind,
+            self.rows,
+            self.cols,
+            self.sparsity,
+            self.c,
+            self.block_size,
+            self.seed,
+            self.label_noise
+        )
+    }
+
+    /// Parse from TOML text containing a `[problem]` table (missing keys
+    /// keep their defaults).
+    pub fn from_toml(text: &str) -> Result<Self> {
+        let doc = crate::config::toml::parse(text).map_err(|e| anyhow!("{e}"))?;
+        let mut spec = Self::default();
+        let get = |key: &str| doc.get(&format!("problem.{key}")).cloned();
+        if let Some(v) = get("kind") {
+            spec.kind = v.as_str().ok_or_else(|| anyhow!("problem.kind must be a string"))?.to_string();
+        }
+        let int = |key: &str, out: &mut usize| -> Result<()> {
+            if let Some(v) = get(key) {
+                let i = v.as_int().ok_or_else(|| anyhow!("problem.{key} must be an integer"))?;
+                *out = usize::try_from(i).map_err(|_| anyhow!("problem.{key} must be non-negative"))?;
+            }
+            Ok(())
+        };
+        int("rows", &mut spec.rows)?;
+        int("cols", &mut spec.cols)?;
+        int("block_size", &mut spec.block_size)?;
+        if let Some(v) = get("seed") {
+            let i = v.as_int().ok_or_else(|| anyhow!("problem.seed must be an integer"))?;
+            spec.seed = u64::try_from(i).map_err(|_| anyhow!("problem.seed must be non-negative"))?;
+        }
+        let float = |key: &str, out: &mut f64| -> Result<()> {
+            if let Some(v) = get(key) {
+                *out = v.as_float().ok_or_else(|| anyhow!("problem.{key} must be a number"))?;
+            }
+            Ok(())
+        };
+        float("sparsity", &mut spec.sparsity)?;
+        float("c", &mut spec.c)?;
+        float("label_noise", &mut spec.label_noise)?;
+        spec.validate()?;
+        Ok(spec)
+    }
+}
+
+impl std::fmt::Display for ProblemSpec {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(
+            f,
+            "{}[{}x{}, {:.0}% nnz, c={}, blocks of {}]",
+            self.kind,
+            self.rows,
+            self.cols,
+            self.sparsity * 100.0,
+            self.c,
+            self.block_size
+        )
+    }
+}
+
+/// Descriptor of a solver and its options.
+///
+/// `name` is a registry name; the optional fields cover the framework's
+/// full design space and are interpreted by the solver's constructor
+/// (fields a solver has no notion of are ignored — e.g. `surrogate` for
+/// FISTA). `params` holds free-form numeric knobs (`p` for GRock, `rho`
+/// for ADMM, `workers` for the threaded coordinator, …).
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct SolverSpec {
+    pub name: String,
+    pub surrogate: Option<Surrogate>,
+    pub selection: Option<SelectionRule>,
+    pub step: Option<StepSize>,
+    pub tau0: Option<f64>,
+    pub tau_adapt: Option<bool>,
+    pub inexact: Option<Inexactness>,
+    pub params: Vec<(String, f64)>,
+}
+
+impl SolverSpec {
+    pub fn new(name: &str) -> Self {
+        Self { name: name.to_string(), ..Default::default() }
+    }
+
+    /// Parse the CLI string grammar (backwards compatible with every name
+    /// the pre-registry dispatch accepted):
+    ///
+    /// * `fpa`, `fista`, `ista`, `grock`, `gauss-seidel` (alias `gs`),
+    ///   `admm`, `pfpa` — plain registry names;
+    /// * `fpa-jacobi` / `fpa-southwell` / `fpa-linear` / `fpa-inexact` —
+    ///   FPA variants (selection / surrogate / inexactness presets);
+    /// * `fpa-rho-<r>` — FPA with greedy selection threshold ρ = `<r>`;
+    /// * `fpa-top-<p>` — FPA updating the `<p>` largest-error blocks;
+    /// * `grock-<P>` — GRock applying `<P>` coordinate updates;
+    /// * anything else is passed through for the registry to resolve
+    ///   (custom solvers) or reject with a suggestion.
+    pub fn parse(text: &str) -> Result<Self> {
+        let text = text.trim();
+        if text.is_empty() {
+            bail!("empty solver name");
+        }
+        Ok(match text {
+            "gs" | "gauss-seidel" => Self::new("gauss-seidel"),
+            "fpa-jacobi" => Self::new("fpa").with_selection(SelectionRule::FullJacobi),
+            "fpa-southwell" => Self::new("fpa").with_selection(SelectionRule::GaussSouthwell),
+            "fpa-linear" => Self::new("fpa").with_surrogate(Surrogate::Linear),
+            "fpa-inexact" => Self::new("fpa").with_inexact(Inexactness {
+                alpha1: 0.01,
+                alpha2: 0.1,
+                seed: 99,
+            }),
+            _ => {
+                if let Some(rho) = text.strip_prefix("fpa-rho-") {
+                    let rho: f64 =
+                        rho.parse().map_err(|_| anyhow!("bad fpa rho `{rho}` (want a number in (0, 1])"))?;
+                    Self::new("fpa").with_selection(SelectionRule::GreedyRho { rho: check_rho(rho)? })
+                } else if let Some(p) = text.strip_prefix("fpa-top-") {
+                    let p: usize =
+                        p.parse().map_err(|_| anyhow!("bad fpa top-P `{p}` (want a positive integer)"))?;
+                    Self::new("fpa").with_selection(SelectionRule::TopP { p })
+                } else if let Some(p) = text.strip_prefix("grock-") {
+                    let p: usize =
+                        p.parse().map_err(|_| anyhow!("bad grock P `{p}` (want a positive integer)"))?;
+                    Self::new("grock").with_param("p", p as f64)
+                } else {
+                    Self::new(text)
+                }
+            }
+        })
+    }
+
+    /// Build from a TOML `[algo.<name>]` block: the legacy numeric
+    /// parameters plus the string-valued `selection` / `step` /
+    /// `surrogate` grammar (see [`Self::set_str_option`]).
+    pub fn from_algo_config(a: &AlgoConfig) -> Result<Self> {
+        let mut spec = Self::parse(&a.name)?;
+        for (k, v) in &a.params {
+            spec.set_num_option(k, *v)?;
+        }
+        for (k, v) in &a.str_params {
+            spec.set_str_option(k, v)?;
+        }
+        Ok(spec)
+    }
+
+    pub fn with_surrogate(mut self, s: Surrogate) -> Self {
+        self.surrogate = Some(s);
+        self
+    }
+
+    pub fn with_selection(mut self, rule: SelectionRule) -> Self {
+        self.selection = Some(rule);
+        self
+    }
+
+    pub fn with_step(mut self, step: StepSize) -> Self {
+        self.step = Some(step);
+        self
+    }
+
+    pub fn with_tau0(mut self, tau0: f64) -> Self {
+        self.tau0 = Some(tau0);
+        self
+    }
+
+    pub fn with_tau_adapt(mut self, adapt: bool) -> Self {
+        self.tau_adapt = Some(adapt);
+        self
+    }
+
+    pub fn with_inexact(mut self, ix: Inexactness) -> Self {
+        self.inexact = Some(ix);
+        self
+    }
+
+    pub fn with_param(mut self, key: &str, value: f64) -> Self {
+        self.params.push((key.to_string(), value));
+        self
+    }
+
+    /// Last-set numeric parameter `key`, if any.
+    pub fn param(&self, key: &str) -> Option<f64> {
+        self.params.iter().rev().find(|(k, _)| k == key).map(|(_, v)| *v)
+    }
+
+    pub fn param_or(&self, key: &str, default: f64) -> f64 {
+        self.param(key).unwrap_or(default)
+    }
+
+    /// Interpret a numeric config parameter. Well-known keys map onto the
+    /// typed option fields; everything else lands in `params` for the
+    /// constructor to pick up.
+    pub fn set_num_option(&mut self, key: &str, value: f64) -> Result<()> {
+        match key {
+            "rho" if self.name == "fpa" || self.name == "pfpa" => {
+                self.selection = Some(SelectionRule::GreedyRho { rho: check_rho(value)? });
+            }
+            "gamma0" | "theta" => {
+                let (mut gamma0, mut theta) = match self.step {
+                    Some(StepSize::Diminishing { gamma0, theta }) => (gamma0, theta),
+                    _ => (0.9, 1e-5),
+                };
+                if key == "gamma0" {
+                    gamma0 = value;
+                } else {
+                    theta = value;
+                }
+                self.step = Some(StepSize::Diminishing { gamma0, theta });
+            }
+            "gamma" => self.step = Some(StepSize::Constant { gamma: value }),
+            "tau0" => self.tau0 = Some(value),
+            "tau_adapt" => self.tau_adapt = Some(value != 0.0),
+            "alpha1" | "alpha2" => {
+                let mut ix = self.inexact.unwrap_or(Inexactness { alpha1: 0.01, alpha2: 0.1, seed: 99 });
+                if key == "alpha1" {
+                    ix.alpha1 = value;
+                } else {
+                    ix.alpha2 = value;
+                }
+                self.inexact = Some(ix);
+            }
+            _ => self.params.push((key.to_string(), value)),
+        }
+        Ok(())
+    }
+
+    /// Interpret a string config parameter:
+    ///
+    /// * `surrogate = "linear" | "diag"`;
+    /// * `selection = "jacobi" | "southwell" | "greedy:<rho>" |
+    ///   "top:<p>" | "cyclic:<batch>" | "random:<count>[:<seed>]"`;
+    /// * `step = "diminishing:<gamma0>:<theta>" | "constant:<gamma>" |
+    ///   "armijo:<beta>:<sigma>[:<max_backtracks>]"`.
+    pub fn set_str_option(&mut self, key: &str, value: &str) -> Result<()> {
+        match key {
+            "surrogate" => self.surrogate = Some(parse_surrogate(value)?),
+            "selection" => self.selection = Some(parse_selection(value)?),
+            "step" => self.step = Some(parse_step(value)?),
+            other => bail!(
+                "unknown string parameter `{other}` (expected surrogate, selection or step; \
+                 numeric knobs go in as numbers)"
+            ),
+        }
+        Ok(())
+    }
+
+    /// Render as a TOML `[algo.<name>]` block (round-trips through
+    /// [`Self::from_algo_config`] given the matching `algos` entry).
+    pub fn to_toml(&self) -> String {
+        let mut s = format!("[algo.{}]\n", self.name);
+        if let Some(sur) = self.surrogate {
+            s.push_str(&format!("surrogate = \"{}\"\n", render_surrogate(sur)));
+        }
+        if let Some(sel) = &self.selection {
+            s.push_str(&format!("selection = \"{}\"\n", render_selection(sel)));
+        }
+        if let Some(step) = &self.step {
+            s.push_str(&format!("step = \"{}\"\n", render_step(step)));
+        }
+        if let Some(t) = self.tau0 {
+            s.push_str(&format!("tau0 = {t}\n"));
+        }
+        if let Some(t) = self.tau_adapt {
+            s.push_str(&format!("tau_adapt = {}\n", if t { 1 } else { 0 }));
+        }
+        if let Some(ix) = self.inexact {
+            s.push_str(&format!("alpha1 = {}\nalpha2 = {}\n", ix.alpha1, ix.alpha2));
+        }
+        for (k, v) in &self.params {
+            s.push_str(&format!("{k} = {v}\n"));
+        }
+        s
+    }
+}
+
+impl std::fmt::Display for SolverSpec {
+    /// Compact display name in the CLI grammar where one exists.
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match (self.name.as_str(), &self.selection, self.param("p")) {
+            ("grock", _, Some(p)) => write!(f, "grock-{}", p as usize),
+            ("fpa", Some(SelectionRule::FullJacobi), _) => write!(f, "fpa-jacobi"),
+            ("fpa", Some(SelectionRule::GaussSouthwell), _) => write!(f, "fpa-southwell"),
+            ("fpa", Some(SelectionRule::GreedyRho { rho }), _) => write!(f, "fpa-rho-{rho}"),
+            ("fpa", Some(SelectionRule::TopP { p }), _) => write!(f, "fpa-top-{p}"),
+            _ => write!(f, "{}", self.name),
+        }
+    }
+}
+
+/// Selector asserts ρ ∈ (0, 1] mid-solve; reject bad values at parse
+/// time so CLI/config typos are errors, not aborts.
+fn check_rho(rho: f64) -> Result<f64> {
+    if rho > 0.0 && rho <= 1.0 {
+        Ok(rho)
+    } else {
+        bail!("selection threshold rho must be in (0, 1], got {rho}")
+    }
+}
+
+fn parse_surrogate(s: &str) -> Result<Surrogate> {
+    Ok(match s {
+        "linear" => Surrogate::Linear,
+        "diag" | "diag_quadratic" | "quadratic" => Surrogate::DiagQuadratic,
+        other => bail!("unknown surrogate `{other}` (expected linear | diag)"),
+    })
+}
+
+fn render_surrogate(s: Surrogate) -> &'static str {
+    match s {
+        Surrogate::Linear => "linear",
+        Surrogate::DiagQuadratic => "diag",
+    }
+}
+
+fn parse_selection(s: &str) -> Result<SelectionRule> {
+    let parts: Vec<&str> = s.split(':').collect();
+    let num = |i: usize| -> Result<f64> {
+        parts
+            .get(i)
+            .ok_or_else(|| anyhow!("selection `{s}`: missing parameter"))?
+            .parse()
+            .map_err(|_| anyhow!("selection `{s}`: bad number"))
+    };
+    Ok(match parts[0] {
+        "jacobi" | "full" => SelectionRule::FullJacobi,
+        "southwell" | "max" => SelectionRule::GaussSouthwell,
+        "greedy" => SelectionRule::GreedyRho { rho: check_rho(num(1)?)? },
+        "top" => SelectionRule::TopP { p: num(1)? as usize },
+        "cyclic" => SelectionRule::Cyclic { batch: num(1)? as usize },
+        "random" => SelectionRule::Random {
+            count: num(1)? as usize,
+            seed: if parts.len() > 2 { num(2)? as u64 } else { 0x5E1EC7 },
+        },
+        other => bail!(
+            "unknown selection rule `{other}` \
+             (expected jacobi | southwell | greedy:<rho> | top:<p> | cyclic:<batch> | random:<count>[:<seed>])"
+        ),
+    })
+}
+
+fn render_selection(rule: &SelectionRule) -> String {
+    match rule {
+        SelectionRule::FullJacobi => "jacobi".into(),
+        SelectionRule::GaussSouthwell => "southwell".into(),
+        SelectionRule::GreedyRho { rho } => format!("greedy:{rho}"),
+        SelectionRule::TopP { p } => format!("top:{p}"),
+        SelectionRule::Cyclic { batch } => format!("cyclic:{batch}"),
+        SelectionRule::Random { count, seed } => format!("random:{count}:{seed}"),
+    }
+}
+
+fn parse_step(s: &str) -> Result<StepSize> {
+    let parts: Vec<&str> = s.split(':').collect();
+    let num = |i: usize| -> Result<f64> {
+        parts
+            .get(i)
+            .ok_or_else(|| anyhow!("step `{s}`: missing parameter"))?
+            .parse()
+            .map_err(|_| anyhow!("step `{s}`: bad number"))
+    };
+    Ok(match parts[0] {
+        "diminishing" => StepSize::Diminishing { gamma0: num(1)?, theta: num(2)? },
+        "constant" => StepSize::Constant { gamma: num(1)? },
+        "armijo" => StepSize::Armijo {
+            beta: num(1)?,
+            sigma: num(2)?,
+            max_backtracks: if parts.len() > 3 { num(3)? as usize } else { 30 },
+        },
+        other => bail!(
+            "unknown step rule `{other}` \
+             (expected diminishing:<gamma0>:<theta> | constant:<gamma> | armijo:<beta>:<sigma>[:<n>])"
+        ),
+    })
+}
+
+fn render_step(step: &StepSize) -> String {
+    match step {
+        StepSize::Diminishing { gamma0, theta } => format!("diminishing:{gamma0}:{theta}"),
+        StepSize::Constant { gamma } => format!("constant:{gamma}"),
+        StepSize::Armijo { beta, sigma, max_backtracks } => {
+            format!("armijo:{beta}:{sigma}:{max_backtracks}")
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn problem_spec_builders_and_validation() {
+        let s = ProblemSpec::lasso(100, 400).with_sparsity(0.05).with_c(2.0).with_seed(9);
+        assert_eq!(s.kind, "lasso");
+        assert_eq!(s.rows, 100);
+        assert_eq!(s.seed, 9);
+        assert!(s.validate().is_ok());
+        assert!(ProblemSpec::lasso(0, 10).validate().is_err());
+        assert!(ProblemSpec::lasso(10, 10).with_sparsity(1.5).validate().is_err());
+        assert!(ProblemSpec::lasso(10, 10).with_c(-1.0).validate().is_err());
+        assert!(ProblemSpec::group_lasso(10, 10, 0).validate().is_err());
+    }
+
+    #[test]
+    fn problem_spec_toml_roundtrip() {
+        let s = ProblemSpec::group_lasso(50, 200, 4).with_sparsity(0.2).with_seed(77);
+        let restored = ProblemSpec::from_toml(&s.to_toml()).unwrap();
+        assert_eq!(s, restored);
+    }
+
+    #[test]
+    fn problem_spec_toml_rejects_negative_ints() {
+        // Negative dimensions must be a parse error, not a usize wrap
+        // into an ~1.8e19-element allocation.
+        for bad in ["rows = -1", "cols = -5", "block_size = -2", "seed = -9"] {
+            let text = format!("[problem]\n{bad}\n");
+            let err = ProblemSpec::from_toml(&text).unwrap_err().to_string();
+            assert!(err.contains("non-negative"), "`{bad}`: {err}");
+        }
+    }
+
+    #[test]
+    fn rho_out_of_range_is_an_error_not_a_panic() {
+        // Selector asserts rho ∈ (0, 1] mid-solve; every spec entry
+        // point must reject bad values up front.
+        assert!(SolverSpec::parse("fpa-rho-0").is_err());
+        assert!(SolverSpec::parse("fpa-rho-1.5").is_err());
+        assert!(SolverSpec::parse("fpa-rho-0.5").is_ok());
+        assert!(SolverSpec::new("fpa").set_num_option("rho", 0.0).is_err());
+        assert!(SolverSpec::new("fpa").set_num_option("rho", 2.0).is_err());
+        assert!(SolverSpec::new("fpa").set_str_option("selection", "greedy:2").is_err());
+        assert!(SolverSpec::new("fpa").set_str_option("selection", "greedy:0.9").is_ok());
+    }
+
+    #[test]
+    fn solver_spec_parses_legacy_grammar() {
+        assert_eq!(SolverSpec::parse("fpa").unwrap().name, "fpa");
+        assert_eq!(
+            SolverSpec::parse("fpa-jacobi").unwrap().selection,
+            Some(SelectionRule::FullJacobi)
+        );
+        assert_eq!(
+            SolverSpec::parse("fpa-rho-0.25").unwrap().selection,
+            Some(SelectionRule::GreedyRho { rho: 0.25 })
+        );
+        assert_eq!(SolverSpec::parse("fpa-linear").unwrap().surrogate, Some(Surrogate::Linear));
+        let grock = SolverSpec::parse("grock-16").unwrap();
+        assert_eq!(grock.name, "grock");
+        assert_eq!(grock.param("p"), Some(16.0));
+        assert_eq!(SolverSpec::parse("gs").unwrap().name, "gauss-seidel");
+        assert!(SolverSpec::parse("grock-x").is_err());
+        assert!(SolverSpec::parse("fpa-rho-zzz").is_err());
+        assert!(SolverSpec::parse("").is_err());
+        // Unknown names pass through (the registry rejects them).
+        assert_eq!(SolverSpec::parse("my-custom").unwrap().name, "my-custom");
+    }
+
+    #[test]
+    fn solver_spec_display_roundtrips_cli_names() {
+        for name in ["fpa", "fpa-jacobi", "fpa-rho-0.5", "grock-8", "fista", "admm"] {
+            let spec = SolverSpec::parse(name).unwrap();
+            assert_eq!(spec.to_string(), name, "display must round-trip `{name}`");
+        }
+    }
+
+    #[test]
+    fn num_options_map_to_typed_fields() {
+        let mut s = SolverSpec::new("fpa");
+        s.set_num_option("rho", 0.7).unwrap();
+        s.set_num_option("gamma0", 0.8).unwrap();
+        s.set_num_option("theta", 1e-4).unwrap();
+        s.set_num_option("tau0", 3.0).unwrap();
+        s.set_num_option("tau_adapt", 0.0).unwrap();
+        assert_eq!(s.selection, Some(SelectionRule::GreedyRho { rho: 0.7 }));
+        assert_eq!(s.step, Some(StepSize::Diminishing { gamma0: 0.8, theta: 1e-4 }));
+        assert_eq!(s.tau0, Some(3.0));
+        assert_eq!(s.tau_adapt, Some(false));
+        let mut g = SolverSpec::new("grock");
+        g.set_num_option("p", 4.0).unwrap();
+        assert_eq!(g.param("p"), Some(4.0));
+    }
+
+    #[test]
+    fn str_options_parse_and_render() {
+        let mut s = SolverSpec::new("fpa");
+        s.set_str_option("selection", "greedy:0.4").unwrap();
+        s.set_str_option("step", "constant:0.5").unwrap();
+        s.set_str_option("surrogate", "linear").unwrap();
+        assert_eq!(s.selection, Some(SelectionRule::GreedyRho { rho: 0.4 }));
+        assert_eq!(s.step, Some(StepSize::Constant { gamma: 0.5 }));
+        assert_eq!(s.surrogate, Some(Surrogate::Linear));
+        assert!(s.clone().set_str_option("bogus", "x").is_err());
+        assert!(SolverSpec::new("fpa").set_str_option("selection", "nope").is_err());
+        // Render → reparse.
+        assert_eq!(parse_selection(&render_selection(s.selection.as_ref().unwrap())).unwrap(), SelectionRule::GreedyRho { rho: 0.4 });
+        assert_eq!(parse_step(&render_step(s.step.as_ref().unwrap())).unwrap(), StepSize::Constant { gamma: 0.5 });
+        let toml = s.to_toml();
+        assert!(toml.contains("[algo.fpa]"));
+        assert!(toml.contains("selection = \"greedy:0.4\""));
+    }
+}

@@ -10,22 +10,16 @@
 //! | c     | 2 000 × 10 000   | 5 %          | 16    |
 //! | d     | 5 000 × 100 000  | 5 %          | 32    |
 //!
-//! The runner generates the Nesterov instance(s), runs the paper's
-//! algorithm set (FPA, parallel FISTA, GRock-1, GRock-P, sequential GS,
-//! sequential ADMM), records relative-error-vs-time traces (measured and
+//! The runner expresses each (algorithm × realization) cell as a
+//! [`ProblemSpec`]/[`SolverSpec`] pair and executes it through
+//! [`crate::api::Session`] — the same path the CLI and the TOML config
+//! layer use — records relative-error-vs-time traces (measured and
 //! simulated-parallel clocks) and writes one CSV per algorithm.
 
-use crate::algos::admm::Admm;
-use crate::algos::fista::Fista;
-use crate::algos::fpa::{Fpa, FpaOptions};
-use crate::algos::gauss_seidel::GaussSeidel;
-use crate::algos::grock::Grock;
-use crate::algos::{SolveOptions, Solver};
+use crate::algos::SolveOptions;
+use crate::api::{ProblemSpec, Session, SolverSpec};
 use crate::coordinator::CostModel;
-use crate::datagen::NesterovLasso;
 use crate::metrics::{write_trace_csv, AsciiPlot, Trace};
-use crate::problems::lasso::Lasso;
-use crate::select::SelectionRule;
 use anyhow::{bail, Result};
 use std::path::Path;
 
@@ -33,10 +27,14 @@ use std::path::Path;
 #[derive(Clone, Debug)]
 pub struct PanelSpec {
     pub name: String,
+    /// Problem registry name (`lasso` for every paper panel).
+    pub kind: String,
     pub rows: usize,
     pub cols: usize,
     pub sparsity: f64,
     pub c: f64,
+    /// Variables per block (1 = scalar blocks, the paper's setting).
+    pub block_size: usize,
     /// Simulated MPI process count (paper: 16 / 32).
     pub procs: usize,
     /// Instances averaged (paper: 10 / 3; default 1 for bench runtime).
@@ -59,10 +57,12 @@ impl PanelSpec {
         };
         Ok(Self {
             name: format!("fig1{panel}"),
+            kind: "lasso".into(),
             rows,
             cols,
             sparsity,
             c: 1.0,
+            block_size: 1,
             procs,
             realizations: 1,
             max_iters: 20_000,
@@ -70,6 +70,27 @@ impl PanelSpec {
             target_rel_err: 1e-6,
             seed: 0x1311_2444 + panel as u64,
         })
+    }
+
+    /// The one conversion point from a TOML experiment config (keeps
+    /// `flexa experiment` on the same wiring as `figure1` and the
+    /// benches).
+    pub fn from_experiment(cfg: &crate::config::ExperimentConfig) -> Self {
+        Self {
+            name: cfg.name.clone(),
+            kind: cfg.problem.kind.name().to_string(),
+            rows: cfg.problem.rows,
+            cols: cfg.problem.cols,
+            sparsity: cfg.problem.sparsity,
+            c: cfg.problem.c,
+            block_size: cfg.problem.block_size,
+            procs: cfg.procs,
+            realizations: cfg.realizations,
+            max_iters: cfg.max_iters,
+            max_seconds: cfg.max_seconds,
+            target_rel_err: cfg.target_rel_err,
+            seed: cfg.seed,
+        }
     }
 
     /// Linearly scale the problem size by `f` (for laptop-budget runs);
@@ -93,52 +114,41 @@ impl PanelSpec {
         self.max_seconds = max_seconds;
         self
     }
+
+    /// Problem descriptor for realization `r` (decorrelated seeds, same
+    /// stride the paper's averaged realizations use).
+    pub fn problem_spec(&self, realization: usize) -> ProblemSpec {
+        ProblemSpec::new(&self.kind)
+            .with_sparsity(self.sparsity)
+            .with_c(self.c)
+            .with_block_size(self.block_size)
+            .with_seed(self.seed.wrapping_add(realization as u64 * 0x9E37))
+            .with_dims(self.rows, self.cols)
+    }
+
+    /// Solve options shared by every cell of the panel.
+    pub fn solve_options(&self) -> SolveOptions {
+        SolveOptions::default()
+            .with_max_iters(self.max_iters)
+            .with_max_seconds(self.max_seconds)
+            .with_target(self.target_rel_err)
+            .with_cost_model(CostModel::mpi_node(self.procs))
+    }
 }
 
-/// The paper's algorithm line-up for a panel (`grock_p` = process count).
-pub fn paper_algos(procs: usize) -> Vec<String> {
-    vec![
-        "fpa".into(),
-        "fista".into(),
-        "grock-1".into(),
+/// The paper's algorithm line-up for a panel (`grock-<procs>`).
+pub fn paper_algos(procs: usize) -> Vec<SolverSpec> {
+    [
+        "fpa".to_string(),
+        "fista".to_string(),
+        "grock-1".to_string(),
         format!("grock-{procs}"),
-        "gauss-seidel".into(),
-        "admm".into(),
+        "gauss-seidel".to_string(),
+        "admm".to_string(),
     ]
-}
-
-/// Run one named solver on a Lasso instance.
-pub fn run_solver(name: &str, problem: &Lasso, opts: &SolveOptions) -> Result<Trace> {
-    let report = match name {
-        // The least-squares fast path (incremental residual) — same
-        // mathematics as `solve`, ~1.5x faster per iteration.
-        "fpa" => Fpa::paper_defaults(problem).solve_ls(problem, opts),
-        "fpa-jacobi" => Fpa::new(FpaOptions {
-            selection: SelectionRule::FullJacobi,
-            ..FpaOptions::default()
-        })
-        .solve_ls(problem, opts),
-        "fista" => Fista::default().solve(problem, opts),
-        "ista" => crate::algos::ista::Ista::default().solve(problem, opts),
-        "gauss-seidel" => GaussSeidel::default().solve(problem, opts),
-        "admm" => Admm::default().solve(problem, opts),
-        other => {
-            if let Some(p) = other.strip_prefix("grock-") {
-                let p: usize = p.parse().map_err(|_| anyhow::anyhow!("bad grock P `{p}`"))?;
-                Grock::new(p).solve(problem, opts)
-            } else if let Some(rho) = other.strip_prefix("fpa-rho-") {
-                let rho: f64 = rho.parse()?;
-                Fpa::new(FpaOptions {
-                    selection: SelectionRule::GreedyRho { rho },
-                    ..FpaOptions::default()
-                })
-                .solve_ls(problem, opts)
-            } else {
-                bail!("unknown solver `{other}`");
-            }
-        }
-    };
-    Ok(report.trace)
+    .iter()
+    .map(|name| SolverSpec::parse(name).expect("paper algo grammar"))
+    .collect()
 }
 
 /// Average several traces over realizations: aligns by iteration index
@@ -237,25 +247,22 @@ impl PanelResult {
     }
 }
 
-/// Run a full panel: all algorithms × realizations, CSVs into `out_dir`.
-pub fn run_panel(spec: &PanelSpec, algos: &[String], out_dir: Option<&Path>) -> Result<PanelResult> {
+/// Run a full panel: all algorithms × realizations through the session
+/// API, CSVs into `out_dir`.
+pub fn run_panel(
+    spec: &PanelSpec,
+    algos: &[SolverSpec],
+    out_dir: Option<&Path>,
+) -> Result<PanelResult> {
     let mut averaged = Vec::new();
     for algo in algos {
         let mut traces = Vec::new();
         for real in 0..spec.realizations {
-            let gen = NesterovLasso::new(spec.rows, spec.cols, spec.sparsity, spec.c)
-                .seed(spec.seed.wrapping_add(real as u64 * 0x9E37));
-            let inst = gen.generate();
-            let problem = Lasso::new(inst.a, inst.b, inst.c).with_opt_value(inst.v_star);
-            let opts = SolveOptions {
-                max_iters: spec.max_iters,
-                max_seconds: spec.max_seconds,
-                target_rel_err: spec.target_rel_err,
-                x0: None,
-                cost_model: CostModel::mpi_node(spec.procs),
-                record_every: 1,
-            };
-            traces.push(run_solver(algo, &problem, &opts)?);
+            let run = Session::problem(spec.problem_spec(real))
+                .solver(algo.clone())
+                .options(spec.solve_options())
+                .run()?;
+            traces.push(run.report.trace);
         }
         let avg = average_traces(&traces);
         if let Some(dir) = out_dir {
@@ -277,6 +284,7 @@ mod tests {
             let spec = PanelSpec::paper(p).unwrap();
             assert!(spec.rows >= 2000);
             assert!(spec.sparsity <= 0.2);
+            assert_eq!(spec.kind, "lasso");
         }
         assert!(PanelSpec::paper('x').is_err());
         let d = PanelSpec::paper('d').unwrap();
@@ -293,13 +301,25 @@ mod tests {
     }
 
     #[test]
+    fn problem_specs_decorrelate_realizations() {
+        let spec = PanelSpec::paper('b').unwrap();
+        let p0 = spec.problem_spec(0);
+        let p1 = spec.problem_spec(1);
+        assert_eq!(p0.rows, spec.rows);
+        assert_eq!(p0.sparsity, spec.sparsity);
+        assert_ne!(p0.seed, p1.seed);
+    }
+
+    #[test]
     fn tiny_panel_end_to_end() {
         let spec = PanelSpec {
             name: "tiny".into(),
+            kind: "lasso".into(),
             rows: 40,
             cols: 120,
             sparsity: 0.1,
             c: 1.0,
+            block_size: 1,
             procs: 4,
             realizations: 2,
             max_iters: 500,
@@ -307,7 +327,7 @@ mod tests {
             target_rel_err: 1e-4,
             seed: 42,
         };
-        let algos = vec!["fpa".to_string(), "gauss-seidel".to_string()];
+        let algos = [SolverSpec::parse("fpa").unwrap(), SolverSpec::parse("gauss-seidel").unwrap()];
         let result = run_panel(&spec, &algos, None).unwrap();
         assert_eq!(result.traces.len(), 2);
         for t in &result.traces {
@@ -351,10 +371,25 @@ mod tests {
     }
 
     #[test]
-    fn unknown_solver_rejected() {
-        let inst = NesterovLasso::new(10, 30, 0.1, 1.0).seed(1).generate();
-        let p = Lasso::new(inst.a, inst.b, inst.c);
-        assert!(run_solver("bogus", &p, &SolveOptions::default()).is_err());
-        assert!(run_solver("grock-x", &p, &SolveOptions::default()).is_err());
+    fn unknown_solver_rejected_with_suggestion() {
+        let spec = PanelSpec {
+            name: "tiny".into(),
+            kind: "lasso".into(),
+            rows: 10,
+            cols: 30,
+            sparsity: 0.1,
+            c: 1.0,
+            block_size: 1,
+            procs: 1,
+            realizations: 1,
+            max_iters: 5,
+            max_seconds: 5.0,
+            target_rel_err: 1e-4,
+            seed: 1,
+        };
+        let err = run_panel(&spec, &[SolverSpec::new("bogus")], None).unwrap_err().to_string();
+        assert!(err.contains("unknown solver"), "{err}");
+        assert!(err.contains("did you mean"), "{err}");
+        assert!(SolverSpec::parse("grock-x").is_err());
     }
 }

@@ -59,19 +59,41 @@ impl Default for ProblemConfig {
     }
 }
 
-/// Per-algorithm configuration: name + free-form numeric parameters.
+impl ProblemConfig {
+    /// Problem descriptor for the session API (generation is a pure
+    /// function of `(config, seed)`).
+    pub fn to_spec(&self, seed: u64) -> crate::api::ProblemSpec {
+        crate::api::ProblemSpec::new(self.kind.name())
+            .with_dims(self.rows, self.cols)
+            .with_sparsity(self.sparsity)
+            .with_c(self.c)
+            .with_block_size(self.block_size)
+            .with_seed(seed)
+    }
+}
+
+/// Per-algorithm configuration: name + free-form parameters.
+///
+/// Numeric parameters land in `params`; string parameters (the
+/// `selection` / `step` / `surrogate` grammar interpreted by
+/// [`crate::api::SolverSpec::set_str_option`]) land in `str_params`.
 #[derive(Clone, Debug, Default)]
 pub struct AlgoConfig {
     pub name: String,
     pub params: Vec<(String, f64)>,
+    pub str_params: Vec<(String, String)>,
 }
 
 impl AlgoConfig {
     pub fn new(name: &str) -> Self {
-        Self { name: name.to_string(), params: Vec::new() }
+        Self { name: name.to_string(), params: Vec::new(), str_params: Vec::new() }
     }
     pub fn with(mut self, key: &str, value: f64) -> Self {
         self.params.push((key.to_string(), value));
+        self
+    }
+    pub fn with_str(mut self, key: &str, value: &str) -> Self {
+        self.str_params.push((key.to_string(), value.to_string()));
         self
     }
     pub fn get(&self, key: &str) -> Option<f64> {
@@ -79,6 +101,9 @@ impl AlgoConfig {
     }
     pub fn get_or(&self, key: &str, default: f64) -> f64 {
         self.get(key).unwrap_or(default)
+    }
+    pub fn get_str(&self, key: &str) -> Option<&str> {
+        self.str_params.iter().rev().find(|(k, _)| k == key).map(|(_, v)| v.as_str())
     }
 }
 
@@ -194,15 +219,24 @@ impl ExperimentConfig {
             let prefix = format!("algo.{}.", algo.name);
             for (k, v) in doc.iter() {
                 if let Some(param) = k.strip_prefix(&prefix) {
-                    let f = v
-                        .as_float()
-                        .ok_or_else(|| anyhow!("algo param `{k}` must be numeric"))?;
-                    algo.params.push((param.to_string(), f));
+                    if let Some(f) = v.as_float() {
+                        algo.params.push((param.to_string(), f));
+                    } else if let Some(s) = v.as_str() {
+                        algo.str_params.push((param.to_string(), s.to_string()));
+                    } else {
+                        bail!("algo param `{k}` must be a number or a string");
+                    }
                 }
             }
         }
         cfg.validate()?;
         Ok(cfg)
+    }
+
+    /// Solver descriptors for every configured algorithm (numeric and
+    /// string parameters applied on top of the parsed name).
+    pub fn solver_specs(&self) -> Result<Vec<crate::api::SolverSpec>> {
+        self.algos.iter().map(crate::api::SolverSpec::from_algo_config).collect()
     }
 
     /// Sanity-check parameter ranges.
@@ -304,6 +338,28 @@ mod tests {
         assert!(ExperimentConfig::from_toml("realizations = 0").is_err());
         assert!(ExperimentConfig::from_toml("algos = []").is_err());
         assert!(ExperimentConfig::from_toml("algos = [1]").is_err());
+    }
+
+    #[test]
+    fn string_algo_params_and_spec_conversion() {
+        let cfg = ExperimentConfig::from_toml(
+            "algos = [\"fpa\", \"grock\"]\n\n[problem]\nkind = \"group_lasso\"\nrows = 50\ncols = 200\nblock_size = 4\n\n[algo.fpa]\nselection = \"greedy:0.8\"\nsurrogate = \"linear\"\n\n[algo.grock]\np = 8\n",
+        )
+        .unwrap();
+        assert_eq!(cfg.algos[0].get_str("selection"), Some("greedy:0.8"));
+        let specs = cfg.solver_specs().unwrap();
+        assert_eq!(specs.len(), 2);
+        assert_eq!(
+            specs[0].selection,
+            Some(crate::select::SelectionRule::GreedyRho { rho: 0.8 })
+        );
+        assert_eq!(specs[0].surrogate, Some(crate::algos::fpa::Surrogate::Linear));
+        assert_eq!(specs[1].param("p"), Some(8.0));
+        let pspec = cfg.problem.to_spec(cfg.seed);
+        assert_eq!(pspec.kind, "group_lasso");
+        assert_eq!(pspec.cols, 200);
+        assert_eq!(pspec.block_size, 4);
+        assert_eq!(pspec.seed, cfg.seed);
     }
 
     #[test]

@@ -66,7 +66,7 @@ impl ParallelFpa {
     /// Solve; the report's `sim_time_s` uses `opts.cost_model` (set
     /// `CostModel::mpi_node(P)` to reproduce the paper's 16/32-process
     /// time axis).
-    pub fn solve<P: LeastSquares>(&self, problem: &P, opts: &SolveOptions) -> SolveReport {
+    pub fn solve<P: LeastSquares + ?Sized>(&self, problem: &P, opts: &SolveOptions) -> SolveReport {
         let n = problem.n();
         let m = problem.rows();
         let layout = problem.layout().clone();
@@ -229,6 +229,7 @@ impl ParallelFpa {
                     + 2.0 * opts.cost_model.allreduce_s(reduce_bytes);
                 recorder.add_sim_time(sim);
 
+                recorder.note_step(gamma, tau);
                 let err = recorder.record(k, &x_vec, updated);
                 if recorder.reached(err) {
                     converged = true;
@@ -260,7 +261,7 @@ impl ParallelFpa {
 
 /// Worker event loop.
 #[allow(clippy::too_many_arguments)]
-fn worker_loop<P: LeastSquares>(
+fn worker_loop<P: LeastSquares + ?Sized>(
     id: usize,
     problem: &P,
     layout: &crate::problems::BlockLayout,

@@ -23,20 +23,35 @@
 //!
 //! ## Quick start
 //!
-//! ```no_run
-//! use flexa::datagen::NesterovLasso;
-//! use flexa::problems::lasso::Lasso;
-//! use flexa::algos::{fpa::Fpa, Solver, SolveOptions};
+//! Solves are described by serializable specs and run through the unified
+//! [`api::Session`] builder; the [`api::Registry`] maps names to
+//! constructors for all four problem families and every solver:
 //!
-//! let gen = NesterovLasso::new(200, 1000, 0.05, 1.0).seed(7);
-//! let inst = gen.generate();
-//! let problem = Lasso::new(inst.a, inst.b, inst.c);
-//! let mut solver = Fpa::paper_defaults(&problem);
-//! let report = solver.solve(&problem, &SolveOptions::default());
-//! println!("V = {:.6}, iters = {}", report.objective, report.iterations);
+//! ```no_run
+//! use flexa::algos::SolveOptions;
+//! use flexa::api::{FnObserver, ProblemSpec, Session, SolverSpec};
+//!
+//! # fn main() -> anyhow::Result<()> {
+//! let run = Session::problem(ProblemSpec::lasso(200, 1000).with_sparsity(0.05).with_seed(7))
+//!     .solver(SolverSpec::parse("fpa")?) // or "fista", "grock-16", "fpa-rho-0.9", ...
+//!     .options(SolveOptions::default().with_max_iters(5000).with_target(1e-6))
+//!     .observer(FnObserver::new(|e| {
+//!         // Streams live: iteration, step size, tau, |S^k|, objective.
+//!         eprintln!("k={} gamma={:.3} |S|={} V={:.6}", e.iter, e.gamma, e.updated_blocks, e.objective);
+//!     }))
+//!     .run()?;
+//! println!("{} on {}: V = {:.6}, iters = {}", run.solver, run.problem, run.objective, run.iterations);
+//! # Ok(())
+//! # }
 //! ```
+//!
+//! Solvers remain directly usable for statically-typed callers
+//! (`flexa::algos::fpa::Fpa` etc.); the session layer adds the registry,
+//! typo-suggesting name resolution, and streaming iteration events on
+//! top of the same machinery.
 
 pub mod algos;
+pub mod api;
 pub mod bench;
 pub mod cli;
 pub mod config;

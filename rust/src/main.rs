@@ -6,17 +6,21 @@
 //! * `experiment` — run a TOML experiment config (multi-algo, multi-
 //!                  realization), writing CSV series + ASCII plots.
 //! * `figure1`    — regenerate a panel of the paper's Fig. 1.
+//! * `registry`   — list every registered problem and solver name.
 //! * `artifacts`  — list the AOT artifact manifest and smoke-run one.
 //! * `version`    — print the version.
+//!
+//! Every solve — including the XLA backend — is constructed through
+//! `flexa::api::Session`, so the CLI, the TOML config layer and the bench
+//! harness share one wiring path.
 
 use flexa::algos::SolveOptions;
-use flexa::bench::fig1::{paper_algos, run_panel, run_solver, PanelSpec};
+use flexa::api::{FnObserver, ProblemSpec, Registry, Session, SolverSpec};
+use flexa::bench::fig1::{paper_algos, run_panel, PanelSpec};
 use flexa::cli::Command;
 use flexa::config::ExperimentConfig;
 use flexa::coordinator::CostModel;
-use flexa::datagen::NesterovLasso;
 use flexa::metrics::write_trace_csv;
-use flexa::problems::lasso::Lasso;
 use std::path::Path;
 
 fn main() {
@@ -38,6 +42,7 @@ fn dispatch(args: &[String]) -> anyhow::Result<()> {
         "solve" => cmd_solve(rest),
         "experiment" => cmd_experiment(rest),
         "figure1" => cmd_figure1(rest),
+        "registry" => cmd_registry(rest),
         "artifacts" => cmd_artifacts(rest),
         "summarize" => cmd_summarize(rest),
         "version" => {
@@ -45,68 +50,102 @@ fn dispatch(args: &[String]) -> anyhow::Result<()> {
             Ok(())
         }
         _ => {
+            let registry = Registry::with_defaults();
             println!(
                 "flexa {} — Flexible Parallel Algorithms for Big Data Optimization\n\n\
                  usage: flexa <subcommand> [options]\n\n\
                  subcommands:\n\
-                 \x20 solve       run one solver on a planted Lasso instance\n\
+                 \x20 solve       run one solver on a planted instance\n\
                  \x20 experiment  run a TOML experiment config\n\
                  \x20 figure1     regenerate a panel of the paper's Fig. 1\n\
+                 \x20 registry    list registered problems and solvers\n\
                  \x20 artifacts   inspect the AOT artifact manifest\n\
                  \x20 summarize   time-to-accuracy table from trace CSVs\n\
                  \x20 version     print version\n\n\
+                 problems: {}\n\
+                 solvers:  {} (see `flexa registry` for details)\n\n\
                  run `flexa <subcommand> --help` for options",
-                flexa::VERSION
+                flexa::VERSION,
+                registry.problem_names().join(" | "),
+                registry.solver_names().join(" | "),
             );
             Ok(())
         }
     }
 }
 
+/// List the registry contents (names + one-line descriptions), so
+/// `--problem` / `--algo` values are discoverable from the CLI.
+fn cmd_registry(args: &[String]) -> anyhow::Result<()> {
+    let cmd = Command::new("registry", "list registered problems and solvers");
+    cmd.parse(args)?;
+    print!("{}", Registry::with_defaults().describe());
+    println!(
+        "\nsolver name grammar also accepts parameterized forms:\n\
+         \x20 fpa-jacobi | fpa-southwell | fpa-linear | fpa-inexact\n\
+         \x20 fpa-rho-<r> | fpa-top-<p> | grock-<P> | gs"
+    );
+    Ok(())
+}
+
 fn cmd_solve(args: &[String]) -> anyhow::Result<()> {
-    let cmd = Command::new("solve", "run one solver on a planted Lasso instance")
-        .opt("rows", Some("500"), "rows of A")
-        .opt("cols", Some("2500"), "columns of A (variables)")
+    let cmd = Command::new("solve", "run one solver on a planted instance")
+        .opt("problem", Some("lasso"), "problem: lasso | group_lasso | logreg | svm (see `flexa registry`)")
+        .opt("rows", Some("500"), "rows of A / samples")
+        .opt("cols", Some("2500"), "columns of A (variables) / features")
         .opt("sparsity", Some("0.1"), "fraction of non-zeros in x*")
         .opt("c", Some("1.0"), "regularization weight")
-        .opt("algo", Some("fpa"), "solver: fpa | fpa-jacobi | fpa-rho-<r> | fista | ista | grock-<P> | gauss-seidel | admm")
+        .opt("block-size", Some("1"), "variables per block (group problems)")
+        .opt("algo", Some("fpa"), "solver: fpa | fpa-jacobi | fpa-rho-<r> | fista | ista | grock-<P> | gauss-seidel | admm | pfpa (see `flexa registry`)")
         .opt("seed", Some("20131311"), "instance seed")
         .opt("max-iters", Some("10000"), "iteration cap")
         .opt("max-seconds", Some("60"), "wall-clock cap")
         .opt("target", Some("1e-6"), "target relative error")
         .opt("procs", Some("1"), "simulated process count (cost model)")
+        .opt("record-every", Some("1"), "trace cadence (final iterate always kept)")
         .opt("csv", None, "write the trace CSV to this path")
         .opt("backend", Some("native"), "native | xla (xla needs `make artifacts` + matching shape)")
+        .flag("stream", "stream per-iteration events to stderr")
         .flag("quiet", "suppress the per-target table");
     let p = cmd.parse(args)?;
 
-    let (rows, cols) = (p.usize("rows")?, p.usize("cols")?);
-    let gen = NesterovLasso::new(rows, cols, p.f64("sparsity")?, p.f64("c")?).seed(p.u64("seed")?);
-    let inst = gen.generate();
-    let v_star = inst.v_star;
-    let problem = Lasso::new(inst.a, inst.b, inst.c).with_opt_value(v_star);
-    let opts = SolveOptions {
-        max_iters: p.usize("max-iters")?,
-        max_seconds: p.f64("max-seconds")?,
-        target_rel_err: p.f64("target")?,
-        x0: None,
-        cost_model: CostModel::mpi_node(p.usize("procs")?),
-        record_every: 1,
+    let spec = ProblemSpec::new(p.str("problem")?)
+        .with_dims(p.usize("rows")?, p.usize("cols")?)
+        .with_sparsity(p.f64("sparsity")?)
+        .with_c(p.f64("c")?)
+        .with_block_size(p.usize("block-size")?)
+        .with_seed(p.u64("seed")?);
+    let opts = SolveOptions::default()
+        .with_max_iters(p.usize("max-iters")?)
+        .with_max_seconds(p.f64("max-seconds")?)
+        .with_target(p.f64("target")?)
+        .with_cost_model(CostModel::mpi_node(p.usize("procs")?))
+        .with_record_every(p.usize("record-every")?);
+
+    let mut session = Session::problem(spec).options(opts);
+    if p.flag("stream") {
+        session = session.observer(FnObserver::new(|e| {
+            eprintln!(
+                "[stream] k={} gamma={:.4} tau={:.3e} |S|={} V={:.8e} rel_err={:.3e}",
+                e.iter, e.gamma, e.tau, e.updated_blocks, e.objective, e.rel_err
+            );
+        }));
+    }
+    let run = match p.str("backend")? {
+        "native" => session.solver(SolverSpec::parse(p.str("algo")?)?).run()?,
+        "xla" => session
+            .with_solver(Box::new(flexa::runtime::XlaSessionSolver::new(
+                flexa::runtime::DEFAULT_ARTIFACT_DIR,
+            )?))
+            .run()?,
+        other => anyhow::bail!("unknown backend `{other}` (expected native | xla)"),
     };
 
-    let trace = match p.str("backend")? {
-        "native" => run_solver(p.str("algo")?, &problem, &opts)?,
-        "xla" => {
-            let mut engine = flexa::runtime::Engine::cpu(flexa::runtime::DEFAULT_ARTIFACT_DIR)?;
-            let mut solver = flexa::runtime::XlaFpaLasso::new(&mut engine, rows, cols)?;
-            solver.solve(&problem, &opts)?.trace
-        }
-        other => anyhow::bail!("unknown backend `{other}`"),
-    };
-
+    let trace = &run.report.trace;
     let last = trace.last().cloned();
     println!(
-        "algo={} iters={} best_rel_err={:.3e} setup={:.3}s",
+        "problem={} algo={} iters={} best_rel_err={:.3e} setup={:.3}s",
+        run.problem,
         trace.algo,
         trace.len(),
         trace.best_rel_err(),
@@ -132,7 +171,7 @@ fn cmd_solve(args: &[String]) -> anyhow::Result<()> {
         }
     }
     if let Some(csv) = p.get("csv") {
-        write_trace_csv(Path::new(csv), &trace)?;
+        write_trace_csv(Path::new(csv), trace)?;
         println!("trace written to {csv}");
     }
     Ok(())
@@ -147,25 +186,8 @@ fn cmd_experiment(args: &[String]) -> anyhow::Result<()> {
         .first()
         .ok_or_else(|| anyhow::anyhow!("usage: flexa experiment <config.toml>"))?;
     let cfg = ExperimentConfig::from_file(path)?;
-    anyhow::ensure!(
-        cfg.problem.kind == flexa::config::experiment::ProblemKind::Lasso,
-        "experiment runner currently drives the paper's Lasso evaluation; \
-         use the library API for other problem kinds"
-    );
-    let spec = PanelSpec {
-        name: cfg.name.clone(),
-        rows: cfg.problem.rows,
-        cols: cfg.problem.cols,
-        sparsity: cfg.problem.sparsity,
-        c: cfg.problem.c,
-        procs: cfg.procs,
-        realizations: cfg.realizations,
-        max_iters: cfg.max_iters,
-        max_seconds: cfg.max_seconds,
-        target_rel_err: cfg.target_rel_err,
-        seed: cfg.seed,
-    };
-    let algos: Vec<String> = cfg.algos.iter().map(|a| a.name.clone()).collect();
+    let spec = PanelSpec::from_experiment(&cfg);
+    let algos = cfg.solver_specs()?;
     let out = Path::new(p.str("out")?).to_path_buf();
     let result = run_panel(&spec, &algos, Some(&out))?;
     println!("{}", result.render(true));
@@ -190,9 +212,13 @@ fn cmd_figure1(args: &[String]) -> anyhow::Result<()> {
         .with_realizations(p.usize("realizations")?)
         .with_budget(p.f64("budget")?);
     let algos = paper_algos(spec.procs);
+    let names: Vec<String> = algos.iter().map(|a| a.to_string()).collect();
     println!(
-        "panel {panel}: {}x{} ({:.0}% nnz), algos: {:?}",
-        spec.rows, spec.cols, spec.sparsity * 100.0, algos
+        "panel {panel}: {}x{} ({:.0}% nnz), algos: {}",
+        spec.rows,
+        spec.cols,
+        spec.sparsity * 100.0,
+        names.join(", ")
     );
     let out = Path::new(p.str("out")?).to_path_buf();
     let result = run_panel(&spec, &algos, Some(&out))?;
@@ -242,7 +268,7 @@ fn cmd_artifacts(args: &[String]) -> anyhow::Result<()> {
     if !flexa::runtime::artifacts_available(dir) {
         anyhow::bail!("no manifest in `{dir}` — run `make artifacts` first");
     }
-    let mut engine = flexa::runtime::Engine::cpu(dir)?;
+    let engine = flexa::runtime::Engine::cpu(dir)?;
     println!("platform: {}", engine.platform());
     let names: Vec<(String, usize, usize)> = {
         let manifest = engine.manifest();
@@ -259,19 +285,62 @@ fn cmd_artifacts(args: &[String]) -> anyhow::Result<()> {
     }
     if p.flag("smoke") {
         if let Some((name, rows, cols)) = names.iter().find(|(n, _, _)| n.starts_with("fpa_lasso_step")) {
-            let inst = NesterovLasso::new(*rows, *cols, 0.1, 1.0).seed(1).generate();
-            let problem = Lasso::new(inst.a, inst.b, inst.c).with_opt_value(inst.v_star);
-            let mut solver = flexa::runtime::XlaFpaLasso::new(&mut engine, *rows, *cols)?;
-            let report = solver.solve(
-                &problem,
-                &SolveOptions::default().with_max_iters(50).with_target(1e-3),
-            )?;
+            let run = Session::problem(
+                ProblemSpec::lasso(*rows, *cols).with_sparsity(0.1).with_seed(1),
+            )
+            .with_solver(Box::new(flexa::runtime::XlaSessionSolver::from_engine(engine)))
+            .options(SolveOptions::default().with_max_iters(50).with_target(1e-3))
+            .run()?;
             println!(
                 "smoke `{name}`: {} iters, rel_err {:.3e} — OK",
-                report.iterations,
-                report.trace.best_rel_err()
+                run.iterations,
+                run.report.trace.best_rel_err()
             );
         }
     }
     Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Registry error paths exercised through the CLI entry point: an
+    /// unknown solver or problem name yields a suggestion, never a panic.
+    #[test]
+    fn solve_rejects_unknown_names_with_suggestion() {
+        let args: Vec<String> = ["--rows", "10", "--cols", "30", "--max-iters", "2", "--algo", "fpaa"]
+            .iter()
+            .map(|s| s.to_string())
+            .collect();
+        let err = cmd_solve(&args).unwrap_err().to_string();
+        assert!(err.contains("unknown solver `fpaa`"), "{err}");
+        assert!(err.contains("did you mean `fpa`"), "{err}");
+
+        let args: Vec<String> = ["--rows", "10", "--cols", "30", "--max-iters", "2", "--problem", "laso"]
+            .iter()
+            .map(|s| s.to_string())
+            .collect();
+        let err = cmd_solve(&args).unwrap_err().to_string();
+        assert!(err.contains("unknown problem `laso`"), "{err}");
+        assert!(err.contains("did you mean `lasso`"), "{err}");
+    }
+
+    /// A tiny native solve runs end-to-end through the session API.
+    #[test]
+    fn solve_runs_tiny_instance() {
+        let args: Vec<String> = [
+            "--rows", "20", "--cols", "60", "--max-iters", "50", "--target", "1e-2", "--quiet",
+        ]
+        .iter()
+        .map(|s| s.to_string())
+        .collect();
+        cmd_solve(&args).unwrap();
+    }
+
+    #[test]
+    fn registry_listing_prints() {
+        cmd_registry(&[]).unwrap();
+        dispatch(&["help".to_string()]).unwrap();
+    }
 }

@@ -13,10 +13,10 @@
 
 use super::engine::Engine;
 use crate::algos::{Recorder, SolveOptions, SolveReport};
-use crate::problems::lasso::Lasso;
+use crate::api::{DynSolver, ProblemHandle};
 use crate::problems::{CompositeProblem, LeastSquares};
 use crate::stepsize::Schedule;
-use anyhow::{anyhow, Result};
+use anyhow::{anyhow, bail, Result};
 use std::time::Instant;
 
 /// FPA over Lasso with the iteration executed by PJRT.
@@ -53,8 +53,13 @@ impl<'e> XlaFpaLasso<'e> {
 
     /// Run the solve loop; matches `Fpa::paper_defaults` semantics with
     /// the DiagQuadratic surrogate and greedy ρ-selection, all fused
-    /// in-graph.
-    pub fn solve(&mut self, problem: &Lasso, opts: &SolveOptions) -> Result<SolveReport> {
+    /// in-graph. Works for any least-squares composite problem whose
+    /// shape matches a compiled artifact.
+    pub fn solve<P: LeastSquares + ?Sized>(
+        &mut self,
+        problem: &P,
+        opts: &SolveOptions,
+    ) -> Result<SolveReport> {
         let n = problem.n();
         let m = problem.rows();
         let label = format!("fpa-xla(rho={})", self.rho);
@@ -62,11 +67,13 @@ impl<'e> XlaFpaLasso<'e> {
 
         // --- setup: device-resident constants ---
         let a_host: Vec<f64> = {
-            // Column-major → row-major for the [m, n] jax layout.
-            let mat = problem.matrix();
+            // Column extraction via the LeastSquares interface,
+            // column-major → row-major for the [m, n] jax layout.
             let mut out = vec![0.0; m * n];
+            let mut col = vec![0.0; m];
             for j in 0..n {
-                let col = mat.col(j);
+                col.fill(0.0);
+                problem.col_axpy(j, 1.0, &mut col);
                 for i in 0..m {
                     out[i * n + j] = col[i];
                 }
@@ -79,7 +86,7 @@ impl<'e> XlaFpaLasso<'e> {
         let mut d_host = vec![0.0; n];
         problem.curvature(&vec![0.0; n], &mut d_host);
         let d_buf = self.engine.buffer_f32(&d_host, &[n])?;
-        let c_buf = self.engine.scalar_f32(problem.c())?;
+        let c_buf = self.engine.scalar_f32(problem.regularizer().weight())?;
         let rho_buf = self.engine.scalar_f32(self.rho)?;
 
         let mut x = opts.x0.clone().unwrap_or_else(|| vec![0.0; n]);
@@ -100,8 +107,9 @@ impl<'e> XlaFpaLasso<'e> {
             let t0 = Instant::now();
 
             let x_buf = self.engine.buffer_f32(&x, &[n])?;
+            let gamma = schedule.gamma();
             let tau_buf = self.engine.scalar_f32(tau)?;
-            let gamma_buf = self.engine.scalar_f32(schedule.gamma())?;
+            let gamma_buf = self.engine.scalar_f32(gamma)?;
             let outs = self.engine.run(
                 &self.artifact,
                 &[&a_buf, &b_buf, &x_buf, &d_buf, &tau_buf, &gamma_buf, &rho_buf, &c_buf],
@@ -135,6 +143,7 @@ impl<'e> XlaFpaLasso<'e> {
 
             let iter_s = t0.elapsed().as_secs_f64();
             recorder.add_sim_time(opts.cost_model.iter_time(iter_s, 0.0, 8 * (m + 16)));
+            recorder.note_step(gamma, tau);
             let err = recorder.record(k, &x, problem.layout().num_blocks());
             if recorder.reached(err) {
                 converged = true;
@@ -150,6 +159,67 @@ impl<'e> XlaFpaLasso<'e> {
 
         let objective = problem.objective(&x);
         Ok(SolveReport { x, objective, iterations, converged, trace: recorder.into_trace() })
+    }
+}
+
+/// Session adapter for the XLA backend: owns its [`Engine`] and binds to
+/// the artifact matching the problem's shape at solve time, so it plugs
+/// into [`crate::api::Session::with_solver`] like any registry solver.
+pub struct XlaSessionSolver {
+    engine: Engine,
+    rho: f64,
+}
+
+impl XlaSessionSolver {
+    /// Create a CPU engine over `artifact_dir` (needs `make artifacts`).
+    pub fn new(artifact_dir: &str) -> Result<Self> {
+        Ok(Self::from_engine(Engine::cpu(artifact_dir)?))
+    }
+
+    /// Reuse an already-initialized engine (PJRT client startup and
+    /// manifest loading are not free).
+    pub fn from_engine(engine: Engine) -> Self {
+        Self { engine, rho: 0.5 }
+    }
+
+    pub fn with_rho(mut self, rho: f64) -> Self {
+        assert!(rho > 0.0 && rho <= 1.0);
+        self.rho = rho;
+        self
+    }
+}
+
+impl DynSolver for XlaSessionSolver {
+    fn name(&self) -> String {
+        format!("fpa-xla(rho={})", self.rho)
+    }
+
+    fn solve_session(&mut self, problem: &ProblemHandle, opts: &SolveOptions) -> Result<SolveReport> {
+        match problem {
+            ProblemHandle::LeastSquares(p) => {
+                let p = p.as_ref();
+                // The compiled graph fuses the *scalar-block l1*
+                // soft-threshold best-response; running it on a group-l2
+                // regularizer or multi-variable blocks would silently
+                // optimize a different objective.
+                if !matches!(p.regularizer(), crate::problems::Regularizer::L1 { .. })
+                    || !p.layout().is_scalar()
+                {
+                    bail!(
+                        "the XLA backend's compiled graph is the scalar-block l1 (Lasso) \
+                         iteration; use problem `lasso` with block size 1, or the native solvers"
+                    );
+                }
+                let rho = self.rho;
+                let mut inner =
+                    XlaFpaLasso::new(&mut self.engine, p.rows(), p.n())?.with_rho(rho);
+                inner.solve(p, opts)
+            }
+            ProblemHandle::General(_) => bail!(
+                "the XLA backend runs least-squares iteration graphs only; \
+                 use problem `lasso` or the native solvers"
+            ),
+        }
     }
 }
 

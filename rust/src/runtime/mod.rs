@@ -6,20 +6,36 @@
 //! (64-bit instruction ids), while the text parser reassigns ids and
 //! round-trips cleanly (see `/opt/xla-example/README.md`).
 //!
-//! * [`engine::Engine`] — PJRT CPU client + compiled-executable cache.
+//! * [`Engine`] — PJRT CPU client + compiled-executable cache.
 //! * [`registry::Manifest`] — the artifact manifest written by
 //!   `python/compile/aot.py` (name → file → shapes).
-//! * [`fpa_xla::XlaFpaLasso`] — the L2 FPA iteration graph executed via
-//!   PJRT with a device-resident design matrix (the `--backend xla`
-//!   solve path).
+//! * [`XlaFpaLasso`] / [`XlaSessionSolver`] — the L2 FPA iteration graph
+//!   executed via PJRT with a device-resident design matrix (the
+//!   `--backend xla` solve path, pluggable into `flexa::api::Session`).
+//!
+//! The PJRT bindings (`xla` crate + libxla_extension) exist only in the
+//! project's build image, so this module is gated behind the `xla` cargo
+//! feature. Without it, [`Engine::cpu`] and the XLA solvers compile as
+//! stubs that return a descriptive error — callers (CLI `--backend xla`,
+//! the artifact smoke test) degrade gracefully instead of failing to
+//! link.
 
+#[cfg(feature = "xla")]
 pub mod engine;
+#[cfg(feature = "xla")]
 pub mod fpa_xla;
 pub mod registry;
 
+#[cfg(feature = "xla")]
 pub use engine::Engine;
-pub use fpa_xla::XlaFpaLasso;
+#[cfg(feature = "xla")]
+pub use fpa_xla::{XlaFpaLasso, XlaSessionSolver};
 pub use registry::{ArtifactEntry, Manifest};
+
+#[cfg(not(feature = "xla"))]
+mod stub;
+#[cfg(not(feature = "xla"))]
+pub use stub::{Engine, XlaFpaLasso, XlaSessionSolver};
 
 /// Default artifact directory (relative to the repo root).
 pub const DEFAULT_ARTIFACT_DIR: &str = "artifacts";

@@ -1,0 +1,91 @@
+//! No-op runtime used when the crate is built without the `xla` feature
+//! (the PJRT bindings only exist in the project's build image).
+//!
+//! Construction points return a descriptive error; every other method is
+//! statically unreachable (the types hold [`std::convert::Infallible`]),
+//! so the API surface matches the real runtime without linking PJRT.
+
+use super::registry::Manifest;
+use crate::algos::{SolveOptions, SolveReport};
+use crate::api::{DynSolver, ProblemHandle};
+use crate::problems::LeastSquares;
+use anyhow::{bail, Result};
+use std::convert::Infallible;
+
+const NO_XLA: &str =
+    "this build has no XLA backend: rebuild with `--features xla` (requires the PJRT toolchain \
+     and `make artifacts`); the native solvers cover every algorithm";
+
+/// Stub PJRT engine (never constructible).
+pub struct Engine {
+    never: Infallible,
+}
+
+impl Engine {
+    /// Always fails: the `xla` feature is off.
+    pub fn cpu(_artifact_dir: &str) -> Result<Self> {
+        bail!(NO_XLA)
+    }
+
+    pub fn platform(&self) -> String {
+        match self.never {}
+    }
+
+    pub fn manifest(&self) -> &Manifest {
+        match self.never {}
+    }
+}
+
+/// Stub XLA FPA solver (never constructible).
+pub struct XlaFpaLasso<'e> {
+    engine: &'e mut Engine,
+}
+
+impl<'e> XlaFpaLasso<'e> {
+    pub fn new(engine: &'e mut Engine, _m: usize, _n: usize) -> Result<Self> {
+        match engine.never {}
+    }
+
+    pub fn with_rho(self, _rho: f64) -> Self {
+        match self.engine.never {}
+    }
+
+    pub fn solve<P: LeastSquares + ?Sized>(
+        &mut self,
+        _problem: &P,
+        _opts: &SolveOptions,
+    ) -> Result<SolveReport> {
+        match self.engine.never {}
+    }
+}
+
+/// Stub session adapter (never constructible).
+pub struct XlaSessionSolver {
+    never: Infallible,
+}
+
+impl XlaSessionSolver {
+    /// Always fails: the `xla` feature is off.
+    pub fn new(_artifact_dir: &str) -> Result<Self> {
+        bail!(NO_XLA)
+    }
+
+    /// Engines are never constructible without the feature.
+    pub fn from_engine(engine: Engine) -> Self {
+        match engine.never {}
+    }
+
+    pub fn with_rho(self, _rho: f64) -> Self {
+        match self.never {}
+    }
+}
+
+impl DynSolver for XlaSessionSolver {
+    fn name(&self) -> String {
+        match self.never {}
+    }
+
+    fn solve_session(&mut self, _problem: &ProblemHandle, _opts: &SolveOptions) -> Result<SolveReport> {
+        match self.never {}
+    }
+}

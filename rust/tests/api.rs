@@ -1,0 +1,248 @@
+//! Integration tests for the unified `flexa::api` layer: every
+//! (problem × solver) registry pairing runs through the `Session` builder
+//! with a streaming observer attached; registry error paths return
+//! suggestions instead of panicking; runtime registration extends the
+//! solver set; the trace cadence never drops the final iterate.
+
+use flexa::algos::{SolveOptions, SolveReport, Solver};
+use flexa::api::{
+    CollectObserver, DynSolver, FnObserver, ProblemHandle, ProblemSpec, Registry, Session,
+    SolverSpec,
+};
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::Arc;
+
+/// Tiny spec per problem family (fast enough to run the full matrix).
+fn tiny_problem(kind: &str) -> ProblemSpec {
+    let base = match kind {
+        "lasso" => ProblemSpec::lasso(20, 60),
+        "group_lasso" => ProblemSpec::group_lasso(20, 60, 3),
+        "logreg" => ProblemSpec::logreg(30, 20),
+        "svm" => ProblemSpec::svm(30, 20),
+        other => panic!("unknown tiny problem {other}"),
+    };
+    base.with_sparsity(0.1).with_seed(0xA11CE)
+}
+
+/// Solvers that require the least-squares residual structure.
+fn needs_least_squares(name: &str) -> bool {
+    matches!(name, "gauss-seidel" | "admm" | "pfpa")
+}
+
+/// Every (problem × solver) pairing through the session API, observer
+/// attached. Structural mismatches (sequential LS baselines on logistic /
+/// SVM losses) must fail with a clear error, everything else must run.
+#[test]
+fn every_problem_solver_pairing_runs_or_explains() {
+    let problems = ["lasso", "group_lasso", "logreg", "svm"];
+    let solvers = [
+        "fpa",
+        "fpa-jacobi",
+        "fpa-linear",
+        "fpa-southwell",
+        "fpa-rho-0.9",
+        "fista",
+        "ista",
+        "grock-2",
+        "gauss-seidel",
+        "admm",
+        "pfpa",
+    ];
+    for problem in problems {
+        for solver in solvers {
+            let observer = CollectObserver::new();
+            let spec = SolverSpec::parse(solver).unwrap();
+            let result = Session::problem(tiny_problem(problem))
+                .solver(spec.clone())
+                .options(SolveOptions::default().with_max_iters(30).with_target(0.0))
+                .observer(observer.clone())
+                .run();
+            let ls_problem = problem == "lasso" || problem == "group_lasso";
+            if needs_least_squares(&spec.name) && !ls_problem {
+                let err = result.expect_err(&format!("{solver} on {problem} must be rejected"));
+                assert!(
+                    err.to_string().contains("least-squares"),
+                    "{solver} on {problem}: unhelpful error `{err}`"
+                );
+                continue;
+            }
+            let run = result.unwrap_or_else(|e| panic!("{solver} on {problem}: {e:#}"));
+            assert!(
+                run.objective.is_finite(),
+                "{solver} on {problem}: non-finite objective"
+            );
+            assert_eq!(run.problem, problem, "resolved problem name");
+            assert_eq!(
+                observer.len(),
+                run.iterations,
+                "{solver} on {problem}: one event per iteration"
+            );
+            assert!(observer.finished(), "{solver} on {problem}: on_finish must fire");
+            assert_eq!(observer.converged(), run.converged);
+            assert_eq!(observer.algo(), run.solver);
+            let events = observer.events();
+            assert!(events.iter().all(|e| e.objective.is_finite() || !run.converged));
+            assert!(
+                events.windows(2).all(|w| w[1].iter == w[0].iter + 1),
+                "{solver} on {problem}: iteration counter must be contiguous"
+            );
+            if spec.name == "fpa" || spec.name == "pfpa" {
+                assert!(
+                    events.iter().all(|e| e.gamma.is_finite() && e.tau.is_finite()),
+                    "{solver}: FPA streams gamma and tau"
+                );
+                assert!(events.iter().all(|e| e.updated_blocks >= 1));
+            }
+        }
+    }
+}
+
+/// The lasso pairing converges through the session path (not just runs).
+#[test]
+fn session_fpa_converges_on_planted_lasso() {
+    let run = Session::problem(ProblemSpec::lasso(40, 120).with_sparsity(0.1).with_seed(11))
+        .solver_named("fpa")
+        .unwrap()
+        .options(SolveOptions::default().with_max_iters(3000).with_target(1e-6))
+        .run()
+        .unwrap();
+    assert!(run.converged, "best {:.3e}", run.report.trace.best_rel_err());
+}
+
+/// Unknown solver/problem names: error with nearest-name suggestion, from
+/// the API layer (the CLI-layer test lives in `src/main.rs`).
+#[test]
+fn unknown_names_error_with_suggestions() {
+    let err = Session::problem(tiny_problem("lasso"))
+        .solver(SolverSpec::new("fpaa"))
+        .run()
+        .unwrap_err()
+        .to_string();
+    assert!(err.contains("unknown solver `fpaa`"), "{err}");
+    assert!(err.contains("did you mean `fpa`"), "{err}");
+
+    let err = Session::problem(ProblemSpec::new("lass").with_dims(10, 20))
+        .solver(SolverSpec::new("fpa"))
+        .run()
+        .unwrap_err()
+        .to_string();
+    assert!(err.contains("unknown problem `lass`"), "{err}");
+    assert!(err.contains("did you mean `lasso`"), "{err}");
+    assert!(err.contains("registered:"), "{err}");
+}
+
+/// A custom solver registered at runtime is reachable by name through a
+/// session with a custom registry.
+#[test]
+fn runtime_registered_solver_runs_through_session() {
+    /// Trivial custom solver: one FISTA-style pass via the public Solver
+    /// machinery, wrapped manually.
+    struct HalfStepIsta;
+    impl DynSolver for HalfStepIsta {
+        fn name(&self) -> String {
+            "half-ista".into()
+        }
+        fn solve_session(
+            &mut self,
+            problem: &ProblemHandle,
+            opts: &SolveOptions,
+        ) -> anyhow::Result<SolveReport> {
+            let mut inner = flexa::algos::ista::Ista::default();
+            Ok(match problem {
+                ProblemHandle::LeastSquares(p) => inner.solve(p.as_ref(), opts),
+                ProblemHandle::General(p) => inner.solve(p.as_ref(), opts),
+            })
+        }
+    }
+
+    let mut registry = Registry::with_defaults();
+    registry.register_solver(
+        "half-ista",
+        "custom test solver",
+        Box::new(|_spec| Ok(Box::new(HalfStepIsta))),
+    );
+    assert!(registry.solver_names().contains(&"half-ista".to_string()));
+
+    let run = Session::problem(tiny_problem("lasso"))
+        .solver(SolverSpec::new("half-ista"))
+        .options(SolveOptions::default().with_max_iters(10).with_target(0.0))
+        .registry(registry)
+        .run()
+        .unwrap();
+    assert_eq!(run.solver, "half-ista");
+    assert!(run.objective.is_finite());
+}
+
+/// `record_every > 1` thins the trace but never drops the final iterate
+/// (the row time-to-accuracy summaries read), while the observer still
+/// sees every iteration.
+#[test]
+fn sparse_trace_keeps_final_iterate_and_full_event_stream() {
+    let observer = CollectObserver::new();
+    let run = Session::problem(tiny_problem("lasso"))
+        .solver_named("fpa")
+        .unwrap()
+        .options(
+            SolveOptions::default()
+                .with_max_iters(25)
+                .with_target(0.0)
+                .with_record_every(7),
+        )
+        .observer(observer.clone())
+        .run()
+        .unwrap();
+    let trace = &run.report.trace;
+    assert!(trace.len() < run.iterations, "cadence must thin the trace");
+    assert_eq!(
+        trace.last().unwrap().iter,
+        run.iterations - 1,
+        "final iterate must be recorded even off-cadence"
+    );
+    assert_eq!(observer.len(), run.iterations, "events are never thinned");
+}
+
+/// A closure observer receives the stream (the dashboard-style hookup).
+#[test]
+fn fn_observer_streams_through_session() {
+    let count = Arc::new(AtomicUsize::new(0));
+    let seen = count.clone();
+    let run = Session::problem(tiny_problem("lasso"))
+        .solver_named("fista")
+        .unwrap()
+        .options(SolveOptions::default().with_max_iters(12).with_target(0.0))
+        .observer(FnObserver::new(move |e| {
+            assert!(e.objective.is_finite());
+            seen.fetch_add(1, Ordering::SeqCst);
+        }))
+        .run()
+        .unwrap();
+    assert_eq!(count.load(Ordering::SeqCst), run.iterations);
+}
+
+/// Pre-built problems (user data, no generator) run through the same
+/// session path via `with_problem`.
+#[test]
+fn prebuilt_problem_handle_runs() {
+    let inst = flexa::datagen::NesterovLasso::new(15, 45, 0.1, 1.0).seed(21).generate();
+    let lasso = flexa::problems::lasso::Lasso::new(inst.a, inst.b, inst.c)
+        .with_opt_value(inst.v_star);
+    let run = Session::with_problem(ProblemHandle::least_squares(lasso))
+        .solver_named("fpa")
+        .unwrap()
+        .options(SolveOptions::default().with_max_iters(500).with_target(1e-4))
+        .run()
+        .unwrap();
+    assert_eq!(run.problem, "custom");
+    assert!(run.report.trace.best_rel_err() < 1e-2);
+}
+
+/// Specs round-trip through the TOML renderers (the serialization path a
+/// server would ship across a process boundary).
+#[test]
+fn specs_roundtrip_toml() {
+    let p = ProblemSpec::group_lasso(30, 90, 3).with_sparsity(0.2).with_seed(5);
+    assert_eq!(ProblemSpec::from_toml(&p.to_toml()).unwrap(), p);
+    let s = SolverSpec::parse("fpa-rho-0.25").unwrap();
+    let toml = s.to_toml();
+    assert!(toml.contains("selection = \"greedy:0.25\""), "{toml}");
+}

@@ -3,7 +3,7 @@
 
 use flexa::algos::admm::Admm;
 use flexa::algos::fista::Fista;
-use flexa::algos::fpa::{Fpa, FpaOptions};
+use flexa::algos::fpa::Fpa;
 use flexa::algos::gauss_seidel::GaussSeidel;
 use flexa::algos::grock::Grock;
 use flexa::algos::{SolveOptions, Solver};
@@ -105,7 +105,8 @@ fn metrics_roundtrip_and_monotonicity() {
     std::fs::remove_dir_all(&dir).ok();
 }
 
-/// Experiment configs drive solver construction end-to-end.
+/// Experiment configs drive solver construction end-to-end — through the
+/// session API, exactly as the CLI `experiment` subcommand does.
 #[test]
 fn config_to_solver_pipeline() {
     let cfg = ExperimentConfig::from_toml(
@@ -123,17 +124,19 @@ fn config_to_solver_pipeline() {
         "#,
     )
     .unwrap();
-    let gen = NesterovLasso::new(cfg.problem.rows, cfg.problem.cols, cfg.problem.sparsity, cfg.problem.c)
-        .seed(cfg.seed);
-    let inst = gen.generate();
-    let p = Lasso::new(inst.a, inst.b, inst.c).with_opt_value(inst.v_star);
-    let rho = cfg.algos[0].get_or("rho", 0.5);
-    let mut solver = Fpa::new(FpaOptions {
-        selection: SelectionRule::GreedyRho { rho },
-        ..FpaOptions::default()
-    });
-    let report = solver.solve(&p, &SolveOptions::default().with_max_iters(2000));
-    assert!(report.trace.best_rel_err() < 1e-3);
+    let specs = cfg.solver_specs().unwrap();
+    assert_eq!(
+        specs[0].selection,
+        Some(SelectionRule::GreedyRho { rho: 0.7 }),
+        "config rho must reach the solver spec"
+    );
+    let run = flexa::api::Session::problem(cfg.problem.to_spec(cfg.seed))
+        .solver(specs[0].clone())
+        .options(SolveOptions::default().with_max_iters(2000))
+        .run()
+        .unwrap();
+    assert_eq!(run.solver, "fpa(rho=0.7)");
+    assert!(run.report.trace.best_rel_err() < 1e-3);
 }
 
 /// GRock's guard fires on dense problems with large P (the failure mode

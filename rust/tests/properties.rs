@@ -52,6 +52,57 @@ fn prop_selection_contains_near_max_block() {
     });
 }
 
+/// Theorem 1's condition, exactly: every selection rule's returned mask
+/// contains at least one index *attaining* `max_i E_i` — not merely a
+/// near-max block — across random error vectors (including ties, zeros
+/// and degenerate all-zero E) and all six rules.
+#[test]
+fn prop_selection_always_contains_argmax_block() {
+    run_prop("selection-argmax", PropConfig::default(), |rng, size| {
+        let nb = 1 + rng.next_below(8 * size as u64 + 4) as usize;
+        let mut e = vec![0.0; nb];
+        rng.fill_uniform(&mut e, 0.0, 1.0);
+        // Stress ties and zeros: sometimes zero a prefix, sometimes
+        // duplicate the maximum into another slot.
+        if nb > 1 && rng.next_f64() < 0.3 {
+            let zeros = rng.next_below(nb as u64) as usize;
+            for v in e.iter_mut().take(zeros) {
+                *v = 0.0;
+            }
+        }
+        if nb > 1 && rng.next_f64() < 0.3 {
+            let max = e.iter().cloned().fold(f64::NEG_INFINITY, f64::max);
+            let dup = rng.next_below(nb as u64) as usize;
+            e[dup] = max;
+        }
+        let max_e = e.iter().cloned().fold(f64::NEG_INFINITY, f64::max);
+        let rules = [
+            SelectionRule::FullJacobi,
+            SelectionRule::GreedyRho { rho: 0.5 },
+            SelectionRule::GreedyRho { rho: 1.0 },
+            SelectionRule::GaussSouthwell,
+            SelectionRule::TopP { p: 1 + rng.next_below(nb as u64) as usize },
+            SelectionRule::Cyclic { batch: 1 + rng.next_below(nb as u64) as usize },
+            SelectionRule::Random {
+                count: 1 + rng.next_below(nb as u64) as usize,
+                seed: rng.next_u64(),
+            },
+        ];
+        for rule in rules {
+            let mut sel = Selector::new(rule.clone());
+            let mut mask = vec![false; nb];
+            sel.select(&e, &mut mask);
+            let has_argmax = mask.iter().enumerate().any(|(i, &b)| b && e[i] == max_e);
+            if !has_argmax {
+                return CaseResult::Fail(format!(
+                    "{rule:?}: selected set contains no argmax block (max E = {max_e:.6}, e = {e:?})"
+                ));
+            }
+        }
+        CaseResult::Pass
+    });
+}
+
 /// The scalar best-response is the exact minimizer of the block
 /// surrogate h̃ (paper eq. (2)): random perturbations never improve it.
 #[test]

@@ -1,8 +1,11 @@
 //! Three-layer integration: AOT artifacts (L1 Pallas + L2 JAX) executed
 //! via PJRT from Rust (L3), checked against the native Rust solver.
 //!
-//! Requires `make artifacts`; every test skips (passes vacuously) when
-//! the artifact directory is missing so plain `cargo test` still works.
+//! Requires the `xla` cargo feature (PJRT bindings exist only in the
+//! project's build image) and `make artifacts`; every test skips (passes
+//! vacuously) when the artifact directory is missing so plain
+//! `cargo test --features xla` still works.
+#![cfg(feature = "xla")]
 
 use flexa::algos::{fpa::Fpa, SolveOptions, Solver};
 use flexa::datagen::NesterovLasso;
