@@ -1,0 +1,90 @@
+//! λ-path: solve one Lasso design matrix under a decreasing sequence of
+//! regularization weights, warm-starting every step from the previous
+//! solution through the `flexa::serve` scheduler's cache.
+//!
+//! The cache keys on a fingerprint of the problem *data* (A, b, layout)
+//! that deliberately excludes λ, so all eight steps share one entry:
+//! step i starts from step i−1's solution and its adapted τ. With one
+//! worker the steps run in submission order, which is what makes the
+//! previous-λ solution the warm start.
+//!
+//! Run: `cargo run --release --example lambda_path`
+
+use flexa::algos::{SolveOptions, Solver};
+use flexa::api::{ProblemHandle, SolverSpec};
+use flexa::datagen::NesterovLasso;
+use flexa::problems::lasso::Lasso;
+use flexa::serve::{CustomProblemFn, JobResult, JobSpec, Scheduler, ServeConfig};
+use std::sync::Arc;
+
+fn iters(r: &JobResult) -> usize {
+    r.report.as_ref().map(|rep| rep.iterations).unwrap_or(0)
+}
+
+fn main() -> anyhow::Result<()> {
+    // One shared design matrix; the sweep only changes λ.
+    let (rows, cols) = (100, 400);
+    let inst = NesterovLasso::new(rows, cols, 0.1, 1.0).seed(42).generate();
+    let a = Arc::new(inst.a);
+    let b = Arc::new(inst.b);
+    let lambdas: Vec<f64> = (0..8).map(|i| 4.0 * 0.7f64.powi(i)).collect();
+    println!("lambda path on a {rows}x{cols} Lasso, lambda {:.2} -> {:.2}", lambdas[0], lambdas[7]);
+
+    // Reference optima V*(λ) via heavy Gauss-Seidel sweeps, so each step
+    // has a meaningful relative-error target.
+    let v_refs: Vec<f64> = lambdas
+        .iter()
+        .map(|&lam| {
+            let p = Lasso::new((*a).clone(), (*b).clone(), lam);
+            flexa::algos::gauss_seidel::GaussSeidel::default()
+                .solve(
+                    &p,
+                    &SolveOptions::default()
+                        .with_max_iters(400)
+                        .with_target(0.0)
+                        .with_record_every(400),
+                )
+                .objective
+        })
+        .collect();
+
+    let opts = SolveOptions::default().with_max_iters(20_000).with_target(1e-4);
+    let run_path = |warm: bool| -> Vec<usize> {
+        let scheduler = Scheduler::start(ServeConfig::default().with_workers(1));
+        for (i, &lam) in lambdas.iter().enumerate() {
+            let (a, b, v_ref) = (Arc::clone(&a), Arc::clone(&b), v_refs[i]);
+            let build: CustomProblemFn = Arc::new(move || {
+                Ok(ProblemHandle::least_squares(
+                    Lasso::new((*a).clone(), (*b).clone(), lam).with_opt_value(v_ref),
+                ))
+            });
+            scheduler.submit(
+                JobSpec::custom(&format!("lambda-{lam:.3}"), build, SolverSpec::parse("fpa").unwrap())
+                    .with_opts(opts.clone())
+                    .with_warm_start(warm),
+            );
+        }
+        scheduler.join().iter().map(iters).collect()
+    };
+
+    let cold = run_path(false);
+    let warm = run_path(true);
+
+    println!("\n{:>10} {:>12} {:>12} {:>10}", "lambda", "cold iters", "warm iters", "ratio");
+    for i in 0..lambdas.len() {
+        println!(
+            "{:>10.3} {:>12} {:>12} {:>10.3}{}",
+            lambdas[i],
+            cold[i],
+            warm[i],
+            warm[i] as f64 / cold[i].max(1) as f64,
+            if i == 0 { "  (first step: cache is empty)" } else { "" }
+        );
+    }
+    let mean: f64 = (1..lambdas.len())
+        .map(|i| warm[i] as f64 / cold[i].max(1) as f64)
+        .sum::<f64>()
+        / (lambdas.len() - 1) as f64;
+    println!("\nmean warm/cold iteration ratio over steps 1+: {mean:.3}");
+    Ok(())
+}

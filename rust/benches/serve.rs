@@ -1,0 +1,154 @@
+//! Serve-layer bench: scheduler throughput and warm-start effectiveness,
+//! recorded to `BENCH_serve.json`.
+//!
+//! Three measurements on the fig1-style Lasso workload:
+//!
+//! * **throughput** — N independent jobs through the 4-worker scheduler
+//!   vs the same specs run serially through `Session` (on a single-core
+//!   container the pool mostly measures scheduling overhead; the JSON
+//!   records both so multi-core machines show the scaling).
+//! * **warm repeat** — the same spec solved twice with the warm-start
+//!   cache on: the cached repeat must reach the 1e-6 target in a small
+//!   fraction of the cold iterations.
+//! * **λ-path** — an 8-point regularization sweep over one shared
+//!   `(A, b)`: each step warm-starts from the previous λ's solution
+//!   (same data fingerprint, λ excluded from the key).
+//!
+//! `FLEXA_BENCH_SMOKE=1` caps sizes/iterations for CI's bench-smoke job.
+
+use flexa::algos::{SolveOptions, Solver};
+use flexa::api::{ProblemHandle, ProblemSpec, Session, SolverSpec};
+use flexa::datagen::NesterovLasso;
+use flexa::problems::lasso::Lasso;
+use flexa::serve::{CustomProblemFn, JobResult, JobSpec, Scheduler, ServeConfig};
+use std::sync::Arc;
+use std::time::Instant;
+
+fn iters(r: &JobResult) -> usize {
+    r.report.as_ref().map(|rep| rep.iterations).unwrap_or(0)
+}
+
+fn main() -> anyhow::Result<()> {
+    let smoke = std::env::var_os("FLEXA_BENCH_SMOKE").is_some();
+    let (rows, cols) = if smoke { (40, 120) } else { (200, 1000) };
+    let throughput_jobs: usize = if smoke { 6 } else { 16 };
+    let ref_sweeps = if smoke { 200 } else { 600 };
+    let path_points = 8usize;
+    let workers = 4usize;
+    println!("serve bench: {rows}x{cols} lasso, smoke={smoke}");
+
+    // --- A. throughput: worker pool vs serial session loop ---
+    let job_opts = SolveOptions::default().with_max_iters(2000).with_target(1e-4);
+    let specs: Vec<ProblemSpec> = (0..throughput_jobs)
+        .map(|i| ProblemSpec::lasso(rows, cols).with_sparsity(0.1).with_seed(0x5E11 + i as u64))
+        .collect();
+
+    let t0 = Instant::now();
+    for spec in &specs {
+        let run = Session::problem(spec.clone())
+            .solver(SolverSpec::parse("fpa")?)
+            .options(job_opts.clone())
+            .run()?;
+        std::hint::black_box(run.iterations);
+    }
+    let serial_s = t0.elapsed().as_secs_f64();
+
+    let t0 = Instant::now();
+    let sched = Scheduler::start(ServeConfig::default().with_workers(workers));
+    for spec in &specs {
+        sched.submit(
+            JobSpec::new(spec.clone(), SolverSpec::parse("fpa")?).with_opts(job_opts.clone()),
+        );
+    }
+    let results = sched.join();
+    let pool_s = t0.elapsed().as_secs_f64();
+    assert!(results.iter().all(|r| r.outcome.is_done()), "throughput jobs must complete");
+    let jobs_per_s = throughput_jobs as f64 / pool_s.max(1e-9);
+    println!(
+        "throughput: {throughput_jobs} jobs — serial {serial_s:.2}s, {workers}-worker pool {pool_s:.2}s ({jobs_per_s:.2} jobs/s)"
+    );
+
+    // --- B. warm-start repeat solve ---
+    let sched = Scheduler::start(ServeConfig::default().with_workers(1));
+    let repeat_spec = ProblemSpec::lasso(rows, cols).with_sparsity(0.1).with_seed(0xC01D);
+    let solve_opts = SolveOptions::default().with_max_iters(20_000).with_target(1e-6);
+    for _ in 0..2 {
+        sched.submit(
+            JobSpec::new(repeat_spec.clone(), SolverSpec::parse("fpa")?)
+                .with_opts(solve_opts.clone())
+                .with_warm_start(true),
+        );
+    }
+    let (repeat_results, cache_stats) = sched.join_with_stats();
+    let (cold_iters, warm_iters) = (iters(&repeat_results[0]), iters(&repeat_results[1]));
+    let repeat_ratio = warm_iters as f64 / cold_iters.max(1) as f64;
+    println!(
+        "warm repeat: cold {cold_iters} iters -> cached {warm_iters} iters (ratio {repeat_ratio:.3}, hits {}, misses {})",
+        cache_stats.hits, cache_stats.misses
+    );
+    if repeat_ratio > 0.5 {
+        println!("WARN: cached repeat used more than 50% of the cold iterations");
+    }
+
+    // --- C. 8-point λ-path over one shared (A, b) ---
+    let inst = NesterovLasso::new(rows, cols, 0.1, 1.0).seed(0x1ABD).generate();
+    let a = Arc::new(inst.a);
+    let b = Arc::new(inst.b);
+    let lambdas: Vec<f64> = (0..path_points).map(|i| 4.0 * 0.7f64.powi(i as i32)).collect();
+    // Reference objectives V*(λ) from heavy Gauss-Seidel (converges in
+    // tens of sweeps on Lasso; `ref_sweeps` is far past that).
+    let mut v_refs = Vec::new();
+    for &lam in &lambdas {
+        let p = Lasso::new((*a).clone(), (*b).clone(), lam);
+        let mut gs = flexa::algos::gauss_seidel::GaussSeidel::default();
+        let r = gs.solve(
+            &p,
+            &SolveOptions::default()
+                .with_max_iters(ref_sweeps)
+                .with_target(0.0)
+                .with_record_every(ref_sweeps),
+        );
+        v_refs.push(r.objective);
+    }
+    let path_opts = SolveOptions::default().with_max_iters(20_000).with_target(1e-4);
+    let run_path = |warm: bool| -> Vec<usize> {
+        let sched = Scheduler::start(ServeConfig::default().with_workers(1));
+        for (i, &lam) in lambdas.iter().enumerate() {
+            let (a, b, v_ref) = (Arc::clone(&a), Arc::clone(&b), v_refs[i]);
+            let build: CustomProblemFn = Arc::new(move || {
+                Ok(ProblemHandle::least_squares(
+                    Lasso::new((*a).clone(), (*b).clone(), lam).with_opt_value(v_ref),
+                ))
+            });
+            sched.submit(
+                JobSpec::custom(&format!("lambda-{i}"), build, SolverSpec::parse("fpa").unwrap())
+                    .with_opts(path_opts.clone())
+                    .with_warm_start(warm),
+            );
+        }
+        sched.join().iter().map(iters).collect()
+    };
+    let cold_path = run_path(false);
+    let warm_path = run_path(true);
+    // Step 0 has nothing to warm from (empty cache); steps >= 1 carry the
+    // previous λ's solution.
+    let step_ratios: Vec<f64> = (1..path_points)
+        .map(|i| warm_path[i] as f64 / cold_path[i].max(1) as f64)
+        .collect();
+    let mean_ratio = step_ratios.iter().sum::<f64>() / step_ratios.len() as f64;
+    println!("lambda path ({path_points} points, lambda {:.2} -> {:.2}):", lambdas[0], lambdas[path_points - 1]);
+    println!("  cold iters: {cold_path:?}");
+    println!("  warm iters: {warm_path:?} (mean warm/cold over steps 1+: {mean_ratio:.3})");
+    if step_ratios.iter().any(|&r| r > 0.5) {
+        println!("WARN: some lambda-path step used more than 50% of its cold iterations");
+    }
+
+    // --- record ---
+    let json = format!(
+        "{{\n  \"bench\": \"serve\",\n  \"smoke\": {smoke},\n  \"workload\": {{\"problem\": \"lasso\", \"rows\": {rows}, \"cols\": {cols}, \"sparsity\": 0.1}},\n  \"throughput\": {{\"jobs\": {throughput_jobs}, \"workers\": {workers}, \"serial_s\": {serial_s:.4}, \"pool_s\": {pool_s:.4}, \"jobs_per_s\": {jobs_per_s:.4}}},\n  \"warm_repeat\": {{\"target\": 1e-6, \"cold_iters\": {cold_iters}, \"warm_iters\": {warm_iters}, \"ratio\": {repeat_ratio:.5}, \"cache_hits\": {}, \"cache_misses\": {}}},\n  \"lambda_path\": {{\"target\": 1e-4, \"points\": {path_points}, \"lambdas\": {lambdas:?}, \"cold_iters\": {cold_path:?}, \"warm_iters\": {warm_path:?}, \"mean_warm_cold_ratio\": {mean_ratio:.5}}}\n}}\n",
+        cache_stats.hits, cache_stats.misses
+    );
+    std::fs::write("BENCH_serve.json", &json)?;
+    println!("wrote BENCH_serve.json");
+    Ok(())
+}

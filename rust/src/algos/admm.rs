@@ -192,6 +192,9 @@ impl<P: LeastSquares + ?Sized> Solver<P> for Admm {
                 converged = true;
                 break;
             }
+            if recorder.cancelled() {
+                break;
+            }
             if recorder.elapsed_s() > opts.max_seconds {
                 break;
             }

@@ -105,6 +105,9 @@ impl<P: CompositeProblem + ?Sized> Solver<P> for Fista {
                 converged = true;
                 break;
             }
+            if recorder.cancelled() {
+                break;
+            }
             if recorder.elapsed_s() > opts.max_seconds {
                 break;
             }

@@ -146,7 +146,12 @@ impl<P: CompositeProblem + ?Sized> Solver<P> for Fpa {
         assert_eq!(x.len(), n, "x0 dimension mismatch");
         let mut d = vec![0.0; n];
         problem.curvature(&x, &mut d);
-        let mut tau = self.opts.tau0.unwrap_or_else(|| problem.curvature_trace() / (2.0 * n as f64));
+        // Warm-start τ (serve-layer carry-over) wins over the solver's own
+        // tau0, which wins over the paper's tr(AᵀA)/2n default.
+        let mut tau = opts
+            .tau0
+            .or(self.opts.tau0)
+            .unwrap_or_else(|| problem.curvature_trace() / (2.0 * n as f64));
         assert!(tau > 0.0 || self.opts.surrogate == Surrogate::DiagQuadratic);
         let mut schedule = Schedule::new(self.opts.step.clone());
         let mut selector = Selector::new(self.opts.selection.clone());
@@ -322,6 +327,9 @@ impl<P: CompositeProblem + ?Sized> Solver<P> for Fpa {
                 converged = true;
                 break;
             }
+            if recorder.cancelled() {
+                break;
+            }
             // Finite convergence: stationary point reached exactly.
             let max_e = e.iter().cloned().fold(0.0, f64::max);
             if max_e == 0.0 {
@@ -359,7 +367,10 @@ impl Fpa {
         assert_eq!(x.len(), n, "x0 dimension mismatch");
         let mut d = vec![0.0; n];
         problem.curvature(&x, &mut d);
-        let mut tau = self.opts.tau0.unwrap_or_else(|| problem.curvature_trace() / (2.0 * n as f64));
+        let mut tau = opts
+            .tau0
+            .or(self.opts.tau0)
+            .unwrap_or_else(|| problem.curvature_trace() / (2.0 * n as f64));
         let mut schedule = Schedule::new(self.opts.step.clone());
         let mut selector = Selector::new(self.opts.selection.clone());
         let mut rng = self.opts.inexact.map(|ix| Xoshiro256pp::seed_from_u64(ix.seed));
@@ -488,6 +499,9 @@ impl Fpa {
             let err = recorder.record(k, &x, updated);
             if recorder.reached(err) {
                 converged = true;
+                break;
+            }
+            if recorder.cancelled() {
                 break;
             }
             let max_e = e.iter().cloned().fold(0.0, f64::max);

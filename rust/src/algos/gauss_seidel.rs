@@ -107,6 +107,9 @@ impl<P: LeastSquares + ?Sized> Solver<P> for GaussSeidel {
                 converged = true;
                 break;
             }
+            if recorder.cancelled() {
+                break;
+            }
             if recorder.elapsed_s() > opts.max_seconds {
                 break;
             }

@@ -14,7 +14,7 @@
 
 use super::{Recorder, SolveOptions, SolveReport, Solver};
 use crate::problems::CompositeProblem;
-use crate::select::argmax;
+use crate::select::{argmax, cmp_desc_nan_last};
 use std::time::Instant;
 
 /// GRock configuration.
@@ -108,7 +108,7 @@ impl<P: CompositeProblem + ?Sized> Solver<P> for Grock {
                 }
                 1
             } else {
-                idx.sort_unstable_by(|&a, &b| merit[b].partial_cmp(&merit[a]).unwrap());
+                idx.sort_unstable_by(|&a, &b| cmp_desc_nan_last(merit[a], merit[b]));
                 for &i in idx.iter().take(p_updates) {
                     for j in layout.range(i) {
                         x[j] = xhat[j];
@@ -122,6 +122,9 @@ impl<P: CompositeProblem + ?Sized> Solver<P> for Grock {
             let err = recorder.record(k, &x, updated);
             if recorder.reached(err) {
                 converged = true;
+                break;
+            }
+            if recorder.cancelled() {
                 break;
             }
             // Divergence guard (GRock's convergence condition can fail for

@@ -54,6 +54,9 @@ impl<P: CompositeProblem + ?Sized> Solver<P> for Ista {
                 converged = true;
                 break;
             }
+            if recorder.cancelled() {
+                break;
+            }
             if recorder.elapsed_s() > opts.max_seconds {
                 break;
             }

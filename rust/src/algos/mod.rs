@@ -18,6 +18,7 @@ use crate::coordinator::costmodel::CostModel;
 use crate::linalg::ops;
 use crate::metrics::{IterRecord, Stopwatch, Trace};
 use crate::problems::CompositeProblem;
+use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::Arc;
 
 /// Common solve options.
@@ -39,6 +40,15 @@ pub struct SolveOptions {
     /// Streaming observer notified once per iteration (see
     /// [`crate::api::events`]); `None` = no streaming.
     pub observer: Option<Arc<dyn EventObserver>>,
+    /// Warm-start τ override: carried over from a previous solve on the
+    /// same data (the `flexa::serve` cache sets this together with `x0`).
+    /// Takes precedence over the solver's own `tau0` configuration; only
+    /// meaningful to the FPA family, ignored by other solvers.
+    pub tau0: Option<f64>,
+    /// Cooperative cancellation token: solvers poll it once per iteration
+    /// (via [`Recorder::cancelled`]) and stop early when set. The report
+    /// then carries the partial iterate with `converged = false`.
+    pub cancel: Option<Arc<AtomicBool>>,
 }
 
 impl std::fmt::Debug for SolveOptions {
@@ -51,6 +61,8 @@ impl std::fmt::Debug for SolveOptions {
             .field("cost_model", &self.cost_model)
             .field("record_every", &self.record_every)
             .field("observer", &self.observer.is_some())
+            .field("tau0", &self.tau0)
+            .field("cancel", &self.cancel.is_some())
             .finish()
     }
 }
@@ -65,6 +77,8 @@ impl Default for SolveOptions {
             cost_model: CostModel::serial(),
             record_every: 1,
             observer: None,
+            tau0: None,
+            cancel: None,
         }
     }
 }
@@ -96,6 +110,14 @@ impl SolveOptions {
     }
     pub fn with_observer(mut self, observer: Arc<dyn EventObserver>) -> Self {
         self.observer = Some(observer);
+        self
+    }
+    pub fn with_tau0(mut self, tau0: f64) -> Self {
+        self.tau0 = Some(tau0);
+        self
+    }
+    pub fn with_cancel(mut self, cancel: Arc<AtomicBool>) -> Self {
+        self.cancel = Some(cancel);
         self
     }
 }
@@ -151,6 +173,7 @@ pub struct Recorder<'a, P: CompositeProblem + ?Sized> {
     last_objective: f64,
     problem: &'a P,
     observer: Option<Arc<dyn EventObserver>>,
+    cancel: Option<Arc<AtomicBool>>,
     gamma: f64,
     tau: f64,
     /// Most recent row skipped by the cadence; flushed by
@@ -173,6 +196,7 @@ impl<'a, P: CompositeProblem + ?Sized> Recorder<'a, P> {
             last_objective: f64::INFINITY,
             problem,
             observer: opts.observer.clone(),
+            cancel: opts.cancel.clone(),
             gamma: f64::NAN,
             tau: f64::NAN,
             pending: None,
@@ -257,6 +281,12 @@ impl<'a, P: CompositeProblem + ?Sized> Recorder<'a, P> {
         e.is_finite() && e <= self.target
     }
 
+    /// Whether the solve's cancellation token has been set (cooperative:
+    /// solvers poll this once per iteration and break out of the loop).
+    pub fn cancelled(&self) -> bool {
+        self.cancel.as_ref().is_some_and(|c| c.load(Ordering::Relaxed))
+    }
+
     /// Finish recording. Flushes the pending row (if the cadence skipped
     /// the last recorded iteration) so the final iterate always appears in
     /// the trace — time-to-accuracy summaries read the trace tail.
@@ -300,6 +330,41 @@ mod tests {
         assert!(o.observer.is_some());
         // Debug impl elides the observer but does not panic.
         assert!(format!("{o:?}").contains("observer: true"));
+        let o = o.with_tau0(2.5).with_cancel(Arc::new(AtomicBool::new(false)));
+        assert_eq!(o.tau0, Some(2.5));
+        assert!(format!("{o:?}").contains("cancel: true"));
+    }
+
+    #[test]
+    fn pre_set_cancel_token_stops_after_first_iteration() {
+        let inst = crate::datagen::NesterovLasso::new(20, 60, 0.1, 1.0).seed(5).generate();
+        let p = crate::problems::lasso::Lasso::new(inst.a, inst.b, inst.c);
+        let token = Arc::new(AtomicBool::new(true));
+        let opts = SolveOptions::default()
+            .with_max_iters(500)
+            .with_target(0.0)
+            .with_cancel(token);
+        let report = crate::algos::fpa::Fpa::paper_defaults(&p).solve(&p, &opts);
+        assert_eq!(report.iterations, 1, "cancel is polled after every iteration");
+        assert!(!report.converged);
+        // The partial iterate is still a valid report.
+        assert!(report.objective.is_finite());
+        assert_eq!(report.trace.last().unwrap().iter, 0);
+    }
+
+    #[test]
+    fn solve_options_tau0_overrides_solver_default() {
+        let inst = crate::datagen::NesterovLasso::new(20, 60, 0.1, 1.0).seed(6).generate();
+        let p = crate::problems::lasso::Lasso::new(inst.a, inst.b, inst.c);
+        let obs = crate::api::CollectObserver::new();
+        let opts = SolveOptions::default()
+            .with_max_iters(1)
+            .with_target(0.0)
+            .with_tau0(123.5)
+            .with_observer(obs.clone());
+        let _ = crate::algos::fpa::Fpa::paper_defaults(&p).solve(&p, &opts);
+        let events = obs.events();
+        assert_eq!(events[0].tau, 123.5, "warm-start tau0 must reach the solver");
     }
 
     #[test]

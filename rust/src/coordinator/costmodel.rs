@@ -107,6 +107,59 @@ mod tests {
         assert!(m8.iter_time(1.0, 0.1, 0) < m1.iter_time(1.0, 0.1, 0));
     }
 
+    /// Property: with communication free (infinite bandwidth, zero
+    /// latency), `iter_time` is non-increasing in `procs` for fixed work
+    /// — adding processes can only shrink the parallel phase.
+    #[test]
+    fn iter_time_nonincreasing_in_procs_for_fixed_work() {
+        for &(parallel_s, serial_s, bytes) in
+            &[(1.0, 0.25, 0usize), (3.5, 0.0, 1 << 20), (0.0, 1.0, 1 << 10)]
+        {
+            let mut prev = f64::INFINITY;
+            for procs in 1..=64 {
+                let m = CostModel { procs, bandwidth: f64::INFINITY, latency: 0.0 };
+                let t = m.iter_time(parallel_s, serial_s, bytes);
+                assert!(
+                    t <= prev + 1e-15,
+                    "procs {procs}: {t} > {prev} for ({parallel_s}, {serial_s}, {bytes})"
+                );
+                prev = t;
+            }
+        }
+    }
+
+    /// Property: `allreduce_s` is monotone (non-decreasing) in bytes for
+    /// any process count, and identically zero for `procs <= 1`.
+    #[test]
+    fn allreduce_monotone_in_bytes_and_zero_for_serial() {
+        for procs in [2usize, 3, 8, 17, 32] {
+            let m = CostModel::mpi_node(procs);
+            let mut prev = 0.0;
+            for shift in 0..24 {
+                let t = m.allreduce_s(1usize << shift);
+                assert!(t >= prev, "procs {procs}, bytes 2^{shift}: {t} < {prev}");
+                prev = t;
+            }
+        }
+        let serial = CostModel::mpi_node(1);
+        for shift in 0..24 {
+            assert_eq!(serial.allreduce_s(1usize << shift), 0.0);
+        }
+        assert_eq!(CostModel::serial().allreduce_s(usize::MAX >> 8), 0.0);
+    }
+
+    /// Non-power-of-two process counts round the recursive-doubling
+    /// rounds *up*: P = 5 pays the same 3 rounds as P = 8.
+    #[test]
+    fn non_power_of_two_procs_round_doubling_rounds_up() {
+        let t = |procs: usize| CostModel::mpi_node(procs).allreduce_s(1 << 20);
+        assert_eq!(t(3), t(4), "ceil(log2(3)) = 2 rounds");
+        assert_eq!(t(5), t(8), "ceil(log2(5)) = 3 rounds");
+        assert_eq!(t(9), t(16), "ceil(log2(9)) = 4 rounds");
+        assert_eq!(t(17), t(32), "ceil(log2(17)) = 5 rounds");
+        assert!(t(4) < t(5), "crossing a power of two adds a round");
+    }
+
     #[test]
     fn comm_can_dominate_small_problems() {
         // Tiny parallel work, big message: 32 procs slower than 2.

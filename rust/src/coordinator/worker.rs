@@ -80,9 +80,11 @@ impl ParallelFpa {
         let mut d = vec![0.0; n];
         problem.curvature(&x_vec, &mut d);
         let d = Arc::new(d);
-        let mut tau = self
-            .opts
+        // Same precedence as the serial `Fpa`: warm-start override, then
+        // the solver's tau0, then the paper's tr(AᵀA)/2n default.
+        let mut tau = opts
             .tau0
+            .or(self.opts.tau0)
             .unwrap_or_else(|| problem.curvature_trace() / (2.0 * n as f64));
         let mut schedule = Schedule::new(self.opts.step.clone());
         let mut selector = Selector::new(self.opts.selection.clone());
@@ -233,6 +235,9 @@ impl ParallelFpa {
                 let err = recorder.record(k, &x_vec, updated);
                 if recorder.reached(err) {
                     converged = true;
+                    break;
+                }
+                if recorder.cancelled() {
                     break;
                 }
                 if e.iter().cloned().fold(0.0, f64::max) == 0.0 {

@@ -49,6 +49,10 @@
 //! (`flexa::algos::fpa::Fpa` etc.); the session layer adds the registry,
 //! typo-suggesting name resolution, and streaming iteration events on
 //! top of the same machinery.
+//!
+//! For many solves at once — concurrent scheduling, per-job deadlines and
+//! cancellation, and warm-starting repeated/λ-swept problems from a
+//! content-addressed cache — see [`serve`] (CLI front-end: `flexa serve`).
 
 pub mod algos;
 pub mod api;
@@ -64,6 +68,7 @@ pub mod problems;
 pub mod proptest;
 pub mod runtime;
 pub mod select;
+pub mod serve;
 pub mod stepsize;
 
 /// Crate-wide result alias.

@@ -169,6 +169,77 @@ mod tests {
         assert_eq!(a.nnz(), 0);
     }
 
+    /// Unsorted rows, interleaved duplicates and fully empty columns,
+    /// checked against a dense accumulation oracle.
+    #[test]
+    fn from_triplets_unsorted_duplicates_and_empty_columns() {
+        let (m, n) = (4, 5);
+        // Columns 1 and 3 receive nothing; duplicates are out of order
+        // and spread across the list.
+        let triplets = vec![
+            (3, 4, 1.0),
+            (0, 0, 2.0),
+            (2, 0, -1.0),
+            (0, 0, 0.5), // duplicate of (0,0): accumulates to 2.5
+            (1, 2, 4.0),
+            (3, 4, -0.25), // duplicate of (3,4): accumulates to 0.75
+            (0, 2, -3.0),
+            (2, 0, 1.0), // duplicate of (2,0): accumulates to 0.0 → dropped
+        ];
+        let mut oracle = DenseMatrix::zeros(m, n);
+        for &(i, j, v) in &triplets {
+            let acc = oracle.get(i, j) + v;
+            oracle.set(i, j, acc);
+        }
+        let a = CscMatrix::from_triplets(m, n, triplets);
+
+        // nnz/density agree with the dense oracle (zero-sum dropped).
+        let dense_nnz: usize =
+            (0..n).map(|j| oracle.col(j).iter().filter(|&&v| v != 0.0).count()).sum();
+        assert_eq!(a.nnz(), dense_nnz);
+        assert_eq!(a.nnz(), 4);
+        assert!((a.density() - dense_nnz as f64 / (m * n) as f64).abs() < 1e-15);
+
+        // col_iter: sorted rows, accumulated values, per the oracle.
+        for j in 0..n {
+            let got: Vec<(usize, f64)> = a.col_iter(j).collect();
+            let want: Vec<(usize, f64)> = oracle
+                .col(j)
+                .iter()
+                .enumerate()
+                .filter(|(_, &v)| v != 0.0)
+                .map(|(i, &v)| (i, v))
+                .collect();
+            assert_eq!(got, want, "column {j}");
+            assert!(got.windows(2).all(|w| w[0].0 < w[1].0), "column {j} rows sorted");
+        }
+        // Empty columns iterate to nothing.
+        assert_eq!(a.col_iter(1).count(), 0);
+        assert_eq!(a.col_iter(3).count(), 0);
+    }
+
+    /// `from_dense` drops entries with `|v| <= tol` — the boundary value
+    /// itself is dropped (strict inequality), the next float up is kept.
+    #[test]
+    fn from_dense_tolerance_boundary() {
+        let tol = 0.25;
+        let above = f64::from_bits(tol.to_bits() + 1); // smallest value > tol
+        let mut d = DenseMatrix::zeros(2, 3);
+        d.set(0, 0, tol); // exactly tol: dropped
+        d.set(1, 0, -tol); // exactly -tol: dropped
+        d.set(0, 1, above); // just above: kept
+        d.set(1, 1, -above); // just above in magnitude: kept
+        d.set(0, 2, 0.0);
+        let s = CscMatrix::from_dense(&d, tol);
+        assert_eq!(s.nnz(), 2);
+        assert_eq!(s.col_iter(0).count(), 0, "values at exactly tol are dropped");
+        let col1: Vec<(usize, f64)> = s.col_iter(1).collect();
+        assert_eq!(col1, vec![(0, above), (1, -above)]);
+        // tol = 0 keeps every non-zero (the common exact-sparsity case).
+        let s0 = CscMatrix::from_dense(&d, 0.0);
+        assert_eq!(s0.nnz(), 4);
+    }
+
     #[test]
     fn matches_dense_ops() {
         let mut rng = Xoshiro256pp::seed_from_u64(42);

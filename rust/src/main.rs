@@ -3,6 +3,8 @@
 //! Subcommands:
 //!
 //! * `solve`      — generate a planted instance and run one solver.
+//! * `serve`      — run a JSONL job file through the concurrent solve
+//!                  scheduler (worker pool, deadlines, warm-start cache).
 //! * `experiment` — run a TOML experiment config (multi-algo, multi-
 //!                  realization), writing CSV series + ASCII plots.
 //! * `figure1`    — regenerate a panel of the paper's Fig. 1.
@@ -40,6 +42,7 @@ fn dispatch(args: &[String]) -> anyhow::Result<()> {
     let rest = if args.is_empty() { &[][..] } else { &args[1..] };
     match sub {
         "solve" => cmd_solve(rest),
+        "serve" => cmd_serve(rest),
         "experiment" => cmd_experiment(rest),
         "figure1" => cmd_figure1(rest),
         "registry" => cmd_registry(rest),
@@ -56,6 +59,7 @@ fn dispatch(args: &[String]) -> anyhow::Result<()> {
                  usage: flexa <subcommand> [options]\n\n\
                  subcommands:\n\
                  \x20 solve       run one solver on a planted instance\n\
+                 \x20 serve       run a JSONL job file through the solve scheduler\n\
                  \x20 experiment  run a TOML experiment config\n\
                  \x20 figure1     regenerate a panel of the paper's Fig. 1\n\
                  \x20 registry    list registered problems and solvers\n\
@@ -173,6 +177,76 @@ fn cmd_solve(args: &[String]) -> anyhow::Result<()> {
     if let Some(csv) = p.get("csv") {
         write_trace_csv(Path::new(csv), trace)?;
         println!("trace written to {csv}");
+    }
+    Ok(())
+}
+
+/// Run a JSONL job file through `flexa::serve`: concurrent workers,
+/// per-job deadlines/cancellation, warm-start cache, JSON-line output.
+fn cmd_serve(args: &[String]) -> anyhow::Result<()> {
+    use flexa::serve::{
+        event_json, parse_jobs, result_json, stats_json, FnServeObserver, JobOutcome, Scheduler,
+        ServeConfig, ServeObserver,
+    };
+    use std::sync::Arc;
+
+    let cmd = Command::new("serve", "run a JSONL job file through the solve scheduler")
+        .opt("workers", Some("4"), "worker threads")
+        .opt("queue", Some("64"), "bounded queue capacity")
+        .opt("cache-mb", Some("64"), "warm-start cache budget in MiB (0 disables)")
+        .flag("stream", "emit every job lifecycle event as a JSON line")
+        .flag("quiet", "suppress the stderr summary");
+    let p = cmd.parse(args)?;
+    let path = p
+        .positionals()
+        .first()
+        .ok_or_else(|| anyhow::anyhow!("usage: flexa serve <jobs.jsonl | -> [options]"))?;
+
+    let text = if path == "-" {
+        use std::io::Read;
+        let mut buf = String::new();
+        std::io::stdin().read_to_string(&mut buf)?;
+        buf
+    } else {
+        std::fs::read_to_string(path)
+            .map_err(|e| anyhow::anyhow!("cannot read jobs file `{path}`: {e}"))?
+    };
+    let jobs = parse_jobs(&text)?;
+    anyhow::ensure!(!jobs.is_empty(), "no jobs in `{path}` (blank lines and # comments are skipped)");
+
+    let config = ServeConfig::default()
+        .with_workers(p.usize("workers")?)
+        .with_queue_capacity(p.usize("queue")?)
+        .with_cache_bytes(p.usize("cache-mb")?.saturating_mul(1 << 20));
+    // println! locks stdout per call, so concurrent workers emit whole
+    // lines.
+    let observer: Option<Arc<dyn ServeObserver>> = if p.flag("stream") {
+        Some(FnServeObserver::new(|e| println!("{}", event_json(e))))
+    } else {
+        None
+    };
+    let scheduler = Scheduler::start_with(config, observer, flexa::api::Registry::with_defaults());
+    let count = jobs.len();
+    for job in jobs {
+        scheduler.submit(job);
+    }
+    let (results, stats) = scheduler.join_with_stats();
+    for r in &results {
+        println!("{}", result_json(r));
+    }
+    if !p.flag("quiet") {
+        eprintln!(
+            "{} jobs: {} done, {} failed, {} cancelled, {} deadline-expired",
+            count,
+            results.iter().filter(|r| r.outcome.is_done()).count(),
+            results.iter().filter(|r| matches!(r.outcome, JobOutcome::Failed { .. })).count(),
+            results.iter().filter(|r| matches!(r.outcome, JobOutcome::Cancelled { .. })).count(),
+            results
+                .iter()
+                .filter(|r| matches!(r.outcome, JobOutcome::DeadlineExpired { .. }))
+                .count(),
+        );
+        eprintln!("{}", stats_json(&stats));
     }
     Ok(())
 }
@@ -342,5 +416,44 @@ mod tests {
     fn registry_listing_prints() {
         cmd_registry(&[]).unwrap();
         dispatch(&["help".to_string()]).unwrap();
+    }
+
+    fn args_of(list: &[&str]) -> Vec<String> {
+        list.iter().map(|s| s.to_string()).collect()
+    }
+
+    /// A tiny JSONL job file runs end-to-end through the scheduler.
+    #[test]
+    fn serve_runs_a_tiny_jobs_file() {
+        let path = std::env::temp_dir().join("flexa_serve_cli_tiny.jsonl");
+        std::fs::write(
+            &path,
+            "# two tiny lasso jobs\n\
+             {\"rows\": 15, \"cols\": 45, \"max_iters\": 5, \"target\": 0, \"tag\": \"a\"}\n\
+             {\"rows\": 15, \"cols\": 45, \"seed\": 2, \"max_iters\": 5, \"target\": 0}\n",
+        )
+        .unwrap();
+        let args = args_of(&[path.to_str().unwrap(), "--workers", "2", "--quiet", "--stream"]);
+        cmd_serve(&args).unwrap();
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn serve_rejects_bad_input() {
+        let err = cmd_serve(&args_of(&["/no/such/file.jsonl"])).unwrap_err().to_string();
+        assert!(err.contains("cannot read jobs file"), "{err}");
+
+        let path = std::env::temp_dir().join("flexa_serve_cli_bad.jsonl");
+        std::fs::write(&path, "{\"bogus\": 1}\n").unwrap();
+        let err = cmd_serve(&args_of(&[path.to_str().unwrap()])).unwrap_err().to_string();
+        assert!(err.contains("line 1"), "{err}");
+        assert!(err.contains("unknown job key"), "{err}");
+        std::fs::remove_file(&path).ok();
+
+        let path = std::env::temp_dir().join("flexa_serve_cli_empty.jsonl");
+        std::fs::write(&path, "# nothing\n").unwrap();
+        let err = cmd_serve(&args_of(&[path.to_str().unwrap()])).unwrap_err().to_string();
+        assert!(err.contains("no jobs"), "{err}");
+        std::fs::remove_file(&path).ok();
     }
 }

@@ -149,6 +149,9 @@ impl<'e> XlaFpaLasso<'e> {
                 converged = true;
                 break;
             }
+            if recorder.cancelled() {
+                break;
+            }
             if max_e <= 0.0 {
                 break;
             }

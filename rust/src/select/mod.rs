@@ -98,7 +98,7 @@ impl Selector {
             SelectionRule::TopP { p } => {
                 let p = (*p).clamp(1, nb);
                 let mut idx: Vec<usize> = (0..nb).collect();
-                idx.sort_unstable_by(|&a, &b| e[b].partial_cmp(&e[a]).unwrap());
+                idx.sort_unstable_by(|&a, &b| cmp_desc_nan_last(e[a], e[b]));
                 mask.fill(false);
                 for &i in idx.iter().take(p) {
                     mask[i] = true;
@@ -132,6 +132,15 @@ impl Selector {
         }
         count
     }
+}
+
+/// Descending comparator over scores with NaN treated as −∞ (a total
+/// order, so sorts cannot panic and NaN entries — e.g. from an inexact
+/// subproblem blow-up — land last, never selected ahead of a finite
+/// block). Shared by the TopP selector and GRock's merit ranking.
+pub fn cmp_desc_nan_last(a: f64, b: f64) -> std::cmp::Ordering {
+    let key = |v: f64| if v.is_nan() { f64::NEG_INFINITY } else { v };
+    key(b).total_cmp(&key(a))
 }
 
 /// Index of the maximum (first on ties); NaNs are treated as −∞.
@@ -207,6 +216,21 @@ mod tests {
     }
 
     #[test]
+    fn top_p_nan_error_bounds_never_panic_or_get_selected() {
+        // Regression: partial_cmp(..).unwrap() panicked on NaN E_i.
+        let e = vec![0.1, f64::NAN, 0.5, f64::NAN, 0.3];
+        let mut s = Selector::new(SelectionRule::TopP { p: 3 });
+        let mut mask = vec![false; 5];
+        assert_eq!(s.select(&e, &mut mask), 3);
+        assert_eq!(mask, vec![true, false, true, false, true], "NaN blocks sort last");
+        // All-NaN input: degenerate but still total-ordered — p blocks
+        // come back without a panic.
+        let all_nan = vec![f64::NAN; 4];
+        let mut mask = vec![false; 4];
+        assert_eq!(s.select(&all_nan, &mut mask), 3);
+    }
+
+    #[test]
     fn cyclic_covers_everything_and_keeps_max() {
         let mut s = Selector::new(SelectionRule::Cyclic { batch: 2 });
         let mut seen = vec![false; 5];
@@ -236,5 +260,20 @@ mod tests {
     fn argmax_ties_and_nan() {
         assert_eq!(argmax(&[1.0, 3.0, 3.0]), 1);
         assert_eq!(argmax(&[f64::NAN, 2.0]), 1);
+    }
+
+    #[test]
+    fn cmp_desc_nan_last_orders_descending_with_nan_last() {
+        use std::cmp::Ordering;
+        assert_eq!(cmp_desc_nan_last(2.0, 1.0), Ordering::Less, "bigger sorts first");
+        assert_eq!(cmp_desc_nan_last(1.0, 2.0), Ordering::Greater);
+        assert_eq!(cmp_desc_nan_last(1.0, 1.0), Ordering::Equal);
+        assert_eq!(cmp_desc_nan_last(0.0, f64::NAN), Ordering::Less, "NaN sorts last");
+        assert_eq!(cmp_desc_nan_last(f64::NAN, -1.0), Ordering::Greater);
+        assert_eq!(cmp_desc_nan_last(f64::NAN, f64::NAN), Ordering::Equal);
+        let mut v = vec![0.3, f64::NAN, 0.9, 0.1];
+        v.sort_by(|a, b| cmp_desc_nan_last(*a, *b));
+        assert_eq!(&v[..3], &[0.9, 0.3, 0.1]);
+        assert!(v[3].is_nan());
     }
 }

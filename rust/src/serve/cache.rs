@@ -1,0 +1,300 @@
+//! Warm-start cache: reuse the solution (and τ estimate) of a previous
+//! solve on the *same data* as the starting point of the next one.
+//!
+//! ## Keying — a content fingerprint of the problem data, modulo λ
+//!
+//! The cache key is a 64-bit hash of the problem's *smooth part* `F`:
+//! dimension, block layout, and the bit patterns of `F(x̂)` and `∇F(x̂)`
+//! at a fixed deterministic probe point `x̂`. For `F = ‖Ax − b‖²` the
+//! probe gradient `2Aᵀ(Ax̂ − b)` depends on every entry of `A` and `b`,
+//! so equal keys mean (up to hash collision, ~2⁻⁶⁴) equal data.
+//!
+//! The regularizer `G` — and hence the weight λ — is deliberately *not*
+//! hashed: two Lasso problems over the same `(A, b)` with different λ
+//! share a key, which is exactly what makes λ-path sweeps warm-startable
+//! (the solution at the previous λ is an excellent `x⁰` for the next).
+//! Problem generation is a pure function of the [`crate::api::ProblemSpec`],
+//! so repeat solves of the same spec hit deterministically; custom
+//! [`ProblemHandle`]s over user data fingerprint the same way.
+//!
+//! ## Contents and eviction
+//!
+//! An entry stores the final iterate `x` and the last τ the solver
+//! reported (the paper's adaptive proximal weight — carrying it over
+//! skips re-learning the curvature scale, the `tr(AᵀA)/2n` re-estimate).
+//! Entries are evicted least-recently-used once the byte budget is
+//! exceeded; hit/miss/eviction counters feed the serve event stream.
+
+use crate::api::ProblemHandle;
+use crate::problems::CompositeProblem;
+use crate::prng::Xoshiro256pp;
+use std::collections::HashMap;
+use std::sync::Arc;
+
+/// What a cache hit hands to the next solve.
+///
+/// The iterate is shared (`Arc`) so a lookup under the scheduler-wide
+/// cache lock is a refcount bump, not a memcpy of a possibly-huge
+/// vector; the caller materializes its own copy outside the lock.
+#[derive(Clone, Debug)]
+pub struct WarmStart {
+    /// Previous final iterate, to be used as `x⁰`.
+    pub x0: Arc<Vec<f64>>,
+    /// Last τ the previous solve reported (None if the solver has no τ).
+    pub tau: Option<f64>,
+}
+
+/// Cache observability counters.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct CacheStats {
+    pub hits: u64,
+    pub misses: u64,
+    pub evictions: u64,
+    pub entries: usize,
+    pub bytes: usize,
+    pub byte_budget: usize,
+}
+
+struct Entry {
+    x: Arc<Vec<f64>>,
+    tau: Option<f64>,
+    bytes: usize,
+    last_used: u64,
+}
+
+/// LRU warm-start cache with a byte budget.
+pub struct WarmStartCache {
+    entries: HashMap<u64, Entry>,
+    byte_budget: usize,
+    bytes: usize,
+    clock: u64,
+    hits: u64,
+    misses: u64,
+    evictions: u64,
+}
+
+/// Approximate heap footprint of an entry (iterate + bookkeeping).
+fn entry_bytes(x: &[f64]) -> usize {
+    x.len() * std::mem::size_of::<f64>() + 64
+}
+
+impl WarmStartCache {
+    pub fn new(byte_budget: usize) -> Self {
+        Self {
+            entries: HashMap::new(),
+            byte_budget,
+            bytes: 0,
+            clock: 0,
+            hits: 0,
+            misses: 0,
+            evictions: 0,
+        }
+    }
+
+    /// Look up `key`, counting a hit or miss and refreshing recency.
+    pub fn lookup(&mut self, key: u64) -> Option<WarmStart> {
+        self.clock += 1;
+        match self.entries.get_mut(&key) {
+            Some(e) => {
+                e.last_used = self.clock;
+                self.hits += 1;
+                Some(WarmStart { x0: Arc::clone(&e.x), tau: e.tau })
+            }
+            None => {
+                self.misses += 1;
+                None
+            }
+        }
+    }
+
+    /// Insert (or replace) the entry for `key`, then evict LRU entries
+    /// until the byte budget holds. An entry larger than the whole budget
+    /// is not cached at all.
+    pub fn insert(&mut self, key: u64, x: Vec<f64>, tau: Option<f64>) {
+        let bytes = entry_bytes(&x);
+        if bytes > self.byte_budget {
+            return;
+        }
+        self.clock += 1;
+        if let Some(old) = self.entries.remove(&key) {
+            self.bytes -= old.bytes;
+        }
+        self.bytes += bytes;
+        self.entries.insert(key, Entry { x: Arc::new(x), tau, bytes, last_used: self.clock });
+        while self.bytes > self.byte_budget {
+            // The just-inserted entry carries the newest stamp, so the LRU
+            // victim is always an older entry.
+            let victim = *self
+                .entries
+                .iter()
+                .min_by_key(|(_, e)| e.last_used)
+                .map(|(k, _)| k)
+                .expect("bytes > 0 implies entries");
+            let e = self.entries.remove(&victim).expect("victim exists");
+            self.bytes -= e.bytes;
+            self.evictions += 1;
+        }
+    }
+
+    pub fn stats(&self) -> CacheStats {
+        CacheStats {
+            hits: self.hits,
+            misses: self.misses,
+            evictions: self.evictions,
+            entries: self.entries.len(),
+            bytes: self.bytes,
+            byte_budget: self.byte_budget,
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        self.entries.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.entries.is_empty()
+    }
+}
+
+/// Content fingerprint of a problem's smooth part (see module docs).
+pub fn fingerprint(problem: &ProblemHandle) -> u64 {
+    match problem {
+        ProblemHandle::General(p) => fingerprint_of(p.as_ref()),
+        ProblemHandle::LeastSquares(p) => fingerprint_of(p.as_ref()),
+    }
+}
+
+fn fingerprint_of<P: CompositeProblem + ?Sized>(p: &P) -> u64 {
+    let n = p.n();
+    let layout = p.layout();
+    let nb = layout.num_blocks();
+    let mut h = Fnv::new();
+    h.write_u64(n as u64);
+    h.write_u64(nb as u64);
+    for i in 0..nb {
+        h.write_u64(layout.range(i).start as u64);
+    }
+    // Fixed pseudorandom probe point: equal data ⇒ bit-equal gradient
+    // (problem generation and this probe are both deterministic).
+    let mut rng = Xoshiro256pp::seed_from_u64(0x5EED_F1D0);
+    let mut xhat = vec![0.0; n];
+    for v in xhat.iter_mut() {
+        *v = 2.0 * rng.next_f64() - 1.0;
+    }
+    let mut g = vec![0.0; n];
+    let f = p.grad_and_smooth(&xhat, &mut g);
+    h.write_f64(f);
+    for &gj in &g {
+        h.write_f64(gj);
+    }
+    h.finish()
+}
+
+/// FNV-1a, 64-bit (from-scratch: no hasher crates in the offline cache;
+/// `DefaultHasher` is not guaranteed stable across releases and this key
+/// may be logged/persisted).
+struct Fnv(u64);
+
+impl Fnv {
+    fn new() -> Self {
+        Fnv(0xcbf2_9ce4_8422_2325)
+    }
+
+    fn write(&mut self, bytes: &[u8]) {
+        for &b in bytes {
+            self.0 ^= b as u64;
+            self.0 = self.0.wrapping_mul(0x0000_0100_0000_01b3);
+        }
+    }
+
+    fn write_u64(&mut self, v: u64) {
+        self.write(&v.to_le_bytes());
+    }
+
+    fn write_f64(&mut self, v: f64) {
+        self.write(&v.to_bits().to_le_bytes());
+    }
+
+    fn finish(&self) -> u64 {
+        self.0
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::datagen::NesterovLasso;
+    use crate::problems::lasso::Lasso;
+
+    fn handle(seed: u64, c: f64) -> ProblemHandle {
+        let inst = NesterovLasso::new(15, 40, 0.1, 1.0).seed(seed).generate();
+        ProblemHandle::least_squares(Lasso::new(inst.a, inst.b, c))
+    }
+
+    #[test]
+    fn fingerprint_is_deterministic_and_data_sensitive() {
+        assert_eq!(fingerprint(&handle(7, 1.0)), fingerprint(&handle(7, 1.0)));
+        assert_ne!(fingerprint(&handle(7, 1.0)), fingerprint(&handle(8, 1.0)));
+    }
+
+    #[test]
+    fn fingerprint_ignores_lambda() {
+        // Same (A, b), different regularization weight: same key — this
+        // is what warm-starts λ-path sweeps.
+        let inst = NesterovLasso::new(15, 40, 0.1, 1.0).seed(9).generate();
+        let p1 = ProblemHandle::least_squares(Lasso::new(inst.a.clone(), inst.b.clone(), 1.0));
+        let p2 = ProblemHandle::least_squares(Lasso::new(inst.a, inst.b, 0.25));
+        assert_eq!(fingerprint(&p1), fingerprint(&p2));
+    }
+
+    #[test]
+    fn fingerprint_distinguishes_layouts() {
+        let inst = NesterovLasso::new(15, 40, 0.1, 1.0).seed(10).generate();
+        let scalar = ProblemHandle::least_squares(Lasso::new(inst.a.clone(), inst.b.clone(), 1.0));
+        let blocked = ProblemHandle::least_squares(Lasso::with_layout(
+            inst.a,
+            inst.b,
+            1.0,
+            Some(crate::problems::BlockLayout::uniform(40, 4)),
+        ));
+        assert_ne!(fingerprint(&scalar), fingerprint(&blocked));
+    }
+
+    #[test]
+    fn lookup_counts_hits_and_misses() {
+        let mut cache = WarmStartCache::new(1 << 20);
+        assert!(cache.lookup(1).is_none());
+        cache.insert(1, vec![1.0, 2.0], Some(3.0));
+        let ws = cache.lookup(1).expect("hit");
+        assert_eq!(*ws.x0, vec![1.0, 2.0]);
+        assert_eq!(ws.tau, Some(3.0));
+        let s = cache.stats();
+        assert_eq!((s.hits, s.misses, s.entries), (1, 1, 1));
+        assert!(s.bytes > 0 && s.bytes <= s.byte_budget);
+    }
+
+    #[test]
+    fn insert_replaces_and_respects_budget_with_lru_eviction() {
+        // Budget fits exactly two 8-element entries.
+        let budget = 2 * entry_bytes(&[0.0; 8]);
+        let mut cache = WarmStartCache::new(budget);
+        cache.insert(1, vec![0.0; 8], None);
+        cache.insert(2, vec![0.0; 8], None);
+        assert_eq!(cache.len(), 2);
+        // Touch 1 so 2 becomes the LRU victim.
+        assert!(cache.lookup(1).is_some());
+        cache.insert(3, vec![0.0; 8], None);
+        assert_eq!(cache.len(), 2);
+        assert!(cache.lookup(1).is_some(), "recently used entry survives");
+        assert!(cache.lookup(2).is_none(), "LRU entry evicted");
+        assert!(cache.lookup(3).is_some());
+        assert_eq!(cache.stats().evictions, 1);
+        // Replacing a key does not leak bytes.
+        let before = cache.stats().bytes;
+        cache.insert(3, vec![0.0; 8], Some(1.0));
+        assert_eq!(cache.stats().bytes, before);
+        // An entry bigger than the whole budget is refused outright.
+        cache.insert(4, vec![0.0; 1 << 16], None);
+        assert!(cache.lookup(4).is_none());
+    }
+}

@@ -1,0 +1,80 @@
+//! # `flexa::serve` — multi-tenant solve serving
+//!
+//! The serving layer on top of [`crate::api`]: many solves run
+//! concurrently through a bounded work queue and a `std::thread` worker
+//! pool, repeated/related solves warm-start from a content-addressed
+//! cache, and every job streams a typed lifecycle
+//! (`Queued → Started → Iteration* → Finished`).
+//!
+//! The paper's framework is built for exactly this regime — cheap,
+//! selection-pruned iterations whose setup cost (τ⁰ = tr(AᵀA)/2n, the
+//! initial iterate) amortizes across many related solves. The
+//! [`WarmStartCache`] keys on a fingerprint of the problem *data*
+//! (dimensions, layout, probe-gradient hash) **excluding** the
+//! regularization weight λ, so a λ-sweep over one design matrix reuses
+//! the previous solution as `x⁰` and carries the adapted τ forward; the
+//! serve bench measures cached solves reaching target accuracy in a
+//! fraction of the cold-start iterations.
+//!
+//! ## In-process use
+//!
+//! ```no_run
+//! use flexa::algos::SolveOptions;
+//! use flexa::api::{ProblemSpec, SolverSpec};
+//! use flexa::serve::{JobSpec, Scheduler, ServeConfig};
+//!
+//! # fn main() -> anyhow::Result<()> {
+//! let scheduler = Scheduler::start(ServeConfig::default().with_workers(4));
+//! for seed in 0..32 {
+//!     scheduler.submit(
+//!         JobSpec::new(
+//!             ProblemSpec::lasso(500, 2500).with_seed(seed),
+//!             SolverSpec::parse("fpa")?,
+//!         )
+//!         .with_opts(SolveOptions::default().with_target(1e-6))
+//!         .with_warm_start(true),
+//!     );
+//! }
+//! for result in scheduler.join() {
+//!     println!("job {}: {}", result.job, result.outcome.label());
+//! }
+//! # Ok(())
+//! # }
+//! ```
+//!
+//! ## JSONL job files (`flexa serve`)
+//!
+//! The CLI front-end consumes one JSON object per line from a file or
+//! stdin ([`jobfile`] documents every key):
+//!
+//! ```json
+//! {"problem": "lasso", "rows": 500, "cols": 2500, "seed": 7, "algo": "fpa", "target": 1e-6, "warm_start": true, "tag": "sweep-0"}
+//! {"problem": "lasso", "rows": 500, "cols": 2500, "seed": 7, "c": 0.5, "algo": "fpa", "target": 1e-6, "warm_start": true, "tag": "sweep-1"}
+//! ```
+//!
+//! run as `flexa serve jobs.jsonl --workers 4 --stream`, which emits the
+//! job lifecycle and per-job results as JSON lines.
+//!
+//! ## Semantics worth knowing
+//!
+//! * **Determinism** — without warm-starting, a job's result is
+//!   bit-identical to a serial [`crate::api::Session`] run of the same
+//!   specs, independent of worker count and queue order.
+//! * **Cancellation** is cooperative: [`JobHandle::cancel`] stops a
+//!   running solve at its next iteration boundary (solvers poll the
+//!   token via [`crate::algos::Recorder::cancelled`]); a still-queued
+//!   job never starts.
+//! * **Deadlines** are measured from submission and cover queue wait;
+//!   expiry mid-run stops the solve and reports
+//!   [`JobOutcome::DeadlineExpired`].
+
+pub mod cache;
+pub mod jobfile;
+pub mod scheduler;
+
+pub use cache::{fingerprint, CacheStats, WarmStart, WarmStartCache};
+pub use jobfile::{event_json, parse_job_line, parse_jobs, result_json, stats_json, Json};
+pub use scheduler::{
+    CollectServeObserver, CustomProblemFn, FnServeObserver, JobEvent, JobHandle, JobOutcome,
+    JobProblem, JobResult, JobSpec, Scheduler, ServeConfig, ServeObserver,
+};

@@ -1,0 +1,824 @@
+//! The concurrent solve scheduler: a bounded job queue drained by a
+//! `std::thread` worker pool, with per-job deadlines, cooperative
+//! cancellation, warm-start cache integration and a streamed job
+//! lifecycle.
+//!
+//! ## Lifecycle
+//!
+//! Per job, the [`ServeObserver`] sees (in order):
+//! `Queued → Started → [CacheProbe] → Iteration* → Finished`.
+//! Jobs cancelled or deadline-expired *before* they start skip straight
+//! to `Finished` (there is nothing to run). Events of different jobs
+//! interleave arbitrarily; events of one job never reorder.
+//!
+//! ## Determinism
+//!
+//! A worker runs a job through exactly the same path as
+//! [`crate::api::Session::run`] — registry-built problem and solver,
+//! [`crate::api::DynSolver::solve_session`], observer `on_finish` — so a job's
+//! result (iterate, objective, iteration count) is bit-identical to a
+//! serial `Session` run of the same specs, regardless of worker count or
+//! queue order. The integration tests assert this for 32 jobs on 4
+//! workers. (Warm-starting intentionally breaks this equivalence: a hit
+//! changes `x⁰`/τ — that is its entire point.)
+//!
+//! ## Caveats
+//!
+//! Observer callbacks run on scheduler threads, `Queued` while the queue
+//! lock is held: observers must be cheap and must never call back into
+//! the scheduler.
+
+use super::cache::{fingerprint, CacheStats, WarmStart, WarmStartCache};
+use crate::algos::{SolveOptions, SolveReport};
+use crate::api::events::{EventObserver, IterEvent};
+use crate::api::{ProblemHandle, ProblemSpec, Registry, SolverSpec};
+use anyhow::Result;
+use std::collections::VecDeque;
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::{Arc, Condvar, Mutex};
+use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
+
+/// Builder for a pre-constructed problem (λ-paths and other jobs over
+/// shared user data that no [`ProblemSpec`] generator describes).
+pub type CustomProblemFn = Arc<dyn Fn() -> Result<ProblemHandle> + Send + Sync>;
+
+/// What a job solves: a registry spec or a custom problem constructor.
+#[derive(Clone)]
+pub enum JobProblem {
+    /// Built through the scheduler's [`Registry`].
+    Spec(ProblemSpec),
+    /// Built by the closure (called on the worker thread).
+    Custom { name: String, build: CustomProblemFn },
+}
+
+impl std::fmt::Debug for JobProblem {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            JobProblem::Spec(s) => f.debug_tuple("Spec").field(s).finish(),
+            JobProblem::Custom { name, .. } => {
+                f.debug_struct("Custom").field("name", name).finish_non_exhaustive()
+            }
+        }
+    }
+}
+
+/// One unit of work: problem + solver + options + scheduling knobs.
+#[derive(Clone, Debug)]
+pub struct JobSpec {
+    pub problem: JobProblem,
+    pub solver: SolverSpec,
+    pub opts: SolveOptions,
+    /// Wall-clock budget measured from *submission* (covers queue wait).
+    /// On expiry the job stops cooperatively and reports
+    /// [`JobOutcome::DeadlineExpired`]. The effective solve budget is
+    /// `min(opts.max_seconds, remaining deadline)` — for deadlines beyond
+    /// the [`SolveOptions`] default of 60 s, raise `opts.max_seconds` too
+    /// (the JSONL front-end does this automatically when `max_seconds` is
+    /// not pinned).
+    pub deadline: Option<Duration>,
+    /// Consult/update the warm-start cache for this job.
+    pub warm_start: bool,
+    /// Free-form label echoed through events and results.
+    pub tag: String,
+}
+
+impl JobSpec {
+    pub fn new(problem: ProblemSpec, solver: SolverSpec) -> Self {
+        Self {
+            problem: JobProblem::Spec(problem),
+            solver,
+            opts: SolveOptions::default(),
+            deadline: None,
+            warm_start: false,
+            tag: String::new(),
+        }
+    }
+
+    /// A job over a pre-built problem (e.g. one step of a λ-path sharing
+    /// its data with the other steps).
+    pub fn custom(name: &str, build: CustomProblemFn, solver: SolverSpec) -> Self {
+        Self {
+            problem: JobProblem::Custom { name: name.to_string(), build },
+            solver,
+            opts: SolveOptions::default(),
+            deadline: None,
+            warm_start: false,
+            tag: String::new(),
+        }
+    }
+
+    pub fn with_opts(mut self, opts: SolveOptions) -> Self {
+        self.opts = opts;
+        self
+    }
+
+    pub fn with_deadline(mut self, deadline: Duration) -> Self {
+        self.deadline = Some(deadline);
+        self
+    }
+
+    pub fn with_warm_start(mut self, warm: bool) -> Self {
+        self.warm_start = warm;
+        self
+    }
+
+    pub fn with_tag(mut self, tag: &str) -> Self {
+        self.tag = tag.to_string();
+        self
+    }
+
+    fn problem_name(&self) -> String {
+        match &self.problem {
+            JobProblem::Spec(s) => s.kind.clone(),
+            JobProblem::Custom { name, .. } => name.clone(),
+        }
+    }
+}
+
+/// Terminal state of a job.
+#[derive(Clone, Debug)]
+pub enum JobOutcome {
+    /// The solve ran to completion (converged or budget-exhausted).
+    Done { converged: bool, objective: f64, iterations: usize, warm_started: bool },
+    /// Problem/solver construction or the solve itself errored.
+    Failed { error: String },
+    /// The cancellation token stopped the job (0 iterations = cancelled
+    /// while still queued).
+    Cancelled { iterations: usize },
+    /// The deadline elapsed (0 iterations = expired while still queued).
+    DeadlineExpired { iterations: usize },
+}
+
+impl JobOutcome {
+    pub fn is_done(&self) -> bool {
+        matches!(self, JobOutcome::Done { .. })
+    }
+
+    pub fn is_converged(&self) -> bool {
+        matches!(self, JobOutcome::Done { converged: true, .. })
+    }
+
+    /// Short machine-readable label (event stream, summary tables).
+    pub fn label(&self) -> &'static str {
+        match self {
+            JobOutcome::Done { .. } => "done",
+            JobOutcome::Failed { .. } => "failed",
+            JobOutcome::Cancelled { .. } => "cancelled",
+            JobOutcome::DeadlineExpired { .. } => "deadline-expired",
+        }
+    }
+}
+
+/// One event in a job's streamed lifecycle.
+#[derive(Clone, Debug)]
+pub enum JobEvent {
+    /// Accepted into the queue.
+    Queued { job: u64, tag: String },
+    /// A worker picked the job up.
+    Started { job: u64, worker: usize },
+    /// Warm-start cache was consulted (only for `warm_start` jobs).
+    CacheProbe { job: u64, key: u64, hit: bool },
+    /// One solver iteration (passthrough of the session-layer stream).
+    Iteration { job: u64, event: IterEvent },
+    /// Terminal event.
+    Finished { job: u64, outcome: JobOutcome },
+}
+
+impl JobEvent {
+    /// The job this event belongs to.
+    pub fn job(&self) -> u64 {
+        match self {
+            JobEvent::Queued { job, .. }
+            | JobEvent::Started { job, .. }
+            | JobEvent::CacheProbe { job, .. }
+            | JobEvent::Iteration { job, .. }
+            | JobEvent::Finished { job, .. } => *job,
+        }
+    }
+}
+
+/// Callback interface for the job lifecycle stream. Runs on scheduler
+/// threads — keep it cheap, never call back into the scheduler.
+pub trait ServeObserver: Send + Sync {
+    fn on_job_event(&self, event: &JobEvent);
+}
+
+/// Buffers every event it sees (tests, dashboards).
+#[derive(Default)]
+pub struct CollectServeObserver {
+    events: Mutex<Vec<JobEvent>>,
+}
+
+impl CollectServeObserver {
+    pub fn new() -> Arc<Self> {
+        Arc::new(Self::default())
+    }
+
+    pub fn events(&self) -> Vec<JobEvent> {
+        self.events.lock().unwrap().clone()
+    }
+
+    /// Events of one job, in emission order.
+    pub fn job_events(&self, job: u64) -> Vec<JobEvent> {
+        self.events.lock().unwrap().iter().filter(|e| e.job() == job).cloned().collect()
+    }
+
+    /// Terminal outcome of a job, if it finished.
+    pub fn outcome(&self, job: u64) -> Option<JobOutcome> {
+        self.events.lock().unwrap().iter().rev().find_map(|e| match e {
+            JobEvent::Finished { job: j, outcome } if *j == job => Some(outcome.clone()),
+            _ => None,
+        })
+    }
+}
+
+impl ServeObserver for CollectServeObserver {
+    fn on_job_event(&self, event: &JobEvent) {
+        self.events.lock().unwrap().push(event.clone());
+    }
+}
+
+/// Adapter turning a closure into a [`ServeObserver`] (mirrors
+/// [`crate::api::FnObserver`] for the session-layer stream).
+pub struct FnServeObserver<F: Fn(&JobEvent) + Send + Sync> {
+    f: F,
+}
+
+impl<F: Fn(&JobEvent) + Send + Sync> FnServeObserver<F> {
+    pub fn new(f: F) -> Arc<Self> {
+        Arc::new(Self { f })
+    }
+}
+
+impl<F: Fn(&JobEvent) + Send + Sync> ServeObserver for FnServeObserver<F> {
+    fn on_job_event(&self, event: &JobEvent) {
+        (self.f)(event)
+    }
+}
+
+/// Result of one job, collected by [`Scheduler::join`].
+#[derive(Debug)]
+pub struct JobResult {
+    pub job: u64,
+    pub tag: String,
+    /// Problem registry name (or the custom constructor's name).
+    pub problem: String,
+    /// Resolved solver display name (empty if construction failed).
+    pub solver: String,
+    pub outcome: JobOutcome,
+    /// The underlying report, when the solve actually ran.
+    pub report: Option<SolveReport>,
+}
+
+/// Scheduler sizing.
+#[derive(Clone, Copy, Debug)]
+pub struct ServeConfig {
+    /// Worker threads draining the queue.
+    pub workers: usize,
+    /// Queue slots; [`Scheduler::submit`] blocks (and
+    /// [`Scheduler::try_submit`] refuses) when full.
+    pub queue_capacity: usize,
+    /// Warm-start cache byte budget (0 disables the cache entirely).
+    pub cache_bytes: usize,
+}
+
+impl Default for ServeConfig {
+    fn default() -> Self {
+        Self { workers: 4, queue_capacity: 64, cache_bytes: 64 << 20 }
+    }
+}
+
+impl ServeConfig {
+    pub fn with_workers(mut self, workers: usize) -> Self {
+        self.workers = workers.max(1);
+        self
+    }
+
+    pub fn with_queue_capacity(mut self, capacity: usize) -> Self {
+        self.queue_capacity = capacity.max(1);
+        self
+    }
+
+    pub fn with_cache_bytes(mut self, bytes: usize) -> Self {
+        self.cache_bytes = bytes;
+        self
+    }
+}
+
+struct QueuedJob {
+    id: u64,
+    spec: JobSpec,
+    cancel: Arc<AtomicBool>,
+    enqueued: Instant,
+}
+
+struct QueueState {
+    jobs: VecDeque<QueuedJob>,
+    closed: bool,
+}
+
+struct Shared {
+    queue: Mutex<QueueState>,
+    not_empty: Condvar,
+    not_full: Condvar,
+    capacity: usize,
+    next_id: AtomicU64,
+    registry: Registry,
+    cache: Option<Mutex<WarmStartCache>>,
+    observer: Option<Arc<dyn ServeObserver>>,
+    results: Mutex<Vec<JobResult>>,
+}
+
+impl Shared {
+    fn emit(&self, event: JobEvent) {
+        emit_to(&self.observer, &event);
+    }
+}
+
+/// Observers are user code: contain their panics so they can never
+/// poison a scheduler lock, kill a worker, or derail the panic-recovery
+/// path that reports a failed job.
+fn emit_to(observer: &Option<Arc<dyn ServeObserver>>, event: &JobEvent) {
+    if let Some(obs) = observer {
+        let _ = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| obs.on_job_event(event)));
+    }
+}
+
+/// Handle to a submitted job: its id and cancellation switch.
+#[derive(Clone, Debug)]
+pub struct JobHandle {
+    id: u64,
+    cancel: Arc<AtomicBool>,
+}
+
+impl JobHandle {
+    pub fn id(&self) -> u64 {
+        self.id
+    }
+
+    /// Request cooperative cancellation: a queued job never starts, a
+    /// running one stops at its next iteration boundary.
+    pub fn cancel(&self) {
+        self.cancel.store(true, Ordering::Relaxed);
+    }
+
+    pub fn is_cancelled(&self) -> bool {
+        self.cancel.load(Ordering::Relaxed)
+    }
+}
+
+/// The concurrent solve scheduler (see module docs).
+pub struct Scheduler {
+    shared: Arc<Shared>,
+    handles: Vec<JoinHandle<()>>,
+}
+
+impl Scheduler {
+    /// Start with the default registry and no observer.
+    pub fn start(config: ServeConfig) -> Self {
+        Self::start_with(config, None, Registry::with_defaults())
+    }
+
+    /// Start with an event observer and a custom registry.
+    pub fn start_with(
+        config: ServeConfig,
+        observer: Option<Arc<dyn ServeObserver>>,
+        registry: Registry,
+    ) -> Self {
+        let shared = Arc::new(Shared {
+            queue: Mutex::new(QueueState { jobs: VecDeque::new(), closed: false }),
+            not_empty: Condvar::new(),
+            not_full: Condvar::new(),
+            capacity: config.queue_capacity.max(1),
+            next_id: AtomicU64::new(0),
+            registry,
+            cache: (config.cache_bytes > 0)
+                .then(|| Mutex::new(WarmStartCache::new(config.cache_bytes))),
+            observer,
+            results: Mutex::new(Vec::new()),
+        });
+        let workers = config.workers.max(1);
+        let mut handles = Vec::with_capacity(workers);
+        for w in 0..workers {
+            let shared = Arc::clone(&shared);
+            let handle = std::thread::Builder::new()
+                .name(format!("flexa-serve-{w}"))
+                .spawn(move || worker_loop(w, &shared))
+                .expect("spawn serve worker");
+            handles.push(handle);
+        }
+        Self { shared, handles }
+    }
+
+    /// Submit a job, blocking while the queue is full.
+    pub fn submit(&self, spec: JobSpec) -> JobHandle {
+        let mut q = self.shared.queue.lock().unwrap();
+        while q.jobs.len() >= self.shared.capacity {
+            q = self.shared.not_full.wait(q).unwrap();
+        }
+        self.enqueue_locked(&mut q, spec)
+    }
+
+    /// Submit without blocking: `Err` hands the spec back when the queue
+    /// is full.
+    pub fn try_submit(&self, spec: JobSpec) -> std::result::Result<JobHandle, JobSpec> {
+        let mut q = self.shared.queue.lock().unwrap();
+        if q.jobs.len() >= self.shared.capacity {
+            return Err(spec);
+        }
+        Ok(self.enqueue_locked(&mut q, spec))
+    }
+
+    fn enqueue_locked(&self, q: &mut QueueState, spec: JobSpec) -> JobHandle {
+        let id = self.shared.next_id.fetch_add(1, Ordering::Relaxed) + 1;
+        let cancel = Arc::new(AtomicBool::new(false));
+        // Emitted before the push so `Queued` always precedes `Started`.
+        self.shared.emit(JobEvent::Queued { job: id, tag: spec.tag.clone() });
+        q.jobs.push_back(QueuedJob { id, spec, cancel: Arc::clone(&cancel), enqueued: Instant::now() });
+        self.shared.not_empty.notify_one();
+        JobHandle { id, cancel }
+    }
+
+    /// Warm-start cache counters (zeroes when the cache is disabled).
+    pub fn cache_stats(&self) -> CacheStats {
+        match &self.shared.cache {
+            Some(c) => c.lock().unwrap().stats(),
+            None => CacheStats::default(),
+        }
+    }
+
+    /// Jobs currently waiting in the queue (not the ones running).
+    pub fn queued(&self) -> usize {
+        self.shared.queue.lock().unwrap().jobs.len()
+    }
+
+    /// Close the queue, drain every remaining job, join the workers and
+    /// return all results sorted by job id.
+    pub fn join(self) -> Vec<JobResult> {
+        self.join_with_stats().0
+    }
+
+    /// [`Self::join`], also returning the final warm-start cache counters
+    /// (which are gone once the scheduler is dropped).
+    pub fn join_with_stats(mut self) -> (Vec<JobResult>, CacheStats) {
+        self.close();
+        for h in self.handles.drain(..) {
+            let _ = h.join();
+        }
+        let stats = self.cache_stats();
+        let mut results = std::mem::take(&mut *self.shared.results.lock().unwrap());
+        results.sort_by_key(|r| r.job);
+        (results, stats)
+    }
+
+    fn close(&self) {
+        let mut q = self.shared.queue.lock().unwrap();
+        q.closed = true;
+        self.shared.not_empty.notify_all();
+        self.shared.not_full.notify_all();
+    }
+}
+
+impl Drop for Scheduler {
+    /// Dropping without [`Self::join`] closes the queue so workers exit
+    /// after draining it (results are discarded with the scheduler).
+    fn drop(&mut self) {
+        self.close();
+    }
+}
+
+fn worker_loop(worker: usize, shared: &Shared) {
+    while let Some(job) = next_job(shared) {
+        // Contain panics (a custom build closure, a solver assert on bad
+        // options): the job fails loudly with a Finished event and a
+        // Failed result instead of silently vanishing from join(), and
+        // the worker stays alive for the jobs queued behind it.
+        let (id, tag, problem_name) = (job.id, job.spec.tag.clone(), job.spec.problem_name());
+        let result =
+            std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| run_job(shared, worker, job)))
+                .unwrap_or_else(|payload| {
+                    let outcome = JobOutcome::Failed {
+                        error: format!("job panicked: {}", panic_message(payload.as_ref())),
+                    };
+                    shared.emit(JobEvent::Finished { job: id, outcome: outcome.clone() });
+                    JobResult {
+                        job: id,
+                        tag,
+                        problem: problem_name,
+                        solver: String::new(),
+                        outcome,
+                        report: None,
+                    }
+                });
+        shared.results.lock().unwrap().push(result);
+    }
+}
+
+fn panic_message(payload: &(dyn std::any::Any + Send)) -> String {
+    if let Some(s) = payload.downcast_ref::<&str>() {
+        (*s).to_string()
+    } else if let Some(s) = payload.downcast_ref::<String>() {
+        s.clone()
+    } else {
+        "non-string panic payload".to_string()
+    }
+}
+
+fn next_job(shared: &Shared) -> Option<QueuedJob> {
+    let mut q = shared.queue.lock().unwrap();
+    loop {
+        if let Some(job) = q.jobs.pop_front() {
+            shared.not_full.notify_one();
+            return Some(job);
+        }
+        if q.closed {
+            return None;
+        }
+        q = shared.not_empty.wait(q).unwrap();
+    }
+}
+
+/// Adapter between the session-layer iteration stream and the job event
+/// stream; also captures the last finite τ for the warm-start cache.
+struct JobBridge {
+    job: u64,
+    observer: Option<Arc<dyn ServeObserver>>,
+    user: Option<Arc<dyn EventObserver>>,
+    tau_bits: AtomicU64,
+}
+
+impl JobBridge {
+    fn last_tau(&self) -> Option<f64> {
+        let tau = f64::from_bits(self.tau_bits.load(Ordering::Relaxed));
+        tau.is_finite().then_some(tau)
+    }
+}
+
+impl EventObserver for JobBridge {
+    fn on_start(&self, algo: &str, n: usize) {
+        if let Some(u) = &self.user {
+            u.on_start(algo, n);
+        }
+    }
+
+    fn on_iteration(&self, event: &IterEvent) {
+        if event.tau.is_finite() {
+            self.tau_bits.store(event.tau.to_bits(), Ordering::Relaxed);
+        }
+        emit_to(&self.observer, &JobEvent::Iteration { job: self.job, event: *event });
+        if let Some(u) = &self.user {
+            u.on_iteration(event);
+        }
+    }
+
+    fn on_finish(&self, algo: &str, converged: bool, objective: f64) {
+        if let Some(u) = &self.user {
+            u.on_finish(algo, converged, objective);
+        }
+    }
+}
+
+fn run_job(shared: &Shared, worker: usize, job: QueuedJob) -> JobResult {
+    let QueuedJob { id, spec, cancel, enqueued } = job;
+    let problem_name = spec.problem_name();
+    let finish = |solver: String, outcome: JobOutcome, report: Option<SolveReport>| {
+        shared.emit(JobEvent::Finished { job: id, outcome: outcome.clone() });
+        JobResult { job: id, tag: spec.tag.clone(), problem: problem_name.clone(), solver, outcome, report }
+    };
+
+    // Cancelled or expired while still queued: never starts.
+    if cancel.load(Ordering::Relaxed) {
+        return finish(String::new(), JobOutcome::Cancelled { iterations: 0 }, None);
+    }
+    let remaining = match spec.deadline {
+        Some(d) => match d.checked_sub(enqueued.elapsed()) {
+            Some(rem) => Some(rem),
+            None => {
+                return finish(String::new(), JobOutcome::DeadlineExpired { iterations: 0 }, None)
+            }
+        },
+        None => None,
+    };
+
+    shared.emit(JobEvent::Started { job: id, worker });
+
+    let problem = match &spec.problem {
+        JobProblem::Spec(p) => shared.registry.build_problem(p),
+        JobProblem::Custom { build, .. } => build(),
+    };
+    let problem = match problem {
+        Ok(p) => p,
+        Err(e) => return finish(String::new(), JobOutcome::Failed { error: format!("{e:#}") }, None),
+    };
+
+    let mut opts = spec.opts.clone();
+
+    // Warm-start probe: reuse the previous solution on the same data as
+    // x⁰ and carry the adapted τ over.
+    let mut warm_key = None;
+    let mut warm_started = false;
+    if spec.warm_start {
+        if let Some(cache) = &shared.cache {
+            let key = fingerprint(&problem);
+            let found: Option<WarmStart> = cache.lock().unwrap().lookup(key);
+            if let Some(ws) = found {
+                // The fingerprint encodes n, so the length always matches;
+                // guard anyway rather than hand a solver a bad x0. The
+                // iterate copy happens here, outside the cache lock.
+                if ws.x0.len() == problem.n() {
+                    opts.x0 = Some(ws.x0.as_ref().clone());
+                    opts.tau0 = ws.tau.or(opts.tau0);
+                    warm_started = true;
+                }
+            }
+            warm_key = Some(key);
+            shared.emit(JobEvent::CacheProbe { job: id, key, hit: warm_started });
+        }
+    }
+
+    if let Some(rem) = remaining {
+        opts.max_seconds = opts.max_seconds.min(rem.as_secs_f64());
+    }
+    opts.cancel = Some(Arc::clone(&cancel));
+    let bridge = Arc::new(JobBridge {
+        job: id,
+        observer: shared.observer.clone(),
+        user: opts.observer.take(),
+        tau_bits: AtomicU64::new(f64::NAN.to_bits()),
+    });
+    opts.observer = Some(bridge.clone());
+
+    let mut solver = match shared.registry.build_solver(&spec.solver) {
+        Ok(s) => s,
+        Err(e) => return finish(String::new(), JobOutcome::Failed { error: format!("{e:#}") }, None),
+    };
+    let solver_name = solver.name();
+
+    match solver.solve_session(&problem, &opts) {
+        Err(e) => finish(solver_name, JobOutcome::Failed { error: format!("{e:#}") }, None),
+        Ok(report) => {
+            // Mirror Session::run: on_finish fires once per solve.
+            if let Some(obs) = &opts.observer {
+                obs.on_finish(&solver_name, report.converged, report.objective);
+            }
+            let was_cancelled = cancel.load(Ordering::Relaxed);
+            let deadline_hit = spec.deadline.is_some_and(|d| enqueued.elapsed() >= d);
+            // A converged result always wins: a cancel/deadline that
+            // lands after convergence must not hide a valid solution.
+            let outcome = if !report.converged && was_cancelled {
+                JobOutcome::Cancelled { iterations: report.iterations }
+            } else if !report.converged && deadline_hit {
+                JobOutcome::DeadlineExpired { iterations: report.iterations }
+            } else {
+                JobOutcome::Done {
+                    converged: report.converged,
+                    objective: report.objective,
+                    iterations: report.iterations,
+                    warm_started,
+                }
+            };
+            // Only converged iterates enter the cache: a diverged or
+            // budget-exhausted x (GRock's divergence guard still reports
+            // Done{converged:false}) would poison warm starts for every
+            // later solve on the same data.
+            if let (Some(key), true) = (warm_key, report.converged && outcome.is_done()) {
+                if let Some(cache) = &shared.cache {
+                    cache.lock().unwrap().insert(key, report.x.clone(), bridge.last_tau());
+                }
+            }
+            finish(solver_name, outcome, Some(report))
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tiny_job(seed: u64) -> JobSpec {
+        JobSpec::new(
+            ProblemSpec::lasso(15, 45).with_seed(seed),
+            SolverSpec::parse("fpa").unwrap(),
+        )
+        .with_opts(SolveOptions::default().with_max_iters(20).with_target(0.0))
+    }
+
+    #[test]
+    fn runs_jobs_and_collects_sorted_results() {
+        let obs = CollectServeObserver::new();
+        let s = Scheduler::start_with(
+            ServeConfig::default().with_workers(2),
+            Some(obs.clone()),
+            Registry::with_defaults(),
+        );
+        let h1 = s.submit(tiny_job(1).with_tag("a"));
+        let h2 = s.submit(tiny_job(2).with_tag("b"));
+        assert_ne!(h1.id(), h2.id());
+        let results = s.join();
+        assert_eq!(results.len(), 2);
+        assert!(results.windows(2).all(|w| w[0].job < w[1].job));
+        for r in &results {
+            assert!(r.outcome.is_done(), "{:?}", r.outcome);
+            assert_eq!(r.problem, "lasso");
+            assert!(r.report.as_ref().unwrap().objective.is_finite());
+        }
+        // Lifecycle order per job: Queued, Started, 20 iterations, Finished.
+        for id in [h1.id(), h2.id()] {
+            let evs = obs.job_events(id);
+            assert!(matches!(evs.first(), Some(JobEvent::Queued { .. })));
+            assert!(matches!(evs.get(1), Some(JobEvent::Started { .. })));
+            assert!(matches!(evs.last(), Some(JobEvent::Finished { .. })));
+            let iters = evs.iter().filter(|e| matches!(e, JobEvent::Iteration { .. })).count();
+            assert_eq!(iters, 20);
+        }
+    }
+
+    #[test]
+    fn failed_construction_reports_failed_outcome() {
+        let obs = CollectServeObserver::new();
+        let s = Scheduler::start_with(
+            ServeConfig::default().with_workers(1),
+            Some(obs.clone()),
+            Registry::with_defaults(),
+        );
+        let h = s.submit(JobSpec::new(
+            ProblemSpec::lasso(10, 30),
+            SolverSpec::new("no-such-solver"),
+        ));
+        let results = s.join();
+        match &results[0].outcome {
+            JobOutcome::Failed { error } => assert!(error.contains("unknown solver"), "{error}"),
+            other => panic!("expected Failed, got {other:?}"),
+        }
+        assert!(matches!(obs.outcome(h.id()), Some(JobOutcome::Failed { .. })));
+    }
+
+    #[test]
+    fn cancel_before_start_never_runs() {
+        // Single worker busy on a long job: the queued job is cancelled
+        // before any worker reaches it.
+        let s = Scheduler::start(ServeConfig::default().with_workers(1).with_cache_bytes(0));
+        let long = JobSpec::new(
+            ProblemSpec::lasso(40, 160).with_seed(3),
+            SolverSpec::parse("fpa").unwrap(),
+        )
+        .with_opts(SolveOptions::default().with_max_iters(100_000).with_target(0.0));
+        let h_long = s.submit(long);
+        let h_queued = s.submit(tiny_job(4));
+        h_queued.cancel();
+        h_long.cancel();
+        let results = s.join();
+        let queued = results.iter().find(|r| r.job == h_queued.id()).unwrap();
+        assert!(
+            matches!(queued.outcome, JobOutcome::Cancelled { iterations: 0 }),
+            "{:?}",
+            queued.outcome
+        );
+        assert!(queued.report.is_none());
+    }
+
+    #[test]
+    fn panicking_job_fails_loudly_and_worker_survives() {
+        let obs = CollectServeObserver::new();
+        let s = Scheduler::start_with(
+            ServeConfig::default().with_workers(1),
+            Some(obs.clone()),
+            Registry::with_defaults(),
+        );
+        let build: CustomProblemFn = Arc::new(|| panic!("boom in build"));
+        let h = s.submit(JobSpec::custom("exploder", build, SolverSpec::parse("fpa").unwrap()));
+        s.submit(tiny_job(9));
+        let results = s.join();
+        assert_eq!(results.len(), 2, "the panicking job still produces a result");
+        match &results[0].outcome {
+            JobOutcome::Failed { error } => {
+                assert!(error.contains("panicked") && error.contains("boom"), "{error}")
+            }
+            other => panic!("expected Failed, got {other:?}"),
+        }
+        assert!(matches!(obs.outcome(h.id()), Some(JobOutcome::Failed { .. })));
+        assert!(results[1].outcome.is_done(), "the job queued behind the panic still ran");
+    }
+
+    #[test]
+    fn custom_problem_jobs_run() {
+        let inst = crate::datagen::NesterovLasso::new(12, 36, 0.1, 1.0).seed(6).generate();
+        let (a, b) = (inst.a, inst.b);
+        let build: CustomProblemFn = Arc::new(move || {
+            Ok(ProblemHandle::least_squares(crate::problems::lasso::Lasso::new(
+                a.clone(),
+                b.clone(),
+                0.5,
+            )))
+        });
+        let s = Scheduler::start(ServeConfig::default().with_workers(1));
+        s.submit(
+            JobSpec::custom("user-lasso", build, SolverSpec::parse("fpa").unwrap())
+                .with_opts(SolveOptions::default().with_max_iters(10).with_target(0.0)),
+        );
+        let results = s.join();
+        assert_eq!(results[0].problem, "user-lasso");
+        assert!(results[0].outcome.is_done());
+    }
+}

@@ -1,0 +1,76 @@
+//! Golden determinism: an identical `ProblemSpec` + `SolverSpec` + seed
+//! must produce an identical `IterEvent` stream across back-to-back
+//! `Session` runs — the invariant the `flexa::serve` warm-start cache's
+//! fingerprint keying relies on (equal spec ⇒ equal data ⇒ equal key,
+//! and replayed solves are reproducible bit for bit).
+//!
+//! Wall-clock fields (`time_s`, `sim_time_s`) are measurements and are
+//! exempt; everything the iteration *computes* must match exactly.
+
+use flexa::algos::SolveOptions;
+use flexa::api::{CollectObserver, IterEvent, ProblemSpec, Session, SolverSpec};
+
+fn stream(problem: &ProblemSpec, solver: &str, max_iters: usize) -> Vec<IterEvent> {
+    let observer = CollectObserver::new();
+    let run = Session::problem(problem.clone())
+        .solver(SolverSpec::parse(solver).unwrap())
+        .options(SolveOptions::default().with_max_iters(max_iters).with_target(0.0))
+        .observer(observer.clone())
+        .run()
+        .unwrap_or_else(|e| panic!("{solver}: {e:#}"));
+    assert_eq!(observer.len(), run.iterations, "{solver}: one event per iteration");
+    observer.events()
+}
+
+fn assert_streams_identical(a: &[IterEvent], b: &[IterEvent], label: &str) {
+    assert_eq!(a.len(), b.len(), "{label}: stream lengths");
+    for (x, y) in a.iter().zip(b) {
+        assert_eq!(x.iter, y.iter, "{label}: iteration counter");
+        assert_eq!(x.updated_blocks, y.updated_blocks, "{label} k={}: |S^k|", x.iter);
+        assert_eq!(x.gamma.to_bits(), y.gamma.to_bits(), "{label} k={}: gamma", x.iter);
+        assert_eq!(x.tau.to_bits(), y.tau.to_bits(), "{label} k={}: tau", x.iter);
+        assert_eq!(x.objective.to_bits(), y.objective.to_bits(), "{label} k={}: V", x.iter);
+        assert_eq!(x.rel_err.to_bits(), y.rel_err.to_bits(), "{label} k={}: rel_err", x.iter);
+    }
+}
+
+#[test]
+fn identical_lasso_sessions_emit_identical_event_streams() {
+    for solver in ["fpa", "fpa-rho-0.9", "fpa-jacobi", "fista", "ista", "grock-4", "gauss-seidel"] {
+        let spec = ProblemSpec::lasso(30, 90).with_sparsity(0.1).with_seed(777);
+        let a = stream(&spec, solver, 60);
+        let b = stream(&spec, solver, 60);
+        assert_streams_identical(&a, &b, solver);
+    }
+}
+
+/// The general (non-least-squares) problem path is deterministic too,
+/// including NaN fields (rel_err without a known V*, gamma for solvers
+/// that have none) — compared via bit patterns.
+#[test]
+fn identical_logreg_sessions_emit_identical_event_streams() {
+    let spec = ProblemSpec::logreg(30, 20).with_seed(5);
+    let a = stream(&spec, "fpa", 40);
+    let b = stream(&spec, "fpa", 40);
+    assert!(a.iter().all(|e| e.rel_err.is_nan()), "logreg has no planted V*");
+    assert_streams_identical(&a, &b, "fpa@logreg");
+}
+
+/// Random-selection FPA is seeded: same spec ⇒ same stream.
+#[test]
+fn seeded_random_selection_is_reproducible() {
+    let spec = ProblemSpec::lasso(30, 90).with_sparsity(0.1).with_seed(91);
+    let mut solver = SolverSpec::new("fpa");
+    solver.set_str_option("selection", "random:5:1234").unwrap();
+    let run = || {
+        let observer = CollectObserver::new();
+        Session::problem(spec.clone())
+            .solver(solver.clone())
+            .options(SolveOptions::default().with_max_iters(50).with_target(0.0))
+            .observer(observer.clone())
+            .run()
+            .unwrap();
+        observer.events()
+    };
+    assert_streams_identical(&run(), &run(), "fpa random:5:1234");
+}

@@ -1,0 +1,319 @@
+//! Integration tests for `flexa::serve`: concurrent scheduling is
+//! bit-identical to serial `Session` runs (including under mid-run
+//! cancellation of a subset), cancellation stops running and queued
+//! jobs, deadlines expire before and during a run, the warm-start cache
+//! halves (at least) repeat-solve iterations, and the bounded queue
+//! applies backpressure.
+
+use flexa::algos::SolveOptions;
+use flexa::api::{ProblemSpec, Registry, Session, SolverSpec};
+use flexa::serve::{CollectServeObserver, JobEvent, JobOutcome, JobSpec, Scheduler, ServeConfig};
+use std::time::Duration;
+
+/// Bit patterns of an iterate (NaN-proof equality).
+fn bits(x: &[f64]) -> Vec<u64> {
+    x.iter().map(|v| v.to_bits()).collect()
+}
+
+fn lasso(seed: u64) -> ProblemSpec {
+    ProblemSpec::lasso(25, 75).with_sparsity(0.1).with_seed(seed)
+}
+
+/// Poll until `f()` or the timeout elapses; returns the final value.
+fn wait_until(f: impl Fn() -> bool, timeout: Duration) -> bool {
+    let start = std::time::Instant::now();
+    while start.elapsed() < timeout {
+        if f() {
+            return true;
+        }
+        std::thread::sleep(Duration::from_millis(5));
+    }
+    f()
+}
+
+/// A job that runs long enough to be cancelled / deadline-expired
+/// deterministically (hundreds of thousands of iterations).
+fn long_job() -> JobSpec {
+    JobSpec::new(
+        ProblemSpec::lasso(40, 120).with_sparsity(0.1).with_seed(901),
+        SolverSpec::parse("fpa").unwrap(),
+    )
+    .with_opts(SolveOptions::default().with_max_iters(50_000_000).with_target(0.0))
+}
+
+/// 32 queued jobs on 4 workers: per-job results bit-identical to the
+/// same specs run serially through `Session`, regardless of completion
+/// order.
+#[test]
+fn thirty_two_jobs_on_four_workers_match_serial_bit_for_bit() {
+    let solvers =
+        ["fpa", "fpa-jacobi", "fpa-rho-0.9", "fista", "ista", "grock-4", "gauss-seidel", "admm"];
+    let opts = SolveOptions::default().with_max_iters(40).with_target(0.0);
+    let jobs: Vec<(ProblemSpec, SolverSpec)> = (0..32)
+        .map(|i| (lasso(100 + (i % 8) as u64), SolverSpec::parse(solvers[i % solvers.len()]).unwrap()))
+        .collect();
+
+    let mut serial = Vec::new();
+    for (p, s) in &jobs {
+        let run = Session::problem(p.clone())
+            .solver(s.clone())
+            .options(opts.clone())
+            .run()
+            .unwrap();
+        serial.push(run.report.clone());
+    }
+
+    let scheduler = Scheduler::start(ServeConfig::default().with_workers(4).with_cache_bytes(0));
+    for (p, s) in &jobs {
+        scheduler.submit(JobSpec::new(p.clone(), s.clone()).with_opts(opts.clone()));
+    }
+    let results = scheduler.join();
+    assert_eq!(results.len(), 32);
+    // join() sorts by job id == submission order, so zip against serial.
+    for (r, reference) in results.iter().zip(&serial) {
+        let rep = r.report.as_ref().expect("completed job has a report");
+        assert!(r.outcome.is_done(), "job {}: {:?}", r.job, r.outcome);
+        assert_eq!(rep.iterations, reference.iterations, "job {}", r.job);
+        assert_eq!(bits(&rep.x), bits(&reference.x), "job {}: iterate must be bit-identical", r.job);
+        assert_eq!(
+            rep.objective.to_bits(),
+            reference.objective.to_bits(),
+            "job {}: objective bits",
+            r.job
+        );
+    }
+}
+
+/// Same setup with a subset cancelled mid-run: the cancelled jobs stop
+/// early, the surviving jobs stay bit-identical to serial.
+#[test]
+fn surviving_jobs_match_serial_under_subset_cancellation() {
+    let opts = SolveOptions::default().with_max_iters(40).with_target(0.0);
+    let scheduler = Scheduler::start(ServeConfig::default().with_workers(4).with_cache_bytes(0));
+    let mut handles = Vec::new();
+    for i in 0..32 {
+        let job = if i % 8 == 3 {
+            long_job() // cancellation targets: still running (or queued) when cancelled
+        } else {
+            JobSpec::new(lasso(200 + i as u64), SolverSpec::parse("fpa").unwrap())
+                .with_opts(opts.clone())
+        };
+        handles.push(scheduler.submit(job));
+    }
+    for (i, h) in handles.iter().enumerate() {
+        if i % 8 == 3 {
+            h.cancel();
+        }
+    }
+    let results = scheduler.join();
+    assert_eq!(results.len(), 32);
+    for (i, r) in results.iter().enumerate() {
+        if i % 8 == 3 {
+            assert!(
+                matches!(r.outcome, JobOutcome::Cancelled { .. }),
+                "job {i} should be cancelled, got {:?}",
+                r.outcome
+            );
+            continue;
+        }
+        let reference = Session::problem(lasso(200 + i as u64))
+            .solver_named("fpa")
+            .unwrap()
+            .options(opts.clone())
+            .run()
+            .unwrap();
+        let rep = r.report.as_ref().expect("report");
+        assert_eq!(rep.iterations, reference.iterations, "job {i}");
+        assert_eq!(
+            bits(&rep.x),
+            bits(&reference.report.x),
+            "job {i}: bit-identical despite cancellations"
+        );
+    }
+}
+
+/// Cancelling a running job stops it at an iteration boundary.
+#[test]
+fn cancellation_stops_a_running_job() {
+    let obs = CollectServeObserver::new();
+    let scheduler = Scheduler::start_with(
+        ServeConfig::default().with_workers(1).with_cache_bytes(0),
+        Some(obs.clone()),
+        Registry::with_defaults(),
+    );
+    let h = scheduler.submit(long_job());
+    // Wait until it demonstrably runs (at least one iteration streamed).
+    assert!(
+        wait_until(
+            || obs.job_events(h.id()).iter().any(|e| matches!(e, JobEvent::Iteration { .. })),
+            Duration::from_secs(30),
+        ),
+        "job never started iterating"
+    );
+    h.cancel();
+    let results = scheduler.join();
+    match &results[0].outcome {
+        JobOutcome::Cancelled { iterations } => {
+            assert!(*iterations >= 1 && *iterations < 50_000_000, "{iterations}");
+        }
+        other => panic!("expected Cancelled, got {other:?}"),
+    }
+    // The partial report is still returned.
+    let rep = results[0].report.as_ref().unwrap();
+    assert!(!rep.converged);
+    assert!(rep.objective.is_finite());
+}
+
+/// A deadline expiring mid-run stops the solve cooperatively.
+#[test]
+fn deadline_expires_midrun() {
+    let scheduler = Scheduler::start(ServeConfig::default().with_workers(1).with_cache_bytes(0));
+    scheduler.submit(long_job().with_deadline(Duration::from_millis(150)));
+    let results = scheduler.join();
+    match &results[0].outcome {
+        JobOutcome::DeadlineExpired { iterations } => assert!(*iterations >= 1, "{iterations}"),
+        other => panic!("expected DeadlineExpired, got {other:?}"),
+    }
+}
+
+/// A deadline that elapses while the job is still queued: the job never
+/// starts (no `Started` event, no report).
+#[test]
+fn deadline_expires_while_queued() {
+    let obs = CollectServeObserver::new();
+    let scheduler = Scheduler::start_with(
+        ServeConfig::default().with_workers(1).with_cache_bytes(0),
+        Some(obs.clone()),
+        Registry::with_defaults(),
+    );
+    let blocker = scheduler.submit(long_job());
+    let doomed = scheduler.submit(lasso_job_tiny().with_deadline(Duration::from_millis(1)));
+    // Give the deadline time to lapse while the worker is busy, then
+    // unblock the queue.
+    std::thread::sleep(Duration::from_millis(50));
+    blocker.cancel();
+    let results = scheduler.join();
+    let r = results.iter().find(|r| r.job == doomed.id()).unwrap();
+    assert!(
+        matches!(r.outcome, JobOutcome::DeadlineExpired { iterations: 0 }),
+        "{:?}",
+        r.outcome
+    );
+    assert!(r.report.is_none());
+    let events = obs.job_events(doomed.id());
+    assert_eq!(events.len(), 2, "queued + finished only: {events:?}");
+    assert!(matches!(events[0], JobEvent::Queued { .. }));
+    assert!(matches!(events[1], JobEvent::Finished { .. }));
+}
+
+fn lasso_job_tiny() -> JobSpec {
+    JobSpec::new(lasso(7), SolverSpec::parse("fpa").unwrap())
+        .with_opts(SolveOptions::default().with_max_iters(10).with_target(0.0))
+}
+
+/// Cache-hit equivalence: a repeat solve of the same spec hits the
+/// cache, converges to the same objective, and needs at most half the
+/// cold-start iterations (the acceptance bound; in practice it needs
+/// ~1% of them).
+#[test]
+fn cache_hit_repeat_solve_converges_in_half_the_iterations() {
+    let obs = CollectServeObserver::new();
+    let scheduler = Scheduler::start_with(
+        ServeConfig::default().with_workers(1),
+        Some(obs.clone()),
+        Registry::with_defaults(),
+    );
+    let spec = ProblemSpec::lasso(40, 120).with_sparsity(0.1).with_seed(321);
+    let opts = SolveOptions::default().with_max_iters(20_000).with_target(1e-6);
+    let h1 = scheduler.submit(
+        JobSpec::new(spec.clone(), SolverSpec::parse("fpa").unwrap())
+            .with_opts(opts.clone())
+            .with_warm_start(true),
+    );
+    let h2 = scheduler.submit(
+        JobSpec::new(spec, SolverSpec::parse("fpa").unwrap())
+            .with_opts(opts)
+            .with_warm_start(true),
+    );
+    let (results, stats) = scheduler.join_with_stats();
+    assert_eq!((stats.hits, stats.misses), (1, 1), "{stats:?}");
+
+    let probe = |id: u64| -> bool {
+        obs.job_events(id)
+            .iter()
+            .find_map(|e| match e {
+                JobEvent::CacheProbe { hit, .. } => Some(*hit),
+                _ => None,
+            })
+            .expect("warm-start job emits a cache probe")
+    };
+    assert!(!probe(h1.id()), "first solve is a miss");
+    assert!(probe(h2.id()), "repeat solve hits");
+    // Both probes report the same fingerprint key.
+    let keys: Vec<u64> = obs
+        .events()
+        .iter()
+        .filter_map(|e| match e {
+            JobEvent::CacheProbe { key, .. } => Some(*key),
+            _ => None,
+        })
+        .collect();
+    assert_eq!(keys.len(), 2);
+    assert_eq!(keys[0], keys[1]);
+
+    let (cold, warm) = (&results[0], &results[1]);
+    let (cold_rep, warm_rep) = (cold.report.as_ref().unwrap(), warm.report.as_ref().unwrap());
+    assert!(cold_rep.converged && warm_rep.converged);
+    assert!(
+        warm_rep.iterations * 2 <= cold_rep.iterations,
+        "warm {} vs cold {} iterations",
+        warm_rep.iterations,
+        cold_rep.iterations
+    );
+    // Both runs stop within 1e-6 relative error of V*, so they agree to
+    // ~2e-6 relative; use a small safety factor.
+    let scale = cold_rep.objective.abs().max(1.0);
+    assert!(
+        (warm_rep.objective - cold_rep.objective).abs() <= 5e-6 * scale,
+        "objectives must agree at the shared target: {} vs {}",
+        warm_rep.objective,
+        cold_rep.objective
+    );
+    match (&cold.outcome, &warm.outcome) {
+        (
+            JobOutcome::Done { warm_started: false, .. },
+            JobOutcome::Done { warm_started: true, .. },
+        ) => {}
+        other => panic!("unexpected outcomes {other:?}"),
+    }
+}
+
+/// The bounded queue applies backpressure: `try_submit` refuses when
+/// the queue is full.
+#[test]
+fn bounded_queue_refuses_when_full() {
+    let obs = CollectServeObserver::new();
+    let scheduler = Scheduler::start_with(
+        ServeConfig::default().with_workers(1).with_queue_capacity(2).with_cache_bytes(0),
+        Some(obs.clone()),
+        Registry::with_defaults(),
+    );
+    let blocker = scheduler.submit(long_job());
+    // Wait until the worker has taken the blocker off the queue.
+    assert!(
+        wait_until(
+            || obs.job_events(blocker.id()).iter().any(|e| matches!(e, JobEvent::Started { .. })),
+            Duration::from_secs(30),
+        ),
+        "blocker never started"
+    );
+    let _q1 = scheduler.submit(lasso_job_tiny());
+    let _q2 = scheduler.submit(lasso_job_tiny());
+    assert_eq!(scheduler.queued(), 2);
+    let refused = scheduler.try_submit(lasso_job_tiny().with_tag("overflow"));
+    let spec = refused.expect_err("queue at capacity must refuse");
+    assert_eq!(spec.tag, "overflow", "the spec is handed back intact");
+    blocker.cancel();
+    let results = scheduler.join();
+    assert_eq!(results.len(), 3, "blocker + two queued jobs ran; the refused one never entered");
+}
