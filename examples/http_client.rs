@@ -1,0 +1,148 @@
+//! Drive a warm-started λ-sweep against a flexa HTTP server over
+//! loopback: submit eight Lasso jobs that share one generated `(A, b)`
+//! (the `lambda` spec key reweights the regularizer without
+//! regenerating), watch each job's SSE stream to its `finished` event,
+//! then read `/metrics` and report the warm-start cache hits.
+//!
+//! * `FLEXA_HTTP_ADDR=127.0.0.1:PORT` — talk to an already-running
+//!   `flexa serve --http` (this is how the CI smoke step uses it).
+//! * unset — spin up an in-process server on an ephemeral port first.
+//!
+//! Run: `cargo run --release --example http_client`
+//!
+//! Exits non-zero if any job fails to reach `finished`, the SSE
+//! lifecycle is incomplete, or `/metrics` shows no cache hit.
+
+use anyhow::{anyhow, ensure, Context, Result};
+use std::io::{Read, Write};
+use std::net::TcpStream;
+
+/// One `Connection: close` HTTP exchange; returns (status, body).
+fn request(addr: &str, method: &str, path: &str, body: Option<&str>) -> Result<(u16, String)> {
+    let mut stream =
+        TcpStream::connect(addr).with_context(|| format!("connect to {addr}"))?;
+    // Fail with a diagnostic instead of hanging CI if the server wedges
+    // (SSE heartbeats arrive every ~200ms, so 60s of silence is dead).
+    stream.set_read_timeout(Some(std::time::Duration::from_secs(60)))?;
+    let mut head = format!("{method} {path} HTTP/1.1\r\nHost: {addr}\r\nConnection: close\r\n");
+    if let Some(b) = body {
+        head.push_str(&format!(
+            "Content-Type: application/json\r\nContent-Length: {}\r\n",
+            b.len()
+        ));
+    }
+    head.push_str("\r\n");
+    stream.write_all(head.as_bytes())?;
+    if let Some(b) = body {
+        stream.write_all(b.as_bytes())?;
+    }
+    let mut raw = String::new();
+    stream.read_to_string(&mut raw)?;
+    let status: u16 = raw
+        .split_whitespace()
+        .nth(1)
+        .and_then(|s| s.parse().ok())
+        .ok_or_else(|| anyhow!("malformed response: {raw:.80}"))?;
+    let body = raw.split_once("\r\n\r\n").map(|(_, b)| b.to_string()).unwrap_or_default();
+    Ok((status, body))
+}
+
+/// Stream `/v1/jobs/{id}/events` until the `finished` frame; returns the
+/// terminal outcome label and the number of iteration frames seen.
+fn watch_sse(addr: &str, job: u64) -> Result<(String, usize)> {
+    let (status, body) = request(addr, "GET", &format!("/v1/jobs/{job}/events"), None)?;
+    ensure!(status == 200, "SSE stream for job {job}: HTTP {status}");
+    let mut iterations = 0usize;
+    let mut outcome = None;
+    let mut lines = body.lines();
+    while let Some(line) = lines.next() {
+        if line == "event: iteration" {
+            iterations += 1;
+        } else if line == "event: finished" {
+            // The `data:` line follows; pull the outcome label out of it.
+            while let Some(data) = lines.next() {
+                if let Some(json) = data.strip_prefix("data: ") {
+                    let doc = flexa::serve::Json::parse(json)?;
+                    outcome = doc.get("outcome").and_then(|v| v.as_str()).map(str::to_string);
+                    break;
+                }
+            }
+        }
+    }
+    let outcome = outcome.ok_or_else(|| anyhow!("job {job}: no finished event in SSE stream"))?;
+    Ok((outcome, iterations))
+}
+
+fn job_id_of(body: &str) -> Result<u64> {
+    let doc = flexa::serve::Json::parse(body)?;
+    doc.get("job")
+        .and_then(|v| v.as_f64())
+        .map(|v| v as u64)
+        .ok_or_else(|| anyhow!("no job id in response: {body}"))
+}
+
+fn main() -> Result<()> {
+    // Use an external server when pointed at one, else self-host.
+    let (addr, server) = match std::env::var("FLEXA_HTTP_ADDR") {
+        Ok(a) => (a, None),
+        Err(_) => {
+            let server = flexa::http::HttpServer::bind(
+                "127.0.0.1:0",
+                flexa::http::HttpConfig::default(),
+                flexa::serve::ServeConfig::default().with_workers(1),
+                flexa::api::Registry::with_defaults(),
+            )?
+            .spawn();
+            let addr = server.addr().to_string();
+            println!("self-hosted flexa http server on {addr}");
+            (addr, Some(server))
+        }
+    };
+
+    let (status, _) = request(&addr, "GET", "/healthz", None)?;
+    ensure!(status == 200, "/healthz returned HTTP {status}");
+    println!("healthz: ok");
+
+    // Eight λ points over one shared (A, b): same rows/cols/seed, only
+    // `lambda` varies, so every job after the first warm-starts from its
+    // predecessor's solution.
+    let lambdas: Vec<f64> = (0..8).map(|i| 2.0 * 0.7f64.powi(i)).collect();
+    println!("\n{:>10} {:>6} {:>10} {:>12}", "lambda", "job", "outcome", "iterations");
+    for (i, lambda) in lambdas.iter().enumerate() {
+        let spec = format!(
+            "{{\"problem\":\"lasso\",\"rows\":60,\"cols\":180,\"seed\":7,\"lambda\":{lambda},\
+             \"algo\":\"fpa\",\"max_iters\":300,\"warm_start\":true,\"tag\":\"sweep-{i}\"}}"
+        );
+        let (status, body) = request(&addr, "POST", "/v1/jobs", Some(&spec))?;
+        ensure!(status == 202, "POST /v1/jobs: HTTP {status}: {body}");
+        let job = job_id_of(&body)?;
+        let (outcome, iterations) = watch_sse(&addr, job)?;
+        ensure!(outcome == "done", "job {job} (lambda {lambda}): outcome `{outcome}`");
+        println!("{lambda:>10.4} {job:>6} {outcome:>10} {iterations:>12}");
+    }
+
+    let (status, metrics) = request(&addr, "GET", "/metrics", None)?;
+    ensure!(status == 200, "/metrics returned HTTP {status}");
+    let cache_hits: u64 = metrics
+        .lines()
+        .find(|l| l.starts_with("flexa_cache_hits_total "))
+        .and_then(|l| l.split_whitespace().nth(1))
+        .and_then(|v| v.parse().ok())
+        .ok_or_else(|| anyhow!("no flexa_cache_hits_total in /metrics"))?;
+    println!("\nwarm-start cache hits: {cache_hits}");
+    for line in metrics.lines().filter(|l| {
+        l.starts_with("flexa_jobs_submitted_total ")
+            || l.starts_with("flexa_jobs_finished_total{outcome=\"done\"}")
+            || l.starts_with("flexa_cache_misses_total ")
+    }) {
+        println!("  {line}");
+    }
+    ensure!(cache_hits >= 1, "a λ-sweep over shared data must hit the warm-start cache");
+
+    if let Some(server) = server {
+        let (results, _stats) = server.shutdown()?;
+        println!("server drained with {} results", results.len());
+    }
+    println!("OK");
+    Ok(())
+}

@@ -15,6 +15,17 @@
 //!   (same data fingerprint, λ excluded from the key).
 //!
 //! `FLEXA_BENCH_SMOKE=1` caps sizes/iterations for CI's bench-smoke job.
+//!
+//! ## Trendline guard
+//!
+//! After recording, the fresh numbers are compared against the committed
+//! baseline for the matching mode — `BENCH_baseline.json` (full) or
+//! `BENCH_baseline_smoke.json` (smoke); override the path with
+//! `FLEXA_BENCH_BASELINE`. A throughput drop of more than 25% below the
+//! baseline fails the run — warn-only in smoke mode, where CI's shared
+//! runners make wall-clock untrustworthy. Re-record a baseline on a
+//! quiet machine with
+//! `cargo bench --bench serve && cp BENCH_serve.json BENCH_baseline.json`.
 
 use flexa::algos::{SolveOptions, Solver};
 use flexa::api::{ProblemHandle, ProblemSpec, Session, SolverSpec};
@@ -150,5 +161,53 @@ fn main() -> anyhow::Result<()> {
     );
     std::fs::write("BENCH_serve.json", &json)?;
     println!("wrote BENCH_serve.json");
+
+    // --- trendline guard vs the committed baseline ---
+    // Smoke and full workloads differ, so each mode has its own
+    // baseline file: the smoke one is compared (warn-only) on every CI
+    // run, the full one makes local/nightly full runs fail-capable.
+    let baseline_path = std::env::var("FLEXA_BENCH_BASELINE").unwrap_or_else(|_| {
+        if smoke { "BENCH_baseline_smoke.json" } else { "BENCH_baseline.json" }.to_string()
+    });
+    match std::fs::read_to_string(&baseline_path) {
+        Err(_) => println!(
+            "no baseline at {baseline_path}; skipping trendline check \
+             (record one: cp BENCH_serve.json BENCH_baseline.json)"
+        ),
+        Ok(text) => {
+            let doc = flexa::serve::Json::parse(&text)
+                .map_err(|e| anyhow::anyhow!("baseline {baseline_path} is not valid JSON: {e:#}"))?;
+            let base = doc
+                .get("throughput")
+                .and_then(|t| t.get("jobs_per_s"))
+                .and_then(|v| v.as_f64())
+                .ok_or_else(|| {
+                    anyhow::anyhow!("baseline {baseline_path} has no throughput.jobs_per_s")
+                })?;
+            let base_smoke = doc.get("smoke").and_then(|v| v.as_bool()).unwrap_or(false);
+            if base_smoke != smoke {
+                println!(
+                    "baseline {baseline_path} was recorded with smoke={base_smoke}, this run \
+                     is smoke={smoke}; workloads differ, skipping the trendline comparison"
+                );
+                return Ok(());
+            }
+            let floor = base * 0.75;
+            println!(
+                "trendline: {jobs_per_s:.2} jobs/s vs baseline {base:.2} (fail floor {floor:.2})"
+            );
+            if jobs_per_s < floor {
+                let msg = format!(
+                    "throughput regression: {jobs_per_s:.2} jobs/s is more than 25% below \
+                     the {base:.2} jobs/s baseline in {baseline_path}"
+                );
+                if smoke {
+                    println!("WARN (smoke mode is warn-only): {msg}");
+                } else {
+                    anyhow::bail!(msg);
+                }
+            }
+        }
+    }
     Ok(())
 }

@@ -133,6 +133,29 @@ impl Registry {
         self.solvers.keys().cloned().collect()
     }
 
+    /// `(name, description)` pairs for every registered problem (sorted).
+    pub fn problem_entries(&self) -> Vec<(String, String)> {
+        self.problems.iter().map(|(k, e)| (k.clone(), e.about.clone())).collect()
+    }
+
+    /// `(name, description)` pairs for every registered solver (sorted).
+    pub fn solver_entries(&self) -> Vec<(String, String)> {
+        self.solvers.iter().map(|(k, e)| (k.clone(), e.about.clone())).collect()
+    }
+
+    /// Resolve a problem kind to its canonical registered name without
+    /// building the (possibly large) instance — the cheap validation an
+    /// RPC front-end runs before accepting a job. Unknown names fail with
+    /// the same suggestion-carrying error as [`Self::build_problem`].
+    pub fn resolve_problem_name<'a>(&self, name: &'a str) -> Result<&'a str> {
+        let canonical = canonical_problem_name(name);
+        if self.problems.contains_key(canonical) {
+            Ok(canonical)
+        } else {
+            Err(unknown_name_error("problem", name, self.problems.keys()))
+        }
+    }
+
     /// Human-readable listing (the CLI `registry` subcommand).
     pub fn describe(&self) -> String {
         let mut s = String::from("problems:\n");
@@ -215,14 +238,24 @@ fn edit_distance(a: &str, b: &str) -> usize {
 // Default problem constructors.
 // ---------------------------------------------------------------------------
 
+/// Effective regularizer weight: the generator's `c`, unless the spec
+/// reweights the same data with a `lambda` override (λ-sweeps).
+fn weight_of(spec: &ProblemSpec, generated_c: f64) -> f64 {
+    spec.lambda.unwrap_or(generated_c)
+}
+
 fn build_lasso(spec: &ProblemSpec) -> Result<ProblemHandle> {
     let inst = NesterovLasso::new(spec.rows, spec.cols, spec.sparsity, spec.c)
         .seed(spec.seed)
         .generate();
     let layout =
         (spec.block_size > 1).then(|| BlockLayout::uniform(spec.cols, spec.block_size));
-    let problem =
-        Lasso::with_layout(inst.a, inst.b, inst.c, layout).with_opt_value(inst.v_star);
+    let weight = weight_of(spec, inst.c);
+    let mut problem = Lasso::with_layout(inst.a, inst.b, weight, layout);
+    // The planted optimum certifies the generator's weight only.
+    if weight == inst.c {
+        problem = problem.with_opt_value(inst.v_star);
+    }
     Ok(ProblemHandle::least_squares(problem))
 }
 
@@ -233,7 +266,7 @@ fn build_group_lasso(spec: &ProblemSpec) -> Result<ProblemHandle> {
     let inst = NesterovLasso::new(spec.rows, spec.cols, spec.sparsity, spec.c)
         .seed(spec.seed)
         .generate();
-    let problem = GroupLasso::new(inst.a, inst.b, inst.c, spec.block_size);
+    let problem = GroupLasso::new(inst.a, inst.b, weight_of(spec, inst.c), spec.block_size);
     Ok(ProblemHandle::least_squares(problem))
 }
 
@@ -242,7 +275,7 @@ fn build_logreg(spec: &ProblemSpec) -> Result<ProblemHandle> {
         .seed(spec.seed)
         .label_noise(spec.label_noise)
         .generate();
-    Ok(ProblemHandle::general(SparseLogReg::new(inst.m, spec.c)))
+    Ok(ProblemHandle::general(SparseLogReg::new(inst.m, weight_of(spec, spec.c))))
 }
 
 fn build_svm(spec: &ProblemSpec) -> Result<ProblemHandle> {
@@ -250,7 +283,7 @@ fn build_svm(spec: &ProblemSpec) -> Result<ProblemHandle> {
         .seed(spec.seed)
         .label_noise(spec.label_noise)
         .generate();
-    Ok(ProblemHandle::general(L1L2Svm::new(inst.m, spec.c)))
+    Ok(ProblemHandle::general(L1L2Svm::new(inst.m, weight_of(spec, spec.c))))
 }
 
 // ---------------------------------------------------------------------------
@@ -498,6 +531,32 @@ mod tests {
         let tiny = |kind: &str| ProblemSpec { kind: kind.into(), rows: 10, cols: 20, ..Default::default() };
         assert!(r.build_problem(&tiny("group-lasso")).unwrap().is_least_squares());
         assert!(!r.build_problem(&tiny("logistic")).unwrap().is_least_squares());
+    }
+
+    #[test]
+    fn lambda_override_reweights_without_regenerating() {
+        let r = Registry::with_defaults();
+        let base = ProblemSpec::lasso(12, 36).with_seed(4);
+        let swept = base.clone().with_lambda(0.25);
+        let (p0, p1) = (r.build_problem(&base).unwrap(), r.build_problem(&swept).unwrap());
+        // Same generated data, different weight: objectives differ at a
+        // nonzero point, but the planted V* only survives without override.
+        assert!(p0.opt_value().is_some());
+        assert!(p1.opt_value().is_none(), "overridden weight drops the planted optimum");
+        let x = vec![0.5; 36];
+        assert_ne!(p0.objective(&x), p1.objective(&x));
+        // An override equal to the generator's weight is a no-op.
+        let same = r.build_problem(&base.clone().with_lambda(base.c)).unwrap();
+        assert_eq!(same.opt_value(), p0.opt_value());
+    }
+
+    #[test]
+    fn resolve_problem_name_is_cheap_validation() {
+        let r = Registry::with_defaults();
+        assert_eq!(r.resolve_problem_name("lasso").unwrap(), "lasso");
+        assert_eq!(r.resolve_problem_name("group-lasso").unwrap(), "group_lasso");
+        let err = r.resolve_problem_name("laso").unwrap_err().to_string();
+        assert!(err.contains("did you mean `lasso`"), "{err}");
     }
 
     #[test]

@@ -31,6 +31,16 @@ pub struct ProblemSpec {
     pub sparsity: f64,
     /// Regularization weight `c`.
     pub c: f64,
+    /// Override of the regularizer weight *after* generation. The
+    /// generators bake `c` into the planted data (for Lasso, the columns
+    /// of `A` and hence `b` depend on it), so sweeping `c` changes the
+    /// instance itself. `lambda` instead reweights `G` on the *same*
+    /// generated data — two specs differing only in `lambda` share
+    /// `(A, b)`, which is what makes λ-path sweeps warm-startable through
+    /// `flexa::serve`'s cache. When it differs from `c` the planted
+    /// optimum no longer applies, so `V*` is dropped (relative-error
+    /// targets become unavailable; cap by `max_iters` instead).
+    pub lambda: Option<f64>,
     /// Variables per block (1 = scalar blocks, the paper's Lasso setting).
     pub block_size: usize,
     /// Instance seed (generation is a pure function of the spec).
@@ -48,6 +58,7 @@ impl Default for ProblemSpec {
             cols: 10000,
             sparsity: 0.1,
             c: 1.0,
+            lambda: None,
             block_size: 1,
             seed: 20131311, // arXiv 1311.2444
             label_noise: 0.02,
@@ -99,6 +110,12 @@ impl ProblemSpec {
         self
     }
 
+    /// Reweight the regularizer on the generated data (see [`Self::lambda`]).
+    pub fn with_lambda(mut self, lambda: f64) -> Self {
+        self.lambda = Some(lambda);
+        self
+    }
+
     pub fn with_block_size(mut self, block_size: usize) -> Self {
         self.block_size = block_size;
         self
@@ -128,6 +145,11 @@ impl ProblemSpec {
         if self.c <= 0.0 {
             bail!("regularization weight c must be positive");
         }
+        if let Some(l) = self.lambda {
+            if !(l > 0.0) {
+                bail!("lambda override must be positive, got {l}");
+            }
+        }
         if self.block_size == 0 || self.block_size > self.cols {
             bail!("block_size must be in [1, cols]");
         }
@@ -140,7 +162,7 @@ impl ProblemSpec {
     /// Render as a TOML `[problem]` table (round-trips via
     /// [`Self::from_toml`]).
     pub fn to_toml(&self) -> String {
-        format!(
+        let mut s = format!(
             "[problem]\nkind = \"{}\"\nrows = {}\ncols = {}\nsparsity = {}\nc = {}\nblock_size = {}\nseed = {}\nlabel_noise = {}\n",
             self.kind,
             self.rows,
@@ -150,7 +172,11 @@ impl ProblemSpec {
             self.block_size,
             self.seed,
             self.label_noise
-        )
+        );
+        if let Some(l) = self.lambda {
+            s.push_str(&format!("lambda = {l}\n"));
+        }
+        s
     }
 
     /// Parse from TOML text containing a `[problem]` table (missing keys
@@ -185,6 +211,10 @@ impl ProblemSpec {
         float("sparsity", &mut spec.sparsity)?;
         float("c", &mut spec.c)?;
         float("label_noise", &mut spec.label_noise)?;
+        if let Some(v) = get("lambda") {
+            spec.lambda =
+                Some(v.as_float().ok_or_else(|| anyhow!("problem.lambda must be a number"))?);
+        }
         spec.validate()?;
         Ok(spec)
     }
@@ -194,12 +224,13 @@ impl std::fmt::Display for ProblemSpec {
     fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
         write!(
             f,
-            "{}[{}x{}, {:.0}% nnz, c={}, blocks of {}]",
+            "{}[{}x{}, {:.0}% nnz, c={}{}, blocks of {}]",
             self.kind,
             self.rows,
             self.cols,
             self.sparsity * 100.0,
             self.c,
+            self.lambda.map(|l| format!(", lambda={l}")).unwrap_or_default(),
             self.block_size
         )
     }
@@ -552,6 +583,18 @@ mod tests {
         let s = ProblemSpec::group_lasso(50, 200, 4).with_sparsity(0.2).with_seed(77);
         let restored = ProblemSpec::from_toml(&s.to_toml()).unwrap();
         assert_eq!(s, restored);
+        // lambda round-trips too (and only appears when set).
+        assert!(!s.to_toml().contains("lambda"));
+        let s = s.with_lambda(0.3);
+        assert_eq!(ProblemSpec::from_toml(&s.to_toml()).unwrap(), s);
+    }
+
+    #[test]
+    fn lambda_override_is_validated() {
+        assert!(ProblemSpec::lasso(10, 30).with_lambda(0.5).validate().is_ok());
+        assert!(ProblemSpec::lasso(10, 30).with_lambda(0.0).validate().is_err());
+        assert!(ProblemSpec::lasso(10, 30).with_lambda(-1.0).validate().is_err());
+        assert!(ProblemSpec::lasso(10, 30).with_lambda(f64::NAN).validate().is_err());
     }
 
     #[test]

@@ -1,0 +1,161 @@
+//! Prometheus text-format exposition for `GET /metrics`.
+//!
+//! Three counter families meet here: per-endpoint HTTP request counts
+//! (owned by this module, bumped by the router), the scheduler's
+//! [`SchedulerStats`] (queue depth, running gauge, terminal buckets) and
+//! the warm-start [`CacheStats`]. Rendering follows the Prometheus text
+//! format v0.0.4: `# HELP` / `# TYPE` preamble per family, one sample
+//! per line, labels for enumerable dimensions.
+
+use crate::serve::{CacheStats, SchedulerStats};
+use std::sync::atomic::{AtomicU64, Ordering};
+
+/// Request counters, one per routed endpoint plus spillover buckets.
+#[derive(Default)]
+pub struct HttpMetrics {
+    pub post_jobs: AtomicU64,
+    pub get_job: AtomicU64,
+    pub get_events: AtomicU64,
+    pub delete_job: AtomicU64,
+    pub get_registry: AtomicU64,
+    pub healthz: AtomicU64,
+    pub metrics: AtomicU64,
+    /// Requests that matched no route (404s).
+    pub not_found: AtomicU64,
+    /// Responses with status >= 400, across all endpoints.
+    pub errors: AtomicU64,
+    /// Connections accepted.
+    pub connections: AtomicU64,
+}
+
+impl HttpMetrics {
+    /// `(label, count)` per endpoint, for the labeled request family.
+    fn endpoint_counts(&self) -> [(&'static str, u64); 8] {
+        let get = |c: &AtomicU64| c.load(Ordering::Relaxed);
+        [
+            ("post_jobs", get(&self.post_jobs)),
+            ("get_job", get(&self.get_job)),
+            ("get_events", get(&self.get_events)),
+            ("delete_job", get(&self.delete_job)),
+            ("get_registry", get(&self.get_registry)),
+            ("healthz", get(&self.healthz)),
+            ("metrics", get(&self.metrics)),
+            ("not_found", get(&self.not_found)),
+        ]
+    }
+}
+
+/// Render every counter family as Prometheus text.
+pub fn render_prometheus(
+    http: &HttpMetrics,
+    sched: &SchedulerStats,
+    cache: &CacheStats,
+    uptime_seconds: f64,
+) -> String {
+    let mut s = String::with_capacity(2048);
+    let counter = |s: &mut String, name: &str, help: &str, value: u64| {
+        s.push_str(&format!(
+            "# HELP {name} {help}\n# TYPE {name} counter\n{name} {value}\n"
+        ));
+    };
+    let gauge = |s: &mut String, name: &str, help: &str, value: f64| {
+        s.push_str(&format!("# HELP {name} {help}\n# TYPE {name} gauge\n{name} {value}\n"));
+    };
+
+    // --- HTTP layer ---
+    s.push_str("# HELP flexa_http_requests_total Requests routed, by endpoint.\n");
+    s.push_str("# TYPE flexa_http_requests_total counter\n");
+    for (endpoint, count) in http.endpoint_counts() {
+        s.push_str(&format!("flexa_http_requests_total{{endpoint=\"{endpoint}\"}} {count}\n"));
+    }
+    counter(
+        &mut s,
+        "flexa_http_errors_total",
+        "Responses with status >= 400.",
+        http.errors.load(Ordering::Relaxed),
+    );
+    counter(
+        &mut s,
+        "flexa_http_connections_total",
+        "TCP connections accepted.",
+        http.connections.load(Ordering::Relaxed),
+    );
+
+    // --- scheduler ---
+    counter(&mut s, "flexa_jobs_submitted_total", "Jobs accepted into the queue.", sched.submitted);
+    counter(
+        &mut s,
+        "flexa_jobs_rejected_total",
+        "Submissions refused because the queue was full.",
+        sched.rejected,
+    );
+    s.push_str("# HELP flexa_jobs_finished_total Jobs reaching a terminal state, by outcome.\n");
+    s.push_str("# TYPE flexa_jobs_finished_total counter\n");
+    for (outcome, count) in [
+        ("done", sched.done),
+        ("failed", sched.failed),
+        ("cancelled", sched.cancelled),
+        ("deadline-expired", sched.deadline_expired),
+    ] {
+        s.push_str(&format!("flexa_jobs_finished_total{{outcome=\"{outcome}\"}} {count}\n"));
+    }
+    gauge(&mut s, "flexa_queue_depth", "Jobs waiting in the queue.", sched.queue_depth as f64);
+    gauge(&mut s, "flexa_jobs_running", "Jobs currently on a worker.", sched.running as f64);
+
+    // --- warm-start cache ---
+    counter(&mut s, "flexa_cache_hits_total", "Warm-start cache hits.", cache.hits);
+    counter(&mut s, "flexa_cache_misses_total", "Warm-start cache misses.", cache.misses);
+    counter(&mut s, "flexa_cache_evictions_total", "Warm-start cache LRU evictions.", cache.evictions);
+    gauge(&mut s, "flexa_cache_entries", "Warm-start cache entries.", cache.entries as f64);
+    gauge(&mut s, "flexa_cache_bytes", "Warm-start cache bytes in use.", cache.bytes as f64);
+
+    gauge(&mut s, "flexa_uptime_seconds", "Seconds since the HTTP server started.", uptime_seconds);
+    s
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn renders_every_family_with_type_lines() {
+        let http = HttpMetrics::default();
+        http.post_jobs.store(3, Ordering::Relaxed);
+        http.errors.store(1, Ordering::Relaxed);
+        let sched = SchedulerStats {
+            submitted: 9,
+            rejected: 2,
+            queue_depth: 1,
+            running: 4,
+            done: 5,
+            failed: 1,
+            cancelled: 1,
+            deadline_expired: 0,
+        };
+        let cache = CacheStats { hits: 7, misses: 2, evictions: 1, entries: 1, bytes: 640, byte_budget: 1 << 20 };
+        let text = render_prometheus(&http, &sched, &cache, 12.5);
+        for needle in [
+            "flexa_http_requests_total{endpoint=\"post_jobs\"} 3",
+            "flexa_http_errors_total 1",
+            "flexa_jobs_submitted_total 9",
+            "flexa_jobs_rejected_total 2",
+            "flexa_jobs_finished_total{outcome=\"done\"} 5",
+            "flexa_jobs_finished_total{outcome=\"cancelled\"} 1",
+            "flexa_queue_depth 1",
+            "flexa_jobs_running 4",
+            "flexa_cache_hits_total 7",
+            "flexa_cache_misses_total 2",
+            "flexa_uptime_seconds 12.5",
+        ] {
+            assert!(text.contains(needle), "missing `{needle}` in:\n{text}");
+        }
+        // Every sample line's metric has a TYPE declaration.
+        for family in [
+            "flexa_http_requests_total",
+            "flexa_jobs_finished_total",
+            "flexa_cache_bytes",
+        ] {
+            assert!(text.contains(&format!("# TYPE {family} ")), "no TYPE for {family}");
+        }
+    }
+}

@@ -1,0 +1,440 @@
+//! # `flexa::http` — a std-only HTTP/1.1 + SSE front-end for the solve
+//! scheduler
+//!
+//! Turns [`crate::serve::Scheduler`] into a network service with zero
+//! new dependencies: a [`std::net::TcpListener`] accept loop,
+//! thread-per-connection bounded by a connection semaphore, a
+//! hand-rolled request [`parser`], a small [`router`], an [`sse`] bridge
+//! from the scheduler's [`crate::serve::JobEvent`] lifecycle to
+//! `text/event-stream`, and Prometheus [`metrics`].
+//!
+//! ```text
+//! POST   /v1/jobs             submit a JSON job spec  → 202 {job id}
+//! GET    /v1/jobs/{id}        status / result JSON    (?x=1 adds the iterate)
+//! GET    /v1/jobs/{id}/events SSE: queued → started → iteration* → finished
+//! DELETE /v1/jobs/{id}        cooperative cancellation
+//! GET    /v1/registry         problems/solvers with descriptions
+//! GET    /healthz             liveness probe
+//! GET    /metrics             Prometheus text format
+//! ```
+//!
+//! The job grammar on the wire is exactly the JSONL grammar of
+//! [`crate::serve::jobfile`], so anything `flexa serve jobs.jsonl` runs
+//! in batch can be submitted interactively — including warm-startable
+//! λ-sweeps via the `lambda` spec key. Run `flexa serve --http ADDR`,
+//! or embed via [`HttpServer::bind`] / [`HttpServer::spawn`].
+//!
+//! ## Design notes
+//!
+//! * **No blocking on client behavior** — submissions use
+//!   [`crate::serve::Scheduler::try_submit`]; a full queue is `429` with
+//!   `Retry-After`, never a parked connection thread.
+//! * **Bounded everything** — connections (semaphore), request head and
+//!   body bytes (`413`/`431`), per-job SSE replay logs, finished-job
+//!   status retention.
+//! * **Graceful shutdown** — ctrl-c (SIGINT) or SIGTERM flips a flag;
+//!   the accept loop stops, idle keep-alive connections notice within
+//!   their read timeout, SSE streams emit a final comment and close,
+//!   queued jobs drain, and [`HttpServer::run`] returns the collected
+//!   [`JobResult`]s like a batch `Scheduler::join`.
+
+pub mod metrics;
+pub mod parser;
+pub mod router;
+pub mod sse;
+
+use crate::api::Registry;
+use crate::serve::{CacheStats, JobResult, Scheduler, ServeConfig, ServeObserver};
+use anyhow::{anyhow, Result};
+use metrics::HttpMetrics;
+use parser::Limits;
+use router::{Response, Routed};
+use sse::EventHub;
+use std::io::BufReader;
+use std::net::{SocketAddr, TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{Arc, Condvar, Mutex};
+use std::time::{Duration, Instant};
+
+/// HTTP layer sizing and behavior.
+#[derive(Clone, Copy, Debug)]
+pub struct HttpConfig {
+    /// Concurrent connection threads; further accepts wait.
+    pub max_connections: usize,
+    /// Request head cap in bytes (`431` beyond).
+    pub max_head_bytes: usize,
+    /// Request body cap in bytes (`413` beyond).
+    pub max_body_bytes: usize,
+    /// `Retry-After` seconds advertised on `429`.
+    pub retry_after_secs: u64,
+    /// Requests served per connection before forcing a close.
+    pub keep_alive_max_requests: usize,
+    /// Iteration events retained per job for SSE replay.
+    pub sse_iteration_retention: usize,
+    /// Finished jobs whose SSE logs are retained for late subscribers.
+    pub sse_finished_retention: usize,
+}
+
+impl Default for HttpConfig {
+    fn default() -> Self {
+        Self {
+            max_connections: 64,
+            max_head_bytes: 16 << 10,
+            max_body_bytes: 1 << 20,
+            retry_after_secs: 1,
+            keep_alive_max_requests: 1000,
+            sse_iteration_retention: 10_000,
+            sse_finished_retention: 1024,
+        }
+    }
+}
+
+/// Shared server context: every connection thread sees the same
+/// scheduler, event hub and counters.
+pub struct ServerState {
+    pub scheduler: Arc<Scheduler>,
+    pub hub: Arc<EventHub>,
+    pub http_metrics: HttpMetrics,
+    pub config: HttpConfig,
+    pub started: Instant,
+}
+
+impl ServerState {
+    /// Prometheus text for `GET /metrics` (scheduler + cache + HTTP).
+    pub fn render_metrics(&self) -> String {
+        metrics::render_prometheus(
+            &self.http_metrics,
+            &self.scheduler.stats(),
+            &self.scheduler.cache_stats(),
+            self.started.elapsed().as_secs_f64(),
+        )
+    }
+}
+
+/// The HTTP server: bind, optionally pre-submit jobs, then [`Self::run`]
+/// (blocking) or [`Self::spawn`] (background thread, for tests and
+/// embedding).
+pub struct HttpServer {
+    listener: TcpListener,
+    addr: SocketAddr,
+    state: Arc<ServerState>,
+    stop: Arc<AtomicBool>,
+}
+
+impl HttpServer {
+    /// Bind `addr` (e.g. `127.0.0.1:0` for an ephemeral port) and start
+    /// the scheduler with the event hub installed as its observer.
+    pub fn bind(addr: &str, config: HttpConfig, serve: ServeConfig, registry: Registry) -> Result<Self> {
+        Self::bind_with_downstream(addr, config, serve, registry, None)
+    }
+
+    /// [`Self::bind`], also forwarding every job event to `downstream`
+    /// (the CLI `--stream` JSONL emitter).
+    pub fn bind_with_downstream(
+        addr: &str,
+        config: HttpConfig,
+        serve: ServeConfig,
+        registry: Registry,
+        downstream: Option<Arc<dyn ServeObserver>>,
+    ) -> Result<Self> {
+        let hub = match downstream {
+            Some(d) => EventHub::with_downstream(
+                config.sse_iteration_retention,
+                config.sse_finished_retention,
+                d,
+            ),
+            None => EventHub::new(config.sse_iteration_retention, config.sse_finished_retention),
+        };
+        let scheduler = Arc::new(Scheduler::start_with(
+            serve,
+            Some(Arc::clone(&hub) as Arc<dyn ServeObserver>),
+            registry,
+        ));
+        let listener = TcpListener::bind(addr)
+            .map_err(|e| anyhow!("cannot bind HTTP listener on `{addr}`: {e}"))?;
+        let local = listener.local_addr()?;
+        listener.set_nonblocking(true)?;
+        Ok(Self {
+            listener,
+            addr: local,
+            state: Arc::new(ServerState {
+                scheduler,
+                hub,
+                http_metrics: HttpMetrics::default(),
+                config,
+                started: Instant::now(),
+            }),
+            stop: Arc::new(AtomicBool::new(false)),
+        })
+    }
+
+    /// The bound address (resolves port 0).
+    pub fn local_addr(&self) -> SocketAddr {
+        self.addr
+    }
+
+    /// The scheduler, e.g. for pre-submitting a job file before serving.
+    pub fn scheduler(&self) -> &Scheduler {
+        &self.state.scheduler
+    }
+
+    /// Flag that stops the accept loop when set (shared; clone freely).
+    pub fn stop_flag(&self) -> Arc<AtomicBool> {
+        Arc::clone(&self.stop)
+    }
+
+    /// Serve until the stop flag or a shutdown signal fires, then drain:
+    /// wait for in-flight connections, join the scheduler and return the
+    /// collected results + final cache counters.
+    pub fn run(self) -> Result<(Vec<JobResult>, CacheStats)> {
+        let HttpServer { listener, addr: _, state, stop } = self;
+        let semaphore = Arc::new(Semaphore::new(state.config.max_connections.max(1)));
+        let should_stop = || stop.load(Ordering::Relaxed) || signal::fired();
+        while !should_stop() {
+            match listener.accept() {
+                Ok((stream, _peer)) => {
+                    state.http_metrics.connections.fetch_add(1, Ordering::Relaxed);
+                    let permit = Semaphore::acquire(&semaphore);
+                    let conn_state = Arc::clone(&state);
+                    let conn_stop = Arc::clone(&stop);
+                    let spawned = std::thread::Builder::new()
+                        .name("flexa-http-conn".to_string())
+                        .spawn(move || {
+                            handle_connection(stream, &conn_state, &conn_stop);
+                            // Drop order matters for shutdown: the state
+                            // clone must go before the permit so that
+                            // "all permits back" implies "no state refs".
+                            drop(conn_state);
+                            drop(permit);
+                        });
+                    if spawned.is_err() {
+                        // Out of threads: shed load rather than die.
+                        std::thread::sleep(Duration::from_millis(50));
+                    }
+                }
+                Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
+                    std::thread::sleep(Duration::from_millis(20));
+                }
+                Err(e) if e.kind() == std::io::ErrorKind::Interrupted => {}
+                Err(_) => std::thread::sleep(Duration::from_millis(50)),
+            }
+        }
+        drop(listener);
+        semaphore.wait_all_returned();
+        // All connection threads dropped their state clones (before
+        // releasing their permits), so unwrapping succeeds; a tiny retry
+        // loop covers the instant between those two drops.
+        let mut state_arc = state;
+        let state = loop {
+            match Arc::try_unwrap(state_arc) {
+                Ok(s) => break s,
+                Err(arc) => {
+                    state_arc = arc;
+                    std::thread::sleep(Duration::from_millis(5));
+                }
+            }
+        };
+        let scheduler = Arc::try_unwrap(state.scheduler)
+            .map_err(|_| anyhow!("scheduler still referenced at shutdown"))?;
+        Ok(scheduler.join_with_stats())
+    }
+
+    /// Run on a background thread; the returned handle shuts the server
+    /// down on demand (used by tests and the loopback example).
+    pub fn spawn(self) -> SpawnedServer {
+        let addr = self.addr;
+        let stop = self.stop_flag();
+        let handle = std::thread::Builder::new()
+            .name("flexa-http-accept".to_string())
+            .spawn(move || self.run())
+            .expect("spawn http accept thread");
+        SpawnedServer { addr, stop, handle }
+    }
+}
+
+/// Handle to a [`HttpServer::spawn`]ed server.
+pub struct SpawnedServer {
+    addr: SocketAddr,
+    stop: Arc<AtomicBool>,
+    handle: std::thread::JoinHandle<Result<(Vec<JobResult>, CacheStats)>>,
+}
+
+impl SpawnedServer {
+    pub fn addr(&self) -> SocketAddr {
+        self.addr
+    }
+
+    /// Stop accepting, drain, and return the collected job results.
+    pub fn shutdown(self) -> Result<(Vec<JobResult>, CacheStats)> {
+        self.stop.store(true, Ordering::Relaxed);
+        self.handle.join().map_err(|_| anyhow!("http server thread panicked"))?
+    }
+}
+
+/// Serve one connection: keep-alive request loop, SSE takeover, error
+/// responses with close semantics.
+fn handle_connection(stream: TcpStream, state: &Arc<ServerState>, stop: &AtomicBool) {
+    // Read timeouts make idle keep-alive connections poll the shutdown
+    // flag instead of parking forever.
+    let _ = stream.set_read_timeout(Some(Duration::from_millis(250)));
+    let _ = stream.set_nodelay(true);
+    let reader_stream = match stream.try_clone() {
+        Ok(s) => s,
+        Err(_) => return,
+    };
+    let mut reader = BufReader::new(reader_stream);
+    let mut writer = stream;
+    let limits = Limits {
+        max_head_bytes: state.config.max_head_bytes,
+        max_body_bytes: state.config.max_body_bytes,
+    };
+    let abort = || stop.load(Ordering::Relaxed) || signal::fired();
+    let mut served = 0usize;
+    loop {
+        if served >= state.config.keep_alive_max_requests {
+            return;
+        }
+        match parser::read_request(&mut reader, &limits, &abort) {
+            Ok(None) => return, // clean close or shutdown
+            Ok(Some(req)) => {
+                served += 1;
+                match router::route(state, &req) {
+                    Routed::Response(resp) => {
+                        if resp.status >= 400 {
+                            state.http_metrics.errors.fetch_add(1, Ordering::Relaxed);
+                        }
+                        let keep_alive = req.keep_alive && resp.status < 400;
+                        if resp.write_to(&mut writer, keep_alive).is_err() || !keep_alive {
+                            return;
+                        }
+                    }
+                    Routed::EventStream(_job, sub) => {
+                        let head = "HTTP/1.1 200 OK\r\nContent-Type: text/event-stream\r\nCache-Control: no-cache\r\nConnection: close\r\n\r\n";
+                        use std::io::Write;
+                        if writer.write_all(head.as_bytes()).is_ok() {
+                            let _ = sse::stream_events(&mut writer, sub, &abort);
+                        }
+                        return; // SSE always ends the connection
+                    }
+                }
+            }
+            Err(e) => {
+                state.http_metrics.errors.fetch_add(1, Ordering::Relaxed);
+                let _ = Response::error(e.status, &e.message).write_to(&mut writer, false);
+                // Drain what the client already sent (e.g. a refused
+                // oversized body): closing with unread bytes in the
+                // receive buffer would RST the error response out of the
+                // client's hands before it reads it.
+                drain_briefly(&mut reader);
+                return;
+            }
+        }
+    }
+}
+
+/// Discard whatever the peer has already sent, stopping at EOF, the
+/// first idle read timeout, a 4 MiB cap, or ~500 ms — whichever first.
+fn drain_briefly(reader: &mut impl std::io::Read) {
+    let mut sink = [0u8; 8192];
+    let deadline = Instant::now() + Duration::from_millis(500);
+    let mut total = 0usize;
+    while Instant::now() < deadline && total < (4 << 20) {
+        match reader.read(&mut sink) {
+            Ok(0) => return,
+            Ok(n) => total += n,
+            // Timeout = the peer has stopped sending; nothing left to
+            // drain.
+            Err(_) => return,
+        }
+    }
+}
+
+/// Counting semaphore bounding concurrent connection threads (no
+/// `std::sync::Semaphore` on stable; a Mutex+Condvar pair suffices).
+struct Semaphore {
+    total: usize,
+    available: Mutex<usize>,
+    returned: Condvar,
+}
+
+struct Permit {
+    sem: Arc<Semaphore>,
+}
+
+impl Semaphore {
+    fn new(total: usize) -> Self {
+        Self { total, available: Mutex::new(total), returned: Condvar::new() }
+    }
+
+    fn acquire(sem: &Arc<Semaphore>) -> Permit {
+        let mut n = sem.available.lock().unwrap();
+        while *n == 0 {
+            n = sem.returned.wait(n).unwrap();
+        }
+        *n -= 1;
+        Permit { sem: Arc::clone(sem) }
+    }
+
+    /// Block until every permit is back (all connection threads done).
+    fn wait_all_returned(&self) {
+        let mut n = self.available.lock().unwrap();
+        while *n < self.total {
+            n = self.returned.wait(n).unwrap();
+        }
+    }
+}
+
+impl Drop for Permit {
+    fn drop(&mut self) {
+        let mut n = self.sem.available.lock().unwrap();
+        *n += 1;
+        self.sem.returned.notify_all();
+    }
+}
+
+/// Process-wide shutdown signal latch (SIGINT/SIGTERM → flag; the
+/// accept loop and connection threads poll it).
+mod signal {
+    use std::sync::atomic::{AtomicBool, Ordering};
+
+    static FIRED: AtomicBool = AtomicBool::new(false);
+
+    #[cfg(unix)]
+    extern "C" fn on_signal(_signum: i32) {
+        // Only async-signal-safe work here: flip the latch.
+        FIRED.store(true, Ordering::SeqCst);
+    }
+
+    /// Install SIGINT + SIGTERM handlers (best effort: libc `signal`,
+    /// which std already links on unix; elsewhere this is a no-op and
+    /// shutdown happens via the stop flag only).
+    #[cfg(unix)]
+    pub fn install() {
+        extern "C" {
+            fn signal(signum: i32, handler: usize) -> usize;
+        }
+        let handler: extern "C" fn(i32) = on_signal;
+        unsafe {
+            signal(2, handler as usize); // SIGINT (ctrl-c)
+            signal(15, handler as usize); // SIGTERM
+        }
+    }
+
+    #[cfg(not(unix))]
+    pub fn install() {}
+
+    pub fn fired() -> bool {
+        FIRED.load(Ordering::SeqCst)
+    }
+}
+
+/// Install ctrl-c/SIGTERM handlers that gracefully stop every
+/// [`HttpServer::run`] loop in the process. Call once before `run`.
+pub fn install_shutdown_signals() {
+    signal::install();
+}
+
+/// Whether a shutdown signal has fired (exposed for the CLI's summary).
+pub fn shutdown_signal_fired() -> bool {
+    signal::fired()
+}

@@ -1,0 +1,408 @@
+//! Hand-rolled HTTP/1.1 request parsing (no `hyper`/`tiny_http` in the
+//! offline crate cache, in the same spirit as the JSON/TOML/CLI
+//! substrates).
+//!
+//! Scope: exactly what the `flexa::http` endpoints need — request line,
+//! headers, `Content-Length` bodies, percent-decoded paths and query
+//! strings, keep-alive. Chunked transfer encoding is rejected with
+//! `501`; oversized heads/bodies are rejected with `431`/`413` before
+//! they are buffered (the caps are the first line of defense on an
+//! internet-facing port).
+//!
+//! Reads go through the caller's [`BufRead`], whose underlying socket is
+//! expected to carry a read timeout: on a timeout the parser polls the
+//! caller's `abort` callback (shutdown flag) and either resumes the read
+//! or gives up, so idle keep-alive connections cannot outlive the
+//! server's shutdown.
+
+use std::io::{BufRead, ErrorKind, Read};
+
+/// Hard caps applied while reading one request.
+#[derive(Clone, Copy, Debug)]
+pub struct Limits {
+    /// Request line + headers, bytes.
+    pub max_head_bytes: usize,
+    /// `Content-Length` bodies larger than this are refused with `413`.
+    pub max_body_bytes: usize,
+}
+
+impl Default for Limits {
+    fn default() -> Self {
+        Self { max_head_bytes: 16 << 10, max_body_bytes: 1 << 20 }
+    }
+}
+
+/// An error that renders as an HTTP status response (the connection is
+/// closed afterwards: after a refused body the stream is not in sync).
+#[derive(Debug)]
+pub struct HttpError {
+    pub status: u16,
+    pub message: String,
+}
+
+impl HttpError {
+    pub fn new(status: u16, message: impl Into<String>) -> Self {
+        Self { status, message: message.into() }
+    }
+}
+
+/// One parsed request.
+#[derive(Clone, Debug)]
+pub struct Request {
+    /// Upper-case method token (`GET`, `POST`, …).
+    pub method: String,
+    /// Percent-decoded path, query string stripped (always starts `/`).
+    pub path: String,
+    /// Decoded `key=value` query pairs in order of appearance.
+    pub query: Vec<(String, String)>,
+    /// Headers with lower-cased names, in order of appearance.
+    pub headers: Vec<(String, String)>,
+    pub body: Vec<u8>,
+    /// Whether the connection may serve another request afterwards
+    /// (HTTP/1.1 default, overridden by `Connection: close`).
+    pub keep_alive: bool,
+}
+
+impl Request {
+    /// First header with this (case-insensitive) name.
+    pub fn header(&self, name: &str) -> Option<&str> {
+        let name = name.to_ascii_lowercase();
+        self.headers.iter().find(|(k, _)| *k == name).map(|(_, v)| v.as_str())
+    }
+
+    /// First query value for `key`.
+    pub fn query_value(&self, key: &str) -> Option<&str> {
+        self.query.iter().find(|(k, _)| k == key).map(|(_, v)| v.as_str())
+    }
+
+    /// Truthy query flag: present and not `0`/`false` (bare `?x` counts).
+    pub fn query_flag(&self, key: &str) -> bool {
+        match self.query_value(key) {
+            Some(v) => !matches!(v, "0" | "false"),
+            None => false,
+        }
+    }
+}
+
+/// Read one request off the connection.
+///
+/// * `Ok(Some(req))` — a complete request.
+/// * `Ok(None)` — the peer closed (or `abort()` fired) before sending
+///   one; nothing to respond to.
+/// * `Err(e)` — malformed/oversized input; respond with `e.status` and
+///   close.
+pub fn read_request(
+    reader: &mut impl BufRead,
+    limits: &Limits,
+    abort: &dyn Fn() -> bool,
+) -> Result<Option<Request>, HttpError> {
+    // --- head: request line + headers, capped at max_head_bytes ---
+    let mut head: Vec<String> = Vec::new();
+    let mut head_bytes = 0usize;
+    loop {
+        let mut line = Vec::new();
+        if !read_line(reader, &mut line, abort)? {
+            // EOF or shutdown. Mid-head EOF on a started request is a
+            // malformed request; before any byte it is a clean close.
+            if head.is_empty() && line.is_empty() {
+                return Ok(None);
+            }
+            return Err(HttpError::new(400, "connection closed mid-request"));
+        }
+        head_bytes += line.len();
+        if head_bytes > limits.max_head_bytes {
+            return Err(HttpError::new(
+                431,
+                format!("request head larger than {} bytes", limits.max_head_bytes),
+            ));
+        }
+        // Strip the line terminator (tolerate bare `\n`).
+        while matches!(line.last(), Some(b'\r' | b'\n')) {
+            line.pop();
+        }
+        if line.is_empty() {
+            if head.is_empty() {
+                // Stray blank line(s) before the request line are legal.
+                continue;
+            }
+            break;
+        }
+        head.push(
+            String::from_utf8(line)
+                .map_err(|_| HttpError::new(400, "non-UTF-8 bytes in request head"))?,
+        );
+    }
+
+    // --- request line ---
+    let mut parts = head[0].split_whitespace();
+    let (method, target, version) = match (parts.next(), parts.next(), parts.next(), parts.next()) {
+        (Some(m), Some(t), Some(v), None) => (m.to_ascii_uppercase(), t, v),
+        _ => return Err(HttpError::new(400, format!("malformed request line `{}`", head[0]))),
+    };
+    if !version.starts_with("HTTP/1.") {
+        return Err(HttpError::new(505, format!("unsupported protocol `{version}`")));
+    }
+    let mut keep_alive = version == "HTTP/1.1";
+    let (path, query) = parse_target(target)?;
+
+    // --- headers ---
+    let mut headers = Vec::with_capacity(head.len() - 1);
+    for line in &head[1..] {
+        let Some((name, value)) = line.split_once(':') else {
+            return Err(HttpError::new(400, format!("malformed header line `{line}`")));
+        };
+        let name = name.trim().to_ascii_lowercase();
+        let value = value.trim().to_string();
+        match name.as_str() {
+            "connection" => {
+                let v = value.to_ascii_lowercase();
+                if v.contains("close") {
+                    keep_alive = false;
+                } else if v.contains("keep-alive") {
+                    keep_alive = true;
+                }
+            }
+            "transfer-encoding" => {
+                return Err(HttpError::new(501, "transfer-encoding is not supported; send Content-Length"));
+            }
+            _ => {}
+        }
+        headers.push((name, value));
+    }
+
+    // --- body ---
+    let content_length = headers
+        .iter()
+        .find(|(k, _)| k == "content-length")
+        .map(|(_, v)| {
+            v.parse::<usize>()
+                .map_err(|_| HttpError::new(400, format!("bad Content-Length `{v}`")))
+        })
+        .transpose()?
+        .unwrap_or(0);
+    if content_length > limits.max_body_bytes {
+        return Err(HttpError::new(
+            413,
+            format!(
+                "request body of {content_length} bytes exceeds the {}-byte limit",
+                limits.max_body_bytes
+            ),
+        ));
+    }
+    let mut body = vec![0u8; content_length];
+    read_exact(reader, &mut body, abort)?;
+
+    Ok(Some(Request { method, path, query, headers, body, keep_alive }))
+}
+
+/// Read until `\n` (inclusive), retrying on socket read timeouts while
+/// `abort()` stays false. `Ok(false)` = EOF/abort before the newline.
+fn read_line(
+    reader: &mut impl BufRead,
+    line: &mut Vec<u8>,
+    abort: &dyn Fn() -> bool,
+) -> Result<bool, HttpError> {
+    loop {
+        match reader.read_until(b'\n', line) {
+            Ok(0) => return Ok(false),
+            Ok(_) => {
+                if line.last() == Some(&b'\n') {
+                    return Ok(true);
+                }
+                // Partial line followed by EOF.
+                return Ok(false);
+            }
+            Err(e) if matches!(e.kind(), ErrorKind::WouldBlock | ErrorKind::TimedOut) => {
+                if abort() {
+                    return Ok(false);
+                }
+            }
+            Err(e) if e.kind() == ErrorKind::Interrupted => {}
+            Err(e) => return Err(HttpError::new(400, format!("read error: {e}"))),
+        }
+    }
+}
+
+/// `read_exact` with the same timeout-retry policy as [`read_line`].
+fn read_exact(
+    reader: &mut impl BufRead,
+    buf: &mut [u8],
+    abort: &dyn Fn() -> bool,
+) -> Result<(), HttpError> {
+    let mut filled = 0usize;
+    while filled < buf.len() {
+        match reader.read(&mut buf[filled..]) {
+            Ok(0) => return Err(HttpError::new(400, "connection closed mid-body")),
+            Ok(n) => filled += n,
+            Err(e) if matches!(e.kind(), ErrorKind::WouldBlock | ErrorKind::TimedOut) => {
+                if abort() {
+                    return Err(HttpError::new(400, "shutdown while reading body"));
+                }
+            }
+            Err(e) if e.kind() == ErrorKind::Interrupted => {}
+            Err(e) => return Err(HttpError::new(400, format!("read error: {e}"))),
+        }
+    }
+    Ok(())
+}
+
+/// Split a request target into decoded path + query pairs.
+fn parse_target(target: &str) -> Result<(String, Vec<(String, String)>), HttpError> {
+    if !target.starts_with('/') {
+        // Absolute-form targets (proxies) are out of scope.
+        return Err(HttpError::new(400, format!("unsupported request target `{target}`")));
+    }
+    let (raw_path, raw_query) = match target.split_once('?') {
+        Some((p, q)) => (p, Some(q)),
+        None => (target, None),
+    };
+    let path = percent_decode(raw_path, false)?;
+    let mut query = Vec::new();
+    if let Some(q) = raw_query {
+        for pair in q.split('&').filter(|p| !p.is_empty()) {
+            let (k, v) = match pair.split_once('=') {
+                Some((k, v)) => (k, v),
+                None => (pair, ""),
+            };
+            query.push((percent_decode(k, true)?, percent_decode(v, true)?));
+        }
+    }
+    Ok((path, query))
+}
+
+/// Percent-decoding; in query components `+` also decodes to space.
+fn percent_decode(s: &str, query: bool) -> Result<String, HttpError> {
+    let bytes = s.as_bytes();
+    let mut out = Vec::with_capacity(bytes.len());
+    let mut i = 0;
+    while i < bytes.len() {
+        match bytes[i] {
+            b'%' => {
+                let hex = bytes
+                    .get(i + 1..i + 3)
+                    .and_then(|h| std::str::from_utf8(h).ok())
+                    .and_then(|h| u8::from_str_radix(h, 16).ok())
+                    .ok_or_else(|| HttpError::new(400, format!("bad percent escape in `{s}`")))?;
+                out.push(hex);
+                i += 3;
+            }
+            b'+' if query => {
+                out.push(b' ');
+                i += 1;
+            }
+            b => {
+                out.push(b);
+                i += 1;
+            }
+        }
+    }
+    String::from_utf8(out).map_err(|_| HttpError::new(400, format!("non-UTF-8 percent escapes in `{s}`")))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::io::BufReader;
+
+    fn never() -> bool {
+        false
+    }
+
+    fn parse(input: &str) -> Result<Option<Request>, HttpError> {
+        parse_limited(input, &Limits::default())
+    }
+
+    fn parse_limited(input: &str, limits: &Limits) -> Result<Option<Request>, HttpError> {
+        let mut reader = BufReader::new(input.as_bytes());
+        read_request(&mut reader, limits, &never)
+    }
+
+    #[test]
+    fn parses_a_get_with_query_and_headers() {
+        let req = parse(
+            "GET /v1/jobs/7?x=1&tag=a+b%21 HTTP/1.1\r\nHost: localhost\r\nX-Thing: 3\r\n\r\n",
+        )
+        .unwrap()
+        .unwrap();
+        assert_eq!(req.method, "GET");
+        assert_eq!(req.path, "/v1/jobs/7");
+        assert_eq!(req.query_value("tag"), Some("a b!"));
+        assert!(req.query_flag("x"));
+        assert!(!req.query_flag("missing"));
+        assert_eq!(req.header("x-thing"), Some("3"));
+        assert_eq!(req.header("X-THING"), Some("3"));
+        assert!(req.keep_alive, "HTTP/1.1 defaults to keep-alive");
+        assert!(req.body.is_empty());
+    }
+
+    #[test]
+    fn parses_a_post_body_by_content_length() {
+        let req = parse(
+            "POST /v1/jobs HTTP/1.1\r\nContent-Length: 11\r\n\r\n{\"a\": 1}ZZZextra-garbage",
+        )
+        .unwrap()
+        .unwrap();
+        assert_eq!(req.body, b"{\"a\": 1}ZZZ");
+    }
+
+    #[test]
+    fn connection_close_and_http10_disable_keep_alive() {
+        let req =
+            parse("GET / HTTP/1.1\r\nConnection: close\r\n\r\n").unwrap().unwrap();
+        assert!(!req.keep_alive);
+        let req = parse("GET / HTTP/1.0\r\n\r\n").unwrap().unwrap();
+        assert!(!req.keep_alive);
+        let req = parse("GET / HTTP/1.0\r\nConnection: keep-alive\r\n\r\n").unwrap().unwrap();
+        assert!(req.keep_alive);
+    }
+
+    #[test]
+    fn eof_before_any_byte_is_a_clean_close() {
+        assert!(parse("").unwrap().is_none());
+    }
+
+    #[test]
+    fn malformed_inputs_map_to_4xx() {
+        for (input, status) in [
+            ("GARBAGE\r\n\r\n", 400),
+            ("GET /\r\n\r\n", 400), // missing version
+            ("GET / HTTP/2\r\n\r\n", 505),
+            ("GET / HTTP/1.1\r\nNoColonHere\r\n\r\n", 400),
+            ("GET / HTTP/1.1\r\nContent-Length: nope\r\n\r\n", 400),
+            ("GET http://evil/ HTTP/1.1\r\n\r\n", 400),
+            ("GET /%zz HTTP/1.1\r\n\r\n", 400),
+            ("POST / HTTP/1.1\r\nTransfer-Encoding: chunked\r\n\r\n", 501),
+            ("POST / HTTP/1.1\r\nContent-Length: 10\r\n\r\nshort", 400),
+        ] {
+            let err = parse(input).expect_err(input);
+            assert_eq!(err.status, status, "`{input}`: {}", err.message);
+        }
+    }
+
+    #[test]
+    fn oversized_head_and_body_are_refused() {
+        let limits = Limits { max_head_bytes: 64, max_body_bytes: 16 };
+        let big_head = format!("GET / HTTP/1.1\r\nX-Pad: {}\r\n\r\n", "a".repeat(100));
+        assert_eq!(parse_limited(&big_head, &limits).unwrap_err().status, 431);
+        let big_body = format!("POST / HTTP/1.1\r\nContent-Length: 100\r\n\r\n{}", "b".repeat(100));
+        let err = parse_limited(&big_body, &limits).unwrap_err();
+        assert_eq!(err.status, 413);
+        assert!(err.message.contains("16-byte limit"), "{}", err.message);
+        // At the limit is fine.
+        let ok_body = format!("POST / HTTP/1.1\r\nContent-Length: 16\r\n\r\n{}", "b".repeat(16));
+        assert!(parse_limited(&ok_body, &limits).is_ok());
+    }
+
+    #[test]
+    fn keep_alive_requests_parse_back_to_back() {
+        let input = "GET /a HTTP/1.1\r\n\r\nPOST /b HTTP/1.1\r\nContent-Length: 2\r\n\r\nhiGET /c HTTP/1.1\r\n\r\n";
+        let mut reader = BufReader::new(input.as_bytes());
+        let limits = Limits::default();
+        let a = read_request(&mut reader, &limits, &never).unwrap().unwrap();
+        let b = read_request(&mut reader, &limits, &never).unwrap().unwrap();
+        let c = read_request(&mut reader, &limits, &never).unwrap().unwrap();
+        assert_eq!((a.path.as_str(), b.path.as_str(), c.path.as_str()), ("/a", "/b", "/c"));
+        assert_eq!(b.body, b"hi");
+        assert!(read_request(&mut reader, &limits, &never).unwrap().is_none());
+    }
+}

@@ -1,0 +1,275 @@
+//! Request routing and endpoint handlers.
+//!
+//! | method | path                   | purpose                                   |
+//! |--------|------------------------|-------------------------------------------|
+//! | POST   | `/v1/jobs`             | submit one JSON job spec → job id (`202`) |
+//! | GET    | `/v1/jobs/{id}`        | status/result JSON (`?x=1` adds the iterate) |
+//! | GET    | `/v1/jobs/{id}/events` | SSE lifecycle stream                      |
+//! | DELETE | `/v1/jobs/{id}`        | cooperative cancellation                  |
+//! | GET    | `/v1/registry`         | registered problems/solvers               |
+//! | GET    | `/healthz`             | liveness                                  |
+//! | GET    | `/metrics`             | Prometheus text format                    |
+//!
+//! The POST body is exactly one [`crate::serve::jobfile`] job object
+//! (the same grammar as a JSONL line). Submission never blocks a
+//! connection thread: a full queue maps the scheduler's typed
+//! [`QueueFull`] refusal to `429 Too Many Requests` with a
+//! `Retry-After` header.
+
+use super::sse::Subscription;
+use super::ServerState;
+use crate::http::parser::Request;
+use crate::serve::jobfile::{esc, num, outcome_fields, parse_job_line};
+use crate::serve::scheduler::{JobProblem, JobStatus};
+use std::io::Write;
+use std::sync::atomic::Ordering;
+
+/// A buffered response (everything except SSE, which streams).
+#[derive(Debug)]
+pub struct Response {
+    pub status: u16,
+    pub content_type: &'static str,
+    pub body: Vec<u8>,
+    /// Extra headers, e.g. `Retry-After`.
+    pub headers: Vec<(String, String)>,
+}
+
+impl Response {
+    pub fn json(status: u16, body: String) -> Self {
+        Self { status, content_type: "application/json", body: body.into_bytes(), headers: Vec::new() }
+    }
+
+    pub fn text(status: u16, body: String) -> Self {
+        Self {
+            status,
+            content_type: "text/plain; version=0.0.4; charset=utf-8",
+            body: body.into_bytes(),
+            headers: Vec::new(),
+        }
+    }
+
+    pub fn error(status: u16, message: &str) -> Self {
+        Self::json(status, format!("{{\"error\":\"{}\"}}", esc(message)))
+    }
+
+    pub fn with_header(mut self, name: &str, value: String) -> Self {
+        self.headers.push((name.to_string(), value));
+        self
+    }
+
+    /// Serialize head + body; `keep_alive` picks the `Connection` header.
+    pub fn write_to(&self, w: &mut impl Write, keep_alive: bool) -> std::io::Result<()> {
+        let mut head = format!(
+            "HTTP/1.1 {} {}\r\nContent-Type: {}\r\nContent-Length: {}\r\nConnection: {}\r\n",
+            self.status,
+            reason(self.status),
+            self.content_type,
+            self.body.len(),
+            if keep_alive { "keep-alive" } else { "close" },
+        );
+        for (name, value) in &self.headers {
+            head.push_str(&format!("{name}: {value}\r\n"));
+        }
+        head.push_str("\r\n");
+        w.write_all(head.as_bytes())?;
+        w.write_all(&self.body)?;
+        w.flush()
+    }
+}
+
+/// Reason phrases for every status this server emits.
+pub fn reason(status: u16) -> &'static str {
+    match status {
+        200 => "OK",
+        202 => "Accepted",
+        400 => "Bad Request",
+        404 => "Not Found",
+        405 => "Method Not Allowed",
+        408 => "Request Timeout",
+        413 => "Payload Too Large",
+        429 => "Too Many Requests",
+        431 => "Request Header Fields Too Large",
+        500 => "Internal Server Error",
+        501 => "Not Implemented",
+        505 => "HTTP Version Not Supported",
+        _ => "Response",
+    }
+}
+
+/// Router outcome: a buffered response, or an SSE stream the connection
+/// loop takes over.
+pub enum Routed {
+    Response(Response),
+    /// `(job id, subscription)` — serve as `text/event-stream`.
+    EventStream(u64, Subscription),
+}
+
+/// Dispatch one request (also bumps the per-endpoint counters).
+pub fn route(state: &ServerState, req: &Request) -> Routed {
+    let m = &state.http_metrics;
+    let segments: Vec<&str> = req.path.split('/').filter(|s| !s.is_empty()).collect();
+    let respond = |r: Response| Routed::Response(r);
+    match (req.method.as_str(), segments.as_slice()) {
+        ("GET", ["healthz"]) => {
+            m.healthz.fetch_add(1, Ordering::Relaxed);
+            respond(Response::json(200, "{\"status\":\"ok\"}".to_string()))
+        }
+        ("GET", ["metrics"]) => {
+            m.metrics.fetch_add(1, Ordering::Relaxed);
+            respond(Response::text(200, state.render_metrics()))
+        }
+        ("GET", ["v1", "registry"]) => {
+            m.get_registry.fetch_add(1, Ordering::Relaxed);
+            respond(Response::json(200, registry_json(state)))
+        }
+        ("POST", ["v1", "jobs"]) => {
+            m.post_jobs.fetch_add(1, Ordering::Relaxed);
+            respond(submit(state, req))
+        }
+        ("GET", ["v1", "jobs", id]) => {
+            m.get_job.fetch_add(1, Ordering::Relaxed);
+            respond(match parse_id(*id) {
+                Err(r) => r,
+                Ok(id) => match state.scheduler.status(id) {
+                    Some(status) => Response::json(200, status_json(&status, req.query_flag("x"))),
+                    None => Response::error(404, &format!("no such job {id} (never submitted, or pruned)")),
+                },
+            })
+        }
+        ("DELETE", ["v1", "jobs", id]) => {
+            m.delete_job.fetch_add(1, Ordering::Relaxed);
+            respond(match parse_id(*id) {
+                Err(r) => r,
+                Ok(id) => {
+                    if state.scheduler.cancel(id) {
+                        Response::json(200, format!("{{\"job\":{id},\"cancel\":\"requested\"}}"))
+                    } else {
+                        Response::error(404, &format!("no such job {id}"))
+                    }
+                }
+            })
+        }
+        ("GET", ["v1", "jobs", id, "events"]) => {
+            m.get_events.fetch_add(1, Ordering::Relaxed);
+            match parse_id(*id) {
+                Err(r) => respond(r),
+                Ok(id) => match state.hub.subscribe(id) {
+                    Some(sub) => Routed::EventStream(id, sub),
+                    None => respond(Response::error(
+                        404,
+                        &format!("no event stream for job {id} (never submitted, or pruned)"),
+                    )),
+                },
+            }
+        }
+        // Known paths with the wrong method get a 405 + Allow.
+        (_, ["healthz"] | ["metrics"] | ["v1", "registry"]) => {
+            respond(method_not_allowed("GET"))
+        }
+        (_, ["v1", "jobs"]) => respond(method_not_allowed("POST")),
+        (_, ["v1", "jobs", _]) => respond(method_not_allowed("GET, DELETE")),
+        (_, ["v1", "jobs", _, "events"]) => respond(method_not_allowed("GET")),
+        _ => {
+            m.not_found.fetch_add(1, Ordering::Relaxed);
+            respond(Response::error(404, &format!("no route for {} {}", req.method, req.path)))
+        }
+    }
+}
+
+fn method_not_allowed(allow: &str) -> Response {
+    Response::error(405, &format!("method not allowed (allow: {allow})"))
+        .with_header("Allow", allow.to_string())
+}
+
+fn parse_id(raw: &str) -> Result<u64, Response> {
+    raw.parse::<u64>()
+        .map_err(|_| Response::error(400, &format!("job id must be an integer, got `{raw}`")))
+}
+
+/// `POST /v1/jobs`: parse, validate names eagerly (typo suggestions
+/// belong in the 400 body, not in a failed job), then try-submit.
+fn submit(state: &ServerState, req: &Request) -> Response {
+    let text = match std::str::from_utf8(&req.body) {
+        Ok(t) => t,
+        Err(_) => return Response::error(400, "request body must be UTF-8 JSON"),
+    };
+    if text.trim().is_empty() {
+        return Response::error(400, "empty body: send one JSON job object, e.g. {\"problem\":\"lasso\",\"algo\":\"fpa\"}");
+    }
+    let job = match parse_job_line(text.trim()) {
+        Ok(j) => j,
+        Err(e) => return Response::error(400, &format!("{e:#}")),
+    };
+    let registry = state.scheduler.registry();
+    if let JobProblem::Spec(spec) = &job.problem {
+        if let Err(e) = registry.resolve_problem_name(&spec.kind) {
+            return Response::error(400, &format!("{e:#}"));
+        }
+    }
+    // A dry-run build catches unknown solver names and bad parameters
+    // now, with the registry's suggestion, instead of a failed job later.
+    if let Err(e) = registry.build_solver(&job.solver) {
+        return Response::error(400, &format!("{e:#}"));
+    }
+    match state.scheduler.try_submit(job) {
+        Ok(handle) => {
+            let id = handle.id();
+            Response::json(
+                202,
+                format!(
+                    "{{\"job\":{id},\"status_url\":\"/v1/jobs/{id}\",\"events_url\":\"/v1/jobs/{id}/events\"}}"
+                ),
+            )
+        }
+        Err(full) => Response::error(429, &full.to_string())
+            .with_header("Retry-After", state.config.retry_after_secs.to_string()),
+    }
+}
+
+/// One job's status as JSON (outcome fields once terminal; the final
+/// iterate on request — floats render in shortest round-trip form, so a
+/// client recovers bit-identical values).
+pub fn status_json(status: &JobStatus, include_x: bool) -> String {
+    let mut s = format!(
+        "{{\"job\":{},\"tag\":\"{}\",\"problem\":\"{}\",\"solver\":\"{}\",\"state\":\"{}\"",
+        status.job,
+        esc(&status.tag),
+        esc(&status.problem),
+        esc(&status.solver),
+        status.state.label(),
+    );
+    if let Some(outcome) = &status.outcome {
+        s.push(',');
+        s.push_str(&outcome_fields(outcome));
+    }
+    if include_x {
+        if let Some(x) = &status.x {
+            s.push_str(",\"x\":[");
+            for (i, v) in x.iter().enumerate() {
+                if i > 0 {
+                    s.push(',');
+                }
+                s.push_str(&num(*v));
+            }
+            s.push(']');
+        }
+    }
+    s.push('}');
+    s
+}
+
+fn registry_json(state: &ServerState) -> String {
+    let registry = state.scheduler.registry();
+    let render = |entries: Vec<(String, String)>| -> String {
+        let items: Vec<String> = entries
+            .iter()
+            .map(|(name, about)| format!("{{\"name\":\"{}\",\"about\":\"{}\"}}", esc(name), esc(about)))
+            .collect();
+        format!("[{}]", items.join(","))
+    };
+    format!(
+        "{{\"problems\":{},\"solvers\":{}}}",
+        render(registry.problem_entries()),
+        render(registry.solver_entries())
+    )
+}

@@ -1,0 +1,356 @@
+//! Bridging the scheduler's [`JobEvent`] lifecycle to
+//! `text/event-stream` (Server-Sent Events).
+//!
+//! The [`EventHub`] is a [`ServeObserver`] installed on the scheduler at
+//! server start. It keeps a bounded per-job event log (so a client that
+//! connects *after* events fired still sees the full
+//! `Queued → Started → Iteration* → Finished` lifecycle replayed) and
+//! fans live events out to any number of subscribers over `mpsc`
+//! channels. Log append, subscriber registration and the backlog
+//! snapshot all happen under one lock, so a subscriber never misses or
+//! double-sees an event across the replay/live boundary.
+//!
+//! Retention is bounded on three axes: the replay log keeps the *first*
+//! `iteration_retention` `Iteration` events per job (lifecycle events
+//! are always kept; live subscribers still receive every iteration as
+//! it happens), the logs of at most `finished_retention` finished jobs
+//! stick around for late subscribers, and each live subscriber buffers
+//! at most [`SUBSCRIBER_BUFFER`] undelivered events (a stalled client
+//! loses the overflow, never the server's memory).
+
+use crate::serve::{event_json, JobEvent, ServeObserver};
+use std::collections::{HashMap, VecDeque};
+use std::io::Write;
+use std::sync::mpsc;
+use std::sync::{Arc, Mutex};
+use std::time::Duration;
+
+/// Live events buffered per subscriber before the stream writer drains
+/// them. A stalled client loses events beyond this (the stream still
+/// terminates: the channel disconnects at job end) instead of buffering
+/// an unbounded solver iteration stream in server memory.
+pub const SUBSCRIBER_BUFFER: usize = 4096;
+
+struct JobLog {
+    events: Vec<JobEvent>,
+    /// Iteration events beyond the retention cap (omitted from replay).
+    dropped_iterations: usize,
+    iterations_kept: usize,
+    finished: bool,
+    subscribers: Vec<mpsc::SyncSender<JobEvent>>,
+}
+
+struct HubInner {
+    jobs: HashMap<u64, JobLog>,
+    finished_order: VecDeque<u64>,
+}
+
+/// See module docs.
+pub struct EventHub {
+    inner: Mutex<HubInner>,
+    iteration_retention: usize,
+    finished_retention: usize,
+    /// Optional downstream observer receiving every event as well (the
+    /// CLI `--stream` JSONL emitter rides here).
+    downstream: Option<Arc<dyn ServeObserver>>,
+}
+
+/// What [`EventHub::subscribe`] hands an SSE connection.
+pub struct Subscription {
+    /// Everything retained so far, in emission order.
+    pub backlog: Vec<JobEvent>,
+    /// Iteration events that were dropped from the backlog.
+    pub dropped: usize,
+    /// Whether the job already finished (the backlog then ends with the
+    /// terminal event and `live` will never fire).
+    pub finished: bool,
+    /// Live events from here on.
+    pub live: mpsc::Receiver<JobEvent>,
+}
+
+impl EventHub {
+    pub fn new(iteration_retention: usize, finished_retention: usize) -> Arc<Self> {
+        Arc::new(Self {
+            inner: Mutex::new(HubInner { jobs: HashMap::new(), finished_order: VecDeque::new() }),
+            iteration_retention: iteration_retention.max(1),
+            finished_retention: finished_retention.max(1),
+            downstream: None,
+        })
+    }
+
+    /// A hub that also forwards every event to `downstream`.
+    pub fn with_downstream(
+        iteration_retention: usize,
+        finished_retention: usize,
+        downstream: Arc<dyn ServeObserver>,
+    ) -> Arc<Self> {
+        Arc::new(Self {
+            inner: Mutex::new(HubInner { jobs: HashMap::new(), finished_order: VecDeque::new() }),
+            iteration_retention: iteration_retention.max(1),
+            finished_retention: finished_retention.max(1),
+            downstream: Some(downstream),
+        })
+    }
+
+    /// Subscribe to one job's stream. `None` when the hub never saw the
+    /// job (unknown id, or its log was pruned past the retention caps).
+    pub fn subscribe(&self, job: u64) -> Option<Subscription> {
+        let mut inner = self.inner.lock().unwrap();
+        let log = inner.jobs.get_mut(&job)?;
+        let (tx, rx) = mpsc::sync_channel(SUBSCRIBER_BUFFER);
+        if !log.finished {
+            log.subscribers.push(tx);
+        }
+        // tx of a finished job is dropped here: `live` reports
+        // disconnected immediately, which is exactly right.
+        Some(Subscription {
+            backlog: log.events.clone(),
+            dropped: log.dropped_iterations,
+            finished: log.finished,
+            live: rx,
+        })
+    }
+
+    /// Jobs currently tracked (tests/metrics).
+    pub fn tracked_jobs(&self) -> usize {
+        self.inner.lock().unwrap().jobs.len()
+    }
+}
+
+impl ServeObserver for EventHub {
+    fn on_job_event(&self, event: &JobEvent) {
+        if let Some(d) = &self.downstream {
+            d.on_job_event(event);
+        }
+        let mut inner = self.inner.lock().unwrap();
+        let HubInner { jobs, finished_order } = &mut *inner;
+        let log = jobs.entry(event.job()).or_insert_with(|| JobLog {
+            events: Vec::new(),
+            dropped_iterations: 0,
+            iterations_kept: 0,
+            finished: false,
+            subscribers: Vec::new(),
+        });
+        // Live subscribers get everything their buffer can hold; only a
+        // gone subscriber is dropped (a full buffer loses the event but
+        // keeps the stream, which still terminates via disconnect).
+        log.subscribers.retain(|tx| {
+            !matches!(tx.try_send(event.clone()), Err(mpsc::TrySendError::Disconnected(_)))
+        });
+        match event {
+            JobEvent::Iteration { .. } if log.iterations_kept >= self.iteration_retention => {
+                log.dropped_iterations += 1;
+            }
+            _ => {
+                if matches!(event, JobEvent::Iteration { .. }) {
+                    log.iterations_kept += 1;
+                }
+                log.events.push(event.clone());
+            }
+        }
+        if matches!(event, JobEvent::Finished { .. }) {
+            log.finished = true;
+            // Dropping the senders lets streaming subscribers observe
+            // the end of the channel after draining it.
+            log.subscribers.clear();
+            finished_order.push_back(event.job());
+            while finished_order.len() > self.finished_retention {
+                let victim = finished_order.pop_front().expect("len > retention >= 1");
+                jobs.remove(&victim);
+            }
+        }
+    }
+}
+
+/// SSE event name for one job event.
+pub fn event_name(event: &JobEvent) -> &'static str {
+    match event {
+        JobEvent::Queued { .. } => "queued",
+        JobEvent::Started { .. } => "started",
+        JobEvent::CacheProbe { .. } => "cache",
+        JobEvent::Iteration { .. } => "iteration",
+        JobEvent::Finished { .. } => "finished",
+    }
+}
+
+fn write_event(w: &mut impl Write, seq: usize, event: &JobEvent) -> std::io::Result<()> {
+    write!(w, "event: {}\nid: {}\ndata: {}\n\n", event_name(event), seq, event_json(event))
+}
+
+/// Serve one subscription as a `text/event-stream` body (the response
+/// head is the caller's job). Returns when the terminal event has been
+/// written, the client goes away, or `abort()` fires.
+pub fn stream_events(
+    w: &mut impl Write,
+    sub: Subscription,
+    abort: &dyn Fn() -> bool,
+) -> std::io::Result<()> {
+    let mut seq = 0usize;
+    if sub.dropped > 0 {
+        // Retention keeps the FIRST N iteration events; later ones were
+        // omitted from the replay log (live subscribers saw them all).
+        write!(w, ": replay truncated: {} later iteration events omitted\n\n", sub.dropped)?;
+    }
+    for event in &sub.backlog {
+        write_event(w, seq, event)?;
+        seq += 1;
+        if matches!(event, JobEvent::Finished { .. }) {
+            return w.flush();
+        }
+    }
+    w.flush()?;
+    if sub.finished {
+        return Ok(());
+    }
+    loop {
+        match sub.live.recv_timeout(Duration::from_millis(200)) {
+            Ok(event) => {
+                write_event(w, seq, &event)?;
+                seq += 1;
+                if matches!(event, JobEvent::Finished { .. }) {
+                    return w.flush();
+                }
+                w.flush()?;
+                // Poll the shutdown flag here too: a fast iteration
+                // stream never hits the timeout arm, and graceful
+                // shutdown must not wait for the job to finish.
+                if abort() {
+                    write!(w, ": server shutting down\n\n")?;
+                    return w.flush();
+                }
+            }
+            Err(mpsc::RecvTimeoutError::Timeout) => {
+                if abort() {
+                    write!(w, ": server shutting down\n\n")?;
+                    return w.flush();
+                }
+                // Heartbeat comment keeps intermediaries from timing out
+                // and detects a gone client between solver iterations.
+                write!(w, ": heartbeat\n\n")?;
+                w.flush()?;
+            }
+            Err(mpsc::RecvTimeoutError::Disconnected) => return w.flush(),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::api::IterEvent;
+    use crate::serve::JobOutcome;
+
+    fn iter_event(job: u64, iter: usize) -> JobEvent {
+        JobEvent::Iteration {
+            job,
+            event: IterEvent {
+                iter,
+                gamma: 0.9,
+                tau: 1.0,
+                updated_blocks: 1,
+                objective: 1.0,
+                rel_err: 0.5,
+                time_s: 0.0,
+                sim_time_s: 0.0,
+            },
+        }
+    }
+
+    fn finished(job: u64) -> JobEvent {
+        JobEvent::Finished {
+            job,
+            outcome: JobOutcome::Done {
+                converged: true,
+                objective: 1.0,
+                iterations: 1,
+                warm_started: false,
+            },
+        }
+    }
+
+    #[test]
+    fn late_subscriber_replays_the_full_lifecycle() {
+        let hub = EventHub::new(100, 10);
+        hub.on_job_event(&JobEvent::Queued { job: 1, tag: "t".into() });
+        hub.on_job_event(&JobEvent::Started { job: 1, worker: 0 });
+        hub.on_job_event(&iter_event(1, 0));
+        hub.on_job_event(&finished(1));
+        let sub = hub.subscribe(1).expect("job tracked");
+        assert!(sub.finished);
+        assert_eq!(sub.backlog.len(), 4);
+        assert!(matches!(sub.backlog[0], JobEvent::Queued { .. }));
+        assert!(matches!(sub.backlog[3], JobEvent::Finished { .. }));
+        assert!(hub.subscribe(99).is_none());
+    }
+
+    #[test]
+    fn live_subscriber_sees_events_after_the_snapshot() {
+        let hub = EventHub::new(100, 10);
+        hub.on_job_event(&JobEvent::Queued { job: 2, tag: String::new() });
+        let sub = hub.subscribe(2).unwrap();
+        assert_eq!(sub.backlog.len(), 1);
+        assert!(!sub.finished);
+        hub.on_job_event(&JobEvent::Started { job: 2, worker: 1 });
+        hub.on_job_event(&finished(2));
+        let live: Vec<JobEvent> = sub.live.try_iter().collect();
+        assert_eq!(live.len(), 2);
+        assert!(matches!(live[1], JobEvent::Finished { .. }));
+        // The channel is closed after the terminal event.
+        assert!(sub.live.try_recv().is_err());
+    }
+
+    #[test]
+    fn iteration_retention_caps_the_replay_log_not_the_live_stream() {
+        let hub = EventHub::new(3, 10);
+        hub.on_job_event(&JobEvent::Queued { job: 3, tag: String::new() });
+        let live_sub = hub.subscribe(3).unwrap();
+        for i in 0..10 {
+            hub.on_job_event(&iter_event(3, i));
+        }
+        hub.on_job_event(&finished(3));
+        let late = hub.subscribe(3).unwrap();
+        assert_eq!(late.dropped, 7);
+        let kept: usize =
+            late.backlog.iter().filter(|e| matches!(e, JobEvent::Iteration { .. })).count();
+        assert_eq!(kept, 3);
+        assert!(matches!(late.backlog.last(), Some(JobEvent::Finished { .. })));
+        // The live subscriber got all ten.
+        let live: Vec<JobEvent> = live_sub.live.try_iter().collect();
+        let live_iters = live.iter().filter(|e| matches!(e, JobEvent::Iteration { .. })).count();
+        assert_eq!(live_iters, 10);
+    }
+
+    #[test]
+    fn finished_retention_prunes_oldest_job_logs() {
+        let hub = EventHub::new(10, 2);
+        for job in 1..=4u64 {
+            hub.on_job_event(&JobEvent::Queued { job, tag: String::new() });
+            hub.on_job_event(&finished(job));
+        }
+        assert!(hub.subscribe(1).is_none(), "oldest finished log pruned");
+        assert!(hub.subscribe(2).is_none());
+        assert!(hub.subscribe(3).is_some());
+        assert!(hub.subscribe(4).is_some());
+        assert_eq!(hub.tracked_jobs(), 2);
+    }
+
+    #[test]
+    fn stream_renders_sse_frames_and_stops_at_finished() {
+        let hub = EventHub::new(10, 10);
+        hub.on_job_event(&JobEvent::Queued { job: 5, tag: "s".into() });
+        hub.on_job_event(&JobEvent::Started { job: 5, worker: 0 });
+        hub.on_job_event(&iter_event(5, 0));
+        hub.on_job_event(&finished(5));
+        let sub = hub.subscribe(5).unwrap();
+        let mut out = Vec::new();
+        stream_events(&mut out, sub, &|| false).unwrap();
+        let text = String::from_utf8(out).unwrap();
+        for frame in ["event: queued", "event: started", "event: iteration", "event: finished"] {
+            assert!(text.contains(frame), "missing `{frame}` in:\n{text}");
+        }
+        assert!(text.contains("data: {\"event\":\"finished\""));
+        // Frames are id-sequenced and blank-line separated.
+        assert!(text.contains("id: 0\n"));
+        assert!(text.contains("\n\n"));
+    }
+}

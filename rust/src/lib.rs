@@ -53,6 +53,9 @@
 //! For many solves at once — concurrent scheduling, per-job deadlines and
 //! cancellation, and warm-starting repeated/λ-swept problems from a
 //! content-addressed cache — see [`serve`] (CLI front-end: `flexa serve`).
+//! The [`http`] layer exposes that scheduler as a network service
+//! (`flexa serve --http ADDR`): job submission, status, SSE event
+//! streams, cancellation and Prometheus metrics over plain HTTP/1.1.
 
 pub mod algos;
 pub mod api;
@@ -61,6 +64,7 @@ pub mod cli;
 pub mod config;
 pub mod coordinator;
 pub mod datagen;
+pub mod http;
 pub mod linalg;
 pub mod metrics;
 pub mod prng;

@@ -181,12 +181,14 @@ fn cmd_solve(args: &[String]) -> anyhow::Result<()> {
     Ok(())
 }
 
-/// Run a JSONL job file through `flexa::serve`: concurrent workers,
-/// per-job deadlines/cancellation, warm-start cache, JSON-line output.
+/// Run a JSONL job file through `flexa::serve` (concurrent workers,
+/// per-job deadlines/cancellation, warm-start cache, JSON-line output),
+/// or — with `--http ADDR` — serve the scheduler as a network service
+/// (`flexa::http`: job submission, status, SSE streams, metrics).
 fn cmd_serve(args: &[String]) -> anyhow::Result<()> {
     use flexa::serve::{
-        event_json, parse_jobs, result_json, stats_json, FnServeObserver, JobOutcome, Scheduler,
-        ServeConfig, ServeObserver,
+        event_json, parse_jobs, result_json, stats_json, CacheStats, FnServeObserver, JobResult,
+        JobSpec, Scheduler, ServeConfig, ServeObserver,
     };
     use std::sync::Arc;
 
@@ -194,25 +196,39 @@ fn cmd_serve(args: &[String]) -> anyhow::Result<()> {
         .opt("workers", Some("4"), "worker threads")
         .opt("queue", Some("64"), "bounded queue capacity")
         .opt("cache-mb", Some("64"), "warm-start cache budget in MiB (0 disables)")
+        .opt("http", None, "serve over HTTP on this address (e.g. 127.0.0.1:8080; port 0 picks one); the jobs file becomes optional pre-submitted work")
+        .opt("max-conns", Some("64"), "concurrent HTTP connections (with --http)")
+        .opt("max-body-kb", Some("1024"), "largest accepted HTTP request body, KiB (with --http)")
         .flag("stream", "emit every job lifecycle event as a JSON line")
         .flag("quiet", "suppress the stderr summary");
     let p = cmd.parse(args)?;
-    let path = p
-        .positionals()
-        .first()
-        .ok_or_else(|| anyhow::anyhow!("usage: flexa serve <jobs.jsonl | -> [options]"))?;
-
-    let text = if path == "-" {
-        use std::io::Read;
-        let mut buf = String::new();
-        std::io::stdin().read_to_string(&mut buf)?;
-        buf
-    } else {
-        std::fs::read_to_string(path)
-            .map_err(|e| anyhow::anyhow!("cannot read jobs file `{path}`: {e}"))?
+    let http_addr = p.get("http").map(str::to_string);
+    let path = match p.positionals().first() {
+        Some(path) => Some(path.clone()),
+        None if http_addr.is_some() => None,
+        None => anyhow::bail!("usage: flexa serve <jobs.jsonl | -> [options], or flexa serve --http ADDR"),
     };
-    let jobs = parse_jobs(&text)?;
-    anyhow::ensure!(!jobs.is_empty(), "no jobs in `{path}` (blank lines and # comments are skipped)");
+
+    let jobs: Vec<JobSpec> = match &path {
+        None => Vec::new(),
+        Some(path) => {
+            let text = if path == "-" {
+                use std::io::Read;
+                let mut buf = String::new();
+                std::io::stdin().read_to_string(&mut buf)?;
+                buf
+            } else {
+                std::fs::read_to_string(path)
+                    .map_err(|e| anyhow::anyhow!("cannot read jobs file `{path}`: {e}"))?
+            };
+            let jobs = parse_jobs(&text)?;
+            anyhow::ensure!(
+                !jobs.is_empty() || http_addr.is_some(),
+                "no jobs in `{path}` (blank lines and # comments are skipped)"
+            );
+            jobs
+        }
+    };
 
     let config = ServeConfig::default()
         .with_workers(p.usize("workers")?)
@@ -225,19 +241,56 @@ fn cmd_serve(args: &[String]) -> anyhow::Result<()> {
     } else {
         None
     };
-    let scheduler = Scheduler::start_with(config, observer, flexa::api::Registry::with_defaults());
+
+    let http_mode = http_addr.is_some();
     let count = jobs.len();
-    for job in jobs {
-        scheduler.submit(job);
-    }
-    let (results, stats) = scheduler.join_with_stats();
+    let (results, stats): (Vec<JobResult>, CacheStats) = match http_addr {
+        Some(addr) => {
+            let http_config = flexa::http::HttpConfig {
+                max_connections: p.usize("max-conns")?.max(1),
+                max_body_bytes: p.usize("max-body-kb")?.saturating_mul(1 << 10).max(1 << 10),
+                ..flexa::http::HttpConfig::default()
+            };
+            let server = flexa::http::HttpServer::bind_with_downstream(
+                &addr,
+                http_config,
+                config,
+                flexa::api::Registry::with_defaults(),
+                observer,
+            )?;
+            flexa::http::install_shutdown_signals();
+            // Machine-parseable first line: CI greps the bound port out.
+            println!("flexa http: listening on http://{}", server.local_addr());
+            if !p.flag("quiet") {
+                eprintln!(
+                    "endpoints: POST /v1/jobs | GET /v1/jobs/{{id}}[/events] | DELETE /v1/jobs/{{id}} | GET /v1/registry | /healthz | /metrics"
+                );
+                eprintln!("stop with ctrl-c (queued jobs drain before exit)");
+            }
+            for job in jobs {
+                server.scheduler().submit(job);
+            }
+            server.run()?
+        }
+        None => {
+            let scheduler =
+                Scheduler::start_with(config, observer, flexa::api::Registry::with_defaults());
+            for job in jobs {
+                scheduler.submit(job);
+            }
+            scheduler.join_with_stats()
+        }
+    };
     for r in &results {
         println!("{}", result_json(r));
     }
     if !p.flag("quiet") {
+        use flexa::serve::JobOutcome;
         eprintln!(
             "{} jobs: {} done, {} failed, {} cancelled, {} deadline-expired",
-            count,
+            // Over HTTP, jobs arrive beyond the pre-submitted file:
+            // count what actually ran.
+            if http_mode { results.len() } else { count },
             results.iter().filter(|r| r.outcome.is_done()).count(),
             results.iter().filter(|r| matches!(r.outcome, JobOutcome::Failed { .. })).count(),
             results.iter().filter(|r| matches!(r.outcome, JobOutcome::Cancelled { .. })).count(),
@@ -436,6 +489,16 @@ mod tests {
         let args = args_of(&[path.to_str().unwrap(), "--workers", "2", "--quiet", "--stream"]);
         cmd_serve(&args).unwrap();
         std::fs::remove_file(&path).ok();
+    }
+
+    /// `--http` validates the bind address up front; without it a jobs
+    /// file is still required.
+    #[test]
+    fn serve_http_rejects_bad_address_and_missing_file() {
+        let err = cmd_serve(&args_of(&["--http", "not-an-address"])).unwrap_err().to_string();
+        assert!(err.contains("cannot bind"), "{err}");
+        let err = cmd_serve(&[]).unwrap_err().to_string();
+        assert!(err.contains("usage:"), "{err}");
     }
 
     #[test]

@@ -247,6 +247,23 @@ mod tests {
         assert_eq!(fingerprint(&p1), fingerprint(&p2));
     }
 
+    /// The spec-level `lambda` override reweights the regularizer on the
+    /// same generated data, so the (G-excluding) fingerprint is shared —
+    /// the property that lets JSONL/HTTP λ-sweeps warm-start.
+    #[test]
+    fn fingerprint_shared_across_spec_lambda_sweep() {
+        let r = crate::api::Registry::with_defaults();
+        let spec = crate::api::ProblemSpec::lasso(15, 40).with_seed(11);
+        let k0 = fingerprint(&r.build_problem(&spec).unwrap());
+        let k1 = fingerprint(&r.build_problem(&spec.clone().with_lambda(0.5)).unwrap());
+        let k2 = fingerprint(&r.build_problem(&spec.clone().with_lambda(0.1)).unwrap());
+        assert_eq!(k0, k1);
+        assert_eq!(k0, k2);
+        // Sweeping the generator's own weight regenerates the data.
+        let k3 = fingerprint(&r.build_problem(&spec.with_c(0.5)).unwrap());
+        assert_ne!(k0, k3);
+    }
+
     #[test]
     fn fingerprint_distinguishes_layouts() {
         let inst = NesterovLasso::new(15, 40, 0.1, 1.0).seed(10).generate();

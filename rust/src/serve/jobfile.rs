@@ -14,6 +14,7 @@
 //! | `problem`      | string | registry problem kind (default `lasso`)     |
 //! | `rows`, `cols` | int    | instance dimensions                         |
 //! | `sparsity`, `c`, `label_noise` | number | generator knobs             |
+//! | `lambda`       | number | regularizer reweight on the *same* generated data (λ-sweeps; drops the planted `V*`) |
 //! | `block_size`   | int    | variables per block                         |
 //! | `seed`         | int    | instance seed                               |
 //! | `algo`         | string | solver grammar (`fpa`, `fpa-rho-0.5`, …)    |
@@ -304,7 +305,7 @@ fn as_text<'a>(v: &'a Json, key: &str) -> Result<&'a str> {
     v.as_str().ok_or_else(|| anyhow!("job key `{key}` must be a string"))
 }
 
-const KNOWN_KEYS: &str = "problem, rows, cols, sparsity, c, block_size, seed, label_noise, \
+const KNOWN_KEYS: &str = "problem, rows, cols, sparsity, c, lambda, block_size, seed, label_noise, \
      algo, params, max_iters, max_seconds, target, record_every, procs, \
      deadline_ms, warm_start, tag";
 
@@ -335,6 +336,7 @@ pub fn parse_job_line(line: &str) -> Result<JobSpec> {
             "cols" => problem.cols = as_count(v, key)?,
             "sparsity" => problem.sparsity = as_num(v, key)?,
             "c" => problem.c = as_num(v, key)?,
+            "lambda" => problem.lambda = Some(as_num(v, key)?),
             "block_size" => problem.block_size = as_count(v, key)?,
             "seed" => problem.seed = as_count(v, key)? as u64,
             "label_noise" => problem.label_noise = as_num(v, key)?,
@@ -400,7 +402,7 @@ pub fn parse_jobs(text: &str) -> Result<Vec<JobSpec>> {
 }
 
 /// JSON string escaping (control characters, quote, backslash).
-fn esc(s: &str) -> String {
+pub(crate) fn esc(s: &str) -> String {
     let mut out = String::with_capacity(s.len() + 2);
     for c in s.chars() {
         match c {
@@ -416,8 +418,10 @@ fn esc(s: &str) -> String {
     out
 }
 
-/// Render a float as JSON (non-finite values become `null`).
-fn num(v: f64) -> String {
+/// Render a float as JSON (non-finite values become `null`). Finite
+/// values use Rust's shortest round-trip formatting, so a parse on the
+/// other end recovers the exact bits.
+pub(crate) fn num(v: f64) -> String {
     if v.is_finite() {
         format!("{v}")
     } else {
@@ -425,7 +429,7 @@ fn num(v: f64) -> String {
     }
 }
 
-fn outcome_fields(outcome: &JobOutcome) -> String {
+pub(crate) fn outcome_fields(outcome: &JobOutcome) -> String {
     match outcome {
         JobOutcome::Done { converged, objective, iterations, warm_started } => format!(
             "\"outcome\":\"done\",\"converged\":{converged},\"objective\":{},\"iterations\":{iterations},\"warm_started\":{warm_started}",
@@ -555,6 +559,15 @@ mod tests {
             job.solver.step,
             Some(crate::stepsize::StepSize::Diminishing { gamma0, .. }) if gamma0 == 0.8
         ));
+    }
+
+    #[test]
+    fn lambda_key_sets_the_reweight_override() {
+        let job = parse_job_line(r#"{"rows": 20, "cols": 60, "lambda": 0.4}"#).unwrap();
+        let JobProblem::Spec(p) = &job.problem else { panic!() };
+        assert_eq!(p.lambda, Some(0.4));
+        // Validation still applies to the override.
+        assert!(parse_job_line(r#"{"rows": 20, "cols": 60, "lambda": -1}"#).is_err());
     }
 
     #[test]

@@ -53,7 +53,9 @@
 //! ```
 //!
 //! run as `flexa serve jobs.jsonl --workers 4 --stream`, which emits the
-//! job lifecycle and per-job results as JSON lines.
+//! job lifecycle and per-job results as JSON lines. The same grammar,
+//! submitted one object per request, drives the network front-end:
+//! `flexa serve --http ADDR` (see [`crate::http`]).
 //!
 //! ## Semantics worth knowing
 //!
@@ -76,5 +78,6 @@ pub use cache::{fingerprint, CacheStats, WarmStart, WarmStartCache};
 pub use jobfile::{event_json, parse_job_line, parse_jobs, result_json, stats_json, Json};
 pub use scheduler::{
     CollectServeObserver, CustomProblemFn, FnServeObserver, JobEvent, JobHandle, JobOutcome,
-    JobProblem, JobResult, JobSpec, Scheduler, ServeConfig, ServeObserver,
+    JobProblem, JobResult, JobSpec, JobState, JobStatus, QueueFull, Scheduler, SchedulerStats,
+    ServeConfig, ServeObserver,
 };

@@ -281,11 +281,19 @@ pub struct ServeConfig {
     pub queue_capacity: usize,
     /// Warm-start cache byte budget (0 disables the cache entirely).
     pub cache_bytes: usize,
+    /// How many *finished* jobs keep their [`JobStatus`] entry (and final
+    /// iterate) queryable via [`Scheduler::status`], and how many
+    /// [`JobResult`]s [`Scheduler::join`] can return. Oldest-finished
+    /// entries beyond this are pruned, bounding both tables on a
+    /// long-running service; queued/running jobs are never pruned. Batch
+    /// runs with more jobs than this should raise it (the default keeps
+    /// 4096).
+    pub finished_retention: usize,
 }
 
 impl Default for ServeConfig {
     fn default() -> Self {
-        Self { workers: 4, queue_capacity: 64, cache_bytes: 64 << 20 }
+        Self { workers: 4, queue_capacity: 64, cache_bytes: 64 << 20, finished_retention: 4096 }
     }
 }
 
@@ -304,6 +312,92 @@ impl ServeConfig {
         self.cache_bytes = bytes;
         self
     }
+
+    pub fn with_finished_retention(mut self, jobs: usize) -> Self {
+        self.finished_retention = jobs;
+        self
+    }
+}
+
+/// [`Scheduler::try_submit`] refusal: the bounded queue is at capacity.
+/// Carries the spec back so the caller can retry, and the capacity that
+/// was hit (an HTTP front-end maps this to `429 Too Many Requests`).
+#[derive(Debug)]
+pub struct QueueFull {
+    /// The job spec, handed back intact.
+    pub spec: JobSpec,
+    /// The queue capacity that was hit.
+    pub capacity: usize,
+}
+
+impl std::fmt::Display for QueueFull {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "job queue full ({} jobs waiting); retry later", self.capacity)
+    }
+}
+
+impl std::error::Error for QueueFull {}
+
+/// Point-in-time scheduler counters (monotone counters + two gauges).
+/// Cheap to read: atomics plus one queue-lock peek for the depth.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct SchedulerStats {
+    /// Jobs accepted into the queue (monotone).
+    pub submitted: u64,
+    /// `try_submit` refusals due to a full queue (monotone).
+    pub rejected: u64,
+    /// Jobs currently waiting in the queue (gauge).
+    pub queue_depth: usize,
+    /// Jobs currently on a worker (gauge).
+    pub running: usize,
+    /// Terminal counts by outcome (monotone).
+    pub done: u64,
+    pub failed: u64,
+    pub cancelled: u64,
+    pub deadline_expired: u64,
+}
+
+impl SchedulerStats {
+    /// Total jobs that reached a terminal state.
+    pub fn finished(&self) -> u64 {
+        self.done + self.failed + self.cancelled + self.deadline_expired
+    }
+}
+
+/// Where a job is in its lifecycle.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum JobState {
+    Queued,
+    Running,
+    Finished,
+}
+
+impl JobState {
+    pub fn label(&self) -> &'static str {
+        match self {
+            JobState::Queued => "queued",
+            JobState::Running => "running",
+            JobState::Finished => "finished",
+        }
+    }
+}
+
+/// Point-in-time snapshot of one job, queryable by id while the
+/// scheduler is live ([`Scheduler::status`]) — the lookup the HTTP
+/// front-end serves as `GET /v1/jobs/{id}`.
+#[derive(Clone, Debug)]
+pub struct JobStatus {
+    pub job: u64,
+    pub tag: String,
+    /// Problem registry name (or the custom constructor's name).
+    pub problem: String,
+    /// Resolved solver display name (empty until the job ran).
+    pub solver: String,
+    pub state: JobState,
+    /// Terminal outcome once `state == Finished`.
+    pub outcome: Option<JobOutcome>,
+    /// Final iterate of a job that produced a report (shared, not copied).
+    pub x: Option<Arc<Vec<f64>>>,
 }
 
 struct QueuedJob {
@@ -318,6 +412,30 @@ struct QueueState {
     closed: bool,
 }
 
+/// Monotone counters + running gauge (see [`SchedulerStats`]).
+#[derive(Default)]
+struct Counters {
+    submitted: AtomicU64,
+    rejected: AtomicU64,
+    running: AtomicU64,
+    done: AtomicU64,
+    failed: AtomicU64,
+    cancelled: AtomicU64,
+    deadline_expired: AtomicU64,
+}
+
+struct TableEntry {
+    status: JobStatus,
+    cancel: Arc<AtomicBool>,
+}
+
+/// Per-job status lookup with bounded retention of finished entries.
+struct JobsTable {
+    map: std::collections::HashMap<u64, TableEntry>,
+    finished_order: VecDeque<u64>,
+    retention: usize,
+}
+
 struct Shared {
     queue: Mutex<QueueState>,
     not_empty: Condvar,
@@ -328,11 +446,45 @@ struct Shared {
     cache: Option<Mutex<WarmStartCache>>,
     observer: Option<Arc<dyn ServeObserver>>,
     results: Mutex<Vec<JobResult>>,
+    /// Cap on `results` (same knob as the status-table retention).
+    results_retention: usize,
+    counters: Counters,
+    table: Mutex<JobsTable>,
 }
 
 impl Shared {
     fn emit(&self, event: JobEvent) {
         emit_to(&self.observer, &event);
+    }
+
+    fn mark_running(&self, id: u64) {
+        if let Some(e) = self.table.lock().unwrap().map.get_mut(&id) {
+            e.status.state = JobState::Running;
+        }
+    }
+
+    /// Terminal bookkeeping: per-outcome counter, status-table update,
+    /// and pruning of the oldest finished entries past the retention cap.
+    fn record_terminal(&self, result: &JobResult) {
+        match &result.outcome {
+            JobOutcome::Done { .. } => &self.counters.done,
+            JobOutcome::Failed { .. } => &self.counters.failed,
+            JobOutcome::Cancelled { .. } => &self.counters.cancelled,
+            JobOutcome::DeadlineExpired { .. } => &self.counters.deadline_expired,
+        }
+        .fetch_add(1, Ordering::Relaxed);
+        let mut t = self.table.lock().unwrap();
+        if let Some(e) = t.map.get_mut(&result.job) {
+            e.status.state = JobState::Finished;
+            e.status.solver = result.solver.clone();
+            e.status.outcome = Some(result.outcome.clone());
+            e.status.x = result.report.as_ref().map(|r| Arc::new(r.x.clone()));
+        }
+        t.finished_order.push_back(result.job);
+        while t.finished_order.len() > t.retention {
+            let victim = t.finished_order.pop_front().expect("len > retention >= 0");
+            t.map.remove(&victim);
+        }
     }
 }
 
@@ -397,6 +549,13 @@ impl Scheduler {
                 .then(|| Mutex::new(WarmStartCache::new(config.cache_bytes))),
             observer,
             results: Mutex::new(Vec::new()),
+            results_retention: config.finished_retention.max(1),
+            counters: Counters::default(),
+            table: Mutex::new(JobsTable {
+                map: std::collections::HashMap::new(),
+                finished_order: VecDeque::new(),
+                retention: config.finished_retention,
+            }),
         });
         let workers = config.workers.max(1);
         let mut handles = Vec::with_capacity(workers);
@@ -420,12 +579,13 @@ impl Scheduler {
         self.enqueue_locked(&mut q, spec)
     }
 
-    /// Submit without blocking: `Err` hands the spec back when the queue
-    /// is full.
-    pub fn try_submit(&self, spec: JobSpec) -> std::result::Result<JobHandle, JobSpec> {
+    /// Submit without blocking: a typed [`QueueFull`] error hands the
+    /// spec back when the queue is at capacity (and counts a rejection).
+    pub fn try_submit(&self, spec: JobSpec) -> std::result::Result<JobHandle, QueueFull> {
         let mut q = self.shared.queue.lock().unwrap();
         if q.jobs.len() >= self.shared.capacity {
-            return Err(spec);
+            self.shared.counters.rejected.fetch_add(1, Ordering::Relaxed);
+            return Err(QueueFull { spec, capacity: self.shared.capacity });
         }
         Ok(self.enqueue_locked(&mut q, spec))
     }
@@ -433,6 +593,22 @@ impl Scheduler {
     fn enqueue_locked(&self, q: &mut QueueState, spec: JobSpec) -> JobHandle {
         let id = self.shared.next_id.fetch_add(1, Ordering::Relaxed) + 1;
         let cancel = Arc::new(AtomicBool::new(false));
+        self.shared.counters.submitted.fetch_add(1, Ordering::Relaxed);
+        self.shared.table.lock().unwrap().map.insert(
+            id,
+            TableEntry {
+                status: JobStatus {
+                    job: id,
+                    tag: spec.tag.clone(),
+                    problem: spec.problem_name(),
+                    solver: String::new(),
+                    state: JobState::Queued,
+                    outcome: None,
+                    x: None,
+                },
+                cancel: Arc::clone(&cancel),
+            },
+        );
         // Emitted before the push so `Queued` always precedes `Started`.
         self.shared.emit(JobEvent::Queued { job: id, tag: spec.tag.clone() });
         q.jobs.push_back(QueuedJob { id, spec, cancel: Arc::clone(&cancel), enqueued: Instant::now() });
@@ -451,6 +627,46 @@ impl Scheduler {
     /// Jobs currently waiting in the queue (not the ones running).
     pub fn queued(&self) -> usize {
         self.shared.queue.lock().unwrap().jobs.len()
+    }
+
+    /// Snapshot of the scheduler counters (see [`SchedulerStats`]).
+    pub fn stats(&self) -> SchedulerStats {
+        let c = &self.shared.counters;
+        SchedulerStats {
+            submitted: c.submitted.load(Ordering::Relaxed),
+            rejected: c.rejected.load(Ordering::Relaxed),
+            queue_depth: self.queued(),
+            running: c.running.load(Ordering::Relaxed) as usize,
+            done: c.done.load(Ordering::Relaxed),
+            failed: c.failed.load(Ordering::Relaxed),
+            cancelled: c.cancelled.load(Ordering::Relaxed),
+            deadline_expired: c.deadline_expired.load(Ordering::Relaxed),
+        }
+    }
+
+    /// Status snapshot of one job by id. `None` for ids never submitted
+    /// or finished jobs pruned past [`ServeConfig::finished_retention`].
+    pub fn status(&self, id: u64) -> Option<JobStatus> {
+        self.shared.table.lock().unwrap().map.get(&id).map(|e| e.status.clone())
+    }
+
+    /// Request cooperative cancellation of a job by id (the handle-less
+    /// path an RPC front-end needs). Returns `false` when the id is
+    /// unknown (never submitted, or pruned); cancelling an
+    /// already-finished job is a harmless no-op returning `true`.
+    pub fn cancel(&self, id: u64) -> bool {
+        match self.shared.table.lock().unwrap().map.get(&id) {
+            Some(e) => {
+                e.cancel.store(true, Ordering::Relaxed);
+                true
+            }
+            None => false,
+        }
+    }
+
+    /// The registry jobs resolve against (name validation, listings).
+    pub fn registry(&self) -> &Registry {
+        &self.shared.registry
     }
 
     /// Close the queue, drain every remaining job, join the workers and
@@ -490,6 +706,7 @@ impl Drop for Scheduler {
 
 fn worker_loop(worker: usize, shared: &Shared) {
     while let Some(job) = next_job(shared) {
+        shared.counters.running.fetch_add(1, Ordering::Relaxed);
         // Contain panics (a custom build closure, a solver assert on bad
         // options): the job fails loudly with a Finished event and a
         // Failed result instead of silently vanishing from join(), and
@@ -511,7 +728,21 @@ fn worker_loop(worker: usize, shared: &Shared) {
                         report: None,
                     }
                 });
-        shared.results.lock().unwrap().push(result);
+        // Decrement the gauge before the terminal counters so a stats()
+        // reader never sees finished() == submitted with running > 0.
+        shared.counters.running.fetch_sub(1, Ordering::Relaxed);
+        shared.record_terminal(&result);
+        let mut results = shared.results.lock().unwrap();
+        results.push(result);
+        // The same retention knob that bounds the status table bounds
+        // the result buffer: a long-running HTTP server would otherwise
+        // accumulate every job's full SolveReport (iterate + trace)
+        // until join(). Oldest results go first; batch `join()` callers
+        // with job counts within the (configurable) cap are unaffected.
+        if results.len() > shared.results_retention {
+            let excess = results.len() - shared.results_retention;
+            results.drain(..excess);
+        }
     }
 }
 
@@ -602,6 +833,7 @@ fn run_job(shared: &Shared, worker: usize, job: QueuedJob) -> JobResult {
     };
 
     shared.emit(JobEvent::Started { job: id, worker });
+    shared.mark_running(id);
 
     let problem = match &spec.problem {
         JobProblem::Spec(p) => shared.registry.build_problem(p),
@@ -678,11 +910,22 @@ fn run_job(shared: &Shared, worker: usize, job: QueuedJob) -> JobResult {
                     warm_started,
                 }
             };
-            // Only converged iterates enter the cache: a diverged or
-            // budget-exhausted x (GRock's divergence guard still reports
-            // Done{converged:false}) would poison warm starts for every
-            // later solve on the same data.
-            if let (Some(key), true) = (warm_key, report.converged && outcome.is_done()) {
+            // Converged iterates always enter the cache. A completed but
+            // unconverged run is still cached *if it improved the
+            // objective* (first vs last trace record): λ-sweeps submitted
+            // over the wire run target-less whenever the `lambda`
+            // override drops the planted V*, yet their iterates are
+            // exactly what the next λ wants. The improvement guard keeps
+            // diverged runs (e.g. GRock's divergence stop, which reports
+            // Done{converged:false}) from poisoning later solves on the
+            // same data.
+            let improved = report
+                .trace
+                .records
+                .first()
+                .zip(report.trace.records.last())
+                .is_some_and(|(f, l)| l.objective.is_finite() && l.objective <= f.objective);
+            if let (Some(key), true) = (warm_key, outcome.is_done() && (report.converged || improved)) {
                 if let Some(cache) = &shared.cache {
                     cache.lock().unwrap().insert(key, report.x.clone(), bridge.last_tau());
                 }
@@ -799,6 +1042,151 @@ mod tests {
         }
         assert!(matches!(obs.outcome(h.id()), Some(JobOutcome::Failed { .. })));
         assert!(results[1].outcome.is_done(), "the job queued behind the panic still ran");
+    }
+
+    /// Counters are monotone and consistent: submitted splits into the
+    /// terminal buckets, gauges return to zero, rejections only grow.
+    #[test]
+    fn stats_counters_are_monotone_and_consistent() {
+        let s = Scheduler::start(ServeConfig::default().with_workers(2).with_cache_bytes(0));
+        assert_eq!(s.stats(), SchedulerStats::default());
+        let mut seen_finished = 0;
+        for i in 0..6 {
+            s.submit(tiny_job(i));
+            let st = s.stats();
+            assert_eq!(st.submitted, i + 1);
+            assert!(st.finished() >= seen_finished, "terminal counters never decrease");
+            seen_finished = st.finished();
+        }
+        let h = s.submit(tiny_job(100));
+        h.cancel();
+        let bad = s.submit(JobSpec::new(ProblemSpec::lasso(10, 30), SolverSpec::new("nope")));
+        let _ = bad;
+        let results = s.join();
+        assert_eq!(results.len(), 8);
+        // join() drained everything: the sum of terminal buckets matches
+        // submissions and the gauges are back to zero.
+        // (stats() needs a live scheduler; recompute from results.)
+        let done = results.iter().filter(|r| r.outcome.is_done()).count();
+        let failed =
+            results.iter().filter(|r| matches!(r.outcome, JobOutcome::Failed { .. })).count();
+        let cancelled =
+            results.iter().filter(|r| matches!(r.outcome, JobOutcome::Cancelled { .. })).count();
+        // The cancel may race job completion: either bucket is fine, but
+        // the buckets must add up.
+        assert_eq!(failed, 1, "unknown solver fails");
+        assert_eq!(done + cancelled, 7, "six clean jobs + the cancel-raced one");
+    }
+
+    /// `stats()` observed live while jobs drain: terminal buckets reach
+    /// the submission count and the gauges return to zero.
+    #[test]
+    fn stats_drain_to_zero_gauges() {
+        let s = Scheduler::start(ServeConfig::default().with_workers(1).with_cache_bytes(0));
+        for i in 0..3 {
+            s.submit(tiny_job(i));
+        }
+        let deadline = Instant::now() + Duration::from_secs(60);
+        loop {
+            let st = s.stats();
+            if st.finished() == 3 {
+                // Gauges checked on a snapshot taken strictly after the
+                // terminal counters were observed: the worker decrements
+                // `running` before counting the job finished, so by now
+                // the fresh read must see both gauges at zero.
+                let settled = s.stats();
+                assert_eq!(settled.queue_depth, 0);
+                assert_eq!(settled.running, 0);
+                assert_eq!(settled.done, 3);
+                break;
+            }
+            assert!(Instant::now() < deadline, "jobs never drained: {st:?}");
+            std::thread::sleep(Duration::from_millis(5));
+        }
+        s.join();
+    }
+
+    #[test]
+    fn try_submit_full_queue_returns_typed_error_and_counts() {
+        let s = Scheduler::start(
+            ServeConfig::default().with_workers(1).with_queue_capacity(1).with_cache_bytes(0),
+        );
+        // Stall the single worker so the queue stays occupied.
+        let blocker = s.submit(
+            JobSpec::new(ProblemSpec::lasso(40, 120).with_seed(3), SolverSpec::parse("fpa").unwrap())
+                .with_opts(SolveOptions::default().with_max_iters(50_000_000).with_target(0.0)),
+        );
+        let deadline = Instant::now() + Duration::from_secs(60);
+        // Fill the one queue slot (the worker may race us to the first
+        // submits), then the next try_submit must refuse.
+        let err = loop {
+            match s.try_submit(tiny_job(1).with_tag("overflow")) {
+                Ok(_) if Instant::now() < deadline => continue,
+                Ok(_) => panic!("queue never filled"),
+                Err(e) => break e,
+            }
+        };
+        assert_eq!(err.spec.tag, "overflow", "spec handed back intact");
+        assert_eq!(err.capacity, 1);
+        assert!(err.to_string().contains("queue full"), "{err}");
+        assert!(s.stats().rejected >= 1);
+        blocker.cancel();
+        s.join();
+    }
+
+    /// Status lookup follows the lifecycle and supports handle-less
+    /// cancellation; unknown ids report `None`/`false`.
+    #[test]
+    fn status_table_tracks_lifecycle_and_cancels_by_id() {
+        let s = Scheduler::start(ServeConfig::default().with_workers(1).with_cache_bytes(0));
+        let long = s.submit(
+            JobSpec::new(ProblemSpec::lasso(40, 120).with_seed(9), SolverSpec::parse("fpa").unwrap())
+                .with_opts(SolveOptions::default().with_max_iters(50_000_000).with_target(0.0))
+                .with_tag("long"),
+        );
+        let queued = s.submit(tiny_job(5).with_tag("behind"));
+        let st = s.status(queued.id()).expect("known job");
+        assert_eq!(st.state, JobState::Queued);
+        assert_eq!((st.tag.as_str(), st.problem.as_str()), ("behind", "lasso"));
+        assert!(st.outcome.is_none() && st.x.is_none());
+        assert!(s.status(999_999).is_none());
+        assert!(!s.cancel(999_999));
+        // Wait until the long job demonstrably runs, then cancel by id.
+        let deadline = Instant::now() + Duration::from_secs(60);
+        while s.status(long.id()).unwrap().state != JobState::Running {
+            assert!(Instant::now() < deadline, "long job never started");
+            std::thread::sleep(Duration::from_millis(2));
+        }
+        assert!(s.cancel(long.id()));
+        let results = s.join();
+        assert!(matches!(
+            results.iter().find(|r| r.job == long.id()).unwrap().outcome,
+            JobOutcome::Cancelled { .. }
+        ));
+    }
+
+    /// Finished entries are pruned past the retention cap, oldest first.
+    #[test]
+    fn finished_retention_prunes_oldest() {
+        let s = Scheduler::start(
+            ServeConfig::default().with_workers(1).with_cache_bytes(0).with_finished_retention(2),
+        );
+        let ids: Vec<u64> = (0..4).map(|i| s.submit(tiny_job(i)).id()).collect();
+        // Drain, then check the table via a fresh status() before join
+        // consumes the scheduler.
+        let deadline = Instant::now() + Duration::from_secs(60);
+        while s.stats().finished() < 4 {
+            assert!(Instant::now() < deadline, "jobs never drained");
+            std::thread::sleep(Duration::from_millis(5));
+        }
+        assert!(s.status(ids[0]).is_none(), "oldest finished entry pruned");
+        assert!(s.status(ids[1]).is_none());
+        let kept = s.status(ids[3]).expect("newest finished entry kept");
+        assert_eq!(kept.state, JobState::Finished);
+        assert!(kept.x.is_some(), "final iterate retained for status queries");
+        assert!(matches!(kept.outcome, Some(JobOutcome::Done { .. })));
+        assert!(!kept.solver.is_empty(), "terminal status carries the resolved solver name");
+        s.join();
     }
 
     #[test]

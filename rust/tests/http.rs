@@ -1,0 +1,379 @@
+//! Loopback integration tests for `flexa::http`: a λ-sweep POSTed over
+//! HTTP is bit-identical to direct `Session` runs and warm-starts
+//! through the cache (visible in `/metrics`), the SSE stream delivers
+//! the full lifecycle, a full queue returns 429 without deadlocking,
+//! DELETE mid-run cancels, and the jobfile error paths surface as
+//! actionable 400/413 responses.
+
+use flexa::algos::SolveOptions;
+use flexa::api::{ProblemSpec, Registry, Session, SolverSpec};
+use flexa::http::{HttpConfig, HttpServer, SpawnedServer};
+use flexa::serve::{Json, ServeConfig};
+use std::io::{BufRead, BufReader, Read, Write};
+use std::net::TcpStream;
+use std::time::{Duration, Instant};
+
+fn spawn(http: HttpConfig, serve: ServeConfig) -> SpawnedServer {
+    HttpServer::bind("127.0.0.1:0", http, serve, Registry::with_defaults())
+        .expect("bind loopback server")
+        .spawn()
+}
+
+/// One `Connection: close` exchange; returns (status, headers, body).
+fn req(addr: &str, method: &str, path: &str, body: Option<&str>) -> (u16, Vec<(String, String)>, String) {
+    let mut stream = TcpStream::connect(addr).expect("connect");
+    stream.set_read_timeout(Some(Duration::from_secs(60))).unwrap();
+    let mut head = format!("{method} {path} HTTP/1.1\r\nHost: {addr}\r\nConnection: close\r\n");
+    if let Some(b) = body {
+        head.push_str(&format!("Content-Length: {}\r\n", b.len()));
+    }
+    head.push_str("\r\n");
+    stream.write_all(head.as_bytes()).unwrap();
+    if let Some(b) = body {
+        stream.write_all(b.as_bytes()).unwrap();
+    }
+    let mut raw = Vec::new();
+    stream.read_to_end(&mut raw).expect("read response");
+    let raw = String::from_utf8(raw).expect("utf8 response");
+    parse_response(&raw)
+}
+
+fn parse_response(raw: &str) -> (u16, Vec<(String, String)>, String) {
+    let (head, body) = raw.split_once("\r\n\r\n").unwrap_or((raw, ""));
+    let mut lines = head.lines();
+    let status: u16 = lines
+        .next()
+        .and_then(|l| l.split_whitespace().nth(1))
+        .and_then(|s| s.parse().ok())
+        .unwrap_or_else(|| panic!("malformed response head: {head}"));
+    let headers = lines
+        .filter_map(|l| l.split_once(':'))
+        .map(|(k, v)| (k.trim().to_ascii_lowercase(), v.trim().to_string()))
+        .collect();
+    (status, headers, body.to_string())
+}
+
+fn header<'a>(headers: &'a [(String, String)], name: &str) -> Option<&'a str> {
+    headers.iter().find(|(k, _)| k == name).map(|(_, v)| v.as_str())
+}
+
+/// POST one job spec, asserting 202; returns the job id.
+fn post_job(addr: &str, spec: &str) -> u64 {
+    let (status, _, body) = req(addr, "POST", "/v1/jobs", Some(spec));
+    assert_eq!(status, 202, "POST /v1/jobs: {body}");
+    let doc = Json::parse(&body).expect("valid submit response");
+    doc.get("job").and_then(|v| v.as_f64()).expect("job id") as u64
+}
+
+/// Poll `GET /v1/jobs/{id}?x=1` until the job finishes; returns the
+/// status document.
+fn wait_finished(addr: &str, job: u64) -> Json {
+    let deadline = Instant::now() + Duration::from_secs(120);
+    loop {
+        let (status, _, body) = req(addr, "GET", &format!("/v1/jobs/{job}?x=1"), None);
+        assert_eq!(status, 200, "GET /v1/jobs/{job}: {body}");
+        let doc = Json::parse(&body).expect("valid status json");
+        if doc.get("state").and_then(|v| v.as_str()) == Some("finished") {
+            return doc;
+        }
+        assert!(Instant::now() < deadline, "job {job} never finished: {body}");
+        std::thread::sleep(Duration::from_millis(10));
+    }
+}
+
+fn poll_until_running(addr: &str, job: u64) {
+    let deadline = Instant::now() + Duration::from_secs(120);
+    loop {
+        let (status, _, body) = req(addr, "GET", &format!("/v1/jobs/{job}"), None);
+        assert_eq!(status, 200, "{body}");
+        let doc = Json::parse(&body).unwrap();
+        match doc.get("state").and_then(|v| v.as_str()) {
+            Some("running") => return,
+            Some("finished") => panic!("job {job} finished before it could be observed running"),
+            _ => {}
+        }
+        assert!(Instant::now() < deadline, "job {job} never started");
+        std::thread::sleep(Duration::from_millis(5));
+    }
+}
+
+fn x_of(doc: &Json) -> Vec<f64> {
+    let Some(Json::Arr(items)) = doc.get("x") else { panic!("status has no x array: {doc:?}") };
+    items.iter().map(|v| v.as_f64().expect("x entries are numbers")).collect()
+}
+
+fn bits(x: &[f64]) -> Vec<u64> {
+    x.iter().map(|v| v.to_bits()).collect()
+}
+
+fn sweep_spec(i: usize, lambda: f64, warm: bool) -> String {
+    format!(
+        "{{\"problem\":\"lasso\",\"rows\":30,\"cols\":90,\"seed\":11,\"lambda\":{lambda},\
+         \"algo\":\"fpa\",\"max_iters\":80,\"warm_start\":{warm},\"tag\":\"sweep-{i}\"}}"
+    )
+}
+
+/// The acceptance scenario: 8 sequential λ-sweep submissions are
+/// bit-identical to direct `Session` runs; the SSE stream carries the
+/// full `queued → started → iteration* → finished` lifecycle; re-running
+/// the sweep warm-started shows cache hits in `/metrics`.
+#[test]
+fn lambda_sweep_over_http_matches_session_and_warm_starts() {
+    let server = spawn(HttpConfig::default(), ServeConfig::default().with_workers(1));
+    let addr = server.addr().to_string();
+    let lambdas: Vec<f64> = (0..8).map(|i| 2.0 * 0.7f64.powi(i)).collect();
+
+    // --- cold pass: deterministic, compare against Session bit-for-bit ---
+    let mut last_cold_job = 0;
+    for (i, &lambda) in lambdas.iter().enumerate() {
+        let job = post_job(&addr, &sweep_spec(i, lambda, false));
+        let doc = wait_finished(&addr, job);
+        assert_eq!(doc.get("outcome").and_then(|v| v.as_str()), Some("done"), "{doc:?}");
+        assert_eq!(doc.get("iterations").and_then(|v| v.as_f64()), Some(80.0));
+        assert_eq!(doc.get("tag").and_then(|v| v.as_str()), Some(format!("sweep-{i}").as_str()));
+
+        let reference = Session::problem(
+            ProblemSpec::lasso(30, 90).with_seed(11).with_lambda(lambda),
+        )
+        .solver(SolverSpec::parse("fpa").unwrap())
+        .options(SolveOptions::default().with_max_iters(80))
+        .run()
+        .expect("session reference run");
+        assert_eq!(reference.report.iterations, 80);
+        let http_x = x_of(&doc);
+        assert_eq!(
+            bits(&http_x),
+            bits(&reference.report.x),
+            "lambda {lambda}: HTTP result must be bit-identical to Session"
+        );
+        let objective = doc.get("objective").and_then(|v| v.as_f64()).expect("objective");
+        assert_eq!(objective.to_bits(), reference.report.objective.to_bits());
+        last_cold_job = job;
+    }
+
+    // --- SSE replay of a finished job: the complete lifecycle, in order ---
+    let (status, _, sse) =
+        req(&addr, "GET", &format!("/v1/jobs/{last_cold_job}/events"), None);
+    assert_eq!(status, 200);
+    let events: Vec<&str> =
+        sse.lines().filter_map(|l| l.strip_prefix("event: ")).collect();
+    assert_eq!(events.first(), Some(&"queued"), "{events:?}");
+    assert_eq!(events.get(1), Some(&"started"), "{events:?}");
+    assert_eq!(events.last(), Some(&"finished"), "{events:?}");
+    assert_eq!(events.iter().filter(|e| **e == "iteration").count(), 80);
+    assert!(sse.contains("data: {\"event\":\"finished\""), "data frames carry the JSONL encoding");
+
+    // --- warm pass: same sweep with warm_start; hits land in /metrics ---
+    for (i, &lambda) in lambdas.iter().enumerate() {
+        let job = post_job(&addr, &sweep_spec(i, lambda, true));
+        let doc = wait_finished(&addr, job);
+        assert_eq!(doc.get("outcome").and_then(|v| v.as_str()), Some("done"), "{doc:?}");
+        if i > 0 {
+            // Steps 1+ warm-start from the previous λ's solution.
+            assert_eq!(doc.get("warm_started").and_then(|v| v.as_bool()), Some(true), "{doc:?}");
+            let (_, _, sse) = req(&addr, "GET", &format!("/v1/jobs/{job}/events"), None);
+            assert!(
+                sse.contains("\"hit\":true"),
+                "warm job {job} must emit a cache-hit probe event:\n{sse}"
+            );
+        }
+    }
+    let (status, _, metrics) = req(&addr, "GET", "/metrics", None);
+    assert_eq!(status, 200);
+    let metric = |name: &str| -> f64 {
+        metrics
+            .lines()
+            .find(|l| l.starts_with(name) && !l.starts_with('#'))
+            .and_then(|l| l.split_whitespace().nth(1))
+            .and_then(|v| v.parse().ok())
+            .unwrap_or_else(|| panic!("metric {name} missing in:\n{metrics}"))
+    };
+    assert!(metric("flexa_cache_hits_total") >= 1.0, "the warm sweep must hit the cache");
+    assert_eq!(metric("flexa_jobs_submitted_total"), 16.0);
+    assert_eq!(metric("flexa_jobs_finished_total{outcome=\"done\"}"), 16.0);
+    assert_eq!(metric("flexa_queue_depth"), 0.0);
+
+    let (results, stats) = server.shutdown().expect("clean shutdown");
+    assert_eq!(results.len(), 16);
+    assert!(stats.hits >= 1);
+}
+
+/// A burst beyond the queue capacity returns 429 + Retry-After without
+/// wedging any connection, and DELETE mid-run yields a Cancelled
+/// terminal event on the SSE stream.
+#[test]
+fn full_queue_returns_429_and_delete_cancels_midrun() {
+    let server = spawn(
+        HttpConfig::default(),
+        ServeConfig::default().with_workers(1).with_queue_capacity(2).with_cache_bytes(0),
+    );
+    let addr = server.addr().to_string();
+
+    // Occupy the single worker with a de-facto unbounded job.
+    let long = post_job(
+        &addr,
+        "{\"problem\":\"lasso\",\"rows\":40,\"cols\":120,\"seed\":3,\
+         \"max_iters\":50000000,\"target\":0,\"tag\":\"long\"}",
+    );
+    poll_until_running(&addr, long);
+
+    // Burst: the two queue slots fill, then 429 with Retry-After.
+    let tiny = "{\"rows\":15,\"cols\":45,\"max_iters\":5,\"target\":0}";
+    let mut rejected = None;
+    for _ in 0..6 {
+        let (status, headers, body) = req(&addr, "POST", "/v1/jobs", Some(tiny));
+        match status {
+            202 => continue,
+            429 => {
+                rejected = Some((headers, body));
+                break;
+            }
+            other => panic!("unexpected status {other}: {body}"),
+        }
+    }
+    let (headers, body) = rejected.expect("a burst beyond capacity must see a 429");
+    assert!(header(&headers, "retry-after").is_some(), "429 carries Retry-After: {headers:?}");
+    assert!(body.contains("queue full"), "{body}");
+
+    // The server is still fully responsive (no deadlocked threads).
+    let (status, _, _) = req(&addr, "GET", "/healthz", None);
+    assert_eq!(status, 200);
+
+    // Cancel the running job; its SSE stream ends with outcome=cancelled.
+    let (status, _, body) = req(&addr, "DELETE", &format!("/v1/jobs/{long}"), None);
+    assert_eq!(status, 200, "{body}");
+    let (status, _, sse) = req(&addr, "GET", &format!("/v1/jobs/{long}/events"), None);
+    assert_eq!(status, 200);
+    assert!(sse.contains("event: finished"), "{sse}");
+    assert!(sse.contains("\"outcome\":\"cancelled\""), "{sse}");
+    let doc = wait_finished(&addr, long);
+    assert_eq!(doc.get("outcome").and_then(|v| v.as_str()), Some("cancelled"));
+
+    // Shutdown drains the queued tiny jobs; nothing deadlocks.
+    let (results, _) = server.shutdown().expect("clean shutdown");
+    assert!(results.len() >= 3, "long job + queued tiny jobs all produced results");
+}
+
+/// `serve::jobfile` error paths over HTTP: oversized body → 413,
+/// truncated JSON → 400, unknown names → 400 with the registry's typo
+/// suggestion, plus 404/405/400 routing edges.
+#[test]
+fn jobfile_error_paths_surface_as_http_errors() {
+    let server = spawn(
+        HttpConfig { max_body_bytes: 2048, ..HttpConfig::default() },
+        ServeConfig::default().with_workers(1).with_cache_bytes(0),
+    );
+    let addr = server.addr().to_string();
+
+    // Oversized body → 413 naming the limit.
+    let huge = format!("{{\"tag\":\"{}\"}}", "x".repeat(4000));
+    let (status, _, body) = req(&addr, "POST", "/v1/jobs", Some(&huge));
+    assert_eq!(status, 413, "{body}");
+    assert!(body.contains("2048"), "{body}");
+
+    // Truncated JSON → 400 with the parser's complaint.
+    let (status, _, body) = req(&addr, "POST", "/v1/jobs", Some("{\"problem\": \"lasso\", \"rows\": 30"));
+    assert_eq!(status, 400, "{body}");
+    assert!(body.contains("error"), "{body}");
+
+    // Unknown solver → 400 carrying the registry's suggestion.
+    let (status, _, body) =
+        req(&addr, "POST", "/v1/jobs", Some("{\"rows\":20,\"cols\":60,\"algo\":\"fpaa\"}"));
+    assert_eq!(status, 400, "{body}");
+    assert!(body.contains("did you mean `fpa`"), "{body}");
+
+    // Unknown problem → 400 with suggestion.
+    let (status, _, body) =
+        req(&addr, "POST", "/v1/jobs", Some("{\"problem\":\"laso\",\"rows\":20,\"cols\":60}"));
+    assert_eq!(status, 400, "{body}");
+    assert!(body.contains("did you mean `lasso`"), "{body}");
+
+    // Unknown job key → 400 listing the known keys.
+    let (status, _, body) = req(&addr, "POST", "/v1/jobs", Some("{\"rowz\": 10}"));
+    assert_eq!(status, 400, "{body}");
+    assert!(body.contains("unknown job key"), "{body}");
+
+    // Routing edges.
+    let (status, _, _) = req(&addr, "GET", "/v1/jobs/999999", None);
+    assert_eq!(status, 404);
+    let (status, _, _) = req(&addr, "DELETE", "/v1/jobs/999999", None);
+    assert_eq!(status, 404);
+    let (status, _, _) = req(&addr, "GET", "/v1/jobs/999999/events", None);
+    assert_eq!(status, 404);
+    let (status, _, body) = req(&addr, "GET", "/v1/jobs/not-a-number", None);
+    assert_eq!(status, 400, "{body}");
+    let (status, _, _) = req(&addr, "GET", "/nope", None);
+    assert_eq!(status, 404);
+    let (status, headers, _) = req(&addr, "PUT", "/v1/jobs", None);
+    assert_eq!(status, 405);
+    assert_eq!(header(&headers, "allow"), Some("POST"));
+
+    // The failures are visible in the error counter.
+    let (_, _, metrics) = req(&addr, "GET", "/metrics", None);
+    let errors: f64 = metrics
+        .lines()
+        .find(|l| l.starts_with("flexa_http_errors_total "))
+        .and_then(|l| l.split_whitespace().nth(1))
+        .and_then(|v| v.parse().ok())
+        .expect("error counter present");
+    assert!(errors >= 9.0, "all the 4xx responses above are counted: {errors}");
+    server.shutdown().expect("clean shutdown");
+}
+
+/// Keep-alive works (two exchanges on one connection), /healthz and
+/// /v1/registry respond, and the registry JSON carries descriptions.
+#[test]
+fn keep_alive_healthz_and_registry() {
+    let server = spawn(HttpConfig::default(), ServeConfig::default().with_workers(1));
+    let addr = server.addr().to_string();
+
+    // Two requests over one connection.
+    let stream = TcpStream::connect(&addr).unwrap();
+    stream.set_read_timeout(Some(Duration::from_secs(30))).unwrap();
+    let mut writer = stream.try_clone().unwrap();
+    let mut reader = BufReader::new(stream);
+    for i in 0..2 {
+        writer
+            .write_all(format!("GET /healthz HTTP/1.1\r\nHost: {addr}\r\n\r\n").as_bytes())
+            .unwrap();
+        let (status, headers, body) = read_one_response(&mut reader);
+        assert_eq!(status, 200, "request {i} on the shared connection");
+        assert_eq!(header(&headers, "connection"), Some("keep-alive"));
+        assert_eq!(body, "{\"status\":\"ok\"}");
+    }
+
+    let (status, _, body) = req(&addr, "GET", "/v1/registry", None);
+    assert_eq!(status, 200);
+    let doc = Json::parse(&body).expect("registry json parses");
+    let Some(Json::Arr(problems)) = doc.get("problems") else { panic!("{body}") };
+    assert!(problems
+        .iter()
+        .any(|p| p.get("name").and_then(|v| v.as_str()) == Some("lasso")));
+    let Some(Json::Arr(solvers)) = doc.get("solvers") else { panic!("{body}") };
+    let fpa = solvers
+        .iter()
+        .find(|s| s.get("name").and_then(|v| v.as_str()) == Some("fpa"))
+        .expect("fpa listed");
+    assert!(fpa.get("about").and_then(|v| v.as_str()).unwrap_or("").contains("FLEXA"));
+
+    server.shutdown().expect("clean shutdown");
+}
+
+/// Read exactly one response off a keep-alive connection (headers +
+/// Content-Length body).
+fn read_one_response(reader: &mut BufReader<TcpStream>) -> (u16, Vec<(String, String)>, String) {
+    let mut head = String::new();
+    loop {
+        let mut line = String::new();
+        assert!(reader.read_line(&mut line).unwrap() > 0, "connection closed mid-response");
+        if line == "\r\n" {
+            break;
+        }
+        head.push_str(&line);
+    }
+    let (status, headers, _) = parse_response(&format!("{head}\r\n"));
+    let len: usize = header(&headers, "content-length").unwrap().parse().unwrap();
+    let mut body = vec![0u8; len];
+    reader.read_exact(&mut body).unwrap();
+    (status, headers, String::from_utf8(body).unwrap())
+}

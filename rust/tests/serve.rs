@@ -311,8 +311,10 @@ fn bounded_queue_refuses_when_full() {
     let _q2 = scheduler.submit(lasso_job_tiny());
     assert_eq!(scheduler.queued(), 2);
     let refused = scheduler.try_submit(lasso_job_tiny().with_tag("overflow"));
-    let spec = refused.expect_err("queue at capacity must refuse");
-    assert_eq!(spec.tag, "overflow", "the spec is handed back intact");
+    let err = refused.expect_err("queue at capacity must refuse");
+    assert_eq!(err.spec.tag, "overflow", "the spec is handed back intact");
+    assert_eq!(err.capacity, 2, "the typed error names the capacity hit");
+    assert_eq!(scheduler.stats().rejected, 1, "refusals are counted");
     blocker.cancel();
     let results = scheduler.join();
     assert_eq!(results.len(), 3, "blocker + two queued jobs ran; the refused one never entered");
