@@ -1,91 +1,291 @@
-//! Kernel microbenches: the native hot-path operations (matvec, rmatvec,
-//! fused best-response, full FPA iteration) and, when artifacts are
-//! present, the XLA-executed counterparts (per-iteration latency of the
-//! AOT fpa_lasso_step graph).
+//! Kernel bench: serial vs multi-core wall-clock for the `flexa::par`
+//! hot paths — dense/CSC matvec, transposed matvec, and the full
+//! matvec-dominated FPA solve the paper's evaluation revolves around —
+//! recorded to `BENCH_kernels.json`.
 //!
-//! Throughput is reported in FLOP/s for the matvecs (2mn each) so the
-//! §Perf roofline comparison in EXPERIMENTS.md can be regenerated.
+//! Every measurement runs under thread budgets 1 / 2 / 4 / 8
+//! ([`flexa::par::with_threads`]); the serial leg is the 1-thread
+//! budget, which takes the exact same code path. Outputs are asserted
+//! **bit-identical across all legs** before any timing is trusted —
+//! the determinism contract is part of what this bench guards.
+//!
+//! `FLEXA_BENCH_SMOKE=1` caps sizes/iterations for CI's bench-smoke job
+//! (shared runners make the wall-clock untrustworthy there, so the
+//! trendline guard is warn-only in smoke mode, mirroring
+//! `benches/serve.rs`).
+//!
+//! ## Trendline guard
+//!
+//! The fresh 4-thread solve speedup is compared against the committed
+//! `BENCH_baseline_kernels.json` (override the path with
+//! `FLEXA_BENCH_BASELINE_KERNELS`): dropping more than 25% below the
+//! baseline fails a full run. Re-record on a quiet multi-core machine:
+//! `cargo bench --bench kernels && cp BENCH_kernels.json
+//! BENCH_baseline_kernels.json`.
+//!
+//! The XLA artifact legs that used to live here moved behind
+//! `FLEXA_BENCH_XLA=1` (they need `make artifacts`).
 
 use flexa::algos::fpa::Fpa;
-use flexa::algos::{SolveOptions, Solver};
-use flexa::bench::Bench;
+use flexa::algos::SolveOptions;
 use flexa::datagen::NesterovLasso;
-use flexa::linalg::{ops, MatVec};
+use flexa::linalg::{CscMatrix, DenseMatrix, MatVec};
+use flexa::par;
 use flexa::problems::lasso::Lasso;
-use flexa::problems::CompositeProblem;
+use std::time::Instant;
+
+const THREAD_LEGS: [usize; 4] = [1, 2, 4, 8];
+
+/// Best-of-`reps` seconds for `f` (after one untimed warmup call).
+fn best_of(reps: usize, mut f: impl FnMut()) -> f64 {
+    f();
+    let mut best = f64::INFINITY;
+    for _ in 0..reps.max(1) {
+        let t0 = Instant::now();
+        f();
+        best = best.min(t0.elapsed().as_secs_f64());
+    }
+    best
+}
+
+/// One kernel, four thread budgets: returns `(secs per leg, outputs'
+/// bit-equality across legs)`.
+fn sweep_legs(
+    reps: usize,
+    inner_iters: usize,
+    mut kernel: impl FnMut() -> Vec<f64>,
+) -> ([f64; 4], bool) {
+    let mut secs = [0.0; 4];
+    let mut reference: Option<Vec<u64>> = None;
+    let mut identical = true;
+    for (leg, &threads) in THREAD_LEGS.iter().enumerate() {
+        let out = par::with_threads(threads, &mut kernel);
+        let bits: Vec<u64> = out.iter().map(|v| v.to_bits()).collect();
+        match &reference {
+            None => reference = Some(bits),
+            Some(r) => identical &= *r == bits,
+        }
+        secs[leg] = par::with_threads(threads, || {
+            best_of(reps, || {
+                for _ in 0..inner_iters {
+                    std::hint::black_box(kernel());
+                }
+            })
+        }) / inner_iters as f64;
+    }
+    (secs, identical)
+}
+
+fn speedup(secs: &[f64; 4], leg: usize) -> f64 {
+    secs[0] / secs[leg].max(1e-12)
+}
+
+fn section_json(name: &str, dims: (usize, usize), flops: u64, secs: &[f64; 4], identical: bool) -> String {
+    let gflops: Vec<String> =
+        secs.iter().map(|s| format!("{:.3}", flops as f64 / s.max(1e-12) / 1e9)).collect();
+    format!(
+        "  \"{name}\": {{\"rows\": {}, \"cols\": {}, \"serial_s\": {:.6}, \"t2_s\": {:.6}, \"t4_s\": {:.6}, \"t8_s\": {:.6}, \"gflops\": [{}], \"speedup_2t\": {:.3}, \"speedup_4t\": {:.3}, \"speedup_8t\": {:.3}, \"bit_identical_across_threads\": {identical}}}",
+        dims.0,
+        dims.1,
+        secs[0],
+        secs[1],
+        secs[2],
+        secs[3],
+        gflops.join(", "),
+        speedup(secs, 1),
+        speedup(secs, 2),
+        speedup(secs, 3),
+    )
+}
 
 fn main() -> anyhow::Result<()> {
-    let (m, n) = (1000usize, 5000usize);
+    let smoke = std::env::var_os("FLEXA_BENCH_SMOKE").is_some();
+    let cores = par::host_cores();
+    println!("kernel bench: smoke={smoke}, host cores={cores}, legs={THREAD_LEGS:?}");
+
+    // --- A. dense matvec / matvec_t ---
+    let (m, n) = if smoke { (120, 480) } else { (1000, 5000) };
+    let reps = if smoke { 2 } else { 5 };
+    let inner = if smoke { 4 } else { 10 };
     let inst = NesterovLasso::new(m, n, 0.1, 1.0).seed(0xBE7C).generate();
     let problem = Lasso::new(inst.a, inst.b, inst.c).with_opt_value(inst.v_star);
     let a = problem.matrix();
-
-    let mut bench = Bench::new(&format!("native kernels {m}x{n}")).warmup(2).reps(7);
-    let mut x = vec![0.0; n];
     let mut rng = flexa::prng::Xoshiro256pp::seed_from_u64(3);
+    let mut x = vec![0.0; n];
     rng.fill_normal(&mut x);
-    let mut y = vec![0.0; m];
-    let mut g = vec![0.0; n];
+    let mut r = vec![0.0; m];
+    rng.fill_normal(&mut r);
     let flops_mv = (2 * m * n) as u64;
 
-    bench.measure("matvec (y = Ax)", || {
+    let (mv_secs, mv_ident) = sweep_legs(reps, inner, || {
+        let mut y = vec![0.0; m];
         a.matvec(&x, &mut y);
-        flops_mv
+        y
     });
-    bench.measure("rmatvec (g = A'r)", || {
-        a.matvec_t(&y, &mut g);
-        flops_mv
-    });
-    bench.measure("grad_and_smooth (fused)", || {
-        let _ = problem.grad_and_smooth(&x, &mut g);
-        2 * flops_mv
-    });
-    let mut d = vec![0.0; n];
-    problem.curvature(&x, &mut d);
-    let mut xhat = vec![0.0; n];
-    bench.measure("best-response + E (fused)", || {
-        for j in 0..n {
-            let denom = d[j] + 3.0;
-            xhat[j] = ops::soft_threshold(x[j] - g[j] / denom, 1.0 / denom);
-        }
-        (6 * n) as u64
-    });
-    bench.measure("full FPA iteration", || {
-        let mut solver = Fpa::paper_defaults(&problem);
-        let r = solver.solve(
-            &problem,
-            &SolveOptions::default().with_max_iters(1).with_target(0.0),
-        );
-        std::hint::black_box(r.iterations);
-        2 * flops_mv
-    });
-    bench.print();
+    println!(
+        "dense matvec {m}x{n}: serial {:.1}us, 4t speedup {:.2}x (bit-identical: {mv_ident})",
+        mv_secs[0] * 1e6,
+        speedup(&mv_secs, 2)
+    );
 
-    // XLA path (needs `make artifacts` with a matching shape class).
-    if flexa::runtime::artifacts_available(flexa::runtime::DEFAULT_ARTIFACT_DIR) {
-        let mut engine = flexa::runtime::Engine::cpu(flexa::runtime::DEFAULT_ARTIFACT_DIR)?;
-        let variants: Vec<(String, usize, usize)> = engine
-            .manifest()
-            .variants("fpa_lasso_step")
-            .iter()
-            .map(|e| (e.name.clone(), e.rows, e.cols))
-            .collect();
-        for (name, am, an) in variants {
-            let inst = NesterovLasso::new(am, an, 0.1, 1.0).seed(9).generate();
-            let p = Lasso::new(inst.a, inst.b, inst.c).with_opt_value(inst.v_star);
-            let mut solver = flexa::runtime::XlaFpaLasso::new(&mut engine, am, an)?;
-            let mut bench = Bench::new(&format!("xla artifact {name}")).warmup(1).reps(5);
-            bench.measure("20 fpa iterations via PJRT", || {
-                let r = solver
-                    .solve(&p, &SolveOptions::default().with_max_iters(20).with_target(0.0))
-                    .expect("xla solve");
-                std::hint::black_box(r.iterations);
-                (20 * 2 * 2 * am * an) as u64
-            });
-            bench.print();
+    let (mvt_secs, mvt_ident) = sweep_legs(reps, inner, || {
+        let mut g = vec![0.0; n];
+        a.matvec_t(&r, &mut g);
+        g
+    });
+    println!(
+        "dense matvec_t {m}x{n}: serial {:.1}us, 4t speedup {:.2}x (bit-identical: {mvt_ident})",
+        mvt_secs[0] * 1e6,
+        speedup(&mvt_secs, 2)
+    );
+
+    // --- B. CSC matvec (≈10% density) ---
+    let sparse = {
+        let mut d = DenseMatrix::zeros(m, n);
+        let mut srng = flexa::prng::Xoshiro256pp::seed_from_u64(9);
+        for j in 0..n {
+            for i in 0..m {
+                if srng.next_f64() < 0.1 {
+                    d.set(i, j, srng.next_normal());
+                }
+            }
         }
-    } else {
-        eprintln!("(skipping XLA kernel benches: run `make artifacts` first)");
+        CscMatrix::from_dense(&d, 0.0)
+    };
+    let flops_sp = (2 * sparse.nnz()) as u64;
+    let (sp_secs, sp_ident) = sweep_legs(reps, inner, || {
+        let mut y = vec![0.0; m];
+        sparse.matvec(&x, &mut y);
+        y
+    });
+    println!(
+        "csc matvec {m}x{n} ({} nnz): serial {:.1}us, 4t speedup {:.2}x (bit-identical: {sp_ident})",
+        sparse.nnz(),
+        sp_secs[0] * 1e6,
+        speedup(&sp_secs, 2)
+    );
+
+    // --- C. full matvec-dominated FPA solve (the acceptance figure:
+    // the 200x1000 lasso the paper-scale experiments are built from) ---
+    let (sm, sn, iters) = if smoke { (40, 120, 60) } else { (200, 1000, 300) };
+    let sinst = NesterovLasso::new(sm, sn, 0.1, 1.0).seed(0x50_1E).generate();
+    let sproblem = Lasso::new(sinst.a, sinst.b, sinst.c).with_opt_value(sinst.v_star);
+    let solve_opts = SolveOptions::default().with_max_iters(iters).with_target(0.0);
+    let solve_reps = if smoke { 1 } else { 3 };
+    let (solve_secs, solve_ident) = sweep_legs(solve_reps, 1, || {
+        let report = Fpa::paper_defaults(&sproblem).solve_ls(&sproblem, &solve_opts);
+        let mut out = report.x;
+        out.push(report.objective);
+        out
+    });
+    let solve_speedup_4t = speedup(&solve_secs, 2);
+    println!(
+        "full solve lasso {sm}x{sn} ({iters} iters): serial {:.3}s, 2t {:.3}s, 4t {:.3}s, 8t {:.3}s",
+        solve_secs[0], solve_secs[1], solve_secs[2], solve_secs[3]
+    );
+    println!("  4-thread speedup: {solve_speedup_4t:.2}x (bit-identical: {solve_ident})");
+
+    // Determinism is a hard guarantee, not a trendline: fail loudly.
+    anyhow::ensure!(
+        mv_ident && mvt_ident && sp_ident && solve_ident,
+        "kernel outputs differ across thread budgets — the flexa::par determinism contract is broken"
+    );
+    if cores >= 2 && solve_speedup_4t < 1.5 {
+        println!(
+            "WARN: 4-thread solve speedup {solve_speedup_4t:.2}x < 1.5x on a {cores}-core host \
+             (expected >= 1.5x on quiet multi-core hardware)"
+        );
+    }
+
+    // --- record ---
+    let json = format!(
+        "{{\n  \"bench\": \"kernels\",\n  \"smoke\": {smoke},\n  \"host_cores\": {cores},\n  \"thread_legs\": [1, 2, 4, 8],\n{},\n{},\n{},\n  \"solve\": {{\"problem\": \"lasso\", \"rows\": {sm}, \"cols\": {sn}, \"iters\": {iters}, \"serial_s\": {:.4}, \"t2_s\": {:.4}, \"t4_s\": {:.4}, \"t8_s\": {:.4}, \"speedup_2t\": {:.3}, \"speedup_4t\": {:.3}, \"speedup_8t\": {:.3}, \"bit_identical_across_threads\": {solve_ident}}}\n}}\n",
+        section_json("matvec", (m, n), flops_mv, &mv_secs, mv_ident),
+        section_json("matvec_t", (m, n), flops_mv, &mvt_secs, mvt_ident),
+        section_json("csc_matvec", (m, n), flops_sp, &sp_secs, sp_ident),
+        solve_secs[0],
+        solve_secs[1],
+        solve_secs[2],
+        solve_secs[3],
+        speedup(&solve_secs, 1),
+        solve_speedup_4t,
+        speedup(&solve_secs, 3),
+    );
+    std::fs::write("BENCH_kernels.json", &json)?;
+    println!("wrote BENCH_kernels.json");
+
+    // --- trendline guard vs the committed baseline ---
+    let baseline_path = std::env::var("FLEXA_BENCH_BASELINE_KERNELS")
+        .unwrap_or_else(|_| "BENCH_baseline_kernels.json".to_string());
+    match std::fs::read_to_string(&baseline_path) {
+        Err(_) => println!(
+            "no baseline at {baseline_path}; skipping trendline check \
+             (record one: cp BENCH_kernels.json BENCH_baseline_kernels.json)"
+        ),
+        Ok(text) => {
+            let doc = flexa::serve::Json::parse(&text)
+                .map_err(|e| anyhow::anyhow!("baseline {baseline_path} is not valid JSON: {e:#}"))?;
+            let base = doc
+                .get("solve")
+                .and_then(|s| s.get("speedup_4t"))
+                .and_then(|v| v.as_f64())
+                .ok_or_else(|| {
+                    anyhow::anyhow!("baseline {baseline_path} has no solve.speedup_4t")
+                })?;
+            let base_smoke = doc.get("smoke").and_then(|v| v.as_bool()).unwrap_or(false);
+            if base_smoke != smoke {
+                // Skip only the comparison — the optional XLA leg below
+                // must still run when requested.
+                println!(
+                    "baseline {baseline_path} was recorded with smoke={base_smoke}, this run is \
+                     smoke={smoke}; workloads differ, skipping the trendline comparison"
+                );
+            } else {
+                let floor = base * 0.75;
+                println!(
+                    "trendline: solve speedup_4t {solve_speedup_4t:.2}x vs baseline {base:.2}x \
+                     (fail floor {floor:.2}x)"
+                );
+                if solve_speedup_4t < floor {
+                    let msg = format!(
+                        "kernel speedup regression: 4-thread solve speedup {solve_speedup_4t:.2}x \
+                         is more than 25% below the {base:.2}x baseline in {baseline_path}"
+                    );
+                    if smoke {
+                        println!("WARN (smoke mode is warn-only): {msg}");
+                    } else {
+                        anyhow::bail!(msg);
+                    }
+                }
+            }
+        }
+    }
+
+    // --- optional XLA artifact leg (kept from the original bench) ---
+    if std::env::var_os("FLEXA_BENCH_XLA").is_some() {
+        if flexa::runtime::artifacts_available(flexa::runtime::DEFAULT_ARTIFACT_DIR) {
+            let mut engine = flexa::runtime::Engine::cpu(flexa::runtime::DEFAULT_ARTIFACT_DIR)?;
+            let variants: Vec<(String, usize, usize)> = engine
+                .manifest()
+                .variants("fpa_lasso_step")
+                .iter()
+                .map(|e| (e.name.clone(), e.rows, e.cols))
+                .collect();
+            for (name, am, an) in variants {
+                let inst = NesterovLasso::new(am, an, 0.1, 1.0).seed(9).generate();
+                let p = Lasso::new(inst.a, inst.b, inst.c).with_opt_value(inst.v_star);
+                let mut solver = flexa::runtime::XlaFpaLasso::new(&mut engine, am, an)?;
+                let secs = best_of(3, || {
+                    let r = solver
+                        .solve(&p, &SolveOptions::default().with_max_iters(20).with_target(0.0))
+                        .expect("xla solve");
+                    std::hint::black_box(r.iterations);
+                });
+                println!("xla artifact {name}: 20 iters in {secs:.4}s");
+            }
+        } else {
+            eprintln!("(skipping XLA kernel benches: run `make artifacts` first)");
+        }
     }
     Ok(())
 }

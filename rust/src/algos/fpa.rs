@@ -29,11 +29,111 @@
 
 use super::{Recorder, SolveOptions, SolveReport, Solver};
 use crate::linalg::ops;
+use crate::par;
 use crate::prng::Xoshiro256pp;
-use crate::problems::{CompositeProblem, LeastSquares};
+use crate::problems::{BlockLayout, CompositeProblem, LeastSquares};
 use crate::select::{SelectionRule, Selector};
 use crate::stepsize::{Schedule, StepSize};
+use std::ops::Range;
 use std::time::Instant;
+
+/// Minimum blocks per task for the parallel (S.2) sweep / (S.4) update —
+/// fixed so the partition is a pure function of the block count.
+const MIN_BLOCKS_PER_TASK: usize = 64;
+
+/// Per-iteration chunking of a block sweep: `blocks[t]` is a block
+/// range, `vars[t]` the matching contiguous variable range. Computed
+/// once per solve (the layout is fixed) from the block count alone, so
+/// the partition — and with it every bit the sweep computes — is
+/// independent of the thread count. Shared with GRock's candidate
+/// sweep, which has the same shape.
+pub(crate) struct SweepChunks {
+    pub(crate) blocks: Vec<Range<usize>>,
+    pub(crate) vars: Vec<Range<usize>>,
+}
+
+impl SweepChunks {
+    pub(crate) fn new(layout: &BlockLayout) -> Self {
+        let blocks = par::task_ranges(layout.num_blocks(), MIN_BLOCKS_PER_TASK, 1);
+        let vars = blocks
+            .iter()
+            .map(|b| layout.range(b.start).start..layout.range(b.end - 1).end)
+            .collect();
+        Self { blocks, vars }
+    }
+}
+
+/// The (S.2) best-response body for one chunk of blocks, writing the
+/// chunk's slice of `zhat` (variables, offset `z0`) and `e` (blocks,
+/// offset `b0`). One home for the per-block arithmetic keeps the serial
+/// (inexact) and parallel (exact) paths bit-identical.
+#[allow(clippy::too_many_arguments)]
+fn best_response_chunk<P: CompositeProblem + ?Sized>(
+    problem: &P,
+    layout: &BlockLayout,
+    surrogate: Surrogate,
+    tau: f64,
+    x: &[f64],
+    g: &[f64],
+    d: &[f64],
+    blocks: Range<usize>,
+    z0: usize,
+    zhat: &mut [f64],
+    e: &mut [f64],
+) {
+    let b0 = blocks.start;
+    for i in blocks {
+        let rng_i = layout.range(i);
+        let denom = match surrogate {
+            Surrogate::Linear => tau,
+            Surrogate::DiagQuadratic => d[rng_i.start] + tau,
+        };
+        debug_assert!(denom > 0.0, "surrogate denominator must be positive");
+        let (lo, hi) = (rng_i.start, rng_i.end);
+        // v = x_i − ∇ᵢF/denom, prox with weight 1/denom. Reuse the zhat
+        // chunk as scratch for v, prox from a copy (split-borrow).
+        let zc = &mut zhat[lo - z0..hi - z0];
+        for (k, j) in rng_i.clone().enumerate() {
+            zc[k] = x[j] - g[j] / denom;
+        }
+        let v_block: Vec<f64> = zc.to_vec();
+        problem.prox_block(i, &v_block, 1.0 / denom, zc);
+        e[i - b0] = ops::dist2(zc, &x[lo..hi]);
+    }
+}
+
+/// The full (S.2) sweep, parallel over block chunks. Blocks write
+/// disjoint `zhat`/`e` regions and read only shared state, so the
+/// result is bit-identical to running the chunks serially.
+#[allow(clippy::too_many_arguments)]
+fn best_response_sweep<P: CompositeProblem + ?Sized>(
+    problem: &P,
+    layout: &BlockLayout,
+    chunks: &SweepChunks,
+    surrogate: Surrogate,
+    tau: f64,
+    x: &[f64],
+    g: &[f64],
+    d: &[f64],
+    zhat: &mut [f64],
+    e: &mut [f64],
+) {
+    par::par_disjoint_mut2(zhat, &chunks.vars, e, &chunks.blocks, |t, zc, ec| {
+        best_response_chunk(
+            problem,
+            layout,
+            surrogate,
+            tau,
+            x,
+            g,
+            d,
+            chunks.blocks[t].clone(),
+            chunks.vars[t].start,
+            zc,
+            ec,
+        );
+    });
+}
 
 /// Choice of the convex approximation `Pᵢ` (paper §3, "On the choice of
 /// `Pᵢ(xᵢ; x)`").
@@ -175,6 +275,7 @@ impl<P: CompositeProblem + ?Sized> Solver<P> for Fpa {
         let mut v_best = f64::INFINITY;
         let mut x_best = x.clone();
         let reduce_bytes = 8 * (problem_reduce_len(problem) + 16);
+        let chunks = SweepChunks::new(&layout);
 
         recorder.setup_done();
         // Diagnostic stream: set FLEXA_FPA_DEBUG=1 to trace the τ/γ/E
@@ -192,32 +293,45 @@ impl<P: CompositeProblem + ?Sized> Solver<P> for Fpa {
             let f_val = problem.grad_and_smooth(&x, &mut g);
 
             // (S.2) parallel phase 2: block best-responses + error bounds.
+            // Exact mode runs the chunked multi-core sweep; inexact mode
+            // stays serial because the perturbation RNG is one stream
+            // consumed in block order (splitting it would change the
+            // golden traces).
             let gamma = schedule.gamma();
-            for i in 0..nb {
-                let rng_i = layout.range(i);
-                let denom = match self.opts.surrogate {
-                    Surrogate::Linear => tau,
-                    Surrogate::DiagQuadratic => d[rng_i.start] + tau,
-                };
-                debug_assert!(denom > 0.0, "surrogate denominator must be positive");
-                // v = x_i − ∇ᵢF/denom, prox with weight 1/denom.
-                // Reuse zhat as scratch for v.
-                for j in rng_i.clone() {
-                    zhat[j] = x[j] - g[j] / denom;
-                }
-                let (lo, hi) = (rng_i.start, rng_i.end);
-                // Split-borrow: prox from a copied v into zhat.
-                let v_block: Vec<f64> = zhat[lo..hi].to_vec();
-                problem.prox_block(i, &v_block, 1.0 / denom, &mut zhat[lo..hi]);
-                // Inexactness (Theorem 1(v)): perturb within εᵢᵏ.
-                if let (Some(ix), Some(r)) = (self.opts.inexact.as_ref(), rng.as_mut()) {
-                    let gnorm = ops::nrm2(&g[lo..hi]);
-                    let eps = gamma * ix.alpha1 * ix.alpha2.min(if gnorm > 0.0 { 1.0 / gnorm } else { ix.alpha2 });
-                    if eps > 0.0 {
-                        perturb_within(&mut zhat[lo..hi], eps, r);
+            if self.opts.inexact.is_none() {
+                best_response_sweep(
+                    problem, &layout, &chunks, self.opts.surrogate, tau, &x, &g, &d, &mut zhat,
+                    &mut e,
+                );
+            } else {
+                for i in 0..nb {
+                    let rng_i = layout.range(i);
+                    let (lo, hi) = (rng_i.start, rng_i.end);
+                    best_response_chunk(
+                        problem,
+                        &layout,
+                        self.opts.surrogate,
+                        tau,
+                        &x,
+                        &g,
+                        &d,
+                        i..i + 1,
+                        lo,
+                        &mut zhat[lo..hi],
+                        std::slice::from_mut(&mut e[i]),
+                    );
+                    // Inexactness (Theorem 1(v)): perturb within εᵢᵏ.
+                    if let (Some(ix), Some(r)) = (self.opts.inexact.as_ref(), rng.as_mut()) {
+                        let gnorm = ops::nrm2(&g[lo..hi]);
+                        let eps = gamma
+                            * ix.alpha1
+                            * ix.alpha2.min(if gnorm > 0.0 { 1.0 / gnorm } else { ix.alpha2 });
+                        if eps > 0.0 {
+                            perturb_within(&mut zhat[lo..hi], eps, r);
+                            e[i] = ops::dist2(&zhat[lo..hi], &x[lo..hi]);
+                        }
                     }
                 }
-                e[i] = ops::dist2(&zhat[lo..hi], &x[lo..hi]);
             }
             let t_parallel = t0.elapsed().as_secs_f64();
 
@@ -257,12 +371,29 @@ impl<P: CompositeProblem + ?Sized> Solver<P> for Fpa {
             } else {
                 gamma
             };
-            for i in 0..nb {
-                if mask[i] {
-                    for j in layout.range(i) {
-                        x[j] += gamma * (zhat[j] - x[j]);
+            // (S.4) averaging on the selected blocks — element-
+            // independent, so the chunked form is bit-identical to the
+            // serial loop; below ~32k variables the update is a few
+            // microseconds and dispatch would dominate, so stay serial.
+            if n < (1 << 15) || chunks.vars.len() <= 1 {
+                for i in 0..nb {
+                    if mask[i] {
+                        for j in layout.range(i) {
+                            x[j] += gamma * (zhat[j] - x[j]);
+                        }
                     }
                 }
+            } else {
+                par::par_disjoint_mut(&mut x, &chunks.vars, |t, xc| {
+                    let x0 = chunks.vars[t].start;
+                    for i in chunks.blocks[t].clone() {
+                        if mask[i] {
+                            for j in layout.range(i) {
+                                xc[j - x0] += gamma * (zhat[j] - xc[j - x0]);
+                            }
+                        }
+                    }
+                });
             }
             schedule.advance();
 
@@ -391,6 +522,7 @@ impl Fpa {
         let mut v_best = f64::INFINITY;
         let mut x_best = x.clone();
         let reduce_bytes = 8 * (m + 16);
+        let chunks = SweepChunks::new(&layout);
         recorder.setup_done();
         let debug = std::env::var_os("FLEXA_FPA_DEBUG").is_some();
 
@@ -406,28 +538,39 @@ impl Fpa {
             ops::scal(2.0, &mut g);
 
             let gamma = schedule.gamma();
-            for i in 0..nb {
-                let rng_i = layout.range(i);
-                let denom = match self.opts.surrogate {
-                    Surrogate::Linear => tau,
-                    Surrogate::DiagQuadratic => d[rng_i.start] + tau,
-                };
-                for j in rng_i.clone() {
-                    zhat[j] = x[j] - g[j] / denom;
-                }
-                let (lo, hi) = (rng_i.start, rng_i.end);
-                let v_block: Vec<f64> = zhat[lo..hi].to_vec();
-                problem.prox_block(i, &v_block, 1.0 / denom, &mut zhat[lo..hi]);
-                if let (Some(ix), Some(rg)) = (self.opts.inexact.as_ref(), rng.as_mut()) {
-                    let gnorm = ops::nrm2(&g[lo..hi]);
-                    let eps = gamma
-                        * ix.alpha1
-                        * ix.alpha2.min(if gnorm > 0.0 { 1.0 / gnorm } else { ix.alpha2 });
-                    if eps > 0.0 {
-                        perturb_within(&mut zhat[lo..hi], eps, rg);
+            if self.opts.inexact.is_none() {
+                best_response_sweep(
+                    problem, &layout, &chunks, self.opts.surrogate, tau, &x, &g, &d, &mut zhat,
+                    &mut e,
+                );
+            } else {
+                for i in 0..nb {
+                    let rng_i = layout.range(i);
+                    let (lo, hi) = (rng_i.start, rng_i.end);
+                    best_response_chunk(
+                        problem,
+                        &layout,
+                        self.opts.surrogate,
+                        tau,
+                        &x,
+                        &g,
+                        &d,
+                        i..i + 1,
+                        lo,
+                        &mut zhat[lo..hi],
+                        std::slice::from_mut(&mut e[i]),
+                    );
+                    if let (Some(ix), Some(rg)) = (self.opts.inexact.as_ref(), rng.as_mut()) {
+                        let gnorm = ops::nrm2(&g[lo..hi]);
+                        let eps = gamma
+                            * ix.alpha1
+                            * ix.alpha2.min(if gnorm > 0.0 { 1.0 / gnorm } else { ix.alpha2 });
+                        if eps > 0.0 {
+                            perturb_within(&mut zhat[lo..hi], eps, rg);
+                            e[i] = ops::dist2(&zhat[lo..hi], &x[lo..hi]);
+                        }
                     }
                 }
-                e[i] = ops::dist2(&zhat[lo..hi], &x[lo..hi]);
             }
             let t_parallel = t0.elapsed().as_secs_f64();
 

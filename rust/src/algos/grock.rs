@@ -74,6 +74,10 @@ impl<P: CompositeProblem + ?Sized> Solver<P> for Grock {
         let mut idx: Vec<usize> = (0..nb).collect();
         let v0 = problem.objective(&x);
         let reduce_bytes = 8 * (n.min(1 << 20) + 16);
+        // Fixed block-chunk partition for the candidate sweep (pure
+        // function of the block count; see flexa::par) — the same
+        // partition FPA's sweep uses.
+        let chunks = super::fpa::SweepChunks::new(&layout);
         recorder.setup_done();
 
         let mut iterations = 0;
@@ -82,21 +86,35 @@ impl<P: CompositeProblem + ?Sized> Solver<P> for Grock {
             iterations = k + 1;
             let t0 = Instant::now();
 
-            // Parallel phase: all candidate CD updates + merits.
+            // Parallel phase: all candidate CD updates + merits —
+            // genuinely multi-core via flexa::par (blocks write disjoint
+            // xhat/merit regions, so the chunked run is bit-identical to
+            // the serial sweep at any thread count).
             problem.grad_smooth(&x, &mut g);
-            for i in 0..nb {
-                let r = layout.range(i);
-                let (lo, hi) = (r.start, r.end);
-                let di = d[lo];
-                let v_block: Vec<f64> = (lo..hi).map(|j| x[j] - g[j] / di).collect();
-                problem.prox_block(i, &v_block, 1.0 / di, &mut xhat[lo..hi]);
-                let mut m = 0.0;
-                for j in lo..hi {
-                    let delta = xhat[j] - x[j];
-                    m += di * delta * delta;
-                }
-                merit[i] = m;
-            }
+            crate::par::par_disjoint_mut2(
+                &mut xhat,
+                &chunks.vars,
+                &mut merit,
+                &chunks.blocks,
+                |t, xc, mc| {
+                    let blocks = chunks.blocks[t].clone();
+                    let z0 = chunks.vars[t].start;
+                    let b0 = blocks.start;
+                    for i in blocks {
+                        let r = layout.range(i);
+                        let (lo, hi) = (r.start, r.end);
+                        let di = d[lo];
+                        let v_block: Vec<f64> = (lo..hi).map(|j| x[j] - g[j] / di).collect();
+                        problem.prox_block(i, &v_block, 1.0 / di, &mut xc[lo - z0..hi - z0]);
+                        let mut m = 0.0;
+                        for j in lo..hi {
+                            let delta = xc[j - z0] - x[j];
+                            m += di * delta * delta;
+                        }
+                        mc[i - b0] = m;
+                    }
+                },
+            );
             let t_parallel = t0.elapsed().as_secs_f64();
 
             // Serial phase: top-P selection, unit-step application.

@@ -49,6 +49,15 @@ pub struct SolveOptions {
     /// (via [`Recorder::cancelled`]) and stop early when set. The report
     /// then carries the partial iterate with `converged = false`.
     pub cancel: Option<Arc<AtomicBool>>,
+    /// Kernel-thread budget for the multi-core [`crate::par`] kernels
+    /// (matvec, best-response sweep). `None` = the process default
+    /// (`FLEXA_THREADS` or all host cores). Purely a speed knob: by the
+    /// `flexa::par` chunking contract the results are bit-identical for
+    /// every value. Honored by [`crate::api::Session`] and the
+    /// `flexa::serve` scheduler (which additionally caps it by its
+    /// core-budget policy); direct `Solver::solve` callers scope it via
+    /// [`crate::par::with_threads`].
+    pub threads: Option<usize>,
 }
 
 impl std::fmt::Debug for SolveOptions {
@@ -63,6 +72,7 @@ impl std::fmt::Debug for SolveOptions {
             .field("observer", &self.observer.is_some())
             .field("tau0", &self.tau0)
             .field("cancel", &self.cancel.is_some())
+            .field("threads", &self.threads)
             .finish()
     }
 }
@@ -79,6 +89,7 @@ impl Default for SolveOptions {
             observer: None,
             tau0: None,
             cancel: None,
+            threads: None,
         }
     }
 }
@@ -119,6 +130,20 @@ impl SolveOptions {
     pub fn with_cancel(mut self, cancel: Arc<AtomicBool>) -> Self {
         self.cancel = Some(cancel);
         self
+    }
+    pub fn with_threads(mut self, threads: usize) -> Self {
+        self.threads = Some(threads.max(1));
+        self
+    }
+}
+
+/// Run `f` under the options' kernel-thread budget (no-op scope when
+/// unset) — the shared entry point for [`crate::api::Session`] and the
+/// serve scheduler.
+pub fn with_solve_threads<R>(opts: &SolveOptions, f: impl FnOnce() -> R) -> R {
+    match opts.threads {
+        Some(n) => crate::par::with_threads(n, f),
+        None => f(),
     }
 }
 

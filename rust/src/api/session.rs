@@ -70,6 +70,24 @@ impl ProblemHandle {
     pub fn is_least_squares(&self) -> bool {
         matches!(self, Self::LeastSquares(_))
     }
+
+    /// The gradient-Lipschitz constant if this instance already computed
+    /// it (see [`CompositeProblem::lipschitz_cached`]).
+    pub fn lipschitz_cached(&self) -> Option<f64> {
+        match self {
+            Self::General(p) => p.lipschitz_cached(),
+            Self::LeastSquares(p) => p.lipschitz_cached(),
+        }
+    }
+
+    /// Seed the instance's Lipschitz cache with a previously computed
+    /// value (see [`CompositeProblem::seed_lipschitz`]).
+    pub fn seed_lipschitz(&self, l: f64) {
+        match self {
+            Self::General(p) => p.seed_lipschitz(l),
+            Self::LeastSquares(p) => p.seed_lipschitz(l),
+        }
+    }
 }
 
 /// A type-erased, session-runnable solver.
@@ -232,7 +250,10 @@ impl Session {
         if let Some(obs) = observer {
             opts.observer = Some(obs);
         }
-        let report = solver.solve_session(&problem, &opts)?;
+        // Scope the kernel-thread budget: SolveOptions::threads (when
+        // set) bounds the multi-core kernels for exactly this solve.
+        let report =
+            crate::algos::with_solve_threads(&opts, || solver.solve_session(&problem, &opts))?;
         if let Some(obs) = &opts.observer {
             obs.on_finish(&solver.name(), report.converged, report.objective);
         }

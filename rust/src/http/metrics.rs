@@ -106,6 +106,12 @@ pub fn render_prometheus(
     counter(&mut s, "flexa_cache_hits_total", "Warm-start cache hits.", cache.hits);
     counter(&mut s, "flexa_cache_misses_total", "Warm-start cache misses.", cache.misses);
     counter(&mut s, "flexa_cache_evictions_total", "Warm-start cache LRU evictions.", cache.evictions);
+    counter(
+        &mut s,
+        "flexa_cache_lipschitz_reuses_total",
+        "Warm-start hits carrying a cached spectral-norm estimate (power iteration skipped when the job's solver needs L).",
+        cache.lipschitz_reuses,
+    );
     gauge(&mut s, "flexa_cache_entries", "Warm-start cache entries.", cache.entries as f64);
     gauge(&mut s, "flexa_cache_bytes", "Warm-start cache bytes in use.", cache.bytes as f64);
 
@@ -132,7 +138,15 @@ mod tests {
             cancelled: 1,
             deadline_expired: 0,
         };
-        let cache = CacheStats { hits: 7, misses: 2, evictions: 1, entries: 1, bytes: 640, byte_budget: 1 << 20 };
+        let cache = CacheStats {
+            hits: 7,
+            misses: 2,
+            evictions: 1,
+            lipschitz_reuses: 4,
+            entries: 1,
+            bytes: 640,
+            byte_budget: 1 << 20,
+        };
         let text = render_prometheus(&http, &sched, &cache, 12.5);
         for needle in [
             "flexa_http_requests_total{endpoint=\"post_jobs\"} 3",
@@ -145,6 +159,7 @@ mod tests {
             "flexa_jobs_running 4",
             "flexa_cache_hits_total 7",
             "flexa_cache_misses_total 2",
+            "flexa_cache_lipschitz_reuses_total 4",
             "flexa_uptime_seconds 12.5",
         ] {
             assert!(text.contains(needle), "missing `{needle}` in:\n{text}");

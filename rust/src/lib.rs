@@ -67,6 +67,7 @@ pub mod datagen;
 pub mod http;
 pub mod linalg;
 pub mod metrics;
+pub mod par;
 pub mod prng;
 pub mod problems;
 pub mod proptest;

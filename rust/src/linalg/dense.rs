@@ -7,7 +7,46 @@
 
 use super::ops;
 use super::MatVec;
+use crate::par;
 use crate::prng::Xoshiro256pp;
+
+/// Minimum rows per task for the row-partitioned `matvec` (one task ≈
+/// tens of microseconds of work on a 1000-column matrix — enough to
+/// amortize pool dispatch without starving small problems of overlap).
+const MIN_ROWS_PER_TASK: usize = 32;
+
+/// Minimum columns per task for the column-partitioned `matvec_t` /
+/// `col_sq_norms`.
+const MIN_COLS_PER_TASK: usize = 64;
+
+/// One fused 4-column accumulation over a row window:
+/// `y[i] += x0·c0[i] + x1·c1[i] + x2·c2[i] + x3·c3[i]`.
+///
+/// The single home of the 4-wide unroll that `matvec` used to duplicate
+/// against its own tail handling; both the serial and the row-chunked
+/// parallel paths call it, so their arithmetic is identical by
+/// construction.
+#[inline]
+fn axpy4(c0: &[f64], c1: &[f64], c2: &[f64], c3: &[f64], x: [f64; 4], y: &mut [f64]) {
+    for i in 0..y.len() {
+        y[i] += x[0] * c0[i] + x[1] * c1[i] + x[2] * c2[i] + x[3] * c3[i];
+    }
+}
+
+/// One fused 4-column dot block: `out[k] = cₖᵀx` for the four columns.
+/// Shares the read of `x` across the block (the `matvec_t` hot loop).
+#[inline]
+fn dot4(c0: &[f64], c1: &[f64], c2: &[f64], c3: &[f64], x: &[f64]) -> [f64; 4] {
+    let (mut s0, mut s1, mut s2, mut s3) = (0.0, 0.0, 0.0, 0.0);
+    for i in 0..x.len() {
+        let xi = x[i];
+        s0 += c0[i] * xi;
+        s1 += c1[i] * xi;
+        s2 += c2[i] * xi;
+        s3 += c3[i] * xi;
+    }
+    [s0, s1, s2, s3]
+}
 
 /// Dense `m × n` matrix, column-major storage.
 #[derive(Clone, Debug, PartialEq)]
@@ -115,6 +154,61 @@ impl DenseMatrix {
         DenseMatrix::from_fn(self.cols, self.rows, |i, j| self.get(j, i))
     }
 
+    /// `y[rows] = (A x)[rows]` for a row window — the unit the parallel
+    /// `matvec` partitions over. Every `y[i]` accumulates over columns
+    /// in the same order and with the same 4-wide blocking as the full
+    /// serial sweep, so chunking the rows cannot change a single bit.
+    fn matvec_rows(&self, x: &[f64], rows: std::ops::Range<usize>, y: &mut [f64]) {
+        let m = self.rows;
+        let (r0, rl) = (rows.start, rows.len());
+        debug_assert_eq!(y.len(), rl);
+        y.fill(0.0);
+        let blocks = self.cols / 4;
+        for b in 0..blocks {
+            let j = 4 * b;
+            let x4 = [x[j], x[j + 1], x[j + 2], x[j + 3]];
+            if x4 == [0.0; 4] {
+                continue;
+            }
+            let base = &self.data[j * m..(j + 4) * m];
+            let (c0, rest) = base.split_at(m);
+            let (c1, rest) = rest.split_at(m);
+            let (c2, c3) = rest.split_at(m);
+            axpy4(&c0[r0..r0 + rl], &c1[r0..r0 + rl], &c2[r0..r0 + rl], &c3[r0..r0 + rl], x4, y);
+        }
+        for j in 4 * blocks..self.cols {
+            let xj = x[j];
+            if xj != 0.0 {
+                ops::axpy(xj, &self.col(j)[r0..r0 + rl], y);
+            }
+        }
+    }
+
+    /// `y = (Aᵀ x)[cols]` for a column window whose start is 4-aligned —
+    /// the unit the parallel `matvec_t` partitions over. Interior
+    /// windows see exactly the global 4-column blocks (alignment is
+    /// guaranteed by [`par::task_ranges`] with `align = 4`), so each
+    /// `y[j]` is the same fused block dot the serial sweep computes.
+    fn matvec_t_cols(&self, x: &[f64], cols: std::ops::Range<usize>, y: &mut [f64]) {
+        let m = self.rows;
+        let j0 = cols.start;
+        debug_assert_eq!(y.len(), cols.len());
+        debug_assert!(j0 % 4 == 0 || cols.len() < 4);
+        let blocks = cols.len() / 4;
+        for b in 0..blocks {
+            let j = j0 + 4 * b;
+            let base = &self.data[j * m..(j + 4) * m];
+            let (c0, rest) = base.split_at(m);
+            let (c1, rest) = rest.split_at(m);
+            let (c2, c3) = rest.split_at(m);
+            let s = dot4(c0, c1, c2, c3, x);
+            y[j - j0..j - j0 + 4].copy_from_slice(&s);
+        }
+        for j in j0 + 4 * blocks..cols.end {
+            y[j - j0] = ops::dot(self.col(j), x);
+        }
+    }
+
     /// `C = AᵀA` (n×n). Only used for small n in tests.
     pub fn gram(&self) -> DenseMatrix {
         let n = self.cols;
@@ -161,76 +255,47 @@ impl MatVec for DenseMatrix {
         self.cols
     }
 
-    /// `y = A x`: 4-column blocked accumulation. Relative to the naive
-    /// one-axpy-per-column sweep this quarters the read/write traffic on
-    /// `y` (the matrix itself is streamed once either way), which is the
-    /// difference between ~2.3 and ~4+ GFLOP/s on DRAM-resident matrices
-    /// (see EXPERIMENTS.md §Perf).
+    /// `y = A x`: 4-column blocked accumulation (see [`axpy4`]), row-
+    /// partitioned over the thread budget. Each `y[i]` is computed by
+    /// exactly one task with the serial sweep's column order, so the
+    /// result is bit-identical to serial execution at any thread count.
     fn matvec(&self, x: &[f64], y: &mut [f64]) {
         assert_eq!(x.len(), self.cols, "matvec: x length");
         assert_eq!(y.len(), self.rows, "matvec: y length");
-        y.fill(0.0);
-        let m = self.rows;
-        let blocks = self.cols / 4;
-        for b in 0..blocks {
-            let j = 4 * b;
-            let (x0, x1, x2, x3) = (x[j], x[j + 1], x[j + 2], x[j + 3]);
-            if x0 == 0.0 && x1 == 0.0 && x2 == 0.0 && x3 == 0.0 {
-                continue;
-            }
-            let base = &self.data[j * m..(j + 4) * m];
-            let (c0, rest) = base.split_at(m);
-            let (c1, rest) = rest.split_at(m);
-            let (c2, c3) = rest.split_at(m);
-            for i in 0..m {
-                y[i] += x0 * c0[i] + x1 * c1[i] + x2 * c2[i] + x3 * c3[i];
-            }
+        // Serial shortcut allowed: row stripes are element-independent,
+        // so the bits match the partitioned path regardless.
+        if par::current_threads() == 1 || self.rows < 2 * MIN_ROWS_PER_TASK {
+            self.matvec_rows(x, 0..self.rows, y);
+            return;
         }
-        for j in 4 * blocks..self.cols {
-            let xj = x[j];
-            if xj != 0.0 {
-                ops::axpy(xj, self.col(j), y);
-            }
-        }
+        let ranges = par::task_ranges(self.rows, MIN_ROWS_PER_TASK, 1);
+        par::par_disjoint_mut(y, &ranges, |t, yc| self.matvec_rows(x, ranges[t].clone(), yc));
     }
 
-    /// `y = Aᵀ x`: 4-column blocked dot products (shares the read of `x`
-    /// across the block; the matrix stream dominates and this runs at
-    /// effective-bandwidth roofline).
+    /// `y = Aᵀ x`: 4-column blocked dot products (see [`dot4`]), column-
+    /// partitioned on 4-aligned boundaries. Each `y[j]` is one task's
+    /// block dot, identical to the serial sweep's — bit-identical at any
+    /// thread count.
     fn matvec_t(&self, x: &[f64], y: &mut [f64]) {
         assert_eq!(x.len(), self.rows, "matvec_t: x length");
         assert_eq!(y.len(), self.cols, "matvec_t: y length");
-        let m = self.rows;
-        let blocks = self.cols / 4;
-        for b in 0..blocks {
-            let j = 4 * b;
-            let base = &self.data[j * m..(j + 4) * m];
-            let (c0, rest) = base.split_at(m);
-            let (c1, rest) = rest.split_at(m);
-            let (c2, c3) = rest.split_at(m);
-            let (mut s0, mut s1, mut s2, mut s3) = (0.0, 0.0, 0.0, 0.0);
-            for i in 0..m {
-                let xi = x[i];
-                s0 += c0[i] * xi;
-                s1 += c1[i] * xi;
-                s2 += c2[i] * xi;
-                s3 += c3[i] * xi;
-            }
-            y[j] = s0;
-            y[j + 1] = s1;
-            y[j + 2] = s2;
-            y[j + 3] = s3;
+        if par::current_threads() == 1 || self.cols < 2 * MIN_COLS_PER_TASK {
+            self.matvec_t_cols(x, 0..self.cols, y);
+            return;
         }
-        for j in 4 * blocks..self.cols {
-            y[j] = ops::dot(self.col(j), x);
-        }
+        let ranges = par::task_ranges(self.cols, MIN_COLS_PER_TASK, 4);
+        par::par_disjoint_mut(y, &ranges, |t, yc| self.matvec_t_cols(x, ranges[t].clone(), yc));
     }
 
     fn col_sq_norms(&self, out: &mut [f64]) {
         assert_eq!(out.len(), self.cols);
-        for j in 0..self.cols {
-            out[j] = ops::nrm2_sq(self.col(j));
-        }
+        let ranges = par::task_ranges(self.cols, MIN_COLS_PER_TASK, 1);
+        // Per-column values are independent: same bits, chunked or not.
+        par::par_disjoint_mut(out, &ranges, |t, oc| {
+            for (k, j) in ranges[t].clone().enumerate() {
+                oc[k] = ops::nrm2_sq(self.col(j));
+            }
+        });
     }
 
     fn axpy_col(&self, j: usize, alpha: f64, y: &mut [f64]) {
@@ -238,7 +303,7 @@ impl MatVec for DenseMatrix {
     }
 
     fn dot_col(&self, j: usize, x: &[f64]) -> f64 {
-        ops::dot(self.col(j), x)
+        ops::par_dot(self.col(j), x)
     }
 }
 

@@ -25,6 +25,32 @@ pub fn dot(x: &[f64], y: &[f64]) -> f64 {
     s
 }
 
+/// Minimum elements per task before [`par_dot`] goes parallel — a
+/// fixed constant (so the chunk structure is a pure function of the
+/// length; see [`crate::par`] on why that makes the bits independent of
+/// the thread count).
+const PAR_DOT_MIN_CHUNK: usize = 16 * 1024;
+
+/// Dot product with deterministic chunked parallelism: below
+/// `PAR_DOT_MIN_CHUNK · 2` elements this *is* [`dot`]; above, per-chunk
+/// [`dot`]s are folded in fixed chunk order, giving the same bits for
+/// every `FLEXA_THREADS` value.
+pub fn par_dot(x: &[f64], y: &[f64]) -> f64 {
+    assert_eq!(x.len(), y.len(), "par_dot: length mismatch");
+    // Cheap alloc-free guard first: dot_col sits in per-coordinate
+    // inner loops, and below two chunks there is nothing to split.
+    if x.len() < 2 * PAR_DOT_MIN_CHUNK {
+        return dot(x, y);
+    }
+    let ranges = crate::par::task_ranges(x.len(), PAR_DOT_MIN_CHUNK, 4);
+    if ranges.len() <= 1 {
+        return dot(x, y);
+    }
+    crate::par::map_ranges(&ranges, |_, r| dot(&x[r.clone()], &y[r]))
+        .iter()
+        .sum()
+}
+
 /// `y += alpha * x`.
 #[inline]
 pub fn axpy(alpha: f64, x: &[f64], y: &mut [f64]) {
@@ -136,6 +162,24 @@ mod tests {
         let y: Vec<f64> = (0..103).map(|i| (i as f64).sin()).collect();
         let naive: f64 = x.iter().zip(&y).map(|(a, b)| a * b).sum();
         assert!((dot(&x, &y) - naive).abs() < 1e-9 * naive.abs().max(1.0));
+    }
+
+    #[test]
+    fn par_dot_matches_serial_below_threshold_and_is_thread_invariant() {
+        // Below the chunk threshold par_dot IS dot, bit for bit.
+        let x: Vec<f64> = (0..1003).map(|i| (i as f64).cos()).collect();
+        let y: Vec<f64> = (0..1003).map(|i| (i as f64 * 0.5).sin()).collect();
+        assert_eq!(par_dot(&x, &y).to_bits(), dot(&x, &y).to_bits());
+        // Above it, the chunk-folded value is identical for every thread
+        // budget and close to the straight fold.
+        let x: Vec<f64> = (0..100_000).map(|i| (i as f64).cos()).collect();
+        let y: Vec<f64> = (0..100_000).map(|i| (i as f64 * 0.3).sin()).collect();
+        let d1 = crate::par::with_threads(1, || par_dot(&x, &y));
+        for threads in [2, 4, 8] {
+            let dt = crate::par::with_threads(threads, || par_dot(&x, &y));
+            assert_eq!(d1.to_bits(), dt.to_bits(), "threads={threads}");
+        }
+        assert!((d1 - dot(&x, &y)).abs() <= 1e-9 * dot(&x, &x).sqrt().max(1.0));
     }
 
     #[test]

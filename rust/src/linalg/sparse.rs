@@ -5,6 +5,15 @@
 //! that shard's arrays.
 
 use super::MatVec;
+use crate::par;
+
+/// Minimum columns per task for the chunked kernels — fixed, so the
+/// chunk structure (and hence the reduction fold order of `matvec`) is
+/// a pure function of the matrix shape, never of the thread count.
+const MIN_COLS_PER_TASK: usize = 256;
+
+/// Minimum stored values per task for the chunked `dot_col`.
+const MIN_NNZ_PER_TASK: usize = 16 * 1024;
 
 /// Sparse `m × n` matrix in CSC format.
 #[derive(Clone, Debug)]
@@ -85,6 +94,20 @@ impl CscMatrix {
     pub fn density(&self) -> f64 {
         self.nnz() as f64 / (self.rows * self.cols) as f64
     }
+
+    /// Scatter-accumulate the columns `cols` of `A x` into `y`
+    /// (`y.len() == rows`) — the per-task unit of the chunked `matvec`.
+    fn matvec_cols(&self, x: &[f64], cols: std::ops::Range<usize>, y: &mut [f64]) {
+        for j in cols {
+            let xj = x[j];
+            if xj == 0.0 {
+                continue;
+            }
+            for k in self.col_ptr[j]..self.col_ptr[j + 1] {
+                y[self.row_idx[k]] += self.values[k] * xj;
+            }
+        }
+    }
 }
 
 impl MatVec for CscMatrix {
@@ -96,42 +119,80 @@ impl MatVec for CscMatrix {
         self.cols
     }
 
+    /// `y = A x`: the column scatter races on `y`, so the parallel form
+    /// gives each column chunk a private accumulator and folds them in
+    /// fixed chunk order. The chunk count is a pure function of the
+    /// shape (never the thread count), so the bits are identical for
+    /// every `FLEXA_THREADS` value — small matrices always take the
+    /// single-chunk path, which is the plain serial scatter.
     fn matvec(&self, x: &[f64], y: &mut [f64]) {
         assert_eq!(x.len(), self.cols);
         assert_eq!(y.len(), self.rows);
-        y.fill(0.0);
-        for j in 0..self.cols {
-            let xj = x[j];
-            if xj == 0.0 {
-                continue;
-            }
-            for k in self.col_ptr[j]..self.col_ptr[j + 1] {
-                y[self.row_idx[k]] += self.values[k] * xj;
-            }
+        let ranges = par::task_ranges(self.cols, MIN_COLS_PER_TASK, 1);
+        let m = self.rows;
+        let nt = ranges.len();
+        // Serial scatter for: single-chunk shapes; matrices too sparse
+        // for the chunked form to pay (the O(nt·m) accumulator zeroing
+        // + fold must be dominated by the O(nnz) scatter work); and
+        // very tall matrices where the accumulators alone would cost
+        // nt·m doubles. All three conditions are pure functions of the
+        // matrix (shape + stored nnz) — never of the thread count — so
+        // the fold structure stays deterministic.
+        if nt <= 1 || 2 * nt * m > self.nnz() || nt * m > (1 << 24) {
+            y.fill(0.0);
+            self.matvec_cols(x, 0..self.cols, y);
+            return;
         }
+        // Private per-chunk accumulators, one row-space vector each.
+        let mut partials = vec![0.0; nt * m];
+        let buf_ranges: Vec<std::ops::Range<usize>> = (0..nt).map(|t| t * m..(t + 1) * m).collect();
+        par::par_disjoint_mut(&mut partials, &buf_ranges, |t, p| {
+            self.matvec_cols(x, ranges[t].clone(), p);
+        });
+        // Fold partials in chunk order; row-partitioned, but every row's
+        // fold order is the same fixed t = 0..nt, so the split is free.
+        let row_ranges = par::task_ranges(m, 1024, 1);
+        par::par_disjoint_mut(y, &row_ranges, |rt, yc| {
+            let rows = row_ranges[rt].clone();
+            yc.copy_from_slice(&partials[rows.start..rows.end]);
+            for t in 1..nt {
+                let p = &partials[t * m + rows.start..t * m + rows.end];
+                for (yi, pi) in yc.iter_mut().zip(p) {
+                    *yi += *pi;
+                }
+            }
+        });
     }
 
+    /// `y = Aᵀ x`: per-column fold — outputs are independent, so the
+    /// column partition is bit-identical to serial at any thread count.
     fn matvec_t(&self, x: &[f64], y: &mut [f64]) {
         assert_eq!(x.len(), self.rows);
         assert_eq!(y.len(), self.cols);
-        for j in 0..self.cols {
-            let mut s = 0.0;
-            for k in self.col_ptr[j]..self.col_ptr[j + 1] {
-                s += self.values[k] * x[self.row_idx[k]];
+        let ranges = par::task_ranges(self.cols, MIN_COLS_PER_TASK, 1);
+        par::par_disjoint_mut(y, &ranges, |t, yc| {
+            for (k, j) in ranges[t].clone().enumerate() {
+                let mut s = 0.0;
+                for kk in self.col_ptr[j]..self.col_ptr[j + 1] {
+                    s += self.values[kk] * x[self.row_idx[kk]];
+                }
+                yc[k] = s;
             }
-            y[j] = s;
-        }
+        });
     }
 
     fn col_sq_norms(&self, out: &mut [f64]) {
         assert_eq!(out.len(), self.cols);
-        for j in 0..self.cols {
-            let mut s = 0.0;
-            for k in self.col_ptr[j]..self.col_ptr[j + 1] {
-                s += self.values[k] * self.values[k];
+        let ranges = par::task_ranges(self.cols, MIN_COLS_PER_TASK, 1);
+        par::par_disjoint_mut(out, &ranges, |t, oc| {
+            for (k, j) in ranges[t].clone().enumerate() {
+                let mut s = 0.0;
+                for kk in self.col_ptr[j]..self.col_ptr[j + 1] {
+                    s += self.values[kk] * self.values[kk];
+                }
+                oc[k] = s;
             }
-            out[j] = s;
-        }
+        });
     }
 
     fn axpy_col(&self, j: usize, alpha: f64, y: &mut [f64]) {
@@ -140,12 +201,27 @@ impl MatVec for CscMatrix {
         }
     }
 
+    /// Single-column gather dot, chunked over the column's stored
+    /// values with a fixed fold order once it is long enough. The
+    /// alloc-free length guard comes first: `dot_col` sits in
+    /// per-coordinate inner loops (Gauss–Seidel sweeps).
     fn dot_col(&self, j: usize, x: &[f64]) -> f64 {
-        let mut s = 0.0;
-        for k in self.col_ptr[j]..self.col_ptr[j + 1] {
-            s += self.values[k] * x[self.row_idx[k]];
+        let (lo, hi) = (self.col_ptr[j], self.col_ptr[j + 1]);
+        let gather = |range: std::ops::Range<usize>| {
+            let mut s = 0.0;
+            for k in range {
+                s += self.values[k] * x[self.row_idx[k]];
+            }
+            s
+        };
+        if hi - lo < 2 * MIN_NNZ_PER_TASK {
+            return gather(lo..hi);
         }
-        s
+        let ranges = par::task_ranges(hi - lo, MIN_NNZ_PER_TASK, 1);
+        if ranges.len() <= 1 {
+            return gather(lo..hi);
+        }
+        par::map_ranges(&ranges, |_, r| gather(lo + r.start..lo + r.end)).iter().sum()
     }
 }
 

@@ -196,6 +196,7 @@ fn cmd_serve(args: &[String]) -> anyhow::Result<()> {
         .opt("workers", Some("4"), "worker threads")
         .opt("queue", Some("64"), "bounded queue capacity")
         .opt("cache-mb", Some("64"), "warm-start cache budget in MiB (0 disables)")
+        .opt("threads", None, "core budget shared by workers x kernel threads, 1..=usable host cores (default: all host cores)")
         .opt("http", None, "serve over HTTP on this address (e.g. 127.0.0.1:8080; port 0 picks one); the jobs file becomes optional pre-submitted work")
         .opt("max-conns", Some("64"), "concurrent HTTP connections (with --http)")
         .opt("max-body-kb", Some("1024"), "largest accepted HTTP request body, KiB (with --http)")
@@ -230,10 +231,15 @@ fn cmd_serve(args: &[String]) -> anyhow::Result<()> {
         }
     };
 
-    let config = ServeConfig::default()
+    let mut config = ServeConfig::default()
         .with_workers(p.usize("workers")?)
         .with_queue_capacity(p.usize("queue")?)
         .with_cache_bytes(p.usize("cache-mb")?.saturating_mul(1 << 20));
+    if p.get("threads").is_some() {
+        let threads =
+            flexa::serve::jobfile::validate_threads(p.usize("threads")?, "--threads")?;
+        config = config.with_core_budget(threads);
+    }
     // println! locks stdout per call, so concurrent workers emit whole
     // lines.
     let observer: Option<Arc<dyn ServeObserver>> = if p.flag("stream") {
@@ -489,6 +495,21 @@ mod tests {
         let args = args_of(&[path.to_str().unwrap(), "--workers", "2", "--quiet", "--stream"]);
         cmd_serve(&args).unwrap();
         std::fs::remove_file(&path).ok();
+    }
+
+    /// `--threads` outside `1..=host cores` is rejected before anything
+    /// starts, with the valid range in the message.
+    #[test]
+    fn serve_validates_threads_range() {
+        let cores = flexa::par::host_cores().min(flexa::par::MAX_POOL_THREADS);
+        for bad in [0usize, cores + 1] {
+            let err =
+                cmd_serve(&args_of(&["--http", "127.0.0.1:0", "--threads", &bad.to_string()]))
+                    .unwrap_err()
+                    .to_string();
+            assert!(err.contains(&format!("between 1 and {cores}")), "{err}");
+            assert!(err.contains("--threads"), "{err}");
+        }
     }
 
     /// `--http` validates the bind address up front; without it a jobs

@@ -1,0 +1,305 @@
+//! # `flexa::par` — deterministic multi-core kernels, from `std` only
+//!
+//! The paper's headline claim is per-iteration parallelism across
+//! coordinate blocks; this module makes the *measured* wall-clock scale
+//! with cores (the BSP cost model already simulated it). It is the one
+//! place in the crate that owns threads for compute:
+//!
+//! * a persistent fork-join [`pool`] (Condvar task latch, lazily grown,
+//!   zero new dependencies),
+//! * a **deterministic chunking contract** ([`task_ranges`]): task
+//!   boundaries are a pure function of the data length and fixed
+//!   constants — *never* of the thread count — so
+//!   - element-independent kernels (dense matvec row stripes, per-column
+//!     reductions, block best-responses) are bit-identical to their
+//!     serial execution, and
+//!   - accumulation kernels (CSC matvec, long dots) fold per-task
+//!     partials in fixed task order, making the result bit-identical for
+//!     every `FLEXA_THREADS` value, 1 included.
+//!   This preserves the serve-layer golden-determinism guarantees: a
+//!   job's result is the same on a loaded 64-core box and a laptop.
+//! * safe disjoint-slice primitives ([`par_disjoint_mut`],
+//!   [`par_disjoint_mut2`]) that contain the unsafe pointer plumbing the
+//!   kernels would otherwise each repeat.
+//!
+//! ## Thread budget
+//!
+//! The default budget is `FLEXA_THREADS` (clamped to
+//! `[1, MAX_POOL_THREADS]`) or the host's available parallelism.
+//! [`with_threads`] overrides it for a scope on the current thread —
+//! [`crate::api::Session`] and the `flexa::serve` scheduler use it to
+//! honor `SolveOptions::threads` and the scheduler's core-budget
+//! policy. The budget only controls how many threads *work*; by the
+//! chunking contract above it never changes what they compute.
+
+pub mod pool;
+
+pub use pool::{Pool, MAX_POOL_THREADS};
+
+use std::cell::Cell;
+use std::ops::Range;
+use std::sync::OnceLock;
+
+/// Fixed upper bound on tasks per parallel region. Part of the numeric
+/// contract: raising it changes chunk shapes, hence the bits of the
+/// fold-based kernels — treat like a file-format constant.
+pub const MAX_TASKS: usize = 16;
+
+/// Host core count (available parallelism; 1 if undetectable).
+pub fn host_cores() -> usize {
+    static CORES: OnceLock<usize> = OnceLock::new();
+    *CORES.get_or_init(|| std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1))
+}
+
+/// Default kernel-thread budget: `FLEXA_THREADS` if set (clamped to
+/// `[1, MAX_POOL_THREADS]`), else [`host_cores`].
+pub fn default_threads() -> usize {
+    static DEFAULT: OnceLock<usize> = OnceLock::new();
+    *DEFAULT.get_or_init(|| {
+        match std::env::var("FLEXA_THREADS").ok().and_then(|v| v.parse::<usize>().ok()) {
+            Some(n) => n.clamp(1, MAX_POOL_THREADS),
+            None => host_cores().clamp(1, MAX_POOL_THREADS),
+        }
+    })
+}
+
+thread_local! {
+    static BUDGET: Cell<Option<usize>> = const { Cell::new(None) };
+}
+
+/// The thread budget kernels on this thread currently run under.
+pub fn current_threads() -> usize {
+    BUDGET.with(Cell::get).unwrap_or_else(default_threads)
+}
+
+/// Run `f` with the kernel-thread budget set to `threads` (clamped to
+/// `[1, MAX_POOL_THREADS]`) on the current thread; restored on exit,
+/// panics included. Purely a speed knob — results are identical for
+/// every budget (see the module docs).
+pub fn with_threads<R>(threads: usize, f: impl FnOnce() -> R) -> R {
+    struct Restore(Option<usize>);
+    impl Drop for Restore {
+        fn drop(&mut self) {
+            BUDGET.with(|b| b.set(self.0));
+        }
+    }
+    let prev = BUDGET.with(|b| b.replace(Some(threads.clamp(1, MAX_POOL_THREADS))));
+    let _restore = Restore(prev);
+    f()
+}
+
+/// Deterministic task boundaries over `0..len`: up to [`MAX_TASKS`]
+/// contiguous ranges of at least `min_chunk` elements, sizes rounded up
+/// to a multiple of `align` (so e.g. 4-column kernel blocks never
+/// straddle a boundary). **Pure in `(len, min_chunk, align)`** — thread
+/// count plays no part, which is what makes fold-order reductions
+/// bit-identical across `FLEXA_THREADS` values.
+pub fn task_ranges(len: usize, min_chunk: usize, align: usize) -> Vec<Range<usize>> {
+    assert!(align >= 1, "task_ranges: align must be >= 1");
+    if len == 0 {
+        return Vec::new();
+    }
+    let div_up = |a: usize, b: usize| (a + b - 1) / b;
+    let ntasks = (len / min_chunk.max(1)).clamp(1, MAX_TASKS);
+    let chunk = div_up(div_up(len, ntasks), align) * align;
+    let mut ranges = Vec::with_capacity(ntasks);
+    let mut start = 0;
+    while start < len {
+        let end = (start + chunk).min(len);
+        ranges.push(start..end);
+        start = end;
+    }
+    ranges
+}
+
+/// Run `f(task, range)` for every range, spread over the current thread
+/// budget (the calling thread participates).
+pub fn for_each_range(ranges: &[Range<usize>], f: impl Fn(usize, Range<usize>) + Sync) {
+    match ranges.len() {
+        0 => {}
+        1 => f(0, ranges[0].clone()),
+        n => Pool::global().run(n, current_threads().min(n), &|t| f(t, ranges[t].clone())),
+    }
+}
+
+/// Assert `ranges` are sorted, non-overlapping and within `len` — the
+/// precondition that makes handing out concurrent `&mut` chunks sound.
+fn validate_disjoint(ranges: &[Range<usize>], len: usize, what: &str) {
+    let mut prev_end = 0;
+    for (i, r) in ranges.iter().enumerate() {
+        assert!(
+            r.start >= prev_end && r.end >= r.start && r.end <= len,
+            "{what}: range {i} ({r:?}) overlaps or exceeds len {len}"
+        );
+        prev_end = r.end;
+    }
+}
+
+/// Raw-pointer smuggler for provably disjoint writes (kept private; the
+/// public API re-checks disjointness at runtime).
+struct SendPtr<T>(*mut T);
+unsafe impl<T: Send> Send for SendPtr<T> {}
+unsafe impl<T: Send> Sync for SendPtr<T> {}
+
+/// Run `f(task, &mut data[ranges[task]])` for every range in parallel.
+/// Ranges must be sorted, disjoint and in bounds (checked).
+pub fn par_disjoint_mut<T: Send>(
+    data: &mut [T],
+    ranges: &[Range<usize>],
+    f: impl Fn(usize, &mut [T]) + Sync,
+) {
+    validate_disjoint(ranges, data.len(), "par_disjoint_mut");
+    let ptr = SendPtr(data.as_mut_ptr());
+    for_each_range(ranges, |t, r| {
+        // SAFETY: ranges are disjoint and in bounds (validated above),
+        // and the pool runs each task index exactly once, so no two
+        // threads ever alias a chunk.
+        let chunk = unsafe { std::slice::from_raw_parts_mut(ptr.0.add(r.start), r.len()) };
+        f(t, chunk);
+    });
+}
+
+/// Two-buffer variant: task `t` gets `&mut a[a_ranges[t]]` and
+/// `&mut b[b_ranges[t]]` (the FPA sweep's zhat-chunk + E-chunk shape).
+/// Both range lists must be sorted, disjoint, in bounds and of equal
+/// length (checked).
+pub fn par_disjoint_mut2<A: Send, B: Send>(
+    a: &mut [A],
+    a_ranges: &[Range<usize>],
+    b: &mut [B],
+    b_ranges: &[Range<usize>],
+    f: impl Fn(usize, &mut [A], &mut [B]) + Sync,
+) {
+    assert_eq!(a_ranges.len(), b_ranges.len(), "par_disjoint_mut2: range list lengths");
+    validate_disjoint(a_ranges, a.len(), "par_disjoint_mut2 (a)");
+    validate_disjoint(b_ranges, b.len(), "par_disjoint_mut2 (b)");
+    let pa = SendPtr(a.as_mut_ptr());
+    let pb = SendPtr(b.as_mut_ptr());
+    for_each_range(a_ranges, |t, ra| {
+        let rb = b_ranges[t].clone();
+        // SAFETY: both range lists validated disjoint/in-bounds; each
+        // task index runs exactly once.
+        let ca = unsafe { std::slice::from_raw_parts_mut(pa.0.add(ra.start), ra.len()) };
+        let cb = unsafe { std::slice::from_raw_parts_mut(pb.0.add(rb.start), rb.len()) };
+        f(t, ca, cb);
+    });
+}
+
+/// Deterministic map over ranges: `out[t] = f(t, ranges[t])`, computed
+/// in parallel. Fold `out` in index order for a reduction whose bits
+/// are independent of the thread count.
+pub fn map_ranges(ranges: &[Range<usize>], f: impl Fn(usize, Range<usize>) -> f64 + Sync) -> Vec<f64> {
+    let mut out = vec![0.0; ranges.len()];
+    let unit: Vec<Range<usize>> = (0..ranges.len()).map(|t| t..t + 1).collect();
+    let inner = &f;
+    par_disjoint_mut(&mut out, &unit, |t, slot| slot[0] = inner(t, ranges[t].clone()));
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::{AtomicUsize, Ordering};
+
+    #[test]
+    fn task_ranges_cover_and_are_pure_in_len() {
+        for len in [0usize, 1, 7, 31, 32, 100, 1000, 12345] {
+            let ranges = task_ranges(len, 32, 4);
+            let covered: usize = ranges.iter().map(|r| r.len()).sum();
+            assert_eq!(covered, len, "len {len}");
+            let mut prev = 0;
+            for r in &ranges {
+                assert_eq!(r.start, prev, "contiguous");
+                prev = r.end;
+            }
+            assert!(ranges.len() <= MAX_TASKS);
+            // Pure function: same input, same boundaries.
+            assert_eq!(ranges, task_ranges(len, 32, 4));
+            // All interior boundaries are 4-aligned.
+            for r in ranges.iter().take(ranges.len().saturating_sub(1)) {
+                assert_eq!(r.end % 4, 0, "len {len}: boundary {} not aligned", r.end);
+            }
+        }
+    }
+
+    #[test]
+    fn task_ranges_respect_min_chunk() {
+        assert_eq!(task_ranges(100, 1000, 1).len(), 1, "below min_chunk stays one task");
+        assert!(task_ranges(64 * 1024, 1024, 1).len() == MAX_TASKS);
+    }
+
+    #[test]
+    fn with_threads_restores_on_exit_and_unwind() {
+        let outer = current_threads();
+        with_threads(3, || assert_eq!(current_threads(), 3));
+        assert_eq!(current_threads(), outer);
+        let _ = std::panic::catch_unwind(|| with_threads(2, || panic!("x")));
+        assert_eq!(current_threads(), outer);
+        // Clamped below 1.
+        with_threads(0, || assert_eq!(current_threads(), 1));
+    }
+
+    #[test]
+    fn par_disjoint_mut_writes_each_chunk_once() {
+        let mut data = vec![0usize; 1000];
+        let ranges = task_ranges(1000, 10, 1);
+        par_disjoint_mut(&mut data, &ranges, |t, chunk| {
+            for v in chunk.iter_mut() {
+                *v += t + 1;
+            }
+        });
+        for (i, v) in data.iter().enumerate() {
+            let t = ranges.iter().position(|r| r.contains(&i)).unwrap();
+            assert_eq!(*v, t + 1, "index {i}");
+        }
+    }
+
+    #[test]
+    #[should_panic(expected = "overlaps")]
+    fn par_disjoint_mut_rejects_overlap() {
+        let mut data = vec![0.0; 10];
+        par_disjoint_mut(&mut data, &[0..6, 5..10], |_, _| {});
+    }
+
+    #[test]
+    fn par_disjoint_mut2_pairs_chunks() {
+        let mut a = vec![0.0f64; 100];
+        let mut b = vec![0usize; 10];
+        let a_ranges: Vec<_> = (0..10).map(|i| i * 10..(i + 1) * 10).collect();
+        let b_ranges: Vec<_> = (0..10).map(|i| i..i + 1).collect();
+        par_disjoint_mut2(&mut a, &a_ranges, &mut b, &b_ranges, |t, ca, cb| {
+            ca.fill(t as f64);
+            cb[0] = ca.len();
+        });
+        assert!(b.iter().all(|&n| n == 10));
+        assert_eq!(a[95], 9.0);
+    }
+
+    #[test]
+    fn map_ranges_is_thread_count_independent() {
+        let data: Vec<f64> = (0..10_000).map(|i| (i as f64).sin()).collect();
+        let ranges = task_ranges(data.len(), 100, 1);
+        let sum_under = |threads: usize| {
+            with_threads(threads, || {
+                map_ranges(&ranges, |_, r| data[r].iter().sum::<f64>()).iter().sum::<f64>()
+            })
+        };
+        let s1 = sum_under(1);
+        for threads in [2, 4, 8] {
+            assert_eq!(s1.to_bits(), sum_under(threads).to_bits(), "threads={threads}");
+        }
+    }
+
+    #[test]
+    fn for_each_range_runs_all_tasks_under_any_budget() {
+        for threads in [1, 2, 5] {
+            let count = AtomicUsize::new(0);
+            with_threads(threads, || {
+                for_each_range(&task_ranges(977, 10, 1), |_, r| {
+                    count.fetch_add(r.len(), Ordering::Relaxed);
+                });
+            });
+            assert_eq!(count.load(Ordering::Relaxed), 977);
+        }
+    }
+}

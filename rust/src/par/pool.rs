@@ -1,0 +1,316 @@
+//! The persistent worker pool behind `flexa::par`.
+//!
+//! A fork-join pool built from `std` only: callers submit a *job* (a
+//! closure plus a fixed task count), pool workers and the submitting
+//! thread claim task indices from an atomic counter, and the submitter
+//! blocks on a Condvar latch until every task has run. Workers are
+//! spawned lazily (up to [`MAX_POOL_THREADS`]) and persist for the
+//! lifetime of the process, parked on a Condvar between jobs with a
+//! short spin beforehand so hot solve loops pay microseconds — not a
+//! futex round-trip — per parallel region.
+//!
+//! Scheduling is nondeterministic (workers race for task indices), but
+//! the task→data mapping is fixed by the caller, so *which* thread runs
+//! a task never affects what the task computes. Determinism of results
+//! is owned by the chunking layer in [`super`], which derives task
+//! boundaries from data length alone.
+//!
+//! Multiple jobs may be in flight at once (e.g. concurrent solves on
+//! `flexa::serve` workers): the queue holds every live job and each job
+//! carries its own helper budget, so one solve saturating the pool
+//! cannot park another solve's submitter — a submitter always drives
+//! its own job to completion itself if no worker is free. The same
+//! property makes nested parallel regions deadlock-free.
+
+use std::collections::VecDeque;
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+use std::sync::{Arc, Condvar, Mutex, OnceLock};
+
+/// Hard cap on pool worker threads — a backstop far above any sane
+/// `FLEXA_THREADS`; real sizing comes from the per-call thread budget.
+pub const MAX_POOL_THREADS: usize = 64;
+
+/// One fork-join region in flight.
+struct Job {
+    /// Lifetime-erased pointer to the caller's task closure. Sound
+    /// because the submitting thread owns the closure and blocks in
+    /// [`Pool::run`] until `completed == ntasks`, so the pointee
+    /// outlives every call through this pointer.
+    func: *const (dyn Fn(usize) + Sync),
+    ntasks: usize,
+    /// Next unclaimed task index (claims are `fetch_add`, so every
+    /// index is executed exactly once).
+    next: AtomicUsize,
+    /// Tasks fully executed.
+    completed: AtomicUsize,
+    /// Pool workers still allowed to join (the submitter is not
+    /// counted) — this is how a per-call thread budget is enforced.
+    helper_slots: AtomicUsize,
+    panicked: AtomicBool,
+    done: Mutex<bool>,
+    done_cv: Condvar,
+}
+
+// SAFETY: the raw closure pointer is only dereferenced while the
+// submitter provably keeps the closure alive (see `func` docs), and the
+// pointee is `Sync` so concurrent calls are fine.
+unsafe impl Send for Job {}
+unsafe impl Sync for Job {}
+
+impl Job {
+    /// Claim and run tasks until none remain.
+    fn drain(&self) {
+        loop {
+            let t = self.next.fetch_add(1, Ordering::Relaxed);
+            if t >= self.ntasks {
+                return;
+            }
+            // Contain task panics so a worker survives and the latch
+            // still fires; the submitter re-raises after joining. (The
+            // default panic hook has already printed the payload.)
+            let func = unsafe { &*self.func };
+            if std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| func(t))).is_err() {
+                self.panicked.store(true, Ordering::SeqCst);
+            }
+            if self.completed.fetch_add(1, Ordering::AcqRel) + 1 == self.ntasks {
+                *self.done.lock().unwrap() = true;
+                self.done_cv.notify_all();
+            }
+        }
+    }
+}
+
+struct PoolShared {
+    queue: Mutex<VecDeque<Arc<Job>>>,
+    work_cv: Condvar,
+    spawned: AtomicUsize,
+}
+
+/// The pool handle; use [`Pool::global`].
+pub struct Pool {
+    shared: Arc<PoolShared>,
+}
+
+impl Pool {
+    /// The process-wide pool (workers are spawned on first demand).
+    pub fn global() -> &'static Pool {
+        static POOL: OnceLock<Pool> = OnceLock::new();
+        POOL.get_or_init(|| Pool {
+            shared: Arc::new(PoolShared {
+                queue: Mutex::new(VecDeque::new()),
+                work_cv: Condvar::new(),
+                spawned: AtomicUsize::new(0),
+            }),
+        })
+    }
+
+    /// Workers spawned so far (observability/tests).
+    pub fn workers(&self) -> usize {
+        self.shared.spawned.load(Ordering::Relaxed)
+    }
+
+    /// Grow the worker set to at least `want` threads (capped).
+    fn ensure_workers(&self, want: usize) {
+        let want = want.min(MAX_POOL_THREADS);
+        loop {
+            let have = self.shared.spawned.load(Ordering::Relaxed);
+            if have >= want {
+                return;
+            }
+            if self
+                .shared
+                .spawned
+                .compare_exchange(have, have + 1, Ordering::Relaxed, Ordering::Relaxed)
+                .is_err()
+            {
+                continue;
+            }
+            let shared = Arc::clone(&self.shared);
+            let spawn = std::thread::Builder::new()
+                .name(format!("flexa-par-{have}"))
+                .spawn(move || worker_loop(&shared));
+            if spawn.is_err() {
+                // Out of threads: give the slot back and make do with
+                // what exists (the submitter always makes progress).
+                self.shared.spawned.fetch_sub(1, Ordering::Relaxed);
+                return;
+            }
+        }
+    }
+
+    /// Run `f(task)` for every `task in 0..ntasks` on the calling thread
+    /// plus up to `threads − 1` pool workers, returning once every task
+    /// has completed. The task→index mapping is the caller's and fixed,
+    /// so results never depend on which thread ran what.
+    pub fn run(&self, ntasks: usize, threads: usize, f: &(dyn Fn(usize) + Sync)) {
+        if ntasks == 0 {
+            return;
+        }
+        let helpers = threads.saturating_sub(1).min(ntasks - 1);
+        if helpers == 0 {
+            // Inline fast path: same task order, no pool involvement.
+            for t in 0..ntasks {
+                f(t);
+            }
+            return;
+        }
+        self.ensure_workers(helpers);
+        let job = Arc::new(Job {
+            func: f as *const _,
+            ntasks,
+            next: AtomicUsize::new(0),
+            completed: AtomicUsize::new(0),
+            helper_slots: AtomicUsize::new(helpers),
+            panicked: AtomicBool::new(false),
+            done: Mutex::new(false),
+            done_cv: Condvar::new(),
+        });
+        self.shared.queue.lock().unwrap().push_back(Arc::clone(&job));
+        if helpers == 1 {
+            self.shared.work_cv.notify_one();
+        } else {
+            self.shared.work_cv.notify_all();
+        }
+        // The submitter is always a participant.
+        job.drain();
+        let mut done = job.done.lock().unwrap();
+        while !*done {
+            done = job.done_cv.wait(done).unwrap();
+        }
+        drop(done);
+        // Prune the exhausted job if no worker already did.
+        self.shared.queue.lock().unwrap().retain(|j| !Arc::ptr_eq(j, &job));
+        if job.panicked.load(Ordering::SeqCst) {
+            panic!("flexa::par: a parallel task panicked (payload printed by the panic hook)");
+        }
+    }
+}
+
+fn worker_loop(shared: &PoolShared) {
+    loop {
+        let job = next_job(shared);
+        job.drain();
+    }
+}
+
+/// Claim a helper slot on a job with unclaimed tasks: spin briefly
+/// (parallel regions are tens of microseconds; a Condvar wake costs a
+/// few), then park.
+fn next_job(shared: &PoolShared) -> Arc<Job> {
+    for _ in 0..50 {
+        if let Ok(mut q) = shared.queue.try_lock() {
+            if let Some(job) = claim_locked(&mut q) {
+                return job;
+            }
+        }
+        for _ in 0..100 {
+            std::hint::spin_loop();
+        }
+    }
+    let mut q = shared.queue.lock().unwrap();
+    loop {
+        if let Some(job) = claim_locked(&mut q) {
+            return job;
+        }
+        q = shared.work_cv.wait(q).unwrap();
+    }
+}
+
+fn claim_locked(q: &mut VecDeque<Arc<Job>>) -> Option<Arc<Job>> {
+    // Drop exhausted jobs at the front (their submitters hold their own
+    // Arc), then join the first job with tasks and helper budget left.
+    while let Some(front) = q.front() {
+        if front.next.load(Ordering::Relaxed) >= front.ntasks {
+            q.pop_front();
+        } else {
+            break;
+        }
+    }
+    for job in q.iter() {
+        if job.next.load(Ordering::Relaxed) >= job.ntasks {
+            continue;
+        }
+        if job
+            .helper_slots
+            .fetch_update(Ordering::Relaxed, Ordering::Relaxed, |s| s.checked_sub(1))
+            .is_ok()
+        {
+            return Some(Arc::clone(job));
+        }
+    }
+    None
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn runs_every_task_exactly_once() {
+        let hits: Vec<AtomicUsize> = (0..97).map(|_| AtomicUsize::new(0)).collect();
+        Pool::global().run(97, 4, &|t| {
+            hits[t].fetch_add(1, Ordering::Relaxed);
+        });
+        assert!(hits.iter().all(|h| h.load(Ordering::Relaxed) == 1));
+    }
+
+    #[test]
+    fn single_thread_budget_never_touches_the_pool_queue() {
+        let hits = AtomicUsize::new(0);
+        Pool::global().run(5, 1, &|_| {
+            hits.fetch_add(1, Ordering::Relaxed);
+        });
+        assert_eq!(hits.load(Ordering::Relaxed), 5);
+    }
+
+    #[test]
+    fn zero_tasks_is_a_no_op() {
+        Pool::global().run(0, 8, &|_| panic!("must not run"));
+    }
+
+    #[test]
+    fn nested_regions_complete() {
+        let total = AtomicUsize::new(0);
+        Pool::global().run(4, 4, &|_| {
+            Pool::global().run(4, 2, &|_| {
+                total.fetch_add(1, Ordering::Relaxed);
+            });
+        });
+        assert_eq!(total.load(Ordering::Relaxed), 16);
+    }
+
+    #[test]
+    fn panicking_task_propagates_to_the_submitter() {
+        let result = std::panic::catch_unwind(|| {
+            Pool::global().run(8, 4, &|t| {
+                if t == 3 {
+                    panic!("boom");
+                }
+            });
+        });
+        assert!(result.is_err(), "submitter must observe the task panic");
+        // The pool still works afterwards.
+        let hits = AtomicUsize::new(0);
+        Pool::global().run(8, 4, &|_| {
+            hits.fetch_add(1, Ordering::Relaxed);
+        });
+        assert_eq!(hits.load(Ordering::Relaxed), 8);
+    }
+
+    #[test]
+    fn concurrent_submitters_all_finish() {
+        std::thread::scope(|s| {
+            for _ in 0..4 {
+                s.spawn(|| {
+                    let hits = AtomicUsize::new(0);
+                    for _ in 0..50 {
+                        Pool::global().run(8, 3, &|_| {
+                            hits.fetch_add(1, Ordering::Relaxed);
+                        });
+                    }
+                    assert_eq!(hits.load(Ordering::Relaxed), 400);
+                });
+            }
+        });
+    }
+}

@@ -161,6 +161,14 @@ impl<M: MatVec> CompositeProblem for GroupLasso<M> {
             .get_or_init(|| 2.0 * power::lambda_max_gram(&self.a, 1e-9, 500, 0x11B).lambda_max)
     }
 
+    fn lipschitz_cached(&self) -> Option<f64> {
+        self.lambda_max.get().copied()
+    }
+
+    fn seed_lipschitz(&self, l: f64) {
+        let _ = self.lambda_max.set(l);
+    }
+
     fn prox_block(&self, _i: usize, v: &[f64], t: f64, out: &mut [f64]) {
         ops::group_soft_threshold(v, t * self.c, out);
     }

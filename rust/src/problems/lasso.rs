@@ -106,6 +106,14 @@ impl<M: MatVec> CompositeProblem for Lasso<M> {
             .get_or_init(|| 2.0 * power::lambda_max_gram(&self.a, 1e-9, 500, 0x11A).lambda_max)
     }
 
+    fn lipschitz_cached(&self) -> Option<f64> {
+        self.lambda_max.get().copied()
+    }
+
+    fn seed_lipschitz(&self, l: f64) {
+        let _ = self.lambda_max.set(l);
+    }
+
     fn prox_block(&self, _i: usize, v: &[f64], t: f64, out: &mut [f64]) {
         let thr = t * self.c;
         for (o, &vi) in out.iter_mut().zip(v) {

@@ -179,6 +179,19 @@ pub trait CompositeProblem: Sync {
     fn curvature(&self, x: &[f64], d: &mut [f64]);
     /// Gradient Lipschitz constant `L_F` (FISTA/ISTA step size).
     fn lipschitz_grad(&self) -> f64;
+    /// The Lipschitz constant if it has already been computed for this
+    /// instance, without triggering the (power-iteration) computation.
+    /// Lets a serving layer carry the spectral-norm estimate across
+    /// solves on the same data (`None` = not computed / not cacheable).
+    fn lipschitz_cached(&self) -> Option<f64> {
+        None
+    }
+    /// Seed the Lipschitz cache with a value previously computed on an
+    /// *identical* instance: [`Self::lipschitz_grad`] then returns it
+    /// verbatim and skips the power-iteration preamble. No-op for
+    /// problems without a cache slot. Power iteration is deterministic,
+    /// so seeding never changes results — only setup time.
+    fn seed_lipschitz(&self, _l: f64) {}
     /// Block prox: `argmin_z ½‖z−v‖² + t·gᵢ(z)`.
     fn prox_block(&self, i: usize, v: &[f64], t: f64, out: &mut [f64]);
     /// The regularizer (weight + shape).

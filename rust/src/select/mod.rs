@@ -15,7 +15,13 @@
 //!   includes the maximizer to satisfy the theorem's condition),
 //! * [`SelectionRule::Random`] — a random subset plus the maximizer.
 
+use crate::par;
 use crate::prng::Xoshiro256pp;
+
+/// Minimum blocks per task before the merit scoring (argmax + GreedyRho
+/// thresholding) goes multi-core — fixed, so partitioning is a pure
+/// function of the block count.
+const MIN_MERIT_PER_TASK: usize = 4096;
 
 /// A block-selection rule.
 #[derive(Clone, Debug, PartialEq)]
@@ -79,9 +85,29 @@ impl Selector {
             SelectionRule::GreedyRho { rho } => {
                 assert!(*rho > 0.0 && *rho <= 1.0, "rho must be in (0, 1]");
                 let threshold = rho * e[argmax];
-                for i in 0..nb {
-                    mask[i] = e[i] >= threshold && e[i] > 0.0;
-                    count += mask[i] as usize;
+                if nb < 2 * MIN_MERIT_PER_TASK {
+                    // Common case: tight alloc-free scan.
+                    for i in 0..nb {
+                        mask[i] = e[i] >= threshold && e[i] > 0.0;
+                        count += mask[i] as usize;
+                    }
+                } else {
+                    // Chunked merit thresholding: the mask is elementwise
+                    // in `e` and the per-chunk counts sum exactly, so the
+                    // parallel form is bit-for-bit the serial one.
+                    let ranges = par::task_ranges(nb, MIN_MERIT_PER_TASK, 1);
+                    let mut counts = vec![0usize; ranges.len()];
+                    let count_ranges: Vec<std::ops::Range<usize>> =
+                        (0..ranges.len()).map(|t| t..t + 1).collect();
+                    par::par_disjoint_mut2(mask, &ranges, &mut counts, &count_ranges, |t, mc, cc| {
+                        let mut local = 0;
+                        for (k, i) in ranges[t].clone().enumerate() {
+                            mc[k] = e[i] >= threshold && e[i] > 0.0;
+                            local += mc[k] as usize;
+                        }
+                        cc[0] = local;
+                    });
+                    count = counts.iter().sum();
                 }
                 // Degenerate all-zero E: keep the maximizer so the
                 // iteration is well-defined (it is a fixed point anyway).
@@ -144,10 +170,35 @@ pub fn cmp_desc_nan_last(a: f64, b: f64) -> std::cmp::Ordering {
 }
 
 /// Index of the maximum (first on ties); NaNs are treated as −∞.
+///
+/// Long inputs are scanned in parallel chunks; chunk winners are folded
+/// in chunk order with a strict `>`, which preserves the serial
+/// first-on-ties semantics exactly.
 pub fn argmax(e: &[f64]) -> usize {
+    let scan = |range: std::ops::Range<usize>| -> (usize, f64) {
+        let mut best = range.start;
+        let mut best_v = f64::NEG_INFINITY;
+        for i in range {
+            if e[i] > best_v {
+                best_v = e[i];
+                best = i;
+            }
+        }
+        (best, best_v)
+    };
+    if e.len() < 2 * MIN_MERIT_PER_TASK {
+        return scan(0..e.len()).0;
+    }
+    let ranges = par::task_ranges(e.len(), MIN_MERIT_PER_TASK, 1);
+    if ranges.len() <= 1 {
+        return scan(0..e.len()).0;
+    }
+    let mut winners = vec![(0usize, f64::NEG_INFINITY); ranges.len()];
+    let unit: Vec<std::ops::Range<usize>> = (0..ranges.len()).map(|t| t..t + 1).collect();
+    par::par_disjoint_mut(&mut winners, &unit, |t, w| w[0] = scan(ranges[t].clone()));
     let mut best = 0;
     let mut best_v = f64::NEG_INFINITY;
-    for (i, &v) in e.iter().enumerate() {
+    for &(i, v) in &winners {
         if v > best_v {
             best_v = v;
             best = i;

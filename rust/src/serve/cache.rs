@@ -19,11 +19,18 @@
 //!
 //! ## Contents and eviction
 //!
-//! An entry stores the final iterate `x` and the last τ the solver
+//! An entry stores the final iterate `x`, the last τ the solver
 //! reported (the paper's adaptive proximal weight — carrying it over
-//! skips re-learning the curvature scale, the `tr(AᵀA)/2n` re-estimate).
-//! Entries are evicted least-recently-used once the byte budget is
-//! exceeded; hit/miss/eviction counters feed the serve event stream.
+//! skips re-learning the curvature scale, the `tr(AᵀA)/2n` re-estimate)
+//! and, when the solve computed one, the gradient-Lipschitz constant
+//! `L = 2λ_max(AᵀA)` — carrying *that* over lets repeated / λ-swept
+//! FISTA-family jobs skip the power-iteration preamble entirely (λ is
+//! excluded from the key and `L` depends only on `A`, so the value is
+//! valid across the sweep; power iteration is deterministic, so the
+//! seeded value is bit-identical to a recomputation). Entries are
+//! evicted least-recently-used once the byte budget is exceeded;
+//! hit/miss/eviction/Lipschitz-reuse counters feed the serve event
+//! stream and `/metrics`.
 
 use crate::api::ProblemHandle;
 use crate::problems::CompositeProblem;
@@ -42,6 +49,10 @@ pub struct WarmStart {
     pub x0: Arc<Vec<f64>>,
     /// Last τ the previous solve reported (None if the solver has no τ).
     pub tau: Option<f64>,
+    /// Gradient-Lipschitz constant (spectral-norm estimate) the
+    /// previous solve computed, if any — seeds the next problem's power
+    /// cache.
+    pub lipschitz: Option<f64>,
 }
 
 /// Cache observability counters.
@@ -50,6 +61,12 @@ pub struct CacheStats {
     pub hits: u64,
     pub misses: u64,
     pub evictions: u64,
+    /// Hits whose entry carried a cached spectral-norm (Lipschitz)
+    /// estimate. Each such hit seeds the next problem's Lipschitz
+    /// cache; solvers that need `L` (the FISTA family) then skip the
+    /// power-iteration preamble. (Counted per carrying hit, whether or
+    /// not the hitting job's solver ends up reading `L`.)
+    pub lipschitz_reuses: u64,
     pub entries: usize,
     pub bytes: usize,
     pub byte_budget: usize,
@@ -58,6 +75,7 @@ pub struct CacheStats {
 struct Entry {
     x: Arc<Vec<f64>>,
     tau: Option<f64>,
+    lipschitz: Option<f64>,
     bytes: usize,
     last_used: u64,
 }
@@ -71,6 +89,7 @@ pub struct WarmStartCache {
     hits: u64,
     misses: u64,
     evictions: u64,
+    lipschitz_reuses: u64,
 }
 
 /// Approximate heap footprint of an entry (iterate + bookkeeping).
@@ -88,6 +107,7 @@ impl WarmStartCache {
             hits: 0,
             misses: 0,
             evictions: 0,
+            lipschitz_reuses: 0,
         }
     }
 
@@ -98,7 +118,10 @@ impl WarmStartCache {
             Some(e) => {
                 e.last_used = self.clock;
                 self.hits += 1;
-                Some(WarmStart { x0: Arc::clone(&e.x), tau: e.tau })
+                if e.lipschitz.is_some() {
+                    self.lipschitz_reuses += 1;
+                }
+                Some(WarmStart { x0: Arc::clone(&e.x), tau: e.tau, lipschitz: e.lipschitz })
             }
             None => {
                 self.misses += 1;
@@ -110,7 +133,7 @@ impl WarmStartCache {
     /// Insert (or replace) the entry for `key`, then evict LRU entries
     /// until the byte budget holds. An entry larger than the whole budget
     /// is not cached at all.
-    pub fn insert(&mut self, key: u64, x: Vec<f64>, tau: Option<f64>) {
+    pub fn insert(&mut self, key: u64, x: Vec<f64>, tau: Option<f64>, lipschitz: Option<f64>) {
         let bytes = entry_bytes(&x);
         if bytes > self.byte_budget {
             return;
@@ -120,7 +143,8 @@ impl WarmStartCache {
             self.bytes -= old.bytes;
         }
         self.bytes += bytes;
-        self.entries.insert(key, Entry { x: Arc::new(x), tau, bytes, last_used: self.clock });
+        self.entries
+            .insert(key, Entry { x: Arc::new(x), tau, lipschitz, bytes, last_used: self.clock });
         while self.bytes > self.byte_budget {
             // The just-inserted entry carries the newest stamp, so the LRU
             // victim is always an older entry.
@@ -141,6 +165,7 @@ impl WarmStartCache {
             hits: self.hits,
             misses: self.misses,
             evictions: self.evictions,
+            lipschitz_reuses: self.lipschitz_reuses,
             entries: self.entries.len(),
             bytes: self.bytes,
             byte_budget: self.byte_budget,
@@ -281,12 +306,14 @@ mod tests {
     fn lookup_counts_hits_and_misses() {
         let mut cache = WarmStartCache::new(1 << 20);
         assert!(cache.lookup(1).is_none());
-        cache.insert(1, vec![1.0, 2.0], Some(3.0));
+        cache.insert(1, vec![1.0, 2.0], Some(3.0), Some(42.0));
         let ws = cache.lookup(1).expect("hit");
         assert_eq!(*ws.x0, vec![1.0, 2.0]);
         assert_eq!(ws.tau, Some(3.0));
+        assert_eq!(ws.lipschitz, Some(42.0));
         let s = cache.stats();
         assert_eq!((s.hits, s.misses, s.entries), (1, 1, 1));
+        assert_eq!(s.lipschitz_reuses, 1, "a hit carrying L counts as a power-iteration skip");
         assert!(s.bytes > 0 && s.bytes <= s.byte_budget);
     }
 
@@ -295,12 +322,12 @@ mod tests {
         // Budget fits exactly two 8-element entries.
         let budget = 2 * entry_bytes(&[0.0; 8]);
         let mut cache = WarmStartCache::new(budget);
-        cache.insert(1, vec![0.0; 8], None);
-        cache.insert(2, vec![0.0; 8], None);
+        cache.insert(1, vec![0.0; 8], None, None);
+        cache.insert(2, vec![0.0; 8], None, None);
         assert_eq!(cache.len(), 2);
         // Touch 1 so 2 becomes the LRU victim.
         assert!(cache.lookup(1).is_some());
-        cache.insert(3, vec![0.0; 8], None);
+        cache.insert(3, vec![0.0; 8], None, None);
         assert_eq!(cache.len(), 2);
         assert!(cache.lookup(1).is_some(), "recently used entry survives");
         assert!(cache.lookup(2).is_none(), "LRU entry evicted");
@@ -308,10 +335,10 @@ mod tests {
         assert_eq!(cache.stats().evictions, 1);
         // Replacing a key does not leak bytes.
         let before = cache.stats().bytes;
-        cache.insert(3, vec![0.0; 8], Some(1.0));
+        cache.insert(3, vec![0.0; 8], Some(1.0), None);
         assert_eq!(cache.stats().bytes, before);
         // An entry bigger than the whole budget is refused outright.
-        cache.insert(4, vec![0.0; 1 << 16], None);
+        cache.insert(4, vec![0.0; 1 << 16], None, None);
         assert!(cache.lookup(4).is_none());
     }
 }

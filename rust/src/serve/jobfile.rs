@@ -21,6 +21,7 @@
 //! | `params`       | object | solver options (numeric or string grammar)  |
 //! | `max_iters`, `max_seconds`, `target`, `record_every` | — | solve caps |
 //! | `procs`        | int    | simulated cost-model process count          |
+//! | `threads`      | int    | kernel-thread request, 1..=usable host cores (capped by the scheduler's core budget; never changes results) |
 //! | `deadline_ms`  | int    | per-job deadline from submission (extends `max_seconds` when that key is unset) |
 //! | `warm_start`   | bool   | consult/update the warm-start cache         |
 //! | `tag`          | string | label echoed in events and results          |
@@ -306,8 +307,24 @@ fn as_text<'a>(v: &'a Json, key: &str) -> Result<&'a str> {
 }
 
 const KNOWN_KEYS: &str = "problem, rows, cols, sparsity, c, lambda, block_size, seed, label_noise, \
-     algo, params, max_iters, max_seconds, target, record_every, procs, \
+     algo, params, max_iters, max_seconds, target, record_every, procs, threads, \
      deadline_ms, warm_start, tag";
+
+/// Validate a thread-count request against the host: 0 is meaningless
+/// and more threads than cores only oversubscribes, so both are
+/// rejected with the valid range in the message. `what` names the
+/// offending knob (`` job key `threads` `` here, `--threads` in the
+/// CLI); the HTTP front-end surfaces the message verbatim in its 400
+/// body.
+pub fn validate_threads(t: usize, what: &str) -> Result<usize> {
+    // Cap at the pool's hard worker limit too, so the validated range
+    // is one the engine actually honors on very-many-core hosts.
+    let max = crate::par::host_cores().min(crate::par::MAX_POOL_THREADS);
+    if t == 0 || t > max {
+        bail!("{what} must be between 1 and {max} (this host's usable core count), got {t}");
+    }
+    Ok(t)
+}
 
 /// Parse one JSONL job line into a [`JobSpec`].
 pub fn parse_job_line(line: &str) -> Result<JobSpec> {
@@ -361,6 +378,9 @@ pub fn parse_job_line(line: &str) -> Result<JobSpec> {
             "target" => opts.target_rel_err = as_num(v, key)?,
             "record_every" => opts.record_every = as_count(v, key)?.max(1),
             "procs" => opts.cost_model = CostModel::mpi_node(as_count(v, key)?.max(1)),
+            "threads" => {
+                opts.threads = Some(validate_threads(as_count(v, key)?, "job key `threads`")?)
+            }
             "deadline_ms" => deadline = Some(Duration::from_millis(as_count(v, key)? as u64)),
             "warm_start" => {
                 warm_start = v.as_bool().ok_or_else(|| anyhow!("job key `warm_start` must be a boolean"))?
@@ -581,6 +601,22 @@ mod tests {
         // …and a short deadline never raises the cap.
         let job = parse_job_line(r#"{"deadline_ms": 2000}"#).unwrap();
         assert_eq!(job.opts.max_seconds, 60.0);
+    }
+
+    #[test]
+    fn threads_key_is_validated_against_host_cores() {
+        let cores = crate::par::host_cores().min(crate::par::MAX_POOL_THREADS);
+        // In range: lands in SolveOptions::threads.
+        let job = parse_job_line(r#"{"rows": 20, "cols": 60, "threads": 1}"#).unwrap();
+        assert_eq!(job.opts.threads, Some(1));
+        // Zero and beyond-host-cores are rejected, naming the range.
+        for bad in [0, cores + 1] {
+            let err = parse_job_line(&format!(r#"{{"rows": 20, "cols": 60, "threads": {bad}}}"#))
+                .unwrap_err()
+                .to_string();
+            assert!(err.contains(&format!("between 1 and {cores}")), "{err}");
+            assert!(err.contains(&format!("got {bad}")), "{err}");
+        }
     }
 
     #[test]

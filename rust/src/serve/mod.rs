@@ -61,7 +61,9 @@
 //!
 //! * **Determinism** — without warm-starting, a job's result is
 //!   bit-identical to a serial [`crate::api::Session`] run of the same
-//!   specs, independent of worker count and queue order.
+//!   specs, independent of worker count, queue order and kernel-thread
+//!   budget (the [`crate::par`] chunking contract makes thread counts a
+//!   pure speed knob — the core-budget policy can never change results).
 //! * **Cancellation** is cooperative: [`JobHandle::cancel`] stops a
 //!   running solve at its next iteration boundary (solvers poll the
 //!   token via [`crate::algos::Recorder::cancelled`]); a still-queued

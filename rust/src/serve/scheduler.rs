@@ -289,11 +289,30 @@ pub struct ServeConfig {
     /// runs with more jobs than this should raise it (the default keeps
     /// 4096).
     pub finished_retention: usize,
+    /// Core budget for the multi-core kernels, shared across workers:
+    /// a job gets `max(1, core_budget / running)` kernel threads,
+    /// evaluated once when it starts (and further capped by the job's
+    /// own `SolveOptions::threads`). This is a static per-job split,
+    /// not a live-rebalanced hard cap: a job admitted on an idle
+    /// scheduler keeps its full share even if more jobs start later, so
+    /// transient overlap can exceed the budget until it finishes —
+    /// sparse traffic solves on all cores, sustained load converges to
+    /// one core per job instead of unbounded oversubscription. Defaults
+    /// to the host core count. Kernel thread counts never change
+    /// results (see [`crate::par`]), so neither this knob nor load can
+    /// break the determinism guarantee above.
+    pub core_budget: usize,
 }
 
 impl Default for ServeConfig {
     fn default() -> Self {
-        Self { workers: 4, queue_capacity: 64, cache_bytes: 64 << 20, finished_retention: 4096 }
+        Self {
+            workers: 4,
+            queue_capacity: 64,
+            cache_bytes: 64 << 20,
+            finished_retention: 4096,
+            core_budget: crate::par::host_cores(),
+        }
     }
 }
 
@@ -315,6 +334,11 @@ impl ServeConfig {
 
     pub fn with_finished_retention(mut self, jobs: usize) -> Self {
         self.finished_retention = jobs;
+        self
+    }
+
+    pub fn with_core_budget(mut self, cores: usize) -> Self {
+        self.core_budget = cores.max(1);
         self
     }
 }
@@ -450,6 +474,8 @@ struct Shared {
     results_retention: usize,
     counters: Counters,
     table: Mutex<JobsTable>,
+    /// See [`ServeConfig::core_budget`].
+    core_budget: usize,
 }
 
 impl Shared {
@@ -556,6 +582,7 @@ impl Scheduler {
                 finished_order: VecDeque::new(),
                 retention: config.finished_retention,
             }),
+            core_budget: config.core_budget.max(1),
         });
         let workers = config.workers.max(1);
         let mut handles = Vec::with_capacity(workers);
@@ -863,6 +890,13 @@ fn run_job(shared: &Shared, worker: usize, job: QueuedJob) -> JobResult {
                     opts.tau0 = ws.tau.or(opts.tau0);
                     warm_started = true;
                 }
+                // Seed the spectral-norm estimate regardless: L depends
+                // only on the data (which the key pins), and power
+                // iteration is deterministic, so FISTA-family repeats /
+                // λ-sweeps skip the preamble without changing a bit.
+                if let Some(l) = ws.lipschitz {
+                    problem.seed_lipschitz(l);
+                }
             }
             warm_key = Some(key);
             shared.emit(JobEvent::CacheProbe { job: id, key, hit: warm_started });
@@ -887,7 +921,17 @@ fn run_job(shared: &Shared, worker: usize, job: QueuedJob) -> JobResult {
     };
     let solver_name = solver.name();
 
-    match solver.solve_session(&problem, &opts) {
+    // Core-budget policy: the share is computed once at job start from
+    // the current running count (static split — see the
+    // `ServeConfig::core_budget` docs for the overlap caveat); a
+    // job-level `threads` request (jobfile/HTTP key) is honored up to
+    // that share. Thread counts are a pure speed knob (see
+    // `flexa::par`), so this never affects results.
+    let running = (shared.counters.running.load(Ordering::Relaxed).max(1)) as usize;
+    let share = (shared.core_budget / running).max(1);
+    let kernel_threads = opts.threads.unwrap_or(share).min(share);
+
+    match crate::par::with_threads(kernel_threads, || solver.solve_session(&problem, &opts)) {
         Err(e) => finish(solver_name, JobOutcome::Failed { error: format!("{e:#}") }, None),
         Ok(report) => {
             // Mirror Session::run: on_finish fires once per solve.
@@ -927,7 +971,11 @@ fn run_job(shared: &Shared, worker: usize, job: QueuedJob) -> JobResult {
                 .is_some_and(|(f, l)| l.objective.is_finite() && l.objective <= f.objective);
             if let (Some(key), true) = (warm_key, outcome.is_done() && (report.converged || improved)) {
                 if let Some(cache) = &shared.cache {
-                    cache.lock().unwrap().insert(key, report.x.clone(), bridge.last_tau());
+                    // Harvest the spectral-norm estimate alongside the
+                    // iterate: present only if this solve (or a seed)
+                    // actually computed it.
+                    let lipschitz = problem.lipschitz_cached();
+                    cache.lock().unwrap().insert(key, report.x.clone(), bridge.last_tau(), lipschitz);
                 }
             }
             finish(solver_name, outcome, Some(report))

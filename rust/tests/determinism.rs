@@ -9,6 +9,8 @@
 
 use flexa::algos::SolveOptions;
 use flexa::api::{CollectObserver, IterEvent, ProblemSpec, Session, SolverSpec};
+use flexa::par;
+use flexa::serve::{JobEvent, JobSpec, Scheduler, ServeConfig};
 
 fn stream(problem: &ProblemSpec, solver: &str, max_iters: usize) -> Vec<IterEvent> {
     let observer = CollectObserver::new();
@@ -54,6 +56,81 @@ fn identical_logreg_sessions_emit_identical_event_streams() {
     let b = stream(&spec, "fpa", 40);
     assert!(a.iter().all(|e| e.rel_err.is_nan()), "logreg has no planted V*");
     assert_streams_identical(&a, &b, "fpa@logreg");
+}
+
+/// The `flexa::par` contract: the kernel-thread budget is a pure speed
+/// knob. The same golden streams, run under 1 and 4 kernel threads,
+/// must match byte for byte — across every solver family and on a
+/// problem large enough that the chunked matvec / best-response / CSC
+/// paths actually engage (dense 300×1200 and the sparse logreg design).
+#[test]
+fn event_streams_are_bit_identical_across_thread_budgets() {
+    for solver in ["fpa", "fpa-rho-0.9", "fpa-jacobi", "fista", "ista", "grock-4"] {
+        let spec = ProblemSpec::lasso(300, 1200).with_sparsity(0.1).with_seed(4242);
+        let s1 = par::with_threads(1, || stream(&spec, solver, 25));
+        let s4 = par::with_threads(4, || stream(&spec, solver, 25));
+        assert_streams_identical(&s1, &s4, &format!("{solver} (1 vs 4 threads)"));
+    }
+    let spec = ProblemSpec::logreg(80, 60).with_seed(7);
+    let s1 = par::with_threads(1, || stream(&spec, "fpa", 30));
+    let s4 = par::with_threads(4, || stream(&spec, "fpa", 30));
+    assert_streams_identical(&s1, &s4, "fpa@logreg (1 vs 4 threads)");
+}
+
+/// A 16-job scheduler sweep under per-job kernel budgets of 1 vs 4
+/// threads: every job's terminal objective, iterate and per-job
+/// Iteration-event stream must be byte-identical. (The core-budget
+/// policy may cap the 4-thread request under load — also required to
+/// be invisible in the results.)
+#[test]
+fn scheduler_sweep_is_bit_identical_across_thread_budgets() {
+    let run = |threads: usize| -> Vec<(Vec<u64>, Vec<u64>)> {
+        let obs = flexa::serve::CollectServeObserver::new();
+        let sched = Scheduler::start_with(
+            ServeConfig::default().with_workers(4).with_cache_bytes(0).with_core_budget(64),
+            Some(obs.clone()),
+            flexa::api::Registry::with_defaults(),
+        );
+        let ids: Vec<u64> = (0..16)
+            .map(|i| {
+                let spec = ProblemSpec::lasso(60, 240).with_sparsity(0.1).with_seed(900 + i);
+                sched
+                    .submit(
+                        JobSpec::new(spec, SolverSpec::parse("fpa").unwrap()).with_opts(
+                            SolveOptions::default()
+                                .with_max_iters(30)
+                                .with_target(0.0)
+                                .with_threads(threads),
+                        ),
+                    )
+                    .id()
+            })
+            .collect();
+        let results = sched.join();
+        ids.iter()
+            .map(|&id| {
+                let r = results.iter().find(|r| r.job == id).expect("job result");
+                let report = r.report.as_ref().expect("solve ran");
+                let x_bits: Vec<u64> = report.x.iter().map(|v| v.to_bits()).collect();
+                let ev_bits: Vec<u64> = obs
+                    .job_events(id)
+                    .iter()
+                    .filter_map(|e| match e {
+                        JobEvent::Iteration { event, .. } => Some(event.objective.to_bits()),
+                        _ => None,
+                    })
+                    .collect();
+                assert_eq!(ev_bits.len(), 30, "job {id}: one event per iteration");
+                (x_bits, ev_bits)
+            })
+            .collect()
+    };
+    let one = run(1);
+    let four = run(4);
+    for (i, (a, b)) in one.iter().zip(&four).enumerate() {
+        assert_eq!(a.0, b.0, "job {i}: final iterate bits");
+        assert_eq!(a.1, b.1, "job {i}: per-iteration objective bits");
+    }
 }
 
 /// Random-selection FPA is seeded: same spec ⇒ same stream.

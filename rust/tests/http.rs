@@ -293,6 +293,23 @@ fn jobfile_error_paths_surface_as_http_errors() {
     assert_eq!(status, 400, "{body}");
     assert!(body.contains("unknown job key"), "{body}");
 
+    // Out-of-range kernel-thread requests → 400 naming the valid range.
+    let cores = flexa::par::host_cores().min(flexa::par::MAX_POOL_THREADS);
+    for bad in [0, cores + 1] {
+        let (status, _, body) = req(
+            &addr,
+            "POST",
+            "/v1/jobs",
+            Some(&format!("{{\"rows\":20,\"cols\":60,\"threads\":{bad}}}")),
+        );
+        assert_eq!(status, 400, "{body}");
+        assert!(body.contains(&format!("between 1 and {cores}")), "{body}");
+    }
+    // An in-range request is accepted.
+    let (status, _, body) =
+        req(&addr, "POST", "/v1/jobs", Some("{\"rows\":15,\"cols\":45,\"max_iters\":5,\"target\":0,\"threads\":1}"));
+    assert_eq!(status, 202, "{body}");
+
     // Routing edges.
     let (status, _, _) = req(&addr, "GET", "/v1/jobs/999999", None);
     assert_eq!(status, 404);

@@ -272,3 +272,135 @@ fn prop_fpa_iterates_bounded() {
         })
     });
 }
+
+/// Dense `matvec`/`matvec_t` vs a naive triple-loop oracle over random
+/// shapes — cols % 4 ∈ {0,1,2,3}, degenerate rows = 0 / cols = 0 — and,
+/// on the same draws, bit-identity of the `flexa::par` kernels across
+/// thread budgets (shapes large enough here do engage the chunked
+/// paths).
+#[test]
+fn prop_dense_matvec_matches_naive_oracle() {
+    use flexa::par;
+    run_prop("dense-matvec-oracle", PropConfig { cases: 48, seed: 0xA17 }, |rng, size| {
+        // Shapes ramp to ~200x200 (chunked paths engage) and may be 0.
+        let rows = rng.next_below(8 * size as u64 + 5) as usize;
+        let cols = rng.next_below(8 * size as u64 + 5) as usize;
+        let a = DenseMatrix::from_fn(rows, cols, |_, _| rng.next_normal());
+        let mut x = vec![0.0; cols];
+        rng.fill_uniform(&mut x, -2.0, 2.0);
+        let mut r = vec![0.0; rows];
+        rng.fill_uniform(&mut r, -2.0, 2.0);
+
+        // Naive triple-loop oracle.
+        let mut y_oracle = vec![0.0; rows];
+        for (i, yo) in y_oracle.iter_mut().enumerate() {
+            let mut s = 0.0;
+            for (j, xj) in x.iter().enumerate() {
+                s += a.get(i, j) * xj;
+            }
+            *yo = s;
+        }
+        let mut g_oracle = vec![0.0; cols];
+        for (j, go) in g_oracle.iter_mut().enumerate() {
+            let mut s = 0.0;
+            for (i, ri) in r.iter().enumerate() {
+                s += a.get(i, j) * ri;
+            }
+            *go = s;
+        }
+
+        let run = |threads: usize| {
+            par::with_threads(threads, || {
+                let mut y = vec![0.0; rows];
+                a.matvec(&x, &mut y);
+                let mut g = vec![0.0; cols];
+                a.matvec_t(&r, &mut g);
+                (y, g)
+            })
+        };
+        let (y1, g1) = run(1);
+        if let CaseResult::Fail(msg) = assert_close(&y1, &y_oracle, 1e-10, "matvec vs oracle") {
+            return CaseResult::Fail(format!("{rows}x{cols}: {msg}"));
+        }
+        if let CaseResult::Fail(msg) = assert_close(&g1, &g_oracle, 1e-10, "matvec_t vs oracle") {
+            return CaseResult::Fail(format!("{rows}x{cols}: {msg}"));
+        }
+        for threads in [2usize, 4, 8] {
+            let (yt, gt) = run(threads);
+            let same = y1.iter().zip(&yt).all(|(p, q)| p.to_bits() == q.to_bits())
+                && g1.iter().zip(&gt).all(|(p, q)| p.to_bits() == q.to_bits());
+            if !same {
+                return CaseResult::Fail(format!(
+                    "{rows}x{cols}: kernel bits differ between 1 and {threads} threads"
+                ));
+            }
+        }
+        CaseResult::Pass
+    });
+}
+
+/// The explicit edge shapes the oracle property may not hit every run:
+/// empty matrices (0×k, k×0) and every cols % 4 tail length.
+#[test]
+fn dense_matvec_edge_shapes_match_oracle() {
+    for (rows, cols) in [(0usize, 4usize), (4, 0), (0, 0), (3, 5), (5, 3), (6, 7), (2, 8), (7, 9)] {
+        let a = DenseMatrix::from_fn(rows, cols, |i, j| (i as f64 + 1.0) * 0.5 - (j as f64) * 0.25);
+        let x: Vec<f64> = (0..cols).map(|j| (j as f64).cos()).collect();
+        let mut y = vec![0.0; rows];
+        a.matvec(&x, &mut y);
+        for (i, &yi) in y.iter().enumerate() {
+            let want: f64 = (0..cols).map(|j| a.get(i, j) * x[j]).sum();
+            assert!((yi - want).abs() < 1e-12, "{rows}x{cols} matvec row {i}: {yi} vs {want}");
+        }
+        let r: Vec<f64> = (0..rows).map(|i| (i as f64).sin()).collect();
+        let mut g = vec![0.0; cols];
+        a.matvec_t(&r, &mut g);
+        for (j, &gj) in g.iter().enumerate() {
+            let want: f64 = (0..rows).map(|i| a.get(i, j) * r[i]).sum();
+            assert!((gj - want).abs() < 1e-12, "{rows}x{cols} matvec_t col {j}: {gj} vs {want}");
+        }
+    }
+}
+
+/// CSC chunked matvec: bit-identical across thread budgets on a shape
+/// wide enough to engage the per-chunk-partials path, and close to the
+/// dense result.
+#[test]
+fn csc_matvec_thread_invariant_on_chunked_shapes() {
+    use flexa::linalg::CscMatrix;
+    use flexa::par;
+    let mut rng = flexa::prng::Xoshiro256pp::seed_from_u64(77);
+    // 600 columns -> 2 chunks at the fixed 256-column granularity.
+    let (m, n) = (50usize, 600usize);
+    let mut d = DenseMatrix::zeros(m, n);
+    for j in 0..n {
+        for i in 0..m {
+            if rng.next_f64() < 0.15 {
+                d.set(i, j, rng.next_normal());
+            }
+        }
+    }
+    let s = CscMatrix::from_dense(&d, 0.0);
+    let mut x = vec![0.0; n];
+    rng.fill_normal(&mut x);
+    let run = |threads: usize| {
+        par::with_threads(threads, || {
+            let mut y = vec![0.0; m];
+            s.matvec(&x, &mut y);
+            y
+        })
+    };
+    let y1 = run(1);
+    for threads in [2usize, 4, 8] {
+        let yt = run(threads);
+        assert!(
+            y1.iter().zip(&yt).all(|(p, q)| p.to_bits() == q.to_bits()),
+            "CSC matvec bits differ between 1 and {threads} threads"
+        );
+    }
+    let mut yd = vec![0.0; m];
+    d.matvec(&x, &mut yd);
+    for i in 0..m {
+        assert!((y1[i] - yd[i]).abs() < 1e-10, "row {i}: sparse {} vs dense {}", y1[i], yd[i]);
+    }
+}

@@ -319,3 +319,33 @@ fn bounded_queue_refuses_when_full() {
     let results = scheduler.join();
     assert_eq!(results.len(), 3, "blocker + two queued jobs ran; the refused one never entered");
 }
+
+/// The warm-start cache carries the spectral-norm estimate: a repeated
+/// FISTA-family job hits the cache, the hit counts as a skipped
+/// power-iteration preamble (`lipschitz_reuses`), and both runs
+/// converge to the shared target. (Power iteration is deterministic, so
+/// the seeded L is the exact value a recomputation would produce.)
+#[test]
+fn warm_repeat_reuses_spectral_norm_estimate() {
+    let scheduler = Scheduler::start(ServeConfig::default().with_workers(1));
+    let spec = ProblemSpec::lasso(40, 120).with_sparsity(0.1).with_seed(654);
+    let opts = SolveOptions::default().with_max_iters(50_000).with_target(1e-3);
+    for _ in 0..2 {
+        scheduler.submit(
+            JobSpec::new(spec.clone(), SolverSpec::parse("fista").unwrap())
+                .with_opts(opts.clone())
+                .with_warm_start(true),
+        );
+    }
+    let (results, stats) = scheduler.join_with_stats();
+    assert_eq!((stats.hits, stats.misses), (1, 1), "{stats:?}");
+    assert_eq!(stats.lipschitz_reuses, 1, "the hit must carry the cached L: {stats:?}");
+    let (cold, warm) = (results[0].report.as_ref().unwrap(), results[1].report.as_ref().unwrap());
+    assert!(cold.converged && warm.converged, "cold {} / warm {}", cold.converged, warm.converged);
+    assert!(
+        warm.iterations <= cold.iterations,
+        "warm {} vs cold {} iterations",
+        warm.iterations,
+        cold.iterations
+    );
+}
