@@ -7,24 +7,47 @@
 //! * `FLEXA_HTTP_ADDR=127.0.0.1:PORT` — talk to an already-running
 //!   `flexa serve --http` (this is how the CI smoke step uses it).
 //! * unset — spin up an in-process server on an ephemeral port first.
+//! * `FLEXA_HTTP_TOKEN=...` — authenticate every request with this
+//!   bearer token (multi-tenant servers; see `flexa serve --tenants`).
+//! * `FLEXA_HTTP_PROBE_UNAUTHORIZED=1` — additionally submit one job
+//!   with a bogus token and require a `401`.
+//! * `FLEXA_HTTP_PROBE_QUOTA_TOKEN=...` — additionally submit one job
+//!   as this tenant and require a `429` with `Retry-After` (point it at
+//!   a tenant configured with `max_queued = 0`).
 //!
 //! Run: `cargo run --release --example http_client`
 //!
 //! Exits non-zero if any job fails to reach `finished`, the SSE
-//! lifecycle is incomplete, or `/metrics` shows no cache hit.
+//! lifecycle is incomplete, `/metrics` shows no cache hit, or an
+//! enabled probe sees the wrong status.
 
 use anyhow::{anyhow, ensure, Context, Result};
 use std::io::{Read, Write};
 use std::net::TcpStream;
 
 /// One `Connection: close` HTTP exchange; returns (status, body).
-fn request(addr: &str, method: &str, path: &str, body: Option<&str>) -> Result<(u16, String)> {
+/// `auth` overrides the ambient `FLEXA_HTTP_TOKEN` (Some("") = send no
+/// credentials even if the env var is set).
+fn request_as(
+    addr: &str,
+    method: &str,
+    path: &str,
+    body: Option<&str>,
+    auth: Option<&str>,
+) -> Result<(u16, String)> {
     let mut stream =
         TcpStream::connect(addr).with_context(|| format!("connect to {addr}"))?;
     // Fail with a diagnostic instead of hanging CI if the server wedges
     // (SSE heartbeats arrive every ~200ms, so 60s of silence is dead).
     stream.set_read_timeout(Some(std::time::Duration::from_secs(60)))?;
     let mut head = format!("{method} {path} HTTP/1.1\r\nHost: {addr}\r\nConnection: close\r\n");
+    let token = match auth {
+        Some(t) => t.to_string(),
+        None => std::env::var("FLEXA_HTTP_TOKEN").unwrap_or_default(),
+    };
+    if !token.is_empty() {
+        head.push_str(&format!("Authorization: Bearer {token}\r\n"));
+    }
     if let Some(b) = body {
         head.push_str(&format!(
             "Content-Type: application/json\r\nContent-Length: {}\r\n",
@@ -45,6 +68,10 @@ fn request(addr: &str, method: &str, path: &str, body: Option<&str>) -> Result<(
         .ok_or_else(|| anyhow!("malformed response: {raw:.80}"))?;
     let body = raw.split_once("\r\n\r\n").map(|(_, b)| b.to_string()).unwrap_or_default();
     Ok((status, body))
+}
+
+fn request(addr: &str, method: &str, path: &str, body: Option<&str>) -> Result<(u16, String)> {
+    request_as(addr, method, path, body, None)
 }
 
 /// Stream `/v1/jobs/{id}/events` until the `finished` frame; returns the
@@ -102,6 +129,22 @@ fn main() -> Result<()> {
     let (status, _) = request(&addr, "GET", "/healthz", None)?;
     ensure!(status == 200, "/healthz returned HTTP {status}");
     println!("healthz: ok");
+
+    // Optional tenant-plane probes (driven by the CI tenant-smoke job).
+    let tiny = "{\"rows\":15,\"cols\":45,\"max_iters\":5,\"target\":0}";
+    if std::env::var_os("FLEXA_HTTP_PROBE_UNAUTHORIZED").is_some() {
+        let (status, body) =
+            request_as(&addr, "POST", "/v1/jobs", Some(tiny), Some("definitely-not-a-token"))?;
+        ensure!(status == 401, "bogus token: expected 401, got {status}: {body}");
+        println!("probe unauthorized: 401 as expected");
+    }
+    if let Ok(token) = std::env::var("FLEXA_HTTP_PROBE_QUOTA_TOKEN") {
+        let (status, body) =
+            request_as(&addr, "POST", "/v1/jobs", Some(tiny), Some(token.as_str()))?;
+        ensure!(status == 429, "over-quota tenant: expected 429, got {status}: {body}");
+        ensure!(body.contains("quota"), "429 body should name the quota: {body}");
+        println!("probe over-quota: 429 as expected");
+    }
 
     // Eight λ points over one shared (A, b): same rows/cols/seed, only
     // `lambda` varies, so every job after the first warm-starts from its

@@ -32,6 +32,7 @@ use flexa::api::{ProblemHandle, ProblemSpec, Session, SolverSpec};
 use flexa::datagen::NesterovLasso;
 use flexa::problems::lasso::Lasso;
 use flexa::serve::{CustomProblemFn, JobResult, JobSpec, Scheduler, ServeConfig};
+use flexa::tenant::{Tenant, TenantRegistry};
 use std::sync::Arc;
 use std::time::Instant;
 
@@ -154,10 +155,92 @@ fn main() -> anyhow::Result<()> {
         println!("WARN: some lambda-path step used more than 50% of its cold iterations");
     }
 
+    // --- D. two-tenant 1:3 weight contention ---
+    // A backlogged queue shared by tenants `light` (weight 1) and
+    // `heavy` (weight 3): the DRR dispatcher must complete work ≈1:3.
+    // Measured as heavy's share of the first half of completions (ideal
+    // 0.75) plus the light tenant's worst-case wait in dispatch slots.
+    let fair_jobs = if smoke { 8 } else { 16 };
+    let tenants = TenantRegistry::new(vec![
+        Tenant::new("light").with_weight(1),
+        Tenant::new("heavy").with_weight(3),
+    ])?;
+    let obs = flexa::serve::CollectServeObserver::new();
+    let sched = Scheduler::start_with(
+        ServeConfig::default().with_workers(1).with_cache_bytes(0).with_tenants(tenants),
+        Some(obs.clone()),
+        flexa::api::Registry::with_defaults(),
+    );
+    // Blocker keeps the single worker busy while both lanes fill.
+    let blocker = sched.submit(
+        JobSpec::new(
+            ProblemSpec::lasso(rows, cols).with_sparsity(0.1).with_seed(0xFA1),
+            SolverSpec::parse("fpa")?,
+        )
+        .with_opts(SolveOptions::default().with_max_iters(50_000_000).with_target(0.0)),
+    );
+    let mut tenant_of = std::collections::HashMap::new();
+    let fair_opts = SolveOptions::default().with_max_iters(if smoke { 10 } else { 50 }).with_target(0.0);
+    for i in 0..fair_jobs {
+        let spec = ProblemSpec::lasso(rows, cols).with_sparsity(0.1).with_seed(0xFA2 + i as u64);
+        let h = sched.submit(
+            JobSpec::new(spec, SolverSpec::parse("fpa")?)
+                .with_opts(fair_opts.clone())
+                .with_tenant("light"),
+        );
+        tenant_of.insert(h.id(), "light");
+    }
+    for i in 0..3 * fair_jobs {
+        let spec =
+            ProblemSpec::lasso(rows, cols).with_sparsity(0.1).with_seed(0xFB2 + i as u64);
+        let h = sched.submit(
+            JobSpec::new(spec, SolverSpec::parse("fpa")?)
+                .with_opts(fair_opts.clone())
+                .with_tenant("heavy"),
+        );
+        tenant_of.insert(h.id(), "heavy");
+    }
+    let t0 = Instant::now();
+    blocker.cancel();
+    let fair_results = sched.join();
+    let fair_s = t0.elapsed().as_secs_f64();
+    assert_eq!(fair_results.len(), 4 * fair_jobs + 1);
+    let order: Vec<&str> = obs
+        .events()
+        .iter()
+        .filter_map(|e| match e {
+            flexa::serve::JobEvent::Started { job, .. } => tenant_of.get(job).copied(),
+            _ => None,
+        })
+        .collect();
+    let half = order.len() / 2;
+    let heavy_share =
+        order[..half].iter().filter(|t| **t == "heavy").count() as f64 / half.max(1) as f64;
+    let light_max_gap = order
+        .iter()
+        .enumerate()
+        .filter(|(_, t)| **t == "light")
+        .map(|(i, _)| i)
+        .scan(None::<usize>, |prev, i| {
+            let gap = i - prev.unwrap_or(0);
+            *prev = Some(i);
+            Some(gap)
+        })
+        .max()
+        .unwrap_or(0);
+    println!(
+        "tenant fairness (1:3 weights, {} jobs): heavy first-half share {heavy_share:.3} \
+         (ideal 0.75), light max dispatch gap {light_max_gap}, drained in {fair_s:.2}s",
+        4 * fair_jobs
+    );
+    if !(0.6..=0.9).contains(&heavy_share) {
+        println!("WARN: heavy share {heavy_share:.3} strayed from the 1:3 weighting");
+    }
+
     // --- record ---
     let json = format!(
-        "{{\n  \"bench\": \"serve\",\n  \"smoke\": {smoke},\n  \"workload\": {{\"problem\": \"lasso\", \"rows\": {rows}, \"cols\": {cols}, \"sparsity\": 0.1}},\n  \"throughput\": {{\"jobs\": {throughput_jobs}, \"workers\": {workers}, \"serial_s\": {serial_s:.4}, \"pool_s\": {pool_s:.4}, \"jobs_per_s\": {jobs_per_s:.4}}},\n  \"warm_repeat\": {{\"target\": 1e-6, \"cold_iters\": {cold_iters}, \"warm_iters\": {warm_iters}, \"ratio\": {repeat_ratio:.5}, \"cache_hits\": {}, \"cache_misses\": {}}},\n  \"lambda_path\": {{\"target\": 1e-4, \"points\": {path_points}, \"lambdas\": {lambdas:?}, \"cold_iters\": {cold_path:?}, \"warm_iters\": {warm_path:?}, \"mean_warm_cold_ratio\": {mean_ratio:.5}}}\n}}\n",
-        cache_stats.hits, cache_stats.misses
+        "{{\n  \"bench\": \"serve\",\n  \"smoke\": {smoke},\n  \"workload\": {{\"problem\": \"lasso\", \"rows\": {rows}, \"cols\": {cols}, \"sparsity\": 0.1}},\n  \"throughput\": {{\"jobs\": {throughput_jobs}, \"workers\": {workers}, \"serial_s\": {serial_s:.4}, \"pool_s\": {pool_s:.4}, \"jobs_per_s\": {jobs_per_s:.4}}},\n  \"warm_repeat\": {{\"target\": 1e-6, \"cold_iters\": {cold_iters}, \"warm_iters\": {warm_iters}, \"ratio\": {repeat_ratio:.5}, \"cache_hits\": {}, \"cache_misses\": {}}},\n  \"lambda_path\": {{\"target\": 1e-4, \"points\": {path_points}, \"lambdas\": {lambdas:?}, \"cold_iters\": {cold_path:?}, \"warm_iters\": {warm_path:?}, \"mean_warm_cold_ratio\": {mean_ratio:.5}}},\n  \"tenant_fairness\": {{\"weights\": [1, 3], \"jobs\": {}, \"heavy_first_half_share\": {heavy_share:.5}, \"light_max_dispatch_gap\": {light_max_gap}, \"drain_s\": {fair_s:.4}}}\n}}\n",
+        cache_stats.hits, cache_stats.misses, 4 * fair_jobs
     );
     std::fs::write("BENCH_serve.json", &json)?;
     println!("wrote BENCH_serve.json");

@@ -1,13 +1,16 @@
 //! Prometheus text-format exposition for `GET /metrics`.
 //!
-//! Three counter families meet here: per-endpoint HTTP request counts
+//! Five counter families meet here: per-endpoint HTTP request counts
 //! (owned by this module, bumped by the router), the scheduler's
-//! [`SchedulerStats`] (queue depth, running gauge, terminal buckets) and
-//! the warm-start [`CacheStats`]. Rendering follows the Prometheus text
-//! format v0.0.4: `# HELP` / `# TYPE` preamble per family, one sample
-//! per line, labels for enumerable dimensions.
+//! [`SchedulerStats`] (queue depth, running gauge, terminal buckets,
+//! retry/quota counters), the per-tenant [`TenantStats`] (labeled by
+//! tenant id), the warm-start [`CacheStats`] and the persistent store's
+//! [`StoreStats`]. Rendering follows the Prometheus text format v0.0.4:
+//! `# HELP` / `# TYPE` preamble per family, one sample per line, labels
+//! for enumerable dimensions.
 
-use crate::serve::{CacheStats, SchedulerStats};
+use crate::serve::{CacheStats, SchedulerStats, TenantStats};
+use crate::tenant::StoreStats;
 use std::sync::atomic::{AtomicU64, Ordering};
 
 /// Request counters, one per routed endpoint plus spillover buckets.
@@ -49,7 +52,9 @@ impl HttpMetrics {
 pub fn render_prometheus(
     http: &HttpMetrics,
     sched: &SchedulerStats,
+    tenants: &[TenantStats],
     cache: &CacheStats,
+    store: Option<StoreStats>,
     uptime_seconds: f64,
 ) -> String {
     let mut s = String::with_capacity(2048);
@@ -89,6 +94,18 @@ pub fn render_prometheus(
         "Submissions refused because the queue was full.",
         sched.rejected,
     );
+    counter(
+        &mut s,
+        "flexa_jobs_quota_rejected_total",
+        "Submissions refused by a tenant quota.",
+        sched.quota_rejected,
+    );
+    counter(
+        &mut s,
+        "flexa_jobs_retried_total",
+        "Retry attempts scheduled by the retry policy.",
+        sched.retried,
+    );
     s.push_str("# HELP flexa_jobs_finished_total Jobs reaching a terminal state, by outcome.\n");
     s.push_str("# TYPE flexa_jobs_finished_total counter\n");
     for (outcome, count) in [
@@ -102,6 +119,64 @@ pub fn render_prometheus(
     gauge(&mut s, "flexa_queue_depth", "Jobs waiting in the queue.", sched.queue_depth as f64);
     gauge(&mut s, "flexa_jobs_running", "Jobs currently on a worker.", sched.running as f64);
 
+    // --- per-tenant ---
+    // Prometheus label-value escaping: backslash, quote and newline.
+    let esc_label =
+        |t: &str| t.replace('\\', "\\\\").replace('"', "\\\"").replace('\n', "\\n");
+    let tenant_family =
+        |s: &mut String, name: &str, help: &str, kind: &str, value: &dyn Fn(&TenantStats) -> f64| {
+            s.push_str(&format!("# HELP {name} {help}\n# TYPE {name} {kind}\n"));
+            for t in tenants {
+                s.push_str(&format!(
+                    "{name}{{tenant=\"{}\"}} {}\n",
+                    esc_label(&t.tenant),
+                    value(t)
+                ));
+            }
+        };
+    tenant_family(
+        &mut s,
+        "flexa_tenant_jobs_submitted_total",
+        "Jobs accepted, by tenant.",
+        "counter",
+        &|t| t.submitted as f64,
+    );
+    tenant_family(
+        &mut s,
+        "flexa_tenant_jobs_finished_total",
+        "Jobs reaching a terminal state, by tenant.",
+        "counter",
+        &|t| t.finished as f64,
+    );
+    tenant_family(
+        &mut s,
+        "flexa_tenant_quota_rejected_total",
+        "Quota refusals, by tenant.",
+        "counter",
+        &|t| t.quota_rejected as f64,
+    );
+    tenant_family(
+        &mut s,
+        "flexa_tenant_jobs_retried_total",
+        "Retry attempts, by tenant.",
+        "counter",
+        &|t| t.retried as f64,
+    );
+    tenant_family(
+        &mut s,
+        "flexa_tenant_queue_depth",
+        "Jobs waiting, by tenant.",
+        "gauge",
+        &|t| t.queued as f64,
+    );
+    tenant_family(
+        &mut s,
+        "flexa_tenant_jobs_running",
+        "Jobs on a worker, by tenant.",
+        "gauge",
+        &|t| t.running as f64,
+    );
+
     // --- warm-start cache ---
     counter(&mut s, "flexa_cache_hits_total", "Warm-start cache hits.", cache.hits);
     counter(&mut s, "flexa_cache_misses_total", "Warm-start cache misses.", cache.misses);
@@ -114,6 +189,26 @@ pub fn render_prometheus(
     );
     gauge(&mut s, "flexa_cache_entries", "Warm-start cache entries.", cache.entries as f64);
     gauge(&mut s, "flexa_cache_bytes", "Warm-start cache bytes in use.", cache.bytes as f64);
+
+    // --- persistent warm-start store (families present only when a
+    // store is configured, so dashboards can detect the feature) ---
+    if let Some(st) = store {
+        counter(
+            &mut s,
+            "flexa_store_entries_loaded_total",
+            "Warm-start entries replayed from the persistent store at startup.",
+            st.entries_loaded as u64,
+        );
+        counter(
+            &mut s,
+            "flexa_store_records_skipped_total",
+            "Corrupt/truncated store records detected (and skipped) at startup.",
+            st.records_skipped as u64,
+        );
+        counter(&mut s, "flexa_store_appends_total", "Store records appended.", st.appends);
+        counter(&mut s, "flexa_store_compactions_total", "Store compaction rewrites.", st.compactions);
+        gauge(&mut s, "flexa_store_bytes", "Persistent store file size.", st.bytes as f64);
+    }
 
     gauge(&mut s, "flexa_uptime_seconds", "Seconds since the HTTP server started.", uptime_seconds);
     s
@@ -131,6 +226,8 @@ mod tests {
         let sched = SchedulerStats {
             submitted: 9,
             rejected: 2,
+            quota_rejected: 3,
+            retried: 6,
             queue_depth: 1,
             running: 4,
             done: 5,
@@ -138,6 +235,18 @@ mod tests {
             cancelled: 1,
             deadline_expired: 0,
         };
+        let tenants = vec![
+            TenantStats {
+                tenant: "alice".into(),
+                submitted: 6,
+                finished: 4,
+                quota_rejected: 3,
+                retried: 6,
+                queued: 1,
+                running: 2,
+            },
+            TenantStats { tenant: "default".into(), submitted: 3, ..TenantStats::default() },
+        ];
         let cache = CacheStats {
             hits: 7,
             misses: 2,
@@ -147,19 +256,38 @@ mod tests {
             bytes: 640,
             byte_budget: 1 << 20,
         };
-        let text = render_prometheus(&http, &sched, &cache, 12.5);
+        let store = StoreStats {
+            entries_loaded: 2,
+            records_skipped: 1,
+            appends: 9,
+            compactions: 1,
+            bytes: 4096,
+        };
+        let text = render_prometheus(&http, &sched, &tenants, &cache, Some(store), 12.5);
         for needle in [
             "flexa_http_requests_total{endpoint=\"post_jobs\"} 3",
             "flexa_http_errors_total 1",
             "flexa_jobs_submitted_total 9",
             "flexa_jobs_rejected_total 2",
+            "flexa_jobs_quota_rejected_total 3",
+            "flexa_jobs_retried_total 6",
             "flexa_jobs_finished_total{outcome=\"done\"} 5",
             "flexa_jobs_finished_total{outcome=\"cancelled\"} 1",
             "flexa_queue_depth 1",
             "flexa_jobs_running 4",
+            "flexa_tenant_jobs_submitted_total{tenant=\"alice\"} 6",
+            "flexa_tenant_jobs_submitted_total{tenant=\"default\"} 3",
+            "flexa_tenant_quota_rejected_total{tenant=\"alice\"} 3",
+            "flexa_tenant_queue_depth{tenant=\"alice\"} 1",
+            "flexa_tenant_jobs_running{tenant=\"alice\"} 2",
             "flexa_cache_hits_total 7",
             "flexa_cache_misses_total 2",
             "flexa_cache_lipschitz_reuses_total 4",
+            "flexa_store_entries_loaded_total 2",
+            "flexa_store_records_skipped_total 1",
+            "flexa_store_appends_total 9",
+            "flexa_store_compactions_total 1",
+            "flexa_store_bytes 4096",
             "flexa_uptime_seconds 12.5",
         ] {
             assert!(text.contains(needle), "missing `{needle}` in:\n{text}");
@@ -168,9 +296,14 @@ mod tests {
         for family in [
             "flexa_http_requests_total",
             "flexa_jobs_finished_total",
+            "flexa_tenant_jobs_submitted_total",
+            "flexa_store_bytes",
             "flexa_cache_bytes",
         ] {
             assert!(text.contains(&format!("# TYPE {family} ")), "no TYPE for {family}");
         }
+        // Without a store, the store families are absent entirely.
+        let text = render_prometheus(&http, &sched, &tenants, &cache, None, 1.0);
+        assert!(!text.contains("flexa_store_"), "store families only with a store");
     }
 }

@@ -28,7 +28,17 @@
 //!
 //! * **No blocking on client behavior** — submissions use
 //!   [`crate::serve::Scheduler::try_submit`]; a full queue is `429` with
-//!   `Retry-After`, never a parked connection thread.
+//!   `Retry-After`, never a parked connection thread. Tenant quota
+//!   refusals are `429` with the *tenant's* `Retry-After`.
+//! * **Tenant auth** — `Authorization: Bearer <token>` resolves the
+//!   submitting tenant against the scheduler's
+//!   [`crate::tenant::TenantRegistry`] (`401` unknown token, `403`
+//!   disabled tenant); credential-less requests run under the `default`
+//!   tenant while it is enabled.
+//! * **Observability** — every request gets a monotonic id echoed as
+//!   `x-flexa-request-id` plus one structured JSON access-log line on
+//!   stderr (method, path, status, tenant, duration); `/metrics` adds
+//!   per-tenant counters and warm-start store gauges.
 //! * **Bounded everything** — connections (semaphore), request head and
 //!   body bytes (`413`/`431`), per-job SSE replay logs, finished-job
 //!   status retention.
@@ -73,6 +83,9 @@ pub struct HttpConfig {
     pub sse_iteration_retention: usize,
     /// Finished jobs whose SSE logs are retained for late subscribers.
     pub sse_finished_retention: usize,
+    /// Emit one structured JSON access-log line per request on stderr
+    /// (request id, method, path, status, tenant, duration).
+    pub access_log: bool,
 }
 
 impl Default for HttpConfig {
@@ -85,6 +98,7 @@ impl Default for HttpConfig {
             keep_alive_max_requests: 1000,
             sse_iteration_retention: 10_000,
             sse_finished_retention: 1024,
+            access_log: true,
         }
     }
 }
@@ -97,17 +111,38 @@ pub struct ServerState {
     pub http_metrics: HttpMetrics,
     pub config: HttpConfig,
     pub started: Instant,
+    /// Monotonic request-id counter; each request's id is echoed back
+    /// as `x-flexa-request-id` and stamped on its access-log line.
+    pub request_seq: std::sync::atomic::AtomicU64,
 }
 
 impl ServerState {
-    /// Prometheus text for `GET /metrics` (scheduler + cache + HTTP).
+    /// Prometheus text for `GET /metrics` (scheduler + tenants + cache +
+    /// store + HTTP).
     pub fn render_metrics(&self) -> String {
         metrics::render_prometheus(
             &self.http_metrics,
             &self.scheduler.stats(),
+            &self.scheduler.tenant_stats(),
             &self.scheduler.cache_stats(),
+            self.scheduler.store_stats(),
             self.started.elapsed().as_secs_f64(),
         )
+    }
+
+    /// One structured access-log line per request, on stderr.
+    fn access_log(&self, request: u64, method: &str, path: &str, status: u16, tenant: &str, started: Instant) {
+        if !self.config.access_log {
+            return;
+        }
+        use crate::serve::jobfile::esc;
+        eprintln!(
+            "{{\"request\":{request},\"method\":\"{}\",\"path\":\"{}\",\"status\":{status},\"tenant\":\"{}\",\"duration_ms\":{:.3}}}",
+            esc(method),
+            esc(path),
+            esc(tenant),
+            started.elapsed().as_secs_f64() * 1e3,
+        );
     }
 }
 
@@ -163,6 +198,7 @@ impl HttpServer {
                 http_metrics: HttpMetrics::default(),
                 config,
                 started: Instant::now(),
+                request_seq: std::sync::atomic::AtomicU64::new(0),
             }),
             stop: Arc::new(AtomicBool::new(false)),
         })
@@ -294,33 +330,53 @@ fn handle_connection(stream: TcpStream, state: &Arc<ServerState>, stop: &AtomicB
         if served >= state.config.keep_alive_max_requests {
             return;
         }
-        match parser::read_request(&mut reader, &limits, &abort) {
+        match parser::read_request(
+            &mut reader,
+            Some(&mut writer as &mut dyn std::io::Write),
+            &limits,
+            &abort,
+        ) {
             Ok(None) => return, // clean close or shutdown
             Ok(Some(req)) => {
                 served += 1;
+                let req_id = state.request_seq.fetch_add(1, Ordering::Relaxed) + 1;
+                let t0 = Instant::now();
+                let tenant = router::tenant_label(state, &req);
                 match router::route(state, &req) {
                     Routed::Response(resp) => {
+                        let resp = resp.with_header("x-flexa-request-id", req_id.to_string());
                         if resp.status >= 400 {
                             state.http_metrics.errors.fetch_add(1, Ordering::Relaxed);
                         }
                         let keep_alive = req.keep_alive && resp.status < 400;
-                        if resp.write_to(&mut writer, keep_alive).is_err() || !keep_alive {
+                        let wrote = resp.write_to(&mut writer, keep_alive).is_ok();
+                        state.access_log(req_id, &req.method, &req.path, resp.status, &tenant, t0);
+                        if !wrote || !keep_alive {
                             return;
                         }
                     }
                     Routed::EventStream(_job, sub) => {
-                        let head = "HTTP/1.1 200 OK\r\nContent-Type: text/event-stream\r\nCache-Control: no-cache\r\nConnection: close\r\n\r\n";
+                        let head = format!(
+                            "HTTP/1.1 200 OK\r\nContent-Type: text/event-stream\r\nCache-Control: no-cache\r\nx-flexa-request-id: {req_id}\r\nConnection: close\r\n\r\n"
+                        );
                         use std::io::Write;
                         if writer.write_all(head.as_bytes()).is_ok() {
                             let _ = sse::stream_events(&mut writer, sub, &abort);
                         }
+                        // Logged when the stream ends so the duration
+                        // covers the whole subscription.
+                        state.access_log(req_id, &req.method, &req.path, 200, &tenant, t0);
                         return; // SSE always ends the connection
                     }
                 }
             }
             Err(e) => {
+                let req_id = state.request_seq.fetch_add(1, Ordering::Relaxed) + 1;
                 state.http_metrics.errors.fetch_add(1, Ordering::Relaxed);
-                let _ = Response::error(e.status, &e.message).write_to(&mut writer, false);
+                let _ = Response::error(e.status, &e.message)
+                    .with_header("x-flexa-request-id", req_id.to_string())
+                    .write_to(&mut writer, false);
+                state.access_log(req_id, "-", "-", e.status, "-", Instant::now());
                 // Drain what the client already sent (e.g. a refused
                 // oversized body): closing with unread bytes in the
                 // receive buffer would RST the error response out of the

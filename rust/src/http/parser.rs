@@ -4,10 +4,13 @@
 //!
 //! Scope: exactly what the `flexa::http` endpoints need — request line,
 //! headers, `Content-Length` bodies, percent-decoded paths and query
-//! strings, keep-alive. Chunked transfer encoding is rejected with
-//! `501`; oversized heads/bodies are rejected with `431`/`413` before
-//! they are buffered (the caps are the first line of defense on an
-//! internet-facing port).
+//! strings, keep-alive, `Expect: 100-continue` (an interim
+//! `100 Continue` is written before the body is read; any other
+//! expectation is refused with `417`). Chunked transfer encoding is
+//! rejected with `501`; oversized heads/bodies are rejected with
+//! `431`/`413` before they are buffered (the caps are the first line of
+//! defense on an internet-facing port) — and before the `100 Continue`,
+//! so a refused body is never invited onto the wire.
 //!
 //! Reads go through the caller's [`BufRead`], whose underlying socket is
 //! expected to carry a read timeout: on a timeout the parser polls the
@@ -91,8 +94,14 @@ impl Request {
 ///   one; nothing to respond to.
 /// * `Err(e)` — malformed/oversized input; respond with `e.status` and
 ///   close.
+///
+/// `interim` is where a `100 Continue` is written when the request
+/// carries `Expect: 100-continue` and its body passed the size check
+/// (pass `None` when there is no live socket, e.g. in tests — the body
+/// is then read without the interim response).
 pub fn read_request(
     reader: &mut impl BufRead,
+    mut interim: Option<&mut dyn std::io::Write>,
     limits: &Limits,
     abort: &dyn Fn() -> bool,
 ) -> Result<Option<Request>, HttpError> {
@@ -188,6 +197,22 @@ pub fn read_request(
                 limits.max_body_bytes
             ),
         ));
+    }
+    // `Expect: 100-continue` — tell the client to send the body it is
+    // politely holding back (the size check above already passed, so we
+    // really do want it); any other expectation is unsupported → 417.
+    if let Some(expect) = headers.iter().find(|(k, _)| k == "expect").map(|(_, v)| v.as_str()) {
+        if expect.eq_ignore_ascii_case("100-continue") {
+            if content_length > 0 {
+                if let Some(w) = interim.as_deref_mut() {
+                    w.write_all(b"HTTP/1.1 100 Continue\r\n\r\n")
+                        .and_then(|_| w.flush())
+                        .map_err(|e| HttpError::new(400, format!("write error: {e}")))?;
+                }
+            }
+        } else {
+            return Err(HttpError::new(417, format!("unsupported expectation `{expect}`")));
+        }
     }
     let mut body = vec![0u8; content_length];
     read_exact(reader, &mut body, abort)?;
@@ -314,7 +339,7 @@ mod tests {
 
     fn parse_limited(input: &str, limits: &Limits) -> Result<Option<Request>, HttpError> {
         let mut reader = BufReader::new(input.as_bytes());
-        read_request(&mut reader, limits, &never)
+        read_request(&mut reader, None, limits, &never)
     }
 
     #[test]
@@ -398,11 +423,83 @@ mod tests {
         let input = "GET /a HTTP/1.1\r\n\r\nPOST /b HTTP/1.1\r\nContent-Length: 2\r\n\r\nhiGET /c HTTP/1.1\r\n\r\n";
         let mut reader = BufReader::new(input.as_bytes());
         let limits = Limits::default();
-        let a = read_request(&mut reader, &limits, &never).unwrap().unwrap();
-        let b = read_request(&mut reader, &limits, &never).unwrap().unwrap();
-        let c = read_request(&mut reader, &limits, &never).unwrap().unwrap();
+        let a = read_request(&mut reader, None, &limits, &never).unwrap().unwrap();
+        let b = read_request(&mut reader, None, &limits, &never).unwrap().unwrap();
+        let c = read_request(&mut reader, None, &limits, &never).unwrap().unwrap();
         assert_eq!((a.path.as_str(), b.path.as_str(), c.path.as_str()), ("/a", "/b", "/c"));
         assert_eq!(b.body, b"hi");
-        assert!(read_request(&mut reader, &limits, &never).unwrap().is_none());
+        assert!(read_request(&mut reader, None, &limits, &never).unwrap().is_none());
+    }
+
+    /// `Expect: 100-continue`: the interim response goes out before the
+    /// body is read; an oversized body is refused *without* inviting it;
+    /// other expectations are 417.
+    #[test]
+    fn expect_100_continue_writes_interim_then_reads_body() {
+        let input = "POST /v1/jobs HTTP/1.1\r\nExpect: 100-continue\r\nContent-Length: 5\r\n\r\nhello";
+        let mut reader = BufReader::new(input.as_bytes());
+        let mut interim: Vec<u8> = Vec::new();
+        let req = read_request(
+            &mut reader,
+            Some(&mut interim as &mut dyn std::io::Write),
+            &Limits::default(),
+            &never,
+        )
+        .unwrap()
+        .unwrap();
+        assert_eq!(interim, b"HTTP/1.1 100 Continue\r\n\r\n");
+        assert_eq!(req.body, b"hello");
+        // Case-insensitive expectation value.
+        let input = "POST / HTTP/1.1\r\nExpect: 100-Continue\r\nContent-Length: 2\r\n\r\nok";
+        let mut reader = BufReader::new(input.as_bytes());
+        let mut interim: Vec<u8> = Vec::new();
+        let req = read_request(
+            &mut reader,
+            Some(&mut interim as &mut dyn std::io::Write),
+            &Limits::default(),
+            &never,
+        )
+        .unwrap()
+        .unwrap();
+        assert!(interim.starts_with(b"HTTP/1.1 100"));
+        assert_eq!(req.body, b"ok");
+        // A bodyless expectation needs no interim response.
+        let input = "GET / HTTP/1.1\r\nExpect: 100-continue\r\n\r\n";
+        let mut reader = BufReader::new(input.as_bytes());
+        let mut interim: Vec<u8> = Vec::new();
+        read_request(
+            &mut reader,
+            Some(&mut interim as &mut dyn std::io::Write),
+            &Limits::default(),
+            &never,
+        )
+        .unwrap()
+        .unwrap();
+        assert!(interim.is_empty());
+    }
+
+    #[test]
+    fn expect_oversized_body_is_refused_before_the_interim_response() {
+        let limits = Limits { max_head_bytes: 1024, max_body_bytes: 4 };
+        let input = "POST / HTTP/1.1\r\nExpect: 100-continue\r\nContent-Length: 100\r\n\r\n";
+        let mut reader = BufReader::new(input.as_bytes());
+        let mut interim: Vec<u8> = Vec::new();
+        let err = read_request(
+            &mut reader,
+            Some(&mut interim as &mut dyn std::io::Write),
+            &limits,
+            &never,
+        )
+        .unwrap_err();
+        assert_eq!(err.status, 413);
+        assert!(interim.is_empty(), "a refused body must not be invited with a 100");
+    }
+
+    #[test]
+    fn unsupported_expectations_are_417() {
+        let err = parse("POST / HTTP/1.1\r\nExpect: never-100-continue\r\nContent-Length: 2\r\n\r\nok")
+            .unwrap_err();
+        assert_eq!(err.status, 417);
+        assert!(err.message.contains("never-100-continue"), "{}", err.message);
     }
 }

@@ -14,13 +14,26 @@
 //! (the same grammar as a JSONL line). Submission never blocks a
 //! connection thread: a full queue maps the scheduler's typed
 //! [`QueueFull`] refusal to `429 Too Many Requests` with a
-//! `Retry-After` header.
+//! `Retry-After` header; a tenant over its quota gets `429` with the
+//! *tenant's* configured `Retry-After`.
+//!
+//! ## Tenant authentication
+//!
+//! Submissions resolve a tenant before anything else: an
+//! `Authorization: Bearer <token>` header names it (unknown token →
+//! `401`, disabled tenant → `403`); without credentials the request
+//! runs under the `default` tenant when that tenant is enabled, else
+//! `401`. A jobfile `tenant` key may select a *tokenless* tenant on an
+//! unauthenticated request; it must otherwise match the authenticated
+//! tenant (`403` on mismatch — a bearer token is not a passport to
+//! other tenants' lanes).
 
 use super::sse::Subscription;
 use super::ServerState;
 use crate::http::parser::Request;
 use crate::serve::jobfile::{esc, num, outcome_fields, parse_job_line};
-use crate::serve::scheduler::{JobProblem, JobStatus};
+use crate::serve::scheduler::{JobProblem, JobStatus, SubmitError};
+use crate::tenant::{Tenant, DEFAULT_TENANT};
 use std::io::Write;
 use std::sync::atomic::Ordering;
 
@@ -80,13 +93,17 @@ impl Response {
 /// Reason phrases for every status this server emits.
 pub fn reason(status: u16) -> &'static str {
     match status {
+        100 => "Continue",
         200 => "OK",
         202 => "Accepted",
         400 => "Bad Request",
+        401 => "Unauthorized",
+        403 => "Forbidden",
         404 => "Not Found",
         405 => "Method Not Allowed",
         408 => "Request Timeout",
         413 => "Payload Too Large",
+        417 => "Expectation Failed",
         429 => "Too Many Requests",
         431 => "Request Header Fields Too Large",
         500 => "Internal Server Error",
@@ -181,14 +198,56 @@ fn method_not_allowed(allow: &str) -> Response {
         .with_header("Allow", allow.to_string())
 }
 
+/// The `Authorization: Bearer <token>` credential, if present.
+fn bearer_token(req: &Request) -> Option<&str> {
+    let auth = req.header("authorization")?;
+    let (scheme, token) = auth.split_once(' ')?;
+    scheme.eq_ignore_ascii_case("bearer").then(|| token.trim()).filter(|t| !t.is_empty())
+}
+
+/// Resolve the requesting tenant (see the module docs for the rules).
+pub fn resolve_tenant<'a>(state: &'a ServerState, req: &Request) -> Result<&'a Tenant, Response> {
+    let tenants = state.scheduler.tenants();
+    match bearer_token(req) {
+        Some(token) => match tenants.by_token(token) {
+            Some(t) if t.enabled => Ok(t),
+            Some(t) => Err(Response::error(403, &format!("tenant `{}` is disabled", t.id))),
+            None => Err(Response::error(401, "unknown bearer token")
+                .with_header("WWW-Authenticate", "Bearer".to_string())),
+        },
+        None => match tenants.get(DEFAULT_TENANT) {
+            Some(t) if t.enabled && t.token.is_none() => Ok(t),
+            _ => Err(Response::error(
+                401,
+                "authentication required: send `Authorization: Bearer <token>`",
+            )
+            .with_header("WWW-Authenticate", "Bearer".to_string())),
+        },
+    }
+}
+
+/// Tenant id for the access log: the resolved tenant, or `-` when the
+/// request carries no usable identity.
+pub fn tenant_label(state: &ServerState, req: &Request) -> String {
+    match resolve_tenant(state, req) {
+        Ok(t) => t.id.clone(),
+        Err(_) => "-".to_string(),
+    }
+}
+
 fn parse_id(raw: &str) -> Result<u64, Response> {
     raw.parse::<u64>()
         .map_err(|_| Response::error(400, &format!("job id must be an integer, got `{raw}`")))
 }
 
-/// `POST /v1/jobs`: parse, validate names eagerly (typo suggestions
-/// belong in the 400 body, not in a failed job), then try-submit.
+/// `POST /v1/jobs`: authenticate the tenant, parse, validate names
+/// eagerly (typo suggestions belong in the 400 body, not in a failed
+/// job), then try-submit.
 fn submit(state: &ServerState, req: &Request) -> Response {
+    let auth = match resolve_tenant(state, req) {
+        Ok(t) => t.clone(),
+        Err(resp) => return resp,
+    };
     let text = match std::str::from_utf8(&req.body) {
         Ok(t) => t,
         Err(_) => return Response::error(400, "request body must be UTF-8 JSON"),
@@ -196,10 +255,37 @@ fn submit(state: &ServerState, req: &Request) -> Response {
     if text.trim().is_empty() {
         return Response::error(400, "empty body: send one JSON job object, e.g. {\"problem\":\"lasso\",\"algo\":\"fpa\"}");
     }
-    let job = match parse_job_line(text.trim()) {
+    let mut job = match parse_job_line(text.trim()) {
         Ok(j) => j,
         Err(e) => return Response::error(400, &format!("{e:#}")),
     };
+    // Reconcile the jobfile `tenant` key with the authenticated tenant:
+    // the credential wins; a tokenless tenant may be selected without
+    // one; anything else is a 403 (not 404 — do not leak tenant ids).
+    if job.tenant != auth.id {
+        let explicit = job.tenant != DEFAULT_TENANT;
+        if !explicit {
+            job.tenant = auth.id.clone();
+        } else if bearer_token(req).is_some() {
+            return Response::error(
+                403,
+                &format!(
+                    "job names tenant `{}` but the bearer token authenticates `{}`",
+                    job.tenant, auth.id
+                ),
+            );
+        } else {
+            match state.scheduler.tenants().get(&job.tenant) {
+                Some(t) if t.enabled && t.token.is_none() => {}
+                _ => {
+                    return Response::error(
+                        403,
+                        &format!("tenant `{}` requires authentication", job.tenant),
+                    )
+                }
+            }
+        }
+    }
     let registry = state.scheduler.registry();
     if let JobProblem::Spec(spec) = &job.problem {
         if let Err(e) = registry.resolve_problem_name(&spec.kind) {
@@ -211,18 +297,28 @@ fn submit(state: &ServerState, req: &Request) -> Response {
     if let Err(e) = registry.build_solver(&job.solver) {
         return Response::error(400, &format!("{e:#}"));
     }
+    let tenant_id = job.tenant.clone();
     match state.scheduler.try_submit(job) {
         Ok(handle) => {
             let id = handle.id();
             Response::json(
                 202,
                 format!(
-                    "{{\"job\":{id},\"status_url\":\"/v1/jobs/{id}\",\"events_url\":\"/v1/jobs/{id}/events\"}}"
+                    "{{\"job\":{id},\"tenant\":\"{}\",\"status_url\":\"/v1/jobs/{id}\",\"events_url\":\"/v1/jobs/{id}/events\"}}",
+                    esc(&tenant_id)
                 ),
             )
         }
-        Err(full) => Response::error(429, &full.to_string())
+        Err(SubmitError::QueueFull(full)) => Response::error(429, &full.to_string())
             .with_header("Retry-After", state.config.retry_after_secs.to_string()),
+        Err(SubmitError::Quota { quota, .. }) => {
+            let retry_after = quota.retry_after_secs;
+            Response::error(429, &quota.to_string())
+                .with_header("Retry-After", retry_after.to_string())
+        }
+        // Unreachable after resolve_tenant, but map them sanely anyway.
+        Err(e @ SubmitError::UnknownTenant { .. })
+        | Err(e @ SubmitError::TenantDisabled { .. }) => Response::error(403, &e.to_string()),
     }
 }
 
@@ -231,12 +327,14 @@ fn submit(state: &ServerState, req: &Request) -> Response {
 /// client recovers bit-identical values).
 pub fn status_json(status: &JobStatus, include_x: bool) -> String {
     let mut s = format!(
-        "{{\"job\":{},\"tag\":\"{}\",\"problem\":\"{}\",\"solver\":\"{}\",\"state\":\"{}\"",
+        "{{\"job\":{},\"tag\":\"{}\",\"tenant\":\"{}\",\"problem\":\"{}\",\"solver\":\"{}\",\"state\":\"{}\",\"retries\":{}",
         status.job,
         esc(&status.tag),
+        esc(&status.tenant),
         esc(&status.problem),
         esc(&status.solver),
         status.state.label(),
+        status.retries,
     );
     if let Some(outcome) = &status.outcome {
         s.push(',');

@@ -169,6 +169,7 @@ pub fn event_name(event: &JobEvent) -> &'static str {
         JobEvent::Started { .. } => "started",
         JobEvent::CacheProbe { .. } => "cache",
         JobEvent::Iteration { .. } => "iteration",
+        JobEvent::Retrying { .. } => "retrying",
         JobEvent::Finished { .. } => "finished",
     }
 }

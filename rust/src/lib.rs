@@ -56,6 +56,10 @@
 //! The [`http`] layer exposes that scheduler as a network service
 //! (`flexa serve --http ADDR`): job submission, status, SSE event
 //! streams, cancellation and Prometheus metrics over plain HTTP/1.1.
+//! The [`tenant`] control plane adds multi-tenancy on top: bearer-token
+//! auth, weighted-fair scheduling between tenants, per-tenant quotas, a
+//! bounded-backoff retry policy, and a persistent warm-start store that
+//! survives restarts (`flexa serve --tenants FILE --store PATH`).
 
 pub mod algos;
 pub mod api;
@@ -75,6 +79,7 @@ pub mod runtime;
 pub mod select;
 pub mod serve;
 pub mod stepsize;
+pub mod tenant;
 
 /// Crate-wide result alias.
 pub type Result<T> = anyhow::Result<T>;

@@ -15,6 +15,18 @@ const MIN_COLS_PER_TASK: usize = 256;
 /// Minimum stored values per task for the chunked `dot_col`.
 const MIN_NNZ_PER_TASK: usize = 16 * 1024;
 
+std::thread_local! {
+    /// Reusable per-thread scratch for the chunked `matvec`'s private
+    /// partial accumulators (`nt × rows` doubles). The buffer belongs to
+    /// the *calling* thread — pool workers only ever see disjoint chunks
+    /// of it through `par_disjoint_mut` — so repeated matvecs in a solver
+    /// loop stop paying an `nt × m` allocation per call. Each task zeroes
+    /// its own chunk before accumulating, which keeps the contents
+    /// call-independent: bit-identity across thread budgets (and with the
+    /// old `vec![0.0; ..]` form) is untouched.
+    static CSC_PARTIALS: std::cell::RefCell<Vec<f64>> = const { std::cell::RefCell::new(Vec::new()) };
+}
+
 /// Sparse `m × n` matrix in CSC format.
 #[derive(Clone, Debug)]
 pub struct CscMatrix {
@@ -143,24 +155,36 @@ impl MatVec for CscMatrix {
             self.matvec_cols(x, 0..self.cols, y);
             return;
         }
-        // Private per-chunk accumulators, one row-space vector each.
-        let mut partials = vec![0.0; nt * m];
-        let buf_ranges: Vec<std::ops::Range<usize>> = (0..nt).map(|t| t * m..(t + 1) * m).collect();
-        par::par_disjoint_mut(&mut partials, &buf_ranges, |t, p| {
-            self.matvec_cols(x, ranges[t].clone(), p);
-        });
-        // Fold partials in chunk order; row-partitioned, but every row's
-        // fold order is the same fixed t = 0..nt, so the split is free.
-        let row_ranges = par::task_ranges(m, 1024, 1);
-        par::par_disjoint_mut(y, &row_ranges, |rt, yc| {
-            let rows = row_ranges[rt].clone();
-            yc.copy_from_slice(&partials[rows.start..rows.end]);
-            for t in 1..nt {
-                let p = &partials[t * m + rows.start..t * m + rows.end];
-                for (yi, pi) in yc.iter_mut().zip(p) {
-                    *yi += *pi;
-                }
+        // Private per-chunk accumulators, one row-space vector each, in
+        // the calling thread's reusable scratch buffer (each task zeroes
+        // its own chunk — `resize` alone would leave stale sums behind).
+        CSC_PARTIALS.with(|buf| {
+            let mut partials = buf.borrow_mut();
+            if partials.len() < nt * m {
+                partials.resize(nt * m, 0.0);
             }
+            let partials = &mut partials[..nt * m];
+            let buf_ranges: Vec<std::ops::Range<usize>> =
+                (0..nt).map(|t| t * m..(t + 1) * m).collect();
+            par::par_disjoint_mut(partials, &buf_ranges, |t, p| {
+                p.fill(0.0);
+                self.matvec_cols(x, ranges[t].clone(), p);
+            });
+            // Fold partials in chunk order; row-partitioned, but every
+            // row's fold order is the same fixed t = 0..nt, so the split
+            // is free.
+            let row_ranges = par::task_ranges(m, 1024, 1);
+            let partials = &partials[..];
+            par::par_disjoint_mut(y, &row_ranges, |rt, yc| {
+                let rows = row_ranges[rt].clone();
+                yc.copy_from_slice(&partials[rows.start..rows.end]);
+                for t in 1..nt {
+                    let p = &partials[t * m + rows.start..t * m + rows.end];
+                    for (yi, pi) in yc.iter_mut().zip(p) {
+                        *yi += *pi;
+                    }
+                }
+            });
         });
     }
 
@@ -314,6 +338,45 @@ mod tests {
         // tol = 0 keeps every non-zero (the common exact-sparsity case).
         let s0 = CscMatrix::from_dense(&d, 0.0);
         assert_eq!(s0.nnz(), 4);
+    }
+
+    /// The chunked matvec path (multi-task shapes) reuses a thread-local
+    /// scratch buffer across calls: repeated calls — including after a
+    /// *larger* matvec dirtied the buffer — must stay bit-identical to
+    /// the serial column scatter and to each other.
+    #[test]
+    fn chunked_matvec_scratch_reuse_is_bit_identical() {
+        let mut rng = Xoshiro256pp::seed_from_u64(99);
+        // 30x600 mostly-dense: task_ranges(600, 256, 1) gives 2 chunks
+        // and 2*nt*m << nnz, so the parallel accumulator path engages.
+        let d = DenseMatrix::randn(30, 600, &mut rng);
+        let s = CscMatrix::from_dense(&d, 0.0);
+        let big = CscMatrix::from_dense(&DenseMatrix::randn(40, 700, &mut rng), 0.0);
+        let x: Vec<f64> = (0..600).map(|i| (i as f64 * 0.37).sin()).collect();
+        let xbig: Vec<f64> = (0..700).map(|i| (i as f64 * 0.11).cos()).collect();
+
+        // Serial oracle: the plain scatter the single-chunk path uses.
+        let mut oracle = vec![0.0; 30];
+        s.matvec_cols(&x, 0..600, &mut oracle);
+
+        let mut y = vec![0.0; 30];
+        for round in 0..3 {
+            // Dirty the scratch with a different (larger) shape between
+            // rounds: stale contents must never leak into the fold.
+            if round > 0 {
+                let mut ybig = vec![0.0; 40];
+                big.matvec(&xbig, &mut ybig);
+            }
+            y.fill(f64::NAN); // output must be fully overwritten too
+            s.matvec(&x, &mut y);
+            for i in 0..30 {
+                assert_eq!(
+                    y[i].to_bits(),
+                    oracle[i].to_bits(),
+                    "round {round}, row {i}: scratch reuse changed bits"
+                );
+            }
+        }
     }
 
     #[test]

@@ -197,9 +197,14 @@ fn cmd_serve(args: &[String]) -> anyhow::Result<()> {
         .opt("queue", Some("64"), "bounded queue capacity")
         .opt("cache-mb", Some("64"), "warm-start cache budget in MiB (0 disables)")
         .opt("threads", None, "core budget shared by workers x kernel threads, 1..=usable host cores (default: all host cores)")
+        .opt("tenants", None, "tenants file (TOML [tenant.<id>] tables or JSON; weights, tokens, quotas)")
+        .opt("store", None, "persist the warm-start cache to this file (loaded on start, appended on insert)")
+        .opt("store-mb", Some("64"), "persistent store byte cap in MiB before compaction (with --store)")
+        .opt("retries", Some("0"), "max retries per job for retryable failures (bounded exponential backoff)")
         .opt("http", None, "serve over HTTP on this address (e.g. 127.0.0.1:8080; port 0 picks one); the jobs file becomes optional pre-submitted work")
         .opt("max-conns", Some("64"), "concurrent HTTP connections (with --http)")
         .opt("max-body-kb", Some("1024"), "largest accepted HTTP request body, KiB (with --http)")
+        .flag("no-access-log", "suppress the per-request access-log lines (with --http)")
         .flag("stream", "emit every job lifecycle event as a JSON line")
         .flag("quiet", "suppress the stderr summary");
     let p = cmd.parse(args)?;
@@ -234,11 +239,45 @@ fn cmd_serve(args: &[String]) -> anyhow::Result<()> {
     let mut config = ServeConfig::default()
         .with_workers(p.usize("workers")?)
         .with_queue_capacity(p.usize("queue")?)
-        .with_cache_bytes(p.usize("cache-mb")?.saturating_mul(1 << 20));
+        .with_cache_bytes(p.usize("cache-mb")?.saturating_mul(1 << 20))
+        .with_max_retries(p.usize("retries")? as u32);
     if p.get("threads").is_some() {
         let threads =
             flexa::serve::jobfile::validate_threads(p.usize("threads")?, "--threads")?;
         config = config.with_core_budget(threads);
+    }
+    if let Some(path) = p.get("tenants") {
+        config = config.with_tenants(flexa::tenant::TenantRegistry::from_file(path)?);
+    }
+    if let Some(store) = p.get("store") {
+        anyhow::ensure!(
+            config.cache_bytes > 0,
+            "--store needs the warm-start cache: raise --cache-mb above 0"
+        );
+        config = config
+            .with_store_path(store)
+            .with_store_max_bytes((p.usize("store-mb")?.max(1) as u64) << 20);
+    }
+    // Jobfile tenants must resolve against the registry before anything
+    // starts — a typo'd tenant would otherwise run on an implicit
+    // weight-1 lane instead of failing loudly. The pre-submit path uses
+    // the *blocking* submit, so a disabled tenant or an unsatisfiable
+    // quota (max_queued = 0 admits nothing, ever) must also be refused
+    // here rather than hang the process before it serves.
+    for job in &jobs {
+        let tenant = config.tenants.get(&job.tenant).ok_or_else(|| {
+            anyhow::anyhow!(
+                "jobs file names unknown tenant `{}` (known: {})",
+                job.tenant,
+                config.tenants.iter().map(|t| t.id.as_str()).collect::<Vec<_>>().join(", ")
+            )
+        })?;
+        anyhow::ensure!(tenant.enabled, "jobs file names disabled tenant `{}`", job.tenant);
+        anyhow::ensure!(
+            tenant.quota.max_queued != Some(0),
+            "jobs file names tenant `{}` whose max_queued quota is 0 — it can never admit a job",
+            job.tenant
+        );
     }
     // println! locks stdout per call, so concurrent workers emit whole
     // lines.
@@ -255,6 +294,7 @@ fn cmd_serve(args: &[String]) -> anyhow::Result<()> {
             let http_config = flexa::http::HttpConfig {
                 max_connections: p.usize("max-conns")?.max(1),
                 max_body_bytes: p.usize("max-body-kb")?.saturating_mul(1 << 10).max(1 << 10),
+                access_log: !p.flag("no-access-log"),
                 ..flexa::http::HttpConfig::default()
             };
             let server = flexa::http::HttpServer::bind_with_downstream(
@@ -520,6 +560,70 @@ mod tests {
         assert!(err.contains("cannot bind"), "{err}");
         let err = cmd_serve(&[]).unwrap_err().to_string();
         assert!(err.contains("usage:"), "{err}");
+    }
+
+    /// `--tenants` parses the file up front; jobfile `tenant` keys must
+    /// resolve against it before anything starts.
+    #[test]
+    fn serve_validates_tenants_file_and_job_tenants() {
+        let err = cmd_serve(&args_of(&["--http", "127.0.0.1:0", "--tenants", "/no/such.toml"]))
+            .unwrap_err()
+            .to_string();
+        assert!(err.contains("cannot read tenants file"), "{err}");
+
+        let tenants = std::env::temp_dir().join("flexa_cli_tenants_bad.toml");
+        std::fs::write(&tenants, "[tenant.a]\nbogus = 1\n").unwrap();
+        let err = cmd_serve(&args_of(&[
+            "--http",
+            "127.0.0.1:0",
+            "--tenants",
+            tenants.to_str().unwrap(),
+        ]))
+        .unwrap_err()
+        .to_string();
+        assert!(err.contains("unknown field `bogus`"), "{err}");
+        std::fs::remove_file(&tenants).ok();
+
+        let jobs = std::env::temp_dir().join("flexa_cli_tenant_jobs.jsonl");
+        std::fs::write(&jobs, "{\"rows\": 15, \"cols\": 45, \"tenant\": \"ghost\"}\n").unwrap();
+        let err = cmd_serve(&args_of(&[jobs.to_str().unwrap()])).unwrap_err().to_string();
+        assert!(err.contains("unknown tenant `ghost`"), "{err}");
+        assert!(err.contains("default"), "{err}");
+        std::fs::remove_file(&jobs).ok();
+
+        // A jobfile tenant whose quota can never admit (max_queued = 0)
+        // must be refused up front, not hang the blocking pre-submit.
+        let tenants = std::env::temp_dir().join("flexa_cli_tenants_zero.toml");
+        std::fs::write(&tenants, "[tenant.blocked]\nmax_queued = 0\n").unwrap();
+        let jobs = std::env::temp_dir().join("flexa_cli_tenant_jobs_zero.jsonl");
+        std::fs::write(&jobs, "{\"rows\": 15, \"cols\": 45, \"tenant\": \"blocked\"}\n").unwrap();
+        let err = cmd_serve(&args_of(&[
+            jobs.to_str().unwrap(),
+            "--tenants",
+            tenants.to_str().unwrap(),
+        ]))
+        .unwrap_err()
+        .to_string();
+        assert!(err.contains("max_queued quota is 0"), "{err}");
+        std::fs::remove_file(&tenants).ok();
+        std::fs::remove_file(&jobs).ok();
+    }
+
+    /// `--store` without a cache is a configuration error, not a silent
+    /// no-op.
+    #[test]
+    fn serve_rejects_store_without_cache() {
+        let err = cmd_serve(&args_of(&[
+            "--http",
+            "127.0.0.1:0",
+            "--cache-mb",
+            "0",
+            "--store",
+            "/tmp/flexa_cli_store.bin",
+        ]))
+        .unwrap_err()
+        .to_string();
+        assert!(err.contains("--cache-mb"), "{err}");
     }
 
     #[test]

@@ -179,6 +179,16 @@ impl WarmStartCache {
     pub fn is_empty(&self) -> bool {
         self.entries.is_empty()
     }
+
+    /// The live entry set as `(key, x, τ, L)` tuples — iterates are
+    /// shared `Arc`s, so this is cheap. Feeds the persistent store's
+    /// compaction rewrite ([`crate::tenant::WarmStartStore::compact`]).
+    pub fn snapshot(&self) -> Vec<(u64, Arc<Vec<f64>>, Option<f64>, Option<f64>)> {
+        self.entries
+            .iter()
+            .map(|(k, e)| (*k, Arc::clone(&e.x), e.tau, e.lipschitz))
+            .collect()
+    }
 }
 
 /// Content fingerprint of a problem's smooth part (see module docs).
@@ -217,15 +227,17 @@ fn fingerprint_of<P: CompositeProblem + ?Sized>(p: &P) -> u64 {
 
 /// FNV-1a, 64-bit (from-scratch: no hasher crates in the offline cache;
 /// `DefaultHasher` is not guaranteed stable across releases and this key
-/// may be logged/persisted).
-struct Fnv(u64);
+/// may be logged/persisted). Shared with the persistent store's record
+/// checksums ([`crate::tenant::store`]) so there is exactly one copy of
+/// the constants.
+pub(crate) struct Fnv(u64);
 
 impl Fnv {
-    fn new() -> Self {
+    pub(crate) fn new() -> Self {
         Fnv(0xcbf2_9ce4_8422_2325)
     }
 
-    fn write(&mut self, bytes: &[u8]) {
+    pub(crate) fn write(&mut self, bytes: &[u8]) {
         for &b in bytes {
             self.0 ^= b as u64;
             self.0 = self.0.wrapping_mul(0x0000_0100_0000_01b3);
@@ -240,7 +252,7 @@ impl Fnv {
         self.write(&v.to_bits().to_le_bytes());
     }
 
-    fn finish(&self) -> u64 {
+    pub(crate) fn finish(&self) -> u64 {
         self.0
     }
 }

@@ -25,6 +25,7 @@
 //! | `deadline_ms`  | int    | per-job deadline from submission (extends `max_seconds` when that key is unset) |
 //! | `warm_start`   | bool   | consult/update the warm-start cache         |
 //! | `tag`          | string | label echoed in events and results          |
+//! | `tenant`       | string | tenant to schedule under (default `default`; over HTTP a `Bearer` token wins — see [`crate::tenant`]) |
 //!
 //! Example line:
 //!
@@ -308,7 +309,7 @@ fn as_text<'a>(v: &'a Json, key: &str) -> Result<&'a str> {
 
 const KNOWN_KEYS: &str = "problem, rows, cols, sparsity, c, lambda, block_size, seed, label_noise, \
      algo, params, max_iters, max_seconds, target, record_every, procs, threads, \
-     deadline_ms, warm_start, tag";
+     deadline_ms, warm_start, tag, tenant";
 
 /// Validate a thread-count request against the host: 0 is meaningless
 /// and more threads than cores only oversubscribes, so both are
@@ -345,6 +346,7 @@ pub fn parse_job_line(line: &str) -> Result<JobSpec> {
     let mut deadline = None;
     let mut warm_start = false;
     let mut tag = String::new();
+    let mut tenant: Option<String> = None;
 
     for (key, v) in fields {
         match key.as_str() {
@@ -386,6 +388,7 @@ pub fn parse_job_line(line: &str) -> Result<JobSpec> {
                 warm_start = v.as_bool().ok_or_else(|| anyhow!("job key `warm_start` must be a boolean"))?
             }
             "tag" => tag = as_text(v, key)?.to_string(),
+            "tenant" => tenant = Some(as_text(v, key)?.to_string()),
             other => bail!("unknown job key `{other}` (known: {KNOWN_KEYS})"),
         }
     }
@@ -401,6 +404,9 @@ pub fn parse_job_line(line: &str) -> Result<JobSpec> {
     }
 
     let mut job = JobSpec::new(problem, solver).with_opts(opts).with_warm_start(warm_start).with_tag(&tag);
+    if let Some(t) = tenant {
+        job = job.with_tenant(&t);
+    }
     if let Some(d) = deadline {
         job = job.with_deadline(d);
     }
@@ -486,6 +492,9 @@ pub fn event_json(event: &JobEvent) -> String {
             num(e.objective),
             num(e.rel_err)
         ),
+        JobEvent::Retrying { job, attempt, delay_ms } => {
+            format!("{{\"event\":\"retrying\",\"job\":{job},\"attempt\":{attempt},\"delay_ms\":{delay_ms}}}")
+        }
         JobEvent::Finished { job, outcome } => {
             format!("{{\"event\":\"finished\",\"job\":{job},{}}}", outcome_fields(outcome))
         }
@@ -495,9 +504,10 @@ pub fn event_json(event: &JobEvent) -> String {
 /// One job result as a JSON line.
 pub fn result_json(result: &JobResult) -> String {
     format!(
-        "{{\"job\":{},\"tag\":\"{}\",\"problem\":\"{}\",\"solver\":\"{}\",{}}}",
+        "{{\"job\":{},\"tag\":\"{}\",\"tenant\":\"{}\",\"problem\":\"{}\",\"solver\":\"{}\",{}}}",
         result.job,
         esc(&result.tag),
+        esc(&result.tenant),
         esc(&result.problem),
         esc(&result.solver),
         outcome_fields(&result.outcome)
@@ -579,6 +589,25 @@ mod tests {
             job.solver.step,
             Some(crate::stepsize::StepSize::Diminishing { gamma0, .. }) if gamma0 == 0.8
         ));
+    }
+
+    #[test]
+    fn tenant_key_lands_in_the_spec_and_default_is_preserved() {
+        let job = parse_job_line(r#"{"rows": 20, "cols": 60, "tenant": "alice"}"#).unwrap();
+        assert_eq!(job.tenant, "alice");
+        let job = parse_job_line(r#"{"rows": 20, "cols": 60}"#).unwrap();
+        assert_eq!(job.tenant, crate::tenant::DEFAULT_TENANT);
+        let err = parse_job_line(r#"{"rows": 20, "cols": 60, "tenant": 3}"#).unwrap_err().to_string();
+        assert!(err.contains("must be a string"), "{err}");
+    }
+
+    #[test]
+    fn retrying_event_renders_valid_json() {
+        let line = event_json(&JobEvent::Retrying { job: 4, attempt: 2, delay_ms: 200 });
+        let parsed = Json::parse(&line).unwrap();
+        assert_eq!(parsed.get("event").unwrap().as_str(), Some("retrying"));
+        assert_eq!(parsed.get("attempt").unwrap().as_f64(), Some(2.0));
+        assert_eq!(parsed.get("delay_ms").unwrap().as_f64(), Some(200.0));
     }
 
     #[test]

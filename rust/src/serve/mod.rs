@@ -71,6 +71,17 @@
 //! * **Deadlines** are measured from submission and cover queue wait;
 //!   expiry mid-run stops the solve and reports
 //!   [`JobOutcome::DeadlineExpired`].
+//! * **Tenancy** — every job runs under a tenant ([`crate::tenant`]):
+//!   the dispatch queue is weighted-deficit-round-robin across tenant
+//!   lanes (weights from the tenant file), `max_queued` quotas refuse at
+//!   admission with a typed [`SubmitError::Quota`], `max_concurrent`
+//!   gates dispatch, and a [`RetryPolicy`] re-queues retryable failures
+//!   with bounded backoff. The default single-tenant configuration
+//!   preserves the FIFO behavior (and golden streams) exactly.
+//! * **Persistence** — `ServeConfig::store_path` mirrors the warm-start
+//!   cache into an append-only checksummed log, reloaded on startup, so
+//!   restarts keep their λ-sweep warm starts
+//!   ([`crate::tenant::WarmStartStore`]).
 
 pub mod cache;
 pub mod jobfile;
@@ -80,6 +91,6 @@ pub use cache::{fingerprint, CacheStats, WarmStart, WarmStartCache};
 pub use jobfile::{event_json, parse_job_line, parse_jobs, result_json, stats_json, Json};
 pub use scheduler::{
     CollectServeObserver, CustomProblemFn, FnServeObserver, JobEvent, JobHandle, JobOutcome,
-    JobProblem, JobResult, JobSpec, JobState, JobStatus, QueueFull, Scheduler, SchedulerStats,
-    ServeConfig, ServeObserver,
+    JobProblem, JobResult, JobSpec, JobState, JobStatus, QueueFull, RetryPolicy, Scheduler,
+    SchedulerStats, ServeConfig, ServeObserver, SubmitError, TenantStats,
 };

@@ -1,15 +1,31 @@
-//! The concurrent solve scheduler: a bounded job queue drained by a
-//! `std::thread` worker pool, with per-job deadlines, cooperative
-//! cancellation, warm-start cache integration and a streamed job
-//! lifecycle.
+//! The concurrent solve scheduler: a tenant-aware weighted-fair work
+//! queue drained by a `std::thread` worker pool, with per-job deadlines,
+//! cooperative cancellation, per-tenant quotas, a bounded-backoff retry
+//! policy, warm-start cache integration (optionally persisted across
+//! restarts) and a streamed job lifecycle.
 //!
 //! ## Lifecycle
 //!
 //! Per job, the [`ServeObserver`] sees (in order):
-//! `Queued → Started → [CacheProbe] → Iteration* → Finished`.
+//! `Queued → Started → [CacheProbe] → Iteration* → [Retrying → Started →
+//! …]* → Finished`.
 //! Jobs cancelled or deadline-expired *before* they start skip straight
 //! to `Finished` (there is nothing to run). Events of different jobs
 //! interleave arbitrarily; events of one job never reorder.
+//!
+//! ## Tenancy and fairness
+//!
+//! Every job runs under a tenant (the implicit `default` tenant unless
+//! [`JobSpec::with_tenant`] / the jobfile `tenant` key / HTTP auth says
+//! otherwise). The queue is a weighted-deficit-round-robin structure
+//! ([`crate::tenant::DrrQueue`]): under sustained contention tenants
+//! complete work in proportion to their weights, no tenant starves, and
+//! the single-tenant path degenerates to the old FIFO — pop order is a
+//! pure function of the submission sequence, so the golden determinism
+//! guarantees are untouched. Per-tenant `max_queued` is enforced at
+//! admission (typed [`SubmitError::Quota`]), `max_concurrent` at
+//! dispatch (the tenant's lane is skipped, work waits), and `max_cores`
+//! caps the PR 4 core-budget share.
 //!
 //! ## Determinism
 //!
@@ -32,8 +48,9 @@ use super::cache::{fingerprint, CacheStats, WarmStart, WarmStartCache};
 use crate::algos::{SolveOptions, SolveReport};
 use crate::api::events::{EventObserver, IterEvent};
 use crate::api::{ProblemHandle, ProblemSpec, Registry, SolverSpec};
+use crate::tenant::{DrrQueue, QuotaExceeded, StoreStats, TenantRegistry, WarmStartStore, DEFAULT_TENANT};
 use anyhow::Result;
-use std::collections::VecDeque;
+use std::collections::{BTreeMap, VecDeque};
 use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
 use std::sync::{Arc, Condvar, Mutex};
 use std::thread::JoinHandle;
@@ -81,6 +98,9 @@ pub struct JobSpec {
     pub warm_start: bool,
     /// Free-form label echoed through events and results.
     pub tag: String,
+    /// Tenant the job is scheduled under (dispatch lane, quota bucket,
+    /// metrics label). Defaults to [`DEFAULT_TENANT`].
+    pub tenant: String,
 }
 
 impl JobSpec {
@@ -92,6 +112,7 @@ impl JobSpec {
             deadline: None,
             warm_start: false,
             tag: String::new(),
+            tenant: DEFAULT_TENANT.to_string(),
         }
     }
 
@@ -105,6 +126,7 @@ impl JobSpec {
             deadline: None,
             warm_start: false,
             tag: String::new(),
+            tenant: DEFAULT_TENANT.to_string(),
         }
     }
 
@@ -128,6 +150,12 @@ impl JobSpec {
         self
     }
 
+    /// Schedule under a tenant (see [`crate::tenant::TenantRegistry`]).
+    pub fn with_tenant(mut self, tenant: &str) -> Self {
+        self.tenant = tenant.to_string();
+        self
+    }
+
     fn problem_name(&self) -> String {
         match &self.problem {
             JobProblem::Spec(s) => s.kind.clone(),
@@ -141,7 +169,8 @@ impl JobSpec {
 pub enum JobOutcome {
     /// The solve ran to completion (converged or budget-exhausted).
     Done { converged: bool, objective: f64, iterations: usize, warm_started: bool },
-    /// Problem/solver construction or the solve itself errored.
+    /// Problem/solver construction or the solve itself errored (past any
+    /// retries the policy allowed).
     Failed { error: String },
     /// The cancellation token stopped the job (0 iterations = cancelled
     /// while still queued).
@@ -181,6 +210,10 @@ pub enum JobEvent {
     CacheProbe { job: u64, key: u64, hit: bool },
     /// One solver iteration (passthrough of the session-layer stream).
     Iteration { job: u64, event: IterEvent },
+    /// The attempt failed with a retryable error; the job re-queued and
+    /// will start again after `delay_ms` of backoff. `attempt` counts
+    /// retries so far (1 = first retry).
+    Retrying { job: u64, attempt: u32, delay_ms: u64 },
     /// Terminal event.
     Finished { job: u64, outcome: JobOutcome },
 }
@@ -193,6 +226,7 @@ impl JobEvent {
             | JobEvent::Started { job, .. }
             | JobEvent::CacheProbe { job, .. }
             | JobEvent::Iteration { job, .. }
+            | JobEvent::Retrying { job, .. }
             | JobEvent::Finished { job, .. } => *job,
         }
     }
@@ -262,6 +296,8 @@ impl<F: Fn(&JobEvent) + Send + Sync> ServeObserver for FnServeObserver<F> {
 pub struct JobResult {
     pub job: u64,
     pub tag: String,
+    /// Tenant the job ran under.
+    pub tenant: String,
     /// Problem registry name (or the custom constructor's name).
     pub problem: String,
     /// Resolved solver display name (empty if construction failed).
@@ -271,12 +307,41 @@ pub struct JobResult {
     pub report: Option<SolveReport>,
 }
 
-/// Scheduler sizing.
-#[derive(Clone, Copy, Debug)]
+/// Bounded-backoff retry policy for jobs failing with retryable errors
+/// (solve-time errors, custom-build errors, panics — *not* registry
+/// resolution errors, which are deterministic misconfiguration, and
+/// never cancellations or deadline expiries). Off by default
+/// (`max_retries == 0`): the pre-tenant behavior.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct RetryPolicy {
+    /// Retries allowed per job (0 disables retrying).
+    pub max_retries: u32,
+    /// Backoff before the first retry, milliseconds; doubles per retry.
+    pub base_backoff_ms: u64,
+    /// Backoff ceiling, milliseconds.
+    pub max_backoff_ms: u64,
+}
+
+impl Default for RetryPolicy {
+    fn default() -> Self {
+        Self { max_retries: 0, base_backoff_ms: 100, max_backoff_ms: 5_000 }
+    }
+}
+
+impl RetryPolicy {
+    /// Backoff before retry number `prior + 1` (exponential, capped).
+    pub fn backoff_ms(&self, prior: u32) -> u64 {
+        let shift = prior.min(16);
+        self.base_backoff_ms.saturating_mul(1u64 << shift).min(self.max_backoff_ms).max(1)
+    }
+}
+
+/// Scheduler sizing and policy.
+#[derive(Clone, Debug)]
 pub struct ServeConfig {
     /// Worker threads draining the queue.
     pub workers: usize,
-    /// Queue slots; [`Scheduler::submit`] blocks (and
+    /// Queue slots across all tenants; [`Scheduler::submit`] blocks (and
     /// [`Scheduler::try_submit`] refuses) when full.
     pub queue_capacity: usize,
     /// Warm-start cache byte budget (0 disables the cache entirely).
@@ -292,16 +357,29 @@ pub struct ServeConfig {
     /// Core budget for the multi-core kernels, shared across workers:
     /// a job gets `max(1, core_budget / running)` kernel threads,
     /// evaluated once when it starts (and further capped by the job's
-    /// own `SolveOptions::threads`). This is a static per-job split,
-    /// not a live-rebalanced hard cap: a job admitted on an idle
-    /// scheduler keeps its full share even if more jobs start later, so
-    /// transient overlap can exceed the budget until it finishes —
-    /// sparse traffic solves on all cores, sustained load converges to
-    /// one core per job instead of unbounded oversubscription. Defaults
-    /// to the host core count. Kernel thread counts never change
-    /// results (see [`crate::par`]), so neither this knob nor load can
-    /// break the determinism guarantee above.
+    /// own `SolveOptions::threads` and its tenant's `max_cores` quota).
+    /// This is a static per-job split, not a live-rebalanced hard cap: a
+    /// job admitted on an idle scheduler keeps its full share even if
+    /// more jobs start later, so transient overlap can exceed the budget
+    /// until it finishes — sparse traffic solves on all cores, sustained
+    /// load converges to one core per job instead of unbounded
+    /// oversubscription. Defaults to the host core count. Kernel thread
+    /// counts never change results (see [`crate::par`]), so neither this
+    /// knob nor load can break the determinism guarantee above.
     pub core_budget: usize,
+    /// Tenants jobs are scheduled under (weights, tokens, quotas). The
+    /// default registry holds only the implicit `default` tenant — the
+    /// pre-tenant behavior.
+    pub tenants: TenantRegistry,
+    /// Persist the warm-start cache to this file (loaded on start,
+    /// appended on insert) — see [`crate::tenant::store`]. Requires
+    /// `cache_bytes > 0`.
+    pub store_path: Option<std::path::PathBuf>,
+    /// Byte cap on the persistent store; exceeding it after an append
+    /// triggers a compaction rewrite from the live cache.
+    pub store_max_bytes: u64,
+    /// Retry policy for retryable failures (off by default).
+    pub retry: RetryPolicy,
 }
 
 impl Default for ServeConfig {
@@ -312,6 +390,10 @@ impl Default for ServeConfig {
             cache_bytes: 64 << 20,
             finished_retention: 4096,
             core_budget: crate::par::host_cores(),
+            tenants: TenantRegistry::default(),
+            store_path: None,
+            store_max_bytes: 64 << 20,
+            retry: RetryPolicy::default(),
         }
     }
 }
@@ -341,6 +423,32 @@ impl ServeConfig {
         self.core_budget = cores.max(1);
         self
     }
+
+    pub fn with_tenants(mut self, tenants: TenantRegistry) -> Self {
+        self.tenants = tenants;
+        self
+    }
+
+    pub fn with_store_path(mut self, path: impl Into<std::path::PathBuf>) -> Self {
+        self.store_path = Some(path.into());
+        self
+    }
+
+    pub fn with_store_max_bytes(mut self, bytes: u64) -> Self {
+        self.store_max_bytes = bytes;
+        self
+    }
+
+    pub fn with_retry_policy(mut self, retry: RetryPolicy) -> Self {
+        self.retry = retry;
+        self
+    }
+
+    /// Sugar: enable retries with the default backoff curve.
+    pub fn with_max_retries(mut self, retries: u32) -> Self {
+        self.retry.max_retries = retries;
+        self
+    }
 }
 
 /// [`Scheduler::try_submit`] refusal: the bounded queue is at capacity.
@@ -362,6 +470,50 @@ impl std::fmt::Display for QueueFull {
 
 impl std::error::Error for QueueFull {}
 
+/// Typed [`Scheduler::try_submit`] refusal. Every variant hands the
+/// spec back so the caller can retry or re-route.
+#[derive(Debug)]
+pub enum SubmitError {
+    /// The shared queue is at capacity (HTTP `429`, global Retry-After).
+    QueueFull(QueueFull),
+    /// The tenant is over an admission quota (HTTP `429`, the tenant's
+    /// own Retry-After).
+    Quota { spec: JobSpec, quota: QuotaExceeded },
+    /// The spec names a tenant the registry does not know.
+    UnknownTenant { spec: JobSpec, tenant: String },
+    /// The tenant exists but is disabled.
+    TenantDisabled { spec: JobSpec, tenant: String },
+}
+
+impl SubmitError {
+    /// The refused spec, handed back intact.
+    pub fn into_spec(self) -> JobSpec {
+        match self {
+            SubmitError::QueueFull(f) => f.spec,
+            SubmitError::Quota { spec, .. } => spec,
+            SubmitError::UnknownTenant { spec, .. } => spec,
+            SubmitError::TenantDisabled { spec, .. } => spec,
+        }
+    }
+}
+
+impl std::fmt::Display for SubmitError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            SubmitError::QueueFull(full) => write!(f, "{full}"),
+            SubmitError::Quota { quota, .. } => write!(f, "{quota}"),
+            SubmitError::UnknownTenant { tenant, .. } => {
+                write!(f, "unknown tenant `{tenant}`")
+            }
+            SubmitError::TenantDisabled { tenant, .. } => {
+                write!(f, "tenant `{tenant}` is disabled")
+            }
+        }
+    }
+}
+
+impl std::error::Error for SubmitError {}
+
 /// Point-in-time scheduler counters (monotone counters + two gauges).
 /// Cheap to read: atomics plus one queue-lock peek for the depth.
 #[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
@@ -370,6 +522,10 @@ pub struct SchedulerStats {
     pub submitted: u64,
     /// `try_submit` refusals due to a full queue (monotone).
     pub rejected: u64,
+    /// `try_submit` refusals due to a tenant quota (monotone).
+    pub quota_rejected: u64,
+    /// Retry attempts scheduled by the retry policy (monotone).
+    pub retried: u64,
     /// Jobs currently waiting in the queue (gauge).
     pub queue_depth: usize,
     /// Jobs currently on a worker (gauge).
@@ -386,6 +542,24 @@ impl SchedulerStats {
     pub fn finished(&self) -> u64 {
         self.done + self.failed + self.cancelled + self.deadline_expired
     }
+}
+
+/// Per-tenant counters and gauges (see [`Scheduler::tenant_stats`]).
+#[derive(Clone, Debug, Default, PartialEq, Eq)]
+pub struct TenantStats {
+    pub tenant: String,
+    /// Jobs accepted under this tenant (monotone).
+    pub submitted: u64,
+    /// Jobs of this tenant that reached a terminal state (monotone).
+    pub finished: u64,
+    /// Admission refusals for this tenant's quotas (monotone).
+    pub quota_rejected: u64,
+    /// Retry attempts for this tenant's jobs (monotone).
+    pub retried: u64,
+    /// Jobs waiting in this tenant's lane (gauge).
+    pub queued: usize,
+    /// Jobs of this tenant currently on a worker (gauge).
+    pub running: usize,
 }
 
 /// Where a job is in its lifecycle.
@@ -413,11 +587,15 @@ impl JobState {
 pub struct JobStatus {
     pub job: u64,
     pub tag: String,
+    /// Tenant the job is scheduled under.
+    pub tenant: String,
     /// Problem registry name (or the custom constructor's name).
     pub problem: String,
     /// Resolved solver display name (empty until the job ran).
     pub solver: String,
     pub state: JobState,
+    /// Retry attempts performed so far (0 = first attempt).
+    pub retries: u32,
     /// Terminal outcome once `state == Finished`.
     pub outcome: Option<JobOutcome>,
     /// Final iterate of a job that produced a report (shared, not copied).
@@ -428,11 +606,23 @@ struct QueuedJob {
     id: u64,
     spec: JobSpec,
     cancel: Arc<AtomicBool>,
+    /// Submission instant — deadlines measure from here, across retries.
     enqueued: Instant,
+    /// Tenant lane the job dispatches from (== `spec.tenant` unless the
+    /// tenant was unknown at submit time, in which case an implicit
+    /// weight-1 lane is used and the label kept).
+    tenant: String,
+    /// Retry attempts performed so far.
+    retries: u32,
+    /// Earliest dispatch instant (retry backoff); `None` = immediately.
+    not_before: Option<Instant>,
 }
 
 struct QueueState {
-    jobs: VecDeque<QueuedJob>,
+    jobs: DrrQueue<QueuedJob>,
+    /// Jobs currently on a worker, per tenant (the `max_concurrent`
+    /// dispatch gate). Updated under the queue lock.
+    running: BTreeMap<String, usize>,
     closed: bool,
 }
 
@@ -441,11 +631,22 @@ struct QueueState {
 struct Counters {
     submitted: AtomicU64,
     rejected: AtomicU64,
+    quota_rejected: AtomicU64,
+    retried: AtomicU64,
     running: AtomicU64,
     done: AtomicU64,
     failed: AtomicU64,
     cancelled: AtomicU64,
     deadline_expired: AtomicU64,
+}
+
+/// Per-tenant monotone counters (gauges come from the queue state).
+#[derive(Clone, Default)]
+struct TenantCounters {
+    submitted: u64,
+    finished: u64,
+    quota_rejected: u64,
+    retried: u64,
 }
 
 struct TableEntry {
@@ -460,6 +661,14 @@ struct JobsTable {
     retention: usize,
 }
 
+/// What one attempt of a job produced, plus whether a failure may be
+/// retried (registry resolution errors are deterministic and final;
+/// solve errors, custom-build errors and panics are retryable).
+struct RunOutcome {
+    result: JobResult,
+    retryable: bool,
+}
+
 struct Shared {
     queue: Mutex<QueueState>,
     not_empty: Condvar,
@@ -467,15 +676,23 @@ struct Shared {
     capacity: usize,
     next_id: AtomicU64,
     registry: Registry,
+    tenants: TenantRegistry,
     cache: Option<Mutex<WarmStartCache>>,
+    /// Persistent warm-start store (requires the cache). Lock order:
+    /// never take the cache lock while holding the store lock is *not*
+    /// required — the only nested use is store → cache in the
+    /// compaction snapshot, and no path ever holds cache → store.
+    store: Option<Mutex<WarmStartStore>>,
     observer: Option<Arc<dyn ServeObserver>>,
     results: Mutex<Vec<JobResult>>,
     /// Cap on `results` (same knob as the status-table retention).
     results_retention: usize,
     counters: Counters,
+    tenant_counters: Mutex<BTreeMap<String, TenantCounters>>,
     table: Mutex<JobsTable>,
     /// See [`ServeConfig::core_budget`].
     core_budget: usize,
+    retry: RetryPolicy,
 }
 
 impl Shared {
@@ -489,6 +706,69 @@ impl Shared {
         }
     }
 
+    fn bump_tenant(&self, tenant: &str, f: impl FnOnce(&mut TenantCounters)) {
+        let mut m = self.tenant_counters.lock().unwrap();
+        f(m.entry(tenant.to_string()).or_default());
+    }
+
+    /// Return a finished worker's per-tenant running slot and wake
+    /// everyone whose eligibility may have changed (max_concurrent gates,
+    /// blocked submitters).
+    fn release_running(&self, tenant: &str) {
+        let mut q = self.queue.lock().unwrap();
+        let drained = match q.running.get_mut(tenant) {
+            Some(n) => {
+                *n = n.saturating_sub(1);
+                *n == 0
+            }
+            None => false,
+        };
+        if drained {
+            q.running.remove(tenant);
+        }
+        self.not_empty.notify_all();
+        self.not_full.notify_all();
+    }
+
+    /// Decide whether this attempt's failure is retried; if so, re-queue
+    /// the job with backoff and report `true` (the caller then skips the
+    /// terminal bookkeeping).
+    fn maybe_retry(&self, mut job: QueuedJob, run: &RunOutcome) -> bool {
+        if !run.retryable || !matches!(run.result.outcome, JobOutcome::Failed { .. }) {
+            return false;
+        }
+        if self.retry.max_retries == 0 || job.retries >= self.retry.max_retries {
+            return false;
+        }
+        if job.cancel.load(Ordering::Relaxed) {
+            return false;
+        }
+        let delay = self.retry.backoff_ms(job.retries);
+        // A retry that cannot finish before the deadline is pointless
+        // (and deadline-at-queue expiry is explicitly not retryable).
+        if let Some(d) = job.spec.deadline {
+            if job.enqueued.elapsed() + Duration::from_millis(delay) >= d {
+                return false;
+            }
+        }
+        job.retries += 1;
+        job.not_before = Some(Instant::now() + Duration::from_millis(delay));
+        self.counters.retried.fetch_add(1, Ordering::Relaxed);
+        self.bump_tenant(&job.tenant, |c| c.retried += 1);
+        self.emit(JobEvent::Retrying { job: job.id, attempt: job.retries, delay_ms: delay });
+        if let Some(e) = self.table.lock().unwrap().map.get_mut(&job.id) {
+            e.status.state = JobState::Queued;
+            e.status.retries = job.retries;
+        }
+        let tenant = job.tenant.clone();
+        let mut q = self.queue.lock().unwrap();
+        // Re-admission bypasses the capacity check: the job was already
+        // admitted once and refusing here would silently drop it.
+        q.jobs.push(&tenant, job);
+        self.not_empty.notify_one();
+        true
+    }
+
     /// Terminal bookkeeping: per-outcome counter, status-table update,
     /// and pruning of the oldest finished entries past the retention cap.
     fn record_terminal(&self, result: &JobResult) {
@@ -499,6 +779,7 @@ impl Shared {
             JobOutcome::DeadlineExpired { .. } => &self.counters.deadline_expired,
         }
         .fetch_add(1, Ordering::Relaxed);
+        self.bump_tenant(&result.tenant, |c| c.finished += 1);
         let mut t = self.table.lock().unwrap();
         if let Some(e) = t.map.get_mut(&result.job) {
             e.status.state = JobState::Finished;
@@ -564,27 +845,56 @@ impl Scheduler {
         observer: Option<Arc<dyn ServeObserver>>,
         registry: Registry,
     ) -> Self {
+        let workers = config.workers.max(1);
+        // Build the cache first so the persistent store can replay into
+        // it before any worker (or submitter) can race a lookup.
+        let mut cache = (config.cache_bytes > 0).then(|| WarmStartCache::new(config.cache_bytes));
+        let store = match (&mut cache, &config.store_path) {
+            (Some(c), Some(path)) => {
+                match WarmStartStore::open(path, config.store_max_bytes, c) {
+                    Ok(s) => Some(Mutex::new(s)),
+                    Err(e) => {
+                        eprintln!("flexa: warm-start store disabled: {e:#}");
+                        None
+                    }
+                }
+            }
+            (None, Some(path)) => {
+                eprintln!(
+                    "flexa: warm-start store `{}` ignored (cache disabled)",
+                    path.display()
+                );
+                None
+            }
+            _ => None,
+        };
+        let mut jobs = DrrQueue::new();
+        for t in config.tenants.iter() {
+            jobs.set_weight(&t.id, t.weight);
+        }
         let shared = Arc::new(Shared {
-            queue: Mutex::new(QueueState { jobs: VecDeque::new(), closed: false }),
+            queue: Mutex::new(QueueState { jobs, running: BTreeMap::new(), closed: false }),
             not_empty: Condvar::new(),
             not_full: Condvar::new(),
             capacity: config.queue_capacity.max(1),
             next_id: AtomicU64::new(0),
             registry,
-            cache: (config.cache_bytes > 0)
-                .then(|| Mutex::new(WarmStartCache::new(config.cache_bytes))),
+            tenants: config.tenants,
+            cache: cache.map(Mutex::new),
+            store,
             observer,
             results: Mutex::new(Vec::new()),
             results_retention: config.finished_retention.max(1),
             counters: Counters::default(),
+            tenant_counters: Mutex::new(BTreeMap::new()),
             table: Mutex::new(JobsTable {
                 map: std::collections::HashMap::new(),
                 finished_order: VecDeque::new(),
                 retention: config.finished_retention,
             }),
             core_budget: config.core_budget.max(1),
+            retry: config.retry,
         });
-        let workers = config.workers.max(1);
         let mut handles = Vec::with_capacity(workers);
         for w in 0..workers {
             let shared = Arc::clone(&shared);
@@ -597,22 +907,62 @@ impl Scheduler {
         Self { shared, handles }
     }
 
-    /// Submit a job, blocking while the queue is full.
+    /// Submit a job, blocking while the queue is at capacity or the
+    /// job's tenant is over its `max_queued` quota. (Unknown tenants are
+    /// accepted on an implicit weight-1, quota-free lane — the typed
+    /// refusals live on [`Self::try_submit`].)
     pub fn submit(&self, spec: JobSpec) -> JobHandle {
+        let max_queued =
+            self.shared.tenants.get(&spec.tenant).and_then(|t| t.quota.max_queued);
         let mut q = self.shared.queue.lock().unwrap();
-        while q.jobs.len() >= self.shared.capacity {
+        loop {
+            let quota_ok = max_queued.map_or(true, |mq| q.jobs.queued_for(&spec.tenant) < mq);
+            if q.jobs.len() < self.shared.capacity && quota_ok {
+                return self.enqueue_locked(&mut q, spec);
+            }
             q = self.shared.not_full.wait(q).unwrap();
         }
-        self.enqueue_locked(&mut q, spec)
     }
 
-    /// Submit without blocking: a typed [`QueueFull`] error hands the
-    /// spec back when the queue is at capacity (and counts a rejection).
-    pub fn try_submit(&self, spec: JobSpec) -> std::result::Result<JobHandle, QueueFull> {
+    /// Submit without blocking: typed [`SubmitError`]s hand the spec
+    /// back when the queue is at capacity, the tenant is over quota,
+    /// unknown, or disabled (and count the refusal).
+    pub fn try_submit(&self, spec: JobSpec) -> std::result::Result<JobHandle, SubmitError> {
+        let tenant = match self.shared.tenants.get(&spec.tenant) {
+            Some(t) => t.clone(),
+            None => {
+                let tenant = spec.tenant.clone();
+                return Err(SubmitError::UnknownTenant { spec, tenant });
+            }
+        };
+        if !tenant.enabled {
+            let tenant = tenant.id;
+            return Err(SubmitError::TenantDisabled { spec, tenant });
+        }
         let mut q = self.shared.queue.lock().unwrap();
         if q.jobs.len() >= self.shared.capacity {
             self.shared.counters.rejected.fetch_add(1, Ordering::Relaxed);
-            return Err(QueueFull { spec, capacity: self.shared.capacity });
+            return Err(SubmitError::QueueFull(QueueFull {
+                spec,
+                capacity: self.shared.capacity,
+            }));
+        }
+        if let Some(mq) = tenant.quota.max_queued {
+            let current = q.jobs.queued_for(&tenant.id);
+            if current >= mq {
+                self.shared.counters.quota_rejected.fetch_add(1, Ordering::Relaxed);
+                self.shared.bump_tenant(&tenant.id, |c| c.quota_rejected += 1);
+                return Err(SubmitError::Quota {
+                    spec,
+                    quota: QuotaExceeded {
+                        tenant: tenant.id.clone(),
+                        what: "max_queued",
+                        limit: mq,
+                        current,
+                        retry_after_secs: tenant.retry_after_secs,
+                    },
+                });
+            }
         }
         Ok(self.enqueue_locked(&mut q, spec))
     }
@@ -620,16 +970,20 @@ impl Scheduler {
     fn enqueue_locked(&self, q: &mut QueueState, spec: JobSpec) -> JobHandle {
         let id = self.shared.next_id.fetch_add(1, Ordering::Relaxed) + 1;
         let cancel = Arc::new(AtomicBool::new(false));
+        let tenant = spec.tenant.clone();
         self.shared.counters.submitted.fetch_add(1, Ordering::Relaxed);
+        self.shared.bump_tenant(&tenant, |c| c.submitted += 1);
         self.shared.table.lock().unwrap().map.insert(
             id,
             TableEntry {
                 status: JobStatus {
                     job: id,
                     tag: spec.tag.clone(),
+                    tenant: tenant.clone(),
                     problem: spec.problem_name(),
                     solver: String::new(),
                     state: JobState::Queued,
+                    retries: 0,
                     outcome: None,
                     x: None,
                 },
@@ -638,7 +992,18 @@ impl Scheduler {
         );
         // Emitted before the push so `Queued` always precedes `Started`.
         self.shared.emit(JobEvent::Queued { job: id, tag: spec.tag.clone() });
-        q.jobs.push_back(QueuedJob { id, spec, cancel: Arc::clone(&cancel), enqueued: Instant::now() });
+        q.jobs.push(
+            &tenant,
+            QueuedJob {
+                id,
+                spec,
+                cancel: Arc::clone(&cancel),
+                enqueued: Instant::now(),
+                tenant: tenant.clone(),
+                retries: 0,
+                not_before: None,
+            },
+        );
         self.shared.not_empty.notify_one();
         JobHandle { id, cancel }
     }
@@ -649,6 +1014,11 @@ impl Scheduler {
             Some(c) => c.lock().unwrap().stats(),
             None => CacheStats::default(),
         }
+    }
+
+    /// Persistent warm-start store counters (`None` when no store).
+    pub fn store_stats(&self) -> Option<StoreStats> {
+        self.shared.store.as_ref().map(|s| s.lock().unwrap().stats())
     }
 
     /// Jobs currently waiting in the queue (not the ones running).
@@ -662,6 +1032,8 @@ impl Scheduler {
         SchedulerStats {
             submitted: c.submitted.load(Ordering::Relaxed),
             rejected: c.rejected.load(Ordering::Relaxed),
+            quota_rejected: c.quota_rejected.load(Ordering::Relaxed),
+            retried: c.retried.load(Ordering::Relaxed),
             queue_depth: self.queued(),
             running: c.running.load(Ordering::Relaxed) as usize,
             done: c.done.load(Ordering::Relaxed),
@@ -669,6 +1041,42 @@ impl Scheduler {
             cancelled: c.cancelled.load(Ordering::Relaxed),
             deadline_expired: c.deadline_expired.load(Ordering::Relaxed),
         }
+    }
+
+    /// Per-tenant counters and gauges, in tenant-id order. Covers every
+    /// registered tenant plus any ad-hoc tenant that has submitted.
+    pub fn tenant_stats(&self) -> Vec<TenantStats> {
+        // Lock order: queue first (for the gauges), then the counter
+        // map — never the reverse.
+        let (depths, running) = {
+            let q = self.shared.queue.lock().unwrap();
+            (q.jobs.depths(), q.running.clone())
+        };
+        let counters = self.shared.tenant_counters.lock().unwrap();
+        let mut ids: std::collections::BTreeSet<String> = std::collections::BTreeSet::new();
+        for t in self.shared.tenants.iter() {
+            ids.insert(t.id.clone());
+        }
+        for (t, _) in &depths {
+            ids.insert(t.clone());
+        }
+        for t in running.keys().chain(counters.keys()) {
+            ids.insert(t.clone());
+        }
+        ids.into_iter()
+            .map(|id| {
+                let c = counters.get(&id).cloned().unwrap_or_default();
+                TenantStats {
+                    queued: depths.iter().find(|(t, _)| *t == id).map(|(_, n)| *n).unwrap_or(0),
+                    running: running.get(&id).copied().unwrap_or(0),
+                    tenant: id,
+                    submitted: c.submitted,
+                    finished: c.finished,
+                    quota_rejected: c.quota_rejected,
+                    retried: c.retried,
+                }
+            })
+            .collect()
     }
 
     /// Status snapshot of one job by id. `None` for ids never submitted
@@ -694,6 +1102,11 @@ impl Scheduler {
     /// The registry jobs resolve against (name validation, listings).
     pub fn registry(&self) -> &Registry {
         &self.shared.registry
+    }
+
+    /// The tenant registry jobs are admitted against.
+    pub fn tenants(&self) -> &TenantRegistry {
+        &self.shared.tenants
     }
 
     /// Close the queue, drain every remaining job, join the workers and
@@ -738,29 +1151,37 @@ fn worker_loop(worker: usize, shared: &Shared) {
         // options): the job fails loudly with a Finished event and a
         // Failed result instead of silently vanishing from join(), and
         // the worker stays alive for the jobs queued behind it.
-        let (id, tag, problem_name) = (job.id, job.spec.tag.clone(), job.spec.problem_name());
-        let result =
-            std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| run_job(shared, worker, job)))
-                .unwrap_or_else(|payload| {
-                    let outcome = JobOutcome::Failed {
-                        error: format!("job panicked: {}", panic_message(payload.as_ref())),
-                    };
-                    shared.emit(JobEvent::Finished { job: id, outcome: outcome.clone() });
-                    JobResult {
-                        job: id,
-                        tag,
-                        problem: problem_name,
-                        solver: String::new(),
-                        outcome,
-                        report: None,
-                    }
-                });
+        let run = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            run_job(shared, worker, &job)
+        }))
+        .unwrap_or_else(|payload| RunOutcome {
+            result: JobResult {
+                job: job.id,
+                tag: job.spec.tag.clone(),
+                tenant: job.tenant.clone(),
+                problem: job.spec.problem_name(),
+                solver: String::new(),
+                outcome: JobOutcome::Failed {
+                    error: format!("job panicked: {}", panic_message(payload.as_ref())),
+                },
+                report: None,
+            },
+            retryable: true,
+        });
         // Decrement the gauge before the terminal counters so a stats()
         // reader never sees finished() == submitted with running > 0.
         shared.counters.running.fetch_sub(1, Ordering::Relaxed);
-        shared.record_terminal(&result);
+        shared.release_running(&job.tenant);
+        if shared.maybe_retry(job, &run) {
+            continue;
+        }
+        shared.emit(JobEvent::Finished {
+            job: run.result.job,
+            outcome: run.result.outcome.clone(),
+        });
+        shared.record_terminal(&run.result);
         let mut results = shared.results.lock().unwrap();
-        results.push(result);
+        results.push(run.result);
         // The same retention knob that bounds the status table bounds
         // the result buffer: a long-running HTTP server would otherwise
         // accumulate every job's full SolveReport (iterate + trace)
@@ -783,17 +1204,57 @@ fn panic_message(payload: &(dyn std::any::Any + Send)) -> String {
     }
 }
 
+/// Pop the next eligible job in DRR order. Eligibility: the job's
+/// retry backoff has elapsed (ignored once the queue is closed, so
+/// `join` drains), and its tenant is under `max_concurrent`. Cancelled
+/// jobs are always eligible — they finish instantly. The wait is timed
+/// because eligibility changes with the clock (backoff) as well as with
+/// completions.
 fn next_job(shared: &Shared) -> Option<QueuedJob> {
     let mut q = shared.queue.lock().unwrap();
     loop {
-        if let Some(job) = q.jobs.pop_front() {
+        let now = Instant::now();
+        let QueueState { jobs, running, closed } = &mut *q;
+        let closed_now = *closed;
+        let popped = jobs.pop_where(|tenant, job| {
+            if job.cancel.load(Ordering::Relaxed) {
+                return true;
+            }
+            if !closed_now {
+                if let Some(nb) = job.not_before {
+                    if now < nb {
+                        return false;
+                    }
+                }
+            }
+            if let Some(mc) =
+                shared.tenants.get(tenant).and_then(|t| t.quota.max_concurrent)
+            {
+                if running.get(tenant).copied().unwrap_or(0) >= mc {
+                    return false;
+                }
+            }
+            true
+        });
+        if let Some((tenant, job)) = popped {
+            *running.entry(tenant).or_insert(0) += 1;
             shared.not_full.notify_one();
             return Some(job);
         }
-        if q.closed {
+        let empty = jobs.is_empty();
+        if empty && closed_now {
             return None;
         }
-        q = shared.not_empty.wait(q).unwrap();
+        // An empty queue only changes via push/close, both of which
+        // notify — block indefinitely (zero idle wakeups). A non-empty
+        // queue with nothing eligible may be waiting on a *clock* (retry
+        // backoff), which notifies nobody, so poll with a timeout;
+        // max_concurrent releases notify_all and arrive early either way.
+        q = if empty {
+            shared.not_empty.wait(q).unwrap()
+        } else {
+            shared.not_empty.wait_timeout(q, Duration::from_millis(20)).unwrap().0
+        };
     }
 }
 
@@ -837,23 +1298,45 @@ impl EventObserver for JobBridge {
     }
 }
 
-fn run_job(shared: &Shared, worker: usize, job: QueuedJob) -> JobResult {
-    let QueuedJob { id, spec, cancel, enqueued } = job;
+/// Run one attempt of a job. Emits `Started`/`CacheProbe`/`Iteration`
+/// events; the *terminal* `Finished` event is the caller's job (it may
+/// retry instead). `retryable` classifies failures: registry resolution
+/// errors are deterministic misconfiguration (final), everything else
+/// may be transient.
+fn run_job(shared: &Shared, worker: usize, job: &QueuedJob) -> RunOutcome {
+    let QueuedJob { id, spec, cancel, enqueued, tenant, .. } = job;
+    let id = *id;
     let problem_name = spec.problem_name();
-    let finish = |solver: String, outcome: JobOutcome, report: Option<SolveReport>| {
-        shared.emit(JobEvent::Finished { job: id, outcome: outcome.clone() });
-        JobResult { job: id, tag: spec.tag.clone(), problem: problem_name.clone(), solver, outcome, report }
+    let finish = |solver: String,
+                  outcome: JobOutcome,
+                  report: Option<SolveReport>,
+                  retryable: bool| RunOutcome {
+        result: JobResult {
+            job: id,
+            tag: spec.tag.clone(),
+            tenant: tenant.clone(),
+            problem: problem_name.clone(),
+            solver,
+            outcome,
+            report,
+        },
+        retryable,
     };
 
     // Cancelled or expired while still queued: never starts.
     if cancel.load(Ordering::Relaxed) {
-        return finish(String::new(), JobOutcome::Cancelled { iterations: 0 }, None);
+        return finish(String::new(), JobOutcome::Cancelled { iterations: 0 }, None, false);
     }
     let remaining = match spec.deadline {
         Some(d) => match d.checked_sub(enqueued.elapsed()) {
             Some(rem) => Some(rem),
             None => {
-                return finish(String::new(), JobOutcome::DeadlineExpired { iterations: 0 }, None)
+                return finish(
+                    String::new(),
+                    JobOutcome::DeadlineExpired { iterations: 0 },
+                    None,
+                    false,
+                )
             }
         },
         None => None,
@@ -862,13 +1345,22 @@ fn run_job(shared: &Shared, worker: usize, job: QueuedJob) -> JobResult {
     shared.emit(JobEvent::Started { job: id, worker });
     shared.mark_running(id);
 
-    let problem = match &spec.problem {
-        JobProblem::Spec(p) => shared.registry.build_problem(p),
-        JobProblem::Custom { build, .. } => build(),
+    let (problem, construction_retryable) = match &spec.problem {
+        // Registry specs fail deterministically (bad names/geometry);
+        // custom build closures are user code and may be transient.
+        JobProblem::Spec(p) => (shared.registry.build_problem(p), false),
+        JobProblem::Custom { build, .. } => (build(), true),
     };
     let problem = match problem {
         Ok(p) => p,
-        Err(e) => return finish(String::new(), JobOutcome::Failed { error: format!("{e:#}") }, None),
+        Err(e) => {
+            return finish(
+                String::new(),
+                JobOutcome::Failed { error: format!("{e:#}") },
+                None,
+                construction_retryable,
+            )
+        }
     };
 
     let mut opts = spec.opts.clone();
@@ -906,7 +1398,7 @@ fn run_job(shared: &Shared, worker: usize, job: QueuedJob) -> JobResult {
     if let Some(rem) = remaining {
         opts.max_seconds = opts.max_seconds.min(rem.as_secs_f64());
     }
-    opts.cancel = Some(Arc::clone(&cancel));
+    opts.cancel = Some(Arc::clone(cancel));
     let bridge = Arc::new(JobBridge {
         job: id,
         observer: shared.observer.clone(),
@@ -917,7 +1409,9 @@ fn run_job(shared: &Shared, worker: usize, job: QueuedJob) -> JobResult {
 
     let mut solver = match shared.registry.build_solver(&spec.solver) {
         Ok(s) => s,
-        Err(e) => return finish(String::new(), JobOutcome::Failed { error: format!("{e:#}") }, None),
+        Err(e) => {
+            return finish(String::new(), JobOutcome::Failed { error: format!("{e:#}") }, None, false)
+        }
     };
     let solver_name = solver.name();
 
@@ -925,14 +1419,19 @@ fn run_job(shared: &Shared, worker: usize, job: QueuedJob) -> JobResult {
     // the current running count (static split — see the
     // `ServeConfig::core_budget` docs for the overlap caveat); a
     // job-level `threads` request (jobfile/HTTP key) is honored up to
-    // that share. Thread counts are a pure speed knob (see
-    // `flexa::par`), so this never affects results.
+    // that share, and the tenant's `max_cores` quota caps both. Thread
+    // counts are a pure speed knob (see `flexa::par`), so this never
+    // affects results.
     let running = (shared.counters.running.load(Ordering::Relaxed).max(1)) as usize;
     let share = (shared.core_budget / running).max(1);
-    let kernel_threads = opts.threads.unwrap_or(share).min(share);
+    let cap = match shared.tenants.get(tenant).and_then(|t| t.quota.max_cores) {
+        Some(c) => share.min(c.max(1)),
+        None => share,
+    };
+    let kernel_threads = opts.threads.unwrap_or(cap).min(cap);
 
     match crate::par::with_threads(kernel_threads, || solver.solve_session(&problem, &opts)) {
-        Err(e) => finish(solver_name, JobOutcome::Failed { error: format!("{e:#}") }, None),
+        Err(e) => finish(solver_name, JobOutcome::Failed { error: format!("{e:#}") }, None, true),
         Ok(report) => {
             // Mirror Session::run: on_finish fires once per solve.
             if let Some(obs) = &opts.observer {
@@ -975,10 +1474,24 @@ fn run_job(shared: &Shared, worker: usize, job: QueuedJob) -> JobResult {
                     // iterate: present only if this solve (or a seed)
                     // actually computed it.
                     let lipschitz = problem.lipschitz_cached();
-                    cache.lock().unwrap().insert(key, report.x.clone(), bridge.last_tau(), lipschitz);
+                    let tau = bridge.last_tau();
+                    cache.lock().unwrap().insert(key, report.x.clone(), tau, lipschitz);
+                    // Mirror the insert into the persistent store; on
+                    // overflow, compact down to the live cache set.
+                    if let Some(store) = &shared.store {
+                        let mut st = store.lock().unwrap();
+                        if let Err(e) = st.append(key, &report.x, tau, lipschitz) {
+                            eprintln!("flexa: warm-start store append failed: {e:#}");
+                        } else if st.needs_compaction() {
+                            let live = cache.lock().unwrap().snapshot();
+                            if let Err(e) = st.compact(&live) {
+                                eprintln!("flexa: warm-start store compaction failed: {e:#}");
+                            }
+                        }
+                    }
                 }
             }
-            finish(solver_name, outcome, Some(report))
+            finish(solver_name, outcome, Some(report), false)
         }
     }
 }
@@ -986,6 +1499,7 @@ fn run_job(shared: &Shared, worker: usize, job: QueuedJob) -> JobResult {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::tenant::{Tenant, TenantQuota};
 
     fn tiny_job(seed: u64) -> JobSpec {
         JobSpec::new(
@@ -1012,6 +1526,7 @@ mod tests {
         for r in &results {
             assert!(r.outcome.is_done(), "{:?}", r.outcome);
             assert_eq!(r.problem, "lasso");
+            assert_eq!(r.tenant, DEFAULT_TENANT);
             assert!(r.report.as_ref().unwrap().objective.is_finite());
         }
         // Lifecycle order per job: Queued, Started, 20 iterations, Finished.
@@ -1174,11 +1689,78 @@ mod tests {
                 Err(e) => break e,
             }
         };
-        assert_eq!(err.spec.tag, "overflow", "spec handed back intact");
-        assert_eq!(err.capacity, 1);
         assert!(err.to_string().contains("queue full"), "{err}");
+        let SubmitError::QueueFull(full) = err else {
+            panic!("expected QueueFull, got another refusal")
+        };
+        assert_eq!(full.spec.tag, "overflow", "spec handed back intact");
+        assert_eq!(full.capacity, 1);
         assert!(s.stats().rejected >= 1);
         blocker.cancel();
+        s.join();
+    }
+
+    /// Admission quota: a tenant over `max_queued` gets the typed Quota
+    /// refusal (spec handed back), other tenants are unaffected, and the
+    /// per-tenant rejection counters grow.
+    #[test]
+    fn try_submit_over_quota_returns_typed_error() {
+        let tenants = TenantRegistry::new(vec![Tenant::new("capped")
+            .with_quota(TenantQuota::unlimited().with_max_queued(1))
+            .with_retry_after_secs(7)])
+        .unwrap();
+        let s = Scheduler::start_with(
+            ServeConfig::default().with_workers(1).with_cache_bytes(0).with_tenants(tenants),
+            None,
+            Registry::with_defaults(),
+        );
+        // Stall the worker so queued jobs stay queued.
+        let blocker = s.submit(
+            JobSpec::new(ProblemSpec::lasso(40, 120).with_seed(3), SolverSpec::parse("fpa").unwrap())
+                .with_opts(SolveOptions::default().with_max_iters(50_000_000).with_target(0.0)),
+        );
+        // Fill the tenant's single queued slot (retry while the worker
+        // races us to the blocker).
+        let deadline = Instant::now() + Duration::from_secs(60);
+        let err = loop {
+            match s.try_submit(tiny_job(1).with_tenant("capped").with_tag("q")) {
+                Ok(_) if Instant::now() < deadline => continue,
+                Ok(_) => panic!("quota never engaged"),
+                Err(e) => break e,
+            }
+        };
+        let SubmitError::Quota { spec, quota } = err else { panic!("expected Quota refusal") };
+        assert_eq!(spec.tag, "q", "spec handed back intact");
+        assert_eq!(quota.tenant, "capped");
+        assert_eq!((quota.what, quota.limit), ("max_queued", 1));
+        assert_eq!(quota.retry_after_secs, 7);
+        assert!(s.stats().quota_rejected >= 1);
+        let ts = s.tenant_stats();
+        let capped = ts.iter().find(|t| t.tenant == "capped").unwrap();
+        assert!(capped.quota_rejected >= 1);
+        // The default tenant is untouched by the capped tenant's quota.
+        assert!(s.try_submit(tiny_job(2)).is_ok());
+        blocker.cancel();
+        s.join();
+    }
+
+    /// Unknown and disabled tenants get their own typed refusals.
+    #[test]
+    fn try_submit_rejects_unknown_and_disabled_tenants() {
+        let tenants = TenantRegistry::new(vec![Tenant::new("off").disabled()]).unwrap();
+        let s = Scheduler::start_with(
+            ServeConfig::default().with_workers(1).with_cache_bytes(0).with_tenants(tenants),
+            None,
+            Registry::with_defaults(),
+        );
+        match s.try_submit(tiny_job(1).with_tenant("nobody")) {
+            Err(SubmitError::UnknownTenant { tenant, .. }) => assert_eq!(tenant, "nobody"),
+            other => panic!("expected UnknownTenant, got {other:?}"),
+        }
+        match s.try_submit(tiny_job(1).with_tenant("off")) {
+            Err(SubmitError::TenantDisabled { tenant, .. }) => assert_eq!(tenant, "off"),
+            other => panic!("expected TenantDisabled, got {other:?}"),
+        }
         s.join();
     }
 
@@ -1196,6 +1778,8 @@ mod tests {
         let st = s.status(queued.id()).expect("known job");
         assert_eq!(st.state, JobState::Queued);
         assert_eq!((st.tag.as_str(), st.problem.as_str()), ("behind", "lasso"));
+        assert_eq!(st.tenant, DEFAULT_TENANT);
+        assert_eq!(st.retries, 0);
         assert!(st.outcome.is_none() && st.x.is_none());
         assert!(s.status(999_999).is_none());
         assert!(!s.cancel(999_999));
@@ -1256,5 +1840,17 @@ mod tests {
         let results = s.join();
         assert_eq!(results[0].problem, "user-lasso");
         assert!(results[0].outcome.is_done());
+    }
+
+    #[test]
+    fn retry_backoff_curve_is_exponential_and_capped() {
+        let p = RetryPolicy { max_retries: 5, base_backoff_ms: 100, max_backoff_ms: 1_000 };
+        assert_eq!(p.backoff_ms(0), 100);
+        assert_eq!(p.backoff_ms(1), 200);
+        assert_eq!(p.backoff_ms(2), 400);
+        assert_eq!(p.backoff_ms(3), 800);
+        assert_eq!(p.backoff_ms(4), 1_000, "capped");
+        assert_eq!(p.backoff_ms(60), 1_000, "shift clamped, no overflow");
+        assert_eq!(RetryPolicy::default().max_retries, 0, "retries are opt-in");
     }
 }

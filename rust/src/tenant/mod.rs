@@ -1,0 +1,412 @@
+//! # `flexa::tenant` — multi-tenant control plane
+//!
+//! The paper's framework is explicitly about *flexible* resource
+//! allocation — anywhere between fully-parallel Jacobi and sequential
+//! Gauss-Seidel, with only a subset of variables (and processors) active
+//! per step. This module makes the serve layer equally flexible about
+//! *which job* gets those processors:
+//!
+//! * a **tenant registry** ([`TenantRegistry`]) — id, bearer token,
+//!   scheduling weight, quota limits — loadable from a TOML or JSON file
+//!   (`flexa serve --tenants FILE`);
+//! * a **weighted-deficit-round-robin dispatch queue** ([`policy`])
+//!   replacing the scheduler's single FIFO: per-tenant sub-queues,
+//!   deficit counters weighted by tenant weight, starvation-free, with a
+//!   deterministic tie-break by submission sequence so the single-tenant
+//!   golden streams stay stable;
+//! * **per-tenant quotas** ([`quota`]) enforced at admission
+//!   (`max_queued` → typed [`QuotaExceeded`] → HTTP `429` with a
+//!   per-tenant `Retry-After`) and at dispatch (`max_concurrent`,
+//!   `max_cores` folded into the PR 4 core-budget policy);
+//! * a **persistent warm-start store** ([`store`]): an append-only,
+//!   versioned, checksummed log of warm-start cache entries with
+//!   size-capped compaction, loaded on startup so a restarted
+//!   `flexa serve` keeps its λ-sweep warm starts.
+//!
+//! ## Tenants file
+//!
+//! TOML (one `[tenant.<id>]` table per tenant):
+//!
+//! ```toml
+//! [tenant.alice]
+//! token = "alice-secret"     # Authorization: Bearer alice-secret
+//! weight = 3                 # 3x the dispatch share of a weight-1 tenant
+//! max_queued = 16            # admission quota -> 429 beyond
+//! max_concurrent = 2         # dispatch cap (work waits, never bounces)
+//! max_cores = 4              # kernel-thread ceiling per job
+//! retry_after_secs = 5       # advertised on this tenant's 429s
+//!
+//! [tenant.default]           # the implicit tenant is configurable too
+//! enabled = false            # ...e.g. to force authenticated access
+//! ```
+//!
+//! or JSON: `{"tenants": [{"id": "alice", "token": "...", "weight": 3,
+//! ...}]}`. The format is sniffed from the content (a leading `{` means
+//! JSON), not the extension.
+//!
+//! The `default` tenant always exists (weight 1, no token, unlimited,
+//! enabled) unless the file overrides it; un-authenticated requests and
+//! in-process [`crate::serve::JobSpec`]s without an explicit tenant run
+//! under it, which preserves every pre-tenant behavior bit for bit.
+
+pub mod policy;
+pub mod quota;
+pub mod store;
+
+pub use policy::DrrQueue;
+pub use quota::{QuotaExceeded, TenantQuota};
+pub use store::{StoreStats, WarmStartStore};
+
+use anyhow::{anyhow, bail, Result};
+use std::collections::BTreeMap;
+
+/// The tenant un-authenticated / un-labelled work runs under.
+pub const DEFAULT_TENANT: &str = "default";
+
+/// One tenant's identity, credentials and limits.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Tenant {
+    /// Stable identifier (queue lane, metrics label, event field).
+    pub id: String,
+    /// Bearer token authenticating the tenant over HTTP. `None` = the
+    /// tenant may be selected without credentials (jobfile `tenant`
+    /// key); the `default` tenant is tokenless.
+    pub token: Option<String>,
+    /// Dispatch weight: under contention the tenant completes work in
+    /// proportion `weight / Σ weights`. Clamped to ≥ 1.
+    pub weight: u64,
+    /// Disabled tenants fail authentication (HTTP `403`) and admission.
+    pub enabled: bool,
+    pub quota: TenantQuota,
+    /// `Retry-After` seconds advertised on this tenant's quota `429`s.
+    pub retry_after_secs: u64,
+}
+
+impl Tenant {
+    pub fn new(id: &str) -> Self {
+        Self {
+            id: id.to_string(),
+            token: None,
+            weight: 1,
+            enabled: true,
+            quota: TenantQuota::unlimited(),
+            retry_after_secs: 1,
+        }
+    }
+
+    pub fn with_token(mut self, token: &str) -> Self {
+        self.token = Some(token.to_string());
+        self
+    }
+
+    pub fn with_weight(mut self, weight: u64) -> Self {
+        self.weight = weight.max(1);
+        self
+    }
+
+    pub fn with_quota(mut self, quota: TenantQuota) -> Self {
+        self.quota = quota;
+        self
+    }
+
+    pub fn with_retry_after_secs(mut self, secs: u64) -> Self {
+        self.retry_after_secs = secs;
+        self
+    }
+
+    pub fn disabled(mut self) -> Self {
+        self.enabled = false;
+        self
+    }
+}
+
+/// Immutable set of tenants the scheduler and HTTP front-end resolve
+/// against. Always contains the `default` tenant (possibly overridden
+/// by configuration).
+#[derive(Clone, Debug)]
+pub struct TenantRegistry {
+    tenants: BTreeMap<String, Tenant>,
+}
+
+impl Default for TenantRegistry {
+    /// Just the implicit `default` tenant — the pre-tenant behavior.
+    fn default() -> Self {
+        Self::new(Vec::new()).expect("empty registry is valid")
+    }
+}
+
+impl TenantRegistry {
+    /// Build from explicit tenants; the `default` tenant is added if
+    /// absent. Duplicate ids and duplicate tokens are rejected.
+    pub fn new(tenants: Vec<Tenant>) -> Result<Self> {
+        let mut map = BTreeMap::new();
+        let mut tokens: BTreeMap<String, String> = BTreeMap::new();
+        for t in tenants {
+            if t.id.is_empty() {
+                bail!("tenant id must not be empty");
+            }
+            if let Some(tok) = &t.token {
+                if tok.is_empty() {
+                    bail!("tenant `{}`: token must not be empty (omit it instead)", t.id);
+                }
+                if let Some(other) = tokens.insert(tok.clone(), t.id.clone()) {
+                    bail!("tenants `{other}` and `{}` share the same token", t.id);
+                }
+            }
+            if map.insert(t.id.clone(), t.clone()).is_some() {
+                bail!("duplicate tenant id `{}`", t.id);
+            }
+        }
+        map.entry(DEFAULT_TENANT.to_string()).or_insert_with(|| Tenant::new(DEFAULT_TENANT));
+        Ok(Self { tenants: map })
+    }
+
+    /// Load from a tenants file; JSON if the content starts with `{`,
+    /// TOML otherwise.
+    pub fn from_file(path: &str) -> Result<Self> {
+        let text = std::fs::read_to_string(path)
+            .map_err(|e| anyhow!("cannot read tenants file `{path}`: {e}"))?;
+        Self::parse(&text).map_err(|e| anyhow!("tenants file `{path}`: {e:#}"))
+    }
+
+    /// Parse tenants from TOML (`[tenant.<id>]` tables) or JSON
+    /// (`{"tenants": [...]}`); see the module docs for the schema.
+    pub fn parse(text: &str) -> Result<Self> {
+        if text.trim_start().starts_with('{') {
+            Self::parse_json(text)
+        } else {
+            Self::parse_toml(text)
+        }
+    }
+
+    fn parse_toml(text: &str) -> Result<Self> {
+        let doc = crate::config::toml::parse(text).map_err(|e| anyhow!("{e}"))?;
+        let mut partial: BTreeMap<String, Tenant> = BTreeMap::new();
+        for (key, value) in &doc {
+            let mut parts = key.splitn(3, '.');
+            let (ns, id, field) = (parts.next(), parts.next(), parts.next());
+            let (Some("tenant"), Some(id), Some(field)) = (ns, id, field) else {
+                bail!("unknown key `{key}` (tenants are `[tenant.<id>]` tables)");
+            };
+            if id.is_empty() {
+                bail!("empty tenant id in key `{key}`");
+            }
+            let t = partial.entry(id.to_string()).or_insert_with(|| Tenant::new(id));
+            let want_count = |what: &str| -> Result<usize> {
+                let v = value
+                    .as_int()
+                    .ok_or_else(|| anyhow!("tenant `{id}`: `{what}` must be an integer"))?;
+                if v < 0 {
+                    bail!("tenant `{id}`: `{what}` must be non-negative, got {v}");
+                }
+                Ok(v as usize)
+            };
+            match field {
+                "token" => {
+                    t.token = Some(
+                        value
+                            .as_str()
+                            .ok_or_else(|| anyhow!("tenant `{id}`: `token` must be a string"))?
+                            .to_string(),
+                    )
+                }
+                "weight" => t.weight = want_count("weight")?.max(1) as u64,
+                "enabled" => {
+                    t.enabled = value
+                        .as_bool()
+                        .ok_or_else(|| anyhow!("tenant `{id}`: `enabled` must be a boolean"))?
+                }
+                "max_queued" => t.quota.max_queued = Some(want_count("max_queued")?),
+                "max_concurrent" => t.quota.max_concurrent = Some(want_count("max_concurrent")?),
+                "max_cores" => t.quota.max_cores = Some(want_count("max_cores")?),
+                "retry_after_secs" => t.retry_after_secs = want_count("retry_after_secs")? as u64,
+                other => bail!(
+                    "tenant `{id}`: unknown field `{other}` (known: token, weight, enabled, \
+                     max_queued, max_concurrent, max_cores, retry_after_secs)"
+                ),
+            }
+        }
+        Self::new(partial.into_values().collect())
+    }
+
+    fn parse_json(text: &str) -> Result<Self> {
+        use crate::serve::Json;
+        let doc = Json::parse(text)?;
+        let Some(Json::Arr(items)) = doc.get("tenants") else {
+            bail!("JSON tenants file must be {{\"tenants\": [...]}}");
+        };
+        let mut tenants = Vec::new();
+        for item in items {
+            let id = item
+                .get("id")
+                .and_then(|v| v.as_str())
+                .ok_or_else(|| anyhow!("each tenant needs a string `id`"))?;
+            let mut t = Tenant::new(id);
+            let count = |key: &str| -> Result<Option<usize>> {
+                match item.get(key) {
+                    None => Ok(None),
+                    Some(v) => {
+                        let x = v
+                            .as_f64()
+                            .ok_or_else(|| anyhow!("tenant `{id}`: `{key}` must be a number"))?;
+                        if x < 0.0 || x.fract() != 0.0 {
+                            bail!("tenant `{id}`: `{key}` must be a non-negative integer, got {x}");
+                        }
+                        Ok(Some(x as usize))
+                    }
+                }
+            };
+            if let Some(v) = item.get("token") {
+                t.token = Some(
+                    v.as_str()
+                        .ok_or_else(|| anyhow!("tenant `{id}`: `token` must be a string"))?
+                        .to_string(),
+                );
+            }
+            if let Some(w) = count("weight")? {
+                t.weight = w.max(1) as u64;
+            }
+            if let Some(v) = item.get("enabled") {
+                t.enabled = v
+                    .as_bool()
+                    .ok_or_else(|| anyhow!("tenant `{id}`: `enabled` must be a boolean"))?;
+            }
+            t.quota.max_queued = count("max_queued")?;
+            t.quota.max_concurrent = count("max_concurrent")?;
+            t.quota.max_cores = count("max_cores")?;
+            if let Some(s) = count("retry_after_secs")? {
+                t.retry_after_secs = s as u64;
+            }
+            tenants.push(t);
+        }
+        Self::new(tenants)
+    }
+
+    pub fn get(&self, id: &str) -> Option<&Tenant> {
+        self.tenants.get(id)
+    }
+
+    /// Resolve a bearer token to its tenant.
+    pub fn by_token(&self, token: &str) -> Option<&Tenant> {
+        self.tenants.values().find(|t| t.token.as_deref() == Some(token))
+    }
+
+    /// All tenants, in id order.
+    pub fn iter(&self) -> impl Iterator<Item = &Tenant> {
+        self.tenants.values()
+    }
+
+    pub fn len(&self) -> usize {
+        self.tenants.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.tenants.is_empty()
+    }
+
+    /// Whether any tenant carries a bearer token (i.e. auth is in play).
+    pub fn has_tokens(&self) -> bool {
+        self.tenants.values().any(|t| t.token.is_some())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn default_registry_has_the_default_tenant() {
+        let r = TenantRegistry::default();
+        let d = r.get(DEFAULT_TENANT).expect("default tenant present");
+        assert!(d.enabled && d.token.is_none());
+        assert_eq!(d.weight, 1);
+        assert_eq!(d.quota, TenantQuota::unlimited());
+        assert!(!r.has_tokens());
+    }
+
+    #[test]
+    fn toml_round_trip_with_quotas_and_default_override() {
+        let r = TenantRegistry::parse(
+            r#"
+# two paying tenants and a locked-down default
+[tenant.alice]
+token = "alice-secret"
+weight = 3
+max_queued = 16
+max_concurrent = 2
+max_cores = 4
+retry_after_secs = 5
+
+[tenant.bob]
+token = "bob-secret"
+
+[tenant.default]
+enabled = false
+"#,
+        )
+        .unwrap();
+        assert_eq!(r.len(), 3);
+        let a = r.get("alice").unwrap();
+        assert_eq!(a.weight, 3);
+        assert_eq!(a.quota.max_queued, Some(16));
+        assert_eq!(a.quota.max_concurrent, Some(2));
+        assert_eq!(a.quota.max_cores, Some(4));
+        assert_eq!(a.retry_after_secs, 5);
+        assert_eq!(r.by_token("alice-secret").map(|t| t.id.as_str()), Some("alice"));
+        assert_eq!(r.by_token("bob-secret").map(|t| t.id.as_str()), Some("bob"));
+        assert!(r.by_token("nope").is_none());
+        assert!(!r.get(DEFAULT_TENANT).unwrap().enabled, "default override honored");
+        assert!(r.has_tokens());
+    }
+
+    #[test]
+    fn json_form_parses_the_same_schema() {
+        let r = TenantRegistry::parse(
+            r#"{"tenants": [
+                {"id": "alice", "token": "s3cr3t", "weight": 2, "max_queued": 8},
+                {"id": "guest", "enabled": false}
+            ]}"#,
+        )
+        .unwrap();
+        assert_eq!(r.len(), 3, "alice + guest + implicit default");
+        assert_eq!(r.get("alice").unwrap().quota.max_queued, Some(8));
+        assert_eq!(r.get("alice").unwrap().weight, 2);
+        assert!(!r.get("guest").unwrap().enabled);
+        assert!(r.get(DEFAULT_TENANT).unwrap().enabled);
+    }
+
+    #[test]
+    fn malformed_files_are_rejected_with_actionable_errors() {
+        let err = TenantRegistry::parse("[tenant.a]\nbogus = 1\n").unwrap_err().to_string();
+        assert!(err.contains("unknown field `bogus`"), "{err}");
+        assert!(err.contains("max_queued"), "{err}");
+        let err = TenantRegistry::parse("[notatenant]\nx = 1\n").unwrap_err().to_string();
+        assert!(err.contains("unknown key"), "{err}");
+        let err = TenantRegistry::parse("[tenant.a]\nweight = \"three\"\n").unwrap_err().to_string();
+        assert!(err.contains("must be an integer"), "{err}");
+        let err =
+            TenantRegistry::parse("{\"tenants\": [{\"token\": \"x\"}]}").unwrap_err().to_string();
+        assert!(err.contains("needs a string `id`"), "{err}");
+    }
+
+    #[test]
+    fn duplicate_tokens_and_ids_are_rejected() {
+        let err = TenantRegistry::new(vec![
+            Tenant::new("a").with_token("same"),
+            Tenant::new("b").with_token("same"),
+        ])
+        .unwrap_err()
+        .to_string();
+        assert!(err.contains("share the same token"), "{err}");
+        let err = TenantRegistry::new(vec![Tenant::new("a"), Tenant::new("a")])
+            .unwrap_err()
+            .to_string();
+        assert!(err.contains("duplicate tenant id"), "{err}");
+    }
+
+    #[test]
+    fn weight_zero_is_clamped() {
+        let r = TenantRegistry::parse("[tenant.z]\nweight = 0\n").unwrap();
+        assert_eq!(r.get("z").unwrap().weight, 1);
+    }
+}

@@ -1,0 +1,108 @@
+//! Per-tenant quota limits and the typed refusal they produce.
+//!
+//! Quotas bound how much of the scheduler one tenant can occupy:
+//!
+//! * `max_queued` — jobs waiting in the tenant's dispatch lane, enforced
+//!   at admission ([`QuotaExceeded`] → HTTP `429` with the tenant's own
+//!   `Retry-After`).
+//! * `max_concurrent` — jobs running on workers at once, enforced at
+//!   dispatch: the DRR queue skips a capped tenant's lane until one of
+//!   its jobs finishes (admission still succeeds — the work waits
+//!   instead of bouncing).
+//! * `max_cores` — ceiling on the kernel threads any one of the tenant's
+//!   jobs may use, folded into the scheduler's core-budget split (PR 4);
+//!   like every thread knob it never changes results, only speed.
+//!
+//! `None` means unlimited; the default quota is fully unlimited, which
+//! is what the implicit `default` tenant runs under.
+
+/// Per-tenant limits; `None` = unlimited.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct TenantQuota {
+    /// Jobs allowed to wait in this tenant's queue lane.
+    pub max_queued: Option<usize>,
+    /// Jobs allowed on workers at once.
+    pub max_concurrent: Option<usize>,
+    /// Kernel-thread ceiling per job (combined with the scheduler's
+    /// core-budget share by `min`).
+    pub max_cores: Option<usize>,
+}
+
+impl TenantQuota {
+    pub fn unlimited() -> Self {
+        Self::default()
+    }
+
+    pub fn with_max_queued(mut self, n: usize) -> Self {
+        self.max_queued = Some(n);
+        self
+    }
+
+    pub fn with_max_concurrent(mut self, n: usize) -> Self {
+        self.max_concurrent = Some(n);
+        self
+    }
+
+    pub fn with_max_cores(mut self, n: usize) -> Self {
+        self.max_cores = Some(n);
+        self
+    }
+}
+
+/// Typed admission refusal: the tenant is over one of its limits. The
+/// HTTP front-end maps this to `429 Too Many Requests` with the
+/// tenant's configured `Retry-After`.
+#[derive(Clone, Debug)]
+pub struct QuotaExceeded {
+    /// Tenant that hit the limit.
+    pub tenant: String,
+    /// Which limit: `"max_queued"` (the admission-time quota).
+    pub what: &'static str,
+    /// The configured limit.
+    pub limit: usize,
+    /// The tenant's usage observed at refusal time.
+    pub current: usize,
+    /// Seconds the tenant is advised to wait before retrying.
+    pub retry_after_secs: u64,
+}
+
+impl std::fmt::Display for QuotaExceeded {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(
+            f,
+            "tenant `{}` is over its {} quota ({} of {} in use); retry in {}s",
+            self.tenant, self.what, self.current, self.limit, self.retry_after_secs
+        )
+    }
+}
+
+impl std::error::Error for QuotaExceeded {}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn builders_set_limits_and_default_is_unlimited() {
+        let q = TenantQuota::default();
+        assert_eq!((q.max_queued, q.max_concurrent, q.max_cores), (None, None, None));
+        let q = TenantQuota::unlimited().with_max_queued(8).with_max_concurrent(2).with_max_cores(4);
+        assert_eq!(q.max_queued, Some(8));
+        assert_eq!(q.max_concurrent, Some(2));
+        assert_eq!(q.max_cores, Some(4));
+    }
+
+    #[test]
+    fn quota_exceeded_renders_an_actionable_message() {
+        let e = QuotaExceeded {
+            tenant: "alice".into(),
+            what: "max_queued",
+            limit: 4,
+            current: 4,
+            retry_after_secs: 3,
+        };
+        let msg = e.to_string();
+        assert!(msg.contains("alice") && msg.contains("max_queued"), "{msg}");
+        assert!(msg.contains("4 of 4") && msg.contains("3s"), "{msg}");
+    }
+}

@@ -1,0 +1,418 @@
+//! Persistent warm-start store: an append-only, versioned, checksummed
+//! log of [`crate::serve::WarmStartCache`] entries, so a restarted
+//! `flexa serve` keeps its λ-sweep warm starts (the fingerprint key,
+//! `x⁰`, the adapted τ and the Lipschitz estimate — exactly the state
+//! whose reuse is most of the win on repeated solves).
+//!
+//! ## File format (version 1)
+//!
+//! ```text
+//! magic   8 bytes  b"FLXWS01\n"
+//! record* {
+//!   len       u32 LE   payload byte length
+//!   checksum  u64 LE   FNV-1a of the payload bytes
+//!   payload {
+//!     key       u64 LE   cache fingerprint
+//!     flags     u8       bit0 = τ present, bit1 = L present
+//!     tau       f64 LE   (bits; meaningful iff bit0)
+//!     lipschitz f64 LE   (bits; meaningful iff bit1)
+//!     n         u32 LE   iterate length
+//!     x         n × f64 LE
+//!   }
+//! }
+//! ```
+//!
+//! Records append in insert order; on load, later records for the same
+//! key replace earlier ones (the log is a history, the cache keeps the
+//! newest). Any malformed tail — bad magic, truncated record, checksum
+//! mismatch, inconsistent payload length — is *detected and skipped,
+//! never crashed on*: loading stops at the last good record, counts the
+//! damage in [`StoreStats::records_skipped`], and truncates the file
+//! back to the good prefix so future appends stay consistent.
+//!
+//! ## Compaction
+//!
+//! The log grows by one record per cache insert, so repeated sweeps of
+//! the same keys inflate it past the live set. When the file exceeds its
+//! byte cap after an append, it is rewritten (temp file + rename) from
+//! the live cache snapshot — one record per live key.
+
+use crate::serve::cache::WarmStartCache;
+use anyhow::{Context, Result};
+use std::fs::{File, OpenOptions};
+use std::io::Write;
+use std::path::{Path, PathBuf};
+
+const MAGIC: &[u8; 8] = b"FLXWS01\n";
+/// Fixed payload bytes besides the iterate: key + flags + τ + L + n.
+const PAYLOAD_HEADER: usize = 8 + 1 + 8 + 8 + 4;
+/// Per-record framing: len + checksum.
+const FRAME: usize = 4 + 8;
+
+/// Store observability counters (surfaced in `/metrics`).
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct StoreStats {
+    /// Entries loaded into the cache at startup.
+    pub entries_loaded: usize,
+    /// Malformed/corrupt records detected (and skipped) at startup.
+    pub records_skipped: usize,
+    /// Records appended by this process.
+    pub appends: u64,
+    /// Compaction rewrites performed.
+    pub compactions: u64,
+    /// Current file size in bytes.
+    pub bytes: u64,
+}
+
+/// See module docs.
+pub struct WarmStartStore {
+    path: PathBuf,
+    file: File,
+    bytes: u64,
+    max_bytes: u64,
+    stats: StoreStats,
+}
+
+/// Record checksum: the same FNV-1a hasher the cache key uses (one copy
+/// of the constants, crate-wide).
+fn fnv64(bytes: &[u8]) -> u64 {
+    let mut h = crate::serve::cache::Fnv::new();
+    h.write(bytes);
+    h.finish()
+}
+
+fn encode_payload(key: u64, x: &[f64], tau: Option<f64>, lipschitz: Option<f64>) -> Vec<u8> {
+    let mut p = Vec::with_capacity(PAYLOAD_HEADER + 8 * x.len());
+    p.extend_from_slice(&key.to_le_bytes());
+    let flags = (tau.is_some() as u8) | ((lipschitz.is_some() as u8) << 1);
+    p.push(flags);
+    p.extend_from_slice(&tau.unwrap_or(0.0).to_le_bytes());
+    p.extend_from_slice(&lipschitz.unwrap_or(0.0).to_le_bytes());
+    p.extend_from_slice(&(x.len() as u32).to_le_bytes());
+    for v in x {
+        p.extend_from_slice(&v.to_le_bytes());
+    }
+    p
+}
+
+fn read_u32(b: &[u8]) -> u32 {
+    u32::from_le_bytes(b[..4].try_into().expect("4 bytes"))
+}
+
+fn read_u64(b: &[u8]) -> u64 {
+    u64::from_le_bytes(b[..8].try_into().expect("8 bytes"))
+}
+
+fn read_f64(b: &[u8]) -> f64 {
+    f64::from_le_bytes(b[..8].try_into().expect("8 bytes"))
+}
+
+/// A decoded record.
+struct Record {
+    key: u64,
+    tau: Option<f64>,
+    lipschitz: Option<f64>,
+    x: Vec<f64>,
+}
+
+fn decode_payload(p: &[u8]) -> Option<Record> {
+    if p.len() < PAYLOAD_HEADER {
+        return None;
+    }
+    let key = read_u64(&p[0..]);
+    let flags = p[8];
+    let tau = (flags & 1 != 0).then(|| read_f64(&p[9..]));
+    let lipschitz = (flags & 2 != 0).then(|| read_f64(&p[17..]));
+    let n = read_u32(&p[25..]) as usize;
+    if p.len() != PAYLOAD_HEADER + 8 * n {
+        return None;
+    }
+    let mut x = Vec::with_capacity(n);
+    for i in 0..n {
+        x.push(read_f64(&p[PAYLOAD_HEADER + 8 * i..]));
+    }
+    Some(Record { key, tau, lipschitz, x })
+}
+
+impl WarmStartStore {
+    /// Open (creating if absent) the store at `path` and replay every
+    /// intact record into `cache` — later records win per key. Corrupt
+    /// or truncated tails are skipped, counted, and truncated away.
+    pub fn open(path: &Path, max_bytes: u64, cache: &mut WarmStartCache) -> Result<Self> {
+        let data = match std::fs::read(path) {
+            Ok(d) => d,
+            Err(e) if e.kind() == std::io::ErrorKind::NotFound => Vec::new(),
+            Err(e) => return Err(e).with_context(|| format!("read warm-start store `{}`", path.display())),
+        };
+        let mut stats = StoreStats::default();
+        let mut good = 0usize;
+        if data.is_empty() {
+            // Fresh store: nothing to replay.
+        } else if data.len() < MAGIC.len() || &data[..MAGIC.len()] != MAGIC {
+            stats.records_skipped += 1;
+        } else {
+            good = MAGIC.len();
+            let mut off = MAGIC.len();
+            loop {
+                if off == data.len() {
+                    break;
+                }
+                if off + FRAME > data.len() {
+                    stats.records_skipped += 1;
+                    break;
+                }
+                let len = read_u32(&data[off..]) as usize;
+                let checksum = read_u64(&data[off + 4..]);
+                if off + FRAME + len > data.len() {
+                    stats.records_skipped += 1;
+                    break;
+                }
+                let payload = &data[off + FRAME..off + FRAME + len];
+                if fnv64(payload) != checksum {
+                    stats.records_skipped += 1;
+                    break;
+                }
+                let Some(rec) = decode_payload(payload) else {
+                    stats.records_skipped += 1;
+                    break;
+                };
+                cache.insert(rec.key, rec.x, rec.tau, rec.lipschitz);
+                stats.entries_loaded += 1;
+                off += FRAME + len;
+                good = off;
+            }
+        }
+        let file = OpenOptions::new()
+            .create(true)
+            .write(true)
+            .open(path)
+            .with_context(|| format!("open warm-start store `{}`", path.display()))?;
+        // Truncate away any malformed tail (or a wholly-corrupt file) so
+        // appends resume from a consistent prefix.
+        file.set_len(good as u64)
+            .with_context(|| format!("truncate warm-start store `{}`", path.display()))?;
+        let mut store = Self {
+            path: path.to_path_buf(),
+            file,
+            bytes: good as u64,
+            max_bytes: max_bytes.max(MAGIC.len() as u64),
+            stats,
+        };
+        if good == 0 {
+            store.write_magic()?;
+        }
+        store.stats.bytes = store.bytes;
+        Ok(store)
+    }
+
+    fn write_magic(&mut self) -> Result<()> {
+        use std::io::Seek;
+        self.file.seek(std::io::SeekFrom::End(0))?;
+        self.file.write_all(MAGIC)?;
+        self.file.flush()?;
+        self.bytes = MAGIC.len() as u64;
+        Ok(())
+    }
+
+    /// Append one entry and flush. Call [`Self::needs_compaction`]
+    /// afterwards — appends past the byte cap are still written (the
+    /// cap bounds steady-state size, not a single record).
+    pub fn append(&mut self, key: u64, x: &[f64], tau: Option<f64>, lipschitz: Option<f64>) -> Result<()> {
+        use std::io::Seek;
+        let payload = encode_payload(key, x, tau, lipschitz);
+        let mut frame = Vec::with_capacity(FRAME + payload.len());
+        frame.extend_from_slice(&(payload.len() as u32).to_le_bytes());
+        frame.extend_from_slice(&fnv64(&payload).to_le_bytes());
+        frame.extend_from_slice(&payload);
+        let write = (|| -> std::io::Result<()> {
+            self.file.seek(std::io::SeekFrom::End(0))?;
+            self.file.write_all(&frame)?;
+            self.file.flush()
+        })();
+        if let Err(e) = write {
+            // A partial frame left on disk would poison the log: replay
+            // stops at the first bad checksum, so every *later* good
+            // record would be lost on restart. Trim back to the last
+            // known-good boundary before surfacing the error.
+            let _ = self.file.set_len(self.bytes);
+            return Err(e).context("append to warm-start store");
+        }
+        self.bytes += frame.len() as u64;
+        self.stats.appends += 1;
+        self.stats.bytes = self.bytes;
+        Ok(())
+    }
+
+    /// Whether the log has outgrown its byte cap.
+    pub fn needs_compaction(&self) -> bool {
+        self.bytes > self.max_bytes
+    }
+
+    /// Rewrite the log from the live entry set (newest record per key):
+    /// temp file + rename, so a crash mid-compaction leaves either the
+    /// old or the new log, never a torn one.
+    pub fn compact(
+        &mut self,
+        live: &[(u64, std::sync::Arc<Vec<f64>>, Option<f64>, Option<f64>)],
+    ) -> Result<()> {
+        let tmp_path = self.path.with_extension("tmp");
+        {
+            let mut tmp = File::create(&tmp_path)
+                .with_context(|| format!("create `{}`", tmp_path.display()))?;
+            tmp.write_all(MAGIC)?;
+            for (key, x, tau, lipschitz) in live {
+                let payload = encode_payload(*key, x, *tau, *lipschitz);
+                tmp.write_all(&(payload.len() as u32).to_le_bytes())?;
+                tmp.write_all(&fnv64(&payload).to_le_bytes())?;
+                tmp.write_all(&payload)?;
+            }
+            tmp.flush()?;
+        }
+        std::fs::rename(&tmp_path, &self.path)
+            .with_context(|| format!("replace `{}`", self.path.display()))?;
+        self.file = OpenOptions::new()
+            .write(true)
+            .open(&self.path)
+            .with_context(|| format!("reopen `{}`", self.path.display()))?;
+        self.bytes = std::fs::metadata(&self.path).map(|m| m.len()).unwrap_or(0);
+        self.stats.compactions += 1;
+        self.stats.bytes = self.bytes;
+        Ok(())
+    }
+
+    pub fn stats(&self) -> StoreStats {
+        self.stats
+    }
+
+    pub fn path(&self) -> &Path {
+        &self.path
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tmp(name: &str) -> PathBuf {
+        let p = std::env::temp_dir().join(format!("flexa_store_{name}_{}.bin", std::process::id()));
+        std::fs::remove_file(&p).ok();
+        p
+    }
+
+    #[test]
+    fn roundtrip_persists_entries_across_reopen() {
+        let path = tmp("roundtrip");
+        {
+            let mut cache = WarmStartCache::new(1 << 20);
+            let mut store = WarmStartStore::open(&path, 1 << 20, &mut cache).unwrap();
+            store.append(7, &[1.0, -2.5, 3.25], Some(0.5), Some(42.0)).unwrap();
+            store.append(9, &[4.0], None, None).unwrap();
+            // Same key again: the later record must win on reload.
+            store.append(7, &[9.0, 9.5, 10.0], Some(0.25), None).unwrap();
+            assert_eq!(store.stats().appends, 3);
+        }
+        let mut cache = WarmStartCache::new(1 << 20);
+        let store = WarmStartStore::open(&path, 1 << 20, &mut cache).unwrap();
+        assert_eq!(store.stats().entries_loaded, 3);
+        assert_eq!(store.stats().records_skipped, 0);
+        let ws = cache.lookup(7).expect("key 7 reloaded");
+        assert_eq!(*ws.x0, vec![9.0, 9.5, 10.0], "later record wins");
+        assert_eq!(ws.tau, Some(0.25));
+        assert_eq!(ws.lipschitz, None);
+        let ws = cache.lookup(9).expect("key 9 reloaded");
+        assert_eq!(*ws.x0, vec![4.0]);
+        assert_eq!((ws.tau, ws.lipschitz), (None, None));
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn truncated_tail_is_skipped_and_trimmed() {
+        let path = tmp("truncated");
+        {
+            let mut cache = WarmStartCache::new(1 << 20);
+            let mut store = WarmStartStore::open(&path, 1 << 20, &mut cache).unwrap();
+            store.append(1, &[1.0, 2.0], None, None).unwrap();
+            store.append(2, &[3.0, 4.0], None, None).unwrap();
+        }
+        // Chop the last record in half.
+        let full = std::fs::metadata(&path).unwrap().len();
+        let f = OpenOptions::new().write(true).open(&path).unwrap();
+        f.set_len(full - 7).unwrap();
+        drop(f);
+        let mut cache = WarmStartCache::new(1 << 20);
+        let mut store = WarmStartStore::open(&path, 1 << 20, &mut cache).unwrap();
+        assert_eq!(store.stats().entries_loaded, 1, "intact prefix loads");
+        assert_eq!(store.stats().records_skipped, 1, "the torn tail is counted");
+        assert!(cache.lookup(1).is_some());
+        assert!(cache.lookup(2).is_none());
+        // The file was trimmed back to the good prefix: appending and
+        // reloading works cleanly.
+        store.append(3, &[5.0], None, None).unwrap();
+        drop(store);
+        let mut cache = WarmStartCache::new(1 << 20);
+        let store = WarmStartStore::open(&path, 1 << 20, &mut cache).unwrap();
+        assert_eq!(store.stats().records_skipped, 0);
+        assert_eq!(store.stats().entries_loaded, 2);
+        assert!(cache.lookup(3).is_some());
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn checksum_mismatch_and_bad_magic_are_detected() {
+        let path = tmp("corrupt");
+        {
+            let mut cache = WarmStartCache::new(1 << 20);
+            let mut store = WarmStartStore::open(&path, 1 << 20, &mut cache).unwrap();
+            store.append(1, &[1.0], None, None).unwrap();
+        }
+        // Flip one payload byte: checksum must catch it.
+        let mut data = std::fs::read(&path).unwrap();
+        let last = data.len() - 1;
+        data[last] ^= 0xFF;
+        std::fs::write(&path, &data).unwrap();
+        let mut cache = WarmStartCache::new(1 << 20);
+        let store = WarmStartStore::open(&path, 1 << 20, &mut cache).unwrap();
+        assert_eq!(store.stats().entries_loaded, 0);
+        assert_eq!(store.stats().records_skipped, 1);
+        assert!(cache.is_empty());
+        drop(store);
+        // A file that is not a store at all: skipped, then rebuilt.
+        std::fs::write(&path, b"this is not a warm-start store").unwrap();
+        let mut cache = WarmStartCache::new(1 << 20);
+        let mut store = WarmStartStore::open(&path, 1 << 20, &mut cache).unwrap();
+        assert_eq!(store.stats().records_skipped, 1);
+        store.append(5, &[2.0], None, None).unwrap();
+        drop(store);
+        let mut cache = WarmStartCache::new(1 << 20);
+        let store = WarmStartStore::open(&path, 1 << 20, &mut cache).unwrap();
+        assert_eq!((store.stats().entries_loaded, store.stats().records_skipped), (1, 0));
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn compaction_rewrites_to_the_live_set() {
+        let path = tmp("compact");
+        let mut cache = WarmStartCache::new(1 << 20);
+        let mut store = WarmStartStore::open(&path, 256, &mut cache).unwrap();
+        for i in 0..20u64 {
+            // Same key over and over: the log grows, the live set is 1.
+            store.append(77, &[i as f64; 8], Some(1.0), None).unwrap();
+        }
+        assert!(store.needs_compaction(), "20 records must exceed a 256-byte cap");
+        let live = vec![(
+            77u64,
+            std::sync::Arc::new(vec![19.0f64; 8]),
+            Some(1.0),
+            None,
+        )];
+        store.compact(&live).unwrap();
+        assert!(!store.needs_compaction() || store.stats().bytes < 256 + 256);
+        assert_eq!(store.stats().compactions, 1);
+        drop(store);
+        let mut cache = WarmStartCache::new(1 << 20);
+        let store = WarmStartStore::open(&path, 256, &mut cache).unwrap();
+        assert_eq!(store.stats().entries_loaded, 1, "compacted log holds the live set only");
+        assert_eq!(*cache.lookup(77).unwrap().x0, vec![19.0f64; 8]);
+        std::fs::remove_file(&path).ok();
+    }
+}

@@ -21,9 +21,23 @@ fn spawn(http: HttpConfig, serve: ServeConfig) -> SpawnedServer {
 
 /// One `Connection: close` exchange; returns (status, headers, body).
 fn req(addr: &str, method: &str, path: &str, body: Option<&str>) -> (u16, Vec<(String, String)>, String) {
+    req_with(addr, method, path, body, &[])
+}
+
+/// [`req`] with extra request headers (e.g. `Authorization`).
+fn req_with(
+    addr: &str,
+    method: &str,
+    path: &str,
+    body: Option<&str>,
+    extra_headers: &[(&str, &str)],
+) -> (u16, Vec<(String, String)>, String) {
     let mut stream = TcpStream::connect(addr).expect("connect");
     stream.set_read_timeout(Some(Duration::from_secs(60))).unwrap();
     let mut head = format!("{method} {path} HTTP/1.1\r\nHost: {addr}\r\nConnection: close\r\n");
+    for (name, value) in extra_headers {
+        head.push_str(&format!("{name}: {value}\r\n"));
+    }
     if let Some(b) = body {
         head.push_str(&format!("Content-Length: {}\r\n", b.len()));
     }
@@ -334,6 +348,133 @@ fn jobfile_error_paths_surface_as_http_errors() {
         .and_then(|v| v.parse().ok())
         .expect("error counter present");
     assert!(errors >= 9.0, "all the 4xx responses above are counted: {errors}");
+    server.shutdown().expect("clean shutdown");
+}
+
+/// Tenant control plane over the wire: bearer auth (401/403), the
+/// jobfile `tenant` key rules, per-tenant quota 429s with the tenant's
+/// own Retry-After, per-tenant `/metrics` counters, and request-id
+/// echo + `Expect: 100-continue` handling on a live socket.
+#[test]
+fn tenant_auth_quotas_and_request_ids_over_http() {
+    use flexa::tenant::{Tenant, TenantQuota, TenantRegistry};
+    let tenants = TenantRegistry::new(vec![
+        Tenant::new("alice")
+            .with_token("alice-secret")
+            .with_weight(3)
+            .with_retry_after_secs(7),
+        Tenant::new("blocked")
+            .with_token("blocked-secret")
+            .with_quota(TenantQuota::unlimited().with_max_queued(0)),
+        Tenant::new("ghost").with_token("ghost-secret").disabled(),
+        Tenant::new("open"), // tokenless: selectable via the jobfile key
+    ])
+    .unwrap();
+    let server = spawn(
+        HttpConfig::default(),
+        ServeConfig::default().with_workers(1).with_cache_bytes(0).with_tenants(tenants),
+    );
+    let addr = server.addr().to_string();
+    let tiny = "{\"rows\":15,\"cols\":45,\"max_iters\":5,\"target\":0}";
+    let auth = |token: &str| vec![("Authorization", token)];
+
+    // Authorized: 202, response names the tenant, job status carries it.
+    let (status, headers, body) =
+        req_with(&addr, "POST", "/v1/jobs", Some(tiny), &[("Authorization", "Bearer alice-secret")]);
+    assert_eq!(status, 202, "{body}");
+    assert!(body.contains("\"tenant\":\"alice\""), "{body}");
+    assert!(header(&headers, "x-flexa-request-id").is_some(), "request id echoed: {headers:?}");
+    let job = Json::parse(&body).unwrap().get("job").unwrap().as_f64().unwrap() as u64;
+    let doc = wait_finished(&addr, job);
+    assert_eq!(doc.get("tenant").and_then(|v| v.as_str()), Some("alice"), "{doc:?}");
+    assert_eq!(doc.get("retries").and_then(|v| v.as_f64()), Some(0.0), "{doc:?}");
+
+    // Unknown token → 401 + WWW-Authenticate; disabled tenant → 403.
+    let bad = auth("Bearer nope");
+    let (status, headers, body) = req_with(&addr, "POST", "/v1/jobs", Some(tiny), &bad);
+    assert_eq!(status, 401, "{body}");
+    assert!(header(&headers, "www-authenticate").is_some(), "{headers:?}");
+    let (status, _, body) =
+        req_with(&addr, "POST", "/v1/jobs", Some(tiny), &[("Authorization", "Bearer ghost-secret")]);
+    assert_eq!(status, 403, "{body}");
+    assert!(body.contains("disabled"), "{body}");
+
+    // Over quota (max_queued = 0 admits nothing): 429 with the default
+    // Retry-After for that tenant.
+    let (status, headers, body) = req_with(
+        &addr,
+        "POST",
+        "/v1/jobs",
+        Some(tiny),
+        &[("Authorization", "Bearer blocked-secret")],
+    );
+    assert_eq!(status, 429, "{body}");
+    assert!(body.contains("max_queued"), "{body}");
+    assert!(header(&headers, "retry-after").is_some(), "{headers:?}");
+
+    // Jobfile tenant key: a tokenless tenant is selectable without
+    // credentials; naming someone else's tenant with a mismatched token
+    // is 403; naming a token-protected tenant without auth is 403.
+    let spec_open = "{\"rows\":15,\"cols\":45,\"max_iters\":5,\"target\":0,\"tenant\":\"open\"}";
+    let (status, _, body) = req(&addr, "POST", "/v1/jobs", Some(spec_open));
+    assert_eq!(status, 202, "{body}");
+    assert!(body.contains("\"tenant\":\"open\""), "{body}");
+    let spec_alice = "{\"rows\":15,\"cols\":45,\"tenant\":\"alice\"}";
+    let (status, _, body) = req(&addr, "POST", "/v1/jobs", Some(spec_alice));
+    assert_eq!(status, 403, "{body}");
+    assert!(body.contains("requires authentication"), "{body}");
+    let (status, _, body) = req_with(
+        &addr,
+        "POST",
+        "/v1/jobs",
+        Some(spec_alice),
+        &[("Authorization", "Bearer blocked-secret")],
+    );
+    assert_eq!(status, 403, "{body}");
+    assert!(body.contains("authenticates"), "{body}");
+
+    // Request ids are monotonic across requests.
+    let id_of = |headers: &[(String, String)]| -> u64 {
+        header(headers, "x-flexa-request-id").unwrap().parse().unwrap()
+    };
+    let (_, h1, _) = req(&addr, "GET", "/healthz", None);
+    let (_, h2, _) = req(&addr, "GET", "/healthz", None);
+    assert!(id_of(&h2) > id_of(&h1), "{h1:?} then {h2:?}");
+
+    // Expect: 100-continue on a live socket: interim 100, then the 202.
+    let mut stream = TcpStream::connect(&addr).unwrap();
+    stream.set_read_timeout(Some(Duration::from_secs(60))).unwrap();
+    let head = format!(
+        "POST /v1/jobs HTTP/1.1\r\nHost: {addr}\r\nConnection: close\r\nAuthorization: Bearer alice-secret\r\nExpect: 100-continue\r\nContent-Length: {}\r\n\r\n",
+        tiny.len()
+    );
+    stream.write_all(head.as_bytes()).unwrap();
+    stream.write_all(tiny.as_bytes()).unwrap();
+    let mut raw = Vec::new();
+    stream.read_to_end(&mut raw).unwrap();
+    let raw = String::from_utf8(raw).unwrap();
+    assert!(raw.starts_with("HTTP/1.1 100 Continue\r\n\r\n"), "interim first: {raw:.120}");
+    assert!(raw.contains("HTTP/1.1 202"), "{raw}");
+    // Unsupported expectation → 417.
+    let (status, _, body) = req_with(
+        &addr,
+        "POST",
+        "/v1/jobs",
+        Some(tiny),
+        &[("Authorization", "Bearer alice-secret"), ("Expect", "no-such-expectation")],
+    );
+    assert_eq!(status, 417, "{body}");
+
+    // Per-tenant metrics families are labeled and counting.
+    let (_, _, metrics) = req(&addr, "GET", "/metrics", None);
+    for needle in [
+        "flexa_tenant_jobs_submitted_total{tenant=\"alice\"}",
+        "flexa_tenant_quota_rejected_total{tenant=\"blocked\"} 1",
+        "flexa_jobs_quota_rejected_total 1",
+    ] {
+        assert!(metrics.contains(needle), "missing `{needle}` in:\n{metrics}");
+    }
+
     server.shutdown().expect("clean shutdown");
 }
 

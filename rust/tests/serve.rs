@@ -312,12 +312,77 @@ fn bounded_queue_refuses_when_full() {
     assert_eq!(scheduler.queued(), 2);
     let refused = scheduler.try_submit(lasso_job_tiny().with_tag("overflow"));
     let err = refused.expect_err("queue at capacity must refuse");
-    assert_eq!(err.spec.tag, "overflow", "the spec is handed back intact");
-    assert_eq!(err.capacity, 2, "the typed error names the capacity hit");
+    let flexa::serve::SubmitError::QueueFull(full) = err else {
+        panic!("expected the QueueFull refusal")
+    };
+    assert_eq!(full.spec.tag, "overflow", "the spec is handed back intact");
+    assert_eq!(full.capacity, 2, "the typed error names the capacity hit");
     assert_eq!(scheduler.stats().rejected, 1, "refusals are counted");
     blocker.cancel();
     let results = scheduler.join();
     assert_eq!(results.len(), 3, "blocker + two queued jobs ran; the refused one never entered");
+}
+
+/// Scheduler counters stay consistent while N jobs are cancelled
+/// mid-run from another thread: at every observation
+/// `finished() + queue_depth + running <= submitted` (gauges are read
+/// at distinct instants, so the sum may transiently undercount but must
+/// never overcount), and at quiescence the buckets add up exactly —
+/// `queued + running + finished == submitted` with the gauges at zero.
+#[test]
+fn stats_stay_consistent_under_concurrent_cancellation() {
+    let scheduler = std::sync::Arc::new(Scheduler::start(
+        ServeConfig::default().with_workers(2).with_cache_bytes(0),
+    ));
+    // Half long-running (the cancellation targets), half tiny.
+    let mut handles = Vec::new();
+    for i in 0..16 {
+        let job = if i % 2 == 0 {
+            long_job()
+        } else {
+            JobSpec::new(lasso(400 + i as u64), SolverSpec::parse("fpa").unwrap())
+                .with_opts(SolveOptions::default().with_max_iters(30).with_target(0.0))
+        };
+        handles.push(scheduler.submit(job));
+    }
+    let cancel_targets: Vec<_> =
+        handles.iter().enumerate().filter(|(i, _)| i % 2 == 0).map(|(_, h)| h.clone()).collect();
+    let canceller = std::thread::spawn(move || {
+        for h in cancel_targets {
+            h.cancel();
+            std::thread::sleep(Duration::from_millis(3));
+        }
+    });
+    // Observe stats live throughout the drain.
+    let deadline = std::time::Instant::now() + Duration::from_secs(120);
+    loop {
+        let st = scheduler.stats();
+        assert_eq!(st.submitted, 16);
+        assert!(
+            st.finished() + st.queue_depth as u64 + st.running as u64 <= st.submitted,
+            "buckets overcount: {st:?}"
+        );
+        if st.finished() == 16 {
+            break;
+        }
+        assert!(std::time::Instant::now() < deadline, "jobs never drained: {st:?}");
+        std::thread::sleep(Duration::from_millis(2));
+    }
+    canceller.join().unwrap();
+    let settled = scheduler.stats();
+    assert_eq!(settled.queue_depth, 0, "{settled:?}");
+    assert_eq!(settled.running, 0, "{settled:?}");
+    assert_eq!(
+        settled.done + settled.cancelled + settled.failed + settled.deadline_expired,
+        16,
+        "{settled:?}"
+    );
+    assert_eq!(settled.cancelled, 8, "every long job was cancelled: {settled:?}");
+    assert_eq!(settled.done, 8, "every tiny job completed: {settled:?}");
+    let results = std::sync::Arc::try_unwrap(scheduler)
+        .unwrap_or_else(|_| panic!("scheduler still shared"))
+        .join();
+    assert_eq!(results.len(), 16);
 }
 
 /// The warm-start cache carries the spectral-norm estimate: a repeated
