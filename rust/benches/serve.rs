@@ -237,9 +237,88 @@ fn main() -> anyhow::Result<()> {
         println!("WARN: heavy share {heavy_share:.3} strayed from the 1:3 weighting");
     }
 
+    // --- E. cluster routing overhead ---
+    // The same λ-sweep shape pushed through a 2-backend `flexa::cluster`
+    // router on loopback: measures placement + proxy cost per job and
+    // checks the sweep's backend affinity end to end. Job sizes stay
+    // small — this leg times the router, not the solver.
+    let cluster_jobs = if smoke { 4 } else { 12 };
+    let (cluster_s, cluster_jobs_per_s, cluster_affine) = {
+        use flexa::cluster::{backend, BackendSpec, ClusterConfig, ClusterServer};
+        use flexa::http::{HttpConfig, HttpServer};
+        let quiet_http = HttpConfig { access_log: false, ..HttpConfig::default() };
+        let spawn_backend = || {
+            HttpServer::bind(
+                "127.0.0.1:0",
+                quiet_http.clone(),
+                ServeConfig::default().with_workers(1),
+                flexa::api::Registry::with_defaults(),
+            )
+            .expect("bind bench backend")
+            .spawn()
+        };
+        let (node_a, node_b) = (spawn_backend(), spawn_backend());
+        let specs = vec![
+            BackendSpec { id: "a".into(), addr: node_a.addr().to_string() },
+            BackendSpec { id: "b".into(), addr: node_b.addr().to_string() },
+        ];
+        let config = ClusterConfig { access_log: false, ..ClusterConfig::default() };
+        let router = ClusterServer::bind("127.0.0.1:0", specs, config)
+            .expect("bind bench router")
+            .spawn();
+        let addr = router.addr().to_string();
+        let timeout = std::time::Duration::from_secs(60);
+        let t0 = Instant::now();
+        let mut owners = Vec::new();
+        for i in 0..cluster_jobs {
+            let lam = 2.0 * 0.8f64.powi(i as i32);
+            let line = format!(
+                "{{\"problem\":\"lasso\",\"rows\":40,\"cols\":120,\"seed\":77,\"lambda\":{lam},\
+                 \"algo\":\"fpa\",\"max_iters\":60,\"warm_start\":true,\"tag\":\"bench-{i}\"}}"
+            );
+            let reply =
+                backend::request(&addr, "POST", "/v1/jobs", &[], Some(line.as_bytes()), timeout)?;
+            anyhow::ensure!(reply.status == 202, "router refused job {i}: {}", reply.body_str());
+            let doc = flexa::serve::Json::parse(&reply.body_str())?;
+            let job = doc.get("job").and_then(|v| v.as_f64()).unwrap_or(-1.0) as u64;
+            if let Some(owner) = doc.get("backend").and_then(|v| v.as_str()) {
+                owners.push(owner.to_string());
+            }
+            loop {
+                let reply = backend::request(
+                    &addr,
+                    "GET",
+                    &format!("/v1/jobs/{job}"),
+                    &[],
+                    None,
+                    timeout,
+                )?;
+                let doc = flexa::serve::Json::parse(&reply.body_str())?;
+                if doc.get("state").and_then(|v| v.as_str()) == Some("finished") {
+                    break;
+                }
+                std::thread::sleep(std::time::Duration::from_millis(2));
+            }
+        }
+        let cluster_s = t0.elapsed().as_secs_f64();
+        let affine = !owners.is_empty() && owners.iter().all(|o| o == &owners[0]);
+        router.shutdown().map_err(|e| anyhow::anyhow!("router shutdown: {e:#}"))?;
+        node_a.shutdown().map_err(|e| anyhow::anyhow!("backend shutdown: {e:#}"))?;
+        node_b.shutdown().map_err(|e| anyhow::anyhow!("backend shutdown: {e:#}"))?;
+        (cluster_s, cluster_jobs as f64 / cluster_s.max(1e-9), affine)
+    };
+    println!(
+        "cluster: {cluster_jobs} routed jobs in {cluster_s:.2}s ({cluster_jobs_per_s:.2} jobs/s), \
+         sweep affinity {}",
+        if cluster_affine { "held" } else { "BROKEN" }
+    );
+    if !cluster_affine {
+        println!("WARN: λ-sweep jobs did not share one backend");
+    }
+
     // --- record ---
     let json = format!(
-        "{{\n  \"bench\": \"serve\",\n  \"smoke\": {smoke},\n  \"workload\": {{\"problem\": \"lasso\", \"rows\": {rows}, \"cols\": {cols}, \"sparsity\": 0.1}},\n  \"throughput\": {{\"jobs\": {throughput_jobs}, \"workers\": {workers}, \"serial_s\": {serial_s:.4}, \"pool_s\": {pool_s:.4}, \"jobs_per_s\": {jobs_per_s:.4}}},\n  \"warm_repeat\": {{\"target\": 1e-6, \"cold_iters\": {cold_iters}, \"warm_iters\": {warm_iters}, \"ratio\": {repeat_ratio:.5}, \"cache_hits\": {}, \"cache_misses\": {}}},\n  \"lambda_path\": {{\"target\": 1e-4, \"points\": {path_points}, \"lambdas\": {lambdas:?}, \"cold_iters\": {cold_path:?}, \"warm_iters\": {warm_path:?}, \"mean_warm_cold_ratio\": {mean_ratio:.5}}},\n  \"tenant_fairness\": {{\"weights\": [1, 3], \"jobs\": {}, \"heavy_first_half_share\": {heavy_share:.5}, \"light_max_dispatch_gap\": {light_max_gap}, \"drain_s\": {fair_s:.4}}}\n}}\n",
+        "{{\n  \"bench\": \"serve\",\n  \"smoke\": {smoke},\n  \"workload\": {{\"problem\": \"lasso\", \"rows\": {rows}, \"cols\": {cols}, \"sparsity\": 0.1}},\n  \"throughput\": {{\"jobs\": {throughput_jobs}, \"workers\": {workers}, \"serial_s\": {serial_s:.4}, \"pool_s\": {pool_s:.4}, \"jobs_per_s\": {jobs_per_s:.4}}},\n  \"warm_repeat\": {{\"target\": 1e-6, \"cold_iters\": {cold_iters}, \"warm_iters\": {warm_iters}, \"ratio\": {repeat_ratio:.5}, \"cache_hits\": {}, \"cache_misses\": {}}},\n  \"lambda_path\": {{\"target\": 1e-4, \"points\": {path_points}, \"lambdas\": {lambdas:?}, \"cold_iters\": {cold_path:?}, \"warm_iters\": {warm_path:?}, \"mean_warm_cold_ratio\": {mean_ratio:.5}}},\n  \"tenant_fairness\": {{\"weights\": [1, 3], \"jobs\": {}, \"heavy_first_half_share\": {heavy_share:.5}, \"light_max_dispatch_gap\": {light_max_gap}, \"drain_s\": {fair_s:.4}}},\n  \"cluster\": {{\"backends\": 2, \"jobs\": {cluster_jobs}, \"total_s\": {cluster_s:.4}, \"jobs_per_s\": {cluster_jobs_per_s:.4}, \"sweep_affinity\": {cluster_affine}}}\n}}\n",
         cache_stats.hits, cache_stats.misses, 4 * fair_jobs
     );
     std::fs::write("BENCH_serve.json", &json)?;

@@ -15,6 +15,13 @@
 //! poorly for this splitting (the x-update is a global solve), which is
 //! why the paper runs it on a single process — we do the same (whole
 //! iteration counted as serial time in the cost model).
+//!
+//! The iteration body lives in [`AdmmCore`], shared by two solvers:
+//! [`Admm`] (the whole loop in one process) and [`AdmmStep`] (advance
+//! externally-held `[x; z; u]` state by a fixed number of iterations —
+//! the subproblem unit `flexa::cluster` ships to backends, whose merged
+//! iterates are bit-identical to [`Admm`] *because* both run this exact
+//! code on the same state).
 
 use super::{Recorder, SolveOptions, SolveReport, Solver};
 use crate::linalg::{cg, ops, Cholesky, DenseMatrix};
@@ -74,22 +81,30 @@ enum XSolver {
     Cg { tol: f64, max_iters: usize },
 }
 
-impl<P: LeastSquares + ?Sized> Solver<P> for Admm {
-    fn name(&self) -> String {
-        "admm".into()
-    }
+/// Setup state + the exact iteration body shared by [`Admm`] and
+/// [`AdmmStep`]. One `iterate` call performs exactly one ADMM iteration
+/// in place on `(x, z, u)`; the arithmetic (operation order, scratch
+/// reuse, CG warm start from the incoming `x`) is the single source of
+/// truth for both solvers, which is what makes the cluster's split-mode
+/// iterates bit-identical to the single-node reference.
+struct AdmmCore<'a, P: LeastSquares + ?Sized> {
+    problem: &'a P,
+    rho: f64,
+    xsolver: XSolver,
+    /// 2Aᵀb, precomputed.
+    atb2: Vec<f64>,
+    q: Vec<f64>,
+    scratch_m: Vec<f64>,
+    scratch_m2: Vec<f64>,
+    scratch_n: Vec<f64>,
+}
 
-    fn solve(&mut self, problem: &P, opts: &SolveOptions) -> SolveReport {
+impl<'a, P: LeastSquares + ?Sized> AdmmCore<'a, P> {
+    fn new(problem: &'a P, rho: f64, x_solve: XSolve) -> Self {
+        assert!(rho > 0.0, "rho must be positive");
         let n = problem.n();
         let m = problem.rows();
-        let layout = problem.layout().clone();
-        let nb = layout.num_blocks();
-        let rho = self.opts.rho;
-        assert!(rho > 0.0, "rho must be positive");
-        let mut recorder = Recorder::new("admm", problem, opts);
-
-        // --- setup ---
-        let use_chol = match self.opts.x_solve {
+        let use_chol = match x_solve {
             XSolve::Cholesky => true,
             XSolve::Cg { .. } => false,
             XSolve::Auto { threshold } => m <= threshold,
@@ -118,7 +133,7 @@ impl<P: LeastSquares + ?Sized> Solver<P> for Admm {
             }
             XSolver::Chol(Cholesky::factor(&gram).expect("(ρ/2)I + AAᵀ is SPD"))
         } else {
-            let (tol, max_iters) = match self.opts.x_solve {
+            let (tol, max_iters) = match x_solve {
                 XSolve::Cg { tol_exp, max_iters } => (10f64.powi(tol_exp), max_iters),
                 _ => (1e-8, 200),
             };
@@ -130,60 +145,91 @@ impl<P: LeastSquares + ?Sized> Solver<P> for Admm {
         problem.apply_t(problem.rhs(), &mut atb2);
         ops::scal(2.0, &mut atb2);
 
+        Self {
+            problem,
+            rho,
+            xsolver,
+            atb2,
+            q: vec![0.0; n],
+            scratch_m: vec![0.0; m],
+            scratch_m2: vec![0.0; m],
+            scratch_n: vec![0.0; n],
+        }
+    }
+
+    /// One exact ADMM iteration in place; returns the measured seconds.
+    fn iterate(&mut self, x: &mut [f64], z: &mut [f64], u: &mut [f64]) -> f64 {
+        let problem = self.problem;
+        let n = problem.n();
+        let m = problem.rows();
+        let layout = problem.layout();
+        let nb = layout.num_blocks();
+        let rho = self.rho;
+        let t0 = Instant::now();
+
+        // q = 2Aᵀb + ρ(z − u)
+        for j in 0..n {
+            self.q[j] = self.atb2[j] + rho * (z[j] - u[j]);
+        }
+        // x-update.
+        match &self.xsolver {
+            XSolver::Chol(ch) => {
+                // x = q/ρ − Aᵀ M⁻¹ (A q) / ρ²  (Woodbury)
+                problem.apply(&self.q, &mut self.scratch_m);
+                ch.solve(&self.scratch_m.clone(), &mut self.scratch_m2);
+                problem.apply_t(&self.scratch_m2, &mut self.scratch_n);
+                for j in 0..n {
+                    x[j] = self.q[j] / rho - self.scratch_n[j] / (rho * rho);
+                }
+            }
+            XSolver::Cg { tol, max_iters } => {
+                // Warm start from previous x.
+                let apply = |v: &[f64], out: &mut [f64]| {
+                    let mut av = vec![0.0; m];
+                    problem.apply(v, &mut av);
+                    problem.apply_t(&av, out);
+                    for j in 0..n {
+                        out[j] = rho * v[j] + 2.0 * out[j];
+                    }
+                };
+                cg::conjugate_gradient(apply, &self.q, x, *tol, *max_iters);
+            }
+        }
+        // z-update (block soft-threshold via the problem's prox) and dual.
+        for i in 0..nb {
+            let r = layout.range(i);
+            let (lo, hi) = (r.start, r.end);
+            let v_block: Vec<f64> = (lo..hi).map(|j| x[j] + u[j]).collect();
+            problem.prox_block(i, &v_block, 1.0 / rho, &mut z[lo..hi]);
+        }
+        for j in 0..n {
+            u[j] += x[j] - z[j];
+        }
+        t0.elapsed().as_secs_f64()
+    }
+}
+
+impl<P: LeastSquares + ?Sized> Solver<P> for Admm {
+    fn name(&self) -> String {
+        "admm".into()
+    }
+
+    fn solve(&mut self, problem: &P, opts: &SolveOptions) -> SolveReport {
+        let n = problem.n();
+        let nb = problem.layout().num_blocks();
+        let mut recorder = Recorder::new("admm", problem, opts);
+
+        let mut core = AdmmCore::new(problem, self.opts.rho, self.opts.x_solve);
         let mut x = opts.x0.clone().unwrap_or_else(|| vec![0.0; n]);
         let mut z = x.clone();
         let mut u = vec![0.0; n];
-        let mut q = vec![0.0; n];
-        let mut scratch_m = vec![0.0; m];
-        let mut scratch_m2 = vec![0.0; m];
-        let mut scratch_n = vec![0.0; n];
         recorder.setup_done();
 
         let mut iterations = 0;
         let mut converged = false;
         for k in 0..opts.max_iters {
             iterations = k + 1;
-            let t0 = Instant::now();
-
-            // q = 2Aᵀb + ρ(z − u)
-            for j in 0..n {
-                q[j] = atb2[j] + rho * (z[j] - u[j]);
-            }
-            // x-update.
-            match &xsolver {
-                XSolver::Chol(ch) => {
-                    // x = q/ρ − Aᵀ M⁻¹ (A q) / ρ²  (Woodbury)
-                    problem.apply(&q, &mut scratch_m);
-                    ch.solve(&scratch_m.clone(), &mut scratch_m2);
-                    problem.apply_t(&scratch_m2, &mut scratch_n);
-                    for j in 0..n {
-                        x[j] = q[j] / rho - scratch_n[j] / (rho * rho);
-                    }
-                }
-                XSolver::Cg { tol, max_iters } => {
-                    // Warm start from previous x.
-                    let apply = |v: &[f64], out: &mut [f64]| {
-                        let mut av = vec![0.0; m];
-                        problem.apply(v, &mut av);
-                        problem.apply_t(&av, out);
-                        for j in 0..n {
-                            out[j] = rho * v[j] + 2.0 * out[j];
-                        }
-                    };
-                    cg::conjugate_gradient(apply, &q, &mut x, *tol, *max_iters);
-                }
-            }
-            // z-update (block soft-threshold via the problem's prox) and dual.
-            for i in 0..nb {
-                let r = layout.range(i);
-                let (lo, hi) = (r.start, r.end);
-                let v_block: Vec<f64> = (lo..hi).map(|j| x[j] + u[j]).collect();
-                problem.prox_block(i, &v_block, 1.0 / rho, &mut z[lo..hi]);
-            }
-            for j in 0..n {
-                u[j] += x[j] - z[j];
-            }
-            let t_iter = t0.elapsed().as_secs_f64();
+            let t_iter = core.iterate(&mut x, &mut z, &mut u);
 
             // Sequential algorithm: all serial time.
             recorder.add_sim_time(opts.cost_model.iter_time(0.0, t_iter, 0));
@@ -202,6 +248,99 @@ impl<P: LeastSquares + ?Sized> Solver<P> for Admm {
 
         let objective = problem.objective(&z);
         SolveReport { x: z, objective, iterations, converged, trace: recorder.into_trace() }
+    }
+}
+
+/// Advance externally-held ADMM state by `steps` exact iterations.
+///
+/// The state travels in `opts.x0` packed as `[x; z; u]` (each of length
+/// `n`), and comes back the same way in the report's `x`; the report's
+/// `objective` is `V(z)` at the new state. Registered as `admm-step`
+/// (params: `rho`, `steps`), which is how `flexa::cluster` runs the
+/// outer consensus loop at the router while backends execute the
+/// iteration arithmetic as ordinary jobs — both sides share
+/// [`AdmmCore`], so chaining `admm-step` jobs reproduces [`Admm`]'s
+/// iterates bit for bit (pinned by tests here and in the cluster layer).
+pub struct AdmmStep {
+    pub opts: AdmmOptions,
+    /// Iterations to advance per call (≥ 1).
+    pub steps: usize,
+}
+
+impl AdmmStep {
+    pub fn new(opts: AdmmOptions, steps: usize) -> Self {
+        Self { opts, steps: steps.max(1) }
+    }
+
+    /// Pack `[x; z; u]` into the wire/state layout.
+    pub fn pack(x: &[f64], z: &[f64], u: &[f64]) -> Vec<f64> {
+        let mut s = Vec::with_capacity(x.len() * 3);
+        s.extend_from_slice(x);
+        s.extend_from_slice(z);
+        s.extend_from_slice(u);
+        s
+    }
+
+    /// Split packed state into `(x, z, u)`; `None` unless `len == 3n`.
+    pub fn unpack(state: &[f64], n: usize) -> Option<(&[f64], &[f64], &[f64])> {
+        if state.len() != 3 * n {
+            return None;
+        }
+        Some((&state[..n], &state[n..2 * n], &state[2 * n..]))
+    }
+
+    /// The fresh-start state [`Admm`] begins from: `x = z = x0` (zeros
+    /// when `None`), `u = 0`.
+    pub fn initial_state(n: usize, x0: Option<&[f64]>) -> Vec<f64> {
+        let x: Vec<f64> = match x0 {
+            Some(v) => v.to_vec(),
+            None => vec![0.0; n],
+        };
+        let u = vec![0.0; n];
+        Self::pack(&x, &x.clone(), &u)
+    }
+}
+
+impl<P: LeastSquares + ?Sized> Solver<P> for AdmmStep {
+    fn name(&self) -> String {
+        "admm-step".into()
+    }
+
+    fn solve(&mut self, problem: &P, opts: &SolveOptions) -> SolveReport {
+        let n = problem.n();
+        let nb = problem.layout().num_blocks();
+        let state = opts.x0.as_deref().expect("admm-step requires packed [x; z; u] state in x0");
+        assert_eq!(state.len(), 3 * n, "admm-step state must have length 3n");
+        let mut x = state[..n].to_vec();
+        let mut z = state[n..2 * n].to_vec();
+        let mut u = state[2 * n..].to_vec();
+
+        let mut recorder = Recorder::new("admm-step", problem, opts);
+        let mut core = AdmmCore::new(problem, self.opts.rho, self.opts.x_solve);
+        recorder.setup_done();
+
+        let mut iterations = 0;
+        for k in 0..self.steps {
+            iterations = k + 1;
+            let t_iter = core.iterate(&mut x, &mut z, &mut u);
+            recorder.add_sim_time(opts.cost_model.iter_time(0.0, t_iter, 0));
+            recorder.record(k, &z, nb);
+            if recorder.cancelled() {
+                break;
+            }
+            if recorder.elapsed_s() > opts.max_seconds {
+                break;
+            }
+        }
+
+        let objective = problem.objective(&z);
+        SolveReport {
+            x: Self::pack(&x, &z, &u),
+            objective,
+            iterations,
+            converged: false,
+            trace: recorder.into_trace(),
+        }
     }
 }
 
@@ -248,5 +387,52 @@ mod tests {
         // z comes out of a soft-threshold: exact zeros expected.
         let nnz = ops::nnz(&report.x, 1e-12);
         assert!(nnz < 80, "z should be sparse, nnz = {nnz}");
+    }
+
+    /// Chained one-iteration `AdmmStep` calls — each on a freshly built
+    /// solver, exactly how the cluster ships them to backends — must
+    /// reproduce the single-process `Admm` iterate bit for bit.
+    #[test]
+    fn step_chain_is_bit_identical_to_admm() {
+        for x_solve in [XSolve::Cholesky, XSolve::Cg { tol_exp: -10, max_iters: 400 }] {
+            let p = planted(94);
+            let k = 25;
+            let reference = Admm::new(AdmmOptions { rho: 1.0, x_solve })
+                .solve(&p, &SolveOptions::default().with_max_iters(k).with_target(0.0));
+
+            let n = p.n();
+            let mut state = AdmmStep::initial_state(n, None);
+            for _ in 0..k {
+                // Fresh solver per step: no hidden state may survive.
+                let mut step = AdmmStep::new(AdmmOptions { rho: 1.0, x_solve }, 1);
+                let r = step.solve(
+                    &p,
+                    &SolveOptions::default().with_max_iters(1).with_target(0.0).with_x0(state),
+                );
+                state = r.x;
+            }
+            let (_, z, _) = AdmmStep::unpack(&state, n).unwrap();
+            assert_eq!(reference.x.len(), n);
+            for j in 0..n {
+                assert_eq!(
+                    reference.x[j].to_bits(),
+                    z[j].to_bits(),
+                    "iterate differs at {j} under {x_solve:?}"
+                );
+            }
+            // A single multi-step call agrees too.
+            let mut step = AdmmStep::new(AdmmOptions { rho: 1.0, x_solve }, k);
+            let r = step.solve(
+                &p,
+                &SolveOptions::default()
+                    .with_max_iters(k)
+                    .with_target(0.0)
+                    .with_x0(AdmmStep::initial_state(n, None)),
+            );
+            let (_, z, _) = AdmmStep::unpack(&r.x, n).unwrap();
+            for j in 0..n {
+                assert_eq!(reference.x[j].to_bits(), z[j].to_bits(), "multi-step differs at {j}");
+            }
+        }
     }
 }

@@ -11,7 +11,7 @@
 
 use super::session::{DynSolver, ProblemHandle};
 use super::spec::{ProblemSpec, SolverSpec};
-use crate::algos::admm::{Admm, AdmmOptions};
+use crate::algos::admm::{Admm, AdmmOptions, AdmmStep};
 use crate::algos::fista::{Fista, FistaOptions};
 use crate::algos::fpa::{Fpa, FpaOptions};
 use crate::algos::gauss_seidel::{GaussSeidel, SweepOrder};
@@ -109,6 +109,11 @@ impl Registry {
             "admm",
             "sequential ADMM baseline (param: rho); least-squares only",
             Box::new(build_admm),
+        );
+        r.register_solver(
+            "admm-step",
+            "advance packed ADMM state [x; z; u] (in x0) by `steps` exact iterations (params: rho, steps); the flexa::cluster consensus subproblem",
+            Box::new(build_admm_step),
         );
         r
     }
@@ -493,6 +498,52 @@ fn build_admm(spec: &SolverSpec) -> Result<Box<dyn DynSolver>> {
         bail!("admm: `rho` must be positive");
     }
     Ok(Box::new(AdmmDyn { inner: Admm::new(AdmmOptions { rho, ..AdmmOptions::default() }) }))
+}
+
+struct AdmmStepDyn {
+    inner: AdmmStep,
+}
+
+impl DynSolver for AdmmStepDyn {
+    fn name(&self) -> String {
+        "admm-step".into()
+    }
+
+    fn solve_session(&mut self, problem: &ProblemHandle, opts: &SolveOptions) -> Result<SolveReport> {
+        match problem {
+            ProblemHandle::LeastSquares(p) => {
+                let n = p.n();
+                match &opts.x0 {
+                    Some(s) if s.len() == 3 * n => {}
+                    Some(s) => bail!(
+                        "admm-step: x0 must carry packed [x; z; u] state of length 3n = {} for this problem, got {}",
+                        3 * n,
+                        s.len()
+                    ),
+                    None => bail!("admm-step requires packed [x; z; u] state in x0 (length 3n = {})", 3 * n),
+                }
+                Ok(self.inner.solve(p.as_ref(), opts))
+            }
+            ProblemHandle::General(_) => bail!(
+                "solver `admm-step` requires least-squares structure (F = ‖Ax−b‖²); \
+                 use problems `lasso` or `group_lasso`"
+            ),
+        }
+    }
+}
+
+fn build_admm_step(spec: &SolverSpec) -> Result<Box<dyn DynSolver>> {
+    let rho = spec.param_or("rho", 1.0);
+    if rho <= 0.0 {
+        bail!("admm-step: `rho` must be positive");
+    }
+    let steps = spec.param_or("steps", 1.0);
+    if steps < 1.0 || steps.fract() != 0.0 {
+        bail!("admm-step: `steps` must be a positive integer");
+    }
+    Ok(Box::new(AdmmStepDyn {
+        inner: AdmmStep::new(AdmmOptions { rho, ..AdmmOptions::default() }, steps as usize),
+    }))
 }
 
 #[cfg(test)]

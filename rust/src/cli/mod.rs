@@ -53,6 +53,7 @@ impl Command {
     /// Parse `args` (not including the program / subcommand name).
     pub fn parse(&self, args: &[String]) -> Result<Parsed> {
         let mut values: BTreeMap<String, String> = BTreeMap::new();
+        let mut occurrences: BTreeMap<String, Vec<String>> = BTreeMap::new();
         let mut flags: Vec<String> = Vec::new();
         let mut positionals: Vec<String> = Vec::new();
         for o in &self.opts {
@@ -88,13 +89,14 @@ impl Command {
                             .ok_or_else(|| anyhow!("option --{key} requires a value"))?
                             .clone(),
                     };
+                    occurrences.entry(key.to_string()).or_default().push(v.clone());
                     values.insert(key.to_string(), v);
                 }
             } else {
                 positionals.push(arg.clone());
             }
         }
-        Ok(Parsed { values, flags, positionals })
+        Ok(Parsed { values, occurrences, flags, positionals })
     }
 }
 
@@ -102,6 +104,9 @@ impl Command {
 #[derive(Clone, Debug, Default)]
 pub struct Parsed {
     values: BTreeMap<String, String>,
+    /// Every value given for each option, in order — `get` sees only the
+    /// last, `all` sees them all (repeatable options like `--backend`).
+    occurrences: BTreeMap<String, Vec<String>>,
     flags: Vec<String>,
     positionals: Vec<String>,
 }
@@ -112,6 +117,12 @@ impl Parsed {
     }
     pub fn get(&self, name: &str) -> Option<&str> {
         self.values.get(name).map(String::as_str)
+    }
+    /// Every value the user gave for a repeatable option, in command-line
+    /// order. Empty when the option never appeared (a declared default
+    /// does **not** count as an occurrence).
+    pub fn all(&self, name: &str) -> Vec<&str> {
+        self.occurrences.get(name).map(|v| v.iter().map(String::as_str).collect()).unwrap_or_default()
     }
     pub fn str(&self, name: &str) -> Result<&str> {
         self.get(name).ok_or_else(|| anyhow!("missing required option --{name}"))
@@ -160,6 +171,24 @@ mod tests {
         let p = cmd().parse(&args(&["--verbose", "config.toml"])).unwrap();
         assert!(p.flag("verbose"));
         assert_eq!(p.positionals(), &["config.toml".to_string()]);
+    }
+
+    /// Repeating `--key` keeps `get` on the last value while `all`
+    /// returns every occurrence in order (how `flexa cluster` collects
+    /// its `--backend ADDR` list).
+    #[test]
+    fn repeated_options_accumulate_in_order() {
+        let c = Command::new("cluster", "route jobs").opt("backend", None, "backend address");
+        let p = c
+            .parse(&args(&["--backend", "127.0.0.1:7001", "--backend=127.0.0.1:7002"]))
+            .unwrap();
+        assert_eq!(p.get("backend"), Some("127.0.0.1:7002"));
+        assert_eq!(p.all("backend"), vec!["127.0.0.1:7001", "127.0.0.1:7002"]);
+        // Defaults are not occurrences: `all` is empty until the user
+        // passes the option.
+        let p = cmd().parse(&args(&[])).unwrap();
+        assert_eq!(p.get("rows"), Some("2000"));
+        assert!(p.all("rows").is_empty());
     }
 
     #[test]

@@ -1,0 +1,224 @@
+//! Backend descriptors and the router's minimal HTTP/1.1 client.
+//!
+//! The router talks to its backends with plain `Connection: close`
+//! exchanges over [`std::net::TcpStream`] — one request per connection
+//! keeps the client trivial (no pooling, no chunked decoding: the flexa
+//! server always answers with `Content-Length`, and SSE streams are
+//! consumed until EOF). Addresses come from repeated `--backend` flags
+//! (`id=host:port` or bare `host:port`) or a `--backends FILE` TOML
+//! table:
+//!
+//! ```toml
+//! [backends]
+//! a = "127.0.0.1:7001"
+//! b = "127.0.0.1:7002"
+//! ```
+
+use anyhow::{anyhow, bail, Result};
+use std::io::{BufRead, BufReader, Read, Write};
+use std::net::{TcpStream, ToSocketAddrs};
+use std::time::Duration;
+
+/// One backend: a stable id (ring identity, metrics label) + address.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct BackendSpec {
+    pub id: String,
+    pub addr: String,
+}
+
+/// Parse one `--backend` value: `id=host:port` names the backend
+/// explicitly; a bare `host:port` uses the address as the id. The id is
+/// the ring identity — keep it stable across restarts or placements
+/// move.
+pub fn parse_backend_arg(arg: &str) -> Result<BackendSpec> {
+    let (id, addr) = match arg.split_once('=') {
+        Some((id, addr)) => (id.trim(), addr.trim()),
+        None => (arg.trim(), arg.trim()),
+    };
+    if id.is_empty() || addr.is_empty() {
+        bail!("--backend must be `host:port` or `id=host:port`, got `{arg}`");
+    }
+    if !addr.contains(':') {
+        bail!("backend address `{addr}` must be `host:port`");
+    }
+    Ok(BackendSpec { id: id.to_string(), addr: addr.to_string() })
+}
+
+/// Parse a `--backends FILE` TOML table (see the module docs).
+pub fn parse_backends_file(text: &str) -> Result<Vec<BackendSpec>> {
+    let doc = crate::config::toml::parse(text).map_err(|e| anyhow!("{e}"))?;
+    let mut out = Vec::new();
+    for (key, value) in &doc {
+        let Some(id) = key.strip_prefix("backends.") else {
+            bail!("unknown key `{key}` in backends file (expected [backends] id = \"host:port\")");
+        };
+        let addr = value
+            .as_str()
+            .ok_or_else(|| anyhow!("backend `{id}`: address must be a string"))?;
+        out.push(parse_backend_arg(&format!("{id}={addr}"))?);
+    }
+    if out.is_empty() {
+        bail!("backends file defines no backends (expected [backends] id = \"host:port\")");
+    }
+    Ok(out)
+}
+
+/// A buffered backend response.
+#[derive(Debug)]
+pub struct HttpReply {
+    pub status: u16,
+    pub headers: Vec<(String, String)>,
+    pub body: Vec<u8>,
+}
+
+impl HttpReply {
+    pub fn header(&self, name: &str) -> Option<&str> {
+        self.headers.iter().find(|(k, _)| k == name).map(|(_, v)| v.as_str())
+    }
+
+    pub fn body_str(&self) -> String {
+        String::from_utf8_lossy(&self.body).into_owned()
+    }
+}
+
+fn connect(addr: &str, timeout: Duration) -> Result<TcpStream> {
+    let sock = addr
+        .to_socket_addrs()
+        .map_err(|e| anyhow!("backend `{addr}`: cannot resolve: {e}"))?
+        .next()
+        .ok_or_else(|| anyhow!("backend `{addr}`: no address"))?;
+    let stream = TcpStream::connect_timeout(&sock, timeout)
+        .map_err(|e| anyhow!("backend `{addr}`: connect failed: {e}"))?;
+    stream.set_read_timeout(Some(timeout))?;
+    stream.set_write_timeout(Some(timeout))?;
+    stream.set_nodelay(true)?;
+    Ok(stream)
+}
+
+fn write_head(
+    w: &mut impl Write,
+    method: &str,
+    path: &str,
+    addr: &str,
+    headers: &[(String, String)],
+    body_len: Option<usize>,
+) -> std::io::Result<()> {
+    let mut head = format!("{method} {path} HTTP/1.1\r\nHost: {addr}\r\nConnection: close\r\n");
+    for (name, value) in headers {
+        head.push_str(&format!("{name}: {value}\r\n"));
+    }
+    if let Some(len) = body_len {
+        head.push_str(&format!("Content-Length: {len}\r\nContent-Type: application/json\r\n"));
+    }
+    head.push_str("\r\n");
+    w.write_all(head.as_bytes())
+}
+
+/// Read a response head: status line + headers, stopping at the blank
+/// line; the reader is left positioned at the body.
+fn read_head(reader: &mut BufReader<TcpStream>) -> Result<(u16, Vec<(String, String)>)> {
+    let mut line = String::new();
+    if reader.read_line(&mut line)? == 0 {
+        bail!("backend closed the connection before responding");
+    }
+    let status: u16 = line
+        .split_whitespace()
+        .nth(1)
+        .and_then(|s| s.parse().ok())
+        .ok_or_else(|| anyhow!("malformed backend status line `{}`", line.trim_end()))?;
+    let mut headers = Vec::new();
+    loop {
+        let mut h = String::new();
+        if reader.read_line(&mut h)? == 0 {
+            bail!("backend closed the connection mid-headers");
+        }
+        if h == "\r\n" || h == "\n" {
+            break;
+        }
+        if let Some((k, v)) = h.split_once(':') {
+            headers.push((k.trim().to_ascii_lowercase(), v.trim().to_string()));
+        }
+    }
+    Ok((status, headers))
+}
+
+/// One buffered request/response exchange with a backend.
+pub fn request(
+    addr: &str,
+    method: &str,
+    path: &str,
+    headers: &[(String, String)],
+    body: Option<&[u8]>,
+    timeout: Duration,
+) -> Result<HttpReply> {
+    let stream = connect(addr, timeout)?;
+    let mut writer = stream.try_clone()?;
+    let mut reader = BufReader::new(stream);
+    write_head(&mut writer, method, path, addr, headers, body.map(<[u8]>::len))?;
+    if let Some(b) = body {
+        writer.write_all(b)?;
+    }
+    writer.flush()?;
+    let (status, headers) = read_head(&mut reader)?;
+    let mut body = Vec::new();
+    match headers.iter().find(|(k, _)| k == "content-length") {
+        Some((_, len)) => {
+            let len: usize =
+                len.parse().map_err(|_| anyhow!("bad backend Content-Length `{len}`"))?;
+            body.resize(len, 0);
+            reader.read_exact(&mut body)?;
+        }
+        None => {
+            reader.read_to_end(&mut body)?;
+        }
+    }
+    Ok(HttpReply { status, headers, body })
+}
+
+/// Open a streaming GET (SSE proxying): returns once the head is read,
+/// leaving the reader positioned at the event stream. Reads time out at
+/// `timeout` per chunk — the caller's loop treats timeouts as "no data
+/// yet", not as stream end.
+pub fn open_stream(
+    addr: &str,
+    path: &str,
+    headers: &[(String, String)],
+    timeout: Duration,
+) -> Result<(u16, Vec<(String, String)>, BufReader<TcpStream>)> {
+    let stream = connect(addr, timeout)?;
+    let mut writer = stream.try_clone()?;
+    let mut reader = BufReader::new(stream);
+    write_head(&mut writer, "GET", path, addr, headers, None)?;
+    writer.flush()?;
+    let (status, headers) = read_head(&mut reader)?;
+    Ok((status, headers, reader))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn backend_args_parse_ids_and_addresses() {
+        let b = parse_backend_arg("127.0.0.1:7001").unwrap();
+        assert_eq!((b.id.as_str(), b.addr.as_str()), ("127.0.0.1:7001", "127.0.0.1:7001"));
+        let b = parse_backend_arg("a=127.0.0.1:7001").unwrap();
+        assert_eq!((b.id.as_str(), b.addr.as_str()), ("a", "127.0.0.1:7001"));
+        assert!(parse_backend_arg("").is_err());
+        assert!(parse_backend_arg("a=").is_err());
+        assert!(parse_backend_arg("a=no-port").is_err());
+    }
+
+    #[test]
+    fn backends_file_parses_the_toml_table() {
+        let list = parse_backends_file(
+            "# two nodes\n[backends]\na = \"127.0.0.1:7001\"\nb = \"127.0.0.1:7002\"\n",
+        )
+        .unwrap();
+        assert_eq!(list.len(), 2);
+        assert_eq!(list[0], BackendSpec { id: "a".into(), addr: "127.0.0.1:7001".into() });
+        assert!(parse_backends_file("[backends]\n").is_err(), "empty table rejected");
+        assert!(parse_backends_file("[nodes]\na = \"x:1\"\n").is_err(), "wrong table rejected");
+        assert!(parse_backends_file("[backends]\na = 7\n").is_err(), "non-string rejected");
+    }
+}

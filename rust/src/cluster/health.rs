@@ -1,0 +1,193 @@
+//! Backend health tracking: periodic `/healthz` probes with a
+//! consecutive-failure threshold.
+//!
+//! A backend starts healthy (the operator listed it; routing must work
+//! before the first probe lands) and becomes unhealthy after
+//! `failure_threshold` consecutive probe failures — one flaky probe on
+//! a loaded node must not trigger a placement storm. A single
+//! successful probe restores it. Draining is an *operator* state, set
+//! by `POST /v1/cluster/backends/{id}/drain`, orthogonal to health:
+//! both exclude a backend from new placements, but only draining
+//! triggers the warm-start hand-off.
+
+use super::backend::{self, BackendSpec};
+use std::sync::atomic::{AtomicBool, AtomicU32, AtomicU64, Ordering};
+use std::sync::Arc;
+use std::time::Duration;
+
+/// Probe cadence and failure tolerance.
+#[derive(Clone, Copy, Debug)]
+pub struct HealthConfig {
+    /// Time between probe rounds.
+    pub interval: Duration,
+    /// Per-probe connect/read timeout.
+    pub timeout: Duration,
+    /// Consecutive failures before a backend is marked unhealthy.
+    pub failure_threshold: u32,
+}
+
+impl Default for HealthConfig {
+    fn default() -> Self {
+        Self {
+            interval: Duration::from_millis(500),
+            timeout: Duration::from_secs(2),
+            failure_threshold: 3,
+        }
+    }
+}
+
+/// Live state of one backend, shared between the prober, the router's
+/// placement path and the topology endpoint.
+#[derive(Debug)]
+pub struct BackendState {
+    pub spec: BackendSpec,
+    healthy: AtomicBool,
+    draining: AtomicBool,
+    consecutive_failures: AtomicU32,
+    /// Total probes sent / failed (topology view).
+    pub probes: AtomicU64,
+    pub probe_failures: AtomicU64,
+    /// Jobs the router placed here.
+    pub placed: AtomicU64,
+}
+
+impl BackendState {
+    pub fn new(spec: BackendSpec) -> Self {
+        Self {
+            spec,
+            healthy: AtomicBool::new(true),
+            draining: AtomicBool::new(false),
+            consecutive_failures: AtomicU32::new(0),
+            probes: AtomicU64::new(0),
+            probe_failures: AtomicU64::new(0),
+            placed: AtomicU64::new(0),
+        }
+    }
+
+    pub fn healthy(&self) -> bool {
+        self.healthy.load(Ordering::Relaxed)
+    }
+
+    pub fn draining(&self) -> bool {
+        self.draining.load(Ordering::Relaxed)
+    }
+
+    pub fn set_draining(&self, on: bool) {
+        self.draining.store(on, Ordering::Relaxed);
+    }
+
+    /// Eligible for *new* placements.
+    pub fn placeable(&self) -> bool {
+        self.healthy() && !self.draining()
+    }
+
+    pub fn consecutive_failures(&self) -> u32 {
+        self.consecutive_failures.load(Ordering::Relaxed)
+    }
+
+    /// Record one probe outcome, flipping health at the threshold.
+    pub fn record_probe(&self, ok: bool, threshold: u32) {
+        self.probes.fetch_add(1, Ordering::Relaxed);
+        if ok {
+            self.consecutive_failures.store(0, Ordering::Relaxed);
+            self.healthy.store(true, Ordering::Relaxed);
+        } else {
+            self.probe_failures.fetch_add(1, Ordering::Relaxed);
+            let failures = self.consecutive_failures.fetch_add(1, Ordering::Relaxed) + 1;
+            if failures >= threshold.max(1) {
+                self.healthy.store(false, Ordering::Relaxed);
+            }
+        }
+    }
+}
+
+/// Probe one backend's `/healthz` once.
+pub fn probe(state: &BackendState, config: &HealthConfig) {
+    let ok = backend::request(&state.spec.addr, "GET", "/healthz", &[], None, config.timeout)
+        .map(|reply| reply.status == 200)
+        .unwrap_or(false);
+    state.record_probe(ok, config.failure_threshold);
+}
+
+/// Spawn the prober thread: probes every backend each `interval` until
+/// `stop` (checked between short sleeps, so shutdown is prompt).
+pub fn spawn_prober(
+    backends: Arc<Vec<Arc<BackendState>>>,
+    config: HealthConfig,
+    stop: Arc<AtomicBool>,
+) -> std::thread::JoinHandle<()> {
+    std::thread::Builder::new()
+        .name("flexa-cluster-health".to_string())
+        .spawn(move || {
+            while !stop.load(Ordering::Relaxed) {
+                for b in backends.iter() {
+                    if stop.load(Ordering::Relaxed) {
+                        return;
+                    }
+                    probe(b, &config);
+                }
+                let mut waited = Duration::ZERO;
+                while waited < config.interval && !stop.load(Ordering::Relaxed) {
+                    let step = Duration::from_millis(25).min(config.interval - waited);
+                    std::thread::sleep(step);
+                    waited += step;
+                }
+            }
+        })
+        .expect("spawn cluster health prober")
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn state() -> BackendState {
+        BackendState::new(BackendSpec { id: "a".into(), addr: "127.0.0.1:1".into() })
+    }
+
+    /// Health flips only at the consecutive-failure threshold, and one
+    /// success restores it (and resets the failure streak).
+    #[test]
+    fn threshold_and_recovery_semantics() {
+        let b = state();
+        assert!(b.healthy(), "listed backends start healthy");
+        b.record_probe(false, 3);
+        b.record_probe(false, 3);
+        assert!(b.healthy(), "below threshold stays healthy");
+        b.record_probe(false, 3);
+        assert!(!b.healthy(), "threshold reached");
+        b.record_probe(true, 3);
+        assert!(b.healthy(), "one success restores");
+        assert_eq!(b.consecutive_failures(), 0);
+        b.record_probe(false, 3);
+        assert!(b.healthy(), "streak restarted from zero");
+        assert_eq!(b.probes.load(Ordering::Relaxed), 5);
+        assert_eq!(b.probe_failures.load(Ordering::Relaxed), 4);
+    }
+
+    /// Draining is orthogonal to health: a draining backend can be
+    /// healthy yet not placeable.
+    #[test]
+    fn draining_excludes_from_placement_without_touching_health() {
+        let b = state();
+        b.set_draining(true);
+        assert!(b.healthy() && !b.placeable());
+        b.set_draining(false);
+        assert!(b.placeable());
+    }
+
+    /// A real probe against a dead port records a failure (port 1 on
+    /// loopback refuses instantly).
+    #[test]
+    fn probe_against_refused_port_counts_a_failure() {
+        let b = state();
+        let cfg = HealthConfig {
+            timeout: Duration::from_millis(300),
+            failure_threshold: 1,
+            ..HealthConfig::default()
+        };
+        probe(&b, &cfg);
+        assert!(!b.healthy());
+        assert_eq!(b.probe_failures.load(Ordering::Relaxed), 1);
+    }
+}

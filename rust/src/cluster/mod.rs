@@ -1,0 +1,46 @@
+//! `flexa::cluster` — a std-only router/coordinator in front of N
+//! `flexa serve --http` backends.
+//!
+//! ```text
+//!                         ┌────────────────────────┐
+//!   clients ── HTTP ────▶ │  flexa cluster (router) │
+//!                         │  ring ▪ health ▪ split  │
+//!                         └───┬─────────┬─────────┬─┘
+//!                             ▼         ▼         ▼
+//!                         backend a  backend b  backend c
+//!                         (serve --http, warm-start caches)
+//! ```
+//!
+//! The router owns no solver state. It places `POST /v1/jobs` on a
+//! consistent-hash [`ring::Ring`] keyed by the job's *warm-start
+//! fingerprint* — the same λ-excluded FNV-1a key the backend cache
+//! uses — so every λ of a regularization-path sweep lands on the node
+//! that already holds the sweep's cached iterate. Job status, SSE event
+//! streams and cancellation proxy to the owning backend with the
+//! router's job id substituted for the backend's.
+//!
+//! [`health`] probes `/healthz` on a cadence and stops placing on a
+//! backend after a consecutive-failure threshold; a drain
+//! (`POST /v1/cluster/backends/{id}/drain`) additionally hands the
+//! backend's warm-start snapshot to its ring successors so sweeps
+//! continue warm elsewhere. `/metrics` sums every backend's series and
+//! appends router-level `flexa_cluster_*` families.
+//!
+//! Jobs above a size threshold take the [`split`] path instead of
+//! placement: the router runs the outer ADMM consensus loop from the
+//! paper's block-splitting formulation, backends solve the per-block
+//! subproblems as ordinary `admm-step` jobs on full replicated state,
+//! and the merged trajectory is bit-identical to a single-node
+//! [`crate::algos::admm::Admm`] run (§"bit-exact split" in the tests).
+
+pub mod backend;
+pub mod health;
+pub mod ring;
+pub mod router;
+pub mod split;
+
+pub use backend::{parse_backend_arg, parse_backends_file, BackendSpec};
+pub use health::{BackendState, HealthConfig};
+pub use ring::Ring;
+pub use router::{ClusterConfig, ClusterServer, ClusterState, SpawnedCluster};
+pub use split::{SplitConfig, SplitJob, SplitPlan};

@@ -1,0 +1,202 @@
+//! Consistent-hash ring mapping warm-start fingerprints to backends.
+//!
+//! Each backend contributes `replicas` virtual points, hashed from
+//! `"{id}/{replica}"` with the same FNV-1a the warm-start cache keys use.
+//! A key is placed on the first point clockwise from the key's hash
+//! whose backend is eligible (healthy, not draining). Because a
+//! backend's points depend only on its own id, removing one backend
+//! remaps *only the keys that lived on it* — every other key keeps its
+//! placement, which is exactly the property that keeps λ-sweep cache
+//! affinity intact across membership changes (pinned by the property
+//! tests below).
+
+use crate::serve::cache::Fnv;
+
+/// Hash of one virtual point: FNV-1a over `"{id}/{replica}"`.
+fn point_hash(id: &str, replica: usize) -> u64 {
+    let mut h = Fnv::new();
+    h.write(id.as_bytes());
+    h.write(b"/");
+    h.write(&(replica as u64).to_le_bytes());
+    h.finish()
+}
+
+/// The ring: sorted virtual points, each owned by a backend index.
+#[derive(Clone, Debug)]
+pub struct Ring {
+    /// `(point hash, backend index)`, sorted by hash.
+    points: Vec<(u64, usize)>,
+    backends: usize,
+}
+
+impl Ring {
+    /// Build from backend ids (indices into the caller's backend list).
+    /// `replicas` virtual points per backend smooth the key shares; 64
+    /// keeps the max/min share ratio near 1.3 for small clusters.
+    pub fn build(ids: &[String], replicas: usize) -> Self {
+        let replicas = replicas.max(1);
+        let mut points = Vec::with_capacity(ids.len() * replicas);
+        for (idx, id) in ids.iter().enumerate() {
+            for r in 0..replicas {
+                points.push((point_hash(id, r), idx));
+            }
+        }
+        // Ties (hash collisions across ids) resolve by backend index so
+        // the walk order is deterministic regardless of insertion order.
+        points.sort_unstable();
+        Self { points, backends: ids.len() }
+    }
+
+    /// Number of backends the ring was built over.
+    pub fn backends(&self) -> usize {
+        self.backends
+    }
+
+    /// Place `key` on the first eligible backend clockwise from the
+    /// key's position. `None` when no backend is eligible.
+    pub fn place(&self, key: u64, eligible: impl Fn(usize) -> bool) -> Option<usize> {
+        for &idx in self.order(key).iter() {
+            if eligible(idx) {
+                return Some(idx);
+            }
+        }
+        None
+    }
+
+    /// Distinct backends in successor order from `key`'s ring position —
+    /// element 0 is the primary owner, element 1 the first hand-off
+    /// target on drain, and so on.
+    pub fn order(&self, key: u64) -> Vec<usize> {
+        let mut out = Vec::with_capacity(self.backends);
+        if self.points.is_empty() {
+            return out;
+        }
+        let start = self.points.partition_point(|&(h, _)| h < key);
+        let n = self.points.len();
+        for i in 0..n {
+            let (_, idx) = self.points[(start + i) % n];
+            if !out.contains(&idx) {
+                out.push(idx);
+                if out.len() == self.backends {
+                    break;
+                }
+            }
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn ids(names: &[&str]) -> Vec<String> {
+        names.iter().map(|s| s.to_string()).collect()
+    }
+
+    /// Deterministic sample keys (no RNG in tests: placement must be a
+    /// pure function of the key anyway).
+    fn sample_keys(n: usize) -> Vec<u64> {
+        (0..n as u64)
+            .map(|i| {
+                let mut h = Fnv::new();
+                h.write(&i.to_le_bytes());
+                h.finish()
+            })
+            .collect()
+    }
+
+    /// Placement is a pure function of (membership, key): rebuilding the
+    /// ring — as a restarted router does — reproduces every placement.
+    #[test]
+    fn placement_is_deterministic_across_rebuilds() {
+        let names = ids(&["a", "b", "c", "d", "e"]);
+        let r1 = Ring::build(&names, 64);
+        let r2 = Ring::build(&names, 64);
+        for key in sample_keys(512) {
+            assert_eq!(r1.place(key, |_| true), r2.place(key, |_| true));
+            assert_eq!(r1.order(key), r2.order(key));
+        }
+    }
+
+    /// The consistency property the cluster depends on: removing one
+    /// backend remaps only that backend's keys (everything else stays
+    /// put), and the remapped share is close to the removed backend's
+    /// fair share of the keyspace.
+    #[test]
+    fn removing_one_backend_remaps_only_its_keys() {
+        let all = ids(&["a", "b", "c", "d", "e"]);
+        let without_c: Vec<String> =
+            all.iter().filter(|s| *s != "c").cloned().collect();
+        let full = Ring::build(&all, 64);
+        let reduced = Ring::build(&without_c, 64);
+        let keys = sample_keys(4000);
+
+        let removed = 2; // index of "c" in `all`
+        let mut moved = 0usize;
+        let mut on_removed = 0usize;
+        for &key in &keys {
+            let before = full.place(key, |_| true).unwrap();
+            let after_names =
+                reduced.place(key, |_| true).map(|i| without_c[i].clone()).unwrap();
+            if before == removed {
+                on_removed += 1;
+                // Keys from the removed backend land on its ring
+                // successor — the same backend an eligibility filter
+                // (drain) would pick on the full ring.
+                let successor = full.place(key, |i| i != removed).unwrap();
+                assert_eq!(after_names, all[successor], "key {key:#x}");
+            } else {
+                // Every other key keeps its backend.
+                assert_eq!(after_names, all[before], "key {key:#x} moved needlessly");
+            }
+            if all[before] != after_names {
+                moved += 1;
+            }
+        }
+        assert_eq!(moved, on_removed, "only the removed backend's keys move");
+        // Fair share is 1/5 of the keys; virtual nodes keep the actual
+        // share within a factor-2 slack band.
+        let share = on_removed as f64 / keys.len() as f64;
+        assert!(
+            share > 0.5 / all.len() as f64 && share < 2.0 / all.len() as f64,
+            "removed backend held {share:.3} of the keyspace"
+        );
+    }
+
+    /// All backends get a non-trivial share of the keyspace.
+    #[test]
+    fn shares_are_roughly_balanced() {
+        let names = ids(&["a", "b", "c", "d"]);
+        let ring = Ring::build(&names, 64);
+        let keys = sample_keys(4000);
+        let mut counts = vec![0usize; names.len()];
+        for &key in &keys {
+            counts[ring.place(key, |_| true).unwrap()] += 1;
+        }
+        for (i, &c) in counts.iter().enumerate() {
+            let share = c as f64 / keys.len() as f64;
+            assert!(
+                share > 0.5 / names.len() as f64 && share < 2.0 / names.len() as f64,
+                "backend {i} holds {share:.3}"
+            );
+        }
+    }
+
+    /// `place` with an eligibility filter walks successors: draining or
+    /// unhealthy backends are skipped, and with nothing eligible the
+    /// placement is `None`.
+    #[test]
+    fn eligibility_filter_walks_successors() {
+        let names = ids(&["a", "b", "c"]);
+        let ring = Ring::build(&names, 32);
+        for key in sample_keys(64) {
+            let order = ring.order(key);
+            assert_eq!(order.len(), 3);
+            let primary = order[0];
+            assert_eq!(ring.place(key, |_| true), Some(primary));
+            assert_eq!(ring.place(key, |i| i != primary), Some(order[1]));
+            assert_eq!(ring.place(key, |_| false), None);
+        }
+    }
+}

@@ -1,0 +1,546 @@
+//! Split-mode ADMM: one big job executed across several backends as a
+//! consensus solve, with the router running the outer loop.
+//!
+//! For an `admm` job whose column count clears the split threshold, the
+//! router keeps the consensus state `[x; z; u]` and, each outer
+//! iteration, ships it to `P` backends as ordinary `admm-step` jobs
+//! (`steps = 1`). Backend `j` owns the contiguous column block
+//! `⌊jn/P⌋..⌊(j+1)n/P⌋`; the router merges the returned states by
+//! taking each owner's block from each of the three state segments.
+//! Because every backend advances the state with the *same*
+//! [`AdmmCore`](crate::algos::admm) arithmetic from the same input, the
+//! per-block contributions agree bit for bit, so the merged trajectory
+//! — and the final iterate — is bit-identical to a single-node
+//! [`Admm`](crate::algos::admm::Admm) run of the same length (pinned by
+//! `tests/cluster.rs`).
+//!
+//! The proc count is chosen with the BSP [`CostModel`]: the x-update's
+//! matvec work parallelizes across blocks while the consensus exchange
+//! pays an allreduce of the packed `3n`-float state, so small problems
+//! stay on one node (the allreduce dominates) and only genuinely large
+//! jobs split — the paper's splitting-threshold logic applied at the
+//! cluster level.
+
+use super::backend::{self, BackendSpec};
+use crate::algos::admm::{AdmmOptions, AdmmStep};
+use crate::api::ProblemSpec;
+use crate::coordinator::CostModel;
+use crate::serve::jobfile::{esc, num, outcome_fields, Json};
+use crate::serve::scheduler::{JobOutcome, JobState, JobStatus, JobSpec, JobProblem};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{Arc, Mutex};
+use std::time::Duration;
+
+/// Split-mode knobs.
+#[derive(Clone, Copy, Debug)]
+pub struct SplitConfig {
+    /// Columns at/above which an `admm` job is considered for splitting.
+    pub threshold_cols: usize,
+    /// Safety cap on outer iterations (a split job runs
+    /// `min(max_iters, max_outer)` consensus rounds).
+    pub max_outer: usize,
+    /// Per-request timeout when talking to backends.
+    pub subjob_timeout: Duration,
+    /// Delay between status polls on outstanding subjobs.
+    pub poll_interval: Duration,
+}
+
+impl Default for SplitConfig {
+    fn default() -> Self {
+        Self {
+            threshold_cols: 4096,
+            max_outer: 500,
+            subjob_timeout: Duration::from_secs(30),
+            poll_interval: Duration::from_millis(10),
+        }
+    }
+}
+
+/// What the split path needs from a parsed job, when eligible: the
+/// registry problem spec, the penalty ρ (job params, else the ADMM
+/// default) and the outer iteration count.
+pub struct SplitPlan {
+    pub spec: ProblemSpec,
+    pub rho: f64,
+    pub outer_iters: usize,
+    pub procs: usize,
+}
+
+/// Decide whether a parsed job should split, and into how many parts.
+/// `None` keeps the job on the ordinary consistent-hash path: only
+/// registry-built `admm` jobs at/above the column threshold split, and
+/// only when the cost model says ≥ 2 backends actually pay off.
+pub fn plan(job: &JobSpec, placeable_backends: usize, config: &SplitConfig) -> Option<SplitPlan> {
+    if job.solver.name != "admm" || placeable_backends < 2 {
+        return None;
+    }
+    let JobProblem::Spec(spec) = &job.problem else {
+        return None;
+    };
+    if spec.cols < config.threshold_cols.max(1) {
+        return None;
+    }
+    let procs = split_procs(spec.rows, spec.cols, placeable_backends);
+    if procs < 2 {
+        return None;
+    }
+    let rho = job
+        .solver
+        .params
+        .iter()
+        .find(|(k, _)| k == "rho")
+        .map(|(_, v)| *v)
+        .unwrap_or(AdmmOptions::default().rho);
+    Some(SplitPlan {
+        spec: spec.clone(),
+        rho,
+        outer_iters: job.opts.max_iters.min(config.max_outer).max(1),
+        procs,
+    })
+}
+
+/// BSP-optimal proc count for one ADMM iteration of an `rows × cols`
+/// problem: the block-parallel phase is the two dense matvecs
+/// (~4·rows·cols flops at a nominal 1 GF/s core), the serial phase is
+/// the n-sized shrinkage/dual update, and each consensus round
+/// allreduces the packed `3n`-float state.
+pub fn split_procs(rows: usize, cols: usize, max_procs: usize) -> usize {
+    let parallel_s = 4.0 * rows as f64 * cols as f64 / 1e9;
+    let serial_s = 4.0 * cols as f64 / 1e9;
+    let reduce_bytes = 3 * cols * 8;
+    let mut best = (1, CostModel::serial().iter_time(parallel_s, serial_s, 0));
+    for p in 2..=max_procs.max(1) {
+        let t = CostModel::mpi_node(p).iter_time(parallel_s, serial_s, reduce_bytes);
+        if t < best.1 {
+            best = (p, t);
+        }
+    }
+    best.0
+}
+
+/// The contiguous column block backend `j` of `p` owns.
+pub fn block_range(n: usize, j: usize, p: usize) -> std::ops::Range<usize> {
+    (j * n / p)..((j + 1) * n / p)
+}
+
+enum Phase {
+    Queued,
+    Running,
+    Finished,
+}
+
+struct SplitInner {
+    phase: Phase,
+    outcome: Option<JobOutcome>,
+    x: Option<Arc<Vec<f64>>>,
+    /// `(SSE event name, JSON payload)` frames recorded so far.
+    events: Vec<(String, String)>,
+}
+
+/// One router-side split job: status snapshot + synthesized event log,
+/// shaped exactly like a scheduler job so clients can't tell the
+/// difference.
+pub struct SplitJob {
+    pub id: u64,
+    pub tag: String,
+    pub tenant: String,
+    pub problem: String,
+    pub procs: usize,
+    pub cancel: AtomicBool,
+    inner: Mutex<SplitInner>,
+}
+
+impl SplitJob {
+    pub fn new(id: u64, tag: String, tenant: String, problem: String, procs: usize) -> Self {
+        let queued = format!("{{\"event\":\"queued\",\"job\":{id},\"tag\":\"{}\"}}", esc(&tag));
+        Self {
+            id,
+            tag,
+            tenant,
+            problem,
+            procs,
+            cancel: AtomicBool::new(false),
+            inner: Mutex::new(SplitInner {
+                phase: Phase::Queued,
+                outcome: None,
+                x: None,
+                events: vec![("queued".to_string(), queued)],
+            }),
+        }
+    }
+
+    /// Status snapshot in the scheduler's shape, so the router can reuse
+    /// [`status_json`](crate::http::router::status_json) verbatim.
+    pub fn status(&self) -> JobStatus {
+        let inner = self.inner.lock().unwrap();
+        JobStatus {
+            job: self.id,
+            tag: self.tag.clone(),
+            tenant: self.tenant.clone(),
+            problem: self.problem.clone(),
+            solver: format!("admm-split/{}", self.procs),
+            state: match inner.phase {
+                Phase::Queued => JobState::Queued,
+                Phase::Running => JobState::Running,
+                Phase::Finished => JobState::Finished,
+            },
+            retries: 0,
+            outcome: inner.outcome.clone(),
+            x: inner.x.clone(),
+        }
+    }
+
+    pub fn finished(&self) -> bool {
+        matches!(self.inner.lock().unwrap().phase, Phase::Finished)
+    }
+
+    /// Recorded `(event name, JSON payload)` frames from `from` onward.
+    pub fn events_from(&self, from: usize) -> Vec<(String, String)> {
+        let inner = self.inner.lock().unwrap();
+        inner.events.get(from..).map(<[(String, String)]>::to_vec).unwrap_or_default()
+    }
+
+    /// Request cooperative cancellation; returns false once terminal.
+    pub fn request_cancel(&self) -> bool {
+        if self.finished() {
+            return false;
+        }
+        self.cancel.store(true, Ordering::Relaxed);
+        true
+    }
+
+    fn push_event(&self, name: &str, payload: String) {
+        self.inner.lock().unwrap().events.push((name.to_string(), payload));
+    }
+
+    fn finish(&self, outcome: JobOutcome, x: Option<Vec<f64>>) {
+        let finished = format!("{{\"event\":\"finished\",\"job\":{},{}}}", self.id, outcome_fields(&outcome));
+        let mut inner = self.inner.lock().unwrap();
+        inner.phase = Phase::Finished;
+        inner.outcome = Some(outcome);
+        inner.x = x.map(Arc::new);
+        inner.events.push(("finished".to_string(), finished));
+    }
+}
+
+/// Render the `admm-step` subjob line for one consensus round: the full
+/// problem spec spelled out field by field (floats in shortest
+/// round-trip form, so every backend rebuilds the *identical* problem)
+/// plus the packed `[x; z; u]` state as `x0`.
+fn subjob_line(spec: &ProblemSpec, rho: f64, state: &[f64], tag: &str) -> String {
+    let mut s = format!(
+        "{{\"problem\":\"{}\",\"rows\":{},\"cols\":{},\"sparsity\":{},\"c\":{},",
+        esc(&spec.kind),
+        spec.rows,
+        spec.cols,
+        num(spec.sparsity),
+        num(spec.c),
+    );
+    if let Some(lambda) = spec.lambda {
+        s.push_str(&format!("\"lambda\":{},", num(lambda)));
+    }
+    s.push_str(&format!(
+        "\"block_size\":{},\"seed\":{},\"label_noise\":{},",
+        spec.block_size,
+        spec.seed,
+        num(spec.label_noise),
+    ));
+    s.push_str(&format!(
+        "\"algo\":\"admm-step\",\"params\":{{\"rho\":{},\"steps\":1}},\"max_seconds\":600,\"warm_start\":false,\"tag\":\"{}\",\"x0\":[",
+        num(rho),
+        esc(tag),
+    ));
+    for (i, v) in state.iter().enumerate() {
+        if i > 0 {
+            s.push(',');
+        }
+        s.push_str(&num(*v));
+    }
+    s.push_str("]}");
+    s
+}
+
+/// Error type for one subjob exchange (carries the backend id for the
+/// failure message).
+fn subjob_err(backend: &BackendSpec, what: &str) -> String {
+    format!("split subjob on backend `{}` ({}): {what}", backend.id, backend.addr)
+}
+
+/// POST one subjob and poll it to completion; returns the packed state
+/// and the backend-reported objective `V(z)` at the new state.
+fn run_subjob(
+    target: &BackendSpec,
+    line: &str,
+    auth: &[(String, String)],
+    cancel: &AtomicBool,
+    config: &SplitConfig,
+) -> Result<(Vec<f64>, f64), String> {
+    let reply = backend::request(
+        &target.addr,
+        "POST",
+        "/v1/jobs",
+        auth,
+        Some(line.as_bytes()),
+        config.subjob_timeout,
+    )
+    .map_err(|e| subjob_err(target, &format!("submit failed: {e:#}")))?;
+    if reply.status != 202 {
+        return Err(subjob_err(
+            target,
+            &format!("submit rejected with {}: {}", reply.status, reply.body_str().trim()),
+        ));
+    }
+    let body = Json::parse(&reply.body_str())
+        .map_err(|e| subjob_err(target, &format!("bad submit response: {e:#}")))?;
+    let remote = body
+        .get("job")
+        .and_then(Json::as_f64)
+        .filter(|v| *v >= 0.0 && v.fract() == 0.0)
+        .ok_or_else(|| subjob_err(target, "submit response missing job id"))? as u64;
+
+    let path = format!("/v1/jobs/{remote}?x=1");
+    loop {
+        if cancel.load(Ordering::Relaxed) {
+            let _ = backend::request(
+                &target.addr,
+                "DELETE",
+                &format!("/v1/jobs/{remote}"),
+                auth,
+                None,
+                config.subjob_timeout,
+            );
+            return Err(subjob_err(target, "cancelled"));
+        }
+        let reply = backend::request(&target.addr, "GET", &path, auth, None, config.subjob_timeout)
+            .map_err(|e| subjob_err(target, &format!("status poll failed: {e:#}")))?;
+        if reply.status != 200 {
+            return Err(subjob_err(
+                target,
+                &format!("status poll got {}: {}", reply.status, reply.body_str().trim()),
+            ));
+        }
+        let status = Json::parse(&reply.body_str())
+            .map_err(|e| subjob_err(target, &format!("bad status JSON: {e:#}")))?;
+        if status.get("state").and_then(Json::as_str) != Some("finished") {
+            std::thread::sleep(config.poll_interval);
+            continue;
+        }
+        match status.get("outcome").and_then(Json::as_str) {
+            Some("done") => {}
+            other => {
+                let detail = status.get("error").and_then(Json::as_str).unwrap_or("");
+                return Err(subjob_err(
+                    target,
+                    &format!("subjob ended `{}` {detail}", other.unwrap_or("?")),
+                ));
+            }
+        }
+        let objective = status
+            .get("objective")
+            .and_then(Json::as_f64)
+            .ok_or_else(|| subjob_err(target, "finished status carries no objective"))?;
+        let Some(Json::Arr(xs)) = status.get("x") else {
+            return Err(subjob_err(target, "finished status carries no x"));
+        };
+        let mut state = Vec::with_capacity(xs.len());
+        for v in xs {
+            match v.as_f64() {
+                Some(f) => state.push(f),
+                None => return Err(subjob_err(target, "non-numeric entry in x")),
+            }
+        }
+        return Ok((state, objective));
+    }
+}
+
+/// Drive one split job to completion (blocking; the router spawns this
+/// on its own thread). `targets` are the chosen backends in block-owner
+/// order; `auth` is the pass-through identity (`Authorization` etc.) so
+/// subjobs land under the submitting tenant.
+pub fn drive(
+    job: &SplitJob,
+    targets: &[BackendSpec],
+    plan: &SplitPlan,
+    x0: Option<&[f64]>,
+    auth: &[(String, String)],
+    config: &SplitConfig,
+) {
+    let n = plan.spec.cols;
+    let p = targets.len();
+    {
+        let mut inner = job.inner.lock().unwrap();
+        inner.phase = Phase::Running;
+    }
+    job.push_event(
+        "started",
+        format!(
+            "{{\"event\":\"split-started\",\"job\":{},\"procs\":{p},\"outer\":{}}}",
+            job.id, plan.outer_iters
+        ),
+    );
+
+    let mut state = AdmmStep::initial_state(n, x0);
+    let mut completed = 0usize;
+    let mut objective = f64::NAN;
+    for k in 0..plan.outer_iters {
+        if job.cancel.load(Ordering::Relaxed) {
+            job.finish(JobOutcome::Cancelled { iterations: completed }, None);
+            return;
+        }
+        // Fan the full state out; every backend advances it one exact
+        // iteration with the shared AdmmCore arithmetic.
+        let mut results: Vec<Option<Vec<f64>>> = (0..p).map(|_| None).collect();
+        let round: Vec<Result<(usize, Vec<f64>, f64), String>> = std::thread::scope(|scope| {
+            let handles: Vec<_> = targets
+                .iter()
+                .enumerate()
+                .map(|(j, target)| {
+                    let line =
+                        subjob_line(&plan.spec, plan.rho, &state, &format!("{}:r{k}b{j}", job.tag));
+                    scope.spawn(move || {
+                        run_subjob(target, &line, auth, &job.cancel, config)
+                            .map(|(s, obj)| (j, s, obj))
+                    })
+                })
+                .collect();
+            handles.into_iter().map(|h| h.join().expect("subjob thread panicked")).collect()
+        });
+        for item in round {
+            match item {
+                Ok((j, s, obj)) => {
+                    if s.len() != 3 * n {
+                        job.finish(
+                            JobOutcome::Failed {
+                                error: format!(
+                                    "split round {k}: backend `{}` returned state of length {} (want {})",
+                                    targets[j].id, s.len(), 3 * n
+                                ),
+                            },
+                            None,
+                        );
+                        return;
+                    }
+                    // Block owner 0's report is the canonical one; all
+                    // replicas agree bit for bit anyway.
+                    if j == 0 {
+                        objective = obj;
+                    }
+                    results[j] = Some(s);
+                }
+                Err(e) => {
+                    if job.cancel.load(Ordering::Relaxed) {
+                        job.finish(JobOutcome::Cancelled { iterations: completed }, None);
+                    } else {
+                        job.finish(JobOutcome::Failed { error: format!("split round {k}: {e}") }, None);
+                    }
+                    return;
+                }
+            }
+        }
+        // Consensus merge: owner j contributes its column block of each
+        // of the x / z / u segments.
+        let mut next = vec![0.0; 3 * n];
+        for (j, result) in results.iter().enumerate() {
+            let part = result.as_ref().expect("all rounds resolved");
+            for seg in 0..3 {
+                let range = block_range(n, j, p);
+                let (lo, hi) = (seg * n + range.start, seg * n + range.end);
+                next[lo..hi].copy_from_slice(&part[lo..hi]);
+            }
+        }
+        state = next;
+        completed = k + 1;
+        job.push_event(
+            "outer",
+            format!("{{\"event\":\"outer\",\"job\":{},\"iter\":{k},\"rounds\":{p}}}", job.id),
+        );
+    }
+
+    // Final iterate is the consensus variable z (matches Admm::solve,
+    // which reports x = z); the objective is the backends' V(z) from
+    // the last round — the subjob computed it at exactly this state.
+    job.finish(
+        JobOutcome::Done {
+            converged: false,
+            objective,
+            iterations: completed,
+            warm_started: false,
+        },
+        Some(state[n..2 * n].to_vec()),
+    );
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::api::SolverSpec;
+
+    #[test]
+    fn block_ranges_tile_the_column_space() {
+        for &(n, p) in &[(10usize, 3usize), (7, 2), (64, 5), (5, 5)] {
+            let mut covered = 0;
+            for j in 0..p {
+                let r = block_range(n, j, p);
+                assert_eq!(r.start, covered, "blocks must be contiguous");
+                covered = r.end;
+            }
+            assert_eq!(covered, n, "blocks must cover all columns");
+        }
+    }
+
+    #[test]
+    fn small_problems_stay_on_one_node() {
+        // 200×500: allreduce of the 3n state dwarfs the parallel phase.
+        assert_eq!(split_procs(200, 500, 8), 1);
+        // 5000×20000: matvec work dominates, splitting pays.
+        assert!(split_procs(5000, 20000, 8) >= 2);
+    }
+
+    #[test]
+    fn plan_gates_on_solver_problem_and_threshold() {
+        let config = SplitConfig { threshold_cols: 1000, ..SplitConfig::default() };
+        let spec = ProblemSpec { rows: 5000, cols: 20000, ..ProblemSpec::default() };
+        let mk = |name: &str, spec: &ProblemSpec| {
+            JobSpec::new(spec.clone(), SolverSpec { name: name.into(), ..SolverSpec::default() })
+        };
+        assert!(plan(&mk("admm", &spec), 4, &config).is_some());
+        assert!(plan(&mk("fpa", &spec), 4, &config).is_none(), "only admm splits");
+        assert!(plan(&mk("admm", &spec), 1, &config).is_none(), "needs ≥ 2 backends");
+        let small = ProblemSpec { cols: 999, ..spec.clone() };
+        assert!(plan(&mk("admm", &small), 4, &config).is_none(), "below threshold");
+        let planned = plan(&mk("admm", &spec), 4, &config).unwrap();
+        assert!(planned.procs >= 2 && planned.procs <= 4);
+        assert_eq!(planned.rho, AdmmOptions::default().rho);
+    }
+
+    #[test]
+    fn subjob_line_round_trips_through_the_jobfile_parser() {
+        let spec = ProblemSpec { rows: 12, cols: 4, lambda: Some(0.37), ..ProblemSpec::default() };
+        let state = vec![0.5, -1.25, 3.0, 0.0, 1.0, 2.0, -0.5, 0.25, 0.125, 7.0, -3.5, 0.75];
+        let line = subjob_line(&spec, 0.8, &state, "t:r0b1");
+        let parsed = crate::serve::jobfile::parse_job_line(&line).unwrap();
+        let JobProblem::Spec(ps) = &parsed.problem else { panic!("spec problem") };
+        assert_eq!((ps.rows, ps.cols, ps.lambda), (12, 4, Some(0.37)));
+        assert_eq!(parsed.solver.name, "admm-step");
+        assert_eq!(parsed.opts.x0.as_deref(), Some(state.as_slice()), "x0 must be bit-exact");
+        assert!(!parsed.warm_start, "subjobs must not touch the warm-start cache");
+        assert_eq!(parsed.tag, "t:r0b1");
+    }
+
+    #[test]
+    fn split_job_lifecycle_and_events() {
+        let job = SplitJob::new(7, "big".into(), "default".into(), "lasso".into(), 3);
+        assert!(matches!(job.status().state, JobState::Queued));
+        assert_eq!(job.events_from(0).len(), 1);
+        assert!(job.request_cancel(), "live jobs accept cancellation");
+        job.finish(JobOutcome::Cancelled { iterations: 2 }, None);
+        assert!(job.finished());
+        assert!(!job.request_cancel(), "terminal jobs refuse cancellation");
+        let events = job.events_from(0);
+        assert_eq!(events.last().unwrap().0, "finished");
+        assert!(events.last().unwrap().1.contains("\"outcome\":\"cancelled\""));
+        let status = job.status();
+        assert_eq!(status.solver, "admm-split/3");
+        assert!(matches!(status.outcome, Some(JobOutcome::Cancelled { iterations: 2 })));
+    }
+}

@@ -21,6 +21,8 @@ pub struct HttpMetrics {
     pub get_events: AtomicU64,
     pub delete_job: AtomicU64,
     pub get_registry: AtomicU64,
+    /// `GET`/`POST /v1/cache/snapshot` (cluster drain handoff).
+    pub cache_snapshot: AtomicU64,
     pub healthz: AtomicU64,
     pub metrics: AtomicU64,
     /// Requests that matched no route (404s).
@@ -33,7 +35,7 @@ pub struct HttpMetrics {
 
 impl HttpMetrics {
     /// `(label, count)` per endpoint, for the labeled request family.
-    fn endpoint_counts(&self) -> [(&'static str, u64); 8] {
+    fn endpoint_counts(&self) -> [(&'static str, u64); 9] {
         let get = |c: &AtomicU64| c.load(Ordering::Relaxed);
         [
             ("post_jobs", get(&self.post_jobs)),
@@ -41,6 +43,7 @@ impl HttpMetrics {
             ("get_events", get(&self.get_events)),
             ("delete_job", get(&self.delete_job)),
             ("get_registry", get(&self.get_registry)),
+            ("cache_snapshot", get(&self.cache_snapshot)),
             ("healthz", get(&self.healthz)),
             ("metrics", get(&self.metrics)),
             ("not_found", get(&self.not_found)),

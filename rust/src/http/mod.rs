@@ -35,10 +35,13 @@
 //!   [`crate::tenant::TenantRegistry`] (`401` unknown token, `403`
 //!   disabled tenant); credential-less requests run under the `default`
 //!   tenant while it is enabled.
-//! * **Observability** — every request gets a monotonic id echoed as
+//! * **Observability** — every request gets an id echoed as
 //!   `x-flexa-request-id` plus one structured JSON access-log line on
 //!   stderr (method, path, status, tenant, duration); `/metrics` adds
-//!   per-tenant counters and warm-start store gauges.
+//!   per-tenant counters and warm-start store gauges. A well-formed
+//!   incoming `x-flexa-request-id` (e.g. from the cluster router) is
+//!   adopted instead of minting a fresh one, so a proxied request keeps
+//!   one id end to end; otherwise ids come from a monotonic counter.
 //! * **Bounded everything** — connections (semaphore), request head and
 //!   body bytes (`413`/`431`), per-job SSE replay logs, finished-job
 //!   status retention.
@@ -130,14 +133,16 @@ impl ServerState {
         )
     }
 
-    /// One structured access-log line per request, on stderr.
-    fn access_log(&self, request: u64, method: &str, path: &str, status: u16, tenant: &str, started: Instant) {
+    /// One structured access-log line per request, on stderr. The id is
+    /// logged as a JSON string: pass-through ids need not be numeric.
+    fn access_log(&self, request: &str, method: &str, path: &str, status: u16, tenant: &str, started: Instant) {
         if !self.config.access_log {
             return;
         }
         use crate::serve::jobfile::esc;
         eprintln!(
-            "{{\"request\":{request},\"method\":\"{}\",\"path\":\"{}\",\"status\":{status},\"tenant\":\"{}\",\"duration_ms\":{:.3}}}",
+            "{{\"request\":\"{}\",\"method\":\"{}\",\"path\":\"{}\",\"status\":{status},\"tenant\":\"{}\",\"duration_ms\":{:.3}}}",
+            esc(request),
             esc(method),
             esc(path),
             esc(tenant),
@@ -339,18 +344,18 @@ fn handle_connection(stream: TcpStream, state: &Arc<ServerState>, stop: &AtomicB
             Ok(None) => return, // clean close or shutdown
             Ok(Some(req)) => {
                 served += 1;
-                let req_id = state.request_seq.fetch_add(1, Ordering::Relaxed) + 1;
+                let req_id = request_id(state, &req);
                 let t0 = Instant::now();
                 let tenant = router::tenant_label(state, &req);
                 match router::route(state, &req) {
                     Routed::Response(resp) => {
-                        let resp = resp.with_header("x-flexa-request-id", req_id.to_string());
+                        let resp = resp.with_header("x-flexa-request-id", req_id.clone());
                         if resp.status >= 400 {
                             state.http_metrics.errors.fetch_add(1, Ordering::Relaxed);
                         }
                         let keep_alive = req.keep_alive && resp.status < 400;
                         let wrote = resp.write_to(&mut writer, keep_alive).is_ok();
-                        state.access_log(req_id, &req.method, &req.path, resp.status, &tenant, t0);
+                        state.access_log(&req_id, &req.method, &req.path, resp.status, &tenant, t0);
                         if !wrote || !keep_alive {
                             return;
                         }
@@ -365,18 +370,19 @@ fn handle_connection(stream: TcpStream, state: &Arc<ServerState>, stop: &AtomicB
                         }
                         // Logged when the stream ends so the duration
                         // covers the whole subscription.
-                        state.access_log(req_id, &req.method, &req.path, 200, &tenant, t0);
+                        state.access_log(&req_id, &req.method, &req.path, 200, &tenant, t0);
                         return; // SSE always ends the connection
                     }
                 }
             }
             Err(e) => {
-                let req_id = state.request_seq.fetch_add(1, Ordering::Relaxed) + 1;
+                let req_id =
+                    (state.request_seq.fetch_add(1, Ordering::Relaxed) + 1).to_string();
                 state.http_metrics.errors.fetch_add(1, Ordering::Relaxed);
                 let _ = Response::error(e.status, &e.message)
-                    .with_header("x-flexa-request-id", req_id.to_string())
+                    .with_header("x-flexa-request-id", req_id.clone())
                     .write_to(&mut writer, false);
-                state.access_log(req_id, "-", "-", e.status, "-", Instant::now());
+                state.access_log(&req_id, "-", "-", e.status, "-", Instant::now());
                 // Drain what the client already sent (e.g. a refused
                 // oversized body): closing with unread bytes in the
                 // receive buffer would RST the error response out of the
@@ -386,6 +392,26 @@ fn handle_connection(stream: TcpStream, state: &Arc<ServerState>, stop: &AtomicB
             }
         }
     }
+}
+
+/// The id stamped on a request: a well-formed incoming
+/// `x-flexa-request-id` is adopted verbatim (the cluster router sets one
+/// so a proxied request carries a single id through router and backend
+/// logs); anything absent, overlong or containing header-unsafe bytes
+/// falls back to the next value of the monotonic counter.
+fn request_id(state: &ServerState, req: &parser::Request) -> String {
+    if let Some(incoming) = req.header("x-flexa-request-id") {
+        let t = incoming.trim();
+        let well_formed = !t.is_empty()
+            && t.len() <= 64
+            && t.bytes().all(|b| {
+                b.is_ascii_alphanumeric() || b == b'-' || b == b'_' || b == b'.' || b == b':'
+            });
+        if well_formed {
+            return t.to_string();
+        }
+    }
+    (state.request_seq.fetch_add(1, Ordering::Relaxed) + 1).to_string()
 }
 
 /// Discard whatever the peer has already sent, stopping at EOF, the

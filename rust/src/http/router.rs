@@ -7,8 +7,15 @@
 //! | GET    | `/v1/jobs/{id}/events` | SSE lifecycle stream                      |
 //! | DELETE | `/v1/jobs/{id}`        | cooperative cancellation                  |
 //! | GET    | `/v1/registry`         | registered problems/solvers               |
+//! | GET    | `/v1/cache/snapshot`   | warm-start cache export (drain handoff)   |
+//! | POST   | `/v1/cache/snapshot`   | warm-start cache import                   |
 //! | GET    | `/healthz`             | liveness                                  |
 //! | GET    | `/metrics`             | Prometheus text format                    |
+//!
+//! Job visibility is tenant-scoped: `GET`/`DELETE /v1/jobs/{id}` and the
+//! SSE stream resolve the requesting tenant first and answer `404` for
+//! jobs owned by anyone else — the same `404` an unknown id gets, so ids
+//! cannot be probed across tenants.
 //!
 //! The POST body is exactly one [`crate::serve::jobfile`] job object
 //! (the same grammar as a JSONL line). Submission never blocks a
@@ -31,9 +38,9 @@
 use super::sse::Subscription;
 use super::ServerState;
 use crate::http::parser::Request;
-use crate::serve::jobfile::{esc, num, outcome_fields, parse_job_line};
+use crate::serve::jobfile::{esc, num, outcome_fields, parse_job_line, Json};
 use crate::serve::scheduler::{JobProblem, JobStatus, SubmitError};
-use crate::tenant::{Tenant, DEFAULT_TENANT};
+use crate::tenant::{advertised_retry_after_secs, Tenant, DEFAULT_TENANT};
 use std::io::Write;
 use std::sync::atomic::Ordering;
 
@@ -108,6 +115,8 @@ pub fn reason(status: u16) -> &'static str {
         431 => "Request Header Fields Too Large",
         500 => "Internal Server Error",
         501 => "Not Implemented",
+        502 => "Bad Gateway",
+        503 => "Service Unavailable",
         505 => "HTTP Version Not Supported",
         _ => "Response",
     }
@@ -147,9 +156,15 @@ pub fn route(state: &ServerState, req: &Request) -> Routed {
             m.get_job.fetch_add(1, Ordering::Relaxed);
             respond(match parse_id(*id) {
                 Err(r) => r,
-                Ok(id) => match state.scheduler.status(id) {
-                    Some(status) => Response::json(200, status_json(&status, req.query_flag("x"))),
-                    None => Response::error(404, &format!("no such job {id} (never submitted, or pruned)")),
+                Ok(id) => match visible_status(state, req, id) {
+                    Ok(Some(status)) => {
+                        Response::json(200, status_json(&status, req.query_flag("x")))
+                    }
+                    Ok(None) => Response::error(
+                        404,
+                        &format!("no such job {id} (never submitted, or pruned)"),
+                    ),
+                    Err(r) => r,
                 },
             })
         }
@@ -157,27 +172,42 @@ pub fn route(state: &ServerState, req: &Request) -> Routed {
             m.delete_job.fetch_add(1, Ordering::Relaxed);
             respond(match parse_id(*id) {
                 Err(r) => r,
-                Ok(id) => {
-                    if state.scheduler.cancel(id) {
+                Ok(id) => match visible_status(state, req, id) {
+                    Ok(Some(_)) if state.scheduler.cancel(id) => {
                         Response::json(200, format!("{{\"job\":{id},\"cancel\":\"requested\"}}"))
-                    } else {
-                        Response::error(404, &format!("no such job {id}"))
                     }
-                }
+                    Ok(_) => Response::error(404, &format!("no such job {id}")),
+                    Err(r) => r,
+                },
             })
         }
         ("GET", ["v1", "jobs", id, "events"]) => {
             m.get_events.fetch_add(1, Ordering::Relaxed);
             match parse_id(*id) {
                 Err(r) => respond(r),
-                Ok(id) => match state.hub.subscribe(id) {
-                    Some(sub) => Routed::EventStream(id, sub),
-                    None => respond(Response::error(
+                Ok(id) => match visible_status(state, req, id) {
+                    Ok(Some(_)) => match state.hub.subscribe(id) {
+                        Some(sub) => Routed::EventStream(id, sub),
+                        None => respond(Response::error(
+                            404,
+                            &format!("no event stream for job {id} (never submitted, or pruned)"),
+                        )),
+                    },
+                    Ok(None) => respond(Response::error(
                         404,
                         &format!("no event stream for job {id} (never submitted, or pruned)"),
                     )),
+                    Err(r) => respond(r),
                 },
             }
+        }
+        ("GET", ["v1", "cache", "snapshot"]) => {
+            m.cache_snapshot.fetch_add(1, Ordering::Relaxed);
+            respond(cache_snapshot_get(state, req))
+        }
+        ("POST", ["v1", "cache", "snapshot"]) => {
+            m.cache_snapshot.fetch_add(1, Ordering::Relaxed);
+            respond(cache_snapshot_post(state, req))
         }
         // Known paths with the wrong method get a 405 + Allow.
         (_, ["healthz"] | ["metrics"] | ["v1", "registry"]) => {
@@ -186,6 +216,7 @@ pub fn route(state: &ServerState, req: &Request) -> Routed {
         (_, ["v1", "jobs"]) => respond(method_not_allowed("POST")),
         (_, ["v1", "jobs", _]) => respond(method_not_allowed("GET, DELETE")),
         (_, ["v1", "jobs", _, "events"]) => respond(method_not_allowed("GET")),
+        (_, ["v1", "cache", "snapshot"]) => respond(method_not_allowed("GET, POST")),
         _ => {
             m.not_found.fetch_add(1, Ordering::Relaxed);
             respond(Response::error(404, &format!("no route for {} {}", req.method, req.path)))
@@ -233,6 +264,20 @@ pub fn tenant_label(state: &ServerState, req: &Request) -> String {
         Ok(t) => t.id.clone(),
         Err(_) => "-".to_string(),
     }
+}
+
+/// A job's status *as the requesting tenant sees it*: `Ok(Some(_))` only
+/// when the job exists **and** the requester owns it. Jobs owned by
+/// another tenant come back `Ok(None)` — indistinguishable from ids that
+/// never existed, so job ids cannot be probed across tenant boundaries.
+/// `Err` carries the auth failure (401/403) from [`resolve_tenant`].
+fn visible_status(
+    state: &ServerState,
+    req: &Request,
+    id: u64,
+) -> Result<Option<JobStatus>, Response> {
+    let tenant = resolve_tenant(state, req)?;
+    Ok(state.scheduler.status(id).filter(|s| s.tenant == tenant.id))
 }
 
 fn parse_id(raw: &str) -> Result<u64, Response> {
@@ -309,10 +354,18 @@ fn submit(state: &ServerState, req: &Request) -> Response {
                 ),
             )
         }
-        Err(SubmitError::QueueFull(full)) => Response::error(429, &full.to_string())
-            .with_header("Retry-After", state.config.retry_after_secs.to_string()),
+        // Both 429 arms advertise the backoff via
+        // `advertised_retry_after_secs`: rounded up, never `0` (a
+        // `Retry-After: 0` while throttled spins clients against the
+        // same refusal).
+        Err(SubmitError::QueueFull(full)) => Response::error(429, &full.to_string()).with_header(
+            "Retry-After",
+            advertised_retry_after_secs(state.config.retry_after_secs.saturating_mul(1000))
+                .to_string(),
+        ),
         Err(SubmitError::Quota { quota, .. }) => {
-            let retry_after = quota.retry_after_secs;
+            let retry_after =
+                advertised_retry_after_secs(quota.retry_after_secs.saturating_mul(1000));
             Response::error(429, &quota.to_string())
                 .with_header("Retry-After", retry_after.to_string())
         }
@@ -354,6 +407,110 @@ pub fn status_json(status: &JobStatus, include_x: bool) -> String {
     }
     s.push('}');
     s
+}
+
+/// `GET /v1/cache/snapshot`: every live warm-start entry. Keys render as
+/// *strings* — our JSON numbers are `f64`-backed, and a 64-bit FNV key
+/// above 2^53 would silently lose bits as a number. Floats render in
+/// shortest round-trip form, so a snapshot imported on another node
+/// reproduces bit-identical warm starts.
+fn cache_snapshot_get(state: &ServerState, req: &Request) -> Response {
+    if let Err(resp) = resolve_tenant(state, req) {
+        return resp;
+    }
+    let entries = state.scheduler.cache_snapshot();
+    let mut s = String::from("{\"entries\":[");
+    for (i, (key, x, tau, lipschitz)) in entries.iter().enumerate() {
+        if i > 0 {
+            s.push(',');
+        }
+        s.push_str(&format!("{{\"key\":\"{key}\",\"x\":["));
+        for (j, v) in x.iter().enumerate() {
+            if j > 0 {
+                s.push(',');
+            }
+            s.push_str(&num(*v));
+        }
+        s.push(']');
+        if let Some(t) = tau {
+            s.push_str(&format!(",\"tau\":{}", num(*t)));
+        }
+        if let Some(l) = lipschitz {
+            s.push_str(&format!(",\"lipschitz\":{}", num(*l)));
+        }
+        s.push('}');
+    }
+    s.push_str("]}");
+    Response::json(200, s)
+}
+
+/// `POST /v1/cache/snapshot`: import entries produced by
+/// [`cache_snapshot_get`] on another node (the receiving side of a
+/// cluster drain handoff). Accepts keys as decimal strings (canonical)
+/// or, for hand-written payloads with small keys, numbers.
+fn cache_snapshot_post(state: &ServerState, req: &Request) -> Response {
+    if let Err(resp) = resolve_tenant(state, req) {
+        return resp;
+    }
+    let text = match std::str::from_utf8(&req.body) {
+        Ok(t) => t,
+        Err(_) => return Response::error(400, "request body must be UTF-8 JSON"),
+    };
+    let doc = match Json::parse(text.trim()) {
+        Ok(d) => d,
+        Err(e) => return Response::error(400, &format!("{e:#}")),
+    };
+    let Some(Json::Arr(items)) = doc.get("entries") else {
+        return Response::error(400, "body must be {\"entries\":[{\"key\":\"..\",\"x\":[..]},..]}");
+    };
+    let mut entries = Vec::with_capacity(items.len());
+    for (i, item) in items.iter().enumerate() {
+        let key = match item.get("key") {
+            Some(Json::Str(s)) => match s.parse::<u64>() {
+                Ok(k) => k,
+                Err(_) => {
+                    return Response::error(400, &format!("entry {i}: key `{s}` is not a u64"))
+                }
+            },
+            Some(Json::Num(v)) if *v >= 0.0 && v.fract() == 0.0 && *v < 9.007_199_254_740_992e15 => {
+                *v as u64
+            }
+            _ => return Response::error(400, &format!("entry {i}: missing/invalid `key`")),
+        };
+        let Some(Json::Arr(raw_x)) = item.get("x") else {
+            return Response::error(400, &format!("entry {i}: missing `x` array"));
+        };
+        let mut x = Vec::with_capacity(raw_x.len());
+        for v in raw_x {
+            match v.as_f64() {
+                Some(f) if f.is_finite() => x.push(f),
+                _ => return Response::error(400, &format!("entry {i}: `x` must be finite numbers")),
+            }
+        }
+        let scalar = |name: &str| -> Result<Option<f64>, Response> {
+            match item.get(name) {
+                None | Some(Json::Null) => Ok(None),
+                Some(v) => match v.as_f64() {
+                    Some(f) if f.is_finite() => Ok(Some(f)),
+                    _ => Err(Response::error(
+                        400,
+                        &format!("entry {i}: `{name}` must be a finite number"),
+                    )),
+                },
+            }
+        };
+        let tau = match scalar("tau") {
+            Ok(v) => v,
+            Err(r) => return r,
+        };
+        let lipschitz = match scalar("lipschitz") {
+            Ok(v) => v,
+            Err(r) => return r,
+        };
+        entries.push((key, x, tau, lipschitz));
+    }
+    let imported = state.scheduler.cache_import(&entries);
+    Response::json(200, format!("{{\"imported\":{imported}}}"))
 }
 
 fn registry_json(state: &ServerState) -> String {

@@ -60,11 +60,16 @@
 //! auth, weighted-fair scheduling between tenants, per-tenant quotas, a
 //! bounded-backoff retry policy, and a persistent warm-start store that
 //! survives restarts (`flexa serve --tenants FILE --store PATH`).
+//! The [`cluster`] layer scales past one node: `flexa cluster` fronts N
+//! HTTP backends with consistent-hash placement by warm-start
+//! fingerprint, health-checked failover, drain-with-handoff, aggregated
+//! metrics, and router-driven block-split ADMM for oversized jobs.
 
 pub mod algos;
 pub mod api;
 pub mod bench;
 pub mod cli;
+pub mod cluster;
 pub mod config;
 pub mod coordinator;
 pub mod datagen;

@@ -5,6 +5,9 @@
 //! * `solve`      — generate a planted instance and run one solver.
 //! * `serve`      — run a JSONL job file through the concurrent solve
 //!                  scheduler (worker pool, deadlines, warm-start cache).
+//! * `cluster`    — route jobs across N `flexa serve --http` backends
+//!                  (consistent-hash placement, health checks, draining,
+//!                  block-split ADMM for oversized jobs).
 //! * `experiment` — run a TOML experiment config (multi-algo, multi-
 //!                  realization), writing CSV series + ASCII plots.
 //! * `figure1`    — regenerate a panel of the paper's Fig. 1.
@@ -43,6 +46,7 @@ fn dispatch(args: &[String]) -> anyhow::Result<()> {
     match sub {
         "solve" => cmd_solve(rest),
         "serve" => cmd_serve(rest),
+        "cluster" => cmd_cluster(rest),
         "experiment" => cmd_experiment(rest),
         "figure1" => cmd_figure1(rest),
         "registry" => cmd_registry(rest),
@@ -60,6 +64,7 @@ fn dispatch(args: &[String]) -> anyhow::Result<()> {
                  subcommands:\n\
                  \x20 solve       run one solver on a planted instance\n\
                  \x20 serve       run a JSONL job file through the solve scheduler\n\
+                 \x20 cluster     route jobs across flexa serve --http backends\n\
                  \x20 experiment  run a TOML experiment config\n\
                  \x20 figure1     regenerate a panel of the paper's Fig. 1\n\
                  \x20 registry    list registered problems and solvers\n\
@@ -200,6 +205,7 @@ fn cmd_serve(args: &[String]) -> anyhow::Result<()> {
         .opt("tenants", None, "tenants file (TOML [tenant.<id>] tables or JSON; weights, tokens, quotas)")
         .opt("store", None, "persist the warm-start cache to this file (loaded on start, appended on insert)")
         .opt("store-mb", Some("64"), "persistent store byte cap in MiB before compaction (with --store)")
+        .opt("store-fsync", Some("never"), "store durability: always | never | interval:N (fdatasync cadence, with --store)")
         .opt("retries", Some("0"), "max retries per job for retryable failures (bounded exponential backoff)")
         .opt("http", None, "serve over HTTP on this address (e.g. 127.0.0.1:8080; port 0 picks one); the jobs file becomes optional pre-submitted work")
         .opt("max-conns", Some("64"), "concurrent HTTP connections (with --http)")
@@ -256,7 +262,13 @@ fn cmd_serve(args: &[String]) -> anyhow::Result<()> {
         );
         config = config
             .with_store_path(store)
-            .with_store_max_bytes((p.usize("store-mb")?.max(1) as u64) << 20);
+            .with_store_max_bytes((p.usize("store-mb")?.max(1) as u64) << 20)
+            .with_store_fsync(flexa::tenant::FsyncPolicy::parse(p.str("store-fsync")?)?);
+    } else {
+        anyhow::ensure!(
+            p.all("store-fsync").is_empty(),
+            "--store-fsync does nothing without --store"
+        );
     }
     // Jobfile tenants must resolve against the registry before anything
     // starts — a typo'd tenant would otherwise run on an implicit
@@ -348,6 +360,73 @@ fn cmd_serve(args: &[String]) -> anyhow::Result<()> {
         eprintln!("{}", stats_json(&stats));
     }
     Ok(())
+}
+
+/// Front N `flexa serve --http` backends with the `flexa::cluster`
+/// router: consistent-hash placement by warm-start fingerprint, health
+/// probes, drain-with-handoff, aggregated metrics, and block-split ADMM
+/// for jobs above the column threshold.
+fn cmd_cluster(args: &[String]) -> anyhow::Result<()> {
+    use flexa::cluster::{
+        parse_backend_arg, parse_backends_file, BackendSpec, ClusterConfig, ClusterServer,
+        HealthConfig, SplitConfig,
+    };
+    use std::time::Duration;
+
+    let cmd = Command::new("cluster", "route jobs across flexa serve --http backends")
+        .opt("listen", Some("127.0.0.1:8800"), "router bind address (port 0 picks one)")
+        .opt("backend", None, "backend `host:port` or `id=host:port` (repeatable)")
+        .opt("backends", None, "TOML file with a [backends] table (id = \"host:port\")")
+        .opt("replicas", Some("64"), "virtual ring points per backend")
+        .opt("probe-interval-ms", Some("500"), "health probe cadence, milliseconds")
+        .opt("probe-timeout-ms", Some("2000"), "per-probe connect/read timeout, milliseconds")
+        .opt("failure-threshold", Some("3"), "consecutive probe failures before a backend stops receiving placements")
+        .opt("split-threshold", Some("4096"), "columns at/above which admm jobs split block-wise across backends (0 disables splitting)")
+        .opt("max-conns", Some("64"), "concurrent router connections")
+        .flag("no-access-log", "suppress the per-request access-log lines");
+    let p = cmd.parse(args)?;
+
+    let mut specs: Vec<BackendSpec> = Vec::new();
+    if let Some(path) = p.get("backends") {
+        let text = std::fs::read_to_string(path)
+            .map_err(|e| anyhow::anyhow!("cannot read backends file `{path}`: {e}"))?;
+        specs.extend(parse_backends_file(&text)?);
+    }
+    for arg in p.all("backend") {
+        specs.push(parse_backend_arg(arg)?);
+    }
+    anyhow::ensure!(
+        !specs.is_empty(),
+        "no backends: pass --backend ADDR (repeatable) or --backends FILE"
+    );
+
+    let split_threshold = p.usize("split-threshold")?;
+    let config = ClusterConfig {
+        replicas: p.usize("replicas")?.max(1),
+        health: HealthConfig {
+            interval: Duration::from_millis(p.u64("probe-interval-ms")?.max(50)),
+            timeout: Duration::from_millis(p.u64("probe-timeout-ms")?.max(50)),
+            failure_threshold: p.usize("failure-threshold")?.max(1) as u32,
+        },
+        split: SplitConfig {
+            // 0 = never split: no job clears a usize::MAX column bar.
+            threshold_cols: if split_threshold == 0 { usize::MAX } else { split_threshold },
+            ..SplitConfig::default()
+        },
+        max_connections: p.usize("max-conns")?.max(1),
+        access_log: !p.flag("no-access-log"),
+        ..ClusterConfig::default()
+    };
+
+    let server = ClusterServer::bind(p.str("listen")?, specs, config)?;
+    flexa::http::install_shutdown_signals();
+    // Machine-parseable first line: CI greps the bound port out.
+    println!("flexa cluster: listening on http://{}", server.local_addr());
+    eprintln!(
+        "endpoints: POST /v1/jobs | GET /v1/jobs/{{id}}[/events] | DELETE /v1/jobs/{{id}} | GET /v1/cluster | POST /v1/cluster/backends/{{id}}/drain | /healthz | /metrics"
+    );
+    eprintln!("stop with ctrl-c");
+    server.run()
 }
 
 fn cmd_experiment(args: &[String]) -> anyhow::Result<()> {
@@ -607,6 +686,43 @@ mod tests {
         assert!(err.contains("max_queued quota is 0"), "{err}");
         std::fs::remove_file(&tenants).ok();
         std::fs::remove_file(&jobs).ok();
+    }
+
+    /// `cluster` refuses to start without backends, and validates the
+    /// backend grammar before binding anything.
+    #[test]
+    fn cluster_requires_backends_and_validates_them() {
+        let err = cmd_cluster(&args_of(&["--listen", "127.0.0.1:0"])).unwrap_err().to_string();
+        assert!(err.contains("no backends"), "{err}");
+        let err = cmd_cluster(&args_of(&["--listen", "127.0.0.1:0", "--backend", "nope"]))
+            .unwrap_err()
+            .to_string();
+        assert!(err.contains("host:port"), "{err}");
+        let err = cmd_cluster(&args_of(&["--listen", "127.0.0.1:0", "--backends", "/no/such.toml"]))
+            .unwrap_err()
+            .to_string();
+        assert!(err.contains("cannot read backends file"), "{err}");
+    }
+
+    /// `--store-fsync` is validated: bad grammar is refused, and passing
+    /// it without `--store` is a configuration error, not a silent no-op.
+    #[test]
+    fn serve_validates_store_fsync() {
+        let err = cmd_serve(&args_of(&["--http", "127.0.0.1:0", "--store-fsync", "always"]))
+            .unwrap_err()
+            .to_string();
+        assert!(err.contains("does nothing without --store"), "{err}");
+        let err = cmd_serve(&args_of(&[
+            "--http",
+            "127.0.0.1:0",
+            "--store",
+            "/tmp/flexa_cli_fsync_store.bin",
+            "--store-fsync",
+            "sometimes",
+        ]))
+        .unwrap_err()
+        .to_string();
+        assert!(err.contains("sometimes"), "{err}");
     }
 
     /// `--store` without a cache is a configuration error, not a silent

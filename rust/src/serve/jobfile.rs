@@ -23,6 +23,7 @@
 //! | `procs`        | int    | simulated cost-model process count          |
 //! | `threads`      | int    | kernel-thread request, 1..=usable host cores (capped by the scheduler's core budget; never changes results) |
 //! | `deadline_ms`  | int    | per-job deadline from submission (extends `max_seconds` when that key is unset) |
+//! | `x0`           | array  | explicit starting iterate (for `admm-step` it carries the packed `[x; z; u]` consensus state — see [`crate::cluster`]) |
 //! | `warm_start`   | bool   | consult/update the warm-start cache         |
 //! | `tag`          | string | label echoed in events and results          |
 //! | `tenant`       | string | tenant to schedule under (default `default`; over HTTP a `Bearer` token wins — see [`crate::tenant`]) |
@@ -309,7 +310,7 @@ fn as_text<'a>(v: &'a Json, key: &str) -> Result<&'a str> {
 
 const KNOWN_KEYS: &str = "problem, rows, cols, sparsity, c, lambda, block_size, seed, label_noise, \
      algo, params, max_iters, max_seconds, target, record_every, procs, threads, \
-     deadline_ms, warm_start, tag, tenant";
+     deadline_ms, x0, warm_start, tag, tenant";
 
 /// Validate a thread-count request against the host: 0 is meaningless
 /// and more threads than cores only oversubscribes, so both are
@@ -384,6 +385,23 @@ pub fn parse_job_line(line: &str) -> Result<JobSpec> {
                 opts.threads = Some(validate_threads(as_count(v, key)?, "job key `threads`")?)
             }
             "deadline_ms" => deadline = Some(Duration::from_millis(as_count(v, key)? as u64)),
+            "x0" => {
+                let Json::Arr(items) = v else {
+                    bail!("job key `x0` must be an array of numbers");
+                };
+                let mut xs = Vec::with_capacity(items.len());
+                for it in items {
+                    let x = it.as_f64().ok_or_else(|| anyhow!("job key `x0` must be an array of numbers"))?;
+                    if !x.is_finite() {
+                        bail!("job key `x0` entries must be finite");
+                    }
+                    xs.push(x);
+                }
+                if xs.is_empty() {
+                    bail!("job key `x0` must be non-empty");
+                }
+                opts.x0 = Some(xs);
+            }
             "warm_start" => {
                 warm_start = v.as_bool().ok_or_else(|| anyhow!("job key `warm_start` must be a boolean"))?
             }

@@ -48,7 +48,10 @@ use super::cache::{fingerprint, CacheStats, WarmStart, WarmStartCache};
 use crate::algos::{SolveOptions, SolveReport};
 use crate::api::events::{EventObserver, IterEvent};
 use crate::api::{ProblemHandle, ProblemSpec, Registry, SolverSpec};
-use crate::tenant::{DrrQueue, QuotaExceeded, StoreStats, TenantRegistry, WarmStartStore, DEFAULT_TENANT};
+use crate::tenant::{
+    DrrQueue, FsyncPolicy, QuotaExceeded, StoreStats, TenantRegistry, WarmStartStore,
+    DEFAULT_TENANT,
+};
 use anyhow::Result;
 use std::collections::{BTreeMap, VecDeque};
 use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
@@ -380,6 +383,10 @@ pub struct ServeConfig {
     pub store_max_bytes: u64,
     /// Retry policy for retryable failures (off by default).
     pub retry: RetryPolicy,
+    /// Durability policy for persistent-store appends (see
+    /// [`crate::tenant::FsyncPolicy`]). Default [`FsyncPolicy::Never`] —
+    /// the pre-policy behavior.
+    pub store_fsync: FsyncPolicy,
 }
 
 impl Default for ServeConfig {
@@ -394,6 +401,7 @@ impl Default for ServeConfig {
             store_path: None,
             store_max_bytes: 64 << 20,
             retry: RetryPolicy::default(),
+            store_fsync: FsyncPolicy::default(),
         }
     }
 }
@@ -441,6 +449,11 @@ impl ServeConfig {
 
     pub fn with_retry_policy(mut self, retry: RetryPolicy) -> Self {
         self.retry = retry;
+        self
+    }
+
+    pub fn with_store_fsync(mut self, policy: FsyncPolicy) -> Self {
+        self.store_fsync = policy;
         self
     }
 
@@ -852,7 +865,7 @@ impl Scheduler {
         let store = match (&mut cache, &config.store_path) {
             (Some(c), Some(path)) => {
                 match WarmStartStore::open(path, config.store_max_bytes, c) {
-                    Ok(s) => Some(Mutex::new(s)),
+                    Ok(s) => Some(Mutex::new(s.with_fsync(config.store_fsync))),
                     Err(e) => {
                         eprintln!("flexa: warm-start store disabled: {e:#}");
                         None
@@ -1019,6 +1032,47 @@ impl Scheduler {
     /// Persistent warm-start store counters (`None` when no store).
     pub fn store_stats(&self) -> Option<StoreStats> {
         self.shared.store.as_ref().map(|s| s.lock().unwrap().stats())
+    }
+
+    /// Every live warm-start entry as `(key, x, tau, lipschitz)` — the
+    /// export side of a cluster drain handoff (`GET /v1/cache/snapshot`).
+    /// Empty when the cache is disabled.
+    pub fn cache_snapshot(&self) -> Vec<(u64, Arc<Vec<f64>>, Option<f64>, Option<f64>)> {
+        match &self.shared.cache {
+            Some(c) => c.lock().unwrap().snapshot(),
+            None => Vec::new(),
+        }
+    }
+
+    /// Import warm-start entries — the receiving side of a drain
+    /// handoff. Entries enter the LRU cache and, when a persistent store
+    /// is configured, are appended there with the same compaction rule
+    /// as worker inserts. Returns how many entries were accepted;
+    /// `0` when the cache is disabled or every entry was empty.
+    pub fn cache_import(&self, entries: &[(u64, Vec<f64>, Option<f64>, Option<f64>)]) -> usize {
+        let Some(cache) = &self.shared.cache else { return 0 };
+        let mut accepted = 0;
+        for (key, x, tau, lipschitz) in entries {
+            if x.is_empty() || x.iter().any(|v| !v.is_finite()) {
+                continue;
+            }
+            cache.lock().unwrap().insert(*key, x.clone(), *tau, *lipschitz);
+            accepted += 1;
+            // Same lock discipline as `run_job`: cache lock released
+            // before the store lock; compaction nests store → cache.
+            if let Some(store) = &self.shared.store {
+                let mut st = store.lock().unwrap();
+                if let Err(e) = st.append(*key, x, *tau, *lipschitz) {
+                    eprintln!("flexa: warm-start store append failed: {e:#}");
+                } else if st.needs_compaction() {
+                    let live = cache.lock().unwrap().snapshot();
+                    if let Err(e) = st.compact(&live) {
+                        eprintln!("flexa: warm-start store compaction failed: {e:#}");
+                    }
+                }
+            }
+        }
+        accepted
     }
 
     /// Jobs currently waiting in the queue (not the ones running).

@@ -54,8 +54,8 @@ pub mod quota;
 pub mod store;
 
 pub use policy::DrrQueue;
-pub use quota::{QuotaExceeded, TenantQuota};
-pub use store::{StoreStats, WarmStartStore};
+pub use quota::{advertised_retry_after_secs, QuotaExceeded, TenantQuota};
+pub use store::{FsyncPolicy, StoreStats, WarmStartStore};
 
 use anyhow::{anyhow, bail, Result};
 use std::collections::BTreeMap;

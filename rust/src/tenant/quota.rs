@@ -78,6 +78,16 @@ impl std::fmt::Display for QuotaExceeded {
 
 impl std::error::Error for QuotaExceeded {}
 
+/// `Retry-After` seconds to advertise for a remaining backoff of
+/// `backoff_ms` milliseconds: rounded *up* to whole seconds and never 0.
+/// `Retry-After: 0` while still throttled tells a well-behaved client to
+/// retry immediately — it would spin against the same 429 until the
+/// backoff really expires. Sub-second remainders therefore cost a full
+/// advertised second (the header has no finer resolution).
+pub fn advertised_retry_after_secs(backoff_ms: u64) -> u64 {
+    (backoff_ms.saturating_add(999) / 1000).max(1)
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -90,6 +100,19 @@ mod tests {
         assert_eq!(q.max_queued, Some(8));
         assert_eq!(q.max_concurrent, Some(2));
         assert_eq!(q.max_cores, Some(4));
+    }
+
+    /// The advertised `Retry-After` rounds the remaining backoff *up* to
+    /// whole seconds and is never 0 while throttled.
+    #[test]
+    fn advertised_retry_after_rounds_up_and_never_zero() {
+        assert_eq!(advertised_retry_after_secs(0), 1, "still throttled: never advertise 0");
+        assert_eq!(advertised_retry_after_secs(1), 1);
+        assert_eq!(advertised_retry_after_secs(999), 1);
+        assert_eq!(advertised_retry_after_secs(1000), 1);
+        assert_eq!(advertised_retry_after_secs(1001), 2, "sub-second remainder rounds up");
+        assert_eq!(advertised_retry_after_secs(7000), 7);
+        assert_eq!(advertised_retry_after_secs(u64::MAX), u64::MAX / 1000);
     }
 
     #[test]

@@ -38,10 +38,61 @@
 //! the live cache snapshot — one record per live key.
 
 use crate::serve::cache::WarmStartCache;
-use anyhow::{Context, Result};
+use anyhow::{bail, Context, Result};
 use std::fs::{File, OpenOptions};
 use std::io::Write;
 use std::path::{Path, PathBuf};
+
+/// When appends are forced to stable storage (`fdatasync`).
+///
+/// The append path always `flush`es (the record reaches the OS page
+/// cache, surviving a process crash); the fsync policy decides whether
+/// it also survives power loss. The default is [`FsyncPolicy::Never`] —
+/// the store's historical behavior, appropriate for a cache whose
+/// entries are recomputable — while `always` / `interval:N` trade
+/// append latency for durability (`flexa serve --store-fsync ...`).
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub enum FsyncPolicy {
+    /// `fdatasync` after every append.
+    Always,
+    /// Flush only; never fsync (the default).
+    #[default]
+    Never,
+    /// `fdatasync` once every N appends (N ≥ 1; `Interval(1)` ≡ `Always`).
+    Interval(u32),
+}
+
+impl FsyncPolicy {
+    /// Parse the CLI grammar: `always`, `never` or `interval:<N>`.
+    pub fn parse(text: &str) -> Result<Self> {
+        match text {
+            "always" => Ok(Self::Always),
+            "never" => Ok(Self::Never),
+            _ => {
+                if let Some(n) = text.strip_prefix("interval:") {
+                    let n: u32 = n
+                        .parse()
+                        .ok()
+                        .filter(|&n| n >= 1)
+                        .ok_or_else(|| anyhow::anyhow!("bad fsync interval `{n}` (want an integer ≥ 1)"))?;
+                    Ok(Self::Interval(n))
+                } else {
+                    bail!("unknown fsync policy `{text}` (expected always | never | interval:<N>)")
+                }
+            }
+        }
+    }
+}
+
+impl std::fmt::Display for FsyncPolicy {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            Self::Always => write!(f, "always"),
+            Self::Never => write!(f, "never"),
+            Self::Interval(n) => write!(f, "interval:{n}"),
+        }
+    }
+}
 
 const MAGIC: &[u8; 8] = b"FLXWS01\n";
 /// Fixed payload bytes besides the iterate: key + flags + τ + L + n.
@@ -58,6 +109,8 @@ pub struct StoreStats {
     pub records_skipped: usize,
     /// Records appended by this process.
     pub appends: u64,
+    /// `fdatasync` calls issued by the append path (per [`FsyncPolicy`]).
+    pub syncs: u64,
     /// Compaction rewrites performed.
     pub compactions: u64,
     /// Current file size in bytes.
@@ -70,6 +123,9 @@ pub struct WarmStartStore {
     file: File,
     bytes: u64,
     max_bytes: u64,
+    fsync: FsyncPolicy,
+    /// Appends since the last sync (drives [`FsyncPolicy::Interval`]).
+    appends_since_sync: u32,
     stats: StoreStats,
 }
 
@@ -196,6 +252,8 @@ impl WarmStartStore {
             file,
             bytes: good as u64,
             max_bytes: max_bytes.max(MAGIC.len() as u64),
+            fsync: FsyncPolicy::default(),
+            appends_since_sync: 0,
             stats,
         };
         if good == 0 {
@@ -240,7 +298,32 @@ impl WarmStartStore {
         self.bytes += frame.len() as u64;
         self.stats.appends += 1;
         self.stats.bytes = self.bytes;
+        let sync_now = match self.fsync {
+            FsyncPolicy::Always => true,
+            FsyncPolicy::Never => false,
+            FsyncPolicy::Interval(n) => {
+                self.appends_since_sync += 1;
+                self.appends_since_sync >= n
+            }
+        };
+        if sync_now {
+            self.file.sync_data().context("fsync warm-start store")?;
+            self.appends_since_sync = 0;
+            self.stats.syncs += 1;
+        }
         Ok(())
+    }
+
+    /// Set the append durability policy (default: [`FsyncPolicy::Never`],
+    /// the store's historical behavior).
+    pub fn set_fsync_policy(&mut self, policy: FsyncPolicy) {
+        self.fsync = policy;
+    }
+
+    /// Builder form of [`Self::set_fsync_policy`].
+    pub fn with_fsync(mut self, policy: FsyncPolicy) -> Self {
+        self.fsync = policy;
+        self
     }
 
     /// Whether the log has outgrown its byte cap.
@@ -386,6 +469,51 @@ mod tests {
         let mut cache = WarmStartCache::new(1 << 20);
         let store = WarmStartStore::open(&path, 1 << 20, &mut cache).unwrap();
         assert_eq!((store.stats().entries_loaded, store.stats().records_skipped), (1, 0));
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn fsync_policy_parses_and_renders() {
+        assert_eq!(FsyncPolicy::parse("always").unwrap(), FsyncPolicy::Always);
+        assert_eq!(FsyncPolicy::parse("never").unwrap(), FsyncPolicy::Never);
+        assert_eq!(FsyncPolicy::parse("interval:5").unwrap(), FsyncPolicy::Interval(5));
+        for bad in ["", "sometimes", "interval:0", "interval:-1", "interval:x"] {
+            assert!(FsyncPolicy::parse(bad).is_err(), "`{bad}` must not parse");
+        }
+        for p in [FsyncPolicy::Always, FsyncPolicy::Never, FsyncPolicy::Interval(7)] {
+            assert_eq!(FsyncPolicy::parse(&p.to_string()).unwrap(), p, "{p} must round-trip");
+        }
+        assert_eq!(FsyncPolicy::default(), FsyncPolicy::Never, "default policy unchanged");
+    }
+
+    /// The append path must honor the policy: `never` (the default)
+    /// issues no syncs, `always` one per append, `interval:N` one per N.
+    #[test]
+    fn append_path_honors_the_fsync_policy() {
+        let path = tmp("fsync");
+        let mut cache = WarmStartCache::new(1 << 20);
+        let mut store = WarmStartStore::open(&path, 1 << 20, &mut cache).unwrap();
+        for _ in 0..3 {
+            store.append(1, &[1.0], None, None).unwrap();
+        }
+        assert_eq!(store.stats().syncs, 0, "default/never: flush only");
+
+        store.set_fsync_policy(FsyncPolicy::Always);
+        for _ in 0..3 {
+            store.append(2, &[2.0], None, None).unwrap();
+        }
+        assert_eq!(store.stats().syncs, 3, "always: one sync per append");
+
+        store.set_fsync_policy(FsyncPolicy::Interval(3));
+        for appended in 1..=7u64 {
+            store.append(3, &[3.0], None, None).unwrap();
+            assert_eq!(store.stats().syncs, 3 + appended / 3, "interval:3 after {appended} appends");
+        }
+
+        store.set_fsync_policy(FsyncPolicy::Never);
+        store.append(4, &[4.0], None, None).unwrap();
+        assert_eq!(store.stats().syncs, 5, "never: counter stops");
+        assert_eq!(store.stats().appends, 14);
         std::fs::remove_file(&path).ok();
     }
 

@@ -1,0 +1,354 @@
+//! End-to-end tests for `flexa::cluster`: a router in front of two
+//! in-process `flexa::http` backends.
+//!
+//! Pinned behaviors:
+//! * **Affinity** — an 8-point λ-sweep through the router lands every
+//!   job on one backend (consistent-hash by warm-start fingerprint) and
+//!   the aggregated `/metrics` shows exactly 7 cache hits.
+//! * **Bit-exact split** — a job above the split threshold runs as a
+//!   router-driven block-split ADMM consensus solve whose result is
+//!   bit-identical to a single-node `algos::admm::Admm` run.
+//! * **Drain** — draining a backend hands its warm-start snapshot to
+//!   the ring successor, so the next sweep job warm-starts elsewhere.
+//! * **Failover** — submissions walk ring successors past a dead
+//!   backend, and the prober marks it unhealthy.
+
+use flexa::algos::SolveOptions;
+use flexa::api::{ProblemSpec, Registry, Session, SolverSpec};
+use flexa::cluster::{BackendSpec, ClusterConfig, ClusterServer, HealthConfig, SpawnedCluster, SplitConfig};
+use flexa::http::{HttpConfig, HttpServer, SpawnedServer};
+use flexa::serve::{Json, ServeConfig};
+use std::io::{Read, Write};
+use std::net::TcpStream;
+use std::time::{Duration, Instant};
+
+fn spawn_backend() -> SpawnedServer {
+    let http = HttpConfig { access_log: false, ..HttpConfig::default() };
+    HttpServer::bind("127.0.0.1:0", http, ServeConfig::default().with_workers(1), Registry::with_defaults())
+        .expect("bind backend")
+        .spawn()
+}
+
+fn spawn_cluster(backends: &[&SpawnedServer], config: ClusterConfig) -> SpawnedCluster {
+    let specs: Vec<BackendSpec> = backends
+        .iter()
+        .enumerate()
+        .map(|(i, s)| BackendSpec { id: format!("b{i}"), addr: s.addr().to_string() })
+        .collect();
+    ClusterServer::bind("127.0.0.1:0", specs, config).expect("bind cluster router").spawn()
+}
+
+fn quiet_config() -> ClusterConfig {
+    ClusterConfig { access_log: false, ..ClusterConfig::default() }
+}
+
+/// One `Connection: close` exchange; returns (status, body).
+fn req(addr: &str, method: &str, path: &str, body: Option<&str>) -> (u16, String) {
+    let mut stream = TcpStream::connect(addr).expect("connect");
+    stream.set_read_timeout(Some(Duration::from_secs(120))).unwrap();
+    let mut head = format!("{method} {path} HTTP/1.1\r\nHost: {addr}\r\nConnection: close\r\n");
+    if let Some(b) = body {
+        head.push_str(&format!("Content-Length: {}\r\nContent-Type: application/json\r\n", b.len()));
+    }
+    head.push_str("\r\n");
+    stream.write_all(head.as_bytes()).unwrap();
+    if let Some(b) = body {
+        stream.write_all(b.as_bytes()).unwrap();
+    }
+    let mut raw = Vec::new();
+    stream.read_to_end(&mut raw).expect("read response");
+    let raw = String::from_utf8(raw).expect("utf8 response");
+    let (head, body) = raw.split_once("\r\n\r\n").unwrap_or((raw.as_str(), ""));
+    let status: u16 = head
+        .lines()
+        .next()
+        .and_then(|l| l.split_whitespace().nth(1))
+        .and_then(|s| s.parse().ok())
+        .unwrap_or_else(|| panic!("malformed response head: {head}"));
+    (status, body.to_string())
+}
+
+/// POST one job through the router, asserting 202; returns the parsed
+/// submit document (router job id, owning backend, optional split arity).
+fn post_job(addr: &str, spec: &str) -> Json {
+    let (status, body) = req(addr, "POST", "/v1/jobs", Some(spec));
+    assert_eq!(status, 202, "POST /v1/jobs: {body}");
+    Json::parse(&body).expect("valid submit response")
+}
+
+fn job_id(doc: &Json) -> u64 {
+    doc.get("job").and_then(|v| v.as_f64()).expect("job id") as u64
+}
+
+fn wait_finished(addr: &str, job: u64) -> Json {
+    let deadline = Instant::now() + Duration::from_secs(120);
+    loop {
+        let (status, body) = req(addr, "GET", &format!("/v1/jobs/{job}?x=1"), None);
+        assert_eq!(status, 200, "GET /v1/jobs/{job}: {body}");
+        let doc = Json::parse(&body).expect("valid status json");
+        if doc.get("state").and_then(|v| v.as_str()) == Some("finished") {
+            return doc;
+        }
+        assert!(Instant::now() < deadline, "job {job} never finished: {body}");
+        std::thread::sleep(Duration::from_millis(10));
+    }
+}
+
+fn x_of(doc: &Json) -> Vec<f64> {
+    let Some(Json::Arr(items)) = doc.get("x") else { panic!("status has no x array: {doc:?}") };
+    items.iter().map(|v| v.as_f64().expect("x entries are numbers")).collect()
+}
+
+fn bits(x: &[f64]) -> Vec<u64> {
+    x.iter().map(|v| v.to_bits()).collect()
+}
+
+fn metric(text: &str, name: &str) -> f64 {
+    text.lines()
+        .find(|l| l.starts_with(name) && !l.starts_with('#'))
+        .and_then(|l| l.split_whitespace().nth(1))
+        .and_then(|v| v.parse().ok())
+        .unwrap_or_else(|| panic!("metric {name} missing in:\n{text}"))
+}
+
+fn sweep_spec(i: usize, lambda: f64) -> String {
+    format!(
+        "{{\"problem\":\"lasso\",\"rows\":30,\"cols\":90,\"seed\":11,\"lambda\":{lambda},\
+         \"algo\":\"fpa\",\"max_iters\":40,\"warm_start\":true,\"tag\":\"sweep-{i}\"}}"
+    )
+}
+
+/// The headline acceptance scenario: every λ of a sweep shares a
+/// warm-start fingerprint, so the ring sends all 8 jobs to one backend
+/// and the aggregated metrics count exactly 7 cache hits (the first λ
+/// is the only miss).
+#[test]
+fn lambda_sweep_affinity_pins_one_backend_with_seven_hits() {
+    let a = spawn_backend();
+    let b = spawn_backend();
+    let cluster = spawn_cluster(&[&a, &b], quiet_config());
+    let addr = cluster.addr().to_string();
+
+    let (status, body) = req(&addr, "GET", "/healthz", None);
+    assert_eq!(status, 200);
+    assert!(body.contains("\"backends\":2"), "{body}");
+
+    let mut owners = Vec::new();
+    let mut last_job = 0;
+    for (i, lambda) in (0..8).map(|i| (i, 2.0 * 0.7f64.powi(i))) {
+        let doc = post_job(&addr, &sweep_spec(i, lambda));
+        owners.push(doc.get("backend").and_then(|v| v.as_str()).expect("backend id").to_string());
+        last_job = job_id(&doc);
+        // Sequential: each λ must finish before the next can warm-start
+        // from it.
+        let done = wait_finished(&addr, last_job);
+        assert_eq!(done.get("outcome").and_then(|v| v.as_str()), Some("done"), "{done:?}");
+        assert_eq!(done.get("tag").and_then(|v| v.as_str()), Some(format!("sweep-{i}").as_str()));
+    }
+    assert!(
+        owners.iter().all(|o| o == &owners[0]),
+        "λ-sweep placements must share one backend, got {owners:?}"
+    );
+
+    let (status, metrics) = req(&addr, "GET", "/metrics", None);
+    assert_eq!(status, 200);
+    assert_eq!(metric(&metrics, "flexa_cache_hits_total"), 7.0, "\n{metrics}");
+    assert_eq!(metric(&metrics, "flexa_jobs_submitted_total"), 8.0);
+    assert_eq!(metric(&metrics, "flexa_cluster_jobs_routed_total"), 8.0);
+    assert_eq!(metric(&metrics, "flexa_cluster_backends_total"), 2.0);
+    assert_eq!(
+        metric(&metrics, &format!("flexa_cluster_backend_placed_total{{backend=\"{}\"}}", owners[0])),
+        8.0
+    );
+
+    // The SSE proxy forwards the full lifecycle with the router's job id.
+    let (status, sse) = req(&addr, "GET", &format!("/v1/jobs/{last_job}/events"), None);
+    assert_eq!(status, 200, "{sse}");
+    let events: Vec<&str> = sse.lines().filter_map(|l| l.strip_prefix("event: ")).collect();
+    assert_eq!(events.first(), Some(&"queued"), "{events:?}");
+    assert_eq!(events.last(), Some(&"finished"), "{events:?}");
+    assert!(sse.contains(&format!("\"job\":{last_job}")), "data frames carry the router id:\n{sse}");
+
+    // Topology + router-side 404s.
+    let (status, topo) = req(&addr, "GET", "/v1/cluster", None);
+    assert_eq!(status, 200);
+    assert!(topo.contains("\"id\":\"b0\"") && topo.contains("\"id\":\"b1\""), "{topo}");
+    let (status, body) = req(&addr, "GET", "/v1/jobs/999", None);
+    assert_eq!(status, 404);
+    assert!(body.contains("no such job 999"), "{body}");
+    let (status, _) = req(&addr, "PUT", "/v1/jobs", None);
+    assert_eq!(status, 405);
+
+    cluster.shutdown().expect("router shutdown");
+    a.shutdown().expect("backend a shutdown");
+    b.shutdown().expect("backend b shutdown");
+}
+
+/// A job above the split threshold runs as a router-driven consensus
+/// solve across both backends — and the merged trajectory is
+/// bit-identical to single-node [`flexa::algos::admm::Admm`].
+#[test]
+fn split_admm_over_the_cluster_is_bit_identical_to_single_node() {
+    let a = spawn_backend();
+    let b = spawn_backend();
+    let config = ClusterConfig {
+        split: SplitConfig { threshold_cols: 64, ..SplitConfig::default() },
+        ..quiet_config()
+    };
+    let cluster = spawn_cluster(&[&a, &b], config);
+    let addr = cluster.addr().to_string();
+
+    let spec = "{\"problem\":\"lasso\",\"rows\":60,\"cols\":200,\"seed\":5,\
+                \"algo\":\"admm\",\"max_iters\":6,\"target\":0,\"tag\":\"split\"}";
+    let doc = post_job(&addr, spec);
+    assert_eq!(doc.get("split").and_then(|v| v.as_f64()), Some(2.0), "{doc:?}");
+    let job = job_id(&doc);
+
+    let done = wait_finished(&addr, job);
+    assert_eq!(done.get("outcome").and_then(|v| v.as_str()), Some("done"), "{done:?}");
+    assert_eq!(done.get("solver").and_then(|v| v.as_str()), Some("admm-split/2"));
+    assert_eq!(done.get("iterations").and_then(|v| v.as_f64()), Some(6.0));
+
+    let reference = Session::problem(ProblemSpec::lasso(60, 200).with_seed(5))
+        .solver(SolverSpec::parse("admm").unwrap())
+        .options(SolveOptions::default().with_max_iters(6).with_target(0.0))
+        .run()
+        .expect("single-node admm reference");
+    assert_eq!(reference.report.iterations, 6);
+    assert_eq!(
+        bits(&x_of(&done)),
+        bits(&reference.report.x),
+        "split-mode ADMM must merge to the single-node iterate bit for bit"
+    );
+    let objective = done.get("objective").and_then(|v| v.as_f64()).expect("objective");
+    assert_eq!(objective.to_bits(), reference.report.objective.to_bits());
+
+    // The synthesized split stream narrates every outer round.
+    let (status, sse) = req(&addr, "GET", &format!("/v1/jobs/{job}/events"), None);
+    assert_eq!(status, 200, "{sse}");
+    let events: Vec<&str> = sse.lines().filter_map(|l| l.strip_prefix("event: ")).collect();
+    assert_eq!(events.first(), Some(&"queued"), "{events:?}");
+    assert!(events.contains(&"split-started"), "{events:?}");
+    assert_eq!(events.iter().filter(|e| **e == "outer").count(), 6, "{events:?}");
+    assert_eq!(events.last(), Some(&"finished"), "{events:?}");
+
+    let (_, metrics) = req(&addr, "GET", "/metrics", None);
+    assert_eq!(metric(&metrics, "flexa_cluster_jobs_split_total"), 1.0);
+
+    cluster.shutdown().expect("router shutdown");
+    a.shutdown().expect("backend a shutdown");
+    b.shutdown().expect("backend b shutdown");
+}
+
+/// Draining a backend stops new placements and hands its warm-start
+/// snapshot to the ring successor: the next λ of the sweep lands on the
+/// other backend and still warm-starts.
+#[test]
+fn drain_hands_warm_starts_to_the_successor() {
+    let a = spawn_backend();
+    let b = spawn_backend();
+    let cluster = spawn_cluster(&[&a, &b], quiet_config());
+    let addr = cluster.addr().to_string();
+
+    let doc = post_job(&addr, &sweep_spec(0, 2.0));
+    let owner = doc.get("backend").and_then(|v| v.as_str()).expect("backend id").to_string();
+    wait_finished(&addr, job_id(&doc));
+
+    let (status, body) =
+        req(&addr, "POST", &format!("/v1/cluster/backends/{owner}/drain"), None);
+    assert_eq!(status, 200, "{body}");
+    let drained = Json::parse(&body).unwrap();
+    assert_eq!(drained.get("draining").and_then(|v| v.as_bool()), Some(true));
+    assert!(
+        drained.get("entries").and_then(|v| v.as_f64()).unwrap_or(0.0) >= 1.0,
+        "the warm sweep entry must be in the snapshot: {body}"
+    );
+    assert!(body.contains("\"imported\":true"), "hand-off must import on the successor: {body}");
+
+    let (_, topo) = req(&addr, "GET", "/v1/cluster", None);
+    assert!(topo.contains("\"draining\":true"), "{topo}");
+
+    // The next λ re-places on the successor and warm-starts from the
+    // handed-off iterate.
+    let doc = post_job(&addr, &sweep_spec(1, 1.4));
+    let successor = doc.get("backend").and_then(|v| v.as_str()).expect("backend id").to_string();
+    assert_ne!(successor, owner, "draining backends take no new placements");
+    let done = wait_finished(&addr, job_id(&doc));
+    assert_eq!(done.get("outcome").and_then(|v| v.as_str()), Some("done"), "{done:?}");
+    assert_eq!(
+        done.get("warm_started").and_then(|v| v.as_bool()),
+        Some(true),
+        "the successor must warm-start from the handed-off snapshot: {done:?}"
+    );
+
+    // Undrain restores placements; unknown ids 404.
+    let (status, body) =
+        req(&addr, "DELETE", &format!("/v1/cluster/backends/{owner}/drain"), None);
+    assert_eq!(status, 200, "{body}");
+    let (_, topo) = req(&addr, "GET", "/v1/cluster", None);
+    assert!(!topo.contains("\"draining\":true"), "{topo}");
+    let (status, _) = req(&addr, "POST", "/v1/cluster/backends/ghost/drain", None);
+    assert_eq!(status, 404);
+
+    let (_, metrics) = req(&addr, "GET", "/metrics", None);
+    assert_eq!(metric(&metrics, "flexa_cluster_drains_total"), 1.0);
+
+    cluster.shutdown().expect("router shutdown");
+    a.shutdown().expect("backend a shutdown");
+    b.shutdown().expect("backend b shutdown");
+}
+
+/// Killing a backend: submissions immediately fail over along the ring,
+/// the prober marks it unhealthy, and with every backend gone the router
+/// answers 503 instead of hanging.
+#[test]
+fn dead_backends_fail_over_then_503() {
+    let a = spawn_backend();
+    let b = spawn_backend();
+    let config = ClusterConfig {
+        health: HealthConfig {
+            interval: Duration::from_millis(100),
+            timeout: Duration::from_millis(500),
+            failure_threshold: 2,
+        },
+        ..quiet_config()
+    };
+    let cluster = spawn_cluster(&[&a, &b], config);
+    let addr = cluster.addr().to_string();
+
+    // Kill b0; placements that hash to it must shed to b1 on the spot.
+    a.shutdown().expect("backend a shutdown");
+    for i in 0..4 {
+        let spec = format!(
+            "{{\"problem\":\"lasso\",\"rows\":20,\"cols\":60,\"seed\":{},\
+             \"algo\":\"fpa\",\"max_iters\":5,\"tag\":\"failover-{i}\"}}",
+            40 + i
+        );
+        let doc = post_job(&addr, &spec);
+        assert_eq!(doc.get("backend").and_then(|v| v.as_str()), Some("b1"), "{doc:?}");
+        wait_finished(&addr, job_id(&doc));
+    }
+
+    // The prober flips b0 unhealthy within a few probe rounds.
+    let deadline = Instant::now() + Duration::from_secs(10);
+    loop {
+        let (_, topo) = req(&addr, "GET", "/v1/cluster", None);
+        if topo.contains("\"id\":\"b0\",\"addr\":") && topo.contains("\"healthy\":false") {
+            break;
+        }
+        assert!(Instant::now() < deadline, "b0 never went unhealthy: {topo}");
+        std::thread::sleep(Duration::from_millis(50));
+    }
+
+    // With the last backend gone, submissions get a clean 503.
+    b.shutdown().expect("backend b shutdown");
+    let (status, body) = req(
+        &addr,
+        "POST",
+        "/v1/jobs",
+        Some("{\"problem\":\"lasso\",\"rows\":20,\"cols\":60,\"algo\":\"fpa\",\"max_iters\":5}"),
+    );
+    assert_eq!(status, 503, "{body}");
+
+    cluster.shutdown().expect("router shutdown");
+}

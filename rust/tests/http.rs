@@ -82,9 +82,16 @@ fn post_job(addr: &str, spec: &str) -> u64 {
 /// Poll `GET /v1/jobs/{id}?x=1` until the job finishes; returns the
 /// status document.
 fn wait_finished(addr: &str, job: u64) -> Json {
+    wait_finished_with(addr, job, &[])
+}
+
+/// [`wait_finished`] with extra request headers — job visibility is
+/// tenant-scoped, so polling another tenant's job needs its credential.
+fn wait_finished_with(addr: &str, job: u64, extra_headers: &[(&str, &str)]) -> Json {
     let deadline = Instant::now() + Duration::from_secs(120);
     loop {
-        let (status, _, body) = req(addr, "GET", &format!("/v1/jobs/{job}?x=1"), None);
+        let (status, _, body) =
+            req_with(addr, "GET", &format!("/v1/jobs/{job}?x=1"), None, extra_headers);
         assert_eq!(status, 200, "GET /v1/jobs/{job}: {body}");
         let doc = Json::parse(&body).expect("valid status json");
         if doc.get("state").and_then(|v| v.as_str()) == Some("finished") {
@@ -385,7 +392,8 @@ fn tenant_auth_quotas_and_request_ids_over_http() {
     assert!(body.contains("\"tenant\":\"alice\""), "{body}");
     assert!(header(&headers, "x-flexa-request-id").is_some(), "request id echoed: {headers:?}");
     let job = Json::parse(&body).unwrap().get("job").unwrap().as_f64().unwrap() as u64;
-    let doc = wait_finished(&addr, job);
+    // Visibility is tenant-scoped: polling alice's job needs her token.
+    let doc = wait_finished_with(&addr, job, &[("Authorization", "Bearer alice-secret")]);
     assert_eq!(doc.get("tenant").and_then(|v| v.as_str()), Some("alice"), "{doc:?}");
     assert_eq!(doc.get("retries").and_then(|v| v.as_f64()), Some(0.0), "{doc:?}");
 
@@ -475,6 +483,126 @@ fn tenant_auth_quotas_and_request_ids_over_http() {
         assert!(metrics.contains(needle), "missing `{needle}` in:\n{metrics}");
     }
 
+    server.shutdown().expect("clean shutdown");
+}
+
+/// Job visibility is tenant-scoped: another tenant's job answers 404 on
+/// status, events and DELETE — byte-for-byte the same 404 an id that
+/// never existed gets, so ids cannot be probed across tenants. The
+/// owner (and only the owner) still sees everything.
+#[test]
+fn job_visibility_is_scoped_to_the_owning_tenant() {
+    use flexa::tenant::{Tenant, TenantRegistry};
+    let tenants = TenantRegistry::new(vec![
+        Tenant::new("alice").with_token("alice-secret"),
+        Tenant::new("bob").with_token("bob-secret"),
+    ])
+    .unwrap();
+    let server = spawn(
+        HttpConfig::default(),
+        ServeConfig::default().with_workers(1).with_cache_bytes(0).with_tenants(tenants),
+    );
+    let addr = server.addr().to_string();
+    let alice = [("Authorization", "Bearer alice-secret")];
+    let bob = [("Authorization", "Bearer bob-secret")];
+
+    let tiny = "{\"rows\":15,\"cols\":45,\"max_iters\":5,\"target\":0}";
+    let (status, _, body) = req_with(&addr, "POST", "/v1/jobs", Some(tiny), &alice);
+    assert_eq!(status, 202, "{body}");
+    let job = Json::parse(&body).unwrap().get("job").unwrap().as_f64().unwrap() as u64;
+    wait_finished_with(&addr, job, &alice);
+
+    // Bob sees alice's job exactly as he sees a never-submitted id.
+    let (foreign_status, _, foreign_body) =
+        req_with(&addr, "GET", &format!("/v1/jobs/{job}"), None, &bob);
+    let (ghost_status, _, ghost_body) =
+        req_with(&addr, "GET", &format!("/v1/jobs/{}", job + 100_000), None, &bob);
+    assert_eq!(foreign_status, 404, "{foreign_body}");
+    assert_eq!(ghost_status, 404);
+    assert_eq!(
+        foreign_body.replace(&job.to_string(), "ID"),
+        ghost_body.replace(&(job + 100_000).to_string(), "ID"),
+        "a foreign job must be indistinguishable from a nonexistent one"
+    );
+
+    // Same 404 for DELETE and the SSE stream — and nothing got cancelled.
+    let (status, _, body) = req_with(&addr, "DELETE", &format!("/v1/jobs/{job}"), None, &bob);
+    assert_eq!(status, 404, "{body}");
+    let (status, _, body) =
+        req_with(&addr, "GET", &format!("/v1/jobs/{job}/events"), None, &bob);
+    assert_eq!(status, 404, "{body}");
+
+    // The anonymous `default` tenant doesn't see alice's job either.
+    let (status, _, _) = req(&addr, "GET", &format!("/v1/jobs/{job}"), None);
+    assert_eq!(status, 404);
+
+    // The owner still has full access: status, events, delete.
+    let doc = wait_finished_with(&addr, job, &alice);
+    assert_eq!(doc.get("tenant").and_then(|v| v.as_str()), Some("alice"));
+    let (status, _, sse) =
+        req_with(&addr, "GET", &format!("/v1/jobs/{job}/events"), None, &alice);
+    assert_eq!(status, 200);
+    assert!(sse.contains("event: finished"), "{sse}");
+    let (status, _, body) = req_with(&addr, "DELETE", &format!("/v1/jobs/{job}"), None, &alice);
+    assert_eq!(status, 200, "cancel of a finished own job is a no-op 200: {body}");
+
+    server.shutdown().expect("clean shutdown");
+}
+
+/// 429 `Retry-After` is rounded *up* and never 0: a tenant configured
+/// with `retry_after_secs = 0` (or a server with a zero queue-full
+/// backoff) still advertises `Retry-After: 1` while throttled.
+#[test]
+fn retry_after_on_429_never_advertises_zero() {
+    use flexa::tenant::{Tenant, TenantQuota, TenantRegistry};
+    let tenants = TenantRegistry::new(vec![Tenant::new("zero")
+        .with_token("zero-secret")
+        .with_retry_after_secs(0)
+        .with_quota(TenantQuota::unlimited().with_max_queued(0))])
+    .unwrap();
+    let server = spawn(
+        HttpConfig { retry_after_secs: 0, ..HttpConfig::default() },
+        ServeConfig::default()
+            .with_workers(1)
+            .with_queue_capacity(1)
+            .with_cache_bytes(0)
+            .with_tenants(tenants),
+    );
+    let addr = server.addr().to_string();
+    let tiny = "{\"rows\":15,\"cols\":45,\"max_iters\":5,\"target\":0}";
+
+    // Quota arm: max_queued = 0 refuses immediately; the tenant's
+    // retry_after_secs of 0 must surface as `Retry-After: 1`.
+    let (status, headers, body) =
+        req_with(&addr, "POST", "/v1/jobs", Some(tiny), &[("Authorization", "Bearer zero-secret")]);
+    assert_eq!(status, 429, "{body}");
+    assert_eq!(header(&headers, "retry-after"), Some("1"), "{headers:?}");
+
+    // Queue-full arm: occupy the worker, fill the single queue slot,
+    // then overflow — the server's retry_after_secs of 0 also clamps.
+    let long = post_job(
+        &addr,
+        "{\"problem\":\"lasso\",\"rows\":40,\"cols\":120,\"seed\":3,\
+         \"max_iters\":50000000,\"target\":0,\"tag\":\"long\"}",
+    );
+    poll_until_running(&addr, long);
+    let mut clamped = None;
+    for _ in 0..4 {
+        let (status, headers, body) = req(&addr, "POST", "/v1/jobs", Some(tiny));
+        match status {
+            202 => continue,
+            429 => {
+                assert!(body.contains("queue full"), "{body}");
+                clamped = Some(header(&headers, "retry-after").unwrap().to_string());
+                break;
+            }
+            other => panic!("unexpected status {other}: {body}"),
+        }
+    }
+    assert_eq!(clamped.as_deref(), Some("1"), "queue-full Retry-After clamps to 1");
+
+    let (status, _, body) = req(&addr, "DELETE", &format!("/v1/jobs/{long}"), None);
+    assert_eq!(status, 200, "{body}");
     server.shutdown().expect("clean shutdown");
 }
 
