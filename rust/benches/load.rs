@@ -1,0 +1,438 @@
+//! Open-loop load harness: tail latency, shed rates and retries under a
+//! seeded Poisson arrival stream, recorded to `BENCH_load.json`.
+//!
+//! Unlike `benches/serve.rs` (closed-loop: submit a batch, wait), this
+//! harness decides every submission instant *ahead of time* from a
+//! seeded arrival process and fires on that schedule whether or not the
+//! server keeps up — the open-loop discipline that exposes coordinated
+//! omission. Latency is attributed per job from the scheduler's own
+//! event stream:
+//!
+//! * **queue** — `Queued` → `Started` (time spent waiting for a worker),
+//! * **service** — `Started` → `Finished` (solver + bridge time),
+//! * **total** — *intended* arrival instant → `Finished`, so a harness
+//!   that falls behind the schedule still charges the delay to the
+//!   server's tail, not to luck.
+//!
+//! The arrival stream is a pure function of the seed
+//! ([`flexa::bench::arrivals::poisson_stream`]): mixed Lasso sizes,
+//! mixed solvers, 2–3 tenants — one of them rate-limited so the 429 +
+//! `Retry-After` path is exercised on every run. The same seed replays
+//! the identical stream; the harness re-derives the stream after the
+//! run and fails if the two differ.
+//!
+//! Environment knobs:
+//!
+//! * `FLEXA_BENCH_SMOKE=1` — small stream for CI (warn-only guard).
+//! * `FLEXA_LOAD_SEED` — arrival-stream seed (default `0x10AD`).
+//! * `FLEXA_LOAD_TENANTS` — tenants file (TOML or JSON) replacing the
+//!   built-in three-tenant mix; arrival shares follow tenant weights.
+//! * `FLEXA_BENCH_BASELINE` — baseline path override.
+//!
+//! ## Trendline guard
+//!
+//! Fresh p99 total latency and shed rate are compared against the
+//! committed baseline for the matching mode — `BENCH_baseline_load.json`
+//! (full) or `BENCH_baseline_load_smoke.json` (smoke). More than 25%
+//! above the baseline on either axis fails the run (warn-only in smoke
+//! mode, where shared CI runners make wall-clock untrustworthy).
+//! Re-record on a quiet machine with
+//! `cargo bench --bench load && cp BENCH_load.json BENCH_baseline_load.json`.
+//!
+//! A Prometheus snapshot of the server's `/metrics` is written next to
+//! the report as `BENCH_load_metrics.prom` (CI greps it for
+//! `flexa_tenant_rate_limited_total`).
+
+use flexa::bench::arrivals::{poisson_stream, SizeClass, StreamSpec, TenantMix};
+use flexa::bench::histogram::Histogram;
+use flexa::cluster::backend;
+use flexa::http::{HttpConfig, HttpServer};
+use flexa::serve::{JobEvent, ServeConfig, ServeObserver};
+use flexa::tenant::{RateLimit, Tenant, TenantRegistry, DEFAULT_TENANT};
+use std::collections::HashMap;
+use std::sync::{Arc, Mutex};
+use std::time::{Duration, Instant};
+
+/// Per-job event timeline, filled in by [`LoadObserver`].
+#[derive(Clone, Copy, Default)]
+struct Timeline {
+    queued: Option<Instant>,
+    started: Option<Instant>,
+    finished: Option<Instant>,
+    done: bool,
+    retries: u32,
+}
+
+/// Downstream [`ServeObserver`] recording when each job hit each state.
+#[derive(Default)]
+struct LoadObserver {
+    jobs: Mutex<HashMap<u64, Timeline>>,
+}
+
+impl ServeObserver for LoadObserver {
+    fn on_job_event(&self, event: &JobEvent) {
+        let now = Instant::now();
+        let mut jobs = self.jobs.lock().unwrap();
+        let t = jobs.entry(event.job()).or_default();
+        match event {
+            JobEvent::Queued { .. } => t.queued = Some(now),
+            // A retry re-runs the job: keep the *last* start so service
+            // time covers the attempt that actually finished.
+            JobEvent::Started { .. } => t.started = Some(now),
+            JobEvent::Retrying { .. } => t.retries += 1,
+            JobEvent::Finished { outcome, .. } => {
+                t.finished = Some(now);
+                t.done = outcome.is_done();
+            }
+            _ => {}
+        }
+    }
+}
+
+/// Latency summary of one histogram, milliseconds with µs precision.
+fn latency_json(h: &Histogram) -> String {
+    let ms = |us: u64| us as f64 / 1000.0;
+    format!(
+        "{{\"p50_ms\": {:.3}, \"p95_ms\": {:.3}, \"p99_ms\": {:.3}, \"mean_ms\": {:.3}, \"max_ms\": {:.3}, \"samples\": {}}}",
+        ms(h.p50_us()),
+        ms(h.p95_us()),
+        ms(h.p99_us()),
+        h.mean_us() / 1000.0,
+        ms(h.max_us()),
+        h.count()
+    )
+}
+
+/// FNV-1a over every field of the stream — a compact fingerprint for
+/// the report so two runs can be compared for identical schedules.
+fn stream_hash(arrivals: &[flexa::bench::arrivals::Arrival]) -> u64 {
+    let mut h = 0xcbf29ce484222325u64;
+    let mut mix = |x: u64| {
+        h ^= x;
+        h = h.wrapping_mul(0x100000001b3);
+    };
+    for a in arrivals {
+        mix(a.at_ms);
+        mix(a.tenant as u64);
+        mix(a.size.rows as u64);
+        mix(a.size.cols as u64);
+        mix(a.size.max_iters as u64);
+        mix(a.solver as u64);
+        mix(a.problem_seed);
+    }
+    h
+}
+
+fn main() -> anyhow::Result<()> {
+    let smoke = std::env::var_os("FLEXA_BENCH_SMOKE").is_some();
+    let seed = std::env::var("FLEXA_LOAD_SEED")
+        .ok()
+        .map(|s| s.parse::<u64>().expect("FLEXA_LOAD_SEED must be an integer"))
+        .unwrap_or(0x10AD);
+
+    // --- tenants: built-in three-way mix, or a file ---
+    // `burst` is deliberately rate-limited well below its arrival share
+    // so every run exercises the 429 + Retry-After path.
+    let registry = match std::env::var("FLEXA_LOAD_TENANTS") {
+        Ok(path) => TenantRegistry::from_file(&path)?,
+        Err(_) => TenantRegistry::new(vec![
+            Tenant::new("anchor").with_weight(2),
+            Tenant::new("burst").with_rate_limit(RateLimit::per_sec(5.0)),
+            Tenant::new("batch"),
+        ])?,
+    };
+    // Arrival shares follow tenant weights; the implicit `default`
+    // tenant stays out of the mix unless the file left nothing else.
+    let mut mixes: Vec<TenantMix> = registry
+        .iter()
+        .filter(|t| t.enabled && t.id != DEFAULT_TENANT && t.token.is_none())
+        .map(|t| TenantMix { id: t.id.clone(), share: t.weight as f64 })
+        .collect();
+    if mixes.is_empty() {
+        mixes.push(TenantMix { id: DEFAULT_TENANT.into(), share: 1.0 });
+    }
+    let limited: Vec<String> = registry
+        .iter()
+        .filter(|t| t.rate_limit.is_some())
+        .map(|t| t.id.clone())
+        .collect();
+
+    // --- the arrival schedule: pure function of the seed ---
+    let spec = StreamSpec {
+        seed,
+        rate_per_sec: if smoke { 60.0 } else { 120.0 },
+        duration_ms: if smoke { 2_000 } else { 8_000 },
+        tenants: mixes,
+        sizes: vec![
+            SizeClass { rows: 15, cols: 45, max_iters: 8 },
+            SizeClass { rows: 30, cols: 90, max_iters: 16 },
+            SizeClass { rows: 40, cols: 120, max_iters: 24 },
+        ],
+        solvers: vec!["fpa".into(), "fista".into()],
+    };
+    let arrivals = poisson_stream(&spec);
+    let hash = stream_hash(&arrivals);
+    println!(
+        "load bench: seed {seed:#x}, {} arrivals over {}ms at {}/s across {} tenants (stream {hash:#018x}), smoke={smoke}",
+        arrivals.len(),
+        spec.duration_ms,
+        spec.rate_per_sec,
+        spec.tenants.len()
+    );
+
+    // --- in-process server, observer tapped into the event stream ---
+    let observer = Arc::new(LoadObserver::default());
+    let serve = ServeConfig::default()
+        .with_workers(4)
+        .with_queue_capacity(1024)
+        .with_tenants(registry);
+    let http = HttpConfig { access_log: false, ..HttpConfig::default() };
+    let server = HttpServer::bind_with_downstream(
+        "127.0.0.1:0",
+        http,
+        serve,
+        flexa::api::Registry::with_defaults(),
+        Some(observer.clone() as Arc<dyn ServeObserver>),
+    )?
+    .spawn();
+    let addr = server.addr().to_string();
+    let timeout = Duration::from_secs(30);
+
+    // --- replay the schedule, open loop ---
+    #[derive(Default)]
+    struct TenantTally {
+        sent: u64,
+        accepted: u64,
+        rate_limited: u64,
+        queue_full: u64,
+    }
+    let mut tally: HashMap<String, TenantTally> = HashMap::new();
+    // job id -> (intended arrival instant, tenant index)
+    let mut intended: HashMap<u64, Instant> = HashMap::new();
+    let mut other_errors = 0u64;
+    let epoch = Instant::now();
+    for (i, a) in arrivals.iter().enumerate() {
+        let due = epoch + Duration::from_millis(a.at_ms);
+        if let Some(wait) = due.checked_duration_since(Instant::now()) {
+            std::thread::sleep(wait);
+        }
+        let tenant = &spec.tenants[a.tenant].id;
+        let body = format!(
+            "{{\"problem\":\"lasso\",\"rows\":{},\"cols\":{},\"sparsity\":0.1,\"seed\":{},\
+             \"algo\":\"{}\",\"max_iters\":{},\"target\":0.0,\"tenant\":\"{}\",\"tag\":\"load-{i}\"}}",
+            a.size.rows,
+            a.size.cols,
+            a.problem_seed,
+            spec.solvers[a.solver],
+            a.size.max_iters,
+            tenant
+        );
+        let reply =
+            backend::request(&addr, "POST", "/v1/jobs", &[], Some(body.as_bytes()), timeout)?;
+        let t = tally.entry(tenant.clone()).or_default();
+        t.sent += 1;
+        match reply.status {
+            202 => {
+                t.accepted += 1;
+                let doc = flexa::serve::Json::parse(&reply.body_str())?;
+                let job = doc
+                    .get("job")
+                    .and_then(|v| v.as_f64())
+                    .ok_or_else(|| anyhow::anyhow!("202 without a job id"))?
+                    as u64;
+                intended.insert(job, due);
+            }
+            429 => {
+                // Every 429 must advertise an integral, non-zero backoff.
+                let retry_after = reply
+                    .header("retry-after")
+                    .and_then(|v| v.parse::<u64>().ok())
+                    .unwrap_or(0);
+                anyhow::ensure!(
+                    retry_after >= 1,
+                    "429 without a usable Retry-After: {}",
+                    reply.body_str()
+                );
+                if reply.body_str().contains("rate limit") {
+                    t.rate_limited += 1;
+                } else {
+                    t.queue_full += 1;
+                }
+            }
+            other => {
+                other_errors += 1;
+                eprintln!("unexpected {other}: {}", reply.body_str());
+            }
+        }
+    }
+    let accepted: u64 = tally.values().map(|t| t.accepted).sum();
+    let shed: u64 = tally.values().map(|t| t.rate_limited + t.queue_full).sum();
+    anyhow::ensure!(other_errors == 0, "{other_errors} submissions failed outside 202/429");
+    anyhow::ensure!(accepted > 0, "load run accepted no jobs; nothing to measure");
+
+    // --- drain: every accepted job must reach a terminal event ---
+    let drain_deadline = Instant::now() + Duration::from_secs(if smoke { 60 } else { 180 });
+    loop {
+        let finished = {
+            let jobs = observer.jobs.lock().unwrap();
+            intended.keys().filter(|id| jobs.get(id).is_some_and(|t| t.finished.is_some())).count()
+        };
+        if finished as u64 == accepted {
+            break;
+        }
+        anyhow::ensure!(
+            Instant::now() < drain_deadline,
+            "drain timed out with {finished}/{accepted} jobs finished"
+        );
+        std::thread::sleep(Duration::from_millis(5));
+    }
+    let drain_s = epoch.elapsed().as_secs_f64();
+    let throughput = accepted as f64 / drain_s.max(1e-9);
+
+    // --- metrics snapshot for CI (rate-limit counters visible) ---
+    let metrics = backend::request(&addr, "GET", "/metrics", &[], None, timeout)?;
+    anyhow::ensure!(metrics.status == 200, "GET /metrics -> {}", metrics.status);
+    std::fs::write("BENCH_load_metrics.prom", metrics.body_str())?;
+    if !limited.is_empty() {
+        anyhow::ensure!(
+            metrics.body_str().contains("flexa_tenant_rate_limited_total"),
+            "/metrics is missing flexa_tenant_rate_limited_total"
+        );
+    }
+    server.shutdown().map_err(|e| anyhow::anyhow!("server shutdown: {e:#}"))?;
+
+    // --- histograms from the recorded timelines ---
+    let (mut queue_h, mut service_h, mut total_h) = (Histogram::new(), Histogram::new(), Histogram::new());
+    let (mut retries, mut failed) = (0u64, 0u64);
+    {
+        let jobs = observer.jobs.lock().unwrap();
+        for (id, due) in &intended {
+            let t = jobs[id];
+            retries += u64::from(t.retries);
+            if !t.done {
+                failed += 1;
+            }
+            if let (Some(q), Some(s)) = (t.queued, t.started) {
+                queue_h.record(s.saturating_duration_since(q));
+            }
+            if let (Some(s), Some(f)) = (t.started, t.finished) {
+                service_h.record(f.saturating_duration_since(s));
+            }
+            if let Some(f) = t.finished {
+                total_h.record(f.saturating_duration_since(*due));
+            }
+        }
+    }
+    let shed_rate = shed as f64 / arrivals.len() as f64;
+    println!(
+        "accepted {accepted}/{} ({shed} shed, rate {shed_rate:.3}), {failed} failed, {retries} retries, drained in {drain_s:.2}s ({throughput:.1} jobs/s)",
+        arrivals.len()
+    );
+    println!(
+        "latency ms: queue p50/p99 {:.1}/{:.1}, service p50/p99 {:.1}/{:.1}, total p50/p99 {:.1}/{:.1}",
+        queue_h.p50_us() as f64 / 1000.0,
+        queue_h.p99_us() as f64 / 1000.0,
+        service_h.p50_us() as f64 / 1000.0,
+        service_h.p99_us() as f64 / 1000.0,
+        total_h.p50_us() as f64 / 1000.0,
+        total_h.p99_us() as f64 / 1000.0,
+    );
+    anyhow::ensure!(failed == 0, "{failed} accepted jobs did not run to completion");
+
+    // --- determinism re-check: the schedule must replay bit-for-bit ---
+    let replay = poisson_stream(&spec);
+    anyhow::ensure!(
+        replay == arrivals && stream_hash(&replay) == hash,
+        "arrival stream is not deterministic: same seed produced a different schedule"
+    );
+
+    // --- record ---
+    let mut tenant_ids: Vec<&String> = tally.keys().collect();
+    tenant_ids.sort();
+    let tenants_json = tenant_ids
+        .iter()
+        .map(|id| {
+            let t = &tally[*id];
+            format!(
+                "\"{id}\": {{\"sent\": {}, \"accepted\": {}, \"rate_limited_429\": {}, \"queue_429\": {}}}",
+                t.sent, t.accepted, t.rate_limited, t.queue_full
+            )
+        })
+        .collect::<Vec<_>>()
+        .join(", ");
+    let json = format!(
+        "{{\n  \"bench\": \"load\",\n  \"smoke\": {smoke},\n  \"seed\": {seed},\n  \"stream\": {{\"rate_per_sec\": {}, \"duration_ms\": {}, \"arrivals\": {}, \"hash\": \"{hash:#018x}\"}},\n  \"jobs\": {{\"accepted\": {accepted}, \"shed_429\": {shed}, \"failed\": {failed}, \"retries\": {retries}}},\n  \"shed_rate\": {shed_rate:.5},\n  \"throughput_jobs_per_s\": {throughput:.3},\n  \"latency\": {{\n    \"queue\": {},\n    \"service\": {},\n    \"total\": {}\n  }},\n  \"tenants\": {{{tenants_json}}}\n}}\n",
+        spec.rate_per_sec,
+        spec.duration_ms,
+        arrivals.len(),
+        latency_json(&queue_h),
+        latency_json(&service_h),
+        latency_json(&total_h),
+    );
+    std::fs::write("BENCH_load.json", &json)?;
+    println!("wrote BENCH_load.json (+ BENCH_load_metrics.prom)");
+
+    // --- trendline guard vs the committed baseline ---
+    let baseline_path = std::env::var("FLEXA_BENCH_BASELINE").unwrap_or_else(|_| {
+        if smoke { "BENCH_baseline_load_smoke.json" } else { "BENCH_baseline_load.json" }.to_string()
+    });
+    let p99_total_ms = total_h.p99_us() as f64 / 1000.0;
+    match std::fs::read_to_string(&baseline_path) {
+        Err(_) => println!(
+            "no baseline at {baseline_path}; skipping trendline check \
+             (record one: cp BENCH_load.json {baseline_path})"
+        ),
+        Ok(text) => {
+            let doc = flexa::serve::Json::parse(&text)
+                .map_err(|e| anyhow::anyhow!("baseline {baseline_path} is not valid JSON: {e:#}"))?;
+            let base_smoke = doc.get("smoke").and_then(|v| v.as_bool()).unwrap_or(false);
+            if base_smoke != smoke {
+                println!(
+                    "baseline {baseline_path} was recorded with smoke={base_smoke}, this run \
+                     is smoke={smoke}; workloads differ, skipping the trendline comparison"
+                );
+                return Ok(());
+            }
+            let base_p99 = doc
+                .get("latency")
+                .and_then(|l| l.get("total"))
+                .and_then(|t| t.get("p99_ms"))
+                .and_then(|v| v.as_f64())
+                .ok_or_else(|| {
+                    anyhow::anyhow!("baseline {baseline_path} has no latency.total.p99_ms")
+                })?;
+            let base_shed = doc
+                .get("shed_rate")
+                .and_then(|v| v.as_f64())
+                .ok_or_else(|| anyhow::anyhow!("baseline {baseline_path} has no shed_rate"))?;
+            // >25% regression on either axis fails; shed gets a small
+            // absolute floor so a zero-shed baseline is comparable.
+            let p99_ceiling = base_p99 * 1.25;
+            let shed_ceiling = base_shed * 1.25 + 0.02;
+            println!(
+                "trendline: p99 {p99_total_ms:.1}ms vs baseline {base_p99:.1}ms (ceiling {p99_ceiling:.1}ms), \
+                 shed {shed_rate:.3} vs {base_shed:.3} (ceiling {shed_ceiling:.3})"
+            );
+            let mut regressions = Vec::new();
+            if p99_total_ms > p99_ceiling {
+                regressions.push(format!(
+                    "p99 total latency {p99_total_ms:.1}ms is more than 25% above the {base_p99:.1}ms baseline"
+                ));
+            }
+            if shed_rate > shed_ceiling {
+                regressions.push(format!(
+                    "shed rate {shed_rate:.3} is more than 25% above the {base_shed:.3} baseline"
+                ));
+            }
+            if !regressions.is_empty() {
+                let msg = format!("{} (baseline {baseline_path})", regressions.join("; "));
+                if smoke {
+                    println!("WARN (smoke mode is warn-only): {msg}");
+                } else {
+                    anyhow::bail!(msg);
+                }
+            }
+        }
+    }
+    Ok(())
+}

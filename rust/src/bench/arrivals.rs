@@ -1,0 +1,179 @@
+//! Seeded open-loop arrival streams for the load harness.
+//!
+//! An *open-loop* load generator decides every submission instant ahead
+//! of time from an arrival process, then fires on that schedule no
+//! matter how the server keeps up — the closed-loop alternative (submit,
+//! wait, repeat) silently slows down with the server and hides exactly
+//! the queueing tail a load test exists to find (coordinated omission).
+//!
+//! The stream is a Poisson process: exponential inter-arrival gaps
+//! `-ln(U)/λ` drawn from one seeded [`Xoshiro256pp`] stream, with the
+//! tenant, problem size, and solver of each arrival drawn from the same
+//! stream. Everything is a pure function of the [`StreamSpec`] — no
+//! wall-clock randomness — so two runs with the same seed replay the
+//! identical request sequence (pinned by a test here and re-checked by
+//! `benches/load.rs` at runtime).
+
+use crate::prng::Xoshiro256pp;
+
+/// A tenant participating in the generated load, with its relative
+/// share of arrivals.
+#[derive(Clone, Debug)]
+pub struct TenantMix {
+    pub id: String,
+    /// Relative arrival share (any positive scale; normalized).
+    pub share: f64,
+}
+
+/// One job-size class in the mix (Lasso geometry).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct SizeClass {
+    pub rows: usize,
+    pub cols: usize,
+    pub max_iters: usize,
+}
+
+/// Everything that determines an arrival stream. Pure input: the same
+/// spec always generates the same stream.
+#[derive(Clone, Debug)]
+pub struct StreamSpec {
+    /// PRNG seed for gaps and mixes alike.
+    pub seed: u64,
+    /// Aggregate arrival rate λ, jobs per second.
+    pub rate_per_sec: f64,
+    /// Horizon: arrivals strictly before this offset are generated.
+    pub duration_ms: u64,
+    /// Tenants and their relative shares (must be non-empty).
+    pub tenants: Vec<TenantMix>,
+    /// Job-size classes, drawn uniformly (must be non-empty).
+    pub sizes: Vec<SizeClass>,
+    /// Solver names, drawn uniformly (must be non-empty).
+    pub solvers: Vec<String>,
+}
+
+/// One scheduled submission.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct Arrival {
+    /// Submission offset from stream start, milliseconds.
+    pub at_ms: u64,
+    /// Index into [`StreamSpec::tenants`].
+    pub tenant: usize,
+    /// Problem geometry and iteration budget.
+    pub size: SizeClass,
+    /// Index into [`StreamSpec::solvers`].
+    pub solver: usize,
+    /// Per-job problem seed (deterministic, from the stream PRNG).
+    pub problem_seed: u64,
+}
+
+/// Generate the full arrival schedule for `spec`. Deterministic given
+/// the spec; panics on an empty mix or a non-positive rate (a load test
+/// with nothing to send is a configuration bug, not a data point).
+pub fn poisson_stream(spec: &StreamSpec) -> Vec<Arrival> {
+    assert!(
+        spec.rate_per_sec.is_finite() && spec.rate_per_sec > 0.0,
+        "poisson_stream: rate must be positive"
+    );
+    assert!(!spec.tenants.is_empty(), "poisson_stream: no tenants");
+    assert!(!spec.sizes.is_empty(), "poisson_stream: no size classes");
+    assert!(!spec.solvers.is_empty(), "poisson_stream: no solvers");
+    let total_share: f64 = spec.tenants.iter().map(|t| t.share.max(0.0)).sum();
+    assert!(total_share > 0.0, "poisson_stream: all tenant shares are zero");
+
+    let mut rng = Xoshiro256pp::seed_from_u64(spec.seed);
+    let mut out = Vec::new();
+    let mut t_ms = 0.0f64;
+    loop {
+        // Exponential gap with mean 1/λ seconds.
+        let gap_s = -rng.next_f64_open().ln() / spec.rate_per_sec;
+        t_ms += gap_s * 1000.0;
+        if !(t_ms < spec.duration_ms as f64) {
+            return out;
+        }
+        // Weighted tenant pick: first prefix whose cumulative share
+        // covers the draw.
+        let draw = rng.next_f64() * total_share;
+        let mut acc = 0.0;
+        let mut tenant = spec.tenants.len() - 1;
+        for (i, t) in spec.tenants.iter().enumerate() {
+            acc += t.share.max(0.0);
+            if draw < acc {
+                tenant = i;
+                break;
+            }
+        }
+        let size = spec.sizes[rng.next_below(spec.sizes.len() as u64) as usize];
+        let solver = rng.next_below(spec.solvers.len() as u64) as usize;
+        let problem_seed = rng.next_u64();
+        out.push(Arrival { at_ms: t_ms as u64, tenant, size, solver, problem_seed });
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn spec(seed: u64) -> StreamSpec {
+        StreamSpec {
+            seed,
+            rate_per_sec: 50.0,
+            duration_ms: 10_000,
+            tenants: vec![
+                TenantMix { id: "alice".into(), share: 3.0 },
+                TenantMix { id: "bob".into(), share: 1.0 },
+            ],
+            sizes: vec![
+                SizeClass { rows: 15, cols: 45, max_iters: 10 },
+                SizeClass { rows: 30, cols: 90, max_iters: 20 },
+            ],
+            solvers: vec!["fpa".into(), "fista".into()],
+        }
+    }
+
+    /// The tentpole determinism contract: same seed, identical stream.
+    #[test]
+    fn same_seed_generates_identical_streams() {
+        let a = poisson_stream(&spec(42));
+        let b = poisson_stream(&spec(42));
+        assert!(!a.is_empty());
+        assert_eq!(a, b, "same seed must replay the identical arrival stream");
+        let c = poisson_stream(&spec(43));
+        assert_ne!(a, c, "a different seed must not replay the same stream");
+    }
+
+    /// Statistical sanity: ~λ·T arrivals, sorted times within the
+    /// horizon, and every tenant/size/solver appears.
+    #[test]
+    fn stream_has_poisson_shape_and_covers_the_mix() {
+        let s = spec(7);
+        let arrivals = poisson_stream(&s);
+        // 50/s for 10 s -> ~500; Poisson std dev ~22, allow 6 sigma.
+        assert!(
+            (arrivals.len() as i64 - 500).abs() < 140,
+            "expected ~500 arrivals, got {}",
+            arrivals.len()
+        );
+        assert!(arrivals.windows(2).all(|w| w[0].at_ms <= w[1].at_ms), "sorted by time");
+        assert!(arrivals.iter().all(|a| a.at_ms < s.duration_ms), "within the horizon");
+        // 3:1 tenant shares: alice gets roughly three quarters.
+        let alice = arrivals.iter().filter(|a| a.tenant == 0).count();
+        let frac = alice as f64 / arrivals.len() as f64;
+        assert!((frac - 0.75).abs() < 0.12, "alice share {frac}");
+        for size in &s.sizes {
+            assert!(arrivals.iter().any(|a| a.size == *size), "size {size:?} never drawn");
+        }
+        for solver in 0..s.solvers.len() {
+            assert!(arrivals.iter().any(|a| a.solver == solver), "solver {solver} never drawn");
+        }
+        // Problem seeds vary (warm-start cache stays honest under load).
+        assert!(arrivals.windows(2).any(|w| w[0].problem_seed != w[1].problem_seed));
+    }
+
+    #[test]
+    #[should_panic(expected = "rate must be positive")]
+    fn zero_rate_is_a_configuration_bug() {
+        let mut s = spec(1);
+        s.rate_per_sec = 0.0;
+        poisson_stream(&s);
+    }
+}

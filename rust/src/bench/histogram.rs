@@ -1,0 +1,232 @@
+//! Fixed-bucket latency histograms for the load harness.
+//!
+//! Open-loop load tests produce latency samples whose *tail* is the
+//! signal, so the recorder must be allocation-free on the hot path and
+//! mergeable across tenants/phases. Buckets are a fixed 1–2–5 series of
+//! upper bounds from 100 µs to 60 s plus an overflow bucket — fixed
+//! (not adaptive) so two histograms from different runs or tenants are
+//! always bucket-compatible and [`Histogram::merge`] is a plain
+//! element-wise add. Quantiles report the upper bound of the bucket
+//! holding the q-th sample: a conservative (never under-reported)
+//! latency with bounded relative error set by the 1–2–5 spacing.
+
+use std::time::Duration;
+
+/// Bucket upper bounds in microseconds (ascending, 1–2–5 series).
+/// Samples above the last bound land in the overflow bucket.
+pub const BUCKET_BOUNDS_US: &[u64] = &[
+    100,
+    200,
+    500,
+    1_000,
+    2_000,
+    5_000,
+    10_000,
+    20_000,
+    50_000,
+    100_000,
+    200_000,
+    500_000,
+    1_000_000,
+    2_000_000,
+    5_000_000,
+    10_000_000,
+    20_000_000,
+    60_000_000,
+];
+
+/// Fixed-bucket latency histogram (microsecond samples).
+#[derive(Clone, Debug)]
+pub struct Histogram {
+    /// One count per bound, plus the trailing overflow bucket.
+    counts: Vec<u64>,
+    count: u64,
+    sum_us: u64,
+    max_us: u64,
+}
+
+impl Default for Histogram {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Histogram {
+    pub fn new() -> Self {
+        Self { counts: vec![0; BUCKET_BOUNDS_US.len() + 1], count: 0, sum_us: 0, max_us: 0 }
+    }
+
+    /// Record one latency sample in microseconds.
+    pub fn record_us(&mut self, us: u64) {
+        let idx = BUCKET_BOUNDS_US.partition_point(|&bound| bound < us);
+        self.counts[idx] += 1;
+        self.count += 1;
+        self.sum_us = self.sum_us.saturating_add(us);
+        self.max_us = self.max_us.max(us);
+    }
+
+    /// Record one latency sample as a [`Duration`].
+    pub fn record(&mut self, d: Duration) {
+        self.record_us(d.as_micros().min(u128::from(u64::MAX)) as u64);
+    }
+
+    /// Element-wise merge (the fixed bucket layout makes histograms from
+    /// any run/tenant compatible).
+    pub fn merge(&mut self, other: &Histogram) {
+        for (mine, theirs) in self.counts.iter_mut().zip(&other.counts) {
+            *mine += theirs;
+        }
+        self.count += other.count;
+        self.sum_us = self.sum_us.saturating_add(other.sum_us);
+        self.max_us = self.max_us.max(other.max_us);
+    }
+
+    /// Total samples recorded.
+    pub fn count(&self) -> u64 {
+        self.count
+    }
+
+    /// Exact maximum sample (not bucketized).
+    pub fn max_us(&self) -> u64 {
+        self.max_us
+    }
+
+    /// Mean in microseconds (0 when empty; exact, from the running sum).
+    pub fn mean_us(&self) -> f64 {
+        if self.count == 0 {
+            0.0
+        } else {
+            self.sum_us as f64 / self.count as f64
+        }
+    }
+
+    /// The q-quantile (`0 < q <= 1`) as the upper bound of the bucket
+    /// holding the ⌈q·count⌉-th smallest sample — conservative, never
+    /// under the true quantile. Overflow samples report the exact
+    /// observed maximum. Returns 0 when empty.
+    pub fn quantile_us(&self, q: f64) -> u64 {
+        if self.count == 0 {
+            return 0;
+        }
+        let rank = ((q * self.count as f64).ceil() as u64).clamp(1, self.count);
+        let mut seen = 0u64;
+        for (idx, &c) in self.counts.iter().enumerate() {
+            seen += c;
+            if seen >= rank {
+                return match BUCKET_BOUNDS_US.get(idx) {
+                    Some(&bound) => bound,
+                    None => self.max_us,
+                };
+            }
+        }
+        self.max_us
+    }
+
+    pub fn p50_us(&self) -> u64 {
+        self.quantile_us(0.50)
+    }
+
+    pub fn p95_us(&self) -> u64 {
+        self.quantile_us(0.95)
+    }
+
+    pub fn p99_us(&self) -> u64 {
+        self.quantile_us(0.99)
+    }
+
+    /// `(upper_bound_us, count)` pairs for non-empty buckets; the
+    /// overflow bucket reports `u64::MAX` as its bound.
+    pub fn nonzero_buckets(&self) -> Vec<(u64, u64)> {
+        self.counts
+            .iter()
+            .enumerate()
+            .filter(|(_, &c)| c > 0)
+            .map(|(i, &c)| (BUCKET_BOUNDS_US.get(i).copied().unwrap_or(u64::MAX), c))
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Bucket boundary semantics: a sample equal to a bound lands in
+    /// that bound's bucket (bounds are inclusive upper limits).
+    #[test]
+    fn bucket_boundaries_are_inclusive_upper_bounds() {
+        let mut h = Histogram::new();
+        h.record_us(100); // first bucket (<= 100)
+        h.record_us(101); // second bucket (<= 200)
+        h.record_us(1); // first bucket
+        assert_eq!(h.count(), 3);
+        assert_eq!(h.nonzero_buckets(), vec![(100, 2), (200, 1)]);
+        // Overflow: beyond the last bound.
+        let mut h = Histogram::new();
+        h.record_us(61_000_000);
+        assert_eq!(h.nonzero_buckets(), vec![(u64::MAX, 1)]);
+        assert_eq!(h.p99_us(), 61_000_000, "overflow quantile reports the observed max");
+    }
+
+    /// Quantile exactness on a known distribution: 100 samples of
+    /// 1..=100 ms. The q-th quantile is the bucket bound covering the
+    /// ⌈q·100⌉-th sample.
+    #[test]
+    fn quantiles_are_exact_on_a_known_distribution() {
+        let mut h = Histogram::new();
+        for ms in 1..=100u64 {
+            h.record_us(ms * 1000);
+        }
+        assert_eq!(h.count(), 100);
+        // p50: 50th sample = 50 ms -> bucket bound 50 ms.
+        assert_eq!(h.p50_us(), 50_000);
+        // p95: 95th sample = 95 ms -> bucket bound 100 ms.
+        assert_eq!(h.p95_us(), 100_000);
+        assert_eq!(h.p99_us(), 100_000);
+        assert_eq!(h.quantile_us(1.0), 100_000);
+        // Smallest rank: the 1st sample (1 ms) -> 1 ms bound.
+        assert_eq!(h.quantile_us(0.005), 1_000);
+        assert!((h.mean_us() - 50_500.0).abs() < 1e-9, "exact mean from the running sum");
+        assert_eq!(h.max_us(), 100_000);
+    }
+
+    /// Merging equals recording the union: same counts, quantiles, max.
+    #[test]
+    fn merge_equals_union() {
+        let (mut a, mut b, mut union) = (Histogram::new(), Histogram::new(), Histogram::new());
+        for us in [90, 150, 900, 4_000, 70_000_000] {
+            a.record_us(us);
+            union.record_us(us);
+        }
+        for us in [120, 600, 2_500, 9_999, 100] {
+            b.record_us(us);
+            union.record_us(us);
+        }
+        a.merge(&b);
+        assert_eq!(a.count(), union.count());
+        assert_eq!(a.nonzero_buckets(), union.nonzero_buckets());
+        for q in [0.1, 0.5, 0.9, 0.95, 0.99, 1.0] {
+            assert_eq!(a.quantile_us(q), union.quantile_us(q), "q={q}");
+        }
+        assert_eq!(a.max_us(), union.max_us());
+        assert!((a.mean_us() - union.mean_us()).abs() < 1e-9);
+    }
+
+    #[test]
+    fn empty_histogram_reports_zeroes() {
+        let h = Histogram::new();
+        assert_eq!(h.count(), 0);
+        assert_eq!(h.p50_us(), 0);
+        assert_eq!(h.p99_us(), 0);
+        assert_eq!(h.mean_us(), 0.0);
+        assert!(h.nonzero_buckets().is_empty());
+    }
+
+    /// Duration recording truncates to whole microseconds.
+    #[test]
+    fn record_duration_uses_microseconds() {
+        let mut h = Histogram::new();
+        h.record(Duration::from_millis(3));
+        assert_eq!(h.nonzero_buckets(), vec![(5_000, 1)]);
+        assert_eq!(h.max_us(), 3_000);
+    }
+}

@@ -1,11 +1,15 @@
 //! Bench-harness substrate (no `criterion` in the offline crate cache).
 //!
 //! Provides warmup + repeated timing with robust statistics and a table
-//! printer, plus the Fig. 1 panel runner ([`fig1`]). The
-//! `rust/benches/*.rs` targets (declared `harness = false`) use these to
-//! regenerate the paper's tables/figures.
+//! printer, plus the Fig. 1 panel runner ([`fig1`]), fixed-bucket
+//! latency histograms ([`histogram`]) and seeded open-loop arrival
+//! streams ([`arrivals`]) for the load harness. The `rust/benches/*.rs`
+//! targets (declared `harness = false`) use these to regenerate the
+//! paper's tables/figures and the serving-layer SLO reports.
 
+pub mod arrivals;
 pub mod fig1;
+pub mod histogram;
 
 use std::time::Instant;
 

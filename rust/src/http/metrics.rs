@@ -105,6 +105,12 @@ pub fn render_prometheus(
     );
     counter(
         &mut s,
+        "flexa_jobs_rate_limited_total",
+        "Submissions refused by a tenant rate limit.",
+        sched.rate_limited,
+    );
+    counter(
+        &mut s,
         "flexa_jobs_retried_total",
         "Retry attempts scheduled by the retry policy.",
         sched.retried,
@@ -157,6 +163,13 @@ pub fn render_prometheus(
         "Quota refusals, by tenant.",
         "counter",
         &|t| t.quota_rejected as f64,
+    );
+    tenant_family(
+        &mut s,
+        "flexa_tenant_rate_limited_total",
+        "Rate-limit refusals, by tenant.",
+        "counter",
+        &|t| t.rate_limited as f64,
     );
     tenant_family(
         &mut s,
@@ -230,6 +243,7 @@ mod tests {
             submitted: 9,
             rejected: 2,
             quota_rejected: 3,
+            rate_limited: 7,
             retried: 6,
             queue_depth: 1,
             running: 4,
@@ -244,6 +258,7 @@ mod tests {
                 submitted: 6,
                 finished: 4,
                 quota_rejected: 3,
+                rate_limited: 5,
                 retried: 6,
                 queued: 1,
                 running: 2,
@@ -273,6 +288,7 @@ mod tests {
             "flexa_jobs_submitted_total 9",
             "flexa_jobs_rejected_total 2",
             "flexa_jobs_quota_rejected_total 3",
+            "flexa_jobs_rate_limited_total 7",
             "flexa_jobs_retried_total 6",
             "flexa_jobs_finished_total{outcome=\"done\"} 5",
             "flexa_jobs_finished_total{outcome=\"cancelled\"} 1",
@@ -281,6 +297,8 @@ mod tests {
             "flexa_tenant_jobs_submitted_total{tenant=\"alice\"} 6",
             "flexa_tenant_jobs_submitted_total{tenant=\"default\"} 3",
             "flexa_tenant_quota_rejected_total{tenant=\"alice\"} 3",
+            "flexa_tenant_rate_limited_total{tenant=\"alice\"} 5",
+            "flexa_tenant_rate_limited_total{tenant=\"default\"} 0",
             "flexa_tenant_queue_depth{tenant=\"alice\"} 1",
             "flexa_tenant_jobs_running{tenant=\"alice\"} 2",
             "flexa_cache_hits_total 7",

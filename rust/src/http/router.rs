@@ -354,19 +354,33 @@ fn submit(state: &ServerState, req: &Request) -> Response {
                 ),
             )
         }
-        // Both 429 arms advertise the backoff via
+        // Every 429 arm advertises the backoff via
         // `advertised_retry_after_secs`: rounded up, never `0` (a
         // `Retry-After: 0` while throttled spins clients against the
-        // same refusal).
-        Err(SubmitError::QueueFull(full)) => Response::error(429, &full.to_string()).with_header(
-            "Retry-After",
-            advertised_retry_after_secs(state.config.retry_after_secs.saturating_mul(1000))
-                .to_string(),
-        ),
+        // same refusal). Queue-full and quota refusals wait on a *slot*,
+        // so the honest estimate is the scheduler's observed service
+        // rate; the configured constants remain the fallback until one
+        // is observable. Rate-limit refusals wait on a *token*, whose
+        // exact accrual time the bucket already computed.
+        Err(SubmitError::QueueFull(full)) => {
+            let backoff_ms = state
+                .scheduler
+                .retry_after_hint_ms()
+                .unwrap_or_else(|| state.config.retry_after_secs.saturating_mul(1000));
+            Response::error(429, &full.to_string())
+                .with_header("Retry-After", advertised_retry_after_secs(backoff_ms).to_string())
+        }
         Err(SubmitError::Quota { quota, .. }) => {
-            let retry_after =
-                advertised_retry_after_secs(quota.retry_after_secs.saturating_mul(1000));
+            let backoff_ms = state
+                .scheduler
+                .retry_after_hint_ms()
+                .unwrap_or_else(|| quota.retry_after_secs.saturating_mul(1000));
             Response::error(429, &quota.to_string())
+                .with_header("Retry-After", advertised_retry_after_secs(backoff_ms).to_string())
+        }
+        Err(SubmitError::RateLimited { rate, .. }) => {
+            let retry_after = advertised_retry_after_secs(rate.retry_after_ms);
+            Response::error(429, &rate.to_string())
                 .with_header("Retry-After", retry_after.to_string())
         }
         // Unreachable after resolve_tenant, but map them sanely anyway.

@@ -211,6 +211,7 @@ fn cmd_serve(args: &[String]) -> anyhow::Result<()> {
         .opt("max-conns", Some("64"), "concurrent HTTP connections (with --http)")
         .opt("max-body-kb", Some("1024"), "largest accepted HTTP request body, KiB (with --http)")
         .flag("no-access-log", "suppress the per-request access-log lines (with --http)")
+        .flag("no-core-rebalance", "pin each job's kernel-thread share at dispatch instead of re-evaluating it at iteration boundaries")
         .flag("stream", "emit every job lifecycle event as a JSON line")
         .flag("quiet", "suppress the stderr summary");
     let p = cmd.parse(args)?;
@@ -251,6 +252,9 @@ fn cmd_serve(args: &[String]) -> anyhow::Result<()> {
         let threads =
             flexa::serve::jobfile::validate_threads(p.usize("threads")?, "--threads")?;
         config = config.with_core_budget(threads);
+    }
+    if p.flag("no-core-rebalance") {
+        config = config.with_core_rebalance(false);
     }
     if let Some(path) = p.get("tenants") {
         config = config.with_tenants(flexa::tenant::TenantRegistry::from_file(path)?);

@@ -88,6 +88,18 @@ pub fn with_threads<R>(threads: usize, f: impl FnOnce() -> R) -> R {
     f()
 }
 
+/// Reset the current thread's kernel budget in place (clamped to
+/// `[1, MAX_POOL_THREADS]`), without a new scope. The serve layer calls
+/// this at iteration boundaries to rebalance core shares mid-solve; a
+/// surrounding [`with_threads`] still restores its saved value on exit,
+/// so the adjustment never leaks past the enclosing scope. Like every
+/// thread knob here it is purely a speed control — [`task_ranges`] does
+/// not depend on the budget, so results are bit-identical regardless of
+/// when (or whether) this is called.
+pub fn set_current_threads(threads: usize) {
+    BUDGET.with(|b| b.set(Some(threads.clamp(1, MAX_POOL_THREADS))));
+}
+
 /// Deterministic task boundaries over `0..len`: up to [`MAX_TASKS`]
 /// contiguous ranges of at least `min_chunk` elements, sizes rounded up
 /// to a multiple of `align` (so e.g. 4-column kernel blocks never
@@ -200,6 +212,28 @@ pub fn map_ranges(ranges: &[Range<usize>], f: impl Fn(usize, Range<usize>) -> f6
 mod tests {
     use super::*;
     use std::sync::atomic::{AtomicUsize, Ordering};
+
+    /// `set_current_threads` adjusts the budget in place; a surrounding
+    /// `with_threads` still restores its saved value on exit, so the
+    /// mid-scope adjustment never leaks.
+    #[test]
+    fn set_current_threads_adjusts_within_scope_and_does_not_leak() {
+        with_threads(3, || {
+            assert_eq!(current_threads(), 3);
+            set_current_threads(5);
+            assert_eq!(current_threads(), 5);
+            set_current_threads(0); // clamped up
+            assert_eq!(current_threads(), 1);
+            set_current_threads(MAX_POOL_THREADS + 10); // clamped down
+            assert_eq!(current_threads(), MAX_POOL_THREADS);
+            with_threads(2, || {
+                set_current_threads(7);
+                assert_eq!(current_threads(), 7);
+            });
+            assert_eq!(current_threads(), MAX_POOL_THREADS, "inner scope restored its save");
+        });
+        assert_eq!(current_threads(), default_threads(), "outer scope restored the default");
+    }
 
     #[test]
     fn task_ranges_cover_and_are_pure_in_len() {

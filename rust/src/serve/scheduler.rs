@@ -49,8 +49,8 @@ use crate::algos::{SolveOptions, SolveReport};
 use crate::api::events::{EventObserver, IterEvent};
 use crate::api::{ProblemHandle, ProblemSpec, Registry, SolverSpec};
 use crate::tenant::{
-    DrrQueue, FsyncPolicy, QuotaExceeded, StoreStats, TenantRegistry, WarmStartStore,
-    DEFAULT_TENANT,
+    DrrQueue, FsyncPolicy, QuotaExceeded, RateLimited, ServiceRate, StoreStats, TenantRegistry,
+    TokenBucket, WarmStartStore, DEFAULT_TENANT,
 };
 use anyhow::Result;
 use std::collections::{BTreeMap, VecDeque};
@@ -358,18 +358,25 @@ pub struct ServeConfig {
     /// 4096).
     pub finished_retention: usize,
     /// Core budget for the multi-core kernels, shared across workers:
-    /// a job gets `max(1, core_budget / running)` kernel threads,
-    /// evaluated once when it starts (and further capped by the job's
-    /// own `SolveOptions::threads` and its tenant's `max_cores` quota).
-    /// This is a static per-job split, not a live-rebalanced hard cap: a
-    /// job admitted on an idle scheduler keeps its full share even if
-    /// more jobs start later, so transient overlap can exceed the budget
-    /// until it finishes — sparse traffic solves on all cores, sustained
-    /// load converges to one core per job instead of unbounded
-    /// oversubscription. Defaults to the host core count. Kernel thread
-    /// counts never change results (see [`crate::par`]), so neither this
-    /// knob nor load can break the determinism guarantee above.
+    /// a job gets `max(1, core_budget / running)` kernel threads
+    /// (further capped by the job's own `SolveOptions::threads` and its
+    /// tenant's `max_cores` quota). The share is evaluated at dispatch
+    /// and — unless [`Self::rebalance_cores`] is off — re-evaluated at
+    /// every iteration boundary, so a job that outlives its cohort grows
+    /// back onto the freed cores and a job admitted on an idle scheduler
+    /// shrinks when traffic arrives. Transient overlap can still exceed
+    /// the budget between boundaries (shares only adjust where the
+    /// deterministic chunking guarantees invariance). Defaults to the
+    /// host core count. Kernel thread counts never change results (see
+    /// [`crate::par`]), so neither this knob nor load can break the
+    /// determinism guarantee above.
     pub core_budget: usize,
+    /// Re-evaluate each running job's core share at its iteration
+    /// boundaries (on by default). Off restores the static
+    /// evaluated-once-at-dispatch split. Either way the thread count is
+    /// a pure speed knob — results are bit-identical (the
+    /// [`crate::par`] chunking contract is thread-count-invariant).
+    pub rebalance_cores: bool,
     /// Tenants jobs are scheduled under (weights, tokens, quotas). The
     /// default registry holds only the implicit `default` tenant — the
     /// pre-tenant behavior.
@@ -397,6 +404,7 @@ impl Default for ServeConfig {
             cache_bytes: 64 << 20,
             finished_retention: 4096,
             core_budget: crate::par::host_cores(),
+            rebalance_cores: true,
             tenants: TenantRegistry::default(),
             store_path: None,
             store_max_bytes: 64 << 20,
@@ -429,6 +437,11 @@ impl ServeConfig {
 
     pub fn with_core_budget(mut self, cores: usize) -> Self {
         self.core_budget = cores.max(1);
+        self
+    }
+
+    pub fn with_core_rebalance(mut self, enabled: bool) -> Self {
+        self.rebalance_cores = enabled;
         self
     }
 
@@ -496,6 +509,9 @@ pub enum SubmitError {
     UnknownTenant { spec: JobSpec, tenant: String },
     /// The tenant exists but is disabled.
     TenantDisabled { spec: JobSpec, tenant: String },
+    /// The tenant exceeded its request rate (HTTP `429`, Retry-After
+    /// from the token bucket's exact time-to-next-token).
+    RateLimited { spec: JobSpec, rate: RateLimited },
 }
 
 impl SubmitError {
@@ -506,6 +522,7 @@ impl SubmitError {
             SubmitError::Quota { spec, .. } => spec,
             SubmitError::UnknownTenant { spec, .. } => spec,
             SubmitError::TenantDisabled { spec, .. } => spec,
+            SubmitError::RateLimited { spec, .. } => spec,
         }
     }
 }
@@ -521,6 +538,7 @@ impl std::fmt::Display for SubmitError {
             SubmitError::TenantDisabled { tenant, .. } => {
                 write!(f, "tenant `{tenant}` is disabled")
             }
+            SubmitError::RateLimited { rate, .. } => write!(f, "{rate}"),
         }
     }
 }
@@ -537,6 +555,8 @@ pub struct SchedulerStats {
     pub rejected: u64,
     /// `try_submit` refusals due to a tenant quota (monotone).
     pub quota_rejected: u64,
+    /// `try_submit` refusals due to a tenant rate limit (monotone).
+    pub rate_limited: u64,
     /// Retry attempts scheduled by the retry policy (monotone).
     pub retried: u64,
     /// Jobs currently waiting in the queue (gauge).
@@ -567,6 +587,8 @@ pub struct TenantStats {
     pub finished: u64,
     /// Admission refusals for this tenant's quotas (monotone).
     pub quota_rejected: u64,
+    /// Admission refusals for this tenant's request rate (monotone).
+    pub rate_limited: u64,
     /// Retry attempts for this tenant's jobs (monotone).
     pub retried: u64,
     /// Jobs waiting in this tenant's lane (gauge).
@@ -645,8 +667,12 @@ struct Counters {
     submitted: AtomicU64,
     rejected: AtomicU64,
     quota_rejected: AtomicU64,
+    rate_limited: AtomicU64,
     retried: AtomicU64,
-    running: AtomicU64,
+    /// Shared with each running job's [`JobBridge`] so the live
+    /// core-rebalance policy can read the cohort size lock-free at
+    /// iteration boundaries.
+    running: Arc<AtomicU64>,
     done: AtomicU64,
     failed: AtomicU64,
     cancelled: AtomicU64,
@@ -659,6 +685,7 @@ struct TenantCounters {
     submitted: u64,
     finished: u64,
     quota_rejected: u64,
+    rate_limited: u64,
     retried: u64,
 }
 
@@ -705,7 +732,16 @@ struct Shared {
     table: Mutex<JobsTable>,
     /// See [`ServeConfig::core_budget`].
     core_budget: usize,
+    /// See [`ServeConfig::rebalance_cores`].
+    rebalance_cores: bool,
     retry: RetryPolicy,
+    /// Monotonic origin for the rate-limit buckets' clock values.
+    epoch: Instant,
+    /// Token buckets, one per tenant with a configured `rate_per_sec`.
+    rate: Mutex<BTreeMap<String, TokenBucket>>,
+    /// Observed completion rate — the honest Retry-After estimate for
+    /// queue-full and quota 429s (see [`Scheduler::retry_after_hint_ms`]).
+    completions: Mutex<ServiceRate>,
 }
 
 impl Shared {
@@ -792,6 +828,7 @@ impl Shared {
             JobOutcome::DeadlineExpired { .. } => &self.counters.deadline_expired,
         }
         .fetch_add(1, Ordering::Relaxed);
+        self.completions.lock().unwrap().record(Instant::now());
         self.bump_tenant(&result.tenant, |c| c.finished += 1);
         let mut t = self.table.lock().unwrap();
         if let Some(e) = t.map.get_mut(&result.job) {
@@ -885,6 +922,11 @@ impl Scheduler {
         for t in config.tenants.iter() {
             jobs.set_weight(&t.id, t.weight);
         }
+        let rate = config
+            .tenants
+            .iter()
+            .filter_map(|t| t.rate_limit.map(|rl| (t.id.clone(), TokenBucket::new(rl))))
+            .collect::<BTreeMap<_, _>>();
         let shared = Arc::new(Shared {
             queue: Mutex::new(QueueState { jobs, running: BTreeMap::new(), closed: false }),
             not_empty: Condvar::new(),
@@ -906,7 +948,11 @@ impl Scheduler {
                 retention: config.finished_retention,
             }),
             core_budget: config.core_budget.max(1),
+            rebalance_cores: config.rebalance_cores,
             retry: config.retry,
+            epoch: Instant::now(),
+            rate: Mutex::new(rate),
+            completions: Mutex::new(ServiceRate::default()),
         });
         let mut handles = Vec::with_capacity(workers);
         for w in 0..workers {
@@ -951,6 +997,28 @@ impl Scheduler {
         if !tenant.enabled {
             let tenant = tenant.id;
             return Err(SubmitError::TenantDisabled { spec, tenant });
+        }
+        // Rate limit before the queue is even consulted: over-rate
+        // traffic must not contend on the queue lock, and a refused
+        // submission must not consume queue capacity checks.
+        if let Some(limit) = tenant.rate_limit {
+            let now_s = self.shared.epoch.elapsed().as_secs_f64();
+            let mut buckets = self.shared.rate.lock().unwrap();
+            let bucket =
+                buckets.entry(tenant.id.clone()).or_insert_with(|| TokenBucket::new(limit));
+            if let Err(retry_after_ms) = bucket.try_acquire(now_s) {
+                drop(buckets);
+                self.shared.counters.rate_limited.fetch_add(1, Ordering::Relaxed);
+                self.shared.bump_tenant(&tenant.id, |c| c.rate_limited += 1);
+                return Err(SubmitError::RateLimited {
+                    spec,
+                    rate: RateLimited {
+                        tenant: tenant.id,
+                        limit_per_sec: limit.rate_per_sec,
+                        retry_after_ms,
+                    },
+                });
+            }
         }
         let mut q = self.shared.queue.lock().unwrap();
         if q.jobs.len() >= self.shared.capacity {
@@ -1087,6 +1155,7 @@ impl Scheduler {
             submitted: c.submitted.load(Ordering::Relaxed),
             rejected: c.rejected.load(Ordering::Relaxed),
             quota_rejected: c.quota_rejected.load(Ordering::Relaxed),
+            rate_limited: c.rate_limited.load(Ordering::Relaxed),
             retried: c.retried.load(Ordering::Relaxed),
             queue_depth: self.queued(),
             running: c.running.load(Ordering::Relaxed) as usize,
@@ -1127,10 +1196,21 @@ impl Scheduler {
                     submitted: c.submitted,
                     finished: c.finished,
                     quota_rejected: c.quota_rejected,
+                    rate_limited: c.rate_limited,
                     retried: c.retried,
                 }
             })
             .collect()
+    }
+
+    /// Estimated milliseconds until a completion frees a queue (or
+    /// `max_queued`) slot, from the service rate observed over the last
+    /// 30 s. `None` until two recent completions exist — callers fall
+    /// back to their configured constant. The HTTP front-end feeds this
+    /// through [`crate::tenant::advertised_retry_after_secs`] so the
+    /// round-up, never-0 invariant holds either way.
+    pub fn retry_after_hint_ms(&self) -> Option<u64> {
+        self.shared.completions.lock().unwrap().slot_wait_ms(Instant::now())
     }
 
     /// Status snapshot of one job by id. `None` for ids never submitted
@@ -1312,13 +1392,40 @@ fn next_job(shared: &Shared) -> Option<QueuedJob> {
     }
 }
 
+/// Live core-share policy carried into a job's iteration stream: at
+/// every iteration boundary the job re-derives its fair share from the
+/// *current* running count, so a job that outlives its cohort grows
+/// onto the freed cores mid-solve instead of keeping its dispatch-time
+/// share. Safe for determinism: `flexa::par` chunking is a pure
+/// function of data length — never thread count — so resizing between
+/// iterations cannot move a single floating-point operation.
+struct Rebalance {
+    /// The scheduler-wide running gauge ([`Counters::running`]).
+    running: Arc<AtomicU64>,
+    /// [`ServeConfig::core_budget`].
+    core_budget: usize,
+    /// Per-job ceiling: min of the tenant's `max_cores` quota and the
+    /// job's own `threads` request (≥ 1). The share never exceeds it.
+    cap: usize,
+}
+
+impl Rebalance {
+    /// The thread budget this job should run the *next* iteration with.
+    fn share(&self) -> usize {
+        let running = (self.running.load(Ordering::Relaxed).max(1)) as usize;
+        (self.core_budget / running).max(1).min(self.cap)
+    }
+}
+
 /// Adapter between the session-layer iteration stream and the job event
-/// stream; also captures the last finite τ for the warm-start cache.
+/// stream; also captures the last finite τ for the warm-start cache and
+/// applies the live core-rebalance policy at iteration boundaries.
 struct JobBridge {
     job: u64,
     observer: Option<Arc<dyn ServeObserver>>,
     user: Option<Arc<dyn EventObserver>>,
     tau_bits: AtomicU64,
+    rebalance: Option<Rebalance>,
 }
 
 impl JobBridge {
@@ -1336,6 +1443,13 @@ impl EventObserver for JobBridge {
     }
 
     fn on_iteration(&self, event: &IterEvent) {
+        // Re-derive the core share first, so a user observer reading
+        // `par::current_threads()` sees the budget the *next* iteration
+        // will run with. The iteration boundary is the safe resize
+        // point: no kernel is in flight on this thread.
+        if let Some(r) = &self.rebalance {
+            crate::par::set_current_threads(r.share());
+        }
         if event.tau.is_finite() {
             self.tau_bits.store(event.tau.to_bits(), Ordering::Relaxed);
         }
@@ -1453,11 +1567,34 @@ fn run_job(shared: &Shared, worker: usize, job: &QueuedJob) -> RunOutcome {
         opts.max_seconds = opts.max_seconds.min(rem.as_secs_f64());
     }
     opts.cancel = Some(Arc::clone(cancel));
+
+    // Core-budget policy: a job's share is `core_budget / running`,
+    // capped by the tenant's `max_cores` quota and the job's own
+    // `threads` request. The share is taken once here for the first
+    // iteration and — unless rebalancing is off — re-derived by the
+    // bridge at every iteration boundary, so shares track the live
+    // cohort (see `ServeConfig::core_budget`). Thread counts are a pure
+    // speed knob (see `flexa::par`), so none of this affects results.
+    let tenant_cores = shared.tenants.get(tenant).and_then(|t| t.quota.max_cores);
+    let cap = match (tenant_cores, opts.threads) {
+        (Some(q), Some(t)) => q.max(1).min(t.max(1)),
+        (Some(q), None) => q.max(1),
+        (None, Some(t)) => t.max(1),
+        (None, None) => usize::MAX,
+    };
+    let rebalance = Rebalance {
+        running: Arc::clone(&shared.counters.running),
+        core_budget: shared.core_budget,
+        cap,
+    };
+    let kernel_threads = rebalance.share();
+
     let bridge = Arc::new(JobBridge {
         job: id,
         observer: shared.observer.clone(),
         user: opts.observer.take(),
         tau_bits: AtomicU64::new(f64::NAN.to_bits()),
+        rebalance: shared.rebalance_cores.then_some(rebalance),
     });
     opts.observer = Some(bridge.clone());
 
@@ -1468,21 +1605,6 @@ fn run_job(shared: &Shared, worker: usize, job: &QueuedJob) -> RunOutcome {
         }
     };
     let solver_name = solver.name();
-
-    // Core-budget policy: the share is computed once at job start from
-    // the current running count (static split — see the
-    // `ServeConfig::core_budget` docs for the overlap caveat); a
-    // job-level `threads` request (jobfile/HTTP key) is honored up to
-    // that share, and the tenant's `max_cores` quota caps both. Thread
-    // counts are a pure speed knob (see `flexa::par`), so this never
-    // affects results.
-    let running = (shared.counters.running.load(Ordering::Relaxed).max(1)) as usize;
-    let share = (shared.core_budget / running).max(1);
-    let cap = match shared.tenants.get(tenant).and_then(|t| t.quota.max_cores) {
-        Some(c) => share.min(c.max(1)),
-        None => share,
-    };
-    let kernel_threads = opts.threads.unwrap_or(cap).min(cap);
 
     match crate::par::with_threads(kernel_threads, || solver.solve_session(&problem, &opts)) {
         Err(e) => finish(solver_name, JobOutcome::Failed { error: format!("{e:#}") }, None, true),
@@ -1553,7 +1675,7 @@ fn run_job(shared: &Shared, worker: usize, job: &QueuedJob) -> RunOutcome {
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::tenant::{Tenant, TenantQuota};
+    use crate::tenant::{RateLimit, Tenant, TenantQuota};
 
     fn tiny_job(seed: u64) -> JobSpec {
         JobSpec::new(
@@ -1894,6 +2016,48 @@ mod tests {
         let results = s.join();
         assert_eq!(results[0].problem, "user-lasso");
         assert!(results[0].outcome.is_done());
+    }
+
+    /// Per-tenant rate limiting: a tenant over its request rate gets the
+    /// typed `RateLimited` refusal (spec handed back, accurate wait),
+    /// both counter layers grow, other tenants are untouched, and the
+    /// blocking `submit` path (in-process batch use) stays exempt.
+    #[test]
+    fn try_submit_rate_limited_returns_typed_error_and_counts() {
+        let tenants = TenantRegistry::new(vec![
+            Tenant::new("metered").with_rate_limit(RateLimit::per_sec(0.001).with_burst(2.0))
+        ])
+        .unwrap();
+        let s = Scheduler::start_with(
+            ServeConfig::default().with_workers(1).with_cache_bytes(0).with_tenants(tenants),
+            None,
+            Registry::with_defaults(),
+        );
+        // Burst of 2 admits exactly two; at 0.001 tokens/s the refill
+        // during this test is negligible, so the third must refuse.
+        assert!(s.try_submit(tiny_job(1).with_tenant("metered")).is_ok());
+        assert!(s.try_submit(tiny_job(2).with_tenant("metered")).is_ok());
+        let err = s
+            .try_submit(tiny_job(3).with_tenant("metered").with_tag("over"))
+            .expect_err("third submission in the same instant must be rate limited");
+        assert!(err.to_string().contains("rate limit"), "{err}");
+        let SubmitError::RateLimited { spec, rate } = err else {
+            panic!("expected RateLimited refusal")
+        };
+        assert_eq!(spec.tag, "over", "spec handed back intact");
+        assert_eq!(rate.tenant, "metered");
+        assert!((rate.limit_per_sec - 0.001).abs() < 1e-12);
+        assert!(rate.retry_after_ms >= 1, "wait is never 0");
+        assert_eq!(s.stats().rate_limited, 1);
+        let ts = s.tenant_stats();
+        let metered = ts.iter().find(|t| t.tenant == "metered").unwrap();
+        assert_eq!(metered.rate_limited, 1);
+        // Unmetered tenants are unaffected, and the blocking submit path
+        // bypasses the bucket even for metered tenants.
+        assert!(s.try_submit(tiny_job(4)).is_ok());
+        s.submit(tiny_job(5).with_tenant("metered"));
+        let results = s.join();
+        assert_eq!(results.len(), 4, "two admitted + default + blocking submit");
     }
 
     #[test]

@@ -35,6 +35,8 @@
 //! max_concurrent = 2         # dispatch cap (work waits, never bounces)
 //! max_cores = 4              # kernel-thread ceiling per job
 //! retry_after_secs = 5       # advertised on this tenant's 429s
+//! rate_per_sec = 2.5         # token-bucket submission rate -> 429 beyond
+//! burst = 5                  # bucket capacity (default ceil(rate_per_sec))
 //!
 //! [tenant.default]           # the implicit tenant is configurable too
 //! enabled = false            # ...e.g. to force authenticated access
@@ -51,10 +53,12 @@
 
 pub mod policy;
 pub mod quota;
+pub mod rate;
 pub mod store;
 
 pub use policy::DrrQueue;
-pub use quota::{advertised_retry_after_secs, QuotaExceeded, TenantQuota};
+pub use quota::{advertised_retry_after_secs, QuotaExceeded, ServiceRate, TenantQuota};
+pub use rate::{RateLimit, RateLimited, TokenBucket};
 pub use store::{FsyncPolicy, StoreStats, WarmStartStore};
 
 use anyhow::{anyhow, bail, Result};
@@ -80,6 +84,10 @@ pub struct Tenant {
     pub quota: TenantQuota,
     /// `Retry-After` seconds advertised on this tenant's quota `429`s.
     pub retry_after_secs: u64,
+    /// Submission-rate limit (token bucket, [`rate`]); `None` =
+    /// unlimited. Distinct from the occupancy quotas: `max_queued`
+    /// bounds what the tenant *holds*, this bounds how fast it *asks*.
+    pub rate_limit: Option<RateLimit>,
 }
 
 impl Tenant {
@@ -91,6 +99,7 @@ impl Tenant {
             enabled: true,
             quota: TenantQuota::unlimited(),
             retry_after_secs: 1,
+            rate_limit: None,
         }
     }
 
@@ -111,6 +120,11 @@ impl Tenant {
 
     pub fn with_retry_after_secs(mut self, secs: u64) -> Self {
         self.retry_after_secs = secs;
+        self
+    }
+
+    pub fn with_rate_limit(mut self, limit: RateLimit) -> Self {
+        self.rate_limit = Some(limit);
         self
     }
 
@@ -144,6 +158,9 @@ impl TenantRegistry {
         for t in tenants {
             if t.id.is_empty() {
                 bail!("tenant id must not be empty");
+            }
+            if let Some(rl) = &t.rate_limit {
+                rl.validate(&t.id)?;
             }
             if let Some(tok) = &t.token {
                 if tok.is_empty() {
@@ -182,6 +199,10 @@ impl TenantRegistry {
     fn parse_toml(text: &str) -> Result<Self> {
         let doc = crate::config::toml::parse(text).map_err(|e| anyhow!("{e}"))?;
         let mut partial: BTreeMap<String, Tenant> = BTreeMap::new();
+        // (rate_per_sec, burst) accumulate separately: the document map
+        // iterates alphabetically, so `burst` arrives before the
+        // `rate_per_sec` that gives it meaning.
+        let mut rates: BTreeMap<String, (Option<f64>, Option<f64>)> = BTreeMap::new();
         for (key, value) in &doc {
             let mut parts = key.splitn(3, '.');
             let (ns, id, field) = (parts.next(), parts.next(), parts.next());
@@ -220,13 +241,44 @@ impl TenantRegistry {
                 "max_concurrent" => t.quota.max_concurrent = Some(want_count("max_concurrent")?),
                 "max_cores" => t.quota.max_cores = Some(want_count("max_cores")?),
                 "retry_after_secs" => t.retry_after_secs = want_count("retry_after_secs")? as u64,
+                "rate_per_sec" => {
+                    let v = value
+                        .as_float()
+                        .ok_or_else(|| anyhow!("tenant `{id}`: `rate_per_sec` must be a number"))?;
+                    rates.entry(id.to_string()).or_default().0 = Some(v);
+                }
+                "burst" => {
+                    let v = value
+                        .as_float()
+                        .ok_or_else(|| anyhow!("tenant `{id}`: `burst` must be a number"))?;
+                    rates.entry(id.to_string()).or_default().1 = Some(v);
+                }
                 other => bail!(
                     "tenant `{id}`: unknown field `{other}` (known: token, weight, enabled, \
-                     max_queued, max_concurrent, max_cores, retry_after_secs)"
+                     max_queued, max_concurrent, max_cores, retry_after_secs, rate_per_sec, \
+                     burst)"
                 ),
             }
         }
+        for (id, (rate, burst)) in rates {
+            let t = partial.get_mut(&id).expect("rate keys create the tenant entry");
+            t.rate_limit = Some(Self::combine_rate(&id, rate, burst)?);
+        }
         Self::new(partial.into_values().collect())
+    }
+
+    /// Fold the two rate keys into a [`RateLimit`]: `rate_per_sec` is
+    /// required, `burst` optional (default `ceil(rate_per_sec)`).
+    fn combine_rate(id: &str, rate: Option<f64>, burst: Option<f64>) -> Result<RateLimit> {
+        let Some(rate) = rate else {
+            bail!("tenant `{id}`: `burst` without `rate_per_sec` limits nothing");
+        };
+        let limit = match burst {
+            Some(b) => RateLimit { rate_per_sec: rate, burst: b },
+            None => RateLimit::per_sec(rate),
+        };
+        limit.validate(id)?;
+        Ok(limit)
     }
 
     fn parse_json(text: &str) -> Result<Self> {
@@ -276,6 +328,18 @@ impl TenantRegistry {
             t.quota.max_cores = count("max_cores")?;
             if let Some(s) = count("retry_after_secs")? {
                 t.retry_after_secs = s as u64;
+            }
+            let number = |key: &str| -> Result<Option<f64>> {
+                match item.get(key) {
+                    None => Ok(None),
+                    Some(v) => Ok(Some(v.as_f64().ok_or_else(|| {
+                        anyhow!("tenant `{id}`: `{key}` must be a number")
+                    })?)),
+                }
+            };
+            let (rate, burst) = (number("rate_per_sec")?, number("burst")?);
+            if rate.is_some() || burst.is_some() {
+                t.rate_limit = Some(Self::combine_rate(id, rate, burst)?);
             }
             tenants.push(t);
         }
@@ -387,6 +451,55 @@ enabled = false
         let err =
             TenantRegistry::parse("{\"tenants\": [{\"token\": \"x\"}]}").unwrap_err().to_string();
         assert!(err.contains("needs a string `id`"), "{err}");
+    }
+
+    /// Rate-limit keys parse from both formats, `burst` defaults to
+    /// `ceil(rate_per_sec)`, and nonsense is rejected with the field
+    /// name in the error.
+    #[test]
+    fn rate_limit_keys_parse_in_both_formats() {
+        let r = TenantRegistry::parse(
+            "[tenant.alice]\nrate_per_sec = 2.5\nburst = 5\n\n[tenant.bob]\nrate_per_sec = 1\n",
+        )
+        .unwrap();
+        assert_eq!(
+            r.get("alice").unwrap().rate_limit,
+            Some(RateLimit { rate_per_sec: 2.5, burst: 5.0 })
+        );
+        assert_eq!(
+            r.get("bob").unwrap().rate_limit,
+            Some(RateLimit { rate_per_sec: 1.0, burst: 1.0 }),
+            "default burst is ceil(rate)"
+        );
+        assert_eq!(r.get(DEFAULT_TENANT).unwrap().rate_limit, None, "unlimited by default");
+
+        let r = TenantRegistry::parse(
+            r#"{"tenants": [{"id": "alice", "rate_per_sec": 0.5, "burst": 2}]}"#,
+        )
+        .unwrap();
+        assert_eq!(
+            r.get("alice").unwrap().rate_limit,
+            Some(RateLimit { rate_per_sec: 0.5, burst: 2.0 })
+        );
+
+        let err = TenantRegistry::parse("[tenant.a]\nrate_per_sec = 0\n").unwrap_err().to_string();
+        assert!(err.contains("rate_per_sec"), "{err}");
+        let err = TenantRegistry::parse("[tenant.a]\nburst = 4\n").unwrap_err().to_string();
+        assert!(err.contains("without `rate_per_sec`"), "{err}");
+        let err = TenantRegistry::parse("[tenant.a]\nrate_per_sec = \"fast\"\n")
+            .unwrap_err()
+            .to_string();
+        assert!(err.contains("must be a number"), "{err}");
+        // The unknown-field error now lists the rate keys.
+        let err = TenantRegistry::parse("[tenant.a]\nbogus = 1\n").unwrap_err().to_string();
+        assert!(err.contains("rate_per_sec"), "{err}");
+        // Builder-constructed nonsense is caught centrally.
+        let err = TenantRegistry::new(vec![
+            Tenant::new("a").with_rate_limit(RateLimit { rate_per_sec: -1.0, burst: 1.0 }),
+        ])
+        .unwrap_err()
+        .to_string();
+        assert!(err.contains("positive"), "{err}");
     }
 
     #[test]

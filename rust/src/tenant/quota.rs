@@ -88,6 +88,72 @@ pub fn advertised_retry_after_secs(backoff_ms: u64) -> u64 {
     (backoff_ms.saturating_add(999) / 1000).max(1)
 }
 
+/// Sliding-window tracker of job completions, turning the *observed*
+/// service rate into a `Retry-After` estimate for queue-full and quota
+/// `429`s. A fixed constant is wrong in both directions — too short and
+/// clients spin against a wedged queue, too long and they sit out a
+/// fast-draining one. A queue slot (and a tenant's `max_queued` slot)
+/// frees when a job dispatches, and dispatches happen at the completion
+/// rate, so "time until one more completion" is the honest estimate.
+///
+/// Time enters only through the `now` arguments, so tests drive it with
+/// synthetic instants.
+#[derive(Debug)]
+pub struct ServiceRate {
+    window: std::time::Duration,
+    cap: usize,
+    samples: std::collections::VecDeque<std::time::Instant>,
+}
+
+impl Default for ServiceRate {
+    /// 30 s window, 128 samples — enough to smooth bursty completions
+    /// without remembering a rate that no longer holds.
+    fn default() -> Self {
+        Self::new(std::time::Duration::from_secs(30), 128)
+    }
+}
+
+impl ServiceRate {
+    pub fn new(window: std::time::Duration, cap: usize) -> Self {
+        Self { window, cap: cap.max(2), samples: std::collections::VecDeque::new() }
+    }
+
+    /// Record one completion at `now`.
+    pub fn record(&mut self, now: std::time::Instant) {
+        self.samples.push_back(now);
+        while self.samples.len() > self.cap {
+            self.samples.pop_front();
+        }
+    }
+
+    /// Completions per second observed over the window ending at `now`.
+    /// `None` until two in-window completions exist (no rate is better
+    /// than a fabricated one) or when the span is too small to divide.
+    pub fn per_sec(&self, now: std::time::Instant) -> Option<f64> {
+        // A clock too close to its epoch to subtract the window means
+        // nothing can be stale yet — keep every sample.
+        let cutoff = now.checked_sub(self.window);
+        let recent: Vec<_> =
+            self.samples.iter().filter(|t| cutoff.map_or(true, |c| **t >= c)).collect();
+        if recent.len() < 2 {
+            return None;
+        }
+        let span = recent.last().unwrap().duration_since(**recent.first().unwrap()).as_secs_f64();
+        if span <= 0.0 {
+            return None;
+        }
+        Some((recent.len() - 1) as f64 / span)
+    }
+
+    /// Estimated milliseconds until the next completion frees a slot:
+    /// `1000 / rate`, rounded up, never 0. `None` when no rate is
+    /// observable yet — callers fall back to their configured constant.
+    pub fn slot_wait_ms(&self, now: std::time::Instant) -> Option<u64> {
+        let rate = self.per_sec(now)?;
+        Some(((1000.0 / rate).ceil() as u64).max(1))
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -113,6 +179,66 @@ mod tests {
         assert_eq!(advertised_retry_after_secs(1001), 2, "sub-second remainder rounds up");
         assert_eq!(advertised_retry_after_secs(7000), 7);
         assert_eq!(advertised_retry_after_secs(u64::MAX), u64::MAX / 1000);
+    }
+
+    /// `ServiceRate`: 10 completions 100ms apart → 10/s → a slot frees
+    /// in ~100ms → advertised as 1s after the round-up.
+    #[test]
+    fn service_rate_estimates_slot_wait_from_observed_completions() {
+        use std::time::{Duration, Instant};
+        let mut r = ServiceRate::default();
+        let t0 = Instant::now();
+        for i in 0..10 {
+            r.record(t0 + Duration::from_millis(100 * i));
+        }
+        let now = t0 + Duration::from_millis(1000);
+        let rate = r.per_sec(now).expect("10 samples give a rate");
+        assert!((rate - 10.0).abs() < 1e-9, "rate {rate}");
+        assert_eq!(r.slot_wait_ms(now), Some(100));
+        assert_eq!(advertised_retry_after_secs(r.slot_wait_ms(now).unwrap()), 1);
+
+        // A slow service (one completion every 4 s) advertises honestly.
+        let mut slow = ServiceRate::default();
+        slow.record(t0);
+        slow.record(t0 + Duration::from_secs(4));
+        let now = t0 + Duration::from_secs(5);
+        assert_eq!(slow.slot_wait_ms(now), Some(4000));
+        assert_eq!(advertised_retry_after_secs(4000), 4);
+    }
+
+    /// No rate without data: empty, single-sample, and all-stale windows
+    /// all decline to estimate (callers fall back to their constant).
+    #[test]
+    fn service_rate_declines_without_recent_samples() {
+        use std::time::{Duration, Instant};
+        let t0 = Instant::now() + Duration::from_secs(3600);
+        let mut r = ServiceRate::new(Duration::from_secs(30), 128);
+        assert_eq!(r.per_sec(t0), None, "no samples");
+        r.record(t0);
+        assert_eq!(r.per_sec(t0), None, "one sample is not a rate");
+        r.record(t0 + Duration::from_millis(10));
+        assert!(r.per_sec(t0 + Duration::from_millis(10)).is_some());
+        // 31 s later both samples fell out of the window.
+        assert_eq!(r.per_sec(t0 + Duration::from_secs(31)), None, "stale samples expire");
+        // Identical timestamps (zero span) also decline.
+        let mut same = ServiceRate::default();
+        same.record(t0);
+        same.record(t0);
+        assert_eq!(same.per_sec(t0), None, "zero span has no rate");
+    }
+
+    /// The sample buffer is bounded: only the most recent `cap` survive.
+    #[test]
+    fn service_rate_sample_buffer_is_bounded() {
+        use std::time::{Duration, Instant};
+        let t0 = Instant::now();
+        let mut r = ServiceRate::new(Duration::from_secs(3600), 4);
+        for i in 0..100u64 {
+            r.record(t0 + Duration::from_secs(i));
+        }
+        // 4 samples spanning seconds 96..99 → 1/s.
+        let rate = r.per_sec(t0 + Duration::from_secs(99)).unwrap();
+        assert!((rate - 1.0).abs() < 1e-9, "rate {rate}");
     }
 
     #[test]

@@ -1,0 +1,194 @@
+//! Per-tenant request-rate limiting: a token bucket over *submissions
+//! per second*, distinct from the occupancy quotas in [`super::quota`].
+//!
+//! `max_queued` bounds how much of the queue a tenant may *hold*;
+//! `rate_per_sec` bounds how fast it may *ask*. A burst-tolerant client
+//! under its occupancy quota can still hammer the admission path (every
+//! refusal is cheap but not free, and every acceptance displaces other
+//! tenants' arrivals), so the HTTP front-end enforces the bucket before
+//! the queue is even consulted and answers `429` with an *accurate*
+//! `Retry-After` — the exact time until the next token, not a fixed
+//! constant.
+//!
+//! The bucket is deterministic given the clock values fed to it: time
+//! enters only through the `now_s` argument (seconds since an arbitrary
+//! epoch), so tests drive it with a hand-rolled clock and the serve
+//! layer with one shared monotonic epoch.
+
+/// A tenant's request-rate limit: sustained `rate_per_sec`, with up to
+/// `burst` submissions admitted back-to-back after an idle period.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct RateLimit {
+    /// Sustained admissions per second (> 0; fractional rates allowed —
+    /// `0.5` means one submission every 2 s).
+    pub rate_per_sec: f64,
+    /// Bucket capacity in whole submissions (≥ 1). Defaults to
+    /// `ceil(rate_per_sec)` so one second of idleness refills a full
+    /// second's worth of admissions.
+    pub burst: f64,
+}
+
+impl RateLimit {
+    /// A limit with the default burst of `ceil(rate_per_sec)` (≥ 1).
+    pub fn per_sec(rate: f64) -> Self {
+        Self { rate_per_sec: rate, burst: rate.ceil().max(1.0) }
+    }
+
+    pub fn with_burst(mut self, burst: f64) -> Self {
+        self.burst = burst.max(1.0);
+        self
+    }
+
+    /// Reject non-positive / non-finite rates and bursts below one
+    /// (a bucket that can never hold a whole token admits nothing).
+    pub fn validate(&self, tenant: &str) -> anyhow::Result<()> {
+        if !self.rate_per_sec.is_finite() || self.rate_per_sec <= 0.0 {
+            anyhow::bail!(
+                "tenant `{tenant}`: `rate_per_sec` must be a positive number, got {}",
+                self.rate_per_sec
+            );
+        }
+        if !self.burst.is_finite() || self.burst < 1.0 {
+            anyhow::bail!("tenant `{tenant}`: `burst` must be >= 1, got {}", self.burst);
+        }
+        Ok(())
+    }
+}
+
+/// Token-bucket state for one tenant. Starts full, refills continuously
+/// at `limit.rate_per_sec`, caps at `limit.burst`; each admission spends
+/// one token.
+#[derive(Clone, Debug)]
+pub struct TokenBucket {
+    limit: RateLimit,
+    tokens: f64,
+    /// Clock value (seconds) of the last refill.
+    last_s: f64,
+}
+
+impl TokenBucket {
+    pub fn new(limit: RateLimit) -> Self {
+        Self { limit, tokens: limit.burst, last_s: 0.0 }
+    }
+
+    /// Admit one submission at clock value `now_s` (seconds, any
+    /// monotone origin), or refuse with the milliseconds until a full
+    /// token accrues — rounded up and never 0, matching the
+    /// [`super::advertised_retry_after_secs`] invariant downstream.
+    pub fn try_acquire(&mut self, now_s: f64) -> Result<(), u64> {
+        // Refill since the last call; a clock handed in out of order
+        // (never happens with one monotonic epoch, but cheap to guard)
+        // simply adds nothing.
+        let dt = (now_s - self.last_s).max(0.0);
+        self.tokens = (self.tokens + dt * self.limit.rate_per_sec).min(self.limit.burst);
+        self.last_s = now_s;
+        if self.tokens >= 1.0 {
+            self.tokens -= 1.0;
+            return Ok(());
+        }
+        let deficit = 1.0 - self.tokens;
+        let wait_ms = (deficit / self.limit.rate_per_sec * 1000.0).ceil();
+        // Saturate pathological rates into a representable wait.
+        let wait_ms = if wait_ms.is_finite() { wait_ms.max(1.0) as u64 } else { u64::MAX };
+        Err(wait_ms.max(1))
+    }
+
+    /// Tokens currently in the bucket (diagnostics/tests).
+    pub fn tokens(&self) -> f64 {
+        self.tokens
+    }
+}
+
+/// Typed admission refusal: the tenant exceeded its request rate. The
+/// HTTP front-end maps this to `429` with `Retry-After` derived from
+/// `retry_after_ms` (rounded up, never 0).
+#[derive(Clone, Debug)]
+pub struct RateLimited {
+    /// Tenant that exceeded its rate.
+    pub tenant: String,
+    /// The configured sustained rate.
+    pub limit_per_sec: f64,
+    /// Milliseconds until the bucket next holds a full token.
+    pub retry_after_ms: u64,
+}
+
+impl std::fmt::Display for RateLimited {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(
+            f,
+            "tenant `{}` is over its rate limit ({} req/s); retry in {}ms",
+            self.tenant, self.limit_per_sec, self.retry_after_ms
+        )
+    }
+}
+
+impl std::error::Error for RateLimited {}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn burst_admits_then_refuses_with_accurate_wait() {
+        // 2 req/s, burst 2: two immediate admissions, then the third
+        // must wait exactly half a second for the next token.
+        let mut b = TokenBucket::new(RateLimit::per_sec(2.0));
+        assert_eq!(b.try_acquire(0.0), Ok(()));
+        assert_eq!(b.try_acquire(0.0), Ok(()));
+        assert_eq!(b.try_acquire(0.0), Err(500), "deficit of 1 token at 2/s = 500ms");
+        // 100ms later 0.2 tokens accrued: 0.8 deficit -> 400ms.
+        assert_eq!(b.try_acquire(0.1), Err(400));
+        // After the full wait the token is there — and is spent.
+        assert_eq!(b.try_acquire(0.5), Ok(()));
+        assert_eq!(b.try_acquire(0.5), Err(500));
+    }
+
+    #[test]
+    fn refill_caps_at_burst() {
+        let mut b = TokenBucket::new(RateLimit::per_sec(10.0).with_burst(3.0));
+        // A long idle period must not accumulate more than `burst`.
+        assert_eq!(b.try_acquire(100.0), Ok(()));
+        assert_eq!(b.try_acquire(100.0), Ok(()));
+        assert_eq!(b.try_acquire(100.0), Ok(()));
+        assert!(b.try_acquire(100.0).is_err(), "burst of 3 admits exactly 3");
+    }
+
+    #[test]
+    fn fractional_rates_and_never_zero_wait() {
+        // 0.5 req/s: one admission every 2 seconds.
+        let mut b = TokenBucket::new(RateLimit::per_sec(0.5));
+        assert_eq!(b.try_acquire(0.0), Ok(()));
+        assert_eq!(b.try_acquire(0.0), Err(2000));
+        // Even a vanishing deficit advertises at least 1ms.
+        let mut b = TokenBucket::new(RateLimit::per_sec(1000.0).with_burst(1.0));
+        assert_eq!(b.try_acquire(0.0), Ok(()));
+        let wait = b.try_acquire(0.000_999).unwrap_err();
+        assert!(wait >= 1, "wait is never 0, got {wait}");
+    }
+
+    #[test]
+    fn backwards_clock_is_harmless() {
+        let mut b = TokenBucket::new(RateLimit::per_sec(1.0).with_burst(1.0));
+        assert_eq!(b.try_acquire(5.0), Ok(()));
+        // A clock value before the last refill adds no tokens.
+        assert_eq!(b.try_acquire(4.0), Err(1000));
+    }
+
+    #[test]
+    fn default_burst_is_ceil_of_rate_and_validation_rejects_nonsense() {
+        assert_eq!(RateLimit::per_sec(2.5).burst, 3.0);
+        assert_eq!(RateLimit::per_sec(0.25).burst, 1.0);
+        assert!(RateLimit::per_sec(2.0).validate("t").is_ok());
+        assert!(RateLimit::per_sec(0.0).validate("t").is_err());
+        assert!(RateLimit::per_sec(-1.0).validate("t").is_err());
+        assert!(RateLimit::per_sec(f64::NAN).validate("t").is_err());
+        assert!(RateLimit { rate_per_sec: 1.0, burst: 0.5 }.validate("t").is_err());
+    }
+
+    #[test]
+    fn rate_limited_renders_an_actionable_message() {
+        let e = RateLimited { tenant: "alice".into(), limit_per_sec: 2.0, retry_after_ms: 500 };
+        let msg = e.to_string();
+        assert!(msg.contains("alice") && msg.contains("2 req/s") && msg.contains("500ms"), "{msg}");
+    }
+}

@@ -663,3 +663,221 @@ fn read_one_response(reader: &mut BufReader<TcpStream>) -> (u16, Vec<(String, St
     reader.read_exact(&mut body).unwrap();
     (status, headers, String::from_utf8(body).unwrap())
 }
+
+/// Queue-full and quota 429s advertise a Retry-After derived from the
+/// *observed* completion rate once one exists, not the configured
+/// constants: with 60 s constants on both paths and a few quick
+/// completions on record, the advertised wait is the slot estimate
+/// (seconds at most), still rounded up and never 0.
+#[test]
+fn retry_after_derives_from_observed_service_rate() {
+    use flexa::tenant::{Tenant, TenantQuota, TenantRegistry};
+    let tenants = TenantRegistry::new(vec![Tenant::new("walled")
+        .with_token("walled-secret")
+        .with_retry_after_secs(60)
+        .with_quota(TenantQuota::unlimited().with_max_queued(0))])
+    .unwrap();
+    let server = spawn(
+        HttpConfig { retry_after_secs: 60, ..HttpConfig::default() },
+        ServeConfig::default()
+            .with_workers(1)
+            .with_queue_capacity(1)
+            .with_cache_bytes(0)
+            .with_tenants(tenants),
+    );
+    let addr = server.addr().to_string();
+    let tiny = "{\"rows\":15,\"cols\":45,\"max_iters\":5,\"target\":0}";
+
+    // Put a service rate on record: three quick completions.
+    for _ in 0..3 {
+        let job = post_job(&addr, tiny);
+        wait_finished(&addr, job);
+    }
+
+    // Quota arm: max_queued = 0 refuses immediately, but the advertised
+    // wait comes from the observed rate, not the tenant's 60 s constant.
+    let (status, headers, body) = req_with(
+        &addr,
+        "POST",
+        "/v1/jobs",
+        Some(tiny),
+        &[("Authorization", "Bearer walled-secret")],
+    );
+    assert_eq!(status, 429, "{body}");
+    let advertised: u64 = header(&headers, "retry-after").unwrap().parse().unwrap();
+    assert!(
+        (1..60).contains(&advertised),
+        "quota Retry-After should be rate-derived (>=1, well under the 60s constant), got {advertised}"
+    );
+
+    // Queue-full arm: occupy the worker, fill the single slot, overflow.
+    let long = post_job(
+        &addr,
+        "{\"problem\":\"lasso\",\"rows\":40,\"cols\":120,\"seed\":3,\
+         \"max_iters\":50000000,\"target\":0,\"tag\":\"long\"}",
+    );
+    poll_until_running(&addr, long);
+    let mut advertised = None;
+    for _ in 0..4 {
+        let (status, headers, body) = req(&addr, "POST", "/v1/jobs", Some(tiny));
+        match status {
+            202 => continue,
+            429 => {
+                assert!(body.contains("queue full"), "{body}");
+                advertised =
+                    Some(header(&headers, "retry-after").unwrap().parse::<u64>().unwrap());
+                break;
+            }
+            other => panic!("unexpected status {other}: {body}"),
+        }
+    }
+    let advertised = advertised.expect("queue never overflowed");
+    assert!(
+        (1..60).contains(&advertised),
+        "queue-full Retry-After should be rate-derived, got {advertised}"
+    );
+
+    let (status, _, body) = req(&addr, "DELETE", &format!("/v1/jobs/{long}"), None);
+    assert_eq!(status, 200, "{body}");
+    server.shutdown().expect("clean shutdown");
+}
+
+/// Per-tenant rate limiting over HTTP: the burst admits back-to-back
+/// submissions, the next gets `429` with an *accurate* token-accrual
+/// Retry-After, and the refusal shows up in `/metrics` both per tenant
+/// (`flexa_tenant_rate_limited_total`) and globally.
+#[test]
+fn rate_limited_tenant_gets_429_with_accurate_retry_after_and_metrics() {
+    use flexa::tenant::{RateLimit, Tenant, TenantRegistry};
+    let tenants = TenantRegistry::new(vec![Tenant::new("metered")
+        .with_token("metered-secret")
+        .with_rate_limit(RateLimit::per_sec(0.05).with_burst(2.0))])
+    .unwrap();
+    let server = spawn(
+        HttpConfig::default(),
+        ServeConfig::default().with_workers(1).with_cache_bytes(0).with_tenants(tenants),
+    );
+    let addr = server.addr().to_string();
+    let tiny = "{\"rows\":15,\"cols\":45,\"max_iters\":5,\"target\":0}";
+    let auth = [("Authorization", "Bearer metered-secret")];
+
+    // Burst of 2 admits two back-to-back submissions.
+    for i in 0..2 {
+        let (status, _, body) = req_with(&addr, "POST", "/v1/jobs", Some(tiny), &auth);
+        assert_eq!(status, 202, "burst submission {i}: {body}");
+    }
+    // The third refuses: one token at 0.05/s accrues in 20 s, so the
+    // advertised wait is in (0, 20] seconds — and never 0.
+    let (status, headers, body) = req_with(&addr, "POST", "/v1/jobs", Some(tiny), &auth);
+    assert_eq!(status, 429, "{body}");
+    assert!(body.contains("rate limit"), "{body}");
+    let advertised: u64 = header(&headers, "retry-after").unwrap().parse().unwrap();
+    assert!(
+        (1..=20).contains(&advertised),
+        "token accrual at 0.05/s is at most 20s, got {advertised}"
+    );
+
+    // The refusal is visible in /metrics, per tenant and globally.
+    let (status, _, metrics) = req(&addr, "GET", "/metrics", None);
+    assert_eq!(status, 200);
+    assert!(
+        metrics.contains("flexa_tenant_rate_limited_total{tenant=\"metered\"} 1"),
+        "{metrics}"
+    );
+    assert!(metrics.contains("flexa_jobs_rate_limited_total 1"), "{metrics}");
+    server.shutdown().expect("clean shutdown");
+}
+
+/// Backpressure: a stalled `GET /v1/jobs/{id}/events` consumer — one
+/// that sends the request and then never reads — must not block the
+/// scheduler, the control plane, or a healthy subscriber on the same
+/// job. The event hub fans out with bounded `try_send` buffers, so the
+/// stalled connection's thread blocks on its own socket while everything
+/// else proceeds; and the replay log stays bounded: a late subscriber
+/// gets exactly the first `sse_iteration_retention` iteration events
+/// plus a truncation notice, never the full multi-thousand-event run.
+#[test]
+fn stalled_sse_reader_does_not_block_scheduler_or_other_subscribers() {
+    let server = spawn(
+        HttpConfig { access_log: false, sse_iteration_retention: 5, ..HttpConfig::default() },
+        ServeConfig::default().with_workers(2).with_cache_bytes(0),
+    );
+    let addr = server.addr().to_string();
+
+    // A de-facto unbounded job emitting a fast iteration stream.
+    let long = post_job(
+        &addr,
+        "{\"problem\":\"lasso\",\"rows\":40,\"cols\":120,\"seed\":3,\
+         \"max_iters\":50000000,\"target\":0,\"tag\":\"long\"}",
+    );
+    poll_until_running(&addr, long);
+
+    // The stalled consumer: subscribe, then never read a byte. The SSE
+    // writer fills the socket buffers and blocks its connection thread.
+    let stalled = TcpStream::connect(&addr).expect("connect stalled reader");
+    (&stalled)
+        .write_all(
+            format!(
+                "GET /v1/jobs/{long}/events HTTP/1.1\r\nHost: {addr}\r\nConnection: close\r\n\r\n"
+            )
+            .as_bytes(),
+        )
+        .unwrap();
+    std::thread::sleep(Duration::from_millis(200));
+
+    // A healthy subscriber alongside still receives fresh live frames.
+    let live = TcpStream::connect(&addr).expect("connect live reader");
+    live.set_read_timeout(Some(Duration::from_secs(60))).unwrap();
+    (&live)
+        .write_all(
+            format!(
+                "GET /v1/jobs/{long}/events HTTP/1.1\r\nHost: {addr}\r\nConnection: close\r\n\r\n"
+            )
+            .as_bytes(),
+        )
+        .unwrap();
+    let mut reader = BufReader::new(live);
+    let mut seen_iterations = 0;
+    let mut line = String::new();
+    while seen_iterations < 3 {
+        line.clear();
+        let n = reader.read_line(&mut line).expect("live SSE stream stays readable");
+        assert!(n > 0, "live SSE stream ended before delivering iterations");
+        if line.starts_with("event: iteration") {
+            seen_iterations += 1;
+        }
+    }
+
+    // The scheduler still dispatches new work while the stalled reader
+    // is pinned, and the control plane still answers.
+    let short =
+        post_job(&addr, "{\"rows\":15,\"cols\":45,\"max_iters\":5,\"target\":0,\"tag\":\"short\"}");
+    let doc = wait_finished(&addr, short);
+    assert_eq!(doc.get("outcome").and_then(|v| v.as_str()), Some("done"), "{doc:?}");
+    let (status, _, _) = req(&addr, "GET", "/healthz", None);
+    assert_eq!(status, 200);
+
+    // Cancel the long job and replay it late: the bounded log kept only
+    // the FIRST `sse_iteration_retention` iteration events and says so.
+    let (status, _, body) = req(&addr, "DELETE", &format!("/v1/jobs/{long}"), None);
+    assert_eq!(status, 200, "{body}");
+    wait_finished(&addr, long);
+    let (status, _, sse) = req(&addr, "GET", &format!("/v1/jobs/{long}/events"), None);
+    assert_eq!(status, 200);
+    assert_eq!(
+        sse.matches("event: iteration").count(),
+        5,
+        "replay keeps exactly sse_iteration_retention iterations:\n{sse}"
+    );
+    assert!(sse.contains("replay truncated"), "{sse}");
+    assert!(sse.contains("event: finished"), "{sse}");
+    assert!(sse.contains("\"outcome\":\"cancelled\""), "{sse}");
+
+    // Release the stalled socket so its blocked writer errors out, then
+    // shut down; a hung connection thread would hang the drain here.
+    stalled.shutdown(std::net::Shutdown::Both).ok();
+    drop(stalled);
+    drop(reader);
+    let (results, _) = server.shutdown().expect("clean shutdown despite the stalled consumer");
+    assert!(results.len() >= 2, "long + short jobs produced results");
+}

@@ -404,3 +404,139 @@ fn csc_matvec_thread_invariant_on_chunked_shapes() {
         assert!((y1[i] - yd[i]).abs() < 1e-10, "row {i}: sparse {} vs dense {}", y1[i], yd[i]);
     }
 }
+
+/// DRR dispatch under tenant churn: tenants are enabled/disabled and
+/// re-weighted mid-stream while pushes and pops interleave, mirrored
+/// against a per-tenant FIFO model. Invariants checked on every step:
+/// nothing is ever lost or reordered within a tenant (the submission-seq
+/// tie-break), a disabled tenant is never served, and `pop_where`
+/// returns `None` only when every queued lane is ineligible. A final
+/// full drain with everyone re-enabled pins starvation-freedom: no
+/// tenant with queued work waits more than one full round (the weight
+/// sum) between services. The whole scenario is a pure function of its
+/// seed — it is run twice and the two pop traces must be identical.
+#[test]
+fn prop_drr_queue_survives_tenant_churn() {
+    use flexa::prng::Xoshiro256pp;
+    use flexa::tenant::DrrQueue;
+    use std::collections::{BTreeMap, VecDeque};
+
+    const TENANTS: [&str; 4] = ["a", "b", "c", "d"];
+
+    fn run_churn(seed: u64, steps: usize) -> Result<Vec<(String, u64)>, String> {
+        let mut rng = Xoshiro256pp::seed_from_u64(seed);
+        let mut q: DrrQueue<u64> = DrrQueue::new();
+        let mut model: BTreeMap<&str, VecDeque<u64>> =
+            TENANTS.iter().map(|t| (*t, VecDeque::new())).collect();
+        let mut weights: BTreeMap<&str, u64> = BTreeMap::new();
+        let mut enabled: BTreeMap<&str, bool> = TENANTS.iter().map(|t| (*t, true)).collect();
+        for (i, t) in TENANTS.iter().enumerate() {
+            q.set_weight(t, i as u64 + 1);
+            weights.insert(t, i as u64 + 1);
+        }
+        let mut seq = 0u64;
+        let mut trace = Vec::new();
+        for _ in 0..steps {
+            let t = TENANTS[rng.next_below(TENANTS.len() as u64) as usize];
+            match rng.next_below(10) {
+                // Pushes dominate so the drain phase has a real backlog.
+                0..=4 => {
+                    q.push(t, seq);
+                    model.get_mut(t).unwrap().push_back(seq);
+                    seq += 1;
+                }
+                5..=7 => match q.pop_where(|tenant, _| enabled[tenant]) {
+                    Some((tenant, item)) => {
+                        if !enabled[tenant.as_str()] {
+                            return Err(format!("disabled tenant `{tenant}` was served"));
+                        }
+                        let expect = model.get_mut(tenant.as_str()).unwrap().pop_front();
+                        if expect != Some(item) {
+                            return Err(format!(
+                                "tenant `{tenant}` FIFO broken: popped {item}, model head {expect:?}"
+                            ));
+                        }
+                        trace.push((tenant, item));
+                    }
+                    None => {
+                        for (mt, lane) in &model {
+                            if !lane.is_empty() && enabled[mt] {
+                                return Err(format!(
+                                    "pop_where refused enabled tenant `{mt}` with {} queued",
+                                    lane.len()
+                                ));
+                            }
+                        }
+                    }
+                },
+                8 => {
+                    let w = rng.next_below(5);
+                    q.set_weight(t, w);
+                    weights.insert(t, w.max(1)); // the queue clamps 0 to 1
+                }
+                _ => {
+                    let e = enabled.get_mut(t).unwrap();
+                    *e = !*e;
+                }
+            }
+            let total: usize = model.values().map(|l| l.len()).sum();
+            if q.len() != total {
+                return Err(format!("len {} != model total {total}", q.len()));
+            }
+            for t in &TENANTS {
+                if q.queued_for(t) != model[t].len() {
+                    return Err(format!(
+                        "queued_for({t}) = {} != model {}",
+                        q.queued_for(t),
+                        model[t].len()
+                    ));
+                }
+            }
+        }
+        // Drain with everyone re-enabled and weights frozen. DRR grants
+        // each active tenant `weight` pops per round, so between two
+        // services of one backlogged tenant at most one full round
+        // (the weight sum) of other pops can pass.
+        let bound: usize = weights.values().sum::<u64>() as usize;
+        let mut last_pos: BTreeMap<String, usize> = BTreeMap::new();
+        let mut pos = 0usize;
+        while let Some((tenant, item)) = q.pop() {
+            pos += 1;
+            let expect = model.get_mut(tenant.as_str()).unwrap().pop_front();
+            if expect != Some(item) {
+                return Err(format!(
+                    "drain: tenant `{tenant}` FIFO broken: popped {item}, model head {expect:?}"
+                ));
+            }
+            let since = last_pos.get(&tenant).copied().unwrap_or(0);
+            if pos - since > bound {
+                return Err(format!(
+                    "starvation: tenant `{tenant}` waited {} pops (round bound {bound})",
+                    pos - since
+                ));
+            }
+            last_pos.insert(tenant.clone(), pos);
+            trace.push((tenant, item));
+        }
+        if !q.is_empty() || model.values().any(|l| !l.is_empty()) {
+            return Err("drain left items behind".into());
+        }
+        Ok(trace)
+    }
+
+    run_prop("drr-tenant-churn", PropConfig::default(), |rng, size| {
+        let seed = rng.next_u64();
+        let steps = 100 + 50 * size;
+        let first = match run_churn(seed, steps) {
+            Ok(t) => t,
+            Err(e) => return CaseResult::Fail(e),
+        };
+        let second = match run_churn(seed, steps) {
+            Ok(t) => t,
+            Err(e) => return CaseResult::Fail(e),
+        };
+        CaseResult::check(first == second, || {
+            format!("same seed {seed:#x} produced different pop traces")
+        })
+    });
+}

@@ -414,3 +414,125 @@ fn warm_repeat_reuses_spectral_norm_estimate() {
         cold.iterations
     );
 }
+
+/// Live core-budget rebalancing: a long job sharing a 4-core budget with
+/// a short cohort runs at a 2-thread share while they overlap, grows to
+/// the full 4 at an iteration boundary once the short job finishes, and
+/// its final iterate is still bit-identical to a serial `Session` run —
+/// thread counts are a pure speed knob.
+#[test]
+fn long_job_gains_threads_after_cohort_finishes_bit_identically() {
+    use flexa::api::{FnObserver, ProblemHandle};
+    use flexa::serve::{CustomProblemFn, FnServeObserver};
+    use std::sync::atomic::{AtomicBool, Ordering};
+    use std::sync::{Arc, Mutex};
+    use std::time::Instant;
+
+    let long_spec = ProblemSpec::lasso(30, 90).with_sparsity(0.1).with_seed(11);
+    let long_opts = SolveOptions::default().with_max_iters(400).with_target(0.0);
+    let reference = Session::problem(long_spec.clone())
+        .solver_named("fpa")
+        .unwrap()
+        .options(long_opts.clone())
+        .run()
+        .unwrap();
+
+    // Handshake: the short job's build blocks until the long job has
+    // demonstrably iterated under a 2-thread share (`release_short`),
+    // and the long job then blocks at one iteration boundary until the
+    // short job is fully finished (`short_done`, set after the running
+    // gauge decremented) — so the overlap and the post-cohort regime
+    // are both pinned regardless of worker timing.
+    let release_short = Arc::new(AtomicBool::new(false));
+    let short_done = Arc::new(AtomicBool::new(false));
+    let observer = {
+        let short_done = Arc::clone(&short_done);
+        FnServeObserver::new(move |e: &JobEvent| {
+            // The only job that can finish while the long job spins on
+            // `short_done` is the short one.
+            if matches!(e, JobEvent::Finished { .. }) {
+                short_done.store(true, Ordering::Relaxed);
+            }
+        })
+    };
+    let scheduler = Scheduler::start_with(
+        ServeConfig::default().with_workers(2).with_cache_bytes(0).with_core_budget(4),
+        Some(observer),
+        Registry::with_defaults(),
+    );
+
+    let build: CustomProblemFn = {
+        let release_short = Arc::clone(&release_short);
+        Arc::new(move || {
+            let deadline = Instant::now() + Duration::from_secs(120);
+            while !release_short.load(Ordering::Relaxed) {
+                assert!(Instant::now() < deadline, "long job never observed the shared budget");
+                std::thread::sleep(Duration::from_millis(1));
+            }
+            let inst = flexa::datagen::NesterovLasso::new(12, 36, 0.1, 1.0).seed(6).generate();
+            Ok(ProblemHandle::least_squares(flexa::problems::lasso::Lasso::new(
+                inst.a, inst.b, 0.5,
+            )))
+        })
+    };
+    // Submitted first: one worker holds it (counted as running) while
+    // its build waits, so the long job dispatches into a cohort of two.
+    scheduler.submit(
+        JobSpec::custom("short", build, SolverSpec::parse("fpa").unwrap())
+            .with_opts(SolveOptions::default().with_max_iters(2).with_target(0.0)),
+    );
+
+    let budgets = Arc::new(Mutex::new(Vec::<usize>::new()));
+    let user = {
+        let budgets = Arc::clone(&budgets);
+        let release_short = Arc::clone(&release_short);
+        let short_done = Arc::clone(&short_done);
+        FnObserver::new(move |_e| {
+            // The bridge re-derives the share *before* this callback, so
+            // `current_threads` is the budget the next iteration runs with.
+            let threads = flexa::par::current_threads();
+            budgets.lock().unwrap().push(threads);
+            if !release_short.load(Ordering::Relaxed) {
+                // Keep iterating until a boundary observes the 2-thread
+                // share (the short job's running increment has landed),
+                // then let the short job build and finish.
+                if threads == 2 {
+                    release_short.store(true, Ordering::Relaxed);
+                }
+            } else if !short_done.load(Ordering::Relaxed) {
+                // Hold this boundary until the cohort is gone, so the
+                // remaining iterations demonstrably run post-rebalance.
+                let deadline = Instant::now() + Duration::from_secs(120);
+                while !short_done.load(Ordering::Relaxed) {
+                    assert!(Instant::now() < deadline, "short job never finished");
+                    std::thread::sleep(Duration::from_millis(1));
+                }
+            }
+        })
+    };
+    let h_long = scheduler.submit(
+        JobSpec::new(long_spec, SolverSpec::parse("fpa").unwrap())
+            .with_opts(long_opts.with_observer(user)),
+    );
+
+    let results = scheduler.join();
+    let long = results.iter().find(|r| r.job == h_long.id()).unwrap();
+    assert!(long.outcome.is_done(), "{:?}", long.outcome);
+    let rep = long.report.as_ref().expect("report");
+    let budgets = budgets.lock().unwrap();
+    assert_eq!(budgets.len(), rep.iterations, "one budget sample per iteration");
+    assert!(
+        budgets.contains(&2),
+        "overlapping with the short job halves the 4-core budget: {budgets:?}"
+    );
+    assert_eq!(
+        budgets.last(),
+        Some(&4),
+        "the freed share returns to the long job at an iteration boundary: {budgets:?}"
+    );
+    // The whole point: rebalancing moved threads mid-solve and not a
+    // single bit of the result.
+    assert_eq!(rep.iterations, reference.iterations);
+    assert_eq!(bits(&rep.x), bits(&reference.report.x), "bit-identical despite rebalancing");
+    assert_eq!(rep.objective.to_bits(), reference.objective.to_bits());
+}
