@@ -185,6 +185,14 @@ fn main() -> anyhow::Result<()> {
     );
     println!("  4-thread speedup: {solve_speedup_4t:.2}x (bit-identical: {solve_ident})");
 
+    // Obs accounting: every leg above ran with always-on tracing (the
+    // `kernel` spans `flexa::par` records around pool regions). Surface
+    // how much the rings absorbed so tracing-overhead regressions show
+    // up in the bench log next to the timings they would distort.
+    let obs_spans = flexa::obs::snapshot(0).len();
+    let obs_dropped = flexa::obs::spans_dropped();
+    println!("obs: {obs_spans} spans buffered, {obs_dropped} dropped (always-on tracing)");
+
     // Determinism is a hard guarantee, not a trendline: fail loudly.
     anyhow::ensure!(
         mv_ident && mvt_ident && sp_ident && solve_ident,

@@ -91,6 +91,23 @@ impl Histogram {
         self.max_us
     }
 
+    /// Exact sum of all samples in microseconds (saturating).
+    pub fn sum_us(&self) -> u64 {
+        self.sum_us
+    }
+
+    /// Cumulative `(upper_bound_us, count_at_or_below)` pairs over
+    /// *every* bucket — the Prometheus `_bucket{le=...}` series. The
+    /// final pair is the `+Inf` bucket (`None`), whose count equals
+    /// [`Histogram::count`].
+    pub fn cumulative_buckets(&self) -> impl Iterator<Item = (Option<u64>, u64)> + '_ {
+        let mut running = 0u64;
+        self.counts.iter().enumerate().map(move |(i, &c)| {
+            running += c;
+            (BUCKET_BOUNDS_US.get(i).copied(), running)
+        })
+    }
+
     /// Mean in microseconds (0 when empty; exact, from the running sum).
     pub fn mean_us(&self) -> f64 {
         if self.count == 0 {
@@ -103,7 +120,10 @@ impl Histogram {
     /// The q-quantile (`0 < q <= 1`) as the upper bound of the bucket
     /// holding the ⌈q·count⌉-th smallest sample — conservative, never
     /// under the true quantile. Overflow samples report the exact
-    /// observed maximum. Returns 0 when empty.
+    /// observed maximum, and any bound is clamped to the observed
+    /// maximum: with a single sample (or all samples in one bucket)
+    /// every quantile is the exact sample, not the bucket ceiling.
+    /// Returns 0 when empty.
     pub fn quantile_us(&self, q: f64) -> u64 {
         if self.count == 0 {
             return 0;
@@ -114,7 +134,7 @@ impl Histogram {
             seen += c;
             if seen >= rank {
                 return match BUCKET_BOUNDS_US.get(idx) {
-                    Some(&bound) => bound,
+                    Some(&bound) => bound.min(self.max_us),
                     None => self.max_us,
                 };
             }
@@ -219,6 +239,48 @@ mod tests {
         assert_eq!(h.p99_us(), 0);
         assert_eq!(h.mean_us(), 0.0);
         assert!(h.nonzero_buckets().is_empty());
+    }
+
+    /// Single-sample edge case: every quantile is the exact sample,
+    /// not the bucket ceiling (p50 of one 150 µs sample is 150, not
+    /// the 200 µs bound).
+    #[test]
+    fn single_sample_quantiles_report_the_sample() {
+        let mut h = Histogram::new();
+        h.record_us(150);
+        assert_eq!(h.p50_us(), 150);
+        assert_eq!(h.p95_us(), 150);
+        assert_eq!(h.p99_us(), 150);
+        assert_eq!(h.quantile_us(1.0), 150);
+        assert_eq!(h.sum_us(), 150);
+        // Still conservative with more data: quantiles never exceed
+        // the observed max, never undercut the bucketed rank.
+        h.record_us(40);
+        assert_eq!(h.p50_us(), 100, "rank-1 bucket bound, below max");
+        assert_eq!(h.p99_us(), 150, "top bucket clamps to observed max");
+    }
+
+    /// The cumulative iterator yields every bound (even empty buckets)
+    /// plus a final +Inf entry equal to the total count — exactly the
+    /// Prometheus `_bucket` contract.
+    #[test]
+    fn cumulative_buckets_cover_every_bound_and_end_at_count() {
+        let mut h = Histogram::new();
+        for us in [90, 150, 900, 70_000_000] {
+            h.record_us(us);
+        }
+        let pairs: Vec<(Option<u64>, u64)> = h.cumulative_buckets().collect();
+        assert_eq!(pairs.len(), BUCKET_BOUNDS_US.len() + 1);
+        assert_eq!(pairs[0], (Some(100), 1));
+        assert_eq!(pairs[1], (Some(200), 2));
+        assert_eq!(pairs[2], (Some(500), 2), "empty buckets still appear");
+        assert_eq!(*pairs.last().unwrap(), (None, h.count()), "+Inf equals count");
+        let mut last = 0;
+        for (_, c) in &pairs {
+            assert!(*c >= last, "cumulative counts are monotone");
+            last = *c;
+        }
+        assert_eq!(h.sum_us(), 90 + 150 + 900 + 70_000_000);
     }
 
     /// Duration recording truncates to whole microseconds.

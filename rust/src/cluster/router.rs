@@ -11,6 +11,7 @@
 //! | POST   | `/v1/cluster/backends/{id}/drain`   | drain + warm-start hand-off to successors  |
 //! | DELETE | `/v1/cluster/backends/{id}/drain`   | cancel a drain (resume placements)         |
 //! | GET    | `/v1/registry`                      | proxied from the first placeable backend   |
+//! | GET    | `/v1/debug/trace`                   | merged router + backend trace-event JSON   |
 //! | GET    | `/metrics`                          | summed backend series + router families    |
 //! | GET    | `/healthz`                          | router liveness + healthy-backend count    |
 //!
@@ -194,6 +195,23 @@ fn passthrough_headers(req: &Request, req_id: &str) -> Vec<(String, String)> {
     h
 }
 
+/// One proxied exchange with `backends[idx]`, timed as a
+/// `cluster.proxy` span labeled with the backend id. The thread's
+/// request context stamps the span with the same id the backend logs
+/// and traces under, so router and backend spans stitch.
+fn proxy_exchange(
+    state: &ClusterState,
+    idx: usize,
+    method: &str,
+    path: &str,
+    headers: &[(String, String)],
+    body: Option<&[u8]>,
+) -> Result<backend::HttpReply> {
+    let target = &state.backends[idx];
+    let _span = crate::obs::span_detail("cluster.proxy", &target.spec.id);
+    backend::request(&target.spec.addr, method, path, headers, body, state.config.proxy_timeout)
+}
+
 fn route(state: &Arc<ClusterState>, req: &Request, req_id: &str) -> ClusterRouted {
     let segments: Vec<&str> = req.path.split('/').filter(|s| !s.is_empty()).collect();
     let respond = ClusterRouted::Response;
@@ -215,6 +233,7 @@ fn route(state: &Arc<ClusterState>, req: &Request, req_id: &str) -> ClusterRoute
         ("DELETE", ["v1", "cluster", "backends", id, "drain"]) => respond(undrain(state, id)),
         ("GET", ["metrics"]) => respond(Response::text(200, aggregate_metrics(state, req_id))),
         ("GET", ["v1", "registry"]) => respond(proxy_registry(state, req, req_id)),
+        ("GET", ["v1", "debug", "trace"]) => respond(debug_trace(state, req, req_id)),
         ("POST", ["v1", "jobs"]) => respond(submit(state, req, req_id)),
         ("GET", ["v1", "jobs", id]) => respond(match parse_id(id) {
             Err(r) => r,
@@ -237,6 +256,7 @@ fn route(state: &Arc<ClusterState>, req: &Request, req_id: &str) -> ClusterRoute
         (_, ["v1", "cluster", "backends", _, "drain"]) => {
             respond(method_not_allowed("POST, DELETE"))
         }
+        (_, ["v1", "debug", "trace"]) => respond(method_not_allowed("GET")),
         _ => respond(Response::error(404, &format!("no route for {} {}", req.method, req.path))),
     }
 }
@@ -353,13 +373,13 @@ fn submit(state: &Arc<ClusterState>, req: &Request, req_id: &str) -> Response {
             continue;
         }
         let target = &state.backends[idx];
-        let reply = match backend::request(
-            &target.spec.addr,
+        let reply = match proxy_exchange(
+            state,
+            idx,
             "POST",
             "/v1/jobs",
             &headers,
             Some(req.body.as_slice()),
-            state.config.proxy_timeout,
         ) {
             Ok(r) => r,
             Err(_) => {
@@ -438,14 +458,7 @@ fn job_get(state: &ClusterState, req: &Request, req_id: &str, rid: u64) -> Respo
     } else {
         format!("/v1/jobs/{remote}")
     };
-    match backend::request(
-        &state.backends[idx].spec.addr,
-        "GET",
-        &path,
-        &passthrough_headers(req, req_id),
-        None,
-        state.config.proxy_timeout,
-    ) {
+    match proxy_exchange(state, idx, "GET", &path, &passthrough_headers(req, req_id), None) {
         Ok(reply) => Response::json(reply.status, rewrite_job_id(&reply.body_str(), remote, rid)),
         Err(e) => {
             state.proxy_errors.fetch_add(1, Ordering::Relaxed);
@@ -468,13 +481,13 @@ fn job_delete(state: &ClusterState, req: &Request, req_id: &str, rid: u64) -> Re
     let Some((idx, remote)) = lookup(state, rid) else {
         return no_such_job(rid);
     };
-    match backend::request(
-        &state.backends[idx].spec.addr,
+    match proxy_exchange(
+        state,
+        idx,
         "DELETE",
         &format!("/v1/jobs/{remote}"),
         &passthrough_headers(req, req_id),
         None,
-        state.config.proxy_timeout,
     ) {
         Ok(reply) => Response::json(reply.status, rewrite_job_id(&reply.body_str(), remote, rid)),
         Err(e) => {
@@ -504,23 +517,64 @@ fn job_events(state: &Arc<ClusterState>, req: &Request, req_id: &str, rid: u64) 
 /// `GET /v1/registry`: the registry is identical on every backend;
 /// proxy from the first one that answers.
 fn proxy_registry(state: &ClusterState, req: &Request, req_id: &str) -> Response {
-    for b in state.backends.iter() {
+    for (i, b) in state.backends.iter().enumerate() {
         if !b.healthy() {
             continue;
         }
-        if let Ok(reply) = backend::request(
-            &b.spec.addr,
-            "GET",
-            "/v1/registry",
-            &passthrough_headers(req, req_id),
-            None,
-            state.config.proxy_timeout,
-        ) {
+        if let Ok(reply) =
+            proxy_exchange(state, i, "GET", "/v1/registry", &passthrough_headers(req, req_id), None)
+        {
             return Response::json(reply.status, reply.body_str());
         }
         state.proxy_errors.fetch_add(1, Ordering::Relaxed);
     }
     Response::error(503, "no healthy backend to serve the registry")
+}
+
+/// `GET /v1/debug/trace`: the router's own spans (pid 0) merged with
+/// every healthy backend's export (pid i+1). Each node renders exactly
+/// `{"traceEvents":[...]}`, so backend documents splice in via a
+/// prefix/suffix strip ([`crate::obs::trace::inner_events`]) plus a
+/// textual pid rewrite — no JSON re-parse on the hot path. Clock
+/// domains differ per node; cross-node correlation rides the shared
+/// request id in each event's `args`.
+fn debug_trace(state: &ClusterState, req: &Request, req_id: &str) -> Response {
+    let since_ms =
+        req.query_value("since_ms").and_then(|v| v.parse::<u64>().ok()).unwrap_or(0);
+    let own = crate::obs::snapshot(since_ms.saturating_mul(1000));
+    let mut events = String::new();
+    crate::obs::trace::render_events_into(&own, 0, &mut events);
+    let path = format!("/v1/debug/trace?since_ms={since_ms}");
+    let headers = vec![("x-flexa-request-id".to_string(), req_id.to_string())];
+    for (i, b) in state.backends.iter().enumerate() {
+        if !b.healthy() {
+            continue;
+        }
+        let reply = match proxy_exchange(state, i, "GET", &path, &headers, None) {
+            Ok(r) if r.status == 200 => r,
+            _ => {
+                state.scrape_errors.fetch_add(1, Ordering::Relaxed);
+                continue;
+            }
+        };
+        let body = reply.body_str();
+        let Some(inner) = crate::obs::trace::inner_events(&body) else {
+            state.scrape_errors.fetch_add(1, Ordering::Relaxed);
+            continue;
+        };
+        if inner.is_empty() {
+            continue;
+        }
+        // Backends render themselves as pid 0; re-home under pid i+1.
+        // The quoted pattern cannot occur inside a string value (values
+        // are escaped), so a plain replace is exact.
+        let rehomed = inner.replace("\"pid\":0,", &format!("\"pid\":{},", i + 1));
+        if !events.is_empty() {
+            events.push(',');
+        }
+        events.push_str(&rehomed);
+    }
+    Response::json(200, format!("{{\"traceEvents\":[{events}]}}"))
 }
 
 /// `POST /v1/cluster/backends/{id}/drain`: stop new placements on the
@@ -536,14 +590,7 @@ fn drain(state: &ClusterState, req: &Request, req_id: &str, id: &str) -> Respons
 
     // Pull the snapshot. Failure keeps the backend draining (placements
     // have stopped) but reports the hand-off as incomplete.
-    let reply = match backend::request(
-        &state.backends[drained].spec.addr,
-        "GET",
-        "/v1/cache/snapshot",
-        &headers,
-        None,
-        state.config.proxy_timeout,
-    ) {
+    let reply = match proxy_exchange(state, drained, "GET", "/v1/cache/snapshot", &headers, None) {
         Ok(r) if r.status == 200 => r,
         Ok(r) => {
             return Response::error(
@@ -592,15 +639,8 @@ fn drain(state: &ClusterState, req: &Request, req_id: &str, id: &str) -> Respons
     let mut moved = Vec::new();
     for (target, lines) in &grouped {
         let body = format!("{{\"entries\":[{}]}}", lines.join(","));
-        let ok = backend::request(
-            &state.backends[*target].spec.addr,
-            "POST",
-            "/v1/cache/snapshot",
-            &headers,
-            Some(body.as_bytes()),
-            state.config.proxy_timeout,
-        )
-        .map(|r| r.status == 200)
+        let ok = proxy_exchange(state, *target, "POST", "/v1/cache/snapshot", &headers, Some(body.as_bytes()))
+            .map(|r| r.status == 200)
         .unwrap_or_else(|_| {
             state.proxy_errors.fetch_add(1, Ordering::Relaxed);
             false
@@ -662,17 +702,17 @@ fn render_snapshot_entry(entry: &Json) -> String {
 fn aggregate_metrics(state: &ClusterState, req_id: &str) -> String {
     let mut order: Vec<String> = Vec::new();
     let mut sums: HashMap<String, f64> = HashMap::new();
-    for b in state.backends.iter() {
+    for (i, b) in state.backends.iter().enumerate() {
         if !b.healthy() {
             continue;
         }
-        let text = match backend::request(
-            &b.spec.addr,
+        let text = match proxy_exchange(
+            state,
+            i,
             "GET",
             "/metrics",
             &[("x-flexa-request-id".to_string(), req_id.to_string())],
             None,
-            state.config.proxy_timeout,
         ) {
             Ok(r) if r.status == 200 => r.body_str(),
             _ => {
@@ -759,6 +799,7 @@ impl ClusterServer {
                 return Err(anyhow!("duplicate backend id `{}`", s.id));
             }
         }
+        crate::obs::init();
         let listener = TcpListener::bind(addr)
             .map_err(|e| anyhow!("cannot bind cluster listener on `{addr}`: {e}"))?;
         let local = listener.local_addr()?;
@@ -898,6 +939,9 @@ fn handle_connection(stream: TcpStream, state: &Arc<ClusterState>, stop: &Atomic
             Ok(None) => return,
             Ok(Some(req)) => {
                 let req_id = request_id(state, &req);
+                // Tenant auth lives at the backends, so router spans
+                // carry only the request id.
+                let _obs_ctx = crate::obs::ctx_guard(crate::obs::Ctx::request(&req_id, ""));
                 let t0 = Instant::now();
                 match route(state, &req, &req_id) {
                     ClusterRouted::Response(resp) => {

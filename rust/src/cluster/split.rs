@@ -367,6 +367,19 @@ pub fn drive(
 ) {
     let n = plan.spec.cols;
     let p = targets.len();
+    // The driver runs on its own thread: restore the submitting
+    // request's attribution so `split.outer` spans stitch with the
+    // router-side submit and the backends' subjob spans.
+    let request_id = auth
+        .iter()
+        .find(|(k, _)| k.eq_ignore_ascii_case("x-flexa-request-id"))
+        .map(|(_, v)| v.as_str())
+        .unwrap_or("");
+    let _obs_ctx = crate::obs::ctx_guard(crate::obs::Ctx {
+        job: job.id,
+        tenant: crate::obs::InlineStr::new(&job.tenant),
+        request_id: crate::obs::InlineStr::new(request_id),
+    });
     {
         let mut inner = job.inner.lock().unwrap();
         inner.phase = Phase::Running;
@@ -389,6 +402,7 @@ pub fn drive(
         }
         // Fan the full state out; every backend advances it one exact
         // iteration with the shared AdmmCore arithmetic.
+        let _outer_span = crate::obs::span_detail("split.outer", &format!("r{k}/p{p}"));
         let mut results: Vec<Option<Vec<f64>>> = (0..p).map(|_| None).collect();
         let round: Vec<Result<(usize, Vec<f64>, f64), String>> = std::thread::scope(|scope| {
             let handles: Vec<_> = targets

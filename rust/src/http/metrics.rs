@@ -21,6 +21,10 @@ pub struct HttpMetrics {
     pub get_events: AtomicU64,
     pub delete_job: AtomicU64,
     pub get_registry: AtomicU64,
+    /// `GET /v1/jobs/{id}/profile` (per-job phase breakdown).
+    pub get_profile: AtomicU64,
+    /// `GET /v1/debug/trace` (Chrome trace-event export).
+    pub get_trace: AtomicU64,
     /// `GET`/`POST /v1/cache/snapshot` (cluster drain handoff).
     pub cache_snapshot: AtomicU64,
     pub healthz: AtomicU64,
@@ -35,7 +39,7 @@ pub struct HttpMetrics {
 
 impl HttpMetrics {
     /// `(label, count)` per endpoint, for the labeled request family.
-    fn endpoint_counts(&self) -> [(&'static str, u64); 9] {
+    fn endpoint_counts(&self) -> [(&'static str, u64); 11] {
         let get = |c: &AtomicU64| c.load(Ordering::Relaxed);
         [
             ("post_jobs", get(&self.post_jobs)),
@@ -43,6 +47,8 @@ impl HttpMetrics {
             ("get_events", get(&self.get_events)),
             ("delete_job", get(&self.delete_job)),
             ("get_registry", get(&self.get_registry)),
+            ("get_profile", get(&self.get_profile)),
+            ("get_trace", get(&self.get_trace)),
             ("cache_snapshot", get(&self.cache_snapshot)),
             ("healthz", get(&self.healthz)),
             ("metrics", get(&self.metrics)),
@@ -225,6 +231,13 @@ pub fn render_prometheus(
         counter(&mut s, "flexa_store_compactions_total", "Store compaction rewrites.", st.compactions);
         gauge(&mut s, "flexa_store_bytes", "Persistent store file size.", st.bytes as f64);
     }
+
+    // --- latency histograms (flexa::obs) ---
+    // Real Prometheus histogram families: request duration by endpoint,
+    // job queue/service time, iteration duration by solver, plus the
+    // span drop counter. Process-global, so every in-process server
+    // contributes to the same families.
+    crate::obs::metrics().render_into(&mut s);
 
     gauge(&mut s, "flexa_uptime_seconds", "Seconds since the HTTP server started.", uptime_seconds);
     s

@@ -89,6 +89,11 @@ pub struct HttpConfig {
     /// Emit one structured JSON access-log line per request on stderr
     /// (request id, method, path, status, tenant, duration).
     pub access_log: bool,
+    /// Suppress access-log lines for successful `/healthz` and
+    /// `/metrics` requests (`--quiet-probes`): health pollers and
+    /// scrapers otherwise drown real traffic in logs. Probe *failures*
+    /// (status ≥ 400) are always logged.
+    pub quiet_probes: bool,
 }
 
 impl Default for HttpConfig {
@@ -102,8 +107,19 @@ impl Default for HttpConfig {
             sse_iteration_retention: 10_000,
             sse_finished_retention: 1024,
             access_log: true,
+            quiet_probes: false,
         }
     }
+}
+
+/// Whether a request line should be access-logged. Probe endpoints
+/// (`/healthz`, `/metrics`) are suppressed under `quiet_probes` —
+/// unless they *failed*, which is always worth a line.
+pub fn should_log(quiet_probes: bool, path: &str, status: u16) -> bool {
+    if !quiet_probes || status >= 400 {
+        return true;
+    }
+    !matches!(path, "/healthz" | "/metrics")
 }
 
 /// Shared server context: every connection thread sees the same
@@ -136,7 +152,7 @@ impl ServerState {
     /// One structured access-log line per request, on stderr. The id is
     /// logged as a JSON string: pass-through ids need not be numeric.
     fn access_log(&self, request: &str, method: &str, path: &str, status: u16, tenant: &str, started: Instant) {
-        if !self.config.access_log {
+        if !self.config.access_log || !should_log(self.config.quiet_probes, path, status) {
             return;
         }
         use crate::serve::jobfile::esc;
@@ -335,6 +351,10 @@ fn handle_connection(stream: TcpStream, state: &Arc<ServerState>, stop: &AtomicB
         if served >= state.config.keep_alive_max_requests {
             return;
         }
+        // On a keep-alive connection this interval also covers waiting
+        // for the client's *next* request, so a long http.parse span on
+        // request 2+ means a slow client, not a slow parser.
+        let parse_start = crate::obs::now_us();
         match parser::read_request(
             &mut reader,
             Some(&mut writer as &mut dyn std::io::Write),
@@ -347,6 +367,18 @@ fn handle_connection(stream: TcpStream, state: &Arc<ServerState>, stop: &AtomicB
                 let req_id = request_id(state, &req);
                 let t0 = Instant::now();
                 let tenant = router::tenant_label(state, &req);
+                // Everything this request records — including the span
+                // below and any scheduler work on this thread — carries
+                // its id and tenant.
+                let _req_ctx =
+                    crate::obs::ctx_guard(crate::obs::Ctx::request(&req_id, &tenant));
+                crate::obs::record(
+                    "http.parse",
+                    parse_start,
+                    crate::obs::now_us().saturating_sub(parse_start),
+                    "",
+                );
+                let endpoint = router::endpoint_label(&req);
                 match router::route(state, &req) {
                     Routed::Response(resp) => {
                         let resp = resp.with_header("x-flexa-request-id", req_id.clone());
@@ -355,6 +387,8 @@ fn handle_connection(stream: TcpStream, state: &Arc<ServerState>, stop: &AtomicB
                         }
                         let keep_alive = req.keep_alive && resp.status < 400;
                         let wrote = resp.write_to(&mut writer, keep_alive).is_ok();
+                        crate::obs::metrics()
+                            .record_http(endpoint, t0.elapsed().as_micros() as u64);
                         state.access_log(&req_id, &req.method, &req.path, resp.status, &tenant, t0);
                         if !wrote || !keep_alive {
                             return;
@@ -366,8 +400,14 @@ fn handle_connection(stream: TcpStream, state: &Arc<ServerState>, stop: &AtomicB
                         );
                         use std::io::Write;
                         if writer.write_all(head.as_bytes()).is_ok() {
+                            // The span covers the whole subscription —
+                            // sse.emit measures stream lifetime, not a
+                            // single write.
+                            let _sse_span = crate::obs::span("sse.emit");
                             let _ = sse::stream_events(&mut writer, sub, &abort);
                         }
+                        crate::obs::metrics()
+                            .record_http(endpoint, t0.elapsed().as_micros() as u64);
                         // Logged when the stream ends so the duration
                         // covers the whole subscription.
                         state.access_log(&req_id, &req.method, &req.path, 200, &tenant, t0);

@@ -5,6 +5,8 @@
 //! | POST   | `/v1/jobs`             | submit one JSON job spec → job id (`202`) |
 //! | GET    | `/v1/jobs/{id}`        | status/result JSON (`?x=1` adds the iterate) |
 //! | GET    | `/v1/jobs/{id}/events` | SSE lifecycle stream                      |
+//! | GET    | `/v1/jobs/{id}/profile`| per-job phase profile (queue/cache/kernel)|
+//! | GET    | `/v1/debug/trace`      | Chrome trace-event JSON (`?since_ms=N`)   |
 //! | DELETE | `/v1/jobs/{id}`        | cooperative cancellation                  |
 //! | GET    | `/v1/registry`         | registered problems/solvers               |
 //! | GET    | `/v1/cache/snapshot`   | warm-start cache export (drain handoff)   |
@@ -201,6 +203,34 @@ pub fn route(state: &ServerState, req: &Request) -> Routed {
                 },
             }
         }
+        ("GET", ["v1", "jobs", id, "profile"]) => {
+            m.get_profile.fetch_add(1, Ordering::Relaxed);
+            respond(match parse_id(*id) {
+                Err(r) => r,
+                Ok(id) => match visible_status(state, req, id) {
+                    // Visibility first (tenant-scoped like status), then
+                    // the profile store — both prune on the same
+                    // retention, so a visible job may still have aged
+                    // out of profiles between the two reads.
+                    Ok(Some(_)) => match state.scheduler.profile(id) {
+                        Some(p) => Response::json(200, p.json()),
+                        None => Response::error(
+                            404,
+                            &format!("no profile for job {id} (never submitted, or pruned)"),
+                        ),
+                    },
+                    Ok(None) => Response::error(
+                        404,
+                        &format!("no profile for job {id} (never submitted, or pruned)"),
+                    ),
+                    Err(r) => r,
+                },
+            })
+        }
+        ("GET", ["v1", "debug", "trace"]) => {
+            m.get_trace.fetch_add(1, Ordering::Relaxed);
+            respond(debug_trace(state, req))
+        }
         ("GET", ["v1", "cache", "snapshot"]) => {
             m.cache_snapshot.fetch_add(1, Ordering::Relaxed);
             respond(cache_snapshot_get(state, req))
@@ -216,6 +246,8 @@ pub fn route(state: &ServerState, req: &Request) -> Routed {
         (_, ["v1", "jobs"]) => respond(method_not_allowed("POST")),
         (_, ["v1", "jobs", _]) => respond(method_not_allowed("GET, DELETE")),
         (_, ["v1", "jobs", _, "events"]) => respond(method_not_allowed("GET")),
+        (_, ["v1", "jobs", _, "profile"]) => respond(method_not_allowed("GET")),
+        (_, ["v1", "debug", "trace"]) => respond(method_not_allowed("GET")),
         (_, ["v1", "cache", "snapshot"]) => respond(method_not_allowed("GET, POST")),
         _ => {
             m.not_found.fetch_add(1, Ordering::Relaxed);
@@ -227,6 +259,46 @@ pub fn route(state: &ServerState, req: &Request) -> Routed {
 fn method_not_allowed(allow: &str) -> Response {
     Response::error(405, &format!("method not allowed (allow: {allow})"))
         .with_header("Allow", allow.to_string())
+}
+
+/// Bounded-cardinality endpoint label for the
+/// `flexa_http_request_duration_seconds` histogram family — mirrors the
+/// per-endpoint counters, never a raw path (job ids would otherwise
+/// explode the label space).
+pub fn endpoint_label(req: &Request) -> &'static str {
+    let segments: Vec<&str> = req.path.split('/').filter(|s| !s.is_empty()).collect();
+    match (req.method.as_str(), segments.as_slice()) {
+        ("GET", ["healthz"]) => "healthz",
+        ("GET", ["metrics"]) => "metrics",
+        ("GET", ["v1", "registry"]) => "get_registry",
+        ("POST", ["v1", "jobs"]) => "post_jobs",
+        ("GET", ["v1", "jobs", _]) => "get_job",
+        ("DELETE", ["v1", "jobs", _]) => "delete_job",
+        ("GET", ["v1", "jobs", _, "events"]) => "get_events",
+        ("GET", ["v1", "jobs", _, "profile"]) => "get_profile",
+        ("GET", ["v1", "debug", "trace"]) => "get_trace",
+        ("GET" | "POST", ["v1", "cache", "snapshot"]) => "cache_snapshot",
+        _ => "other",
+    }
+}
+
+/// `GET /v1/debug/trace?since_ms=N`: export the span rings as Chrome
+/// trace-event JSON (Perfetto-loadable). `since_ms` filters to spans
+/// ending at or after that offset on the process span clock (as
+/// reported by `ts` in a previous export); default 0 = everything the
+/// rings still hold. Requires an authenticated tenant, like the cache
+/// snapshot — traces carry cross-tenant timing.
+fn debug_trace(state: &ServerState, req: &Request) -> Response {
+    if let Err(resp) = resolve_tenant(state, req) {
+        return resp;
+    }
+    let since_us = req
+        .query_value("since_ms")
+        .and_then(|v| v.parse::<u64>().ok())
+        .unwrap_or(0)
+        .saturating_mul(1_000);
+    let spans = crate::obs::snapshot(since_us);
+    Response::json(200, crate::obs::trace::render(&spans, 0))
 }
 
 /// The `Authorization: Bearer <token>` credential, if present.

@@ -64,6 +64,10 @@
 //! HTTP backends with consistent-hash placement by warm-start
 //! fingerprint, health-checked failover, drain-with-handoff, aggregated
 //! metrics, and router-driven block-split ADMM for oversized jobs.
+//! The [`obs`] layer makes all of it observable: phase-attributed
+//! trace spans in bounded per-thread rings (`GET /v1/debug/trace`,
+//! `flexa trace`), production latency histograms in `/metrics`, and
+//! per-job phase profiles (`GET /v1/jobs/{id}/profile`).
 
 pub mod algos;
 pub mod api;
@@ -76,6 +80,7 @@ pub mod datagen;
 pub mod http;
 pub mod linalg;
 pub mod metrics;
+pub mod obs;
 pub mod par;
 pub mod prng;
 pub mod problems;

@@ -8,6 +8,8 @@
 //! * `cluster`    — route jobs across N `flexa serve --http` backends
 //!                  (consistent-hash placement, health checks, draining,
 //!                  block-split ADMM for oversized jobs).
+//! * `trace`      — download phase-attributed Chrome trace-event JSON
+//!                  from a running serve/cluster node.
 //! * `experiment` — run a TOML experiment config (multi-algo, multi-
 //!                  realization), writing CSV series + ASCII plots.
 //! * `figure1`    — regenerate a panel of the paper's Fig. 1.
@@ -47,6 +49,7 @@ fn dispatch(args: &[String]) -> anyhow::Result<()> {
         "solve" => cmd_solve(rest),
         "serve" => cmd_serve(rest),
         "cluster" => cmd_cluster(rest),
+        "trace" => cmd_trace(rest),
         "experiment" => cmd_experiment(rest),
         "figure1" => cmd_figure1(rest),
         "registry" => cmd_registry(rest),
@@ -65,6 +68,7 @@ fn dispatch(args: &[String]) -> anyhow::Result<()> {
                  \x20 solve       run one solver on a planted instance\n\
                  \x20 serve       run a JSONL job file through the solve scheduler\n\
                  \x20 cluster     route jobs across flexa serve --http backends\n\
+                 \x20 trace       download trace-event JSON from a serve/cluster node\n\
                  \x20 experiment  run a TOML experiment config\n\
                  \x20 figure1     regenerate a panel of the paper's Fig. 1\n\
                  \x20 registry    list registered problems and solvers\n\
@@ -211,6 +215,7 @@ fn cmd_serve(args: &[String]) -> anyhow::Result<()> {
         .opt("max-conns", Some("64"), "concurrent HTTP connections (with --http)")
         .opt("max-body-kb", Some("1024"), "largest accepted HTTP request body, KiB (with --http)")
         .flag("no-access-log", "suppress the per-request access-log lines (with --http)")
+        .flag("quiet-probes", "suppress access-log lines for successful /healthz and /metrics probes (with --http)")
         .flag("no-core-rebalance", "pin each job's kernel-thread share at dispatch instead of re-evaluating it at iteration boundaries")
         .flag("stream", "emit every job lifecycle event as a JSON line")
         .flag("quiet", "suppress the stderr summary");
@@ -311,6 +316,7 @@ fn cmd_serve(args: &[String]) -> anyhow::Result<()> {
                 max_connections: p.usize("max-conns")?.max(1),
                 max_body_bytes: p.usize("max-body-kb")?.saturating_mul(1 << 10).max(1 << 10),
                 access_log: !p.flag("no-access-log"),
+                quiet_probes: p.flag("quiet-probes"),
                 ..flexa::http::HttpConfig::default()
             };
             let server = flexa::http::HttpServer::bind_with_downstream(
@@ -431,6 +437,57 @@ fn cmd_cluster(args: &[String]) -> anyhow::Result<()> {
     );
     eprintln!("stop with ctrl-c");
     server.run()
+}
+
+/// Fetch `/v1/debug/trace` from a running serve or cluster node and
+/// write the Chrome trace-event JSON (loadable in Perfetto or
+/// `chrome://tracing`). Against a cluster router the document already
+/// merges router spans (pid 0) with every backend's (pid i+1).
+fn cmd_trace(args: &[String]) -> anyhow::Result<()> {
+    // Accept the conventional short `-o` for the output path.
+    let args: Vec<String> =
+        args.iter().map(|a| if a == "-o" { "--out".to_string() } else { a.clone() }).collect();
+    let cmd = Command::new("trace", "download trace-event JSON from a serve/cluster node")
+        .opt("out", Some("trace.json"), "output file (`-` writes to stdout)")
+        .opt("since-ms", Some("0"), "only spans ending at/after this offset from server start, milliseconds")
+        .opt("timeout-ms", Some("10000"), "request timeout, milliseconds")
+        .opt("token", None, "bearer token for servers running with tenant auth");
+    let p = cmd.parse(&args)?;
+    let addr = p
+        .positionals()
+        .first()
+        .ok_or_else(|| anyhow::anyhow!("usage: flexa trace HOST:PORT [-o trace.json]"))?;
+    let addr = addr.strip_prefix("http://").unwrap_or(addr).trim_end_matches('/');
+    let path = format!("/v1/debug/trace?since_ms={}", p.u64("since-ms")?);
+    let mut headers = Vec::new();
+    if let Some(token) = p.get("token") {
+        headers.push(("Authorization".to_string(), format!("Bearer {token}")));
+    }
+    let reply = flexa::cluster::backend::request(
+        addr,
+        "GET",
+        &path,
+        &headers,
+        None,
+        std::time::Duration::from_millis(p.u64("timeout-ms")?.max(1)),
+    )?;
+    anyhow::ensure!(
+        reply.status == 200,
+        "server answered {}: {}",
+        reply.status,
+        reply.body_str().trim()
+    );
+    let body = reply.body_str();
+    let events = body.matches("\"ph\":\"X\"").count();
+    match p.str("out")? {
+        "-" => println!("{body}"),
+        out => {
+            std::fs::write(out, &body)
+                .map_err(|e| anyhow::anyhow!("cannot write `{out}`: {e}"))?;
+            eprintln!("{events} events written to {out} (open at https://ui.perfetto.dev)");
+        }
+    }
+    Ok(())
 }
 
 fn cmd_experiment(args: &[String]) -> anyhow::Result<()> {
@@ -706,6 +763,16 @@ mod tests {
             .unwrap_err()
             .to_string();
         assert!(err.contains("cannot read backends file"), "{err}");
+    }
+
+    /// `trace` needs an address, and `-o` aliases `--out` (everything
+    /// else rides the shared option grammar).
+    #[test]
+    fn trace_requires_an_address() {
+        let err = cmd_trace(&[]).unwrap_err().to_string();
+        assert!(err.contains("usage: flexa trace"), "{err}");
+        let err = cmd_trace(&args_of(&["-o"])).unwrap_err().to_string();
+        assert!(err.contains("--out requires a value"), "{err}");
     }
 
     /// `--store-fsync` is validated: bad grammar is refused, and passing

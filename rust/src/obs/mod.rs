@@ -1,0 +1,248 @@
+//! `flexa::obs` — always-on, bounded-cost observability.
+//!
+//! Three layers, front to back:
+//!
+//! - **Spans** ([`span`]): phase-labeled monotonic-clock intervals
+//!   (`http.parse`, `queue.wait`, `cache.probe`, `solve.iter`,
+//!   `kernel`, `sse.emit`, `retry.backoff`, `cluster.proxy`,
+//!   `split.outer`) carrying job id, tenant, and the
+//!   `x-flexa-request-id` the cluster router propagates to backends so
+//!   one trace stitches across nodes. Spans land in per-thread ring
+//!   buffers ([`ring`]) and export as Chrome trace-event JSON
+//!   ([`trace`]) via `GET /v1/debug/trace` and `flexa trace`.
+//! - **Histograms** ([`ObsMetrics`]): production latency distributions
+//!   promoted from `bench::Histogram` into `/metrics` as real
+//!   Prometheus `histogram` families, so the load-bench SLO quantities
+//!   (queue/service/iteration/request latency) are observable live.
+//! - **Profiles** ([`profile`]): per-job phase breakdowns served by
+//!   `GET /v1/jobs/{id}/profile`.
+//!
+//! The hot-path contract everywhere: no allocation, no blocking, no
+//! effect on solver arithmetic. Telemetry under pressure is *dropped
+//! and counted* (`flexa_obs_spans_dropped_total`), never waited on —
+//! solver bit-identity and golden IterEvent streams are untouched
+//! because observation only ever reads clocks around compute, never
+//! reorders it.
+
+pub mod profile;
+pub mod ring;
+pub mod span;
+pub mod trace;
+
+pub use profile::{JobProfile, ProfileStore};
+pub use ring::{snapshot, spans_dropped};
+pub use span::{
+    add_kernel_us, ctx, ctx_guard, init, instant_us, now_us, record, reset_kernel_us, set_ctx,
+    span, span_detail, take_kernel_us, Ctx, InlineStr, Span, SpanGuard,
+};
+
+use crate::bench::histogram::{Histogram, BUCKET_BOUNDS_US};
+use std::collections::BTreeMap;
+use std::sync::{Mutex, OnceLock};
+
+/// Process-wide latency histogram families, rendered into `/metrics`.
+///
+/// Global rather than per-server: an in-process test may run several
+/// servers whose recordings share these families, so assertions must
+/// check "nonzero and parseable", never exact counts. Fixed bucket
+/// bounds (the `bench::Histogram` 1–2–5 series) keep sample lines
+/// textually identical across backends, which is what lets the cluster
+/// router's `/metrics` aggregation sum them line-by-line.
+pub struct ObsMetrics {
+    /// Request duration by endpoint label.
+    http: Mutex<BTreeMap<&'static str, Histogram>>,
+    /// Enqueue → first start.
+    job_queue: Mutex<Histogram>,
+    /// Worker-held time per attempt.
+    job_service: Mutex<Histogram>,
+    /// Iteration duration by solver name.
+    job_iteration: Mutex<BTreeMap<String, Histogram>>,
+}
+
+static METRICS: OnceLock<ObsMetrics> = OnceLock::new();
+
+/// The process-wide metrics instance.
+pub fn metrics() -> &'static ObsMetrics {
+    METRICS.get_or_init(|| ObsMetrics {
+        http: Mutex::new(BTreeMap::new()),
+        job_queue: Mutex::new(Histogram::new()),
+        job_service: Mutex::new(Histogram::new()),
+        job_iteration: Mutex::new(BTreeMap::new()),
+    })
+}
+
+fn locked<T>(m: &Mutex<T>) -> std::sync::MutexGuard<'_, T> {
+    match m.lock() {
+        Ok(g) => g,
+        Err(p) => p.into_inner(),
+    }
+}
+
+impl ObsMetrics {
+    pub fn record_http(&self, endpoint: &'static str, us: u64) {
+        locked(&self.http).entry(endpoint).or_default().record_us(us);
+    }
+
+    pub fn record_queue(&self, us: u64) {
+        locked(&self.job_queue).record_us(us);
+    }
+
+    pub fn record_service(&self, us: u64) {
+        locked(&self.job_service).record_us(us);
+    }
+
+    pub fn record_iteration(&self, solver: &str, us: u64) {
+        let mut map = locked(&self.job_iteration);
+        match map.get_mut(solver) {
+            Some(h) => h.record_us(us),
+            None => {
+                let mut h = Histogram::new();
+                h.record_us(us);
+                map.insert(solver.to_string(), h);
+            }
+        }
+    }
+
+    /// Append every histogram family (plus the span drop counter) in
+    /// Prometheus text format.
+    pub fn render_into(&self, out: &mut String) {
+        let http = locked(&self.http);
+        render_family(
+            out,
+            "flexa_http_request_duration_seconds",
+            "HTTP request duration by endpoint",
+            "endpoint",
+            http.iter().map(|(k, h)| (*k, h)),
+        );
+        drop(http);
+        render_family(
+            out,
+            "flexa_job_queue_seconds",
+            "Job time from enqueue to first start",
+            "",
+            std::iter::once(("", &*locked(&self.job_queue))),
+        );
+        render_family(
+            out,
+            "flexa_job_service_seconds",
+            "Job worker-held time per attempt",
+            "",
+            std::iter::once(("", &*locked(&self.job_service))),
+        );
+        let iter = locked(&self.job_iteration);
+        render_family(
+            out,
+            "flexa_job_iteration_seconds",
+            "Solver iteration duration by solver",
+            "solver",
+            iter.iter().map(|(k, h)| (k.as_str(), h)),
+        );
+        drop(iter);
+        out.push_str(
+            "# HELP flexa_obs_spans_dropped_total Trace spans lost to ring contention, registry exhaustion, or overwrite\n",
+        );
+        out.push_str("# TYPE flexa_obs_spans_dropped_total counter\n");
+        out.push_str(&format!("flexa_obs_spans_dropped_total {}\n", ring::spans_dropped()));
+    }
+}
+
+/// Minimal Prometheus label-value escape (backslash, quote, newline).
+fn esc_label(v: &str) -> String {
+    let mut s = String::with_capacity(v.len());
+    for c in v.chars() {
+        match c {
+            '\\' => s.push_str("\\\\"),
+            '"' => s.push_str("\\\""),
+            '\n' => s.push_str("\\n"),
+            _ => s.push(c),
+        }
+    }
+    s
+}
+
+/// Render one histogram family. `label_key` empty means unlabeled (the
+/// iterator then yields exactly one `("", h)` pair). Every bucket bound
+/// is emitted even at count 0 so the le-series is identical on every
+/// node — the cluster aggregator sums sample lines textually and
+/// mismatched series would corrupt cumulative counts.
+fn render_family<'a>(
+    out: &mut String,
+    name: &str,
+    help: &str,
+    label_key: &str,
+    series: impl Iterator<Item = (&'a str, &'a Histogram)>,
+) {
+    out.push_str(&format!("# HELP {name} {help}\n# TYPE {name} histogram\n"));
+    for (label_val, h) in series {
+        let prefix = if label_key.is_empty() {
+            String::new()
+        } else {
+            format!("{label_key}=\"{}\",", esc_label(label_val))
+        };
+        for (bound, cumulative) in h.cumulative_buckets() {
+            let le = match bound {
+                Some(us) => format!("{}", us as f64 / 1e6),
+                None => "+Inf".to_string(),
+            };
+            out.push_str(&format!("{name}_bucket{{{prefix}le=\"{le}\"}} {cumulative}\n"));
+        }
+        let plain = if label_key.is_empty() {
+            String::new()
+        } else {
+            format!("{{{label_key}=\"{}\"}}", esc_label(label_val))
+        };
+        out.push_str(&format!("{name}_sum{plain} {}\n", h.sum_us() as f64 / 1e6));
+        out.push_str(&format!("{name}_count{plain} {}\n", h.count()));
+    }
+}
+
+/// Every bucket bound in the family series, for tests and docs.
+pub fn bucket_bounds_us() -> &'static [u64] {
+    BUCKET_BOUNDS_US
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn rendered_families_have_cumulative_le_ordered_buckets() {
+        let m = metrics();
+        m.record_http("post_jobs", 150);
+        m.record_http("post_jobs", 3_000);
+        m.record_queue(700);
+        m.record_service(42_000);
+        m.record_iteration("fista", 900);
+        let mut out = String::new();
+        m.render_into(&mut out);
+        for family in [
+            "flexa_http_request_duration_seconds",
+            "flexa_job_queue_seconds",
+            "flexa_job_service_seconds",
+            "flexa_job_iteration_seconds",
+        ] {
+            assert!(out.contains(&format!("# TYPE {family} histogram")), "{family} typed");
+            assert!(out.contains(&format!("{family}_count")), "{family} has _count");
+            assert!(out.contains(&format!("{family}_sum")), "{family} has _sum");
+            // The +Inf bucket is mandatory for Prometheus histograms.
+            assert!(out.contains(&format!("{family}_bucket")), "{family} has buckets");
+            assert!(
+                out.lines().any(|l| l.starts_with(family) && l.contains("le=\"+Inf\"")),
+                "{family} has +Inf"
+            );
+        }
+        assert!(out.contains("flexa_obs_spans_dropped_total"));
+        // Cumulative monotonicity within one labeled series.
+        let mut last = 0u64;
+        let mut seen = 0;
+        for line in out.lines() {
+            if line.starts_with("flexa_job_queue_seconds_bucket{") {
+                let v: u64 = line.rsplit(' ').next().unwrap().parse().unwrap();
+                assert!(v >= last, "buckets must be cumulative: {line}");
+                last = v;
+                seen += 1;
+            }
+        }
+        assert_eq!(seen, BUCKET_BOUNDS_US.len() + 1, "full le series incl. +Inf");
+    }
+}

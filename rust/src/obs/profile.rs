@@ -1,0 +1,264 @@
+//! Per-job phase profiles: where one job's wall-clock time went.
+//!
+//! The scheduler owns a [`ProfileStore`] and stamps it at every
+//! lifecycle edge: enqueue, first start, cache probe, each iteration,
+//! kernel-time flush, retry, terminal. `GET /v1/jobs/{id}/profile`
+//! serves the resulting breakdown — the per-job complement to the
+//! aggregate `/metrics` histograms. Finished profiles are pruned in
+//! completion order under the same retention count as job results, so
+//! the map is bounded under churn.
+
+use crate::serve::jobfile::esc;
+use std::collections::{HashMap, VecDeque};
+use std::sync::Mutex;
+
+/// Iteration timing summary (microseconds).
+#[derive(Clone, Debug, Default)]
+pub struct IterStats {
+    pub count: u64,
+    pub total_us: u64,
+    pub max_us: u64,
+}
+
+/// How many `(iteration, threads)` share changes are kept per job;
+/// rebalance churn past this is dropped (count, not crash).
+pub const MAX_SHARE_CHANGES: usize = 64;
+
+/// One job's phase breakdown, built incrementally over its lifetime.
+#[derive(Clone, Debug)]
+pub struct JobProfile {
+    pub job: u64,
+    pub tenant: String,
+    pub solver: String,
+    /// Lifecycle: "queued" → "running" → the terminal outcome label.
+    pub state: String,
+    pub retries: u64,
+    pub enqueued_us: u64,
+    /// First `Started` (0 until the job runs).
+    pub started_us: u64,
+    pub finished_us: u64,
+    /// Enqueue → first start.
+    pub queue_us: u64,
+    pub cache_probe_us: u64,
+    /// None until a probe happens (e.g. solver without warm-start).
+    pub cache_hit: Option<bool>,
+    /// Worker-held time, accumulated across retry attempts.
+    pub service_us: u64,
+    /// Parallel-kernel region time on the solve thread.
+    pub kernel_us: u64,
+    pub iterations: IterStats,
+    /// `(iteration, threads)` at each core-budget change (first entry
+    /// is the initial share), capped at [`MAX_SHARE_CHANGES`].
+    pub thread_shares: Vec<(u64, usize)>,
+    /// Enqueue → terminal (0 until terminal).
+    pub total_us: u64,
+}
+
+impl JobProfile {
+    fn new(job: u64, tenant: &str, enqueued_us: u64) -> Self {
+        JobProfile {
+            job,
+            tenant: tenant.to_string(),
+            solver: String::new(),
+            state: "queued".to_string(),
+            retries: 0,
+            enqueued_us,
+            started_us: 0,
+            finished_us: 0,
+            queue_us: 0,
+            cache_probe_us: 0,
+            cache_hit: None,
+            service_us: 0,
+            kernel_us: 0,
+            iterations: IterStats::default(),
+            thread_shares: Vec::new(),
+            total_us: 0,
+        }
+    }
+
+    /// Record one iteration and the thread share it ran under.
+    pub fn add_iteration(&mut self, dur_us: u64, threads: usize) {
+        let iter = self.iterations.count;
+        self.iterations.count += 1;
+        self.iterations.total_us = self.iterations.total_us.saturating_add(dur_us);
+        self.iterations.max_us = self.iterations.max_us.max(dur_us);
+        match self.thread_shares.last() {
+            Some(&(_, last)) if last == threads => {}
+            _ if self.thread_shares.len() >= MAX_SHARE_CHANGES => {}
+            _ => self.thread_shares.push((iter, threads)),
+        }
+    }
+
+    /// Render the profile as the `/v1/jobs/{id}/profile` JSON body.
+    pub fn json(&self) -> String {
+        let ms = |us: u64| us as f64 / 1_000.0;
+        let mean_us = if self.iterations.count == 0 {
+            0.0
+        } else {
+            self.iterations.total_us as f64 / self.iterations.count as f64
+        };
+        let mut shares = String::new();
+        for (i, (iter, threads)) in self.thread_shares.iter().enumerate() {
+            if i > 0 {
+                shares.push(',');
+            }
+            shares.push_str(&format!("{{\"iteration\":{iter},\"threads\":{threads}}}"));
+        }
+        format!(
+            concat!(
+                "{{\"job\":{},\"tenant\":\"{}\",\"solver\":\"{}\",\"state\":\"{}\",",
+                "\"retries\":{},\"queue_ms\":{:.3},\"cache_probe_ms\":{:.3},\"cache_hit\":{},",
+                "\"service_ms\":{:.3},\"kernel_ms\":{:.3},",
+                "\"iterations\":{{\"count\":{},\"total_ms\":{:.3},\"mean_ms\":{:.3},\"max_ms\":{:.3}}},",
+                "\"thread_shares\":[{}],\"total_ms\":{:.3}}}"
+            ),
+            self.job,
+            esc(&self.tenant),
+            esc(&self.solver),
+            esc(&self.state),
+            self.retries,
+            ms(self.queue_us),
+            ms(self.cache_probe_us),
+            match self.cache_hit {
+                None => "null".to_string(),
+                Some(hit) => hit.to_string(),
+            },
+            ms(self.service_us),
+            ms(self.kernel_us),
+            self.iterations.count,
+            ms(self.iterations.total_us),
+            mean_us / 1_000.0,
+            ms(self.iterations.max_us),
+            shares,
+            ms(self.total_us),
+        )
+    }
+}
+
+struct Inner {
+    map: HashMap<u64, JobProfile>,
+    finished_order: VecDeque<u64>,
+    retention: usize,
+}
+
+/// Scheduler-owned store of job profiles, bounded by retaining only
+/// the last `retention` *finished* jobs (live jobs are never evicted).
+pub struct ProfileStore {
+    inner: Mutex<Inner>,
+}
+
+impl ProfileStore {
+    pub fn new(retention: usize) -> Self {
+        ProfileStore {
+            inner: Mutex::new(Inner {
+                map: HashMap::new(),
+                finished_order: VecDeque::new(),
+                retention,
+            }),
+        }
+    }
+
+    fn locked(&self) -> std::sync::MutexGuard<'_, Inner> {
+        match self.inner.lock() {
+            Ok(g) => g,
+            Err(p) => p.into_inner(),
+        }
+    }
+
+    /// Create the profile at enqueue time.
+    pub fn enqueued(&self, job: u64, tenant: &str, enqueued_us: u64) {
+        let mut inner = self.locked();
+        inner.map.entry(job).or_insert_with(|| JobProfile::new(job, tenant, enqueued_us));
+    }
+
+    /// Mutate a live profile in place (no-op for unknown/pruned jobs).
+    pub fn with<F: FnOnce(&mut JobProfile)>(&self, job: u64, f: F) {
+        let mut inner = self.locked();
+        if let Some(p) = inner.map.get_mut(&job) {
+            f(p);
+        }
+    }
+
+    /// Mark terminal, stamp totals, and prune past retention.
+    pub fn terminal(&self, job: u64, state: &str, now_us: u64) {
+        let mut inner = self.locked();
+        if let Some(p) = inner.map.get_mut(&job) {
+            p.state = state.to_string();
+            p.finished_us = now_us;
+            p.total_us = now_us.saturating_sub(p.enqueued_us);
+            inner.finished_order.push_back(job);
+        }
+        while inner.finished_order.len() > inner.retention {
+            if let Some(old) = inner.finished_order.pop_front() {
+                inner.map.remove(&old);
+            }
+        }
+    }
+
+    /// Clone one job's profile.
+    pub fn get(&self, job: u64) -> Option<JobProfile> {
+        self.locked().map.get(&job).cloned()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::serve::jobfile::Json;
+
+    #[test]
+    fn lifecycle_stamps_and_json_round_trip() {
+        let store = ProfileStore::new(4);
+        store.enqueued(1, "acme", 1_000);
+        store.with(1, |p| {
+            p.state = "running".into();
+            p.started_us = 3_000;
+            p.queue_us = 2_000;
+            p.solver = "fista".into();
+            p.cache_probe_us = 150;
+            p.cache_hit = Some(true);
+            p.service_us = 9_000;
+            p.kernel_us = 7_000;
+            p.add_iteration(400, 4);
+            p.add_iteration(600, 4);
+            p.add_iteration(500, 2);
+        });
+        store.terminal(1, "finished", 12_500);
+        let p = store.get(1).expect("profile retained");
+        assert_eq!(p.total_us, 11_500);
+        assert_eq!(p.iterations.count, 3);
+        assert_eq!(p.iterations.max_us, 600);
+        // Share changes dedupe runs of equal thread counts.
+        assert_eq!(p.thread_shares, vec![(0, 4), (2, 2)]);
+        let parsed = Json::parse(&p.json()).expect("profile JSON must parse");
+        assert_eq!(parsed.get("job").and_then(Json::as_f64), Some(1.0));
+        assert_eq!(parsed.get("state").and_then(Json::as_str), Some("finished"));
+        assert_eq!(parsed.get("cache_hit").and_then(Json::as_bool), Some(true));
+        assert_eq!(parsed.get("queue_ms").and_then(Json::as_f64), Some(2.0));
+        let iters = parsed.get("iterations").expect("iterations object");
+        assert_eq!(iters.get("count").and_then(Json::as_f64), Some(3.0));
+        // queue + service account for the job's life up to bookkeeping
+        // slack (terminal stamp minus start+service).
+        assert!(p.queue_us + p.service_us <= p.total_us);
+    }
+
+    #[test]
+    fn retention_prunes_only_finished_jobs() {
+        let store = ProfileStore::new(2);
+        for id in 1..=5u64 {
+            store.enqueued(id, "t", id * 100);
+        }
+        for id in 1..=4u64 {
+            store.terminal(id, "finished", 10_000 + id);
+        }
+        assert!(store.get(1).is_none(), "oldest finished pruned");
+        assert!(store.get(2).is_none());
+        assert!(store.get(3).is_some());
+        assert!(store.get(4).is_some());
+        assert!(store.get(5).is_some(), "live job survives churn");
+        // cache_hit renders as JSON null until a probe happens.
+        let body = store.get(5).unwrap().json();
+        assert!(body.contains("\"cache_hit\":null"));
+        assert!(Json::parse(&body).is_ok());
+    }
+}

@@ -1,0 +1,211 @@
+//! Bounded per-thread span rings with a global registry.
+//!
+//! Each recording thread claims a ring from a process-wide registry
+//! (or allocates one, up to [`MAX_RINGS`]) and keeps it in a
+//! thread-local handle; when the thread exits, the handle's drop
+//! releases the claim but *keeps the contents*, so spans from
+//! short-lived connection threads stay exportable and the next thread
+//! reuses the slot instead of growing the registry forever.
+//!
+//! The hot path never blocks: `record` uses `try_lock` (the only
+//! contender is a trace export) and bumps a relaxed atomic drop
+//! counter — surfaced as `flexa_obs_spans_dropped_total` — when the
+//! ring is contended, the registry is full, or an old span is
+//! overwritten. Dropping telemetry under pressure is the contract;
+//! stalling a solve for it is not.
+
+use super::span::Span;
+use std::cell::RefCell;
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::{Arc, Mutex, OnceLock};
+
+/// Spans retained per ring before overwriting the oldest.
+pub const RING_CAPACITY: usize = 4096;
+
+/// Registry size cap: beyond this many simultaneous recording
+/// threads, extra threads drop their spans (counted) rather than grow.
+pub const MAX_RINGS: usize = 256;
+
+struct Ring {
+    /// Circular once `spans.len() == RING_CAPACITY`; grown lazily so
+    /// idle threads cost nothing.
+    spans: Vec<Span>,
+    /// Next write index once circular.
+    next: usize,
+}
+
+struct Handle {
+    ring: Mutex<Ring>,
+    in_use: AtomicBool,
+}
+
+static REGISTRY: OnceLock<Mutex<Vec<Arc<Handle>>>> = OnceLock::new();
+static DROPPED: AtomicU64 = AtomicU64::new(0);
+
+fn registry() -> &'static Mutex<Vec<Arc<Handle>>> {
+    REGISTRY.get_or_init(|| Mutex::new(Vec::new()))
+}
+
+/// Thread-local claim on a ring slot; releases (but does not clear)
+/// the slot when the thread exits.
+struct LocalRing(RefCell<Option<(usize, Arc<Handle>)>>);
+
+impl Drop for LocalRing {
+    fn drop(&mut self) {
+        if let Some((_, handle)) = self.0.borrow_mut().take() {
+            handle.in_use.store(false, Ordering::Release);
+        }
+    }
+}
+
+thread_local! {
+    static LOCAL: LocalRing = LocalRing(RefCell::new(None));
+}
+
+/// Claim a released slot (keeping its old spans) or allocate a new one.
+fn claim() -> Option<(usize, Arc<Handle>)> {
+    let mut reg = match registry().lock() {
+        Ok(g) => g,
+        Err(p) => p.into_inner(),
+    };
+    for (i, handle) in reg.iter().enumerate() {
+        if handle
+            .in_use
+            .compare_exchange(false, true, Ordering::Acquire, Ordering::Relaxed)
+            .is_ok()
+        {
+            return Some((i, Arc::clone(handle)));
+        }
+    }
+    if reg.len() >= MAX_RINGS {
+        return None;
+    }
+    let handle = Arc::new(Handle {
+        ring: Mutex::new(Ring { spans: Vec::new(), next: 0 }),
+        in_use: AtomicBool::new(true),
+    });
+    reg.push(Arc::clone(&handle));
+    Some((reg.len() - 1, handle))
+}
+
+/// Record one span into the calling thread's ring. Never blocks;
+/// drops (counted) under contention or exhaustion.
+pub fn record(span: Span) {
+    LOCAL.with(|local| {
+        let mut slot = local.0.borrow_mut();
+        if slot.is_none() {
+            *slot = claim();
+        }
+        let Some((_, handle)) = slot.as_ref() else {
+            DROPPED.fetch_add(1, Ordering::Relaxed);
+            return;
+        };
+        match handle.ring.try_lock() {
+            Ok(mut ring) => {
+                if ring.spans.len() < RING_CAPACITY {
+                    ring.spans.push(span);
+                } else {
+                    // Overwriting loses the oldest span: count it so
+                    // the drop counter reflects every loss.
+                    let next = ring.next;
+                    ring.spans[next] = span;
+                    ring.next = (next + 1) % RING_CAPACITY;
+                    DROPPED.fetch_add(1, Ordering::Relaxed);
+                }
+            }
+            Err(_) => {
+                DROPPED.fetch_add(1, Ordering::Relaxed);
+            }
+        }
+    });
+}
+
+/// Total spans lost to contention, registry exhaustion, or overwrite.
+pub fn spans_dropped() -> u64 {
+    DROPPED.load(Ordering::Relaxed)
+}
+
+/// Snapshot every ring (without clearing), keeping spans that *end* at
+/// or after `since_us`. Returns `(ring_index, span)` pairs sorted by
+/// start time; the ring index becomes the trace `tid`.
+pub fn snapshot(since_us: u64) -> Vec<(u32, Span)> {
+    let handles: Vec<(usize, Arc<Handle>)> = {
+        let reg = match registry().lock() {
+            Ok(g) => g,
+            Err(p) => p.into_inner(),
+        };
+        reg.iter().enumerate().map(|(i, h)| (i, Arc::clone(h))).collect()
+    };
+    let mut out = Vec::new();
+    for (i, handle) in handles {
+        let ring = match handle.ring.lock() {
+            Ok(g) => g,
+            Err(p) => p.into_inner(),
+        };
+        for span in ring.spans.iter() {
+            if span.start_us.saturating_add(span.dur_us) >= since_us {
+                out.push((i as u32, *span));
+            }
+        }
+    }
+    out.sort_by_key(|(_, s)| s.start_us);
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::obs::span::InlineStr;
+
+    fn mk(phase: &'static str, start_us: u64, dur_us: u64, job: u64) -> Span {
+        Span {
+            phase,
+            start_us,
+            dur_us,
+            job,
+            tenant: InlineStr::new("t"),
+            request_id: InlineStr::EMPTY,
+            detail: InlineStr::EMPTY,
+        }
+    }
+
+    #[test]
+    fn recorded_spans_appear_in_snapshot_sorted() {
+        record(mk("test.b", 2_000, 10, 1));
+        record(mk("test.a", 1_000, 10, 2));
+        let snap = snapshot(0);
+        let test_spans: Vec<&Span> =
+            snap.iter().map(|(_, s)| s).filter(|s| s.phase.starts_with("test.")).collect();
+        assert!(test_spans.len() >= 2);
+        let mut last = 0;
+        for s in &test_spans {
+            assert!(s.start_us >= last, "snapshot must be start-sorted");
+            last = s.start_us;
+        }
+    }
+
+    #[test]
+    fn since_filter_keeps_spans_ending_after_cutoff() {
+        record(mk("cutoff.old", 10, 5, 3));
+        record(mk("cutoff.spanning", 90, 30, 3));
+        record(mk("cutoff.new", 200, 5, 3));
+        let snap = snapshot(100);
+        let phases: Vec<&str> =
+            snap.iter().map(|(_, s)| s.phase).filter(|p| p.starts_with("cutoff.")).collect();
+        assert!(!phases.contains(&"cutoff.old"));
+        assert!(phases.contains(&"cutoff.spanning"), "span straddling the cutoff is kept");
+        assert!(phases.contains(&"cutoff.new"));
+    }
+
+    #[test]
+    fn overflow_overwrites_and_counts_drops() {
+        let before = spans_dropped();
+        for i in 0..(RING_CAPACITY as u64 + 8) {
+            record(mk("flood.x", i, 1, 9));
+        }
+        assert!(spans_dropped() > before, "overwrites must bump the drop counter");
+        let flood =
+            snapshot(0).into_iter().filter(|(_, s)| s.phase == "flood.x").count();
+        assert!(flood <= RING_CAPACITY);
+    }
+}

@@ -1,0 +1,274 @@
+//! Span primitives: fixed-size records, the process clock, and the
+//! per-thread attribution context.
+//!
+//! A [`Span`] is a plain-old-data record — phase name (a `&'static str`
+//! so rings never allocate), start/duration in microseconds on the
+//! process-wide monotonic clock, and three bounded inline strings for
+//! tenant, request id, and a free-form detail (endpoint label, backend
+//! id, solver name). Fixed size keeps the ring buffer a flat `Vec` the
+//! hot path can write without touching the allocator.
+//!
+//! Timestamps are offsets from a lazily-initialized process epoch
+//! ([`init`] pins it early so `Instant`s taken before the first span —
+//! e.g. a job's enqueue time — still convert). The epoch is an
+//! `Instant`, never wall clock: NTP steps cannot tear a trace.
+
+use std::cell::Cell;
+use std::sync::OnceLock;
+use std::time::Instant;
+
+/// Maximum bytes kept for each inline string field (tenant, request
+/// id, detail). Longer values truncate at a char boundary.
+pub const INLINE_CAP: usize = 40;
+
+/// A bounded, `Copy`, allocation-free string for span fields.
+#[derive(Clone, Copy, Debug)]
+pub struct InlineStr {
+    len: u8,
+    bytes: [u8; INLINE_CAP],
+}
+
+impl InlineStr {
+    pub const EMPTY: InlineStr = InlineStr { len: 0, bytes: [0; INLINE_CAP] };
+
+    /// Build from a `&str`, truncating to [`INLINE_CAP`] bytes at a
+    /// UTF-8 char boundary.
+    pub fn new(s: &str) -> Self {
+        let mut end = s.len().min(INLINE_CAP);
+        while end > 0 && !s.is_char_boundary(end) {
+            end -= 1;
+        }
+        let mut bytes = [0u8; INLINE_CAP];
+        bytes[..end].copy_from_slice(&s.as_bytes()[..end]);
+        InlineStr { len: end as u8, bytes }
+    }
+
+    pub fn as_str(&self) -> &str {
+        // Construction only ever copies a char-boundary-truncated
+        // prefix of a valid &str, so this cannot fail.
+        std::str::from_utf8(&self.bytes[..self.len as usize]).unwrap_or("")
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len == 0
+    }
+}
+
+/// One completed phase: `[start_us, start_us + dur_us)` on the process
+/// monotonic clock, attributed to a job/tenant/request.
+#[derive(Clone, Copy, Debug)]
+pub struct Span {
+    /// Phase label (`http.parse`, `queue.wait`, `solve.iter`, ...).
+    pub phase: &'static str,
+    /// Start offset from the process epoch, microseconds.
+    pub start_us: u64,
+    /// Duration, microseconds.
+    pub dur_us: u64,
+    /// Job id (0 = not attributed to a job).
+    pub job: u64,
+    pub tenant: InlineStr,
+    pub request_id: InlineStr,
+    /// Phase-specific annotation: endpoint, backend id, solver name.
+    pub detail: InlineStr,
+}
+
+static EPOCH: OnceLock<Instant> = OnceLock::new();
+
+fn epoch() -> Instant {
+    *EPOCH.get_or_init(Instant::now)
+}
+
+/// Pin the process epoch now. Servers call this at bind time so every
+/// later `Instant` (job enqueue stamps included) lands after it.
+pub fn init() {
+    let _ = epoch();
+}
+
+/// Microseconds since the process epoch.
+pub fn now_us() -> u64 {
+    epoch().elapsed().as_micros() as u64
+}
+
+/// Convert an `Instant` to epoch-relative microseconds (0 if it
+/// predates the epoch).
+pub fn instant_us(t: Instant) -> u64 {
+    t.checked_duration_since(epoch()).map(|d| d.as_micros() as u64).unwrap_or(0)
+}
+
+/// The attribution carried by every span a thread records.
+#[derive(Clone, Copy, Debug)]
+pub struct Ctx {
+    pub job: u64,
+    pub tenant: InlineStr,
+    pub request_id: InlineStr,
+}
+
+impl Ctx {
+    pub const NONE: Ctx =
+        Ctx { job: 0, tenant: InlineStr::EMPTY, request_id: InlineStr::EMPTY };
+
+    pub fn job(job: u64, tenant: &str) -> Ctx {
+        Ctx { job, tenant: InlineStr::new(tenant), request_id: InlineStr::EMPTY }
+    }
+
+    pub fn request(request_id: &str, tenant: &str) -> Ctx {
+        Ctx { job: 0, tenant: InlineStr::new(tenant), request_id: InlineStr::new(request_id) }
+    }
+}
+
+thread_local! {
+    static CTX: Cell<Ctx> = const { Cell::new(Ctx::NONE) };
+    /// Kernel-time accumulator: `par` adds pool-region wall time here;
+    /// the serve worker resets/takes it around each solve.
+    static KERNEL_US: Cell<u64> = const { Cell::new(0) };
+}
+
+/// The calling thread's current attribution.
+pub fn ctx() -> Ctx {
+    CTX.with(|c| c.get())
+}
+
+/// Replace the calling thread's attribution; returns the previous one.
+pub fn set_ctx(new: Ctx) -> Ctx {
+    CTX.with(|c| c.replace(new))
+}
+
+/// Scoped attribution: restores the previous context on drop.
+pub struct CtxGuard {
+    prev: Ctx,
+}
+
+pub fn ctx_guard(new: Ctx) -> CtxGuard {
+    CtxGuard { prev: set_ctx(new) }
+}
+
+impl Drop for CtxGuard {
+    fn drop(&mut self) {
+        set_ctx(self.prev);
+    }
+}
+
+pub fn reset_kernel_us() {
+    KERNEL_US.with(|k| k.set(0));
+}
+
+pub fn add_kernel_us(us: u64) {
+    KERNEL_US.with(|k| k.set(k.get().saturating_add(us)));
+}
+
+/// Read and clear the thread's kernel-time accumulator.
+pub fn take_kernel_us() -> u64 {
+    KERNEL_US.with(|k| k.replace(0))
+}
+
+/// An in-flight span: records itself into the thread's ring on drop,
+/// stamped with the context current at creation.
+pub struct SpanGuard {
+    phase: &'static str,
+    start_us: u64,
+    detail: InlineStr,
+    ctx: Ctx,
+}
+
+/// Open a span for `phase` under the thread's current context.
+pub fn span(phase: &'static str) -> SpanGuard {
+    span_detail(phase, "")
+}
+
+/// Open a span with a phase-specific annotation.
+pub fn span_detail(phase: &'static str, detail: &str) -> SpanGuard {
+    SpanGuard { phase, start_us: now_us(), detail: InlineStr::new(detail), ctx: ctx() }
+}
+
+impl SpanGuard {
+    /// Duration so far, microseconds.
+    pub fn elapsed_us(&self) -> u64 {
+        now_us().saturating_sub(self.start_us)
+    }
+
+    /// Replace the annotation (e.g. once the routed endpoint is known).
+    pub fn set_detail(&mut self, detail: &str) {
+        self.detail = InlineStr::new(detail);
+    }
+}
+
+impl Drop for SpanGuard {
+    fn drop(&mut self) {
+        let end = now_us();
+        super::ring::record(Span {
+            phase: self.phase,
+            start_us: self.start_us,
+            dur_us: end.saturating_sub(self.start_us),
+            job: self.ctx.job,
+            tenant: self.ctx.tenant,
+            request_id: self.ctx.request_id,
+            detail: self.detail,
+        });
+    }
+}
+
+/// Record a span retroactively (e.g. `queue.wait`, reconstructed from
+/// the enqueue stamp once the job starts) under the current context.
+pub fn record(phase: &'static str, start_us: u64, dur_us: u64, detail: &str) {
+    let c = ctx();
+    super::ring::record(Span {
+        phase,
+        start_us,
+        dur_us,
+        job: c.job,
+        tenant: c.tenant,
+        request_id: c.request_id,
+        detail: InlineStr::new(detail),
+    });
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn inline_str_truncates_at_char_boundary() {
+        let s = InlineStr::new("plain");
+        assert_eq!(s.as_str(), "plain");
+        // 39 ASCII bytes then a 3-byte char straddling the cap: the
+        // whole char must be dropped, not split.
+        let long = format!("{}\u{2603}tail", "x".repeat(39));
+        let t = InlineStr::new(&long);
+        assert_eq!(t.as_str(), "x".repeat(39));
+        assert!(t.as_str().len() <= INLINE_CAP);
+        assert!(InlineStr::EMPTY.is_empty());
+    }
+
+    #[test]
+    fn ctx_guard_restores_previous_context() {
+        let _outer = ctx_guard(Ctx::job(7, "acme"));
+        assert_eq!(ctx().job, 7);
+        {
+            let _inner = ctx_guard(Ctx::request("req-1", "acme"));
+            assert_eq!(ctx().job, 0);
+            assert_eq!(ctx().request_id.as_str(), "req-1");
+        }
+        assert_eq!(ctx().job, 7);
+        assert_eq!(ctx().tenant.as_str(), "acme");
+    }
+
+    #[test]
+    fn kernel_accumulator_is_reset_and_taken() {
+        reset_kernel_us();
+        add_kernel_us(5);
+        add_kernel_us(7);
+        assert_eq!(take_kernel_us(), 12);
+        assert_eq!(take_kernel_us(), 0);
+    }
+
+    #[test]
+    fn clock_is_monotone_and_instant_converts() {
+        init();
+        let a = now_us();
+        let t = std::time::Instant::now();
+        let b = now_us();
+        let tu = instant_us(t);
+        assert!(a <= b);
+        assert!(tu >= a && tu <= b.max(tu));
+    }
+}

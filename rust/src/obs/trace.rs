@@ -1,0 +1,124 @@
+//! Chrome trace-event export (Perfetto / `chrome://tracing` loadable).
+//!
+//! Renders ring snapshots as complete events (`"ph":"X"`) with `ts` and
+//! `dur` in microseconds, `tid` = ring slot, and a caller-chosen `pid`.
+//! The cluster router merges its own spans (pid 0) with each backend's
+//! export (pid i+1) by splicing the inner event arrays: the wrapper is
+//! exactly `{"traceEvents":[...]}` on every node, so the splice is a
+//! prefix/suffix strip, not a JSON re-render. Clock domains differ
+//! across nodes — Perfetto groups tracks by pid, and cross-node
+//! correlation rides the shared `x-flexa-request-id` in `args`.
+
+use super::span::Span;
+use crate::serve::jobfile::esc;
+
+/// Render one span as a single trace event object.
+fn event_json(tid: u32, span: &Span, pid: u32) -> String {
+    let mut args = String::new();
+    if span.job != 0 {
+        args.push_str(&format!("\"job\":{}", span.job));
+    }
+    for (key, val) in [
+        ("tenant", span.tenant.as_str()),
+        ("request", span.request_id.as_str()),
+        ("detail", span.detail.as_str()),
+    ] {
+        if !val.is_empty() {
+            if !args.is_empty() {
+                args.push(',');
+            }
+            args.push_str(&format!("\"{key}\":\"{}\"", esc(val)));
+        }
+    }
+    format!(
+        "{{\"name\":\"{}\",\"cat\":\"flexa\",\"ph\":\"X\",\"ts\":{},\"dur\":{},\"pid\":{pid},\"tid\":{tid},\"args\":{{{args}}}}}",
+        esc(span.phase),
+        span.start_us,
+        span.dur_us,
+    )
+}
+
+/// Append comma-separated event objects (no wrapper) to `out`.
+pub fn render_events_into(spans: &[(u32, Span)], pid: u32, out: &mut String) {
+    for (i, (tid, span)) in spans.iter().enumerate() {
+        if i > 0 || !out.is_empty() {
+            out.push(',');
+        }
+        out.push_str(&event_json(*tid, span, pid));
+    }
+}
+
+/// Render a complete single-node trace document.
+pub fn render(spans: &[(u32, Span)], pid: u32) -> String {
+    let mut events = String::new();
+    render_events_into(spans, pid, &mut events);
+    format!("{{\"traceEvents\":[{events}]}}")
+}
+
+/// Extract the inner event list from a trace document produced by
+/// [`render`] (used by the cluster router to splice backend traces
+/// under their own pid without re-parsing). Returns `None` when the
+/// body is not in the expected shape.
+pub fn inner_events(doc: &str) -> Option<&str> {
+    doc.trim().strip_prefix("{\"traceEvents\":[")?.strip_suffix("]}")
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::obs::span::InlineStr;
+    use crate::serve::jobfile::Json;
+
+    fn mk(phase: &'static str, job: u64, tenant: &str, request: &str) -> (u32, Span) {
+        (
+            3,
+            Span {
+                phase,
+                start_us: 1_500,
+                dur_us: 250,
+                job,
+                tenant: InlineStr::new(tenant),
+                request_id: InlineStr::new(request),
+                detail: InlineStr::new("lasso"),
+            },
+        )
+    }
+
+    #[test]
+    fn trace_round_trips_through_json_parse() {
+        let spans = vec![mk("solve.iter", 7, "acme", "c1"), mk("kernel", 7, "", "")];
+        let doc = render(&spans, 0);
+        let parsed = Json::parse(&doc).expect("trace must be valid JSON");
+        let events = match parsed.get("traceEvents") {
+            Some(Json::Arr(a)) => a,
+            other => panic!("traceEvents must be an array, got {other:?}"),
+        };
+        assert_eq!(events.len(), 2);
+        let first = &events[0];
+        assert_eq!(first.get("name").and_then(Json::as_str), Some("solve.iter"));
+        assert_eq!(first.get("ph").and_then(Json::as_str), Some("X"));
+        assert_eq!(first.get("ts").and_then(Json::as_f64), Some(1_500.0));
+        assert_eq!(first.get("dur").and_then(Json::as_f64), Some(250.0));
+        let args = first.get("args").expect("args object");
+        assert_eq!(args.get("job").and_then(Json::as_f64), Some(7.0));
+        assert_eq!(args.get("tenant").and_then(Json::as_str), Some("acme"));
+        assert_eq!(args.get("request").and_then(Json::as_str), Some("c1"));
+        // Empty fields are omitted, not rendered as "".
+        let second = &events[1];
+        assert!(second.get("args").and_then(|a| a.get("tenant")).is_none());
+        assert!(second.get("args").and_then(|a| a.get("request")).is_none());
+    }
+
+    #[test]
+    fn inner_events_strips_the_wrapper_exactly() {
+        let spans = vec![mk("cluster.proxy", 0, "t", "c9")];
+        let doc = render(&spans, 0);
+        let inner = inner_events(&doc).expect("wrapper must strip");
+        assert!(inner.starts_with("{\"name\":\"cluster.proxy\""));
+        assert!(inner_events("{\"other\":[]}").is_none());
+        assert_eq!(inner_events("{\"traceEvents\":[]}"), Some(""));
+        // A merged document re-wraps to valid JSON.
+        let merged = format!("{{\"traceEvents\":[{inner},{inner}]}}");
+        assert!(Json::parse(&merged).is_ok());
+    }
+}

@@ -124,13 +124,34 @@ pub fn task_ranges(len: usize, min_chunk: usize, align: usize) -> Vec<Range<usiz
     ranges
 }
 
+/// Pool regions at least this long record a `kernel` trace span;
+/// shorter ones only feed the per-job kernel-time accumulator, so tiny
+/// kernels don't flood the rings.
+const KERNEL_SPAN_MIN_US: u64 = 20;
+
 /// Run `f(task, range)` for every range, spread over the current thread
 /// budget (the calling thread participates).
+///
+/// The multi-range (pool) arm is timed for `flexa::obs` kernel-time
+/// accounting: two `Instant` reads (~tens of ns) around a region that
+/// is itself tens of µs or more, charged to whatever job context the
+/// calling thread carries. The single-range arm stays an untimed
+/// inline call — zero overhead where there is no parallelism to
+/// attribute. Timing only *observes* the region; task shapes and fold
+/// order are untouched, so bit-identity is unaffected.
 pub fn for_each_range(ranges: &[Range<usize>], f: impl Fn(usize, Range<usize>) + Sync) {
     match ranges.len() {
         0 => {}
         1 => f(0, ranges[0].clone()),
-        n => Pool::global().run(n, current_threads().min(n), &|t| f(t, ranges[t].clone())),
+        n => {
+            let start = std::time::Instant::now();
+            Pool::global().run(n, current_threads().min(n), &|t| f(t, ranges[t].clone()));
+            let us = start.elapsed().as_micros() as u64;
+            crate::obs::add_kernel_us(us);
+            if us >= KERNEL_SPAN_MIN_US {
+                crate::obs::record("kernel", crate::obs::instant_us(start), us, "");
+            }
+        }
     }
 }
 

@@ -742,6 +742,10 @@ struct Shared {
     /// Observed completion rate — the honest Retry-After estimate for
     /// queue-full and quota 429s (see [`Scheduler::retry_after_hint_ms`]).
     completions: Mutex<ServiceRate>,
+    /// Per-job phase profiles (`GET /v1/jobs/{id}/profile`), bounded by
+    /// the same retention as results. Arc so the per-job bridge can
+    /// stamp iterations without borrowing `Shared`.
+    profiles: Arc<crate::obs::ProfileStore>,
 }
 
 impl Shared {
@@ -805,6 +809,13 @@ impl Shared {
         self.counters.retried.fetch_add(1, Ordering::Relaxed);
         self.bump_tenant(&job.tenant, |c| c.retried += 1);
         self.emit(JobEvent::Retrying { job: job.id, attempt: job.retries, delay_ms: delay });
+        // The span covers the scheduled backoff window (recorded under
+        // the worker's job context, which is still in scope here).
+        crate::obs::record("retry.backoff", crate::obs::now_us(), delay.saturating_mul(1_000), "");
+        self.profiles.with(job.id, |p| {
+            p.retries = u64::from(job.retries);
+            p.state = "queued".to_string();
+        });
         if let Some(e) = self.table.lock().unwrap().map.get_mut(&job.id) {
             e.status.state = JobState::Queued;
             e.status.retries = job.retries;
@@ -842,6 +853,14 @@ impl Shared {
             let victim = t.finished_order.pop_front().expect("len > retention >= 0");
             t.map.remove(&victim);
         }
+        drop(t);
+        let label = match &result.outcome {
+            JobOutcome::Done { .. } => "done",
+            JobOutcome::Failed { .. } => "failed",
+            JobOutcome::Cancelled { .. } => "cancelled",
+            JobOutcome::DeadlineExpired { .. } => "deadline_expired",
+        };
+        self.profiles.terminal(result.job, label, crate::obs::now_us());
     }
 }
 
@@ -896,6 +915,9 @@ impl Scheduler {
         registry: Registry,
     ) -> Self {
         let workers = config.workers.max(1);
+        // Pin the obs clock epoch before any job-lifecycle Instant is
+        // taken, so enqueue stamps always convert to span time.
+        crate::obs::init();
         // Build the cache first so the persistent store can replay into
         // it before any worker (or submitter) can race a lookup.
         let mut cache = (config.cache_bytes > 0).then(|| WarmStartCache::new(config.cache_bytes));
@@ -953,6 +975,7 @@ impl Scheduler {
             epoch: Instant::now(),
             rate: Mutex::new(rate),
             completions: Mutex::new(ServiceRate::default()),
+            profiles: Arc::new(crate::obs::ProfileStore::new(config.finished_retention.max(1))),
         });
         let mut handles = Vec::with_capacity(workers);
         for w in 0..workers {
@@ -1073,13 +1096,15 @@ impl Scheduler {
         );
         // Emitted before the push so `Queued` always precedes `Started`.
         self.shared.emit(JobEvent::Queued { job: id, tag: spec.tag.clone() });
+        let enqueued = Instant::now();
+        self.shared.profiles.enqueued(id, &tenant, crate::obs::instant_us(enqueued));
         q.jobs.push(
             &tenant,
             QueuedJob {
                 id,
                 spec,
                 cancel: Arc::clone(&cancel),
-                enqueued: Instant::now(),
+                enqueued,
                 tenant: tenant.clone(),
                 retries: 0,
                 not_before: None,
@@ -1219,6 +1244,14 @@ impl Scheduler {
         self.shared.table.lock().unwrap().map.get(&id).map(|e| e.status.clone())
     }
 
+    /// Phase profile of one job (`GET /v1/jobs/{id}/profile`): queue
+    /// wait, cache probe, kernel time, iteration stats, thread shares,
+    /// retries. Same retention as [`Self::status`]; `None` for unknown
+    /// or pruned ids.
+    pub fn profile(&self, id: u64) -> Option<crate::obs::JobProfile> {
+        self.shared.profiles.get(id)
+    }
+
     /// Request cooperative cancellation of a job by id (the handle-less
     /// path an RPC front-end needs). Returns `false` when the id is
     /// unknown (never submitted, or pruned); cancelling an
@@ -1281,6 +1314,12 @@ impl Drop for Scheduler {
 fn worker_loop(worker: usize, shared: &Shared) {
     while let Some(job) = next_job(shared) {
         shared.counters.running.fetch_add(1, Ordering::Relaxed);
+        // Attribute every span this attempt records (solve.iter,
+        // kernel, cache.probe, retry.backoff) to the job; reset the
+        // kernel-time accumulator so it measures this attempt only.
+        let _obs_ctx = crate::obs::ctx_guard(crate::obs::Ctx::job(job.id, &job.tenant));
+        crate::obs::reset_kernel_us();
+        let attempt_start = Instant::now();
         // Contain panics (a custom build closure, a solver assert on bad
         // options): the job fails loudly with a Finished event and a
         // Failed result instead of silently vanishing from join(), and
@@ -1301,6 +1340,17 @@ fn worker_loop(worker: usize, shared: &Shared) {
                 report: None,
             },
             retryable: true,
+        });
+        // Worker-held time and kernel time for this attempt, flushed
+        // into the profile and the service histogram before the
+        // terminal/retry decision so a served profile is never missing
+        // a finished attempt.
+        let service_us = attempt_start.elapsed().as_micros() as u64;
+        let kernel_us = crate::obs::take_kernel_us();
+        crate::obs::metrics().record_service(service_us);
+        shared.profiles.with(job.id, |p| {
+            p.service_us = p.service_us.saturating_add(service_us);
+            p.kernel_us = p.kernel_us.saturating_add(kernel_us);
         });
         // Decrement the gauge before the terminal counters so a stats()
         // reader never sees finished() == submitted with running > 0.
@@ -1426,6 +1476,13 @@ struct JobBridge {
     user: Option<Arc<dyn EventObserver>>,
     tau_bits: AtomicU64,
     rebalance: Option<Rebalance>,
+    /// Solver name carried into iteration spans and histograms.
+    solver: String,
+    /// Previous iteration-boundary timestamp (obs span time); seeded at
+    /// bridge creation so the first "iteration" also covers solver
+    /// setup up to the first boundary.
+    iter_prev_us: AtomicU64,
+    profiles: Arc<crate::obs::ProfileStore>,
 }
 
 impl JobBridge {
@@ -1450,6 +1507,17 @@ impl EventObserver for JobBridge {
         if let Some(r) = &self.rebalance {
             crate::par::set_current_threads(r.share());
         }
+        // Iteration boundary → one solve.iter span + histogram sample +
+        // profile entry. Pure observation on the solve thread: clock
+        // reads and counter bumps, no effect on the event stream or the
+        // solver's arithmetic.
+        let boundary_us = crate::obs::now_us();
+        let prev_us = self.iter_prev_us.swap(boundary_us, Ordering::Relaxed);
+        let dur_us = boundary_us.saturating_sub(prev_us);
+        crate::obs::record("solve.iter", prev_us, dur_us, &self.solver);
+        crate::obs::metrics().record_iteration(&self.solver, dur_us);
+        let threads = crate::par::current_threads();
+        self.profiles.with(self.job, |p| p.add_iteration(dur_us, threads));
         if event.tau.is_finite() {
             self.tau_bits.store(event.tau.to_bits(), Ordering::Relaxed);
         }
@@ -1512,6 +1580,21 @@ fn run_job(shared: &Shared, worker: usize, job: &QueuedJob) -> RunOutcome {
 
     shared.emit(JobEvent::Started { job: id, worker });
     shared.mark_running(id);
+    let started_us = crate::obs::now_us();
+    if job.retries == 0 {
+        // Queue wait = enqueue → *first* start; retries would otherwise
+        // double-count the original wait.
+        let queue_us = started_us.saturating_sub(crate::obs::instant_us(*enqueued));
+        crate::obs::record("queue.wait", crate::obs::instant_us(*enqueued), queue_us, "");
+        crate::obs::metrics().record_queue(queue_us);
+        shared.profiles.with(id, |p| {
+            p.state = "running".to_string();
+            p.started_us = started_us;
+            p.queue_us = queue_us;
+        });
+    } else {
+        shared.profiles.with(id, |p| p.state = "running".to_string());
+    }
 
     let (problem, construction_retryable) = match &spec.problem {
         // Registry specs fail deterministically (bad names/geometry);
@@ -1539,6 +1622,7 @@ fn run_job(shared: &Shared, worker: usize, job: &QueuedJob) -> RunOutcome {
     let mut warm_started = false;
     if spec.warm_start {
         if let Some(cache) = &shared.cache {
+            let probe_start = Instant::now();
             let key = fingerprint(&problem);
             let found: Option<WarmStart> = cache.lock().unwrap().lookup(key);
             if let Some(ws) = found {
@@ -1559,6 +1643,17 @@ fn run_job(shared: &Shared, worker: usize, job: &QueuedJob) -> RunOutcome {
                 }
             }
             warm_key = Some(key);
+            let probe_us = probe_start.elapsed().as_micros() as u64;
+            crate::obs::record(
+                "cache.probe",
+                crate::obs::instant_us(probe_start),
+                probe_us,
+                if warm_started { "hit" } else { "miss" },
+            );
+            shared.profiles.with(id, |p| {
+                p.cache_probe_us = probe_us;
+                p.cache_hit = Some(warm_started);
+            });
             shared.emit(JobEvent::CacheProbe { job: id, key, hit: warm_started });
         }
     }
@@ -1589,15 +1684,9 @@ fn run_job(shared: &Shared, worker: usize, job: &QueuedJob) -> RunOutcome {
     };
     let kernel_threads = rebalance.share();
 
-    let bridge = Arc::new(JobBridge {
-        job: id,
-        observer: shared.observer.clone(),
-        user: opts.observer.take(),
-        tau_bits: AtomicU64::new(f64::NAN.to_bits()),
-        rebalance: shared.rebalance_cores.then_some(rebalance),
-    });
-    opts.observer = Some(bridge.clone());
-
+    // Resolve the solver before the bridge so iteration spans and the
+    // per-solver iteration histogram carry its name; the error return
+    // is unchanged (nothing observable has been taken from `opts` yet).
     let mut solver = match shared.registry.build_solver(&spec.solver) {
         Ok(s) => s,
         Err(e) => {
@@ -1605,6 +1694,19 @@ fn run_job(shared: &Shared, worker: usize, job: &QueuedJob) -> RunOutcome {
         }
     };
     let solver_name = solver.name();
+    shared.profiles.with(id, |p| p.solver = solver_name.clone());
+
+    let bridge = Arc::new(JobBridge {
+        job: id,
+        observer: shared.observer.clone(),
+        user: opts.observer.take(),
+        tau_bits: AtomicU64::new(f64::NAN.to_bits()),
+        rebalance: shared.rebalance_cores.then_some(rebalance),
+        solver: solver_name.clone(),
+        iter_prev_us: AtomicU64::new(crate::obs::now_us()),
+        profiles: Arc::clone(&shared.profiles),
+    });
+    opts.observer = Some(bridge.clone());
 
     match crate::par::with_threads(kernel_threads, || solver.solve_session(&problem, &opts)) {
         Err(e) => finish(solver_name, JobOutcome::Failed { error: format!("{e:#}") }, None, true),

@@ -10,6 +10,8 @@
 //!   bit-identical to a single-node `algos::admm::Admm` run.
 //! * **Drain** — draining a backend hands its warm-start snapshot to
 //!   the ring successor, so the next sweep job warm-starts elsewhere.
+//! * **Trace stitch** — one `x-flexa-request-id` threads the router's
+//!   spans and the owning backend's in the merged `/v1/debug/trace`.
 //! * **Failover** — submissions walk ring successors past a dead
 //!   backend, and the prober marks it unhealthy.
 
@@ -292,6 +294,63 @@ fn drain_hands_warm_starts_to_the_successor() {
 
     let (_, metrics) = req(&addr, "GET", "/metrics", None);
     assert_eq!(metric(&metrics, "flexa_cluster_drains_total"), 1.0);
+
+    cluster.shutdown().expect("router shutdown");
+    a.shutdown().expect("backend a shutdown");
+    b.shutdown().expect("backend b shutdown");
+}
+
+/// One request id threads the whole path: a submit tagged with
+/// `x-flexa-request-id` shows up in the merged `/v1/debug/trace` on
+/// both the router's spans (pid 0) and the owning backend's (pid ≥ 1),
+/// so a cross-node trace stitches on the id alone.
+#[test]
+fn trace_stitches_router_and_backend_spans_by_request_id() {
+    let a = spawn_backend();
+    let b = spawn_backend();
+    let cluster = spawn_cluster(&[&a, &b], quiet_config());
+    let addr = cluster.addr().to_string();
+
+    // POST with an explicit request id (the `req` helper has no header
+    // hook, so spell the exchange out).
+    let spec = sweep_spec(0, 2.0);
+    let mut stream = TcpStream::connect(&addr).expect("connect");
+    stream.set_read_timeout(Some(Duration::from_secs(120))).unwrap();
+    let head = format!(
+        "POST /v1/jobs HTTP/1.1\r\nHost: {addr}\r\nConnection: close\r\n\
+         x-flexa-request-id: stitch-test-1\r\nContent-Length: {}\r\nContent-Type: application/json\r\n\r\n",
+        spec.len()
+    );
+    stream.write_all(head.as_bytes()).unwrap();
+    stream.write_all(spec.as_bytes()).unwrap();
+    let mut raw = Vec::new();
+    stream.read_to_end(&mut raw).unwrap();
+    let raw = String::from_utf8(raw).unwrap();
+    assert!(raw.starts_with("HTTP/1.1 202"), "{raw}");
+    assert!(raw.contains("x-flexa-request-id: stitch-test-1"), "router echoes the id:\n{raw}");
+    let body = raw.split_once("\r\n\r\n").map(|(_, b)| b).unwrap_or("");
+    let submitted = Json::parse(body).expect("submit response");
+    wait_finished(&addr, job_id(&submitted));
+
+    let (status, trace) = req(&addr, "GET", "/v1/debug/trace", None);
+    assert_eq!(status, 200, "{trace}");
+    let doc = Json::parse(&trace).expect("merged trace must parse");
+    let Some(Json::Arr(events)) = doc.get("traceEvents") else {
+        panic!("traceEvents must be an array: {trace}");
+    };
+    let mut pids = std::collections::BTreeSet::new();
+    for e in events {
+        if e.get("args").and_then(|a| a.get("request")).and_then(|r| r.as_str())
+            == Some("stitch-test-1")
+        {
+            pids.insert(e.get("pid").and_then(|p| p.as_f64()).expect("event pid") as u64);
+        }
+    }
+    assert!(pids.contains(&0), "router spans must carry the request id: {trace}");
+    assert!(
+        pids.iter().any(|p| *p > 0),
+        "a backend's spans must carry the same request id (got pids {pids:?})"
+    );
 
     cluster.shutdown().expect("router shutdown");
     a.shutdown().expect("backend a shutdown");

@@ -1,0 +1,364 @@
+//! Loopback integration tests for `flexa::obs`: `/metrics` stays valid
+//! Prometheus text while jobs churn and concurrent scrapes race the
+//! workers, the per-job profile's phases account for the job's total
+//! time, `/v1/debug/trace` serves parseable Chrome trace-event JSON
+//! carrying the request id, and the uptime gauge is monotone.
+
+use flexa::http::{HttpConfig, HttpServer, SpawnedServer};
+use flexa::serve::{Json, ServeConfig};
+use std::collections::HashMap;
+use std::io::{Read, Write};
+use std::net::TcpStream;
+use std::time::{Duration, Instant};
+
+fn spawn(http: HttpConfig, serve: ServeConfig) -> SpawnedServer {
+    HttpServer::bind("127.0.0.1:0", http, serve, flexa::api::Registry::with_defaults())
+        .expect("bind loopback server")
+        .spawn()
+}
+
+/// One `Connection: close` exchange; returns (status, body).
+fn req(addr: &str, method: &str, path: &str, body: Option<&str>) -> (u16, String) {
+    let mut stream = TcpStream::connect(addr).expect("connect");
+    stream.set_read_timeout(Some(Duration::from_secs(60))).unwrap();
+    let mut head = format!("{method} {path} HTTP/1.1\r\nHost: {addr}\r\nConnection: close\r\n");
+    if let Some(b) = body {
+        head.push_str(&format!("Content-Length: {}\r\n", b.len()));
+    }
+    head.push_str("\r\n");
+    stream.write_all(head.as_bytes()).unwrap();
+    if let Some(b) = body {
+        stream.write_all(b.as_bytes()).unwrap();
+    }
+    let mut raw = Vec::new();
+    stream.read_to_end(&mut raw).expect("read response");
+    let raw = String::from_utf8(raw).expect("utf8 response");
+    let (head, body) = raw.split_once("\r\n\r\n").unwrap_or((raw.as_str(), ""));
+    let status: u16 = head
+        .lines()
+        .next()
+        .and_then(|l| l.split_whitespace().nth(1))
+        .and_then(|s| s.parse().ok())
+        .unwrap_or_else(|| panic!("malformed response head: {head}"));
+    (status, body.to_string())
+}
+
+fn post_job(addr: &str, spec: &str) -> u64 {
+    let (status, body) = req(addr, "POST", "/v1/jobs", Some(spec));
+    assert_eq!(status, 202, "POST /v1/jobs: {body}");
+    let doc = Json::parse(&body).expect("valid submit response");
+    doc.get("job").and_then(Json::as_f64).expect("job id") as u64
+}
+
+fn wait_finished(addr: &str, job: u64) -> Json {
+    let deadline = Instant::now() + Duration::from_secs(120);
+    loop {
+        let (status, body) = req(addr, "GET", &format!("/v1/jobs/{job}"), None);
+        assert_eq!(status, 200, "GET /v1/jobs/{job}: {body}");
+        let doc = Json::parse(&body).expect("valid status json");
+        if doc.get("state").and_then(Json::as_str) == Some("finished") {
+            return doc;
+        }
+        assert!(Instant::now() < deadline, "job {job} never finished: {body}");
+        std::thread::sleep(Duration::from_millis(10));
+    }
+}
+
+fn job_spec(i: usize) -> String {
+    format!(
+        "{{\"problem\":\"lasso\",\"rows\":25,\"cols\":75,\"seed\":7,\"algo\":\"fpa\",\
+         \"max_iters\":40,\"target\":0,\"tag\":\"obs-{i}\"}}"
+    )
+}
+
+/// Minimal Prometheus text-format validator: every sample line belongs
+/// to a `# TYPE`-declared family, histogram bucket series are strictly
+/// `le`-ordered and cumulative, and each series' `+Inf` bucket equals
+/// its `_count`.
+fn validate_prometheus(text: &str) {
+    struct Hist {
+        last_le: f64,
+        last_cum: f64,
+        inf: Option<f64>,
+    }
+    let mut types: HashMap<String, String> = HashMap::new();
+    let mut hists: HashMap<String, Hist> = HashMap::new();
+    let mut counts: HashMap<String, f64> = HashMap::new();
+    for line in text.lines() {
+        let line = line.trim();
+        if line.is_empty() {
+            continue;
+        }
+        if let Some(rest) = line.strip_prefix("# TYPE ") {
+            let mut it = rest.split_whitespace();
+            let name = it.next().expect("TYPE line has a name").to_string();
+            let kind = it.next().expect("TYPE line has a kind").to_string();
+            types.insert(name, kind);
+            continue;
+        }
+        if line.starts_with('#') {
+            continue;
+        }
+        let (key, value) =
+            line.rsplit_once(' ').unwrap_or_else(|| panic!("malformed sample: {line}"));
+        let value: f64 =
+            value.parse().unwrap_or_else(|_| panic!("non-numeric sample value: {line}"));
+        let name_end = key.find('{').unwrap_or(key.len());
+        let name = &key[..name_end];
+        let labels = &key[name_end..];
+        let base = name
+            .strip_suffix("_bucket")
+            .or_else(|| name.strip_suffix("_sum"))
+            .or_else(|| name.strip_suffix("_count"))
+            .filter(|b| types.get(*b).map(String::as_str) == Some("histogram"))
+            .unwrap_or(name);
+        assert!(types.contains_key(base), "sample `{name}` has no # TYPE line: {line}");
+        if name.ends_with("_bucket") && types.get(base).map(String::as_str) == Some("histogram")
+        {
+            let inner = labels.trim_start_matches('{').trim_end_matches('}');
+            let mut le = None;
+            let mut rest: Vec<&str> = Vec::new();
+            for part in inner.split(',').filter(|p| !p.is_empty()) {
+                match part.strip_prefix("le=\"") {
+                    Some(v) => le = Some(v.trim_end_matches('"').to_string()),
+                    None => rest.push(part),
+                }
+            }
+            let le = le.unwrap_or_else(|| panic!("bucket sample without le: {line}"));
+            let le_val = if le == "+Inf" {
+                f64::INFINITY
+            } else {
+                le.parse::<f64>().unwrap_or_else(|_| panic!("bad le `{le}`: {line}"))
+            };
+            let series = if rest.is_empty() {
+                base.to_string()
+            } else {
+                format!("{base}{{{}}}", rest.join(","))
+            };
+            let h = hists
+                .entry(series.clone())
+                .or_insert(Hist { last_le: f64::NEG_INFINITY, last_cum: 0.0, inf: None });
+            assert!(le_val > h.last_le, "le out of order in `{series}`: {line}");
+            assert!(
+                value >= h.last_cum,
+                "buckets must be cumulative in `{series}`: {line} (prev {})",
+                h.last_cum
+            );
+            h.last_le = le_val;
+            h.last_cum = value;
+            if le_val.is_infinite() {
+                h.inf = Some(value);
+            }
+        } else if let Some(b) = name.strip_suffix("_count") {
+            if types.get(b).map(String::as_str) == Some("histogram") {
+                let series = if labels.is_empty() {
+                    b.to_string()
+                } else {
+                    format!("{b}{labels}")
+                };
+                counts.insert(series, value);
+            }
+        }
+    }
+    for (series, h) in &hists {
+        let inf = h.inf.unwrap_or_else(|| panic!("series `{series}` has no +Inf bucket"));
+        let count = counts
+            .get(series)
+            .unwrap_or_else(|| panic!("series `{series}` has buckets but no _count"));
+        assert_eq!(inf, *count, "`{series}`: +Inf bucket must equal _count");
+    }
+}
+
+/// Extract one unlabeled gauge/counter value from a scrape.
+fn sample(text: &str, name: &str) -> f64 {
+    text.lines()
+        .find_map(|l| l.strip_prefix(&format!("{name} ")))
+        .unwrap_or_else(|| panic!("no `{name}` sample in:\n{text}"))
+        .trim()
+        .parse()
+        .unwrap_or_else(|e| panic!("bad `{name}` value: {e}"))
+}
+
+/// Tentpole acceptance: the four obs histogram families land in
+/// `/metrics`, populated by real traffic, and every concurrent scrape
+/// taken *while* jobs churn parses as valid Prometheus text.
+#[test]
+fn metrics_histograms_stay_valid_prometheus_under_churn() {
+    let server = spawn(HttpConfig::default(), ServeConfig::default().with_workers(2));
+    let addr = server.addr().to_string();
+
+    let scraper = {
+        let addr = addr.clone();
+        std::thread::spawn(move || {
+            for _ in 0..12 {
+                let (status, body) = req(&addr, "GET", "/metrics", None);
+                assert_eq!(status, 200);
+                validate_prometheus(&body);
+                std::thread::sleep(Duration::from_millis(5));
+            }
+        })
+    };
+    let jobs: Vec<u64> = (0..6).map(|i| post_job(&addr, &job_spec(i))).collect();
+    for job in &jobs {
+        wait_finished(&addr, *job);
+    }
+    scraper.join().expect("scraper thread");
+
+    let (status, body) = req(&addr, "GET", "/metrics", None);
+    assert_eq!(status, 200);
+    validate_prometheus(&body);
+    for family in [
+        "flexa_http_request_duration_seconds",
+        "flexa_job_queue_seconds",
+        "flexa_job_service_seconds",
+        "flexa_job_iteration_seconds",
+    ] {
+        assert!(
+            body.contains(&format!("# TYPE {family} histogram")),
+            "missing histogram family `{family}`:\n{body}"
+        );
+    }
+    // Traffic populated them: 6 jobs served, 6 × 40 iterations timed,
+    // and the POSTs themselves recorded under their endpoint label.
+    assert!(sample(&body, "flexa_job_service_seconds_count") >= 6.0, "{body}");
+    assert!(sample(&body, "flexa_job_queue_seconds_count") >= 6.0, "{body}");
+    let iter_count: f64 = body
+        .lines()
+        .filter(|l| l.starts_with("flexa_job_iteration_seconds_count"))
+        .filter_map(|l| l.rsplit_once(' ').and_then(|(_, v)| v.parse::<f64>().ok()))
+        .sum();
+    assert!(iter_count >= 240.0, "iteration histogram undercounts: {iter_count}\n{body}");
+    assert!(
+        body.contains("flexa_http_request_duration_seconds_count{endpoint=\"post_jobs\"}"),
+        "{body}"
+    );
+    assert!(body.contains("flexa_obs_spans_dropped_total "), "{body}");
+    server.shutdown().expect("clean shutdown");
+}
+
+/// The per-job profile accounts for the job's life: queue + service
+/// bound the total, the kernel region fits inside service time, and the
+/// iteration count matches the solve.
+#[test]
+fn job_profile_phases_account_for_total_time() {
+    let server = spawn(HttpConfig::default(), ServeConfig::default().with_workers(1));
+    let addr = server.addr().to_string();
+    let job = post_job(&addr, &job_spec(0));
+    wait_finished(&addr, job);
+
+    let (status, body) = req(&addr, "GET", &format!("/v1/jobs/{job}/profile"), None);
+    assert_eq!(status, 200, "{body}");
+    let p = Json::parse(&body).expect("profile JSON must parse");
+    assert_eq!(p.get("job").and_then(Json::as_f64), Some(job as f64));
+    assert_eq!(p.get("state").and_then(Json::as_str), Some("done"), "{body}");
+    assert_eq!(p.get("solver").and_then(Json::as_str), Some("fpa"), "{body}");
+    let num = |k: &str| p.get(k).and_then(Json::as_f64).unwrap_or_else(|| panic!("{k}: {body}"));
+    let (queue_ms, service_ms, kernel_ms, total_ms) =
+        (num("queue_ms"), num("service_ms"), num("kernel_ms"), num("total_ms"));
+    assert!(queue_ms >= 0.0 && service_ms > 0.0 && total_ms > 0.0, "{body}");
+    // No retries here, so enqueue→terminal is queue-wait plus one
+    // service stint (plus scheduler bookkeeping, hence the slack).
+    assert!(
+        queue_ms + service_ms <= total_ms + 5.0,
+        "phases exceed total: queue {queue_ms} + service {service_ms} > total {total_ms}"
+    );
+    assert!(kernel_ms <= service_ms + 1.0, "kernel {kernel_ms} outside service {service_ms}");
+    let iters = p.get("iterations").expect("iterations object");
+    assert_eq!(iters.get("count").and_then(Json::as_f64), Some(40.0), "{body}");
+    assert!(
+        iters.get("total_ms").and_then(Json::as_f64).unwrap_or(-1.0) <= service_ms + 1.0,
+        "{body}"
+    );
+
+    // Unknown job → 404; wrong method → 405.
+    let (status, _) = req(&addr, "GET", "/v1/jobs/99999/profile", None);
+    assert_eq!(status, 404);
+    let (status, _) = req(&addr, "POST", "/v1/jobs/1/profile", Some("{}"));
+    assert_eq!(status, 405);
+    server.shutdown().expect("clean shutdown");
+}
+
+/// `/v1/debug/trace` round-trips through the JSON parser, carries the
+/// expected phases with job attribution, respects `since_ms`, and
+/// rejects non-GET methods.
+#[test]
+fn debug_trace_serves_parseable_trace_events() {
+    let server = spawn(HttpConfig::default(), ServeConfig::default().with_workers(1));
+    let addr = server.addr().to_string();
+    let job = post_job(&addr, &job_spec(0));
+    wait_finished(&addr, job);
+
+    let (status, body) = req(&addr, "GET", "/v1/debug/trace", None);
+    assert_eq!(status, 200, "{body}");
+    let doc = Json::parse(&body).expect("trace JSON must parse");
+    let Some(Json::Arr(events)) = doc.get("traceEvents") else {
+        panic!("traceEvents must be an array: {body}");
+    };
+    assert!(!events.is_empty(), "trace must carry spans after a solve");
+    let mut phases: Vec<&str> = Vec::new();
+    let mut saw_job = false;
+    let mut saw_request = false;
+    for e in events {
+        assert_eq!(e.get("ph").and_then(Json::as_str), Some("X"));
+        assert!(e.get("ts").and_then(Json::as_f64).is_some());
+        assert!(e.get("dur").and_then(Json::as_f64).is_some());
+        let name = e.get("name").and_then(Json::as_str).expect("event name");
+        phases.push(name);
+        if let Some(args) = e.get("args") {
+            saw_job |= args.get("job").and_then(Json::as_f64) == Some(job as f64);
+            saw_request |= args.get("request").and_then(Json::as_str).is_some();
+        }
+    }
+    for phase in ["queue.wait", "solve.iter"] {
+        assert!(phases.contains(&phase), "missing `{phase}` span in {phases:?}");
+    }
+    assert!(saw_job, "no span attributed to job {job}: {body}");
+    assert!(saw_request, "no span carries a request id: {body}");
+
+    // A since_ms cursor far in the future filters everything out but
+    // still renders a valid (empty) document.
+    let (status, body) = req(&addr, "GET", "/v1/debug/trace?since_ms=9999999999", None);
+    assert_eq!(status, 200);
+    let doc = Json::parse(&body).expect("empty trace parses");
+    let Some(Json::Arr(events)) = doc.get("traceEvents") else { panic!("{body}") };
+    assert!(events.is_empty(), "future cursor must filter all spans: {body}");
+
+    let (status, _) = req(&addr, "DELETE", "/v1/debug/trace", None);
+    assert_eq!(status, 405);
+    server.shutdown().expect("clean shutdown");
+}
+
+/// `flexa_uptime_seconds` regression: monotone across scrapes and
+/// immune to wall-clock semantics (it derives from a bind-time
+/// `Instant`, so it can never go negative or jump backwards).
+#[test]
+fn uptime_gauge_is_monotone_across_scrapes() {
+    let server = spawn(HttpConfig::default(), ServeConfig::default().with_workers(1));
+    let addr = server.addr().to_string();
+    let (_, first) = req(&addr, "GET", "/metrics", None);
+    let up1 = sample(&first, "flexa_uptime_seconds");
+    std::thread::sleep(Duration::from_millis(30));
+    let (_, second) = req(&addr, "GET", "/metrics", None);
+    let up2 = sample(&second, "flexa_uptime_seconds");
+    assert!(up1 >= 0.0, "uptime can never be negative: {up1}");
+    assert!(up2 >= up1, "uptime must be monotone: {up1} then {up2}");
+    server.shutdown().expect("clean shutdown");
+}
+
+/// `--quiet-probes` policy: successful probe endpoints are suppressed,
+/// everything else — and every failure — still logs.
+#[test]
+fn quiet_probes_suppresses_only_successful_probe_lines() {
+    use flexa::http::should_log;
+    // Default: everything logs.
+    assert!(should_log(false, "/healthz", 200));
+    assert!(should_log(false, "/metrics", 200));
+    // Quiet: probe endpoints suppressed on success only.
+    assert!(!should_log(true, "/healthz", 200));
+    assert!(!should_log(true, "/metrics", 200));
+    assert!(should_log(true, "/healthz", 503), "failures always log");
+    assert!(should_log(true, "/metrics", 401), "failures always log");
+    // Quiet never touches real traffic.
+    assert!(should_log(true, "/v1/jobs", 202));
+    assert!(should_log(true, "/v1/jobs/1/profile", 200));
+}
