@@ -1,0 +1,303 @@
+//! Seeded, deterministic fault injection for crash-tolerance testing.
+//!
+//! Chaos is **off** unless armed: either the `FLEXA_CHAOS=<seed>`
+//! environment variable is set when the process first hits an injection
+//! point, or a test installs a config programmatically via [`scoped`].
+//! The inactive fast path is a single relaxed atomic load, so the hooks
+//! compiled into `cluster::backend` and `tenant::store` cost nothing in
+//! production.
+//!
+//! Faults are drawn from [`crate::prng::Xoshiro256pp`] streams keyed by
+//! `(seed, site, per-site call counter)`, so a given seed produces the
+//! same fault sequence at each site whenever the per-site call order is
+//! deterministic (single prober thread, single replicator thread,
+//! serialized test traffic). Sites currently wired:
+//!
+//! | site              | effect                                        |
+//! |-------------------|-----------------------------------------------|
+//! | `backend.connect` | reset (connect error) or slow-down            |
+//! | `backend.read`    | reset after the request is written, or slow   |
+//! | `proxy.stream`    | tear a proxied SSE stream mid-flight          |
+//! | `store.open`      | corrupt or truncate a warm-start store image  |
+//!
+//! Tests in one binary share the process-global config, so every chaos
+//! test — including golden, fault-free phases — must hold the exclusive
+//! guard returned by [`scoped`] / [`scoped_off`]; the guard restores
+//! the previous config on drop.
+
+use crate::prng::Xoshiro256pp;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{Mutex, MutexGuard, OnceLock};
+use std::time::Duration;
+
+/// Per-site fault probabilities for one chaos run. All probabilities
+/// are evaluated independently per call from the site's seeded stream.
+#[derive(Clone, Copy, Debug)]
+pub struct ChaosConfig {
+    /// Seed for every site's fault stream.
+    pub seed: u64,
+    /// P(connect attempt fails with a reset).
+    pub connect_reset_p: f64,
+    /// P(buffered exchange dies after the request is written).
+    pub read_reset_p: f64,
+    /// P(a proxied SSE stream tears mid-flight, per read).
+    pub stream_reset_p: f64,
+    /// P(a surviving call is delayed by `slow_ms`), drawn after the
+    /// reset check from the same stream.
+    pub slow_p: f64,
+    /// Injected delay for slow faults.
+    pub slow_ms: u64,
+    /// P(a warm-start store image is mangled on open).
+    pub store_corrupt_p: f64,
+}
+
+impl ChaosConfig {
+    /// Moderate default rates: enough churn to exercise every failover
+    /// path in a short run without starving the system of progress.
+    pub fn from_seed(seed: u64) -> Self {
+        ChaosConfig {
+            seed,
+            connect_reset_p: 0.10,
+            read_reset_p: 0.05,
+            stream_reset_p: 0.02,
+            slow_p: 0.10,
+            slow_ms: 15,
+            store_corrupt_p: 0.25,
+        }
+    }
+}
+
+/// The outcome of one injection-point draw.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Fault {
+    /// Proceed normally.
+    None,
+    /// Fail the operation as if the peer reset the connection.
+    Reset,
+    /// Sleep this long, then proceed.
+    Slow(Duration),
+}
+
+struct ChaosState {
+    config: Option<ChaosConfig>,
+    /// Per-site call counters — the stream index for the next draw.
+    /// A handful of fixed sites, so a linear scan beats a map.
+    counters: Vec<(&'static str, u64)>,
+}
+
+static ACTIVE: AtomicBool = AtomicBool::new(false);
+static STATE: Mutex<ChaosState> = Mutex::new(ChaosState { config: None, counters: Vec::new() });
+/// Serializes chaos-sensitive tests within one binary.
+static TEST_LOCK: Mutex<()> = Mutex::new(());
+static ENV_INIT: OnceLock<()> = OnceLock::new();
+
+fn lock_state() -> MutexGuard<'static, ChaosState> {
+    STATE.lock().unwrap_or_else(std::sync::PoisonError::into_inner)
+}
+
+/// Parse `FLEXA_CHAOS` once, installing a default-rate config when it
+/// holds a seed. Called lazily from the first injection point so plain
+/// library users never touch the environment.
+fn env_init() {
+    ENV_INIT.get_or_init(|| {
+        if let Ok(v) = std::env::var("FLEXA_CHAOS") {
+            if let Ok(seed) = v.trim().parse::<u64>() {
+                install(ChaosConfig::from_seed(seed));
+            }
+        }
+    });
+}
+
+/// Whether any chaos config is currently installed.
+pub fn active() -> bool {
+    env_init();
+    ACTIVE.load(Ordering::Relaxed)
+}
+
+/// Install `config`, resetting every site's call counter so the fault
+/// sequence restarts from the stream head (reproducible runs).
+pub fn install(config: ChaosConfig) {
+    let mut st = lock_state();
+    st.config = Some(config);
+    st.counters.clear();
+    ACTIVE.store(true, Ordering::Relaxed);
+}
+
+/// Remove any installed config; every site reverts to `Fault::None`.
+pub fn uninstall() {
+    let mut st = lock_state();
+    st.config = None;
+    st.counters.clear();
+    ACTIVE.store(false, Ordering::Relaxed);
+}
+
+/// Exclusive chaos scope for tests: holds the global chaos lock and
+/// restores the previously installed config on drop.
+pub struct Scoped {
+    _guard: MutexGuard<'static, ()>,
+    prev: Option<ChaosConfig>,
+}
+
+impl Drop for Scoped {
+    fn drop(&mut self) {
+        match self.prev {
+            Some(cfg) => install(cfg),
+            None => uninstall(),
+        }
+    }
+}
+
+fn scope_with(config: Option<ChaosConfig>) -> Scoped {
+    let guard = TEST_LOCK.lock().unwrap_or_else(std::sync::PoisonError::into_inner);
+    env_init();
+    let prev = lock_state().config;
+    match config {
+        Some(cfg) => install(cfg),
+        None => uninstall(),
+    }
+    Scoped { _guard: guard, prev }
+}
+
+/// Run with `config` until the guard drops.
+pub fn scoped(config: ChaosConfig) -> Scoped {
+    scope_with(Some(config))
+}
+
+/// Run with chaos forced off (golden phases), even when `FLEXA_CHAOS`
+/// is exported for the whole test process.
+pub fn scoped_off() -> Scoped {
+    scope_with(None)
+}
+
+fn fnv64(bytes: &[u8]) -> u64 {
+    let mut h: u64 = 0xcbf2_9ce4_8422_2325;
+    for &b in bytes {
+        h ^= u64::from(b);
+        h = h.wrapping_mul(0x0000_0100_0000_01b3);
+    }
+    h
+}
+
+/// The site's PRNG for its `n`-th call under `cfg.seed`.
+fn site_rng(cfg: &ChaosConfig, site: &'static str, n: u64) -> Xoshiro256pp {
+    let mut base = Xoshiro256pp::seed_from_u64(cfg.seed ^ fnv64(site.as_bytes()));
+    base.split(n)
+}
+
+/// Draw the config and this call's stream index for `site`, or `None`
+/// when chaos is inactive.
+fn draw(site: &'static str) -> Option<(ChaosConfig, u64)> {
+    if !active() {
+        return None;
+    }
+    let mut st = lock_state();
+    let cfg = st.config?;
+    let slot = match st.counters.iter().position(|(s, _)| *s == site) {
+        Some(i) => i,
+        None => {
+            st.counters.push((site, 0));
+            st.counters.len() - 1
+        }
+    };
+    let idx = st.counters[slot].1;
+    st.counters[slot].1 += 1;
+    Some((cfg, idx))
+}
+
+/// Decide the fault for one call at `site`. Inactive chaos returns
+/// [`Fault::None`] after a single atomic load.
+pub fn fault(site: &'static str) -> Fault {
+    let Some((cfg, n)) = draw(site) else {
+        return Fault::None;
+    };
+    let reset_p = match site {
+        "backend.connect" => cfg.connect_reset_p,
+        "backend.read" => cfg.read_reset_p,
+        "proxy.stream" => cfg.stream_reset_p,
+        _ => 0.0,
+    };
+    let mut rng = site_rng(&cfg, site, n);
+    let r = rng.next_f64();
+    if r < reset_p {
+        Fault::Reset
+    } else if r < reset_p + cfg.slow_p {
+        Fault::Slow(Duration::from_millis(cfg.slow_ms))
+    } else {
+        Fault::None
+    }
+}
+
+/// Maybe mangle a warm-start store image read at open: flip one byte
+/// past the magic, or truncate the tail — the loader must survive both.
+/// Returns true when the image was altered.
+pub fn mangle_store(data: &mut Vec<u8>) -> bool {
+    const PRESERVE: usize = 8; // keep the magic: corrupt records, not the file format
+    let Some((cfg, n)) = draw("store.open") else {
+        return false;
+    };
+    if data.len() <= PRESERVE + 1 {
+        return false;
+    }
+    let mut rng = site_rng(&cfg, "store.open", n);
+    if rng.next_f64() >= cfg.store_corrupt_p {
+        return false;
+    }
+    let span = (data.len() - PRESERVE) as u64;
+    if rng.next_below(2) == 0 {
+        let at = PRESERVE + rng.next_below(span) as usize;
+        data[at] ^= 0x5a;
+    } else {
+        let keep = PRESERVE + rng.next_below(span) as usize;
+        data.truncate(keep);
+    }
+    true
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// A fixed seed yields the same fault sequence at a site, and
+    /// different sites see decorrelated streams.
+    #[test]
+    fn fault_streams_are_deterministic_per_seed_and_site() {
+        let cfg = ChaosConfig { connect_reset_p: 0.5, slow_p: 0.25, ..ChaosConfig::from_seed(42) };
+        let run = |site: &'static str| {
+            let _chaos = scoped(cfg);
+            (0..32).map(|_| fault(site)).collect::<Vec<_>>()
+        };
+        let a1 = run("backend.connect");
+        let a2 = run("backend.connect");
+        assert_eq!(a1, a2, "same seed, same site → same sequence");
+        assert!(a1.contains(&Fault::Reset), "p=0.5 over 32 draws fires");
+        let b = run("backend.read");
+        assert_ne!(a1, b, "sites draw from independent streams");
+    }
+
+    /// Outside a scope (and without FLEXA_CHAOS) every site is silent.
+    #[test]
+    fn inactive_chaos_injects_nothing() {
+        let _off = scoped_off();
+        for _ in 0..16 {
+            assert_eq!(fault("backend.connect"), Fault::None);
+        }
+        let mut data = vec![0u8; 64];
+        assert!(!mangle_store(&mut data));
+        assert_eq!(data, vec![0u8; 64]);
+    }
+
+    /// Store mangling preserves the 8-byte magic prefix and actually
+    /// alters the image when the probability is forced to 1.
+    #[test]
+    fn store_mangle_spares_the_magic() {
+        let cfg = ChaosConfig { store_corrupt_p: 1.0, ..ChaosConfig::from_seed(9) };
+        let _chaos = scoped(cfg);
+        for _ in 0..16 {
+            let clean: Vec<u8> = (0..96u8).collect();
+            let mut data = clean.clone();
+            assert!(mangle_store(&mut data));
+            assert_eq!(&data[..8], &clean[..8], "magic untouched");
+            assert_ne!(data, clean, "image altered");
+        }
+    }
+}

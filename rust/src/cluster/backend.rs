@@ -19,6 +19,31 @@ use std::io::{BufRead, BufReader, Read, Write};
 use std::net::{TcpStream, ToSocketAddrs};
 use std::time::Duration;
 
+/// Split connect/read deadlines for one router→backend exchange.
+///
+/// `connect` bounds the TCP handshake (a dead host fails fast);
+/// `read` bounds each subsequent read/write (a live-but-slow solve may
+/// legitimately take much longer than a SYN/ACK). A bare
+/// [`Duration`] converts into a uniform pair, so call sites that don't
+/// care about the distinction can keep passing one value.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct Timeouts {
+    pub connect: Duration,
+    pub read: Duration,
+}
+
+impl Timeouts {
+    pub fn new(connect: Duration, read: Duration) -> Self {
+        Timeouts { connect, read }
+    }
+}
+
+impl From<Duration> for Timeouts {
+    fn from(d: Duration) -> Self {
+        Timeouts { connect: d, read: d }
+    }
+}
+
 /// One backend: a stable id (ring identity, metrics label) + address.
 #[derive(Clone, Debug, PartialEq, Eq)]
 pub struct BackendSpec {
@@ -81,16 +106,21 @@ impl HttpReply {
     }
 }
 
-fn connect(addr: &str, timeout: Duration) -> Result<TcpStream> {
+fn connect(addr: &str, timeouts: Timeouts) -> Result<TcpStream> {
+    match crate::chaos::fault("backend.connect") {
+        crate::chaos::Fault::None => {}
+        crate::chaos::Fault::Reset => bail!("backend `{addr}`: connect failed: injected reset"),
+        crate::chaos::Fault::Slow(delay) => std::thread::sleep(delay),
+    }
     let sock = addr
         .to_socket_addrs()
         .map_err(|e| anyhow!("backend `{addr}`: cannot resolve: {e}"))?
         .next()
         .ok_or_else(|| anyhow!("backend `{addr}`: no address"))?;
-    let stream = TcpStream::connect_timeout(&sock, timeout)
+    let stream = TcpStream::connect_timeout(&sock, timeouts.connect)
         .map_err(|e| anyhow!("backend `{addr}`: connect failed: {e}"))?;
-    stream.set_read_timeout(Some(timeout))?;
-    stream.set_write_timeout(Some(timeout))?;
+    stream.set_read_timeout(Some(timeouts.read))?;
+    stream.set_write_timeout(Some(timeouts.read))?;
     stream.set_nodelay(true)?;
     Ok(stream)
 }
@@ -149,9 +179,9 @@ pub fn request(
     path: &str,
     headers: &[(String, String)],
     body: Option<&[u8]>,
-    timeout: Duration,
+    timeouts: impl Into<Timeouts>,
 ) -> Result<HttpReply> {
-    let stream = connect(addr, timeout)?;
+    let stream = connect(addr, timeouts.into())?;
     let mut writer = stream.try_clone()?;
     let mut reader = BufReader::new(stream);
     write_head(&mut writer, method, path, addr, headers, body.map(<[u8]>::len))?;
@@ -159,6 +189,11 @@ pub fn request(
         writer.write_all(b)?;
     }
     writer.flush()?;
+    match crate::chaos::fault("backend.read") {
+        crate::chaos::Fault::None => {}
+        crate::chaos::Fault::Reset => bail!("backend `{addr}`: read failed: injected reset"),
+        crate::chaos::Fault::Slow(delay) => std::thread::sleep(delay),
+    }
     let (status, headers) = read_head(&mut reader)?;
     let mut body = Vec::new();
     match headers.iter().find(|(k, _)| k == "content-length") {
@@ -177,15 +212,15 @@ pub fn request(
 
 /// Open a streaming GET (SSE proxying): returns once the head is read,
 /// leaving the reader positioned at the event stream. Reads time out at
-/// `timeout` per chunk — the caller's loop treats timeouts as "no data
-/// yet", not as stream end.
+/// `timeouts.read` per chunk — the caller's loop treats timeouts as "no
+/// data yet", not as stream end.
 pub fn open_stream(
     addr: &str,
     path: &str,
     headers: &[(String, String)],
-    timeout: Duration,
+    timeouts: impl Into<Timeouts>,
 ) -> Result<(u16, Vec<(String, String)>, BufReader<TcpStream>)> {
-    let stream = connect(addr, timeout)?;
+    let stream = connect(addr, timeouts.into())?;
     let mut writer = stream.try_clone()?;
     let mut reader = BufReader::new(stream);
     write_head(&mut writer, "GET", path, addr, headers, None)?;
@@ -220,5 +255,14 @@ mod tests {
         assert!(parse_backends_file("[backends]\n").is_err(), "empty table rejected");
         assert!(parse_backends_file("[nodes]\na = \"x:1\"\n").is_err(), "wrong table rejected");
         assert!(parse_backends_file("[backends]\na = 7\n").is_err(), "non-string rejected");
+    }
+
+    #[test]
+    fn uniform_timeouts_convert_from_a_single_duration() {
+        let t: Timeouts = Duration::from_millis(250).into();
+        assert_eq!(t.connect, Duration::from_millis(250));
+        assert_eq!(t.read, Duration::from_millis(250));
+        let split = Timeouts::new(Duration::from_millis(100), Duration::from_secs(30));
+        assert_ne!(split.connect, split.read);
     }
 }

@@ -110,7 +110,11 @@ pub fn probe(state: &BackendState, config: &HealthConfig) {
 }
 
 /// Spawn the prober thread: probes every backend each `interval` until
-/// `stop` (checked between short sleeps, so shutdown is prompt).
+/// `stop` (checked between short sleeps, so shutdown is prompt). The
+/// inter-round sleep is jittered ±25% by a seeded PRNG so that several
+/// routers probing the same fleet don't synchronize their probe bursts;
+/// the jitter stream is deterministic per process (seeded from the
+/// process id), keeping a single router's cadence reproducible.
 pub fn spawn_prober(
     backends: Arc<Vec<Arc<BackendState>>>,
     config: HealthConfig,
@@ -119,6 +123,8 @@ pub fn spawn_prober(
     std::thread::Builder::new()
         .name("flexa-cluster-health".to_string())
         .spawn(move || {
+            let mut rng =
+                crate::prng::Xoshiro256pp::seed_from_u64(0x9E1A_7C4D ^ u64::from(std::process::id()));
             while !stop.load(Ordering::Relaxed) {
                 for b in backends.iter() {
                     if stop.load(Ordering::Relaxed) {
@@ -126,15 +132,21 @@ pub fn spawn_prober(
                     }
                     probe(b, &config);
                 }
+                let interval = jittered(config.interval, &mut rng);
                 let mut waited = Duration::ZERO;
-                while waited < config.interval && !stop.load(Ordering::Relaxed) {
-                    let step = Duration::from_millis(25).min(config.interval - waited);
+                while waited < interval && !stop.load(Ordering::Relaxed) {
+                    let step = Duration::from_millis(25).min(interval - waited);
                     std::thread::sleep(step);
                     waited += step;
                 }
             }
         })
         .expect("spawn cluster health prober")
+}
+
+/// Scale `interval` by a uniform factor in [0.75, 1.25).
+fn jittered(interval: Duration, rng: &mut crate::prng::Xoshiro256pp) -> Duration {
+    interval.mul_f64(0.75 + 0.5 * rng.next_f64())
 }
 
 #[cfg(test)]
@@ -189,5 +201,17 @@ mod tests {
         probe(&b, &cfg);
         assert!(!b.healthy());
         assert_eq!(b.probe_failures.load(Ordering::Relaxed), 1);
+    }
+
+    /// The jitter factor stays inside [0.75, 1.25) so probes desync
+    /// without drifting far from the configured cadence.
+    #[test]
+    fn probe_jitter_is_bounded() {
+        let mut rng = crate::prng::Xoshiro256pp::seed_from_u64(7);
+        let interval = Duration::from_millis(400);
+        for _ in 0..64 {
+            let j = jittered(interval, &mut rng);
+            assert!(j >= Duration::from_millis(300) && j < Duration::from_millis(500), "{j:?}");
+        }
     }
 }

@@ -32,6 +32,17 @@
 //! subproblems as ordinary `admm-step` jobs on full replicated state,
 //! and the merged trajectory is bit-identical to a single-node
 //! [`crate::algos::admm::Admm`] run (§"bit-exact split" in the tests).
+//!
+//! The cluster is crash-tolerant: warm-start writes replicate
+//! asynchronously to each key's ring successor, proxied jobs carry
+//! enough state (body, identity, idempotency key) to re-dispatch to
+//! that successor when their backend dies, SSE streams resume across
+//! the failover at frame granularity (deterministic re-runs replay the
+//! identical sequence, so the client sees each event exactly once), and
+//! with every backend down the router solves registry-spec jobs itself.
+//! `tests/chaos.rs` drives all of it under seeded fault injection
+//! ([`crate::chaos`]) and pins failover results bit-identical to the
+//! fault-free golden runs.
 
 pub mod backend;
 pub mod health;
@@ -39,7 +50,7 @@ pub mod ring;
 pub mod router;
 pub mod split;
 
-pub use backend::{parse_backend_arg, parse_backends_file, BackendSpec};
+pub use backend::{parse_backend_arg, parse_backends_file, BackendSpec, Timeouts};
 pub use health::{BackendState, HealthConfig};
 pub use ring::Ring;
 pub use router::{ClusterConfig, ClusterServer, ClusterState, SpawnedCluster};

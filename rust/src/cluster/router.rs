@@ -28,19 +28,39 @@
 //! `Authorization` verbatim and never holds tokens. Split jobs are the
 //! one exception — the router itself answers for them, labeled with the
 //! job line's `tenant` key.
+//!
+//! ## Crash tolerance
+//!
+//! Three mechanisms keep accepted jobs alive through backend deaths:
+//!
+//! * **Warm-start replication** — every warm-start placement enqueues an
+//!   async copy of the placement key's cache entry from the owner to its
+//!   ring successor (`POST /v1/store/replicate` on the successor), so a
+//!   failover landing there finds the sweep's iterate already warm.
+//! * **Job failover** — the router remembers each proxied job's original
+//!   body, identity and a router-minted idempotency key. When the owner
+//!   dies (prober verdict, or a failed poll/stream), the job re-POSTs to
+//!   the next ring successor; deterministic re-runs make the replayed
+//!   result — and the SSE frame sequence — bit-identical, and the
+//!   idempotency key makes a re-POST racing a slow-but-alive backend
+//!   collapse into the copy it already runs.
+//! * **Local degradation** — with *every* backend unplaceable, a
+//!   registry-spec job is solved on the router itself (`backend`
+//!   reported as `router-local`), so the cluster answers until capacity
+//!   returns.
 
-use super::backend::{self, BackendSpec};
+use super::backend::{self, BackendSpec, Timeouts};
 use super::health::{spawn_prober, BackendState, HealthConfig};
 use super::ring::Ring;
 use super::split::{self, SplitConfig, SplitJob};
-use crate::api::Registry;
+use crate::api::{Registry, Session};
 use crate::http::parser::{self, Limits, Request};
 use crate::http::router::{status_json, Response};
 use crate::serve::cache::{fingerprint, Fnv};
 use crate::serve::jobfile::{esc, num, parse_job_line, Json};
-use crate::serve::scheduler::{JobProblem, JobSpec};
+use crate::serve::scheduler::{JobOutcome, JobProblem, JobSpec};
 use anyhow::{anyhow, Result};
-use std::collections::HashMap;
+use std::collections::{HashMap, VecDeque};
 use std::io::{BufRead, BufReader, Write};
 use std::net::{SocketAddr, TcpListener, TcpStream};
 use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
@@ -58,8 +78,19 @@ pub struct ClusterConfig {
     pub max_connections: usize,
     pub max_head_bytes: usize,
     pub max_body_bytes: usize,
-    /// Per-request timeout when proxying to a backend.
+    /// TCP connect budget for any router→backend exchange (a dead host
+    /// should fail fast; reads get the longer `proxy_timeout`).
+    pub connect_timeout: Duration,
+    /// Per-request read/write timeout when proxying to a backend.
     pub proxy_timeout: Duration,
+    /// Replication retry budget: `attempts × backoff` bounds how long
+    /// the replicator chases a warm-start entry that hasn't been
+    /// written yet (the job may still be solving).
+    pub replicate_attempts: u32,
+    pub replicate_backoff: Duration,
+    /// Solve registry-spec jobs on the router itself when no backend is
+    /// placeable, instead of refusing with 503.
+    pub local_fallback: bool,
     /// One structured JSON access-log line per request on stderr.
     pub access_log: bool,
 }
@@ -73,18 +104,61 @@ impl Default for ClusterConfig {
             max_connections: 64,
             max_head_bytes: 16 << 10,
             max_body_bytes: 1 << 20,
+            connect_timeout: Duration::from_secs(2),
             proxy_timeout: Duration::from_secs(30),
+            replicate_attempts: 40,
+            replicate_backoff: Duration::from_millis(250),
+            local_fallback: true,
             access_log: true,
         }
     }
 }
 
+impl ClusterConfig {
+    /// The split connect/read budget for router→backend exchanges.
+    fn timeouts(&self) -> Timeouts {
+        Timeouts::new(self.connect_timeout, self.proxy_timeout)
+    }
+}
+
+/// Everything needed to re-dispatch a proxied job if its backend dies:
+/// the original body and pass-through identity, the placement key (the
+/// failover walk resumes from the same ring order), and the
+/// router-minted idempotency key that keeps a re-POST from double-
+/// running on a backend that already accepted it.
+struct ProxiedJob {
+    backend: usize,
+    remote: u64,
+    key: u64,
+    idem: String,
+    body: Vec<u8>,
+    auth: Vec<(String, String)>,
+    /// Last observed state was terminal — never re-dispatch.
+    done: bool,
+    /// A failover for this job is in flight on another thread.
+    failing: bool,
+    failovers: u32,
+}
+
 /// Where a router-issued job id points.
 enum RoutedJob {
-    /// Proxied to `backends[backend]` as its job `remote`.
-    Proxied { backend: usize, remote: u64 },
+    /// Proxied to a backend (re-dispatchable on its death).
+    Proxied(ProxiedJob),
     /// Driven by the router's split loop.
     Split(Arc<SplitJob>),
+    /// All-backends-down degradation: solved on the router itself.
+    Local(Arc<SplitJob>),
+}
+
+/// One queued warm-start replication: copy `key`'s cache entry from
+/// `source` to its ring successor, retrying on backoff until the entry
+/// exists (the job may still be solving) or the budget runs out.
+struct ReplTask {
+    source: usize,
+    key: u64,
+    auth: Vec<(String, String)>,
+    attempts: u32,
+    not_before: Instant,
 }
 
 /// Shared router context.
@@ -96,6 +170,7 @@ pub struct ClusterState {
     registry: Mutex<Registry>,
     fingerprints: Mutex<HashMap<String, u64>>,
     jobs: Mutex<HashMap<u64, RoutedJob>>,
+    replication: Mutex<VecDeque<ReplTask>>,
     next_job: AtomicU64,
     pub request_seq: AtomicU64,
     pub jobs_routed: AtomicU64,
@@ -103,6 +178,10 @@ pub struct ClusterState {
     pub drains: AtomicU64,
     pub proxy_errors: AtomicU64,
     pub scrape_errors: AtomicU64,
+    pub failovers: AtomicU64,
+    pub replications: AtomicU64,
+    pub replication_errors: AtomicU64,
+    pub local_solves: AtomicU64,
     pub started: Instant,
 }
 
@@ -119,6 +198,7 @@ impl ClusterState {
             registry: Mutex::new(Registry::with_defaults()),
             fingerprints: Mutex::new(HashMap::new()),
             jobs: Mutex::new(HashMap::new()),
+            replication: Mutex::new(VecDeque::new()),
             next_job: AtomicU64::new(0),
             request_seq: AtomicU64::new(0),
             jobs_routed: AtomicU64::new(0),
@@ -126,8 +206,26 @@ impl ClusterState {
             drains: AtomicU64::new(0),
             proxy_errors: AtomicU64::new(0),
             scrape_errors: AtomicU64::new(0),
+            failovers: AtomicU64::new(0),
+            replications: AtomicU64::new(0),
+            replication_errors: AtomicU64::new(0),
+            local_solves: AtomicU64::new(0),
             started: Instant::now(),
         }
+    }
+
+    /// Queue an async warm-start replication, deduped on `(source, key)`
+    /// — a λ-sweep submits many jobs that share one placement key, and
+    /// one copy covers them all.
+    fn enqueue_replication(&self, source: usize, key: u64, auth: Vec<(String, String)>) {
+        if self.backends.len() < 2 {
+            return;
+        }
+        let mut q = self.replication.lock().unwrap();
+        if q.iter().any(|t| t.source == source && t.key == key) {
+            return;
+        }
+        q.push_back(ReplTask { source, key, auth, attempts: 0, not_before: Instant::now() });
     }
 
     fn placeable_indices(&self) -> Vec<usize> {
@@ -179,9 +277,10 @@ impl ClusterState {
 /// connection loop takes over.
 enum ClusterRouted {
     Response(Response),
-    /// Forward the backend's SSE stream, rewriting `remote` → `rid` ids.
-    ProxyStream { backend: usize, path: String, rid: u64, remote: u64 },
-    /// Synthesize the split job's event stream.
+    /// Forward (and, across failovers, resume) the owning backend's SSE
+    /// stream for router job `rid`, rewriting remote → `rid` ids.
+    ProxyStream { rid: u64 },
+    /// Synthesize the split (or router-local) job's event stream.
     SplitStream(Arc<SplitJob>),
 }
 
@@ -209,7 +308,7 @@ fn proxy_exchange(
 ) -> Result<backend::HttpReply> {
     let target = &state.backends[idx];
     let _span = crate::obs::span_detail("cluster.proxy", &target.spec.id);
-    backend::request(&target.spec.addr, method, path, headers, body, state.config.proxy_timeout)
+    backend::request(&target.spec.addr, method, path, headers, body, state.config.timeouts())
 }
 
 fn route(state: &Arc<ClusterState>, req: &Request, req_id: &str) -> ClusterRouted {
@@ -311,7 +410,7 @@ fn submit(state: &Arc<ClusterState>, req: &Request, req_id: &str) -> Response {
         Err(e) => return Response::error(400, &format!("{e:#}")),
     };
     let placeable = state.placeable_indices();
-    if placeable.is_empty() {
+    if placeable.is_empty() && !state.config.local_fallback {
         return Response::error(503, "no healthy backend accepts placements")
             .with_header("Retry-After", "1".to_string());
     }
@@ -366,8 +465,14 @@ fn submit(state: &Arc<ClusterState>, req: &Request, req_id: &str) -> Response {
 
     // Ordinary path: the fingerprint's ring owner, walking successors on
     // connection failure so a just-died backend sheds to its neighbor
-    // even before the prober notices.
-    let headers = passthrough_headers(req, req_id);
+    // even before the prober notices. The router-minted idempotency key
+    // rides every attempt, so re-POSTing the same body — here or at
+    // failover time — collapses into a copy the backend already runs.
+    let auth = passthrough_headers(req, req_id);
+    let rid = state.next_id();
+    let idem = format!("c{rid}-{key:016x}");
+    let mut headers = auth.clone();
+    headers.push(("x-flexa-idempotency-key".to_string(), idem.clone()));
     for &idx in state.ring.order(key).iter() {
         if !state.backends[idx].placeable() {
             continue;
@@ -405,10 +510,27 @@ fn submit(state: &Arc<ClusterState>, req: &Request, req_id: &str) -> Response {
         };
         let tenant =
             body.get("tenant").and_then(Json::as_str).unwrap_or(job.tenant.as_str()).to_string();
-        let rid = state.next_id();
-        state.jobs.lock().unwrap().insert(rid, RoutedJob::Proxied { backend: idx, remote });
+        state.jobs.lock().unwrap().insert(
+            rid,
+            RoutedJob::Proxied(ProxiedJob {
+                backend: idx,
+                remote,
+                key,
+                idem,
+                body: req.body.clone(),
+                auth: auth.clone(),
+                done: false,
+                failing: false,
+                failovers: 0,
+            }),
+        );
         state.jobs_routed.fetch_add(1, Ordering::Relaxed);
         target.placed.fetch_add(1, Ordering::Relaxed);
+        if job.warm_start {
+            // Async: copy the sweep's cache entry to the ring successor
+            // so a failover there starts warm.
+            state.enqueue_replication(idx, key, auth);
+        }
         return Response::json(
             202,
             format!(
@@ -417,6 +539,20 @@ fn submit(state: &Arc<ClusterState>, req: &Request, req_id: &str) -> Response {
                 esc(&target.spec.id)
             ),
         );
+    }
+    // Nothing accepted the connection: degrade to an in-process solve so
+    // the cluster keeps answering with every backend down.
+    if state.config.local_fallback && matches!(job.problem, JobProblem::Spec(_)) {
+        degrade_to_local(state, rid, &req.body);
+        if lookup_split(state, rid).is_some() {
+            return Response::json(
+                202,
+                format!(
+                    "{{\"job\":{rid},\"tenant\":\"{}\",\"backend\":\"router-local\",\"status_url\":\"/v1/jobs/{rid}\",\"events_url\":\"/v1/jobs/{rid}/events\"}}",
+                    esc(&job.tenant)
+                ),
+            );
+        }
     }
     Response::error(503, "every eligible backend refused the connection")
         .with_header("Retry-After", "1".to_string())
@@ -430,20 +566,167 @@ fn rewrite_job_id(body: &str, remote: u64, rid: u64) -> String {
 
 fn lookup(state: &ClusterState, rid: u64) -> Option<(usize, u64)> {
     match state.jobs.lock().unwrap().get(&rid) {
-        Some(RoutedJob::Proxied { backend, remote }) => Some((*backend, *remote)),
+        Some(RoutedJob::Proxied(p)) => Some((p.backend, p.remote)),
         _ => None,
     }
 }
 
 fn lookup_split(state: &ClusterState, rid: u64) -> Option<Arc<SplitJob>> {
     match state.jobs.lock().unwrap().get(&rid) {
-        Some(RoutedJob::Split(job)) => Some(Arc::clone(job)),
+        Some(RoutedJob::Split(job) | RoutedJob::Local(job)) => Some(Arc::clone(job)),
         _ => None,
     }
 }
 
 fn no_such_job(rid: u64) -> Response {
     Response::error(404, &format!("no such job {rid} (never submitted, or pruned)"))
+}
+
+/// Remember that a proxied job was observed terminal, so the failover
+/// sweep never re-dispatches it.
+fn note_done(state: &ClusterState, rid: u64, body: &str) {
+    if !body.contains("\"state\":\"finished\"") {
+        return;
+    }
+    if let Some(RoutedJob::Proxied(p)) = state.jobs.lock().unwrap().get_mut(&rid) {
+        p.done = true;
+    }
+}
+
+/// Re-dispatch a proxied job whose backend died (or stopped answering):
+/// re-POST the original body — same idempotency key — to the next ring
+/// successor in the job's own placement order. The old copy is
+/// best-effort cancelled in case the backend is slow rather than dead;
+/// if it already accepted a racing re-POST, the idempotency key makes
+/// the new submit collapse into that copy instead of double-running.
+/// With nothing placeable the job degrades to a router-local solve
+/// (when enabled); callers re-check `lookup_split` after a `None`.
+fn failover_job(state: &ClusterState, rid: u64) -> Option<(usize, u64)> {
+    let (old_backend, old_remote, key, idem, body, auth, failovers) = {
+        let mut jobs = state.jobs.lock().unwrap();
+        match jobs.get_mut(&rid) {
+            Some(RoutedJob::Proxied(p)) if !p.done && !p.failing => {
+                p.failing = true;
+                (p.backend, p.remote, p.key, p.idem.clone(), p.body.clone(), p.auth.clone(), p.failovers)
+            }
+            _ => return None,
+        }
+    };
+    let _span = crate::obs::span_detail(
+        "failover.redispatch",
+        &format!("job {rid} off {}", state.backends[old_backend].spec.id),
+    );
+    let mut headers = auth.clone();
+    headers.push(("x-flexa-idempotency-key".to_string(), idem));
+    let mut placed = None;
+    for &idx in state.ring.order(key).iter() {
+        if idx == old_backend || !state.backends[idx].placeable() {
+            continue;
+        }
+        let reply = match proxy_exchange(state, idx, "POST", "/v1/jobs", &headers, Some(&body)) {
+            Ok(r) if r.status == 202 => r,
+            Ok(_) => continue,
+            Err(_) => {
+                state.proxy_errors.fetch_add(1, Ordering::Relaxed);
+                continue;
+            }
+        };
+        let remote = Json::parse(&reply.body_str())
+            .ok()
+            .and_then(|b| b.get("job").and_then(Json::as_f64))
+            .map(|v| v as u64);
+        if let Some(remote) = remote {
+            placed = Some((idx, remote));
+            break;
+        }
+    }
+    match placed {
+        Some((idx, remote)) => {
+            if let Some(RoutedJob::Proxied(p)) = state.jobs.lock().unwrap().get_mut(&rid) {
+                p.backend = idx;
+                p.remote = remote;
+                p.failing = false;
+                p.failovers = failovers + 1;
+            }
+            state.failovers.fetch_add(1, Ordering::Relaxed);
+            state.backends[idx].placed.fetch_add(1, Ordering::Relaxed);
+            // Hygiene: the old copy may still be running on a slow-but-
+            // alive backend; a dead one is fine to ignore.
+            let _ = proxy_exchange(
+                state,
+                old_backend,
+                "DELETE",
+                &format!("/v1/jobs/{old_remote}"),
+                &auth,
+                None,
+            );
+            Some((idx, remote))
+        }
+        None => {
+            if state.config.local_fallback {
+                degrade_to_local(state, rid, &body);
+            }
+            if let Some(RoutedJob::Proxied(p)) = state.jobs.lock().unwrap().get_mut(&rid) {
+                p.failing = false;
+            }
+            None
+        }
+    }
+}
+
+/// All-backends-down degradation: replace the routed job with a router-
+/// local in-process solve of the same spec. Only registry specs degrade
+/// (a custom problem can't be rebuilt here); a no-op leaves the caller's
+/// lookup unchanged, which it treats as "still unplaceable".
+fn degrade_to_local(state: &ClusterState, rid: u64, body: &[u8]) {
+    let Ok(text) = std::str::from_utf8(body) else { return };
+    let Ok(job) = parse_job_line(text.trim()) else { return };
+    let JobProblem::Spec(spec) = job.problem else { return };
+    let local = Arc::new(SplitJob::labeled(
+        rid,
+        job.tag,
+        job.tenant,
+        spec.kind.clone(),
+        1,
+        format!("local/{}", job.solver.name),
+    ));
+    state.jobs.lock().unwrap().insert(rid, RoutedJob::Local(Arc::clone(&local)));
+    state.local_solves.fetch_add(1, Ordering::Relaxed);
+    let _span = crate::obs::span_detail("failover.local", &format!("job {rid}"));
+    let driver = Arc::clone(&local);
+    let solver = job.solver;
+    let opts = job.opts;
+    let spawned = std::thread::Builder::new().name("flexa-cluster-local".to_string()).spawn(
+        move || {
+            driver.mark_running();
+            driver.push_event(
+                "started",
+                format!(
+                    "{{\"event\":\"local-started\",\"job\":{},\"solver\":\"{}\"}}",
+                    driver.id,
+                    esc(&driver.solver)
+                ),
+            );
+            match Session::problem(spec).solver(solver).options(opts).run() {
+                Ok(run) => {
+                    let r = &run.report;
+                    driver.finish(
+                        JobOutcome::Done {
+                            converged: r.converged,
+                            objective: r.objective,
+                            iterations: r.iterations,
+                            warm_started: false,
+                        },
+                        Some(r.x.clone()),
+                    );
+                }
+                Err(e) => driver.finish(JobOutcome::Failed { error: format!("{e:#}") }, None),
+            }
+        },
+    );
+    if spawned.is_err() {
+        local.finish(JobOutcome::Failed { error: "cannot spawn local solve thread".into() }, None);
+    }
 }
 
 fn job_get(state: &ClusterState, req: &Request, req_id: &str, rid: u64) -> Response {
@@ -453,18 +736,50 @@ fn job_get(state: &ClusterState, req: &Request, req_id: &str, rid: u64) -> Respo
     let Some((idx, remote)) = lookup(state, rid) else {
         return no_such_job(rid);
     };
-    let path = if req.query_flag("x") {
-        format!("/v1/jobs/{remote}?x=1")
-    } else {
-        format!("/v1/jobs/{remote}")
+    let headers = passthrough_headers(req, req_id);
+    let path = |remote: u64| {
+        if req.query_flag("x") {
+            format!("/v1/jobs/{remote}?x=1")
+        } else {
+            format!("/v1/jobs/{remote}")
+        }
     };
-    match proxy_exchange(state, idx, "GET", &path, &passthrough_headers(req, req_id), None) {
-        Ok(reply) => Response::json(reply.status, rewrite_job_id(&reply.body_str(), remote, rid)),
-        Err(e) => {
+    match proxy_exchange(state, idx, "GET", &path(remote), &headers, None) {
+        Ok(reply) => {
+            let body = rewrite_job_id(&reply.body_str(), remote, rid);
+            note_done(state, rid, &body);
+            Response::json(reply.status, body)
+        }
+        Err(_) => {
+            // The owner is gone: fail the job over and answer from the
+            // successor (or from the degraded local job) in the same
+            // request, so a poller never sees the crash.
             state.proxy_errors.fetch_add(1, Ordering::Relaxed);
+            if let Some((idx2, remote2)) = failover_job(state, rid) {
+                return match proxy_exchange(state, idx2, "GET", &path(remote2), &headers, None) {
+                    Ok(reply) => {
+                        let body = rewrite_job_id(&reply.body_str(), remote2, rid);
+                        note_done(state, rid, &body);
+                        Response::json(reply.status, body)
+                    }
+                    Err(e) => Response::error(
+                        502,
+                        &format!(
+                            "backend `{}` unreachable after failover: {e:#}",
+                            state.backends[idx2].spec.id
+                        ),
+                    ),
+                };
+            }
+            if let Some(job) = lookup_split(state, rid) {
+                return Response::json(200, status_json(&job.status(), req.query_flag("x")));
+            }
             Response::error(
                 502,
-                &format!("backend `{}` unreachable: {e:#}", state.backends[idx].spec.id),
+                &format!(
+                    "backend `{}` unreachable and no failover target",
+                    state.backends[idx].spec.id
+                ),
             )
         }
     }
@@ -491,10 +806,18 @@ fn job_delete(state: &ClusterState, req: &Request, req_id: &str, rid: u64) -> Re
     ) {
         Ok(reply) => Response::json(reply.status, rewrite_job_id(&reply.body_str(), remote, rid)),
         Err(e) => {
+            // The client no longer wants the job — mark it done so the
+            // failover sweep doesn't resurrect it on a successor.
             state.proxy_errors.fetch_add(1, Ordering::Relaxed);
+            if let Some(RoutedJob::Proxied(p)) = state.jobs.lock().unwrap().get_mut(&rid) {
+                p.done = true;
+            }
             Response::error(
                 502,
-                &format!("backend `{}` unreachable: {e:#}", state.backends[idx].spec.id),
+                &format!(
+                    "backend `{}` unreachable; job {rid} dropped from failover tracking: {e:#}",
+                    state.backends[idx].spec.id
+                ),
             )
         }
     }
@@ -504,14 +827,14 @@ fn job_events(state: &Arc<ClusterState>, req: &Request, req_id: &str, rid: u64) 
     if let Some(job) = lookup_split(state, rid) {
         return ClusterRouted::SplitStream(job);
     }
-    let Some((idx, remote)) = lookup(state, rid) else {
+    if lookup(state, rid).is_none() {
         return ClusterRouted::Response(Response::error(
             404,
             &format!("no event stream for job {rid} (never submitted, or pruned)"),
         ));
-    };
-    let _ = req_id;
-    ClusterRouted::ProxyStream { backend: idx, path: format!("/v1/jobs/{remote}/events"), rid, remote }
+    }
+    let _ = (req, req_id);
+    ClusterRouted::ProxyStream { rid }
 }
 
 /// `GET /v1/registry`: the registry is identical on every backend;
@@ -765,6 +1088,22 @@ fn aggregate_metrics(state: &ClusterState, req_id: &str) -> String {
         "flexa_cluster_scrape_errors_total {}\n",
         state.scrape_errors.load(Ordering::Relaxed)
     ));
+    out.push_str(&format!(
+        "flexa_cluster_failovers_total {}\n",
+        state.failovers.load(Ordering::Relaxed)
+    ));
+    out.push_str(&format!(
+        "flexa_cluster_replications_total {}\n",
+        state.replications.load(Ordering::Relaxed)
+    ));
+    out.push_str(&format!(
+        "flexa_cluster_replication_errors_total {}\n",
+        state.replication_errors.load(Ordering::Relaxed)
+    ));
+    out.push_str(&format!(
+        "flexa_cluster_local_solves_total {}\n",
+        state.local_solves.load(Ordering::Relaxed)
+    ));
     for b in state.backends.iter() {
         out.push_str(&format!(
             "flexa_cluster_backend_placed_total{{backend=\"{}\"}} {}\n",
@@ -777,6 +1116,125 @@ fn aggregate_metrics(state: &ClusterState, req_id: &str) -> String {
         state.started.elapsed().as_secs_f64()
     ));
     out
+}
+
+/// The replication/failover worker: drains the warm-start replication
+/// queue (each task copies one cache entry from its source backend to
+/// the ring successor) and, every ~500 ms, sweeps the job table for
+/// live jobs stranded on unhealthy backends so failover doesn't wait
+/// for the next client poll.
+fn spawn_replicator(
+    state: Arc<ClusterState>,
+    stop: Arc<AtomicBool>,
+) -> std::thread::JoinHandle<()> {
+    std::thread::Builder::new()
+        .name("flexa-cluster-repl".to_string())
+        .spawn(move || {
+            let mut last_sweep = Instant::now();
+            while !stop.load(Ordering::Relaxed) && !crate::http::shutdown_signal_fired() {
+                if last_sweep.elapsed() >= Duration::from_millis(500) {
+                    last_sweep = Instant::now();
+                    failover_sweep(&state);
+                }
+                let task = {
+                    let mut q = state.replication.lock().unwrap();
+                    let now = Instant::now();
+                    match q.iter().position(|t| t.not_before <= now) {
+                        Some(i) => q.remove(i),
+                        None => None,
+                    }
+                };
+                let Some(mut task) = task else {
+                    std::thread::sleep(Duration::from_millis(25));
+                    continue;
+                };
+                if replicate_once(&state, &task) {
+                    state.replications.fetch_add(1, Ordering::Relaxed);
+                    continue;
+                }
+                task.attempts += 1;
+                if task.attempts >= state.config.replicate_attempts.max(1) {
+                    state.replication_errors.fetch_add(1, Ordering::Relaxed);
+                    continue;
+                }
+                task.not_before = Instant::now() + state.config.replicate_backoff;
+                state.replication.lock().unwrap().push_back(task);
+            }
+        })
+        .expect("spawn cluster replicator thread")
+}
+
+/// Re-dispatch every live proxied job stranded on an unhealthy backend.
+fn failover_sweep(state: &ClusterState) {
+    let stranded: Vec<u64> = {
+        let jobs = state.jobs.lock().unwrap();
+        jobs.iter()
+            .filter_map(|(rid, j)| match j {
+                RoutedJob::Proxied(p)
+                    if !p.done && !p.failing && !state.backends[p.backend].healthy() =>
+                {
+                    Some(*rid)
+                }
+                _ => None,
+            })
+            .collect()
+    };
+    for rid in stranded {
+        failover_job(state, rid);
+    }
+}
+
+/// One replication attempt: pull the entry for `task.key` from the
+/// source's snapshot, push it to the ring successor's replicate
+/// endpoint. `false` means "retry later" — most often the entry simply
+/// isn't written yet because the job is still solving.
+fn replicate_once(state: &ClusterState, task: &ReplTask) -> bool {
+    let source = task.source;
+    if !state.backends[source].healthy() {
+        return false;
+    }
+    let Some(target) =
+        state.ring.place(task.key, |i| i != source && state.backends[i].placeable())
+    else {
+        return false;
+    };
+    let _span = crate::obs::span_detail(
+        "replicate.push",
+        &format!(
+            "{}→{} key {:016x}",
+            state.backends[source].spec.id, state.backends[target].spec.id, task.key
+        ),
+    );
+    let path = format!("/v1/cache/snapshot?key={}", task.key);
+    let reply = match proxy_exchange(state, source, "GET", &path, &task.auth, None) {
+        Ok(r) if r.status == 200 => r,
+        _ => return false,
+    };
+    let Ok(snapshot) = Json::parse(&reply.body_str()) else {
+        return false;
+    };
+    let Some(Json::Arr(entries)) = snapshot.get("entries") else {
+        return false;
+    };
+    if entries.is_empty() {
+        return false;
+    }
+    let lines: Vec<String> = entries.iter().map(render_snapshot_entry).collect();
+    let body = format!("{{\"entries\":[{}]}}", lines.join(","));
+    match proxy_exchange(
+        state,
+        target,
+        "POST",
+        "/v1/store/replicate",
+        &task.auth,
+        Some(body.as_bytes()),
+    ) {
+        Ok(r) => r.status == 200,
+        Err(_) => {
+            state.proxy_errors.fetch_add(1, Ordering::Relaxed);
+            false
+        }
+    }
 }
 
 /// The router process: bind, spawn the health prober, serve until the
@@ -833,6 +1291,7 @@ impl ClusterServer {
             state.config.health,
             Arc::clone(&stop),
         );
+        let replicator = spawn_replicator(Arc::clone(&state), Arc::clone(&stop));
         let active = Arc::new(AtomicUsize::new(0));
         let should_stop = || stop.load(Ordering::Relaxed) || crate::http::shutdown_signal_fired();
         while !should_stop() {
@@ -870,7 +1329,7 @@ impl ClusterServer {
         // Cooperative cancellation for any in-flight split jobs, then
         // wait for connection threads to finish.
         for (_, job) in state.jobs.lock().unwrap().iter() {
-            if let RoutedJob::Split(j) = job {
+            if let RoutedJob::Split(j) | RoutedJob::Local(j) = job {
                 j.request_cancel();
             }
         }
@@ -878,6 +1337,7 @@ impl ClusterServer {
             std::thread::sleep(Duration::from_millis(10));
         }
         let _ = prober.join();
+        let _ = replicator.join();
         Ok(())
     }
 
@@ -953,10 +1413,9 @@ fn handle_connection(stream: TcpStream, state: &Arc<ClusterState>, stop: &Atomic
                             return;
                         }
                     }
-                    ClusterRouted::ProxyStream { backend, path, rid, remote } => {
-                        let status = proxy_stream(
-                            state, &req, &req_id, backend, &path, rid, remote, &mut writer, &abort,
-                        );
+                    ClusterRouted::ProxyStream { rid } => {
+                        let status =
+                            proxy_stream(state, &req, &req_id, rid, &mut writer, &abort);
                         state.access_log(&req_id, &req.method, &req.path, status, t0);
                         return;
                     }
@@ -998,78 +1457,269 @@ fn request_id(state: &ClusterState, req: &Request) -> String {
     format!("c{}", state.request_seq.fetch_add(1, Ordering::Relaxed) + 1)
 }
 
-/// Forward a backend SSE stream, rewriting `"job":remote` to the
-/// router's id on every data line. Returns the status to log.
-#[allow(clippy::too_many_arguments)]
-fn proxy_stream(
-    state: &ClusterState,
-    req: &Request,
-    req_id: &str,
-    backend_idx: usize,
-    path: &str,
+/// Terminal frame for an unrecoverable mid-stream failure: tells the
+/// client the stream ended *cleanly* — no torn frame — and where to
+/// resume (re-open `/events`; the replay is deterministic).
+fn retry_hint(writer: &mut TcpStream, rid: u64, sent_events: usize) -> u16 {
+    let _ = write!(
+        writer,
+        "event: retry\nid: {sent_events}\ndata: {{\"job\":{rid},\"events_seen\":{sent_events},\"retry_after_ms\":1000}}\n\n"
+    );
+    let _ = writer.flush();
+    200
+}
+
+/// Why one upstream SSE connection ended.
+enum StreamEnd {
+    /// The terminal `finished` frame was forwarded.
+    Finished,
+    /// The downstream client went away.
+    ClientGone,
+    /// Router shutdown requested.
+    Shutdown,
+    /// Upstream EOF/error (or injected reset) without a terminal frame;
+    /// `progress` says whether any new frame made it through first.
+    Torn { progress: bool },
+}
+
+enum FrameOut {
+    Ok,
+    Finished,
+    ClientGone,
+}
+
+/// Forward one complete SSE frame if the client hasn't seen it.
+/// `seen` is this frame's 0-based event index on the current
+/// connection; the deterministic replay makes it equal to the logical
+/// frame index globally, so anything below `sent_events` was already
+/// delivered on an earlier connection and is skipped. Comment frames
+/// (heartbeats) forward only once the replay has caught up, and the
+/// backend's own shutdown notice never forwards — the router decides
+/// when this stream ends, not the backend.
+fn flush_frame(
+    frame: &[String],
+    writer: &mut TcpStream,
+    from: &str,
+    to: &str,
+    seen: usize,
+    sent_events: &mut usize,
+) -> FrameOut {
+    if frame[0].starts_with(':') {
+        if seen >= *sent_events && !frame[0].starts_with(": shutting down") {
+            for l in frame {
+                if writer.write_all(l.as_bytes()).is_err() {
+                    return FrameOut::ClientGone;
+                }
+            }
+            if writer.write_all(b"\n").is_err() || writer.flush().is_err() {
+                return FrameOut::ClientGone;
+            }
+        }
+        return FrameOut::Ok;
+    }
+    if seen < *sent_events {
+        return FrameOut::Ok;
+    }
+    let finished = frame.iter().any(|l| l.starts_with("event: finished"));
+    for l in frame {
+        let out = if l.starts_with("data:") { l.replacen(from, to, 1) } else { l.clone() };
+        if writer.write_all(out.as_bytes()).is_err() {
+            return FrameOut::ClientGone;
+        }
+    }
+    if writer.write_all(b"\n").is_err() || writer.flush().is_err() {
+        return FrameOut::ClientGone;
+    }
+    *sent_events = seen + 1;
+    if finished {
+        FrameOut::Finished
+    } else {
+        FrameOut::Ok
+    }
+}
+
+/// Pump one upstream SSE connection, forwarding only *complete* frames
+/// the client hasn't seen. A connection that dies mid-frame never leaks
+/// the torn tail downstream: lines buffer into a frame and nothing is
+/// written until the blank separator arrives.
+fn forward_frames(
+    upstream: &mut BufReader<TcpStream>,
+    writer: &mut TcpStream,
     rid: u64,
     remote: u64,
-    writer: &mut TcpStream,
+    sent_events: &mut usize,
     abort: &dyn Fn() -> bool,
-) -> u16 {
-    let target = &state.backends[backend_idx];
-    let opened = backend::open_stream(
-        &target.spec.addr,
-        path,
-        &passthrough_headers(req, req_id),
-        state.config.proxy_timeout,
-    );
-    let (status, _headers, mut upstream) = match opened {
-        Ok(v) => v,
-        Err(e) => {
-            state.proxy_errors.fetch_add(1, Ordering::Relaxed);
-            let _ = Response::error(502, &format!("backend `{}` unreachable: {e:#}", target.spec.id))
-                .with_header("x-flexa-request-id", req_id.to_string())
-                .write_to(writer, false);
-            return 502;
-        }
-    };
-    if status != 200 {
-        // Buffered error from the backend (e.g. 404): read what's there
-        // and pass it along.
-        let mut body = String::new();
-        let _ = upstream.read_line(&mut body);
-        let _ = Response::error(status, body.trim())
-            .with_header("x-flexa-request-id", req_id.to_string())
-            .write_to(writer, false);
-        return status;
-    }
-    let head = format!(
-        "HTTP/1.1 200 OK\r\nContent-Type: text/event-stream\r\nCache-Control: no-cache\r\nx-flexa-request-id: {req_id}\r\nConnection: close\r\n\r\n"
-    );
-    if writer.write_all(head.as_bytes()).is_err() {
-        return 200;
-    }
+) -> StreamEnd {
     let from = format!("\"job\":{remote}");
     let to = format!("\"job\":{rid}");
+    let start = *sent_events;
+    let mut frame: Vec<String> = Vec::new();
     let mut line = String::new();
+    let mut seen = 0usize;
     loop {
         if abort() {
-            let _ = writer.write_all(b": shutting down\n\n");
-            return 200;
+            return StreamEnd::Shutdown;
+        }
+        match crate::chaos::fault("proxy.stream") {
+            crate::chaos::Fault::None => {}
+            crate::chaos::Fault::Reset => {
+                return StreamEnd::Torn { progress: *sent_events > start }
+            }
+            crate::chaos::Fault::Slow(d) => std::thread::sleep(d),
         }
         match upstream.read_line(&mut line) {
-            Ok(0) => return 200,
+            Ok(0) => return StreamEnd::Torn { progress: *sent_events > start },
             Ok(_) => {
-                let out = if line.starts_with("data:") { line.replacen(&from, &to, 1) } else { line.clone() };
-                if writer.write_all(out.as_bytes()).is_err() {
-                    return 200;
+                if !line.ends_with('\n') {
+                    // Torn tail at EOF: never forward a partial line.
+                    return StreamEnd::Torn { progress: *sent_events > start };
                 }
                 if line == "\n" || line == "\r\n" {
-                    let _ = writer.flush();
+                    if frame.is_empty() {
+                        line.clear();
+                        continue;
+                    }
+                    let is_comment = frame[0].starts_with(':');
+                    let outcome = flush_frame(&frame, writer, &from, &to, seen, sent_events);
+                    if !is_comment {
+                        seen += 1;
+                    }
+                    frame.clear();
+                    match outcome {
+                        FrameOut::Ok => {}
+                        FrameOut::Finished => return StreamEnd::Finished,
+                        FrameOut::ClientGone => return StreamEnd::ClientGone,
+                    }
+                } else {
+                    frame.push(line.clone());
                 }
                 line.clear();
             }
             Err(e)
                 if e.kind() == std::io::ErrorKind::WouldBlock
                     || e.kind() == std::io::ErrorKind::TimedOut => {}
-            Err(_) => return 200,
+            Err(_) => return StreamEnd::Torn { progress: *sent_events > start },
         }
+    }
+}
+
+/// Forward the owning backend's SSE stream for router job `rid`,
+/// resuming across backend deaths. On reconnect — same backend, or the
+/// failover successor re-running the job — the deterministic replay
+/// emits the identical logical frame sequence, so already-forwarded
+/// frames are skipped by count and the client sees each event exactly
+/// once. When the stream is unrecoverable after the head has gone out,
+/// the client gets a terminal `retry` hint frame instead of a silent
+/// truncation. Returns the status to log.
+fn proxy_stream(
+    state: &Arc<ClusterState>,
+    req: &Request,
+    req_id: &str,
+    rid: u64,
+    writer: &mut TcpStream,
+    abort: &dyn Fn() -> bool,
+) -> u16 {
+    let mut sent_events = 0usize;
+    let mut head_sent = false;
+    let mut stalls = 0u32;
+    loop {
+        if abort() {
+            if head_sent {
+                let _ = writer.write_all(b": shutting down\n\n");
+                return 200;
+            }
+            let _ = Response::error(503, "router shutting down")
+                .with_header("x-flexa-request-id", req_id.to_string())
+                .write_to(writer, false);
+            return 503;
+        }
+        // Re-resolve the mapping each attempt: a failover (ours or the
+        // sweep's) may have moved the job, or degraded it to local.
+        let Some((idx, remote)) = lookup(state, rid) else {
+            if let Some(job) = lookup_split(state, rid) {
+                if head_sent {
+                    // Mid-stream degrade: the local job's synthesized
+                    // frames don't align with the backend's, so hand the
+                    // client a clean resume point instead of guessing.
+                    return retry_hint(writer, rid, sent_events);
+                }
+                let _ = split_stream(&job, req_id, writer, abort);
+                return 200;
+            }
+            if head_sent {
+                return retry_hint(writer, rid, sent_events);
+            }
+            let _ = Response::error(404, &format!("no such job {rid}"))
+                .with_header("x-flexa-request-id", req_id.to_string())
+                .write_to(writer, false);
+            return 404;
+        };
+        let target = &state.backends[idx];
+        let opened = {
+            let _span = crate::obs::span_detail("cluster.proxy", &target.spec.id);
+            backend::open_stream(
+                &target.spec.addr,
+                &format!("/v1/jobs/{remote}/events"),
+                &passthrough_headers(req, req_id),
+                state.config.timeouts(),
+            )
+        };
+        let mut progressed = false;
+        match opened {
+            Ok((200, _headers, mut upstream)) => {
+                if !head_sent {
+                    let head = format!(
+                        "HTTP/1.1 200 OK\r\nContent-Type: text/event-stream\r\nCache-Control: no-cache\r\nx-flexa-request-id: {req_id}\r\nConnection: close\r\n\r\n"
+                    );
+                    if writer.write_all(head.as_bytes()).is_err() {
+                        return 200;
+                    }
+                    head_sent = true;
+                }
+                match forward_frames(&mut upstream, writer, rid, remote, &mut sent_events, abort)
+                {
+                    StreamEnd::Finished => return 200,
+                    StreamEnd::ClientGone => return 200,
+                    StreamEnd::Shutdown => {
+                        let _ = writer.write_all(b": shutting down\n\n");
+                        return 200;
+                    }
+                    StreamEnd::Torn { progress } => progressed = progress,
+                }
+            }
+            Ok((status, _headers, mut upstream)) if !head_sent && stalls == 0 => {
+                // First attempt, buffered error from the backend (e.g.
+                // 404): pass it through untouched.
+                let mut body = String::new();
+                let _ = upstream.read_line(&mut body);
+                let _ = Response::error(status, body.trim())
+                    .with_header("x-flexa-request-id", req_id.to_string())
+                    .write_to(writer, false);
+                return status;
+            }
+            _ => {
+                state.proxy_errors.fetch_add(1, Ordering::Relaxed);
+            }
+        }
+        stalls = if progressed { 0 } else { stalls + 1 };
+        if stalls >= 2 {
+            // Two fruitless rounds on this mapping: move the job. The
+            // loop re-resolves and resumes from the successor's replay.
+            failover_job(state, rid);
+        }
+        if stalls >= 6 {
+            if head_sent {
+                return retry_hint(writer, rid, sent_events);
+            }
+            let _ = Response::error(
+                502,
+                &format!("backend `{}` unreachable and no failover target", target.spec.id),
+            )
+            .with_header("x-flexa-request-id", req_id.to_string())
+            .write_to(writer, false);
+            return 502;
+        }
+        std::thread::sleep(Duration::from_millis(50));
     }
 }
 
@@ -1177,11 +1827,58 @@ mod tests {
         // still render.
         let state = ClusterState::new(
             vec![BackendSpec { id: "dead".into(), addr: "127.0.0.1:1".into() }],
-            ClusterConfig { proxy_timeout: Duration::from_millis(200), ..ClusterConfig::default() },
+            ClusterConfig {
+                connect_timeout: Duration::from_millis(100),
+                proxy_timeout: Duration::from_millis(200),
+                ..ClusterConfig::default()
+            },
         );
         let text = aggregate_metrics(&state, "t");
         assert!(text.contains("flexa_cluster_backends_total 1"), "{text}");
         assert!(text.contains("flexa_cluster_scrape_errors_total 1"), "{text}");
+        assert!(text.contains("flexa_cluster_failovers_total 0"), "{text}");
+        assert!(text.contains("flexa_cluster_replications_total 0"), "{text}");
+        assert!(text.contains("flexa_cluster_replication_errors_total 0"), "{text}");
+        assert!(text.contains("flexa_cluster_local_solves_total 0"), "{text}");
+    }
+
+    #[test]
+    fn submit_degrades_to_a_router_local_solve_when_nothing_is_placeable() {
+        let _chaos = crate::chaos::scoped_off();
+        let config = ClusterConfig {
+            connect_timeout: Duration::from_millis(100),
+            proxy_timeout: Duration::from_millis(200),
+            ..ClusterConfig::default()
+        };
+        let state = Arc::new(ClusterState::new(
+            vec![BackendSpec { id: "dead".into(), addr: "127.0.0.1:1".into() }],
+            config,
+        ));
+        let req = Request {
+            method: "POST".into(),
+            path: "/v1/jobs".into(),
+            query: Vec::new(),
+            headers: Vec::new(),
+            body: br#"{"problem":"lasso","rows":10,"cols":20,"seed":3,"algo":"fpa","max_iters":5,"warm_start":false,"tag":"deg"}"#.to_vec(),
+            keep_alive: true,
+        };
+        let resp = submit(&state, &req, "t");
+        let body = String::from_utf8_lossy(&resp.body).to_string();
+        assert_eq!(resp.status, 202, "{body}");
+        assert!(body.contains("\"backend\":\"router-local\""), "{body}");
+        let rid = Json::parse(&body).unwrap().get("job").and_then(Json::as_f64).unwrap() as u64;
+        let job = lookup_split(&state, rid).expect("degraded to a local job");
+        for _ in 0..600 {
+            if job.finished() {
+                break;
+            }
+            std::thread::sleep(Duration::from_millis(10));
+        }
+        assert!(job.finished(), "local solve must finish");
+        let status = job.status();
+        assert_eq!(status.solver, "local/fpa");
+        assert!(matches!(status.outcome, Some(JobOutcome::Done { .. })));
+        assert_eq!(state.local_solves.load(Ordering::Relaxed), 1);
     }
 
     #[test]

@@ -146,12 +146,30 @@ pub struct SplitJob {
     pub tenant: String,
     pub problem: String,
     pub procs: usize,
+    /// Solver label reported in status JSON (`admm-split/P` for true
+    /// split jobs, `local/NAME` for router-local degraded solves).
+    pub solver: String,
     pub cancel: AtomicBool,
     inner: Mutex<SplitInner>,
 }
 
 impl SplitJob {
     pub fn new(id: u64, tag: String, tenant: String, problem: String, procs: usize) -> Self {
+        let solver = format!("admm-split/{procs}");
+        Self::labeled(id, tag, tenant, problem, procs, solver)
+    }
+
+    /// Like [`new`](Self::new) but with an explicit solver label — used
+    /// by the router's all-backends-down local fallback, which reuses
+    /// this job shape for an in-process solve.
+    pub fn labeled(
+        id: u64,
+        tag: String,
+        tenant: String,
+        problem: String,
+        procs: usize,
+        solver: String,
+    ) -> Self {
         let queued = format!("{{\"event\":\"queued\",\"job\":{id},\"tag\":\"{}\"}}", esc(&tag));
         Self {
             id,
@@ -159,6 +177,7 @@ impl SplitJob {
             tenant,
             problem,
             procs,
+            solver,
             cancel: AtomicBool::new(false),
             inner: Mutex::new(SplitInner {
                 phase: Phase::Queued,
@@ -178,7 +197,7 @@ impl SplitJob {
             tag: self.tag.clone(),
             tenant: self.tenant.clone(),
             problem: self.problem.clone(),
-            solver: format!("admm-split/{}", self.procs),
+            solver: self.solver.clone(),
             state: match inner.phase {
                 Phase::Queued => JobState::Queued,
                 Phase::Running => JobState::Running,
@@ -209,11 +228,15 @@ impl SplitJob {
         true
     }
 
-    fn push_event(&self, name: &str, payload: String) {
+    pub(crate) fn push_event(&self, name: &str, payload: String) {
         self.inner.lock().unwrap().events.push((name.to_string(), payload));
     }
 
-    fn finish(&self, outcome: JobOutcome, x: Option<Vec<f64>>) {
+    pub(crate) fn mark_running(&self) {
+        self.inner.lock().unwrap().phase = Phase::Running;
+    }
+
+    pub(crate) fn finish(&self, outcome: JobOutcome, x: Option<Vec<f64>>) {
         let finished = format!("{{\"event\":\"finished\",\"job\":{},{}}}", self.id, outcome_fields(&outcome));
         let mut inner = self.inner.lock().unwrap();
         inner.phase = Phase::Finished;

@@ -27,6 +27,8 @@ pub struct HttpMetrics {
     pub get_trace: AtomicU64,
     /// `GET`/`POST /v1/cache/snapshot` (cluster drain handoff).
     pub cache_snapshot: AtomicU64,
+    /// `POST /v1/store/replicate` (ring-successor warm-start copies).
+    pub store_replicate: AtomicU64,
     pub healthz: AtomicU64,
     pub metrics: AtomicU64,
     /// Requests that matched no route (404s).
@@ -39,7 +41,7 @@ pub struct HttpMetrics {
 
 impl HttpMetrics {
     /// `(label, count)` per endpoint, for the labeled request family.
-    fn endpoint_counts(&self) -> [(&'static str, u64); 11] {
+    fn endpoint_counts(&self) -> [(&'static str, u64); 12] {
         let get = |c: &AtomicU64| c.load(Ordering::Relaxed);
         [
             ("post_jobs", get(&self.post_jobs)),
@@ -50,6 +52,7 @@ impl HttpMetrics {
             ("get_profile", get(&self.get_profile)),
             ("get_trace", get(&self.get_trace)),
             ("cache_snapshot", get(&self.cache_snapshot)),
+            ("store_replicate", get(&self.store_replicate)),
             ("healthz", get(&self.healthz)),
             ("metrics", get(&self.metrics)),
             ("not_found", get(&self.not_found)),
@@ -224,8 +227,14 @@ pub fn render_prometheus(
         counter(
             &mut s,
             "flexa_store_records_skipped_total",
-            "Corrupt/truncated store records detected (and skipped) at startup.",
+            "Torn/truncated store tails detected (and trimmed) at startup.",
             st.records_skipped as u64,
+        );
+        counter(
+            &mut s,
+            "flexa_store_corrupt_total",
+            "Checksum-mismatched store records skipped at startup (later records still loaded).",
+            st.records_corrupt as u64,
         );
         counter(&mut s, "flexa_store_appends_total", "Store records appended.", st.appends);
         counter(&mut s, "flexa_store_compactions_total", "Store compaction rewrites.", st.compactions);
@@ -290,9 +299,11 @@ mod tests {
         let store = StoreStats {
             entries_loaded: 2,
             records_skipped: 1,
+            records_corrupt: 4,
             appends: 9,
             compactions: 1,
             bytes: 4096,
+            ..StoreStats::default()
         };
         let text = render_prometheus(&http, &sched, &tenants, &cache, Some(store), 12.5);
         for needle in [
@@ -319,6 +330,7 @@ mod tests {
             "flexa_cache_lipschitz_reuses_total 4",
             "flexa_store_entries_loaded_total 2",
             "flexa_store_records_skipped_total 1",
+            "flexa_store_corrupt_total 4",
             "flexa_store_appends_total 9",
             "flexa_store_compactions_total 1",
             "flexa_store_bytes 4096",

@@ -133,6 +133,11 @@ pub struct ServerState {
     /// Monotonic request-id counter; each request's id is echoed back
     /// as `x-flexa-request-id` and stamped on its access-log line.
     pub request_seq: std::sync::atomic::AtomicU64,
+    /// `x-flexa-idempotency-key` → (job id, tenant): duplicate-submit
+    /// suppression for cluster failover re-dispatch. Bounded by clearing
+    /// wholesale at capacity — a dropped key falls through to a fresh
+    /// submit (at-least-once, just un-deduped), never to a wrong reply.
+    idempotency: Mutex<std::collections::HashMap<String, (u64, String)>>,
 }
 
 impl ServerState {
@@ -147,6 +152,23 @@ impl ServerState {
             self.scheduler.store_stats(),
             self.started.elapsed().as_secs_f64(),
         )
+    }
+
+    /// The job a previously seen idempotency key mapped to, if that job
+    /// is still known to the scheduler and owned by the same tenant.
+    pub fn idempotent_replay(&self, key: &str, tenant: &str) -> Option<u64> {
+        let map = self.idempotency.lock().unwrap_or_else(std::sync::PoisonError::into_inner);
+        let (id, owner) = map.get(key)?;
+        (owner == tenant && self.scheduler.status(*id).is_some()).then_some(*id)
+    }
+
+    /// Remember an idempotency key after a successful submit.
+    pub fn record_idempotency(&self, key: String, id: u64, tenant: &str) {
+        let mut map = self.idempotency.lock().unwrap_or_else(std::sync::PoisonError::into_inner);
+        if map.len() >= 4096 {
+            map.clear();
+        }
+        map.insert(key, (id, tenant.to_string()));
     }
 
     /// One structured access-log line per request, on stderr. The id is
@@ -220,6 +242,7 @@ impl HttpServer {
                 config,
                 started: Instant::now(),
                 request_seq: std::sync::atomic::AtomicU64::new(0),
+                idempotency: Mutex::new(std::collections::HashMap::new()),
             }),
             stop: Arc::new(AtomicBool::new(false)),
         })

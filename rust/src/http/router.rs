@@ -9,10 +9,17 @@
 //! | GET    | `/v1/debug/trace`      | Chrome trace-event JSON (`?since_ms=N`)   |
 //! | DELETE | `/v1/jobs/{id}`        | cooperative cancellation                  |
 //! | GET    | `/v1/registry`         | registered problems/solvers               |
-//! | GET    | `/v1/cache/snapshot`   | warm-start cache export (drain handoff)   |
+//! | GET    | `/v1/cache/snapshot`   | warm-start cache export (drain handoff; `?key=K` filters) |
 //! | POST   | `/v1/cache/snapshot`   | warm-start cache import                   |
+//! | POST   | `/v1/store/replicate`  | warm-start replication from a ring predecessor |
 //! | GET    | `/healthz`             | liveness                                  |
 //! | GET    | `/metrics`             | Prometheus text format                    |
+//!
+//! Submissions may carry an `x-flexa-idempotency-key` header (the
+//! cluster router does, on failover re-dispatch): a repeated key whose
+//! original job is still known answers `202` with the *original* job id
+//! instead of enqueueing a duplicate, so a slow-but-alive backend
+//! receiving the same job twice runs it once.
 //!
 //! Job visibility is tenant-scoped: `GET`/`DELETE /v1/jobs/{id}` and the
 //! SSE stream resolve the requesting tenant first and answer `404` for
@@ -239,6 +246,10 @@ pub fn route(state: &ServerState, req: &Request) -> Routed {
             m.cache_snapshot.fetch_add(1, Ordering::Relaxed);
             respond(cache_snapshot_post(state, req))
         }
+        ("POST", ["v1", "store", "replicate"]) => {
+            m.store_replicate.fetch_add(1, Ordering::Relaxed);
+            respond(store_replicate(state, req))
+        }
         // Known paths with the wrong method get a 405 + Allow.
         (_, ["healthz"] | ["metrics"] | ["v1", "registry"]) => {
             respond(method_not_allowed("GET"))
@@ -249,6 +260,7 @@ pub fn route(state: &ServerState, req: &Request) -> Routed {
         (_, ["v1", "jobs", _, "profile"]) => respond(method_not_allowed("GET")),
         (_, ["v1", "debug", "trace"]) => respond(method_not_allowed("GET")),
         (_, ["v1", "cache", "snapshot"]) => respond(method_not_allowed("GET, POST")),
+        (_, ["v1", "store", "replicate"]) => respond(method_not_allowed("POST")),
         _ => {
             m.not_found.fetch_add(1, Ordering::Relaxed);
             respond(Response::error(404, &format!("no route for {} {}", req.method, req.path)))
@@ -278,6 +290,7 @@ pub fn endpoint_label(req: &Request) -> &'static str {
         ("GET", ["v1", "jobs", _, "profile"]) => "get_profile",
         ("GET", ["v1", "debug", "trace"]) => "get_trace",
         ("GET" | "POST", ["v1", "cache", "snapshot"]) => "cache_snapshot",
+        ("POST", ["v1", "store", "replicate"]) => "store_replicate",
         _ => "other",
     }
 }
@@ -352,6 +365,17 @@ fn visible_status(
     Ok(state.scheduler.status(id).filter(|s| s.tenant == tenant.id))
 }
 
+/// A well-formed `x-flexa-idempotency-key`: bounded length, conservative
+/// charset. Malformed keys are ignored (the submit proceeds un-deduped)
+/// rather than rejected — the header is a router-internal optimization.
+fn idempotency_key(req: &Request) -> Option<String> {
+    let key = req.header("x-flexa-idempotency-key")?.trim();
+    let ok = !key.is_empty()
+        && key.len() <= 128
+        && key.chars().all(|c| c.is_ascii_alphanumeric() || "-_.:".contains(c));
+    ok.then(|| key.to_string())
+}
+
 fn parse_id(raw: &str) -> Result<u64, Response> {
     raw.parse::<u64>()
         .map_err(|_| Response::error(400, &format!("job id must be an integer, got `{raw}`")))
@@ -414,10 +438,28 @@ fn submit(state: &ServerState, req: &Request) -> Response {
     if let Err(e) = registry.build_solver(&job.solver) {
         return Response::error(400, &format!("{e:#}"));
     }
+    // Idempotent replay: a re-dispatched submission whose original job
+    // this server still knows answers with the original id — the job
+    // runs once even if the cluster router sends it twice.
+    let idem = idempotency_key(req);
+    if let Some(key) = &idem {
+        if let Some(prior) = state.idempotent_replay(key, &job.tenant) {
+            return Response::json(
+                202,
+                format!(
+                    "{{\"job\":{prior},\"tenant\":\"{}\",\"status_url\":\"/v1/jobs/{prior}\",\"events_url\":\"/v1/jobs/{prior}/events\",\"idempotent\":true}}",
+                    esc(&job.tenant)
+                ),
+            );
+        }
+    }
     let tenant_id = job.tenant.clone();
     match state.scheduler.try_submit(job) {
         Ok(handle) => {
             let id = handle.id();
+            if let Some(key) = idem {
+                state.record_idempotency(key, id, &tenant_id);
+            }
             Response::json(
                 202,
                 format!(
@@ -495,21 +537,34 @@ pub fn status_json(status: &JobStatus, include_x: bool) -> String {
     s
 }
 
-/// `GET /v1/cache/snapshot`: every live warm-start entry. Keys render as
-/// *strings* — our JSON numbers are `f64`-backed, and a 64-bit FNV key
-/// above 2^53 would silently lose bits as a number. Floats render in
-/// shortest round-trip form, so a snapshot imported on another node
-/// reproduces bit-identical warm starts.
+/// `GET /v1/cache/snapshot`: every live warm-start entry, or just one
+/// with `?key=K` (the cluster replicator pulls single entries). Keys
+/// render as *strings* — our JSON numbers are `f64`-backed, and a
+/// 64-bit FNV key above 2^53 would silently lose bits as a number.
+/// Floats render in shortest round-trip form, so a snapshot imported on
+/// another node reproduces bit-identical warm starts.
 fn cache_snapshot_get(state: &ServerState, req: &Request) -> Response {
     if let Err(resp) = resolve_tenant(state, req) {
         return resp;
     }
+    let key_filter = match req.query_value("key") {
+        None => None,
+        Some(v) => match v.parse::<u64>() {
+            Ok(k) => Some(k),
+            Err(_) => return Response::error(400, &format!("`key` must be a u64, got `{v}`")),
+        },
+    };
     let entries = state.scheduler.cache_snapshot();
     let mut s = String::from("{\"entries\":[");
-    for (i, (key, x, tau, lipschitz)) in entries.iter().enumerate() {
-        if i > 0 {
+    let mut first = true;
+    for (key, x, tau, lipschitz) in entries.iter() {
+        if key_filter.is_some_and(|k| k != *key) {
+            continue;
+        }
+        if !first {
             s.push(',');
         }
+        first = false;
         s.push_str(&format!("{{\"key\":\"{key}\",\"x\":["));
         for (j, v) in x.iter().enumerate() {
             if j > 0 {
@@ -538,16 +593,52 @@ fn cache_snapshot_post(state: &ServerState, req: &Request) -> Response {
     if let Err(resp) = resolve_tenant(state, req) {
         return resp;
     }
-    let text = match std::str::from_utf8(&req.body) {
+    let entries = match parse_snapshot_entries(&req.body) {
+        Ok(e) => e,
+        Err(r) => return r,
+    };
+    let imported = state.scheduler.cache_import(&entries);
+    Response::json(200, format!("{{\"imported\":{imported}}}"))
+}
+
+/// `POST /v1/store/replicate`: the receiving side of ring-successor
+/// warm-start replication. The payload is the snapshot-import grammar,
+/// but the endpoint is separate so replication traffic gets its own
+/// request counter and `replicate.import` span — a dashboard can tell a
+/// drain handoff from steady-state replication.
+fn store_replicate(state: &ServerState, req: &Request) -> Response {
+    if let Err(resp) = resolve_tenant(state, req) {
+        return resp;
+    }
+    let entries = match parse_snapshot_entries(&req.body) {
+        Ok(e) => e,
+        Err(r) => return r,
+    };
+    let _span = crate::obs::span_detail("replicate.import", &format!("{} entries", entries.len()));
+    let imported = state.scheduler.cache_import(&entries);
+    Response::json(200, format!("{{\"imported\":{imported}}}"))
+}
+
+/// Parse a snapshot/replication body into cache entries. Accepts keys as
+/// decimal strings (canonical) or, for hand-written payloads with small
+/// keys, numbers.
+#[allow(clippy::type_complexity)]
+fn parse_snapshot_entries(
+    body: &[u8],
+) -> Result<Vec<(u64, Vec<f64>, Option<f64>, Option<f64>)>, Response> {
+    let text = match std::str::from_utf8(body) {
         Ok(t) => t,
-        Err(_) => return Response::error(400, "request body must be UTF-8 JSON"),
+        Err(_) => return Err(Response::error(400, "request body must be UTF-8 JSON")),
     };
     let doc = match Json::parse(text.trim()) {
         Ok(d) => d,
-        Err(e) => return Response::error(400, &format!("{e:#}")),
+        Err(e) => return Err(Response::error(400, &format!("{e:#}"))),
     };
     let Some(Json::Arr(items)) = doc.get("entries") else {
-        return Response::error(400, "body must be {\"entries\":[{\"key\":\"..\",\"x\":[..]},..]}");
+        return Err(Response::error(
+            400,
+            "body must be {\"entries\":[{\"key\":\"..\",\"x\":[..]},..]}",
+        ));
     };
     let mut entries = Vec::with_capacity(items.len());
     for (i, item) in items.iter().enumerate() {
@@ -555,22 +646,27 @@ fn cache_snapshot_post(state: &ServerState, req: &Request) -> Response {
             Some(Json::Str(s)) => match s.parse::<u64>() {
                 Ok(k) => k,
                 Err(_) => {
-                    return Response::error(400, &format!("entry {i}: key `{s}` is not a u64"))
+                    return Err(Response::error(400, &format!("entry {i}: key `{s}` is not a u64")))
                 }
             },
             Some(Json::Num(v)) if *v >= 0.0 && v.fract() == 0.0 && *v < 9.007_199_254_740_992e15 => {
                 *v as u64
             }
-            _ => return Response::error(400, &format!("entry {i}: missing/invalid `key`")),
+            _ => return Err(Response::error(400, &format!("entry {i}: missing/invalid `key`"))),
         };
         let Some(Json::Arr(raw_x)) = item.get("x") else {
-            return Response::error(400, &format!("entry {i}: missing `x` array"));
+            return Err(Response::error(400, &format!("entry {i}: missing `x` array")));
         };
         let mut x = Vec::with_capacity(raw_x.len());
         for v in raw_x {
             match v.as_f64() {
                 Some(f) if f.is_finite() => x.push(f),
-                _ => return Response::error(400, &format!("entry {i}: `x` must be finite numbers")),
+                _ => {
+                    return Err(Response::error(
+                        400,
+                        &format!("entry {i}: `x` must be finite numbers"),
+                    ))
+                }
             }
         }
         let scalar = |name: &str| -> Result<Option<f64>, Response> {
@@ -585,18 +681,11 @@ fn cache_snapshot_post(state: &ServerState, req: &Request) -> Response {
                 },
             }
         };
-        let tau = match scalar("tau") {
-            Ok(v) => v,
-            Err(r) => return r,
-        };
-        let lipschitz = match scalar("lipschitz") {
-            Ok(v) => v,
-            Err(r) => return r,
-        };
+        let tau = scalar("tau")?;
+        let lipschitz = scalar("lipschitz")?;
         entries.push((key, x, tau, lipschitz));
     }
-    let imported = state.scheduler.cache_import(&entries);
-    Response::json(200, format!("{{\"imported\":{imported}}}"))
+    Ok(entries)
 }
 
 fn registry_json(state: &ServerState) -> String {

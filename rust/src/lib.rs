@@ -68,10 +68,14 @@
 //! trace spans in bounded per-thread rings (`GET /v1/debug/trace`,
 //! `flexa trace`), production latency histograms in `/metrics`, and
 //! per-job phase profiles (`GET /v1/jobs/{id}/profile`).
+//! The [`chaos`] layer proves the failure paths: seeded, deterministic
+//! fault injection (`FLEXA_CHAOS=<seed>`) behind zero-cost hooks in the
+//! backend client and warm-start store loader.
 
 pub mod algos;
 pub mod api;
 pub mod bench;
+pub mod chaos;
 pub mod cli;
 pub mod cluster;
 pub mod config;

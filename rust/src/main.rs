@@ -393,6 +393,10 @@ fn cmd_cluster(args: &[String]) -> anyhow::Result<()> {
         .opt("failure-threshold", Some("3"), "consecutive probe failures before a backend stops receiving placements")
         .opt("split-threshold", Some("4096"), "columns at/above which admm jobs split block-wise across backends (0 disables splitting)")
         .opt("max-conns", Some("64"), "concurrent router connections")
+        .opt("connect-timeout-ms", Some("2000"), "TCP connect timeout for router→backend requests, milliseconds")
+        .opt("proxy-timeout-ms", Some("30000"), "read/write timeout for router→backend requests, milliseconds")
+        .opt("replicate-backoff-ms", Some("250"), "retry backoff for warm-start replication to ring successors, milliseconds")
+        .flag("no-local-fallback", "return 503 instead of solving on the router when every backend is down")
         .flag("no-access-log", "suppress the per-request access-log lines");
     let p = cmd.parse(args)?;
 
@@ -424,6 +428,10 @@ fn cmd_cluster(args: &[String]) -> anyhow::Result<()> {
             ..SplitConfig::default()
         },
         max_connections: p.usize("max-conns")?.max(1),
+        connect_timeout: Duration::from_millis(p.u64("connect-timeout-ms")?.max(50)),
+        proxy_timeout: Duration::from_millis(p.u64("proxy-timeout-ms")?.max(50)),
+        replicate_backoff: Duration::from_millis(p.u64("replicate-backoff-ms")?.max(10)),
+        local_fallback: !p.flag("no-local-fallback"),
         access_log: !p.flag("no-access-log"),
         ..ClusterConfig::default()
     };

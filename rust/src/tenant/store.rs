@@ -24,11 +24,14 @@
 //!
 //! Records append in insert order; on load, later records for the same
 //! key replace earlier ones (the log is a history, the cache keeps the
-//! newest). Any malformed tail — bad magic, truncated record, checksum
-//! mismatch, inconsistent payload length — is *detected and skipped,
-//! never crashed on*: loading stops at the last good record, counts the
-//! damage in [`StoreStats::records_skipped`], and truncates the file
-//! back to the good prefix so future appends stay consistent.
+//! newest). Damage is *detected and skipped, never crashed on*, in two
+//! flavors. A structurally intact record whose checksum or payload is
+//! wrong is skipped and counted in [`StoreStats::records_corrupt`]
+//! while the scan continues — one flipped byte must not discard every
+//! later record — and the file is then rewritten from the surviving
+//! records. A malformed tail — bad magic, torn frame, length overrun —
+//! stops the scan, is counted in [`StoreStats::records_skipped`], and
+//! is truncated away so future appends stay consistent.
 //!
 //! ## Compaction
 //!
@@ -105,8 +108,11 @@ const FRAME: usize = 4 + 8;
 pub struct StoreStats {
     /// Entries loaded into the cache at startup.
     pub entries_loaded: usize,
-    /// Malformed/corrupt records detected (and skipped) at startup.
+    /// Torn/malformed tails detected (and trimmed away) at startup.
     pub records_skipped: usize,
+    /// Intact-frame records with a bad checksum or undecodable payload,
+    /// skipped at startup while later records kept loading.
+    pub records_corrupt: usize,
     /// Records appended by this process.
     pub appends: u64,
     /// `fdatasync` calls issued by the append path (per [`FsyncPolicy`]).
@@ -195,12 +201,14 @@ impl WarmStartStore {
     /// intact record into `cache` — later records win per key. Corrupt
     /// or truncated tails are skipped, counted, and truncated away.
     pub fn open(path: &Path, max_bytes: u64, cache: &mut WarmStartCache) -> Result<Self> {
-        let data = match std::fs::read(path) {
+        let mut data = match std::fs::read(path) {
             Ok(d) => d,
             Err(e) if e.kind() == std::io::ErrorKind::NotFound => Vec::new(),
             Err(e) => return Err(e).with_context(|| format!("read warm-start store `{}`", path.display())),
         };
+        crate::chaos::mangle_store(&mut data);
         let mut stats = StoreStats::default();
+        let mut records: Vec<Record> = Vec::new();
         let mut good = 0usize;
         if data.is_empty() {
             // Fresh store: nothing to replay.
@@ -224,18 +232,20 @@ impl WarmStartStore {
                     break;
                 }
                 let payload = &data[off + FRAME..off + FRAME + len];
-                if fnv64(payload) != checksum {
-                    stats.records_skipped += 1;
-                    break;
+                let rec = if fnv64(payload) == checksum { decode_payload(payload) } else { None };
+                match rec {
+                    Some(rec) => records.push(rec),
+                    None => {
+                        // The frame itself is intact (the length fits),
+                        // so the scan can step over the damage and keep
+                        // loading every later record.
+                        stats.records_corrupt += 1;
+                    }
                 }
-                let Some(rec) = decode_payload(payload) else {
-                    stats.records_skipped += 1;
-                    break;
-                };
-                cache.insert(rec.key, rec.x, rec.tau, rec.lipschitz);
-                stats.entries_loaded += 1;
                 off += FRAME + len;
-                good = off;
+                if stats.records_corrupt == 0 {
+                    good = off;
+                }
             }
         }
         let file = OpenOptions::new()
@@ -243,10 +253,38 @@ impl WarmStartStore {
             .write(true)
             .open(path)
             .with_context(|| format!("open warm-start store `{}`", path.display()))?;
-        // Truncate away any malformed tail (or a wholly-corrupt file) so
-        // appends resume from a consistent prefix.
-        file.set_len(good as u64)
-            .with_context(|| format!("truncate warm-start store `{}`", path.display()))?;
+        if stats.records_corrupt > 0 {
+            // Corrupt records mid-log: rewrite the file from the records
+            // that survived, so the on-disk image is clean again and the
+            // damage is not re-counted on every restart.
+            let mut img = Vec::with_capacity(data.len());
+            img.extend_from_slice(MAGIC);
+            for rec in &records {
+                let payload = encode_payload(rec.key, &rec.x, rec.tau, rec.lipschitz);
+                img.extend_from_slice(&(payload.len() as u32).to_le_bytes());
+                img.extend_from_slice(&fnv64(&payload).to_le_bytes());
+                img.extend_from_slice(&payload);
+            }
+            (|| -> std::io::Result<()> {
+                use std::io::Seek;
+                file.set_len(0)?;
+                let mut f = &file;
+                f.seek(std::io::SeekFrom::Start(0))?;
+                f.write_all(&img)?;
+                f.flush()
+            })()
+            .with_context(|| format!("rewrite warm-start store `{}`", path.display()))?;
+            good = img.len();
+        } else {
+            // Truncate away any malformed tail (or a wholly-corrupt
+            // file) so appends resume from a consistent prefix.
+            file.set_len(good as u64)
+                .with_context(|| format!("truncate warm-start store `{}`", path.display()))?;
+        }
+        for rec in records {
+            cache.insert(rec.key, rec.x, rec.tau, rec.lipschitz);
+            stats.entries_loaded += 1;
+        }
         let mut store = Self {
             path: path.to_path_buf(),
             file,
@@ -384,6 +422,7 @@ mod tests {
 
     #[test]
     fn roundtrip_persists_entries_across_reopen() {
+        let _chaos = crate::chaos::scoped_off();
         let path = tmp("roundtrip");
         {
             let mut cache = WarmStartCache::new(1 << 20);
@@ -410,6 +449,7 @@ mod tests {
 
     #[test]
     fn truncated_tail_is_skipped_and_trimmed() {
+        let _chaos = crate::chaos::scoped_off();
         let path = tmp("truncated");
         {
             let mut cache = WarmStartCache::new(1 << 20);
@@ -442,13 +482,15 @@ mod tests {
 
     #[test]
     fn checksum_mismatch_and_bad_magic_are_detected() {
+        let _chaos = crate::chaos::scoped_off();
         let path = tmp("corrupt");
         {
             let mut cache = WarmStartCache::new(1 << 20);
             let mut store = WarmStartStore::open(&path, 1 << 20, &mut cache).unwrap();
             store.append(1, &[1.0], None, None).unwrap();
         }
-        // Flip one payload byte: checksum must catch it.
+        // Flip one payload byte: checksum must catch it, as a *corrupt*
+        // record (the frame is intact), not a torn tail.
         let mut data = std::fs::read(&path).unwrap();
         let last = data.len() - 1;
         data[last] ^= 0xFF;
@@ -456,8 +498,15 @@ mod tests {
         let mut cache = WarmStartCache::new(1 << 20);
         let store = WarmStartStore::open(&path, 1 << 20, &mut cache).unwrap();
         assert_eq!(store.stats().entries_loaded, 0);
-        assert_eq!(store.stats().records_skipped, 1);
+        assert_eq!(store.stats().records_corrupt, 1);
+        assert_eq!(store.stats().records_skipped, 0);
         assert!(cache.is_empty());
+        drop(store);
+        // The rewrite scrubbed the damage: a reopen is clean.
+        let mut cache = WarmStartCache::new(1 << 20);
+        let store = WarmStartStore::open(&path, 1 << 20, &mut cache).unwrap();
+        assert_eq!(store.stats().records_corrupt, 0);
+        assert_eq!(store.stats().records_skipped, 0);
         drop(store);
         // A file that is not a store at all: skipped, then rebuilt.
         std::fs::write(&path, b"this is not a warm-start store").unwrap();
@@ -469,6 +518,48 @@ mod tests {
         let mut cache = WarmStartCache::new(1 << 20);
         let store = WarmStartStore::open(&path, 1 << 20, &mut cache).unwrap();
         assert_eq!((store.stats().entries_loaded, store.stats().records_skipped), (1, 0));
+        std::fs::remove_file(&path).ok();
+    }
+
+    /// A flipped byte mid-log loses exactly one record: everything
+    /// after the corrupt frame still loads, the damage is counted in
+    /// `records_corrupt`, and the rewrite leaves a clean file behind.
+    #[test]
+    fn corrupt_record_mid_log_is_skipped_not_fatal() {
+        let _chaos = crate::chaos::scoped_off();
+        let path = tmp("midlog");
+        {
+            let mut cache = WarmStartCache::new(1 << 20);
+            let mut store = WarmStartStore::open(&path, 1 << 20, &mut cache).unwrap();
+            for key in 1..=3u64 {
+                store.append(key, &[key as f64], None, None).unwrap();
+            }
+        }
+        // Layout: 8-byte magic, then 49-byte records (12 frame + 37
+        // payload). Flip a payload byte inside the *second* record.
+        let mut data = std::fs::read(&path).unwrap();
+        assert_eq!(data.len(), 8 + 3 * 49, "layout assumption");
+        data[8 + 49 + FRAME + 2] ^= 0x40;
+        std::fs::write(&path, &data).unwrap();
+
+        let mut cache = WarmStartCache::new(1 << 20);
+        let mut store = WarmStartStore::open(&path, 1 << 20, &mut cache).unwrap();
+        assert_eq!(store.stats().entries_loaded, 2, "records 1 and 3 survive");
+        assert_eq!(store.stats().records_corrupt, 1);
+        assert_eq!(store.stats().records_skipped, 0);
+        assert!(cache.lookup(1).is_some());
+        assert!(cache.lookup(2).is_none(), "the corrupt record is gone");
+        assert_eq!(*cache.lookup(3).unwrap().x0, vec![3.0]);
+
+        // Appends after the rewrite land on a consistent log.
+        store.append(4, &[4.0], None, None).unwrap();
+        drop(store);
+        let mut cache = WarmStartCache::new(1 << 20);
+        let store = WarmStartStore::open(&path, 1 << 20, &mut cache).unwrap();
+        assert_eq!(store.stats().entries_loaded, 3);
+        assert_eq!(store.stats().records_corrupt, 0);
+        assert_eq!(store.stats().records_skipped, 0);
+        assert!(cache.lookup(4).is_some());
         std::fs::remove_file(&path).ok();
     }
 
@@ -490,6 +581,7 @@ mod tests {
     /// issues no syncs, `always` one per append, `interval:N` one per N.
     #[test]
     fn append_path_honors_the_fsync_policy() {
+        let _chaos = crate::chaos::scoped_off();
         let path = tmp("fsync");
         let mut cache = WarmStartCache::new(1 << 20);
         let mut store = WarmStartStore::open(&path, 1 << 20, &mut cache).unwrap();
@@ -519,6 +611,7 @@ mod tests {
 
     #[test]
     fn compaction_rewrites_to_the_live_set() {
+        let _chaos = crate::chaos::scoped_off();
         let path = tmp("compact");
         let mut cache = WarmStartCache::new(1 << 20);
         let mut store = WarmStartStore::open(&path, 256, &mut cache).unwrap();

@@ -1,0 +1,500 @@
+//! Crash-tolerance tests for `flexa::cluster` under `flexa::chaos`:
+//! seeded fault injection, backend kills, and the invariants the router
+//! must hold through all of it.
+//!
+//! Pinned behaviors:
+//! * **Replicated warm starts** — a λ-sweep's cache entry replicates to
+//!   the ring successor; killing the owner mid-sweep keeps the chain
+//!   warm *and bit-identical* to an uninterrupted single-node sweep.
+//! * **Job failover** — a job whose backend dies re-dispatches to the
+//!   successor and finishes bit-identical to the fault-free golden run,
+//!   with `flexa_cluster_failovers_total` and a `failover.redispatch`
+//!   span accounting for the move.
+//! * **Exactly-once SSE** — killing the owner while a client streams
+//!   `/events` never yields a torn frame or a duplicated event: frame
+//!   ids stay strictly increasing and `finished` arrives exactly once.
+//! * **Local degradation** — with every backend down the router solves
+//!   the job itself and reports `backend: router-local`.
+//! * **No lost jobs under chaos** — with seeded connection faults on
+//!   every router→backend exchange, every accepted job still completes
+//!   with the golden bits. Seeds come from `FLEXA_CHAOS` when set (CI
+//!   runs two fixed seeds), with built-in defaults otherwise.
+
+use flexa::algos::SolveOptions;
+use flexa::api::{ProblemSpec, Registry, Session, SolverSpec};
+use flexa::chaos::{self, ChaosConfig};
+use flexa::cluster::{
+    BackendSpec, ClusterConfig, ClusterServer, HealthConfig, SpawnedCluster,
+};
+use flexa::http::{HttpConfig, HttpServer, SpawnedServer};
+use flexa::serve::{Json, ServeConfig};
+use std::io::{Read, Write};
+use std::net::TcpStream;
+use std::time::{Duration, Instant};
+
+fn spawn_backend() -> SpawnedServer {
+    let http = HttpConfig { access_log: false, ..HttpConfig::default() };
+    HttpServer::bind(
+        "127.0.0.1:0",
+        http,
+        ServeConfig::default().with_workers(1),
+        Registry::with_defaults(),
+    )
+    .expect("bind backend")
+    .spawn()
+}
+
+fn spawn_cluster(backends: &[&SpawnedServer], config: ClusterConfig) -> SpawnedCluster {
+    let specs: Vec<BackendSpec> = backends
+        .iter()
+        .enumerate()
+        .map(|(i, s)| BackendSpec { id: format!("b{i}"), addr: s.addr().to_string() })
+        .collect();
+    ClusterServer::bind("127.0.0.1:0", specs, config).expect("bind cluster router").spawn()
+}
+
+/// Fast probes + short connect budget, so kills are noticed quickly.
+fn fast_config() -> ClusterConfig {
+    ClusterConfig {
+        health: HealthConfig {
+            interval: Duration::from_millis(100),
+            timeout: Duration::from_millis(500),
+            failure_threshold: 2,
+        },
+        connect_timeout: Duration::from_millis(500),
+        proxy_timeout: Duration::from_secs(10),
+        replicate_backoff: Duration::from_millis(100),
+        access_log: false,
+        ..ClusterConfig::default()
+    }
+}
+
+/// Chaos seeds for the fault-injection tests: the CI harness pins one
+/// via `FLEXA_CHAOS`; local runs cover two fixed defaults.
+fn seeds() -> Vec<u64> {
+    match std::env::var("FLEXA_CHAOS").ok().and_then(|v| v.trim().parse::<u64>().ok()) {
+        Some(s) => vec![s],
+        None => vec![11, 29],
+    }
+}
+
+/// One `Connection: close` exchange; returns (status, body).
+fn req(addr: &str, method: &str, path: &str, body: Option<&str>) -> (u16, String) {
+    let mut stream = TcpStream::connect(addr).expect("connect");
+    stream.set_read_timeout(Some(Duration::from_secs(120))).unwrap();
+    let mut head = format!("{method} {path} HTTP/1.1\r\nHost: {addr}\r\nConnection: close\r\n");
+    if let Some(b) = body {
+        head.push_str(&format!("Content-Length: {}\r\nContent-Type: application/json\r\n", b.len()));
+    }
+    head.push_str("\r\n");
+    stream.write_all(head.as_bytes()).unwrap();
+    if let Some(b) = body {
+        stream.write_all(b.as_bytes()).unwrap();
+    }
+    let mut raw = Vec::new();
+    stream.read_to_end(&mut raw).expect("read response");
+    let raw = String::from_utf8(raw).expect("utf8 response");
+    let (head, body) = raw.split_once("\r\n\r\n").unwrap_or((raw.as_str(), ""));
+    let status: u16 = head
+        .lines()
+        .next()
+        .and_then(|l| l.split_whitespace().nth(1))
+        .and_then(|s| s.parse().ok())
+        .unwrap_or_else(|| panic!("malformed response head: {head}"));
+    (status, body.to_string())
+}
+
+fn post_job(addr: &str, spec: &str) -> Json {
+    let (status, body) = req(addr, "POST", "/v1/jobs", Some(spec));
+    assert_eq!(status, 202, "POST /v1/jobs: {body}");
+    Json::parse(&body).expect("valid submit response")
+}
+
+/// Submit under chaos: 503/502 refusals are the documented client
+/// contract (Retry-After), so retry them; anything else is a bug.
+fn post_job_retry(addr: &str, spec: &str) -> Json {
+    for _ in 0..40 {
+        let (status, body) = req(addr, "POST", "/v1/jobs", Some(spec));
+        if status == 202 {
+            return Json::parse(&body).expect("valid submit response");
+        }
+        assert!(status == 503 || status == 502, "unexpected submit status {status}: {body}");
+        std::thread::sleep(Duration::from_millis(50));
+    }
+    panic!("submit kept refusing under chaos");
+}
+
+fn job_id(doc: &Json) -> u64 {
+    doc.get("job").and_then(|v| v.as_f64()).expect("job id") as u64
+}
+
+fn owner_of(doc: &Json) -> String {
+    doc.get("backend").and_then(|v| v.as_str()).expect("owning backend").to_string()
+}
+
+fn wait_finished(addr: &str, job: u64) -> Json {
+    let deadline = Instant::now() + Duration::from_secs(120);
+    loop {
+        let (status, body) = req(addr, "GET", &format!("/v1/jobs/{job}?x=1"), None);
+        assert_eq!(status, 200, "GET /v1/jobs/{job}: {body}");
+        let doc = Json::parse(&body).expect("valid status json");
+        if doc.get("state").and_then(|v| v.as_str()) == Some("finished") {
+            return doc;
+        }
+        assert!(Instant::now() < deadline, "job {job} never finished: {body}");
+        std::thread::sleep(Duration::from_millis(10));
+    }
+}
+
+/// Poll to completion tolerating transient 502/503 while a failover is
+/// mid-flight under injected faults.
+fn wait_finished_tolerant(addr: &str, job: u64) -> Json {
+    let deadline = Instant::now() + Duration::from_secs(120);
+    loop {
+        let (status, body) = req(addr, "GET", &format!("/v1/jobs/{job}?x=1"), None);
+        if status == 200 {
+            let doc = Json::parse(&body).expect("valid status json");
+            if doc.get("state").and_then(|v| v.as_str()) == Some("finished") {
+                return doc;
+            }
+        } else {
+            assert!(status == 502 || status == 503, "unexpected poll status {status}: {body}");
+        }
+        assert!(Instant::now() < deadline, "job {job} never finished: {body}");
+        std::thread::sleep(Duration::from_millis(20));
+    }
+}
+
+fn x_of(doc: &Json) -> Vec<f64> {
+    let Some(Json::Arr(items)) = doc.get("x") else { panic!("status has no x array: {doc:?}") };
+    items.iter().map(|v| v.as_f64().expect("x entries are numbers")).collect()
+}
+
+fn bits(x: &[f64]) -> Vec<u64> {
+    x.iter().map(|v| v.to_bits()).collect()
+}
+
+fn metric(text: &str, name: &str) -> f64 {
+    text.lines()
+        .find(|l| l.starts_with(name) && !l.starts_with('#'))
+        .and_then(|l| l.split_whitespace().nth(1))
+        .and_then(|v| v.parse().ok())
+        .unwrap_or_else(|| panic!("metric {name} missing in:\n{text}"))
+}
+
+fn wait_metric_at_least(addr: &str, name: &str, want: f64) -> f64 {
+    let deadline = Instant::now() + Duration::from_secs(30);
+    loop {
+        let (status, text) = req(addr, "GET", "/metrics", None);
+        assert_eq!(status, 200);
+        let v = metric(&text, name);
+        if v >= want {
+            return v;
+        }
+        assert!(Instant::now() < deadline, "{name} never reached {want} (last {v})");
+        std::thread::sleep(Duration::from_millis(50));
+    }
+}
+
+fn wait_unhealthy(addr: &str, id: &str) {
+    let deadline = Instant::now() + Duration::from_secs(15);
+    loop {
+        let (_, topo) = req(addr, "GET", "/v1/cluster", None);
+        if topo.contains(&format!("\"id\":\"{id}\",\"addr\"")) && topo.contains("\"healthy\":false")
+        {
+            return;
+        }
+        assert!(Instant::now() < deadline, "{id} never went unhealthy: {topo}");
+        std::thread::sleep(Duration::from_millis(50));
+    }
+}
+
+fn sweep_spec(i: usize, lambda: f64) -> String {
+    format!(
+        "{{\"problem\":\"lasso\",\"rows\":30,\"cols\":90,\"seed\":11,\"lambda\":{lambda},\
+         \"algo\":\"fpa\",\"max_iters\":40,\"target\":0,\"warm_start\":true,\"tag\":\"sweep-{i}\"}}"
+    )
+}
+
+fn plain_spec(rows: usize, cols: usize, seed: u64, iters: usize, tag: &str) -> String {
+    format!(
+        "{{\"problem\":\"lasso\",\"rows\":{rows},\"cols\":{cols},\"seed\":{seed},\
+         \"algo\":\"fpa\",\"max_iters\":{iters},\"target\":0,\"warm_start\":false,\"tag\":\"{tag}\"}}"
+    )
+}
+
+fn golden_x(rows: usize, cols: usize, seed: u64, iters: usize) -> Vec<f64> {
+    Session::problem(ProblemSpec::lasso(rows, cols).with_seed(seed))
+        .solver(SolverSpec::parse("fpa").unwrap())
+        .options(SolveOptions::default().with_max_iters(iters).with_target(0.0))
+        .run()
+        .expect("golden solve")
+        .report
+        .x
+        .clone()
+}
+
+/// Tentpole 1: the λ-sweep's warm-start entry replicates to the ring
+/// successor, so killing the owner mid-sweep keeps every later λ warm —
+/// and the whole chain bit-identical to an uninterrupted sweep.
+#[test]
+fn replicated_warm_start_survives_backend_kill() {
+    let _chaos = chaos::scoped_off();
+    let lambdas: Vec<f64> = (0..4).map(|i| 2.0 * 0.7f64.powi(i)).collect();
+
+    // Golden: the same sweep straight into one backend, no cluster.
+    let gold_backend = spawn_backend();
+    let gold_addr = gold_backend.addr().to_string();
+    let mut golden: Vec<Vec<u64>> = Vec::new();
+    for (i, lambda) in lambdas.iter().enumerate() {
+        let doc = post_job(&gold_addr, &sweep_spec(i, *lambda));
+        let done = wait_finished(&gold_addr, job_id(&doc));
+        assert_eq!(done.get("outcome").and_then(|v| v.as_str()), Some("done"), "{done:?}");
+        golden.push(bits(&x_of(&done)));
+    }
+    gold_backend.shutdown().expect("golden backend shutdown");
+
+    // Fault run: two backends; kill the sweep's owner after λ0 has
+    // replicated to the successor.
+    let a = spawn_backend();
+    let b = spawn_backend();
+    let cluster = spawn_cluster(&[&a, &b], fast_config());
+    let addr = cluster.addr().to_string();
+
+    let doc = post_job(&addr, &sweep_spec(0, lambdas[0]));
+    let owner = owner_of(&doc);
+    let done = wait_finished(&addr, job_id(&doc));
+    assert_eq!(bits(&x_of(&done)), golden[0], "λ0 must match before any fault");
+    wait_metric_at_least(&addr, "flexa_cluster_replications_total", 1.0);
+
+    let (dead, alive) = if owner == "b0" { (a, b) } else { (b, a) };
+    dead.shutdown().expect("owner shutdown");
+    wait_unhealthy(&addr, &owner);
+
+    for (i, lambda) in lambdas.iter().enumerate().skip(1) {
+        let doc = post_job(&addr, &sweep_spec(i, *lambda));
+        assert_ne!(owner_of(&doc), owner, "dead backends take no placements");
+        let done = wait_finished(&addr, job_id(&doc));
+        assert_eq!(done.get("outcome").and_then(|v| v.as_str()), Some("done"), "{done:?}");
+        assert_eq!(
+            done.get("warm_started").and_then(|v| v.as_bool()),
+            Some(true),
+            "λ{i} must warm-start from the replicated entry: {done:?}"
+        );
+        assert_eq!(
+            bits(&x_of(&done)),
+            golden[i],
+            "λ{i} after the kill must match the uninterrupted sweep bit for bit"
+        );
+    }
+
+    cluster.shutdown().expect("router shutdown");
+    alive.shutdown().expect("survivor shutdown");
+}
+
+/// Tentpole 2: a job whose backend dies between submit and poll fails
+/// over to the ring successor inside the poll request, finishes
+/// bit-identical to the fault-free golden run, and the re-dispatch is
+/// visible in `flexa_cluster_failovers_total` and a
+/// `failover.redispatch` trace span.
+#[test]
+fn inflight_job_fails_over_and_result_matches_golden() {
+    let _chaos = chaos::scoped_off();
+    let golden = golden_x(25, 75, 7, 30);
+
+    let a = spawn_backend();
+    let b = spawn_backend();
+    // Default (slow) probes: the kill is discovered by the failed poll,
+    // not the prober — pinning the in-request failover path.
+    let config = ClusterConfig {
+        connect_timeout: Duration::from_millis(500),
+        access_log: false,
+        ..ClusterConfig::default()
+    };
+    let cluster = spawn_cluster(&[&a, &b], config);
+    let addr = cluster.addr().to_string();
+
+    let doc = post_job(&addr, &plain_spec(25, 75, 7, 30, "inflight"));
+    let rid = job_id(&doc);
+    let owner = owner_of(&doc);
+    let (dead, alive) = if owner == "b0" { (a, b) } else { (b, a) };
+    dead.shutdown().expect("owner shutdown");
+
+    let done = wait_finished(&addr, rid);
+    assert_eq!(done.get("outcome").and_then(|v| v.as_str()), Some("done"), "{done:?}");
+    assert_eq!(
+        bits(&x_of(&done)),
+        bits(&golden),
+        "failover re-run must reproduce the golden result bit for bit"
+    );
+
+    let (_, metrics) = req(&addr, "GET", "/metrics", None);
+    assert!(
+        metric(&metrics, "flexa_cluster_failovers_total") >= 1.0,
+        "the re-dispatch must be counted:\n{metrics}"
+    );
+    let (status, trace) = req(&addr, "GET", "/v1/debug/trace", None);
+    assert_eq!(status, 200);
+    assert!(trace.contains("failover.redispatch"), "re-dispatch must leave a span: {trace}");
+
+    cluster.shutdown().expect("router shutdown");
+    alive.shutdown().expect("survivor shutdown");
+}
+
+/// Tentpole 3 + SSE satellite: killing the owner while a client streams
+/// `/events` must never tear a frame or duplicate an event. The proxy
+/// resumes on the successor's deterministic replay; the client sees
+/// strictly increasing frame ids, exactly one `finished`, no `retry`
+/// fallback, and the final iterate still matches the golden bits.
+#[test]
+fn sse_stream_survives_owner_kill_without_torn_or_duplicate_frames() {
+    let _chaos = chaos::scoped_off();
+    let golden = golden_x(80, 400, 13, 4000);
+
+    let a = spawn_backend();
+    let b = spawn_backend();
+    let cluster = spawn_cluster(&[&a, &b], fast_config());
+    let addr = cluster.addr().to_string();
+
+    let doc = post_job(&addr, &plain_spec(80, 400, 13, 4000, "stream"));
+    let rid = job_id(&doc);
+    let owner = owner_of(&doc);
+
+    // Stream on a reader thread; kill the owner shortly after the
+    // stream opens, while the solve is (very likely) still running.
+    let stream_addr = addr.clone();
+    let reader = std::thread::spawn(move || {
+        let mut stream = TcpStream::connect(&stream_addr).expect("connect stream");
+        stream.set_read_timeout(Some(Duration::from_secs(120))).unwrap();
+        let head = format!(
+            "GET /v1/jobs/{rid}/events HTTP/1.1\r\nHost: {stream_addr}\r\nConnection: close\r\n\r\n"
+        );
+        stream.write_all(head.as_bytes()).unwrap();
+        let mut raw = Vec::new();
+        stream.read_to_end(&mut raw).expect("read stream to end");
+        String::from_utf8(raw).expect("utf8 stream")
+    });
+    std::thread::sleep(Duration::from_millis(100));
+    let (dead, alive) = if owner == "b0" { (a, b) } else { (b, a) };
+    dead.shutdown().expect("owner shutdown");
+    let sse = reader.join().expect("stream reader");
+
+    // Clean head, complete tail: the stream must end at a frame
+    // boundary, not mid-frame.
+    assert!(sse.starts_with("HTTP/1.1 200"), "{sse}");
+    let body = sse.split_once("\r\n\r\n").map(|(_, b)| b).unwrap_or("");
+    assert!(body.ends_with("\n\n"), "stream must end on a frame boundary:\n{body:?}");
+
+    let events: Vec<&str> = body.lines().filter_map(|l| l.strip_prefix("event: ")).collect();
+    assert_eq!(
+        events.iter().filter(|e| **e == "finished").count(),
+        1,
+        "exactly one terminal frame: {events:?}"
+    );
+    assert_eq!(events.last(), Some(&"finished"), "{events:?}");
+    assert!(!events.contains(&"retry"), "failover must resume, not punt: {events:?}");
+    let ids: Vec<u64> =
+        body.lines().filter_map(|l| l.strip_prefix("id: ")).map(|v| v.parse().unwrap()).collect();
+    assert!(ids.windows(2).all(|w| w[1] > w[0]), "frame ids must be strictly increasing: {ids:?}");
+    assert!(body.contains(&format!("\"job\":{rid}")), "frames carry the router id:\n{body}");
+
+    // And the failover's result is still the golden iterate.
+    let done = wait_finished(&addr, rid);
+    assert_eq!(bits(&x_of(&done)), bits(&golden));
+
+    cluster.shutdown().expect("router shutdown");
+    alive.shutdown().expect("survivor shutdown");
+}
+
+/// With every backend down, the router degrades to an in-process solve:
+/// 202 with `backend: router-local`, a live status/events surface, the
+/// golden bits, and `flexa_cluster_local_solves_total` accounting.
+#[test]
+fn all_backends_down_degrades_to_router_local_solve() {
+    let _chaos = chaos::scoped_off();
+    let golden = golden_x(20, 60, 21, 25);
+
+    let specs = vec![
+        BackendSpec { id: "down0".into(), addr: "127.0.0.1:1".into() },
+        BackendSpec { id: "down1".into(), addr: "127.0.0.1:1".into() },
+    ];
+    let config = ClusterConfig {
+        connect_timeout: Duration::from_millis(100),
+        proxy_timeout: Duration::from_millis(500),
+        access_log: false,
+        ..ClusterConfig::default()
+    };
+    let cluster = ClusterServer::bind("127.0.0.1:0", specs, config).expect("bind router").spawn();
+    let addr = cluster.addr().to_string();
+
+    let doc = post_job(&addr, &plain_spec(20, 60, 21, 25, "degraded"));
+    assert_eq!(owner_of(&doc), "router-local", "{doc:?}");
+    let rid = job_id(&doc);
+    let done = wait_finished(&addr, rid);
+    assert_eq!(done.get("outcome").and_then(|v| v.as_str()), Some("done"), "{done:?}");
+    assert_eq!(done.get("solver").and_then(|v| v.as_str()), Some("local/fpa"), "{done:?}");
+    assert_eq!(bits(&x_of(&done)), bits(&golden), "local degradation must match golden bits");
+
+    let (status, sse) = req(&addr, "GET", &format!("/v1/jobs/{rid}/events"), None);
+    assert_eq!(status, 200, "{sse}");
+    let events: Vec<&str> = sse.lines().filter_map(|l| l.strip_prefix("event: ")).collect();
+    assert_eq!(events.last(), Some(&"finished"), "{events:?}");
+
+    let (_, metrics) = req(&addr, "GET", "/metrics", None);
+    assert_eq!(metric(&metrics, "flexa_cluster_local_solves_total"), 1.0, "\n{metrics}");
+
+    cluster.shutdown().expect("router shutdown");
+}
+
+/// Seeded chaos on every router→backend exchange (connect resets, read
+/// resets after the request went out, slowdowns, torn proxy streams):
+/// every job a client manages to submit still completes with the golden
+/// bits — at-least-once re-dispatch, never a lost or wrong result.
+#[test]
+fn connection_faults_never_lose_accepted_jobs() {
+    for seed in seeds() {
+        let golden: Vec<Vec<u64>> =
+            (0..5).map(|i| bits(&golden_x(20, 60, 100 + i, 10))).collect();
+
+        let _chaos = chaos::scoped(ChaosConfig {
+            connect_reset_p: 0.30,
+            read_reset_p: 0.20,
+            stream_reset_p: 0.10,
+            slow_p: 0.20,
+            slow_ms: 5,
+            store_corrupt_p: 0.0,
+            ..ChaosConfig::from_seed(seed)
+        });
+
+        let a = spawn_backend();
+        let b = spawn_backend();
+        let config = ClusterConfig {
+            connect_timeout: Duration::from_millis(500),
+            proxy_timeout: Duration::from_secs(10),
+            access_log: false,
+            ..ClusterConfig::default()
+        };
+        let cluster = spawn_cluster(&[&a, &b], config);
+        let addr = cluster.addr().to_string();
+
+        for i in 0..5u64 {
+            let spec = plain_spec(20, 60, 100 + i, 10, &format!("chaos-{seed}-{i}"));
+            let doc = post_job_retry(&addr, &spec);
+            let done = wait_finished_tolerant(&addr, job_id(&doc));
+            assert_eq!(
+                done.get("outcome").and_then(|v| v.as_str()),
+                Some("done"),
+                "seed {seed} job {i}: {done:?}"
+            );
+            assert_eq!(
+                bits(&x_of(&done)),
+                golden[i as usize],
+                "seed {seed} job {i} must survive injected faults bit-exact"
+            );
+        }
+
+        cluster.shutdown().expect("router shutdown");
+        a.shutdown().expect("backend a shutdown");
+        b.shutdown().expect("backend b shutdown");
+    }
+}

@@ -359,7 +359,9 @@ fn trace_stitches_router_and_backend_spans_by_request_id() {
 
 /// Killing a backend: submissions immediately fail over along the ring,
 /// the prober marks it unhealthy, and with every backend gone the router
-/// answers 503 instead of hanging.
+/// answers 503 instead of hanging. (Local fallback is disabled here to
+/// pin the refusal path; `tests/chaos.rs` covers the degrade-to-local
+/// default.)
 #[test]
 fn dead_backends_fail_over_then_503() {
     let a = spawn_backend();
@@ -370,6 +372,7 @@ fn dead_backends_fail_over_then_503() {
             timeout: Duration::from_millis(500),
             failure_threshold: 2,
         },
+        local_fallback: false,
         ..quiet_config()
     };
     let cluster = spawn_cluster(&[&a, &b], config);
