@@ -190,8 +190,11 @@ fn main() -> anyhow::Result<()> {
     // how much the rings absorbed so tracing-overhead regressions show
     // up in the bench log next to the timings they would distort.
     let obs_spans = flexa::obs::snapshot(0).len();
+    let obs_recorded = flexa::obs::spans_recorded();
     let obs_dropped = flexa::obs::spans_dropped();
-    println!("obs: {obs_spans} spans buffered, {obs_dropped} dropped (always-on tracing)");
+    println!(
+        "obs: {obs_spans} spans buffered, {obs_recorded} recorded, {obs_dropped} dropped (always-on tracing)"
+    );
 
     // Determinism is a hard guarantee, not a trendline: fail loudly.
     anyhow::ensure!(

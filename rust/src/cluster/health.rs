@@ -49,6 +49,9 @@ pub struct BackendState {
     pub probe_failures: AtomicU64,
     /// Jobs the router placed here.
     pub placed: AtomicU64,
+    /// Healthy-bit flips in either direction (monotone): the cluster
+    /// watchdog's flapping detector rates this counter over a window.
+    pub transitions: AtomicU64,
 }
 
 impl BackendState {
@@ -61,6 +64,7 @@ impl BackendState {
             probes: AtomicU64::new(0),
             probe_failures: AtomicU64::new(0),
             placed: AtomicU64::new(0),
+            transitions: AtomicU64::new(0),
         }
     }
 
@@ -86,16 +90,21 @@ impl BackendState {
     }
 
     /// Record one probe outcome, flipping health at the threshold.
+    /// Every actual healthy-bit flip (either direction) bumps
+    /// `transitions` so flapping is countable; `swap` makes the edge
+    /// detection atomic against concurrent probes.
     pub fn record_probe(&self, ok: bool, threshold: u32) {
         self.probes.fetch_add(1, Ordering::Relaxed);
         if ok {
             self.consecutive_failures.store(0, Ordering::Relaxed);
-            self.healthy.store(true, Ordering::Relaxed);
+            if !self.healthy.swap(true, Ordering::Relaxed) {
+                self.transitions.fetch_add(1, Ordering::Relaxed);
+            }
         } else {
             self.probe_failures.fetch_add(1, Ordering::Relaxed);
             let failures = self.consecutive_failures.fetch_add(1, Ordering::Relaxed) + 1;
-            if failures >= threshold.max(1) {
-                self.healthy.store(false, Ordering::Relaxed);
+            if failures >= threshold.max(1) && self.healthy.swap(false, Ordering::Relaxed) {
+                self.transitions.fetch_add(1, Ordering::Relaxed);
             }
         }
     }
@@ -175,6 +184,11 @@ mod tests {
         assert!(b.healthy(), "streak restarted from zero");
         assert_eq!(b.probes.load(Ordering::Relaxed), 5);
         assert_eq!(b.probe_failures.load(Ordering::Relaxed), 4);
+        assert_eq!(
+            b.transitions.load(Ordering::Relaxed),
+            2,
+            "one down flip + one recovery; repeat probes in one state do not count"
+        );
     }
 
     /// Draining is orthogonal to health: a draining backend can be

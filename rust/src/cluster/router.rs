@@ -7,7 +7,8 @@
 //! | GET    | `/v1/jobs/{id}`                     | proxy to the owning backend / split status |
 //! | GET    | `/v1/jobs/{id}/events`              | SSE proxy (or synthesized split stream)    |
 //! | DELETE | `/v1/jobs/{id}`                     | cancel at the owning backend / split job   |
-//! | GET    | `/v1/cluster`                       | topology: backends, health, placements     |
+//! | GET    | `/v1/cluster`                       | topology + health/alert/SLO rollup         |
+//! | GET    | `/v1/alerts`                        | router watchdog alerts (active + recent)   |
 //! | POST   | `/v1/cluster/backends/{id}/drain`   | drain + warm-start hand-off to successors  |
 //! | DELETE | `/v1/cluster/backends/{id}/drain`   | cancel a drain (resume placements)         |
 //! | GET    | `/v1/registry`                      | proxied from the first placeable backend   |
@@ -93,6 +94,14 @@ pub struct ClusterConfig {
     pub local_fallback: bool,
     /// One structured JSON access-log line per request on stderr.
     pub access_log: bool,
+    /// Window over which the cluster watchdog rates health flips and
+    /// failovers.
+    pub watch_window: Duration,
+    /// Healthy-bit flips within the window before `backend-flapping`
+    /// fires.
+    pub flap_threshold: u64,
+    /// Job failovers within the window before `failover-spike` fires.
+    pub failover_spike_threshold: u64,
 }
 
 impl Default for ClusterConfig {
@@ -110,6 +119,9 @@ impl Default for ClusterConfig {
             replicate_backoff: Duration::from_millis(250),
             local_fallback: true,
             access_log: true,
+            watch_window: Duration::from_secs(60),
+            flap_threshold: 3,
+            failover_spike_threshold: 3,
         }
     }
 }
@@ -183,6 +195,19 @@ pub struct ClusterState {
     pub replication_errors: AtomicU64,
     pub local_solves: AtomicU64,
     pub started: Instant,
+    /// Router-level watchdog alerts (`backend-down`, `backend-flapping`,
+    /// `failover-spike`), served at `GET /v1/alerts` and embedded in the
+    /// topology view.
+    pub alerts: crate::watch::AlertStore,
+    /// Rate windows behind the flapping/failover-spike detectors.
+    watchdog: Mutex<ClusterWatch>,
+}
+
+/// Sliding windows the cluster watchdog rates its counters over; one
+/// flap window per backend plus one shared failover window.
+struct ClusterWatch {
+    flaps: Vec<crate::watch::RateWindow>,
+    failovers: crate::watch::RateWindow,
 }
 
 impl ClusterState {
@@ -191,6 +216,11 @@ impl ClusterState {
         let ring = Ring::build(&ids, config.replicas);
         let backends: Vec<Arc<BackendState>> =
             specs.into_iter().map(|s| Arc::new(BackendState::new(s))).collect();
+        let window_s = config.watch_window.as_secs_f64();
+        let watchdog = ClusterWatch {
+            flaps: backends.iter().map(|_| crate::watch::RateWindow::new(window_s)).collect(),
+            failovers: crate::watch::RateWindow::new(window_s),
+        };
         Self {
             backends: Arc::new(backends),
             ring,
@@ -211,6 +241,8 @@ impl ClusterState {
             replication_errors: AtomicU64::new(0),
             local_solves: AtomicU64::new(0),
             started: Instant::now(),
+            alerts: crate::watch::AlertStore::new(256),
+            watchdog: Mutex::new(watchdog),
         }
     }
 
@@ -325,7 +357,8 @@ fn route(state: &Arc<ClusterState>, req: &Request, req_id: &str) -> ClusterRoute
                 ),
             ))
         }
-        ("GET", ["v1", "cluster"]) => respond(Response::json(200, topology_json(state))),
+        ("GET", ["v1", "cluster"]) => respond(Response::json(200, topology_json(state, req_id))),
+        ("GET", ["v1", "alerts"]) => respond(Response::json(200, state.alerts.json())),
         ("POST", ["v1", "cluster", "backends", id, "drain"]) => {
             respond(drain(state, req, req_id, id))
         }
@@ -346,7 +379,7 @@ fn route(state: &Arc<ClusterState>, req: &Request, req_id: &str) -> ClusterRoute
             Err(r) => respond(r),
             Ok(rid) => job_events(state, req, req_id, rid),
         },
-        (_, ["healthz"] | ["metrics"] | ["v1", "registry"] | ["v1", "cluster"]) => {
+        (_, ["healthz"] | ["metrics"] | ["v1", "registry"] | ["v1", "cluster"] | ["v1", "alerts"]) => {
             respond(method_not_allowed("GET"))
         }
         (_, ["v1", "jobs"]) => respond(method_not_allowed("POST")),
@@ -370,18 +403,25 @@ fn parse_id(raw: &str) -> Result<u64, Response> {
         .map_err(|_| Response::error(400, &format!("job id must be an integer, got `{raw}`")))
 }
 
-/// `GET /v1/cluster`: the operator's topology view.
-fn topology_json(state: &ClusterState) -> String {
+/// `GET /v1/cluster`: the operator's topology view, now a cluster-wide
+/// health rollup — each healthy backend's `/v1/alerts` and `/v1/slo`
+/// bodies are embedded verbatim (scrape failures omit the keys rather
+/// than failing the topology), and the router's own watchdog alerts
+/// ride at the top level.
+fn topology_json(state: &ClusterState, req_id: &str) -> String {
+    let headers = vec![("x-flexa-request-id".to_string(), req_id.to_string())];
     let mut s = format!(
-        "{{\"replicas\":{},\"split_threshold_cols\":{},\"backends\":[",
-        state.config.replicas, state.config.split.threshold_cols
+        "{{\"replicas\":{},\"split_threshold_cols\":{},\"alerts\":{},\"backends\":[",
+        state.config.replicas,
+        state.config.split.threshold_cols,
+        state.alerts.json(),
     );
     for (i, b) in state.backends.iter().enumerate() {
         if i > 0 {
             s.push(',');
         }
         s.push_str(&format!(
-            "{{\"id\":\"{}\",\"addr\":\"{}\",\"healthy\":{},\"draining\":{},\"consecutive_failures\":{},\"probes\":{},\"probe_failures\":{},\"placed\":{}}}",
+            "{{\"id\":\"{}\",\"addr\":\"{}\",\"healthy\":{},\"draining\":{},\"consecutive_failures\":{},\"probes\":{},\"probe_failures\":{},\"placed\":{},\"transitions\":{}",
             esc(&b.spec.id),
             esc(&b.spec.addr),
             b.healthy(),
@@ -390,7 +430,28 @@ fn topology_json(state: &ClusterState) -> String {
             b.probes.load(Ordering::Relaxed),
             b.probe_failures.load(Ordering::Relaxed),
             b.placed.load(Ordering::Relaxed),
+            b.transitions.load(Ordering::Relaxed),
         ));
+        if b.healthy() {
+            for (path, key) in [("/v1/alerts", "alerts"), ("/v1/slo", "slo")] {
+                match proxy_exchange(state, i, "GET", path, &headers, None) {
+                    Ok(reply) if reply.status == 200 => {
+                        let body = reply.body_str();
+                        // Only splice verbatim what parses back — a torn
+                        // body must not corrupt the whole topology doc.
+                        if Json::parse(&body).is_ok() {
+                            s.push_str(&format!(",\"{key}\":{}", body.trim()));
+                        } else {
+                            state.scrape_errors.fetch_add(1, Ordering::Relaxed);
+                        }
+                    }
+                    _ => {
+                        state.scrape_errors.fetch_add(1, Ordering::Relaxed);
+                    }
+                }
+            }
+        }
+        s.push('}');
     }
     s.push_str("]}");
     s
@@ -1111,6 +1172,18 @@ fn aggregate_metrics(state: &ClusterState, req_id: &str) -> String {
             b.placed.load(Ordering::Relaxed)
         ));
     }
+    // Router watchdog alert families. The backend `flexa_alerts_*`
+    // series sum textually above because every node emits the full
+    // fixed kind set; these are the *router's own* alerts.
+    let alert_counts = state.alerts.counts();
+    out.push_str("# HELP flexa_cluster_alerts_total Router watchdog alerts fired by kind.\n# TYPE flexa_cluster_alerts_total counter\n");
+    for (label, fired, _) in &alert_counts {
+        out.push_str(&format!("flexa_cluster_alerts_total{{kind=\"{label}\"}} {fired}\n"));
+    }
+    out.push_str("# HELP flexa_cluster_alerts_active Router watchdog alerts currently firing by kind.\n# TYPE flexa_cluster_alerts_active gauge\n");
+    for (label, _, active) in &alert_counts {
+        out.push_str(&format!("flexa_cluster_alerts_active{{kind=\"{label}\"}} {active}\n"));
+    }
     out.push_str(&format!(
         "flexa_cluster_uptime_seconds {:.3}\n",
         state.started.elapsed().as_secs_f64()
@@ -1135,6 +1208,11 @@ fn spawn_replicator(
                 if last_sweep.elapsed() >= Duration::from_millis(500) {
                     last_sweep = Instant::now();
                     failover_sweep(&state);
+                    watch_sweep(
+                        &state,
+                        state.started.elapsed().as_secs_f64(),
+                        crate::obs::now_us(),
+                    );
                 }
                 let task = {
                     let mut q = state.replication.lock().unwrap();
@@ -1181,6 +1259,63 @@ fn failover_sweep(state: &ClusterState) {
     };
     for rid in stranded {
         failover_job(state, rid);
+    }
+}
+
+/// One cluster-watchdog pass: fire/resolve `backend-down` per health
+/// bit, rate health flips into `backend-flapping`, and rate failover
+/// redispatches into `failover-spike`. `fire` keyed on `(kind, scope)`
+/// makes the pass idempotent — a condition persisting across many
+/// sweeps stays ONE alert with its original `since_us`. The clock
+/// arrives as parameters so tests can fabricate time.
+fn watch_sweep(state: &ClusterState, now_s: f64, now_us: u64) {
+    use crate::watch::AlertKind;
+    let mut w = state.watchdog.lock().unwrap_or_else(|p| p.into_inner());
+    for (i, b) in state.backends.iter().enumerate() {
+        let scope = format!("backend:{}", b.spec.id);
+        if b.healthy() {
+            state.alerts.resolve(AlertKind::BackendDown, &scope, now_us);
+        } else {
+            state.alerts.fire(
+                AlertKind::BackendDown,
+                &scope,
+                format!(
+                    "backend `{}` unhealthy after {} consecutive probe failures",
+                    b.spec.id,
+                    b.consecutive_failures()
+                ),
+                now_us,
+            );
+        }
+        let flips = w.flaps[i].observe(now_s, b.transitions.load(Ordering::Relaxed));
+        if flips >= state.config.flap_threshold.max(1) {
+            state.alerts.fire(
+                AlertKind::BackendFlapping,
+                &scope,
+                format!(
+                    "backend `{}` health flipped {flips} times in the last {:.0}s",
+                    b.spec.id,
+                    state.config.watch_window.as_secs_f64()
+                ),
+                now_us,
+            );
+        } else {
+            state.alerts.resolve(AlertKind::BackendFlapping, &scope, now_us);
+        }
+    }
+    let failovers = w.failovers.observe(now_s, state.failovers.load(Ordering::Relaxed));
+    if failovers >= state.config.failover_spike_threshold.max(1) {
+        state.alerts.fire(
+            AlertKind::FailoverSpike,
+            "cluster",
+            format!(
+                "{failovers} job failovers in the last {:.0}s",
+                state.config.watch_window.as_secs_f64()
+            ),
+            now_us,
+        );
+    } else {
+        state.alerts.resolve(AlertKind::FailoverSpike, "cluster", now_us);
     }
 }
 
@@ -1820,9 +1955,11 @@ mod tests {
     fn topology_and_metrics_render_router_families() {
         let state = ClusterState::new(specs(2), ClusterConfig::default());
         state.backends[1].set_draining(true);
-        let topo = topology_json(&state);
+        let topo = topology_json(&state, "t");
         assert!(topo.contains("\"id\":\"b0\""), "{topo}");
         assert!(topo.contains("\"draining\":true"), "{topo}");
+        assert!(topo.contains("\"alerts\":{\"active\":["), "router alerts embed: {topo}");
+        assert!(Json::parse(&topo).is_ok(), "topology stays parseable: {topo}");
         // No backends listening → scrape errors, but router families
         // still render.
         let state = ClusterState::new(
@@ -1840,6 +1977,65 @@ mod tests {
         assert!(text.contains("flexa_cluster_replications_total 0"), "{text}");
         assert!(text.contains("flexa_cluster_replication_errors_total 0"), "{text}");
         assert!(text.contains("flexa_cluster_local_solves_total 0"), "{text}");
+        assert!(text.contains("# TYPE flexa_cluster_alerts_total counter"), "{text}");
+        assert!(text.contains("flexa_cluster_alerts_total{kind=\"backend-down\"} 0"), "{text}");
+        assert!(text.contains("flexa_cluster_alerts_active{kind=\"failover-spike\"} 0"), "{text}");
+    }
+
+    /// The watchdog sweep with fabricated clocks: a backend flipping
+    /// unhealthy fires `backend-down` (one alert across many sweeps),
+    /// recovery resolves it, repeated flips within the window fire
+    /// `backend-flapping`, and a failover burst fires `failover-spike`.
+    #[test]
+    fn watch_sweep_fires_and_resolves_cluster_alerts() {
+        use crate::watch::AlertKind;
+        let state = ClusterState::new(specs(2), ClusterConfig::default());
+
+        // Healthy fleet: nothing fires.
+        watch_sweep(&state, 0.0, 0);
+        assert!(state.alerts.active().is_empty());
+
+        // b0 down → backend-down fires once and persists across sweeps.
+        for _ in 0..3 {
+            state.backends[0].record_probe(false, 3);
+        }
+        watch_sweep(&state, 1.0, 1_000);
+        watch_sweep(&state, 2.0, 2_000);
+        assert!(state.alerts.is_firing(AlertKind::BackendDown, "backend:b0"));
+        assert_eq!(state.alerts.active().len(), 1, "persisting condition stays one alert");
+
+        // Recovery resolves it.
+        state.backends[0].record_probe(true, 3);
+        watch_sweep(&state, 3.0, 3_000);
+        assert!(!state.alerts.is_firing(AlertKind::BackendDown, "backend:b0"));
+        let down = state
+            .alerts
+            .counts()
+            .into_iter()
+            .find(|(l, _, _)| *l == "backend-down")
+            .unwrap();
+        assert_eq!((down.1, down.2), (1, 0), "fired once, none active");
+
+        // Two more down/up cycles push transitions past the flap
+        // threshold (3 flips within the 60 s window).
+        for _ in 0..2 {
+            for _ in 0..3 {
+                state.backends[0].record_probe(false, 3);
+            }
+            state.backends[0].record_probe(true, 3);
+        }
+        watch_sweep(&state, 4.0, 4_000);
+        assert!(state.alerts.is_firing(AlertKind::BackendFlapping, "backend:b0"));
+        // Far outside the window the flip rate decays and it resolves.
+        watch_sweep(&state, 500.0, 5_000);
+        assert!(!state.alerts.is_firing(AlertKind::BackendFlapping, "backend:b0"));
+
+        // A failover burst fires the spike alert; a quiet window clears.
+        state.failovers.fetch_add(3, Ordering::Relaxed);
+        watch_sweep(&state, 501.0, 6_000);
+        assert!(state.alerts.is_firing(AlertKind::FailoverSpike, "cluster"));
+        watch_sweep(&state, 1000.0, 7_000);
+        assert!(!state.alerts.is_firing(AlertKind::FailoverSpike, "cluster"));
     }
 
     #[test]

@@ -23,6 +23,12 @@ pub struct HttpMetrics {
     pub get_registry: AtomicU64,
     /// `GET /v1/jobs/{id}/profile` (per-job phase breakdown).
     pub get_profile: AtomicU64,
+    /// `GET /v1/jobs/{id}/convergence` (per-job convergence series).
+    pub get_convergence: AtomicU64,
+    /// `GET /v1/alerts` (watchdog alert store).
+    pub get_alerts: AtomicU64,
+    /// `GET /v1/slo` (SLO attainment + burn rates).
+    pub get_slo: AtomicU64,
     /// `GET /v1/debug/trace` (Chrome trace-event export).
     pub get_trace: AtomicU64,
     /// `GET`/`POST /v1/cache/snapshot` (cluster drain handoff).
@@ -41,7 +47,7 @@ pub struct HttpMetrics {
 
 impl HttpMetrics {
     /// `(label, count)` per endpoint, for the labeled request family.
-    fn endpoint_counts(&self) -> [(&'static str, u64); 12] {
+    fn endpoint_counts(&self) -> [(&'static str, u64); 15] {
         let get = |c: &AtomicU64| c.load(Ordering::Relaxed);
         [
             ("post_jobs", get(&self.post_jobs)),
@@ -50,6 +56,9 @@ impl HttpMetrics {
             ("delete_job", get(&self.delete_job)),
             ("get_registry", get(&self.get_registry)),
             ("get_profile", get(&self.get_profile)),
+            ("get_convergence", get(&self.get_convergence)),
+            ("get_alerts", get(&self.get_alerts)),
+            ("get_slo", get(&self.get_slo)),
             ("get_trace", get(&self.get_trace)),
             ("cache_snapshot", get(&self.cache_snapshot)),
             ("store_replicate", get(&self.store_replicate)),
@@ -60,13 +69,17 @@ impl HttpMetrics {
     }
 }
 
-/// Render every counter family as Prometheus text.
+/// Render every counter family as Prometheus text. `alerts` is the
+/// watchdog's `(kind, fired_total, active_now)` table (see
+/// [`crate::watch::AlertStore::counts`]) — always the full fixed kind
+/// set, so the cluster's textual aggregation sums aligned series.
 pub fn render_prometheus(
     http: &HttpMetrics,
     sched: &SchedulerStats,
     tenants: &[TenantStats],
     cache: &CacheStats,
     store: Option<StoreStats>,
+    alerts: &[(&'static str, u64, u64)],
     uptime_seconds: f64,
 ) -> String {
     let mut s = String::with_capacity(2048);
@@ -241,6 +254,18 @@ pub fn render_prometheus(
         gauge(&mut s, "flexa_store_bytes", "Persistent store file size.", st.bytes as f64);
     }
 
+    // --- watchdog alerts (flexa::watch) ---
+    s.push_str("# HELP flexa_alerts_total Watchdog alerts fired, by kind.\n");
+    s.push_str("# TYPE flexa_alerts_total counter\n");
+    for (kind, fired, _) in alerts {
+        s.push_str(&format!("flexa_alerts_total{{kind=\"{kind}\"}} {fired}\n"));
+    }
+    s.push_str("# HELP flexa_alerts_active Alerts currently firing, by kind.\n");
+    s.push_str("# TYPE flexa_alerts_active gauge\n");
+    for (kind, _, active) in alerts {
+        s.push_str(&format!("flexa_alerts_active{{kind=\"{kind}\"}} {active}\n"));
+    }
+
     // --- latency histograms (flexa::obs) ---
     // Real Prometheus histogram families: request duration by endpoint,
     // job queue/service time, iteration duration by solver, plus the
@@ -305,8 +330,14 @@ mod tests {
             bytes: 4096,
             ..StoreStats::default()
         };
-        let text = render_prometheus(&http, &sched, &tenants, &cache, Some(store), 12.5);
+        let alerts =
+            vec![("stall", 2u64, 1u64), ("divergence", 0, 0), ("deadline-risk", 1, 0)];
+        let text = render_prometheus(&http, &sched, &tenants, &cache, Some(store), &alerts, 12.5);
         for needle in [
+            "flexa_alerts_total{kind=\"stall\"} 2",
+            "flexa_alerts_active{kind=\"stall\"} 1",
+            "flexa_alerts_total{kind=\"deadline-risk\"} 1",
+            "flexa_alerts_active{kind=\"divergence\"} 0",
             "flexa_http_requests_total{endpoint=\"post_jobs\"} 3",
             "flexa_http_errors_total 1",
             "flexa_jobs_submitted_total 9",
@@ -345,11 +376,13 @@ mod tests {
             "flexa_tenant_jobs_submitted_total",
             "flexa_store_bytes",
             "flexa_cache_bytes",
+            "flexa_alerts_total",
+            "flexa_alerts_active",
         ] {
             assert!(text.contains(&format!("# TYPE {family} ")), "no TYPE for {family}");
         }
         // Without a store, the store families are absent entirely.
-        let text = render_prometheus(&http, &sched, &tenants, &cache, None, 1.0);
+        let text = render_prometheus(&http, &sched, &tenants, &cache, None, &alerts, 1.0);
         assert!(!text.contains("flexa_store_"), "store families only with a store");
     }
 }

@@ -13,6 +13,9 @@
 //! GET    /v1/jobs/{id}        status / result JSON    (?x=1 adds the iterate)
 //! GET    /v1/jobs/{id}/events SSE: queued → started → iteration* → finished
 //! DELETE /v1/jobs/{id}        cooperative cancellation
+//! GET    /v1/jobs/{id}/convergence  downsampled convergence time-series
+//! GET    /v1/alerts           watchdog alerts (active + recently resolved)
+//! GET    /v1/slo              SLO attainment + burn rate (--slo FILE.toml)
 //! GET    /v1/registry         problems/solvers with descriptions
 //! GET    /healthz             liveness probe
 //! GET    /metrics             Prometheus text format
@@ -138,6 +141,9 @@ pub struct ServerState {
     /// wholesale at capacity — a dropped key falls through to a fresh
     /// submit (at-least-once, just un-deduped), never to a wrong reply.
     idempotency: Mutex<std::collections::HashMap<String, (u64, String)>>,
+    /// SLO engine (`--slo FILE.toml`): sample ring + evaluation for
+    /// `GET /v1/slo`. `None` when the server runs without SLO targets.
+    pub slo: Option<Arc<crate::watch::SloEngine>>,
 }
 
 impl ServerState {
@@ -150,6 +156,7 @@ impl ServerState {
             &self.scheduler.tenant_stats(),
             &self.scheduler.cache_stats(),
             self.scheduler.store_stats(),
+            &self.scheduler.watch().alerts.counts(),
             self.started.elapsed().as_secs_f64(),
         )
     }
@@ -197,6 +204,11 @@ pub struct HttpServer {
     addr: SocketAddr,
     state: Arc<ServerState>,
     stop: Arc<AtomicBool>,
+    /// SLO sampler thread (`--slo`): stop flag + join handle. Joined in
+    /// [`Self::run`] *before* the state unwrap — the sampler holds
+    /// scheduler and watch refs that would otherwise keep the `Arc`s
+    /// alive past shutdown.
+    sampler: Option<(Arc<AtomicBool>, std::thread::JoinHandle<()>)>,
 }
 
 impl HttpServer {
@@ -215,6 +227,22 @@ impl HttpServer {
         registry: Registry,
         downstream: Option<Arc<dyn ServeObserver>>,
     ) -> Result<Self> {
+        Self::bind_with_slo(addr, config, serve, registry, downstream, None)
+    }
+
+    /// [`Self::bind_with_downstream`], additionally evaluating `slo`
+    /// targets: a background sampler snapshots the scheduler counters
+    /// and service-latency histogram on the configured cadence, feeds
+    /// the [`crate::watch::SloEngine`] ring behind `GET /v1/slo`, and
+    /// raises/resolves `slo-burn` alerts past the burn threshold.
+    pub fn bind_with_slo(
+        addr: &str,
+        config: HttpConfig,
+        serve: ServeConfig,
+        registry: Registry,
+        downstream: Option<Arc<dyn ServeObserver>>,
+        slo: Option<crate::watch::SloConfig>,
+    ) -> Result<Self> {
         let hub = match downstream {
             Some(d) => EventHub::with_downstream(
                 config.sse_iteration_retention,
@@ -232,6 +260,16 @@ impl HttpServer {
             .map_err(|e| anyhow!("cannot bind HTTP listener on `{addr}`: {e}"))?;
         let local = listener.local_addr()?;
         listener.set_nonblocking(true)?;
+        let engine = slo.map(|cfg| Arc::new(crate::watch::SloEngine::new(cfg)));
+        let sampler = engine.as_ref().map(|engine| {
+            let stop = Arc::new(AtomicBool::new(false));
+            let handle = spawn_slo_sampler(
+                Arc::clone(&scheduler),
+                Arc::clone(engine),
+                Arc::clone(&stop),
+            );
+            (stop, handle)
+        });
         Ok(Self {
             listener,
             addr: local,
@@ -243,8 +281,10 @@ impl HttpServer {
                 started: Instant::now(),
                 request_seq: std::sync::atomic::AtomicU64::new(0),
                 idempotency: Mutex::new(std::collections::HashMap::new()),
+                slo: engine,
             }),
             stop: Arc::new(AtomicBool::new(false)),
+            sampler,
         })
     }
 
@@ -267,7 +307,7 @@ impl HttpServer {
     /// wait for in-flight connections, join the scheduler and return the
     /// collected results + final cache counters.
     pub fn run(self) -> Result<(Vec<JobResult>, CacheStats)> {
-        let HttpServer { listener, addr: _, state, stop } = self;
+        let HttpServer { listener, addr: _, state, stop, sampler } = self;
         let semaphore = Arc::new(Semaphore::new(state.config.max_connections.max(1)));
         let should_stop = || stop.load(Ordering::Relaxed) || signal::fired();
         while !should_stop() {
@@ -301,6 +341,12 @@ impl HttpServer {
         }
         drop(listener);
         semaphore.wait_all_returned();
+        // The sampler owns scheduler/engine Arcs: stop and join it
+        // before the unwraps below, or they would spin forever.
+        if let Some((sampler_stop, handle)) = sampler {
+            sampler_stop.store(true, Ordering::Relaxed);
+            let _ = handle.join();
+        }
         // All connection threads dropped their state clones (before
         // releasing their permits), so unwrapping succeeds; a tiny retry
         // loop covers the instant between those two drops.
@@ -349,6 +395,78 @@ impl SpawnedServer {
         self.stop.store(true, Ordering::Relaxed);
         self.handle.join().map_err(|_| anyhow!("http server thread panicked"))?
     }
+}
+
+/// Spawn the `--slo` sampler: every `sample_interval_ms` it snapshots
+/// the scheduler counters and the service-latency histogram into the
+/// engine's ring, then fires/resolves `slo-burn` alerts against the
+/// scheduler's watch store. Runs entirely off the request path — a
+/// stuck scrape or slow evaluation never delays a job or a response.
+fn spawn_slo_sampler(
+    scheduler: Arc<Scheduler>,
+    engine: Arc<crate::watch::SloEngine>,
+    stop: Arc<AtomicBool>,
+) -> std::thread::JoinHandle<()> {
+    std::thread::Builder::new()
+        .name("flexa-slo-sampler".to_string())
+        .spawn(move || {
+            let cfg = *engine.config();
+            let interval = Duration::from_millis(cfg.sample_interval_ms.max(1));
+            let epoch = Instant::now();
+            let threshold_us = cfg.service_p99_ms.map(|ms| (ms * 1e3).round() as u64);
+            loop {
+                // Sleep in short slices so shutdown stays prompt even
+                // at multi-second cadences.
+                let tick = Instant::now() + interval;
+                while Instant::now() < tick {
+                    if stop.load(Ordering::Relaxed) || signal::fired() {
+                        return;
+                    }
+                    std::thread::sleep(Duration::from_millis(25));
+                }
+                let stats = scheduler.stats();
+                let (service_good, service_total) = match threshold_us {
+                    Some(t) => crate::obs::metrics().service_under(t),
+                    None => (0, 0),
+                };
+                engine.ingest(crate::watch::SloSample {
+                    t_s: epoch.elapsed().as_secs_f64(),
+                    service_good,
+                    service_total,
+                    attempts: stats.submitted
+                        + stats.rejected
+                        + stats.quota_rejected
+                        + stats.rate_limited,
+                    shed: stats.rejected + stats.quota_rejected + stats.rate_limited,
+                    finished: stats.finished(),
+                    failed: stats.failed,
+                });
+                let status = engine.status();
+                let alerts = &scheduler.watch().alerts;
+                let now = crate::obs::now_us();
+                for target in &status.targets {
+                    let scope = format!("slo:{}", target.name);
+                    if status.samples >= 2 && target.burn_rate > cfg.burn_alert_threshold {
+                        alerts.fire(
+                            crate::watch::AlertKind::SloBurn,
+                            &scope,
+                            format!(
+                                "{} burning error budget at {:.2}x (threshold {:.2}, attainment {:.4} over {} events)",
+                                target.name,
+                                target.burn_rate,
+                                cfg.burn_alert_threshold,
+                                target.attainment,
+                                target.events,
+                            ),
+                            now,
+                        );
+                    } else {
+                        alerts.resolve(crate::watch::AlertKind::SloBurn, &scope, now);
+                    }
+                }
+            }
+        })
+        .expect("spawn flexa-slo-sampler thread")
 }
 
 /// Serve one connection: keep-alive request loop, SSE takeover, error

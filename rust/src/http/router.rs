@@ -6,6 +6,9 @@
 //! | GET    | `/v1/jobs/{id}`        | status/result JSON (`?x=1` adds the iterate) |
 //! | GET    | `/v1/jobs/{id}/events` | SSE lifecycle stream                      |
 //! | GET    | `/v1/jobs/{id}/profile`| per-job phase profile (queue/cache/kernel)|
+//! | GET    | `/v1/jobs/{id}/convergence` | per-job convergence time-series (objective/rel_err/|Sᵏ|/γ/τ) |
+//! | GET    | `/v1/alerts`           | watchdog alerts: active + recently resolved |
+//! | GET    | `/v1/slo`              | SLO attainment + burn rates (`--slo FILE`) |
 //! | GET    | `/v1/debug/trace`      | Chrome trace-event JSON (`?since_ms=N`)   |
 //! | DELETE | `/v1/jobs/{id}`        | cooperative cancellation                  |
 //! | GET    | `/v1/registry`         | registered problems/solvers               |
@@ -234,6 +237,37 @@ pub fn route(state: &ServerState, req: &Request) -> Routed {
                 },
             })
         }
+        ("GET", ["v1", "jobs", id, "convergence"]) => {
+            m.get_convergence.fetch_add(1, Ordering::Relaxed);
+            respond(match parse_id(*id) {
+                Err(r) => r,
+                Ok(id) => match visible_status(state, req, id) {
+                    // Visibility first (tenant-scoped like status), then
+                    // the series store — same retention race note as the
+                    // profile endpoint above.
+                    Ok(Some(_)) => match state.scheduler.convergence(id) {
+                        Some(snap) => Response::json(200, snap.json()),
+                        None => Response::error(
+                            404,
+                            &format!("no convergence series for job {id} (never submitted, or pruned)"),
+                        ),
+                    },
+                    Ok(None) => Response::error(
+                        404,
+                        &format!("no convergence series for job {id} (never submitted, or pruned)"),
+                    ),
+                    Err(r) => r,
+                },
+            })
+        }
+        ("GET", ["v1", "alerts"]) => {
+            m.get_alerts.fetch_add(1, Ordering::Relaxed);
+            respond(alerts(state, req))
+        }
+        ("GET", ["v1", "slo"]) => {
+            m.get_slo.fetch_add(1, Ordering::Relaxed);
+            respond(slo(state, req))
+        }
         ("GET", ["v1", "debug", "trace"]) => {
             m.get_trace.fetch_add(1, Ordering::Relaxed);
             respond(debug_trace(state, req))
@@ -258,6 +292,9 @@ pub fn route(state: &ServerState, req: &Request) -> Routed {
         (_, ["v1", "jobs", _]) => respond(method_not_allowed("GET, DELETE")),
         (_, ["v1", "jobs", _, "events"]) => respond(method_not_allowed("GET")),
         (_, ["v1", "jobs", _, "profile"]) => respond(method_not_allowed("GET")),
+        (_, ["v1", "jobs", _, "convergence"]) => respond(method_not_allowed("GET")),
+        (_, ["v1", "alerts"]) => respond(method_not_allowed("GET")),
+        (_, ["v1", "slo"]) => respond(method_not_allowed("GET")),
         (_, ["v1", "debug", "trace"]) => respond(method_not_allowed("GET")),
         (_, ["v1", "cache", "snapshot"]) => respond(method_not_allowed("GET, POST")),
         (_, ["v1", "store", "replicate"]) => respond(method_not_allowed("POST")),
@@ -288,6 +325,9 @@ pub fn endpoint_label(req: &Request) -> &'static str {
         ("DELETE", ["v1", "jobs", _]) => "delete_job",
         ("GET", ["v1", "jobs", _, "events"]) => "get_events",
         ("GET", ["v1", "jobs", _, "profile"]) => "get_profile",
+        ("GET", ["v1", "jobs", _, "convergence"]) => "get_convergence",
+        ("GET", ["v1", "alerts"]) => "get_alerts",
+        ("GET", ["v1", "slo"]) => "get_slo",
         ("GET", ["v1", "debug", "trace"]) => "get_trace",
         ("GET" | "POST", ["v1", "cache", "snapshot"]) => "cache_snapshot",
         ("POST", ["v1", "store", "replicate"]) => "store_replicate",
@@ -312,6 +352,30 @@ fn debug_trace(state: &ServerState, req: &Request) -> Response {
         .saturating_mul(1_000);
     let spans = crate::obs::snapshot(since_us);
     Response::json(200, crate::obs::trace::render(&spans, 0))
+}
+
+/// `GET /v1/alerts`: the scheduler's watchdog alerts — currently
+/// firing plus a bounded tail of recently-resolved ones. Requires an
+/// authenticated tenant like the trace endpoint: alert messages carry
+/// cross-tenant job context.
+fn alerts(state: &ServerState, req: &Request) -> Response {
+    if let Err(resp) = resolve_tenant(state, req) {
+        return resp;
+    }
+    Response::json(200, state.scheduler.watch().alerts.json())
+}
+
+/// `GET /v1/slo`: rolling-window SLO attainment and burn rates.
+/// Reports `{"configured":false}` when the server was started without
+/// `--slo`.
+fn slo(state: &ServerState, req: &Request) -> Response {
+    if let Err(resp) = resolve_tenant(state, req) {
+        return resp;
+    }
+    match &state.slo {
+        Some(engine) => Response::json(200, engine.status_json()),
+        None => Response::json(200, "{\"configured\":false}".to_string()),
+    }
 }
 
 /// The `Authorization: Bearer <token>` credential, if present.

@@ -170,6 +170,7 @@ pub fn event_name(event: &JobEvent) -> &'static str {
         JobEvent::CacheProbe { .. } => "cache",
         JobEvent::Iteration { .. } => "iteration",
         JobEvent::Retrying { .. } => "retrying",
+        JobEvent::Warning { .. } => "warning",
         JobEvent::Finished { .. } => "finished",
     }
 }

@@ -71,6 +71,11 @@
 //! The [`chaos`] layer proves the failure paths: seeded, deterministic
 //! fault injection (`FLEXA_CHAOS=<seed>`) behind zero-cost hooks in the
 //! backend client and warm-start store loader.
+//! The [`watch`] layer judges solver health: per-job convergence
+//! time-series (`GET /v1/jobs/{id}/convergence`), a stall / divergence
+//! / deadline-risk watchdog with firing→resolved alerts
+//! (`GET /v1/alerts`, SSE `warning` events), and rolling-window SLO
+//! attainment + burn rates (`flexa serve --slo FILE`, `GET /v1/slo`).
 
 pub mod algos;
 pub mod api;
@@ -94,6 +99,7 @@ pub mod select;
 pub mod serve;
 pub mod stepsize;
 pub mod tenant;
+pub mod watch;
 
 /// Crate-wide result alias.
 pub type Result<T> = anyhow::Result<T>;

@@ -214,6 +214,7 @@ fn cmd_serve(args: &[String]) -> anyhow::Result<()> {
         .opt("http", None, "serve over HTTP on this address (e.g. 127.0.0.1:8080; port 0 picks one); the jobs file becomes optional pre-submitted work")
         .opt("max-conns", Some("64"), "concurrent HTTP connections (with --http)")
         .opt("max-body-kb", Some("1024"), "largest accepted HTTP request body, KiB (with --http)")
+        .opt("slo", None, "SLO targets TOML file; enables the sampler, GET /v1/slo and slo-burn alerts (with --http)")
         .flag("no-access-log", "suppress the per-request access-log lines (with --http)")
         .flag("quiet-probes", "suppress access-log lines for successful /healthz and /metrics probes (with --http)")
         .flag("no-core-rebalance", "pin each job's kernel-thread share at dispatch instead of re-evaluating it at iteration boundaries")
@@ -221,6 +222,10 @@ fn cmd_serve(args: &[String]) -> anyhow::Result<()> {
         .flag("quiet", "suppress the stderr summary");
     let p = cmd.parse(args)?;
     let http_addr = p.get("http").map(str::to_string);
+    anyhow::ensure!(
+        p.get("slo").is_none() || http_addr.is_some(),
+        "--slo requires --http (the sampler serves GET /v1/slo)"
+    );
     let path = match p.positionals().first() {
         Some(path) => Some(path.clone()),
         None if http_addr.is_some() => None,
@@ -319,19 +324,24 @@ fn cmd_serve(args: &[String]) -> anyhow::Result<()> {
                 quiet_probes: p.flag("quiet-probes"),
                 ..flexa::http::HttpConfig::default()
             };
-            let server = flexa::http::HttpServer::bind_with_downstream(
+            let slo = match p.get("slo") {
+                Some(path) => Some(flexa::watch::SloConfig::from_file(path)?),
+                None => None,
+            };
+            let server = flexa::http::HttpServer::bind_with_slo(
                 &addr,
                 http_config,
                 config,
                 flexa::api::Registry::with_defaults(),
                 observer,
+                slo,
             )?;
             flexa::http::install_shutdown_signals();
             // Machine-parseable first line: CI greps the bound port out.
             println!("flexa http: listening on http://{}", server.local_addr());
             if !p.flag("quiet") {
                 eprintln!(
-                    "endpoints: POST /v1/jobs | GET /v1/jobs/{{id}}[/events] | DELETE /v1/jobs/{{id}} | GET /v1/registry | /healthz | /metrics"
+                    "endpoints: POST /v1/jobs | GET /v1/jobs/{{id}}[/events|/convergence] | DELETE /v1/jobs/{{id}} | GET /v1/alerts | GET /v1/slo | GET /v1/registry | /healthz | /metrics"
                 );
                 eprintln!("stop with ctrl-c (queued jobs drain before exit)");
             }

@@ -30,7 +30,7 @@ pub mod span;
 pub mod trace;
 
 pub use profile::{JobProfile, ProfileStore};
-pub use ring::{snapshot, spans_dropped};
+pub use ring::{ring_occupancy, snapshot, spans_dropped, spans_recorded};
 pub use span::{
     add_kernel_us, ctx, ctx_guard, init, instant_us, now_us, record, reset_kernel_us, set_ctx,
     span, span_detail, take_kernel_us, Ctx, InlineStr, Span, SpanGuard,
@@ -91,6 +91,23 @@ impl ObsMetrics {
         locked(&self.job_service).record_us(us);
     }
 
+    /// `(good, total)` service-time counts at the largest histogram
+    /// bucket bound ≤ `threshold_us`. Bucket granularity means the good
+    /// count can only *undercount* jobs within the threshold, so SLO
+    /// attainment computed from it is conservative (pessimistic), never
+    /// flattering.
+    pub fn service_under(&self, threshold_us: u64) -> (u64, u64) {
+        let h = locked(&self.job_service);
+        let mut good = 0u64;
+        for (bound, cumulative) in h.cumulative_buckets() {
+            match bound {
+                Some(us) if us <= threshold_us => good = cumulative,
+                _ => break,
+            }
+        }
+        (good, h.count())
+    }
+
     pub fn record_iteration(&self, solver: &str, us: u64) {
         let mut map = locked(&self.job_iteration);
         match map.get_mut(solver) {
@@ -143,6 +160,16 @@ impl ObsMetrics {
         );
         out.push_str("# TYPE flexa_obs_spans_dropped_total counter\n");
         out.push_str(&format!("flexa_obs_spans_dropped_total {}\n", ring::spans_dropped()));
+        out.push_str(
+            "# HELP flexa_obs_spans_recorded_total Trace spans successfully stored in ring buffers\n",
+        );
+        out.push_str("# TYPE flexa_obs_spans_recorded_total counter\n");
+        out.push_str(&format!("flexa_obs_spans_recorded_total {}\n", ring::spans_recorded()));
+        out.push_str("# HELP flexa_obs_ring_spans Spans currently buffered per span ring\n");
+        out.push_str("# TYPE flexa_obs_ring_spans gauge\n");
+        for (idx, occupancy) in ring::ring_occupancy() {
+            out.push_str(&format!("flexa_obs_ring_spans{{ring=\"{idx}\"}} {occupancy}\n"));
+        }
     }
 }
 
@@ -232,6 +259,19 @@ mod tests {
             );
         }
         assert!(out.contains("flexa_obs_spans_dropped_total"));
+        assert!(out.contains("# TYPE flexa_obs_spans_recorded_total counter"));
+        assert!(out.contains("# TYPE flexa_obs_ring_spans gauge"));
+
+        // service_under is conservative: good ≤ total, a zero threshold
+        // admits nothing, and a generous one sees the 42 ms sample.
+        // (The metrics instance is process-global, so no exact counts.)
+        let (good_all, total) = m.service_under(u64::MAX);
+        assert!(total >= 1);
+        assert!(good_all <= total);
+        assert!(good_all >= 1, "42 ms sample sits under a finite bucket bound");
+        let (good_tiny, total_tiny) = m.service_under(0);
+        assert_eq!(good_tiny, 0, "zero threshold counts nothing good");
+        assert_eq!(total_tiny, total);
         // Cumulative monotonicity within one labeled series.
         let mut last = 0u64;
         let mut seen = 0;

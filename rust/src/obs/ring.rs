@@ -41,6 +41,7 @@ struct Handle {
 
 static REGISTRY: OnceLock<Mutex<Vec<Arc<Handle>>>> = OnceLock::new();
 static DROPPED: AtomicU64 = AtomicU64::new(0);
+static RECORDED: AtomicU64 = AtomicU64::new(0);
 
 fn registry() -> &'static Mutex<Vec<Arc<Handle>>> {
     REGISTRY.get_or_init(|| Mutex::new(Vec::new()))
@@ -112,6 +113,7 @@ pub fn record(span: Span) {
                     ring.next = (next + 1) % RING_CAPACITY;
                     DROPPED.fetch_add(1, Ordering::Relaxed);
                 }
+                RECORDED.fetch_add(1, Ordering::Relaxed);
             }
             Err(_) => {
                 DROPPED.fetch_add(1, Ordering::Relaxed);
@@ -123,6 +125,37 @@ pub fn record(span: Span) {
 /// Total spans lost to contention, registry exhaustion, or overwrite.
 pub fn spans_dropped() -> u64 {
     DROPPED.load(Ordering::Relaxed)
+}
+
+/// Total spans successfully stored (including ones later overwritten).
+/// `recorded + dropped` is every `record` attempt ever made, so the
+/// loss *rate* — not just the loss count — is observable from
+/// `/metrics`.
+pub fn spans_recorded() -> u64 {
+    RECORDED.load(Ordering::Relaxed)
+}
+
+/// Spans currently buffered per ring: `(ring_index, occupancy)`.
+/// Occupancy saturates at [`RING_CAPACITY`]; a full ring means new
+/// spans are overwriting old ones on that thread.
+pub fn ring_occupancy() -> Vec<(usize, usize)> {
+    let handles: Vec<(usize, Arc<Handle>)> = {
+        let reg = match registry().lock() {
+            Ok(g) => g,
+            Err(p) => p.into_inner(),
+        };
+        reg.iter().enumerate().map(|(i, h)| (i, Arc::clone(h))).collect()
+    };
+    handles
+        .into_iter()
+        .map(|(i, handle)| {
+            let len = match handle.ring.lock() {
+                Ok(g) => g.spans.len(),
+                Err(p) => p.into_inner().spans.len(),
+            };
+            (i, len)
+        })
+        .collect()
 }
 
 /// Snapshot every ring (without clearing), keeping spans that *end* at
@@ -200,12 +233,26 @@ mod tests {
     #[test]
     fn overflow_overwrites_and_counts_drops() {
         let before = spans_dropped();
+        let recorded_before = spans_recorded();
         for i in 0..(RING_CAPACITY as u64 + 8) {
             record(mk("flood.x", i, 1, 9));
         }
         assert!(spans_dropped() > before, "overwrites must bump the drop counter");
+        assert!(
+            spans_recorded() >= recorded_before + RING_CAPACITY as u64,
+            "every stored span must bump the recorded counter"
+        );
         let flood =
             snapshot(0).into_iter().filter(|(_, s)| s.phase == "flood.x").count();
         assert!(flood <= RING_CAPACITY);
+    }
+
+    #[test]
+    fn occupancy_reports_this_threads_ring() {
+        record(mk("occ.x", 1, 1, 4));
+        let occ = ring_occupancy();
+        assert!(!occ.is_empty(), "at least the recording thread's ring is listed");
+        assert!(occ.iter().all(|(_, n)| *n <= RING_CAPACITY));
+        assert!(occ.iter().any(|(_, n)| *n > 0), "this thread's ring holds the span");
     }
 }

@@ -513,6 +513,10 @@ pub fn event_json(event: &JobEvent) -> String {
         JobEvent::Retrying { job, attempt, delay_ms } => {
             format!("{{\"event\":\"retrying\",\"job\":{job},\"attempt\":{attempt},\"delay_ms\":{delay_ms}}}")
         }
+        JobEvent::Warning { job, kind, resolved, message } => format!(
+            "{{\"event\":\"warning\",\"job\":{job},\"kind\":\"{kind}\",\"resolved\":{resolved},\"message\":\"{}\"}}",
+            esc(message)
+        ),
         JobEvent::Finished { job, outcome } => {
             format!("{{\"event\":\"finished\",\"job\":{job},{}}}", outcome_fields(outcome))
         }

@@ -217,6 +217,11 @@ pub enum JobEvent {
     /// will start again after `delay_ms` of backoff. `attempt` counts
     /// retries so far (1 = first retry).
     Retrying { job: u64, attempt: u32, delay_ms: u64 },
+    /// A watchdog alert edge (see [`crate::watch`]): `kind` is the
+    /// [`crate::watch::AlertKind`] label, `resolved` distinguishes the
+    /// firing edge from the all-clear. Emitted from iteration
+    /// boundaries, so it never interleaves inside an iteration.
+    Warning { job: u64, kind: &'static str, resolved: bool, message: String },
     /// Terminal event.
     Finished { job: u64, outcome: JobOutcome },
 }
@@ -230,6 +235,7 @@ impl JobEvent {
             | JobEvent::CacheProbe { job, .. }
             | JobEvent::Iteration { job, .. }
             | JobEvent::Retrying { job, .. }
+            | JobEvent::Warning { job, .. }
             | JobEvent::Finished { job, .. } => *job,
         }
     }
@@ -394,6 +400,10 @@ pub struct ServeConfig {
     /// [`crate::tenant::FsyncPolicy`]). Default [`FsyncPolicy::Never`] —
     /// the pre-policy behavior.
     pub store_fsync: FsyncPolicy,
+    /// Watchdog thresholds for the always-on solver-health detectors
+    /// (see [`crate::watch::DetectorConfig`]). Defaults keep short
+    /// fixed-budget jobs quiet; tests shrink the windows.
+    pub watch: crate::watch::DetectorConfig,
 }
 
 impl Default for ServeConfig {
@@ -410,6 +420,7 @@ impl Default for ServeConfig {
             store_max_bytes: 64 << 20,
             retry: RetryPolicy::default(),
             store_fsync: FsyncPolicy::default(),
+            watch: crate::watch::DetectorConfig::default(),
         }
     }
 }
@@ -473,6 +484,11 @@ impl ServeConfig {
     /// Sugar: enable retries with the default backoff curve.
     pub fn with_max_retries(mut self, retries: u32) -> Self {
         self.retry.max_retries = retries;
+        self
+    }
+
+    pub fn with_watch(mut self, watch: crate::watch::DetectorConfig) -> Self {
+        self.watch = watch;
         self
     }
 }
@@ -746,6 +762,10 @@ struct Shared {
     /// the same retention as results. Arc so the per-job bridge can
     /// stamp iterations without borrowing `Shared`.
     profiles: Arc<crate::obs::ProfileStore>,
+    /// Solver-health layer: per-job convergence series + watchdog
+    /// detectors + the scheduler's alert store (see [`crate::watch`]).
+    /// Same retention and Arc rationale as `profiles`.
+    watch: Arc<crate::watch::JobWatch>,
 }
 
 impl Shared {
@@ -861,6 +881,7 @@ impl Shared {
             JobOutcome::DeadlineExpired { .. } => "deadline_expired",
         };
         self.profiles.terminal(result.job, label, crate::obs::now_us());
+        self.watch.terminal(result.job, label, crate::obs::now_us());
     }
 }
 
@@ -976,6 +997,10 @@ impl Scheduler {
             rate: Mutex::new(rate),
             completions: Mutex::new(ServiceRate::default()),
             profiles: Arc::new(crate::obs::ProfileStore::new(config.finished_retention.max(1))),
+            watch: Arc::new(crate::watch::JobWatch::new(
+                config.finished_retention.max(1),
+                config.watch,
+            )),
         });
         let mut handles = Vec::with_capacity(workers);
         for w in 0..workers {
@@ -1098,6 +1123,12 @@ impl Scheduler {
         self.shared.emit(JobEvent::Queued { job: id, tag: spec.tag.clone() });
         let enqueued = Instant::now();
         self.shared.profiles.enqueued(id, &tenant, crate::obs::instant_us(enqueued));
+        self.shared.watch.enqueued(
+            id,
+            &tenant,
+            spec.deadline.map(|d| d.as_secs_f64()),
+            spec.opts.target_rel_err,
+        );
         q.jobs.push(
             &tenant,
             QueuedJob {
@@ -1250,6 +1281,21 @@ impl Scheduler {
     /// or pruned ids.
     pub fn profile(&self, id: u64) -> Option<crate::obs::JobProfile> {
         self.shared.profiles.get(id)
+    }
+
+    /// Convergence time-series of one job
+    /// (`GET /v1/jobs/{id}/convergence`): deterministically
+    /// stride-decimated (iter, objective, rel_err, |Sᵏ|, γ, τ,
+    /// iter-seconds) points plus the live frontier. Same retention as
+    /// [`Self::status`]; `None` for unknown or pruned ids.
+    pub fn convergence(&self, id: u64) -> Option<crate::watch::SeriesSnapshot> {
+        self.shared.watch.series.snapshot(id)
+    }
+
+    /// The scheduler's solver-health layer: alert store (watchdog + SLO
+    /// burn) and per-job convergence series (see [`crate::watch`]).
+    pub fn watch(&self) -> &Arc<crate::watch::JobWatch> {
+        &self.shared.watch
     }
 
     /// Request cooperative cancellation of a job by id (the handle-less
@@ -1483,6 +1529,7 @@ struct JobBridge {
     /// setup up to the first boundary.
     iter_prev_us: AtomicU64,
     profiles: Arc<crate::obs::ProfileStore>,
+    watch: Arc<crate::watch::JobWatch>,
 }
 
 impl JobBridge {
@@ -1522,6 +1569,21 @@ impl EventObserver for JobBridge {
             self.tau_bits.store(event.tau.to_bits(), Ordering::Relaxed);
         }
         emit_to(&self.observer, &JobEvent::Iteration { job: self.job, event: *event });
+        // Watchdog pass: series append + detectors, same observation
+        // contract as the profile stamp above. Alert edges (rare)
+        // become `warning` events after the iteration event so streams
+        // stay ordered cause → diagnosis.
+        for t in self.watch.observe(self.job, event) {
+            emit_to(
+                &self.observer,
+                &JobEvent::Warning {
+                    job: self.job,
+                    kind: t.kind.label(),
+                    resolved: t.resolved,
+                    message: t.message,
+                },
+            );
+        }
         if let Some(u) = &self.user {
             u.on_iteration(event);
         }
@@ -1695,6 +1757,7 @@ fn run_job(shared: &Shared, worker: usize, job: &QueuedJob) -> RunOutcome {
     };
     let solver_name = solver.name();
     shared.profiles.with(id, |p| p.solver = solver_name.clone());
+    shared.watch.started(id, &solver_name);
 
     let bridge = Arc::new(JobBridge {
         job: id,
@@ -1705,6 +1768,7 @@ fn run_job(shared: &Shared, worker: usize, job: &QueuedJob) -> RunOutcome {
         solver: solver_name.clone(),
         iter_prev_us: AtomicU64::new(crate::obs::now_us()),
         profiles: Arc::clone(&shared.profiles),
+        watch: Arc::clone(&shared.watch),
     });
     opts.observer = Some(bridge.clone());
 

@@ -1,0 +1,397 @@
+//! Typed alerts with a firing → resolved lifecycle.
+//!
+//! The [`AlertStore`] is the single sink for everything the watchdog
+//! layer concludes: solver-health detections ([`AlertKind::Stall`],
+//! [`AlertKind::Divergence`], [`AlertKind::DeadlineRisk`]), SLO
+//! burn-rate breaches ([`AlertKind::SloBurn`]), and — on the cluster
+//! router — backend-health alerts ([`AlertKind::BackendDown`],
+//! [`AlertKind::BackendFlapping`], [`AlertKind::FailoverSpike`]).
+//!
+//! Every alert is keyed by `(kind, scope)` — e.g. `(Stall, "job:12")`
+//! or `(BackendDown, "backend:b1")` — so a condition that persists
+//! across many detector passes is ONE alert with one `since_us`, not a
+//! new alert per pass. Resolving moves it into a bounded history ring
+//! so `GET /v1/alerts` can show recently-cleared incidents (and CI can
+//! assert a stall fired even after the job finished). Totals per kind
+//! are monotone counters feeding `flexa_alerts_total{kind}`; the
+//! active map feeds `flexa_alerts_active{kind}`.
+//!
+//! Locking mirrors [`crate::obs::ProfileStore`]: one poison-tolerant
+//! mutex, with every critical section doing bounded work (no I/O, no
+//! allocation proportional to history beyond the ring push).
+
+use std::collections::{HashMap, VecDeque};
+use std::sync::Mutex;
+
+/// Everything the watch layer knows how to complain about.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum AlertKind {
+    /// No relative objective improvement over the detector window.
+    Stall,
+    /// Objective increase streak or a non-finite objective.
+    Divergence,
+    /// Convergence ETA projects past the job deadline.
+    DeadlineRisk,
+    /// An SLO target is burning error budget faster than allowed.
+    SloBurn,
+    /// A cluster backend flipped unhealthy.
+    BackendDown,
+    /// A backend's healthy bit flipped repeatedly within the window.
+    BackendFlapping,
+    /// Failover redispatches spiked within the window.
+    FailoverSpike,
+}
+
+impl AlertKind {
+    /// Every kind, in the order `/metrics` renders them. Fixed so the
+    /// cluster's textual metric aggregation always sees aligned series.
+    pub const ALL: [AlertKind; 7] = [
+        AlertKind::Stall,
+        AlertKind::Divergence,
+        AlertKind::DeadlineRisk,
+        AlertKind::SloBurn,
+        AlertKind::BackendDown,
+        AlertKind::BackendFlapping,
+        AlertKind::FailoverSpike,
+    ];
+
+    /// Stable label used in JSON, SSE `warning` events, and the
+    /// `{kind="…"}` Prometheus dimension.
+    pub fn label(&self) -> &'static str {
+        match self {
+            AlertKind::Stall => "stall",
+            AlertKind::Divergence => "divergence",
+            AlertKind::DeadlineRisk => "deadline-risk",
+            AlertKind::SloBurn => "slo-burn",
+            AlertKind::BackendDown => "backend-down",
+            AlertKind::BackendFlapping => "backend-flapping",
+            AlertKind::FailoverSpike => "failover-spike",
+        }
+    }
+
+    fn index(&self) -> usize {
+        Self::ALL.iter().position(|k| k == self).unwrap_or(0)
+    }
+}
+
+/// One alert instance. `resolved_us == None` means it is still firing.
+#[derive(Clone, Debug)]
+pub struct Alert {
+    /// Store-unique id (monotone per store).
+    pub id: u64,
+    pub kind: AlertKind,
+    /// What the alert is about: `job:<id>`, `backend:<id>`, `slo:<target>`.
+    pub scope: String,
+    /// Human-readable cause, safe to surface verbatim.
+    pub message: String,
+    /// Microsecond timestamp (obs clock) when the alert started firing.
+    pub since_us: u64,
+    /// Set when the condition cleared.
+    pub resolved_us: Option<u64>,
+}
+
+impl Alert {
+    fn json(&self) -> String {
+        let resolved = match self.resolved_us {
+            Some(us) => format!("{us}"),
+            None => "null".to_string(),
+        };
+        format!(
+            "{{\"id\":{},\"kind\":\"{}\",\"scope\":\"{}\",\"message\":\"{}\",\
+             \"since_us\":{},\"resolved_us\":{}}}",
+            self.id,
+            self.kind.label(),
+            crate::serve::jobfile::esc(&self.scope),
+            crate::serve::jobfile::esc(&self.message),
+            self.since_us,
+            resolved,
+        )
+    }
+}
+
+struct AlertInner {
+    next_id: u64,
+    active: HashMap<(AlertKind, String), Alert>,
+    /// Resolved alerts, newest at the back, bounded by `retention`.
+    history: VecDeque<Alert>,
+    retention: usize,
+    /// Monotone fired totals per kind (indexed by `AlertKind::index`).
+    fired: [u64; AlertKind::ALL.len()],
+}
+
+/// Concurrent alert sink; see the module docs for semantics.
+pub struct AlertStore {
+    inner: Mutex<AlertInner>,
+}
+
+impl AlertStore {
+    /// `retention` bounds the resolved-history ring (min 1).
+    pub fn new(retention: usize) -> Self {
+        AlertStore {
+            inner: Mutex::new(AlertInner {
+                next_id: 1,
+                active: HashMap::new(),
+                history: VecDeque::new(),
+                retention: retention.max(1),
+                fired: [0; AlertKind::ALL.len()],
+            }),
+        }
+    }
+
+    fn locked(&self) -> std::sync::MutexGuard<'_, AlertInner> {
+        self.inner.lock().unwrap_or_else(|p| p.into_inner())
+    }
+
+    /// Start (or refresh) an alert. Returns `true` when this call
+    /// transitioned the `(kind, scope)` pair from quiet to firing — the
+    /// caller uses that edge to emit exactly one SSE `warning` event.
+    /// An already-firing alert keeps its `since_us` and only updates
+    /// its message.
+    pub fn fire(&self, kind: AlertKind, scope: &str, message: String, now_us: u64) -> bool {
+        let mut inner = self.locked();
+        let key = (kind, scope.to_string());
+        if let Some(existing) = inner.active.get_mut(&key) {
+            existing.message = message;
+            return false;
+        }
+        let id = inner.next_id;
+        inner.next_id += 1;
+        inner.fired[kind.index()] += 1;
+        inner.active.insert(
+            key,
+            Alert { id, kind, scope: scope.to_string(), message, since_us: now_us, resolved_us: None },
+        );
+        true
+    }
+
+    /// Clear one `(kind, scope)` alert. Returns `true` on the
+    /// firing → resolved edge (the caller emits the resolved warning).
+    pub fn resolve(&self, kind: AlertKind, scope: &str, now_us: u64) -> bool {
+        let mut inner = self.locked();
+        let key = (kind, scope.to_string());
+        match inner.active.remove(&key) {
+            Some(mut alert) => {
+                alert.resolved_us = Some(now_us);
+                inner.history.push_back(alert);
+                while inner.history.len() > inner.retention {
+                    inner.history.pop_front();
+                }
+                true
+            }
+            None => false,
+        }
+    }
+
+    /// Resolve every active alert whose scope matches (job went
+    /// terminal, backend deregistered). Returns the kinds cleared.
+    pub fn resolve_scope(&self, scope: &str, now_us: u64) -> Vec<AlertKind> {
+        let mut inner = self.locked();
+        let keys: Vec<(AlertKind, String)> =
+            inner.active.keys().filter(|(_, s)| s == scope).cloned().collect();
+        let mut cleared = Vec::with_capacity(keys.len());
+        for key in keys {
+            if let Some(mut alert) = inner.active.remove(&key) {
+                alert.resolved_us = Some(now_us);
+                cleared.push(alert.kind);
+                inner.history.push_back(alert);
+                while inner.history.len() > inner.retention {
+                    inner.history.pop_front();
+                }
+            }
+        }
+        cleared
+    }
+
+    /// `(label, fired_total, active_now)` for every kind in
+    /// [`AlertKind::ALL`] order — the `/metrics` feed. Always emits the
+    /// full kind set so scrapes (and the cluster's line-summing
+    /// aggregation) see a fixed family shape.
+    pub fn counts(&self) -> Vec<(&'static str, u64, u64)> {
+        let inner = self.locked();
+        let mut active = [0u64; AlertKind::ALL.len()];
+        for (kind, _) in inner.active.keys() {
+            active[kind.index()] += 1;
+        }
+        AlertKind::ALL
+            .iter()
+            .map(|k| (k.label(), inner.fired[k.index()], active[k.index()]))
+            .collect()
+    }
+
+    /// Currently-firing alerts, oldest first.
+    pub fn active(&self) -> Vec<Alert> {
+        let inner = self.locked();
+        let mut v: Vec<Alert> = inner.active.values().cloned().collect();
+        v.sort_by_key(|a| a.id);
+        v
+    }
+
+    /// Recently-resolved alerts, oldest first.
+    pub fn recent(&self) -> Vec<Alert> {
+        let inner = self.locked();
+        inner.history.iter().cloned().collect()
+    }
+
+    /// Whether a specific `(kind, scope)` alert is firing right now.
+    pub fn is_firing(&self, kind: AlertKind, scope: &str) -> bool {
+        let inner = self.locked();
+        inner.active.contains_key(&(kind, scope.to_string()))
+    }
+
+    /// The `GET /v1/alerts` body: active + recently-resolved alerts.
+    pub fn json(&self) -> String {
+        let inner = self.locked();
+        let mut active: Vec<&Alert> = inner.active.values().collect();
+        active.sort_by_key(|a| a.id);
+        let active: Vec<String> = active.iter().map(|a| a.json()).collect();
+        let recent: Vec<String> = inner.history.iter().map(|a| a.json()).collect();
+        format!("{{\"active\":[{}],\"recent\":[{}]}}", active.join(","), recent.join(","))
+    }
+}
+
+/// Sliding-window rate over a monotone cumulative counter.
+///
+/// The cluster watchdog samples counters (health-flip transitions,
+/// failovers) on its sweep cadence and asks "how much did this grow in
+/// the last W seconds?". Timestamps are plain f64 seconds so tests can
+/// fabricate clocks — `Instant` cannot be constructed at will.
+pub struct RateWindow {
+    window_s: f64,
+    /// `(t_s, cumulative)` samples, oldest at the front.
+    samples: VecDeque<(f64, u64)>,
+}
+
+impl RateWindow {
+    pub fn new(window_s: f64) -> Self {
+        RateWindow { window_s: window_s.max(0.0), samples: VecDeque::new() }
+    }
+
+    /// Record `(now_s, cumulative)` and return the counter's growth
+    /// within the window ending at `now_s`. Out-of-order or regressing
+    /// inputs clamp to zero growth rather than panicking.
+    pub fn observe(&mut self, now_s: f64, cumulative: u64) -> u64 {
+        self.samples.push_back((now_s, cumulative));
+        // Drop samples that fell out of the window, but always keep the
+        // newest sample at-or-before the boundary so the delta spans the
+        // full window rather than only the surviving samples.
+        while self.samples.len() > 1 {
+            let second_t = self.samples[1].0;
+            if second_t <= now_s - self.window_s {
+                self.samples.pop_front();
+            } else {
+                break;
+            }
+        }
+        let oldest = self.samples.front().map(|&(_, c)| c).unwrap_or(cumulative);
+        cumulative.saturating_sub(oldest)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fire_resolve_lifecycle_and_counts() {
+        let store = AlertStore::new(8);
+        assert!(store.fire(AlertKind::Stall, "job:1", "flat".into(), 100));
+        // Re-firing the same (kind, scope) is not a new alert.
+        assert!(!store.fire(AlertKind::Stall, "job:1", "still flat".into(), 200));
+        assert!(store.fire(AlertKind::Divergence, "job:2", "up".into(), 150));
+
+        let counts = store.counts();
+        assert_eq!(counts.len(), AlertKind::ALL.len());
+        let stall = counts.iter().find(|(l, _, _)| *l == "stall").unwrap();
+        assert_eq!((stall.1, stall.2), (1, 1));
+
+        let active = store.active();
+        assert_eq!(active.len(), 2);
+        assert_eq!(active[0].since_us, 100, "refresh keeps original since_us");
+        assert_eq!(active[0].message, "still flat", "refresh updates the message");
+
+        assert!(store.resolve(AlertKind::Stall, "job:1", 300));
+        assert!(!store.resolve(AlertKind::Stall, "job:1", 301), "second resolve is a no-op");
+        let stall = store.counts().into_iter().find(|(l, _, _)| *l == "stall").unwrap();
+        assert_eq!((stall.1, stall.2), (1, 0), "total stays, active clears");
+        let recent = store.recent();
+        assert_eq!(recent.len(), 1);
+        assert_eq!(recent[0].resolved_us, Some(300));
+    }
+
+    #[test]
+    fn resolve_scope_clears_all_kinds_for_that_scope() {
+        let store = AlertStore::new(8);
+        store.fire(AlertKind::Stall, "job:7", "a".into(), 1);
+        store.fire(AlertKind::DeadlineRisk, "job:7", "b".into(), 2);
+        store.fire(AlertKind::Stall, "job:8", "c".into(), 3);
+        let mut cleared = store.resolve_scope("job:7", 10);
+        cleared.sort_by_key(|k| k.index());
+        assert_eq!(cleared, vec![AlertKind::Stall, AlertKind::DeadlineRisk]);
+        assert_eq!(store.active().len(), 1);
+        assert!(store.is_firing(AlertKind::Stall, "job:8"));
+    }
+
+    #[test]
+    fn history_is_bounded_by_retention() {
+        let store = AlertStore::new(3);
+        for i in 0..10u64 {
+            let scope = format!("job:{i}");
+            store.fire(AlertKind::Stall, &scope, "x".into(), i);
+            store.resolve(AlertKind::Stall, &scope, i + 1);
+        }
+        let recent = store.recent();
+        assert_eq!(recent.len(), 3);
+        assert_eq!(recent[0].scope, "job:7", "oldest entries pruned first");
+        let stall = store.counts().into_iter().find(|(l, _, _)| *l == "stall").unwrap();
+        assert_eq!(stall.1, 10, "fired total is monotone across pruning");
+    }
+
+    #[test]
+    fn json_is_parseable_and_complete() {
+        let store = AlertStore::new(4);
+        store.fire(AlertKind::Divergence, "job:3", "objective rose 5x in \"run\"".into(), 42);
+        store.fire(AlertKind::BackendDown, "backend:b1", "probe failures".into(), 50);
+        store.resolve(AlertKind::BackendDown, "backend:b1", 60);
+        let body = store.json();
+        let parsed = crate::serve::jobfile::Json::parse(&body).expect("alert json parses");
+        let active = match parsed.get("active") {
+            Some(crate::serve::jobfile::Json::Arr(items)) => items,
+            other => panic!("active is not an array: {other:?}"),
+        };
+        assert_eq!(active.len(), 1);
+        assert_eq!(active[0].get("kind").and_then(|v| v.as_str()), Some("divergence"));
+        assert!(
+            matches!(active[0].get("resolved_us"), Some(crate::serve::jobfile::Json::Null)),
+            "firing alert renders resolved_us as null"
+        );
+        let recent = match parsed.get("recent") {
+            Some(crate::serve::jobfile::Json::Arr(items)) => items,
+            other => panic!("recent is not an array: {other:?}"),
+        };
+        assert_eq!(recent.len(), 1);
+        assert_eq!(recent[0].get("resolved_us").and_then(|v| v.as_f64()), Some(60.0));
+    }
+
+    #[test]
+    fn rate_window_tracks_growth_within_window() {
+        let mut w = RateWindow::new(10.0);
+        assert_eq!(w.observe(0.0, 0), 0);
+        assert_eq!(w.observe(2.0, 3), 3);
+        assert_eq!(w.observe(5.0, 5), 5);
+        // t=12: the t=0 sample leaves the window; t=2 is the boundary-
+        // keeper, so growth is measured against cumulative=3... once
+        // t=2 itself expires (t=13 window start is 3.0 > 2.0) the t=5
+        // sample anchors the delta.
+        assert_eq!(w.observe(12.0, 6), 6 - 3);
+        assert_eq!(w.observe(16.0, 6), 6 - 5);
+        // A long quiet stretch drains the window to zero growth.
+        assert_eq!(w.observe(100.0, 6), 0);
+    }
+
+    #[test]
+    fn rate_window_clamps_counter_regressions() {
+        let mut w = RateWindow::new(5.0);
+        w.observe(0.0, 10);
+        assert_eq!(w.observe(1.0, 4), 0, "regressing counter clamps, never underflows");
+    }
+}

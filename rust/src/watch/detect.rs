@@ -1,0 +1,398 @@
+//! Solver-health detectors: stall, divergence, deadline-risk.
+//!
+//! One [`Detector`] lives per job (inside [`crate::watch::JobWatch`])
+//! and is fed the per-iteration numbers the solver already emits in
+//! [`crate::api::IterEvent`]. Detection is pure arithmetic on those
+//! numbers — it never touches the solver state, so golden IterEvent
+//! streams and thread-count bit-identity are untouched by contract.
+//!
+//! ## Conditions
+//!
+//! - **Stall** — the best objective seen so far has not improved by a
+//!   relative `stall_epsilon` for `stall_window` consecutive
+//!   iterations, and the solve has run at least `2 * stall_window`
+//!   iterations (the grace period keeps short fixed-budget jobs quiet).
+//!   Resolves as soon as the objective improves again.
+//! - **Divergence** — `divergence_streak` consecutive objective
+//!   increases, or a non-finite objective (NaN/Inf). `rel_err`, `γ`,
+//!   and `τ` are NaN *by contract* for some solvers (unknown `V*`,
+//!   solvers without those knobs) and are explicitly NOT divergence
+//!   signals. An increase-streak divergence resolves once the
+//!   objective falls below the level where the streak started; a
+//!   non-finite objective never resolves.
+//! - **Deadline-risk** — for jobs with both a deadline and a positive
+//!   `target_rel_err`: fit the recent `ln(rel_err)` decay rate and
+//!   project the time needed to reach the target; fire when the
+//!   projection (times `deadline_margin`) lands past the deadline.
+//!   Resolves when the projection comes back inside the deadline or
+//!   the target is reached.
+//!
+//! Each state change is reported as a [`Transition`] so the caller can
+//! emit exactly one SSE `warning` event per edge.
+
+use super::alerts::AlertKind;
+use std::collections::VecDeque;
+
+/// Detector thresholds. Lives on [`crate::serve::ServeConfig`] so tests
+/// and deployments can tighten or relax the windows per scheduler.
+#[derive(Clone, Copy, Debug)]
+pub struct DetectorConfig {
+    /// Iterations without relative objective improvement before a
+    /// stall fires (also the sample span for the deadline-risk fit).
+    pub stall_window: usize,
+    /// Relative improvement below this counts as "no progress".
+    pub stall_epsilon: f64,
+    /// Consecutive objective increases before divergence fires.
+    pub divergence_streak: usize,
+    /// Safety factor applied to the convergence ETA before comparing
+    /// against the remaining deadline budget.
+    pub deadline_margin: f64,
+}
+
+impl Default for DetectorConfig {
+    fn default() -> Self {
+        DetectorConfig {
+            stall_window: 25,
+            stall_epsilon: 1e-9,
+            divergence_streak: 5,
+            deadline_margin: 1.25,
+        }
+    }
+}
+
+/// One alert edge produced by a detector pass.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Transition {
+    pub kind: AlertKind,
+    /// `false` = started firing, `true` = resolved.
+    pub resolved: bool,
+    pub message: String,
+}
+
+/// Per-job detector state. See the module docs for the conditions.
+pub struct Detector {
+    config: DetectorConfig,
+    /// Job deadline in seconds from submission, if any.
+    deadline_s: Option<f64>,
+    /// Target relative error (`0` = run to the iteration budget).
+    target: f64,
+    best: f64,
+    best_iter: u64,
+    prev_objective: f64,
+    increase_streak: usize,
+    /// Objective level when the current increase streak began; the
+    /// divergence alert resolves once we drop back below it.
+    streak_base: f64,
+    /// `(time_s, rel_err)` ring for the deadline-risk decay fit.
+    err_window: VecDeque<(f64, f64)>,
+    stall: bool,
+    divergence: bool,
+    nonfinite: bool,
+    deadline_risk: bool,
+}
+
+impl Detector {
+    pub fn new(config: DetectorConfig, deadline_s: Option<f64>, target: f64) -> Self {
+        Detector {
+            config,
+            deadline_s,
+            target,
+            best: f64::INFINITY,
+            best_iter: 0,
+            prev_objective: f64::INFINITY,
+            increase_streak: 0,
+            streak_base: f64::INFINITY,
+            err_window: VecDeque::new(),
+            stall: false,
+            divergence: false,
+            nonfinite: false,
+            deadline_risk: false,
+        }
+    }
+
+    /// Feed one iteration boundary; returns every alert edge it caused.
+    pub fn observe(&mut self, iter: u64, objective: f64, rel_err: f64, time_s: f64) -> Vec<Transition> {
+        let mut out = Vec::new();
+        self.observe_divergence(iter, objective, &mut out);
+        self.observe_stall(iter, objective, rel_err, &mut out);
+        self.observe_deadline(iter, rel_err, time_s, &mut out);
+        self.prev_objective = objective;
+        out
+    }
+
+    fn observe_divergence(&mut self, iter: u64, objective: f64, out: &mut Vec<Transition>) {
+        if !objective.is_finite() {
+            if !self.divergence {
+                self.divergence = true;
+                self.nonfinite = true;
+                out.push(Transition {
+                    kind: AlertKind::Divergence,
+                    resolved: false,
+                    message: format!("objective is non-finite ({objective}) at iteration {iter}"),
+                });
+            }
+            return;
+        }
+        if self.nonfinite {
+            // A NaN/Inf objective is terminal for the trajectory's
+            // trustworthiness; never auto-resolve it.
+            return;
+        }
+        if objective > self.prev_objective {
+            if self.increase_streak == 0 {
+                self.streak_base = self.prev_objective;
+            }
+            self.increase_streak += 1;
+            if self.increase_streak >= self.config.divergence_streak && !self.divergence {
+                self.divergence = true;
+                out.push(Transition {
+                    kind: AlertKind::Divergence,
+                    resolved: false,
+                    message: format!(
+                        "objective rose for {} consecutive iterations (now {objective:.6e} at iteration {iter})",
+                        self.increase_streak
+                    ),
+                });
+            }
+        } else {
+            self.increase_streak = 0;
+            if self.divergence && objective <= self.streak_base {
+                self.divergence = false;
+                out.push(Transition {
+                    kind: AlertKind::Divergence,
+                    resolved: true,
+                    message: format!("objective fell back to {objective:.6e} at iteration {iter}"),
+                });
+            }
+        }
+    }
+
+    fn observe_stall(&mut self, iter: u64, objective: f64, rel_err: f64, out: &mut Vec<Transition>) {
+        let scale = self.best.abs().max(1e-300);
+        let improved = objective.is_finite()
+            && (self.best.is_infinite() || (self.best - objective) / scale > self.config.stall_epsilon);
+        if improved {
+            self.best = objective;
+            self.best_iter = iter;
+            if self.stall {
+                self.stall = false;
+                out.push(Transition {
+                    kind: AlertKind::Stall,
+                    resolved: true,
+                    message: format!("objective improving again at iteration {iter}"),
+                });
+            }
+            return;
+        }
+        // A job that already met its target is converged, not stalled,
+        // even if it keeps iterating toward a wall-clock or iter budget.
+        let at_target = self.target > 0.0 && rel_err.is_finite() && rel_err <= self.target;
+        let window = self.config.stall_window as u64;
+        let flat_for = iter.saturating_sub(self.best_iter);
+        if !self.stall && !at_target && flat_for >= window && iter >= 2 * window {
+            self.stall = true;
+            out.push(Transition {
+                kind: AlertKind::Stall,
+                resolved: false,
+                message: format!(
+                    "no relative objective decrease > {:.1e} for {flat_for} iterations (best {:.6e} at iteration {})",
+                    self.config.stall_epsilon, self.best, self.best_iter
+                ),
+            });
+        }
+    }
+
+    fn observe_deadline(&mut self, iter: u64, rel_err: f64, time_s: f64, out: &mut Vec<Transition>) {
+        let deadline_s = match self.deadline_s {
+            Some(d) if self.target > 0.0 => d,
+            _ => return,
+        };
+        if rel_err.is_finite() && rel_err > 0.0 {
+            self.err_window.push_back((time_s, rel_err));
+            while self.err_window.len() > self.config.stall_window.max(2) {
+                self.err_window.pop_front();
+            }
+        }
+        if self.target > 0.0 && rel_err.is_finite() && rel_err <= self.target {
+            if self.deadline_risk {
+                self.deadline_risk = false;
+                out.push(Transition {
+                    kind: AlertKind::DeadlineRisk,
+                    resolved: true,
+                    message: format!("target reached at iteration {iter}"),
+                });
+            }
+            return;
+        }
+        if self.err_window.len() < 2 {
+            return;
+        }
+        let (t0, e0) = *self.err_window.front().unwrap();
+        let (t1, e1) = *self.err_window.back().unwrap();
+        if t1 <= t0 {
+            return;
+        }
+        // Per-second exponential decay rate of rel_err over the window.
+        let rate = (e0.ln() - e1.ln()) / (t1 - t0);
+        let eta_s = if rate > 0.0 { (e1 / self.target).ln() / rate } else { f64::INFINITY };
+        let at_risk = time_s + eta_s * self.config.deadline_margin > deadline_s;
+        if at_risk && !self.deadline_risk {
+            self.deadline_risk = true;
+            let eta = if eta_s.is_finite() { format!("{eta_s:.1}s") } else { "never".to_string() };
+            out.push(Transition {
+                kind: AlertKind::DeadlineRisk,
+                resolved: false,
+                message: format!(
+                    "projected convergence in {eta} at iteration {iter} exceeds the {deadline_s:.1}s deadline \
+                     (rel_err {e1:.3e}, target {:.1e})",
+                    self.target
+                ),
+            });
+        } else if !at_risk && self.deadline_risk {
+            self.deadline_risk = false;
+            out.push(Transition {
+                kind: AlertKind::DeadlineRisk,
+                resolved: true,
+                message: format!("projection back inside the deadline at iteration {iter}"),
+            });
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn cfg(window: usize, streak: usize) -> DetectorConfig {
+        DetectorConfig {
+            stall_window: window,
+            stall_epsilon: 1e-9,
+            divergence_streak: streak,
+            deadline_margin: 1.25,
+        }
+    }
+
+    #[test]
+    fn stall_fires_after_flat_window_and_resolves_on_progress() {
+        let mut d = Detector::new(cfg(5, 5), None, 0.0);
+        let mut fired_at = None;
+        // Decrease for 5 iterations, then go flat.
+        for iter in 0..30u64 {
+            let obj = if iter < 5 { 100.0 - iter as f64 } else { 96.0 };
+            for t in d.observe(iter, obj, f64::NAN, iter as f64 * 0.01) {
+                assert_eq!(t.kind, AlertKind::Stall);
+                assert!(!t.resolved);
+                assert!(fired_at.is_none(), "stall fires exactly once while flat");
+                fired_at = Some(iter);
+            }
+        }
+        // Flat since iter 4; window 5 → eligible at iter 9, but the
+        // 2*window grace holds it to iteration 10.
+        assert_eq!(fired_at, Some(10));
+        // Progress resolves it.
+        let ts = d.observe(30, 50.0, f64::NAN, 0.3);
+        assert_eq!(ts.len(), 1);
+        assert_eq!((ts[0].kind, ts[0].resolved), (AlertKind::Stall, true));
+    }
+
+    #[test]
+    fn stall_stays_quiet_for_short_fixed_budget_jobs() {
+        // 40 iterations that converge at iter 10 and then sit flat —
+        // the default 25-iteration window requires >= 50 iterations
+        // before a stall can fire, so the serve test workloads
+        // (max_iters 40, target 0) never alert.
+        let mut d = Detector::new(DetectorConfig::default(), None, 0.0);
+        for iter in 0..40u64 {
+            let obj = if iter < 10 { 10.0 - iter as f64 } else { 0.5 };
+            assert!(d.observe(iter, obj, f64::NAN, iter as f64 * 0.01).is_empty());
+        }
+    }
+
+    #[test]
+    fn stall_respects_reached_target() {
+        // Flat objective but rel_err already at the target: converged,
+        // not stalled.
+        let mut d = Detector::new(cfg(3, 5), None, 1e-4);
+        for iter in 0..40u64 {
+            assert!(d.observe(iter, 1.0, 5e-5, iter as f64 * 0.01).is_empty());
+        }
+    }
+
+    #[test]
+    fn divergence_fires_on_increase_streak_and_resolves_below_base() {
+        let mut d = Detector::new(cfg(50, 3), None, 0.0);
+        assert!(d.observe(0, 10.0, f64::NAN, 0.0).is_empty());
+        assert!(d.observe(1, 11.0, f64::NAN, 0.01).is_empty());
+        assert!(d.observe(2, 12.0, f64::NAN, 0.02).is_empty());
+        let ts = d.observe(3, 13.0, f64::NAN, 0.03);
+        assert_eq!(ts.len(), 1);
+        assert_eq!((ts[0].kind, ts[0].resolved), (AlertKind::Divergence, false));
+        // Dropping, but still above the streak base (10.0): firing.
+        assert!(d.observe(4, 11.5, f64::NAN, 0.04).is_empty());
+        // Below the base: resolved.
+        let ts = d.observe(5, 9.0, f64::NAN, 0.05);
+        assert_eq!(ts.len(), 1);
+        assert_eq!((ts[0].kind, ts[0].resolved), (AlertKind::Divergence, true));
+    }
+
+    #[test]
+    fn divergence_fires_immediately_on_nonfinite_objective_and_sticks() {
+        let mut d = Detector::new(cfg(50, 5), None, 0.0);
+        assert!(d.observe(0, 5.0, f64::NAN, 0.0).is_empty());
+        let ts = d.observe(1, f64::NAN, f64::NAN, 0.01);
+        assert_eq!(ts.len(), 1);
+        assert_eq!((ts[0].kind, ts[0].resolved), (AlertKind::Divergence, false));
+        // NaN rel_err / γ / τ are contract, not divergence — and a
+        // recovered finite objective does not resolve a NaN trajectory.
+        assert!(d.observe(2, 4.0, f64::NAN, 0.02).is_empty());
+    }
+
+    #[test]
+    fn deadline_risk_projects_eta_from_decay_rate() {
+        // rel_err decays 10x per second of solve time; target 1e-6 from
+        // 1e-1 needs ~5 more seconds. Deadline at 2s → at risk.
+        let mut d = Detector::new(cfg(4, 5), Some(2.0), 1e-6);
+        let mut fired = false;
+        for iter in 0..10u64 {
+            let t = iter as f64 * 0.1;
+            let err = 1e-1 * 10f64.powf(-t);
+            for tr in d.observe(iter, 10.0 - iter as f64, err, t) {
+                assert_eq!((tr.kind, tr.resolved), (AlertKind::DeadlineRisk, false));
+                fired = true;
+            }
+        }
+        assert!(fired, "slow decay vs tight deadline must fire");
+
+        // Same decay, generous deadline → quiet.
+        let mut ok = Detector::new(cfg(4, 5), Some(60.0), 1e-6);
+        for iter in 0..10u64 {
+            let t = iter as f64 * 0.1;
+            let err = 1e-1 * 10f64.powf(-t);
+            assert!(ok.observe(iter, 10.0 - iter as f64, err, t).is_empty());
+        }
+    }
+
+    #[test]
+    fn deadline_risk_resolves_when_target_reached() {
+        let mut d = Detector::new(cfg(2, 5), Some(0.5), 1e-3);
+        // Two nearly-flat samples → rate ~0 → ETA infinite → fires.
+        let mut edges: Vec<Transition> = Vec::new();
+        edges.extend(d.observe(0, 1.0, 1e-1, 0.0));
+        edges.extend(d.observe(1, 0.99, 9.9e-2, 0.1));
+        assert!(edges.iter().any(|t| t.kind == AlertKind::DeadlineRisk && !t.resolved));
+        // Target reached → resolved.
+        let ts = d.observe(2, 0.5, 5e-4, 0.2);
+        assert!(ts.iter().any(|t| t.kind == AlertKind::DeadlineRisk && t.resolved));
+    }
+
+    #[test]
+    fn deadline_risk_requires_deadline_and_target() {
+        let mut no_deadline = Detector::new(cfg(2, 5), None, 1e-6);
+        let mut no_target = Detector::new(cfg(2, 5), Some(0.01), 0.0);
+        for iter in 0..20u64 {
+            let t = iter as f64 * 0.1;
+            assert!(no_deadline.observe(iter, 1.0 - t, 1e-1, t).is_empty());
+            assert!(no_target.observe(iter, 1.0 - t, 1e-1, t).is_empty());
+        }
+    }
+}

@@ -1,0 +1,181 @@
+//! `flexa::watch` — solver-health telemetry, watchdog, and SLOs.
+//!
+//! PR 8's `flexa::obs` answers *where does wall-clock time go?*; this
+//! layer answers *is this solve healthy?*. It taps the numerical state
+//! the scheduler already emits once per iteration ([`crate::api::IterEvent`]:
+//! objective `V(xᵏ)`, relative error, `|Sᵏ|`, `γᵏ`, `τᵏ` — the
+//! selection machinery of arXiv:1311.2444) and turns it into:
+//!
+//! - **Convergence time-series** ([`series`]) — per-job bounded,
+//!   deterministically stride-decimated histories, served at
+//!   `GET /v1/jobs/{id}/convergence` and pruned with the scheduler's
+//!   finished-retention.
+//! - **Watchdog** ([`detect`]) — stall / divergence / deadline-risk
+//!   detection at iteration boundaries, feeding typed [`Alert`]s with
+//!   a firing → resolved lifecycle ([`alerts`]), surfaced at
+//!   `GET /v1/alerts`, as SSE `warning` events, and as
+//!   `flexa_alerts_total{kind}` / `flexa_alerts_active{kind}`.
+//! - **SLO engine** ([`slo`]) — `--slo FILE.toml` targets (service
+//!   latency, shed rate, error rate) evaluated over a rolling sample
+//!   window with burn rates at `GET /v1/slo`.
+//!
+//! The cluster router reuses the same [`AlertStore`] + [`RateWindow`]
+//! for backend-down / flapping / failover-spike alerts and rolls
+//! backend alert+SLO state up into `GET /v1/cluster`.
+//!
+//! ## Hot-path contract
+//!
+//! Everything here observes; nothing steers. The watch pass runs on
+//! the worker thread *after* the solver finished an iteration, reads
+//! only values already computed, and never blocks on I/O — so golden
+//! IterEvent streams and thread-count bit-identity are unaffected, and
+//! the `benches/kernels.rs` obs-overhead guard covers it.
+
+pub mod alerts;
+pub mod detect;
+pub mod series;
+pub mod slo;
+
+pub use alerts::{Alert, AlertKind, AlertStore, RateWindow};
+pub use detect::{Detector, DetectorConfig, Transition};
+pub use series::{ConvergenceSeries, SeriesPoint, SeriesSnapshot, SeriesStore, SERIES_CAPACITY};
+pub use slo::{evaluate, SloConfig, SloEngine, SloSample, SloStatus, SloTargetStatus};
+
+/// Per-scheduler watch state: one convergence series + detector per
+/// job, plus the scheduler-wide alert store.
+///
+/// Owned by the scheduler (like [`crate::obs::ProfileStore`]) rather
+/// than being process-global: job ids restart at 1 per scheduler, so a
+/// global store would cross-contaminate concurrent in-process
+/// schedulers (the test suites run many).
+pub struct JobWatch {
+    /// Job id → series + detector. Public so the HTTP layer can
+    /// snapshot without another indirection.
+    pub series: SeriesStore,
+    /// Alert sink for this scheduler (watchdog + SLO burn).
+    pub alerts: AlertStore,
+    config: DetectorConfig,
+}
+
+impl JobWatch {
+    pub fn new(retention: usize, config: DetectorConfig) -> Self {
+        JobWatch {
+            series: SeriesStore::new(retention),
+            alerts: AlertStore::new(retention.clamp(1, 1024)),
+            config,
+        }
+    }
+
+    /// Register a job at enqueue time. `deadline_s` / `target` feed the
+    /// deadline-risk detector.
+    pub fn enqueued(&self, id: u64, tenant: &str, deadline_s: Option<f64>, target: f64) {
+        self.series.enqueued(id, tenant, Detector::new(self.config, deadline_s, target));
+    }
+
+    /// Stamp the solver label once the job starts running.
+    pub fn started(&self, id: u64, solver: &str) {
+        self.series.with(id, |e| {
+            e.solver = solver.to_string();
+            e.state = "running".to_string();
+        });
+    }
+
+    /// Feed one iteration boundary: append the series point and run the
+    /// detectors. Returns the alert edges so the caller can emit SSE
+    /// `warning` events; the edges are already applied to the store.
+    pub fn observe(&self, id: u64, event: &crate::api::IterEvent) -> Vec<Transition> {
+        let point = SeriesPoint {
+            iter: event.iter as u64,
+            objective: event.objective,
+            rel_err: event.rel_err,
+            updated_blocks: event.updated_blocks as u64,
+            gamma: event.gamma,
+            tau: event.tau,
+            iter_s: event.time_s,
+        };
+        let transitions = self
+            .series
+            .with(id, |e| {
+                e.series.push(point);
+                e.detector.observe(point.iter, point.objective, point.rel_err, point.iter_s)
+            })
+            .unwrap_or_default();
+        if !transitions.is_empty() {
+            let scope = format!("job:{id}");
+            let now = crate::obs::now_us();
+            for t in &transitions {
+                if t.resolved {
+                    self.alerts.resolve(t.kind, &scope, now);
+                } else {
+                    self.alerts.fire(t.kind, &scope, t.message.clone(), now);
+                }
+            }
+        }
+        transitions
+    }
+
+    /// Job reached a terminal state: resolve its alerts, stamp the
+    /// outcome, prune past retention.
+    pub fn terminal(&self, id: u64, state: &str, now_us: u64) {
+        self.alerts.resolve_scope(&format!("job:{id}"), now_us);
+        self.series.terminal(id, state);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::api::IterEvent;
+
+    fn iter_event(iter: usize, objective: f64) -> IterEvent {
+        IterEvent {
+            iter,
+            gamma: 0.9,
+            tau: f64::NAN,
+            updated_blocks: 4,
+            objective,
+            rel_err: f64::NAN,
+            time_s: iter as f64 * 0.001,
+            sim_time_s: 0.0,
+        }
+    }
+
+    #[test]
+    fn watch_fires_stall_and_terminal_resolves_it() {
+        let config = DetectorConfig { stall_window: 4, ..DetectorConfig::default() };
+        let watch = JobWatch::new(16, config);
+        watch.enqueued(1, "default", None, 0.0);
+        watch.started(1, "fpa");
+        let mut fired = 0;
+        for i in 0..20usize {
+            let obj = if i < 3 { 10.0 - i as f64 } else { 7.5 };
+            for t in watch.observe(1, &iter_event(i, obj)) {
+                assert_eq!(t.kind, AlertKind::Stall);
+                fired += 1;
+            }
+        }
+        assert_eq!(fired, 1, "one stall edge while flat");
+        assert!(watch.alerts.is_firing(AlertKind::Stall, "job:1"));
+        watch.terminal(1, "done", crate::obs::now_us());
+        assert!(!watch.alerts.is_firing(AlertKind::Stall, "job:1"));
+        let recent = watch.alerts.recent();
+        assert_eq!(recent.len(), 1, "terminal resolution lands in history");
+        assert!(recent[0].resolved_us.is_some());
+        // Totals survive resolution for /metrics.
+        let stall = watch.alerts.counts().into_iter().find(|(l, _, _)| *l == "stall").unwrap();
+        assert_eq!((stall.1, stall.2), (1, 0));
+        // The series itself survives terminal until pruned.
+        let snap = watch.series.snapshot(1).expect("series retained after terminal");
+        assert_eq!(snap.state, "done");
+        assert_eq!(snap.solver, "fpa");
+        assert_eq!(snap.recorded, 20);
+    }
+
+    #[test]
+    fn observe_on_unknown_job_is_a_quiet_noop() {
+        let watch = JobWatch::new(4, DetectorConfig::default());
+        assert!(watch.observe(99, &iter_event(0, 1.0)).is_empty());
+        watch.terminal(99, "done", 0);
+        assert!(watch.series.snapshot(99).is_none());
+    }
+}

@@ -1,0 +1,351 @@
+//! Per-job convergence time-series with deterministic downsampling.
+//!
+//! Every iteration boundary appends one [`SeriesPoint`] carrying the
+//! paper's convergence state — objective `V(xᵏ)`, relative error,
+//! `|Sᵏ|` (blocks updated), `γᵏ`, `τᵏ` — plus measured iteration
+//! seconds. Storage per job is bounded: when the buffer reaches
+//! capacity the keep-stride doubles and already-stored points that no
+//! longer land on the stride are compacted away. The retained set is a
+//! pure function of the iteration numbers seen so far (never of wall
+//! clock or arrival timing), so two identical solves always serve
+//! identical `/v1/jobs/{id}/convergence` bodies — downsampling
+//! determinism is pinned by tests.
+//!
+//! The most recent point is additionally kept aside so the endpoint
+//! always shows the live frontier even between stride hits.
+
+use std::collections::{HashMap, VecDeque};
+use std::sync::Mutex;
+
+/// Points kept per job before the stride doubles.
+pub const SERIES_CAPACITY: usize = 256;
+
+/// One iteration boundary's convergence state.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct SeriesPoint {
+    pub iter: u64,
+    /// Objective `V(xᵏ)`.
+    pub objective: f64,
+    /// Relative error vs the planted optimum (NaN when `V*` unknown).
+    pub rel_err: f64,
+    /// `|Sᵏ|` — blocks updated this iteration.
+    pub updated_blocks: u64,
+    /// Step size `γᵏ` (NaN for solvers without it).
+    pub gamma: f64,
+    /// Proximal weight `τᵏ` (NaN for solvers without it).
+    pub tau: f64,
+    /// Measured seconds spent in this iteration.
+    pub iter_s: f64,
+}
+
+impl SeriesPoint {
+    fn json(&self) -> String {
+        use crate::serve::jobfile::num;
+        format!(
+            "{{\"iter\":{},\"objective\":{},\"rel_err\":{},\"blocks\":{},\"gamma\":{},\"tau\":{},\"iter_s\":{}}}",
+            self.iter,
+            num(self.objective),
+            num(self.rel_err),
+            self.updated_blocks,
+            num(self.gamma),
+            num(self.tau),
+            num(self.iter_s),
+        )
+    }
+}
+
+/// Bounded, stride-decimated history of one job's convergence.
+pub struct ConvergenceSeries {
+    points: Vec<SeriesPoint>,
+    stride: u64,
+    last: Option<SeriesPoint>,
+    recorded: u64,
+    capacity: usize,
+}
+
+impl ConvergenceSeries {
+    pub fn new(capacity: usize) -> Self {
+        ConvergenceSeries {
+            points: Vec::new(),
+            stride: 1,
+            last: None,
+            recorded: 0,
+            capacity: capacity.max(4),
+        }
+    }
+
+    /// Append one point, decimating deterministically at capacity.
+    pub fn push(&mut self, p: SeriesPoint) {
+        self.recorded += 1;
+        self.last = Some(p);
+        if p.iter % self.stride != 0 {
+            return;
+        }
+        self.points.push(p);
+        while self.points.len() >= self.capacity {
+            self.stride *= 2;
+            let stride = self.stride;
+            self.points.retain(|q| q.iter % stride == 0);
+        }
+    }
+
+    pub fn stride(&self) -> u64 {
+        self.stride
+    }
+
+    pub fn recorded(&self) -> u64 {
+        self.recorded
+    }
+
+    /// Retained points in iteration order (without the live frontier).
+    pub fn points(&self) -> &[SeriesPoint] {
+        &self.points
+    }
+
+    pub fn last(&self) -> Option<SeriesPoint> {
+        self.last
+    }
+}
+
+/// What `GET /v1/jobs/{id}/convergence` returns for one job.
+#[derive(Clone, Debug)]
+pub struct SeriesSnapshot {
+    pub job: u64,
+    pub tenant: String,
+    /// Solver label, `""` until the job starts running.
+    pub solver: String,
+    /// `queued` / `running` / terminal outcome label.
+    pub state: String,
+    pub stride: u64,
+    pub recorded: u64,
+    pub points: Vec<SeriesPoint>,
+    pub last: Option<SeriesPoint>,
+}
+
+impl SeriesSnapshot {
+    /// JSON body; non-finite floats render as `null` via
+    /// [`crate::serve::jobfile::num`].
+    pub fn json(&self) -> String {
+        let points: Vec<String> = self.points.iter().map(|p| p.json()).collect();
+        let last = match &self.last {
+            Some(p) => p.json(),
+            None => "null".to_string(),
+        };
+        format!(
+            "{{\"job\":{},\"tenant\":\"{}\",\"solver\":\"{}\",\"state\":\"{}\",\
+             \"stride\":{},\"recorded\":{},\"points\":[{}],\"last\":{}}}",
+            self.job,
+            crate::serve::jobfile::esc(&self.tenant),
+            crate::serve::jobfile::esc(&self.solver),
+            crate::serve::jobfile::esc(&self.state),
+            self.stride,
+            self.recorded,
+            points.join(","),
+            last,
+        )
+    }
+}
+
+pub(super) struct SeriesEntry {
+    pub tenant: String,
+    pub solver: String,
+    pub state: String,
+    pub series: ConvergenceSeries,
+    pub detector: super::detect::Detector,
+}
+
+struct SeriesInner {
+    map: HashMap<u64, SeriesEntry>,
+    /// Finished jobs in completion order, for FIFO pruning.
+    finished_order: VecDeque<u64>,
+    retention: usize,
+}
+
+/// Concurrent map of job id → convergence series + detector state.
+///
+/// Retention mirrors [`crate::obs::ProfileStore`]: live jobs are never
+/// evicted; finished jobs are pruned FIFO past `retention`.
+pub struct SeriesStore {
+    inner: Mutex<SeriesInner>,
+}
+
+impl SeriesStore {
+    pub fn new(retention: usize) -> Self {
+        SeriesStore {
+            inner: Mutex::new(SeriesInner {
+                map: HashMap::new(),
+                finished_order: VecDeque::new(),
+                retention: retention.max(1),
+            }),
+        }
+    }
+
+    fn locked(&self) -> std::sync::MutexGuard<'_, SeriesInner> {
+        self.inner.lock().unwrap_or_else(|p| p.into_inner())
+    }
+
+    /// Register a job at enqueue time.
+    pub(super) fn enqueued(&self, id: u64, tenant: &str, detector: super::detect::Detector) {
+        let mut inner = self.locked();
+        inner.map.insert(
+            id,
+            SeriesEntry {
+                tenant: tenant.to_string(),
+                solver: String::new(),
+                state: "queued".to_string(),
+                series: ConvergenceSeries::new(SERIES_CAPACITY),
+                detector,
+            },
+        );
+    }
+
+    /// Run `f` against the job's entry if it is still tracked.
+    pub(super) fn with<R>(&self, id: u64, f: impl FnOnce(&mut SeriesEntry) -> R) -> Option<R> {
+        let mut inner = self.locked();
+        inner.map.get_mut(&id).map(f)
+    }
+
+    /// Mark a job terminal and prune the oldest finished entries past
+    /// the retention bound.
+    pub fn terminal(&self, id: u64, state: &str) {
+        let mut inner = self.locked();
+        if let Some(entry) = inner.map.get_mut(&id) {
+            entry.state = state.to_string();
+        } else {
+            return;
+        }
+        inner.finished_order.push_back(id);
+        while inner.finished_order.len() > inner.retention {
+            if let Some(old) = inner.finished_order.pop_front() {
+                inner.map.remove(&old);
+            }
+        }
+    }
+
+    /// Snapshot one job's series for rendering.
+    pub fn snapshot(&self, id: u64) -> Option<SeriesSnapshot> {
+        let inner = self.locked();
+        inner.map.get(&id).map(|e| SeriesSnapshot {
+            job: id,
+            tenant: e.tenant.clone(),
+            solver: e.solver.clone(),
+            state: e.state.clone(),
+            stride: e.series.stride(),
+            recorded: e.series.recorded(),
+            points: e.series.points().to_vec(),
+            last: e.series.last(),
+        })
+    }
+
+    /// Number of tracked jobs (tests).
+    pub fn len(&self) -> usize {
+        self.locked().map.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn pt(iter: u64) -> SeriesPoint {
+        SeriesPoint {
+            iter,
+            objective: 100.0 / (iter + 1) as f64,
+            rel_err: f64::NAN,
+            updated_blocks: 8,
+            gamma: 0.9,
+            tau: 2.0,
+            iter_s: 0.001,
+        }
+    }
+
+    #[test]
+    fn series_is_bounded_and_keeps_stride_points() {
+        let mut s = ConvergenceSeries::new(64);
+        for i in 0..10_000u64 {
+            s.push(pt(i));
+        }
+        assert!(s.points().len() < 64, "capacity respected: {}", s.points().len());
+        assert_eq!(s.recorded(), 10_000);
+        assert!(s.stride().is_power_of_two());
+        assert!(s.stride() > 1, "10k points through a 64-slot ring must decimate");
+        assert_eq!(s.points()[0].iter, 0, "first point always on stride");
+        for p in s.points() {
+            assert_eq!(p.iter % s.stride(), 0, "every retained point lands on the stride");
+        }
+        assert_eq!(s.last().unwrap().iter, 9_999, "frontier kept regardless of stride");
+    }
+
+    #[test]
+    fn downsampling_is_deterministic() {
+        let runs: Vec<Vec<SeriesPoint>> = (0..2)
+            .map(|_| {
+                let mut s = ConvergenceSeries::new(32);
+                for i in 0..5_000u64 {
+                    s.push(pt(i));
+                }
+                let mut v = s.points().to_vec();
+                v.push(s.last().unwrap());
+                v
+            })
+            .collect();
+        assert_eq!(runs[0], runs[1], "same iteration stream → identical retained set");
+    }
+
+    #[test]
+    fn store_prunes_finished_fifo_but_never_live() {
+        let store = SeriesStore::new(2);
+        let det = || super::super::detect::Detector::new(Default::default(), None, 0.0);
+        for id in 1..=5u64 {
+            store.enqueued(id, "default", det());
+        }
+        // Finish 1..=3; retention 2 keeps the last two finished.
+        for id in 1..=3u64 {
+            store.terminal(id, "done");
+        }
+        assert!(store.snapshot(1).is_none(), "oldest finished pruned");
+        assert!(store.snapshot(2).is_some());
+        assert!(store.snapshot(3).is_some());
+        assert!(store.snapshot(4).is_some(), "live job never evicted");
+        assert_eq!(store.snapshot(4).unwrap().state, "queued");
+        assert_eq!(store.snapshot(2).unwrap().state, "done");
+    }
+
+    #[test]
+    fn snapshot_json_renders_nan_as_null_and_parses() {
+        let store = SeriesStore::new(4);
+        store.enqueued(9, "acme", super::super::detect::Detector::new(Default::default(), None, 0.0));
+        store.with(9, |e| {
+            e.solver = "fpa".to_string();
+            e.state = "running".to_string();
+            e.series.push(SeriesPoint {
+                iter: 0,
+                objective: 12.5,
+                rel_err: f64::NAN,
+                updated_blocks: 16,
+                gamma: f64::NAN,
+                tau: f64::INFINITY,
+                iter_s: 0.002,
+            });
+        });
+        let body = store.snapshot(9).unwrap().json();
+        let parsed = crate::serve::jobfile::Json::parse(&body).expect("convergence json parses");
+        let points = match parsed.get("points") {
+            Some(crate::serve::jobfile::Json::Arr(items)) => items,
+            other => panic!("points is not an array: {other:?}"),
+        };
+        assert_eq!(points.len(), 1);
+        assert_eq!(points[0].get("objective").and_then(|v| v.as_f64()), Some(12.5));
+        for field in ["rel_err", "gamma", "tau"] {
+            assert!(
+                matches!(points[0].get(field), Some(crate::serve::jobfile::Json::Null)),
+                "non-finite {field} must render as null"
+            );
+        }
+        assert_eq!(parsed.get("solver").and_then(|v| v.as_str()), Some("fpa"));
+    }
+}

@@ -1,0 +1,480 @@
+//! SLO targets, rolling-window attainment, and burn-rate evaluation.
+//!
+//! `flexa serve --http … --slo slo.toml` declares service-level
+//! objectives; a periodic sampler (spawned by [`crate::http`]) then
+//! snapshots the always-on PR 8 counters/histograms into a bounded
+//! in-memory ring of cumulative [`SloSample`]s, and `GET /v1/slo`
+//! evaluates the rolling window on demand. Three target families:
+//!
+//! - **Service latency** — "`objective` of jobs finish (queue + solve)
+//!   within `p99_ms`". Good/total counts come from the
+//!   `flexa_job_service_seconds` histogram; the good count is taken at
+//!   the largest bucket bound ≤ the threshold, which *undercounts*
+//!   goodness — conservative, so attainment never reads better than
+//!   reality.
+//! - **Shed rate** — sheds (queue-full + quota + rate-limit 429s) per
+//!   submission attempt must stay under `max_rate`.
+//! - **Error rate** — failed jobs per finished job under `max_rate`.
+//!
+//! **Burn rate** is the standard SRE ratio: the fraction of the error
+//! budget consumed per unit of window, `bad_fraction / (1 − objective)`
+//! (for rate targets, `rate / max_rate`). Burn 1.0 = exactly on
+//! budget; >1 = burning toward violation; the sampler raises an
+//! [`super::alerts::AlertKind::SloBurn`] alert past
+//! `burn_alert_threshold` and resolves it when the burn drops back.
+//!
+//! Evaluation is a pure function ([`evaluate`]) over the sample slice
+//! so the burn-rate math is unit-testable without clocks or servers.
+//!
+//! ## TOML schema
+//!
+//! ```toml
+//! [slo]
+//! window_seconds = 300        # rolling evaluation window
+//! sample_interval_ms = 1000   # sampler cadence
+//!
+//! [slo.service]
+//! p99_ms = 250.0              # latency threshold
+//! objective = 0.99            # fraction that must meet it
+//!
+//! [slo.shed]
+//! max_rate = 0.01             # sheds / submission attempts
+//!
+//! [slo.errors]
+//! max_rate = 0.01             # failures / finished jobs
+//! ```
+//!
+//! Every table is optional; an empty `[slo]` file samples but reports
+//! no targets.
+
+use anyhow::{anyhow, bail, Result};
+use std::collections::VecDeque;
+use std::sync::Mutex;
+
+/// Parsed `--slo` file. See the module docs for the schema.
+#[derive(Clone, Copy, Debug)]
+pub struct SloConfig {
+    /// Rolling evaluation window, seconds.
+    pub window_s: f64,
+    /// Sampler cadence, milliseconds.
+    pub sample_interval_ms: u64,
+    /// Service-latency threshold (ms) and objective fraction.
+    pub service_p99_ms: Option<f64>,
+    pub service_objective: f64,
+    /// Shed-rate ceiling (sheds per submission attempt).
+    pub max_shed_rate: Option<f64>,
+    /// Error-rate ceiling (failures per finished job).
+    pub max_error_rate: Option<f64>,
+    /// Burn rate above which the sampler raises an `slo-burn` alert.
+    pub burn_alert_threshold: f64,
+}
+
+impl Default for SloConfig {
+    fn default() -> Self {
+        SloConfig {
+            window_s: 300.0,
+            sample_interval_ms: 1000,
+            service_p99_ms: None,
+            service_objective: 0.99,
+            max_shed_rate: None,
+            max_error_rate: None,
+            burn_alert_threshold: 1.0,
+        }
+    }
+}
+
+impl SloConfig {
+    pub fn from_file(path: &str) -> Result<Self> {
+        let text = std::fs::read_to_string(path)
+            .map_err(|e| anyhow!("cannot read SLO file `{path}`: {e}"))?;
+        Self::from_toml_str(&text).map_err(|e| anyhow!("SLO file `{path}`: {e:#}"))
+    }
+
+    pub fn from_toml_str(text: &str) -> Result<Self> {
+        let doc = crate::config::toml::parse(text).map_err(|e| anyhow!("{e}"))?;
+        let mut cfg = SloConfig::default();
+        let want_f64 = |key: &str, v: &crate::config::toml::Value| -> Result<f64> {
+            v.as_float().ok_or_else(|| anyhow!("`{key}` must be a number"))
+        };
+        for (key, value) in &doc {
+            match key.as_str() {
+                "slo.window_seconds" => {
+                    cfg.window_s = want_f64(key, value)?;
+                    if !(cfg.window_s > 0.0) {
+                        bail!("`slo.window_seconds` must be positive");
+                    }
+                }
+                "slo.sample_interval_ms" => {
+                    let v = value
+                        .as_int()
+                        .ok_or_else(|| anyhow!("`slo.sample_interval_ms` must be an integer"))?;
+                    if v <= 0 {
+                        bail!("`slo.sample_interval_ms` must be positive");
+                    }
+                    cfg.sample_interval_ms = v as u64;
+                }
+                "slo.service.p99_ms" => {
+                    let v = want_f64(key, value)?;
+                    if !(v > 0.0) {
+                        bail!("`slo.service.p99_ms` must be positive");
+                    }
+                    cfg.service_p99_ms = Some(v);
+                }
+                "slo.service.objective" => {
+                    let v = want_f64(key, value)?;
+                    if !(v > 0.0 && v < 1.0) {
+                        bail!("`slo.service.objective` must be in (0, 1)");
+                    }
+                    cfg.service_objective = v;
+                }
+                "slo.shed.max_rate" => {
+                    let v = want_f64(key, value)?;
+                    if !(v > 0.0 && v <= 1.0) {
+                        bail!("`slo.shed.max_rate` must be in (0, 1]");
+                    }
+                    cfg.max_shed_rate = Some(v);
+                }
+                "slo.errors.max_rate" => {
+                    let v = want_f64(key, value)?;
+                    if !(v > 0.0 && v <= 1.0) {
+                        bail!("`slo.errors.max_rate` must be in (0, 1]");
+                    }
+                    cfg.max_error_rate = Some(v);
+                }
+                "slo.burn_alert_threshold" => {
+                    let v = want_f64(key, value)?;
+                    if !(v > 0.0) {
+                        bail!("`slo.burn_alert_threshold` must be positive");
+                    }
+                    cfg.burn_alert_threshold = v;
+                }
+                other => bail!("unknown SLO key `{other}`"),
+            }
+        }
+        Ok(cfg)
+    }
+}
+
+/// One sampler tick. Every field except `t_s` is a *cumulative*
+/// counter snapshot; evaluation works on deltas between the oldest
+/// in-window sample and the newest, so sampler restarts and ring
+/// pruning cannot corrupt rates.
+#[derive(Clone, Copy, Debug)]
+pub struct SloSample {
+    /// Seconds since the engine epoch.
+    pub t_s: f64,
+    /// Jobs whose service time was ≤ the latency threshold.
+    pub service_good: u64,
+    /// All jobs with a recorded service time.
+    pub service_total: u64,
+    /// Submission attempts (accepted + shed).
+    pub attempts: u64,
+    /// Shed submissions (queue-full + quota + rate-limit).
+    pub shed: u64,
+    /// Jobs that reached a terminal state.
+    pub finished: u64,
+    /// Jobs that terminally failed.
+    pub failed: u64,
+}
+
+/// Evaluated state of one target.
+#[derive(Clone, Debug)]
+pub struct SloTargetStatus {
+    /// `service_latency` / `shed_rate` / `error_rate`.
+    pub name: &'static str,
+    /// The declared ceiling/objective, for display.
+    pub target: f64,
+    /// Fraction of the window's events that met the objective.
+    pub attainment: f64,
+    /// Error-budget burn rate (1.0 = exactly on budget).
+    pub burn_rate: f64,
+    /// `burn_rate <= 1` — currently inside budget.
+    pub meeting: bool,
+    /// Events the attainment was computed over (0 = no traffic).
+    pub events: u64,
+}
+
+/// Full `GET /v1/slo` evaluation result.
+#[derive(Clone, Debug)]
+pub struct SloStatus {
+    pub window_s: f64,
+    pub samples: usize,
+    pub targets: Vec<SloTargetStatus>,
+}
+
+impl SloStatus {
+    pub fn json(&self) -> String {
+        use crate::serve::jobfile::num;
+        let targets: Vec<String> = self
+            .targets
+            .iter()
+            .map(|t| {
+                format!(
+                    "{{\"name\":\"{}\",\"target\":{},\"attainment\":{},\"burn_rate\":{},\
+                     \"meeting\":{},\"events\":{}}}",
+                    t.name,
+                    num(t.target),
+                    num(t.attainment),
+                    num(t.burn_rate),
+                    t.meeting,
+                    t.events,
+                )
+            })
+            .collect();
+        format!(
+            "{{\"configured\":true,\"window_seconds\":{},\"samples\":{},\"targets\":[{}]}}",
+            num(self.window_s),
+            self.samples,
+            targets.join(","),
+        )
+    }
+}
+
+fn target_status(name: &'static str, target: f64, budget: f64, bad: u64, total: u64) -> SloTargetStatus {
+    let (attainment, burn) = if total == 0 {
+        // No traffic in the window: vacuously attained, zero burn.
+        (1.0, 0.0)
+    } else {
+        let bad_fraction = bad as f64 / total as f64;
+        (1.0 - bad_fraction, bad_fraction / budget.max(f64::MIN_POSITIVE))
+    };
+    SloTargetStatus { name, target, attainment, burn_rate: burn, meeting: burn <= 1.0, events: total }
+}
+
+/// Pure rolling-window evaluation; `samples` must be in time order.
+/// Deltas are taken between the first and last sample, so callers pass
+/// only the in-window slice (the engine's ring already is one).
+pub fn evaluate(config: &SloConfig, samples: &[SloSample]) -> SloStatus {
+    let mut targets = Vec::new();
+    let (first, last) = match (samples.first(), samples.last()) {
+        (Some(f), Some(l)) if samples.len() >= 2 => (*f, *l),
+        _ => {
+            // Fewer than two samples: report configured targets as
+            // vacuously attained rather than inventing rates.
+            if config.service_p99_ms.is_some() {
+                targets.push(target_status(
+                    "service_latency",
+                    config.service_objective,
+                    1.0 - config.service_objective,
+                    0,
+                    0,
+                ));
+            }
+            if let Some(rate) = config.max_shed_rate {
+                targets.push(target_status("shed_rate", rate, rate, 0, 0));
+            }
+            if let Some(rate) = config.max_error_rate {
+                targets.push(target_status("error_rate", rate, rate, 0, 0));
+            }
+            return SloStatus { window_s: config.window_s, samples: samples.len(), targets };
+        }
+    };
+    if config.service_p99_ms.is_some() {
+        let total = last.service_total.saturating_sub(first.service_total);
+        let good = last.service_good.saturating_sub(first.service_good);
+        let bad = total.saturating_sub(good);
+        targets.push(target_status(
+            "service_latency",
+            config.service_objective,
+            1.0 - config.service_objective,
+            bad,
+            total,
+        ));
+    }
+    if let Some(rate) = config.max_shed_rate {
+        let attempts = last.attempts.saturating_sub(first.attempts);
+        let shed = last.shed.saturating_sub(first.shed);
+        targets.push(target_status("shed_rate", rate, rate, shed, attempts));
+    }
+    if let Some(rate) = config.max_error_rate {
+        let finished = last.finished.saturating_sub(first.finished);
+        let failed = last.failed.saturating_sub(first.failed);
+        targets.push(target_status("error_rate", rate, rate, failed, finished));
+    }
+    SloStatus { window_s: config.window_s, samples: samples.len(), targets }
+}
+
+/// Sample ring + evaluation entry point, shared between the sampler
+/// thread and `GET /v1/slo` handlers.
+pub struct SloEngine {
+    config: SloConfig,
+    inner: Mutex<VecDeque<SloSample>>,
+}
+
+impl SloEngine {
+    pub fn new(config: SloConfig) -> Self {
+        SloEngine { config, inner: Mutex::new(VecDeque::new()) }
+    }
+
+    pub fn config(&self) -> &SloConfig {
+        &self.config
+    }
+
+    /// Ring capacity: enough samples to span the window at the sampler
+    /// cadence (plus one boundary sample), hard-capped for safety.
+    fn capacity(&self) -> usize {
+        let per_window = (self.config.window_s * 1000.0 / self.config.sample_interval_ms as f64).ceil();
+        (per_window as usize + 2).clamp(2, 8192)
+    }
+
+    /// Append one sample, dropping samples that fell out of the window.
+    pub fn ingest(&self, sample: SloSample) {
+        let mut ring = self.inner.lock().unwrap_or_else(|p| p.into_inner());
+        ring.push_back(sample);
+        let cap = self.capacity();
+        while ring.len() > cap {
+            ring.pop_front();
+        }
+        // Also trim by time so a slow sampler (stalled host) does not
+        // stretch the window arbitrarily; keep one boundary sample.
+        while ring.len() > 2 && ring[1].t_s <= sample.t_s - self.config.window_s {
+            ring.pop_front();
+        }
+    }
+
+    pub fn status(&self) -> SloStatus {
+        let ring = self.inner.lock().unwrap_or_else(|p| p.into_inner());
+        let samples: Vec<SloSample> = ring.iter().copied().collect();
+        drop(ring);
+        evaluate(&self.config, &samples)
+    }
+
+    pub fn status_json(&self) -> String {
+        self.status().json()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample(t_s: f64, good: u64, total: u64) -> SloSample {
+        SloSample {
+            t_s,
+            service_good: good,
+            service_total: total,
+            attempts: total,
+            shed: 0,
+            finished: total,
+            failed: 0,
+        }
+    }
+
+    #[test]
+    fn toml_schema_round_trips() {
+        let cfg = SloConfig::from_toml_str(
+            "[slo]\nwindow_seconds = 60\nsample_interval_ms = 250\n\n\
+             [slo.service]\np99_ms = 150.0\nobjective = 0.95\n\n\
+             [slo.shed]\nmax_rate = 0.05\n\n[slo.errors]\nmax_rate = 0.02\n",
+        )
+        .expect("valid SLO file parses");
+        assert_eq!(cfg.window_s, 60.0);
+        assert_eq!(cfg.sample_interval_ms, 250);
+        assert_eq!(cfg.service_p99_ms, Some(150.0));
+        assert_eq!(cfg.service_objective, 0.95);
+        assert_eq!(cfg.max_shed_rate, Some(0.05));
+        assert_eq!(cfg.max_error_rate, Some(0.02));
+
+        assert!(SloConfig::from_toml_str("[slo]\nbogus = 1\n").is_err());
+        assert!(SloConfig::from_toml_str("[slo.service]\nobjective = 1.5\n").is_err());
+        let empty = SloConfig::from_toml_str("").expect("empty file is a valid no-target config");
+        assert!(empty.service_p99_ms.is_none());
+    }
+
+    #[test]
+    fn burn_rate_math_is_exact_on_synthetic_deltas() {
+        let cfg = SloConfig {
+            service_p99_ms: Some(100.0),
+            service_objective: 0.99,
+            max_shed_rate: Some(0.1),
+            max_error_rate: Some(0.5),
+            ..SloConfig::default()
+        };
+        // Window delta: 1000 jobs, 980 good → bad fraction 2%, budget
+        // 1% → burn 2.0. Sheds 50/1000 → rate 5% vs 10% → burn 0.5.
+        // Failures 100/1000 vs 50% → burn 0.2.
+        let samples = [
+            SloSample {
+                t_s: 0.0,
+                service_good: 100,
+                service_total: 100,
+                attempts: 120,
+                shed: 10,
+                finished: 100,
+                failed: 0,
+            },
+            SloSample {
+                t_s: 30.0,
+                service_good: 1080,
+                service_total: 1100,
+                attempts: 1120,
+                shed: 60,
+                finished: 1100,
+                failed: 100,
+            },
+        ];
+        let status = evaluate(&cfg, &samples);
+        assert_eq!(status.targets.len(), 3);
+        let svc = &status.targets[0];
+        assert_eq!(svc.name, "service_latency");
+        assert!((svc.attainment - 0.98).abs() < 1e-12);
+        assert!((svc.burn_rate - 2.0).abs() < 1e-9, "burn {}", svc.burn_rate);
+        assert!(!svc.meeting);
+        let shed = &status.targets[1];
+        assert!((shed.burn_rate - 0.5).abs() < 1e-12);
+        assert!(shed.meeting);
+        let err = &status.targets[2];
+        assert!((err.burn_rate - 0.2).abs() < 1e-12);
+        assert!(err.meeting);
+    }
+
+    #[test]
+    fn no_traffic_window_is_vacuously_met() {
+        let cfg = SloConfig { service_p99_ms: Some(100.0), ..SloConfig::default() };
+        let status = evaluate(&cfg, &[sample(0.0, 50, 50), sample(10.0, 50, 50)]);
+        assert_eq!(status.targets.len(), 1);
+        assert_eq!(status.targets[0].attainment, 1.0);
+        assert_eq!(status.targets[0].burn_rate, 0.0);
+        assert!(status.targets[0].meeting);
+        assert_eq!(status.targets[0].events, 0);
+    }
+
+    #[test]
+    fn engine_ring_is_bounded_and_time_trimmed() {
+        let cfg = SloConfig {
+            window_s: 10.0,
+            sample_interval_ms: 1000,
+            service_p99_ms: Some(100.0),
+            ..SloConfig::default()
+        };
+        let engine = SloEngine::new(cfg);
+        for i in 0..100u64 {
+            engine.ingest(sample(i as f64, i * 9, i * 10));
+        }
+        let status = engine.status();
+        // 10s window at 1s cadence → at most window+2 samples survive.
+        assert!(status.samples <= 13, "ring too large: {}", status.samples);
+        // Rates computed over the surviving window are still 10%-bad.
+        let svc = &status.targets[0];
+        assert!((svc.attainment - 0.9).abs() < 1e-9);
+    }
+
+    #[test]
+    fn status_json_parses_and_flags_configured() {
+        let engine = SloEngine::new(SloConfig {
+            service_p99_ms: Some(50.0),
+            ..SloConfig::default()
+        });
+        engine.ingest(sample(0.0, 10, 10));
+        engine.ingest(sample(1.0, 15, 20));
+        let parsed = crate::serve::jobfile::Json::parse(&engine.status_json()).expect("slo json");
+        assert_eq!(parsed.get("configured").and_then(|v| v.as_bool()), Some(true));
+        let targets = match parsed.get("targets") {
+            Some(crate::serve::jobfile::Json::Arr(items)) => items,
+            other => panic!("targets not an array: {other:?}"),
+        };
+        assert_eq!(targets[0].get("name").and_then(|v| v.as_str()), Some("service_latency"));
+        // 10 new jobs, 5 good → attainment 0.5.
+        assert_eq!(targets[0].get("attainment").and_then(|v| v.as_f64()), Some(0.5));
+    }
+}

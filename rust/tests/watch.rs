@@ -1,0 +1,515 @@
+//! End-to-end tests for `flexa::watch`: a deterministically-stalling
+//! job fires a `stall` alert that resolves at terminal and is visible
+//! across every surface (`/v1/alerts`, `/metrics`, the SSE `warning`
+//! event, and the per-job convergence series); healthy short jobs stay
+//! silent; the SLO sampler reports attainment and raises `slo-burn`
+//! only for unattainable targets; series/profile retention holds under
+//! concurrent finishers; and the cluster router rolls a killed backend
+//! up into `backend-down` on `/v1/alerts`, `/v1/cluster` and
+//! `/metrics`.
+
+use flexa::cluster::{BackendSpec, ClusterConfig, ClusterServer, HealthConfig, SpawnedCluster};
+use flexa::http::{HttpConfig, HttpServer, SpawnedServer};
+use flexa::serve::{Json, ServeConfig};
+use flexa::watch::DetectorConfig;
+use std::io::{Read, Write};
+use std::net::TcpStream;
+use std::time::{Duration, Instant};
+
+fn spawn(http: HttpConfig, serve: ServeConfig) -> SpawnedServer {
+    HttpServer::bind("127.0.0.1:0", http, serve, flexa::api::Registry::with_defaults())
+        .expect("bind loopback server")
+        .spawn()
+}
+
+fn spawn_with_slo(slo_toml: &str) -> SpawnedServer {
+    let slo = flexa::watch::SloConfig::from_toml_str(slo_toml).expect("valid SLO TOML");
+    HttpServer::bind_with_slo(
+        "127.0.0.1:0",
+        HttpConfig { access_log: false, ..HttpConfig::default() },
+        ServeConfig::default().with_workers(1),
+        flexa::api::Registry::with_defaults(),
+        None,
+        Some(slo),
+    )
+    .expect("bind loopback server with SLO engine")
+    .spawn()
+}
+
+/// One `Connection: close` exchange; returns (status, body).
+fn req(addr: &str, method: &str, path: &str, body: Option<&str>) -> (u16, String) {
+    let mut stream = TcpStream::connect(addr).expect("connect");
+    stream.set_read_timeout(Some(Duration::from_secs(60))).unwrap();
+    let mut head = format!("{method} {path} HTTP/1.1\r\nHost: {addr}\r\nConnection: close\r\n");
+    if let Some(b) = body {
+        head.push_str(&format!("Content-Length: {}\r\n", b.len()));
+    }
+    head.push_str("\r\n");
+    stream.write_all(head.as_bytes()).unwrap();
+    if let Some(b) = body {
+        stream.write_all(b.as_bytes()).unwrap();
+    }
+    let mut raw = Vec::new();
+    stream.read_to_end(&mut raw).expect("read response");
+    let raw = String::from_utf8(raw).expect("utf8 response");
+    let (head, body) = raw.split_once("\r\n\r\n").unwrap_or((raw.as_str(), ""));
+    let status: u16 = head
+        .lines()
+        .next()
+        .and_then(|l| l.split_whitespace().nth(1))
+        .and_then(|s| s.parse().ok())
+        .unwrap_or_else(|| panic!("malformed response head: {head}"));
+    (status, body.to_string())
+}
+
+fn post_job(addr: &str, spec: &str) -> u64 {
+    let (status, body) = req(addr, "POST", "/v1/jobs", Some(spec));
+    assert_eq!(status, 202, "POST /v1/jobs: {body}");
+    let doc = Json::parse(&body).expect("valid submit response");
+    doc.get("job").and_then(Json::as_f64).expect("job id") as u64
+}
+
+fn wait_finished(addr: &str, job: u64) {
+    let deadline = Instant::now() + Duration::from_secs(120);
+    loop {
+        let (status, body) = req(addr, "GET", &format!("/v1/jobs/{job}"), None);
+        assert_eq!(status, 200, "GET /v1/jobs/{job}: {body}");
+        let doc = Json::parse(&body).expect("valid status json");
+        if doc.get("state").and_then(Json::as_str) == Some("finished") {
+            return;
+        }
+        assert!(Instant::now() < deadline, "job {job} never finished: {body}");
+        std::thread::sleep(Duration::from_millis(10));
+    }
+}
+
+/// A λ-override large enough that soft-thresholding pins `x = 0` from
+/// the first iteration: the objective is bit-identically flat forever
+/// (and the override drops the planted `V*`, so `rel_err` is NaN) —
+/// a deterministic stall, independent of solver dynamics.
+fn stall_spec() -> &'static str {
+    "{\"problem\":\"lasso\",\"rows\":20,\"cols\":60,\"seed\":3,\"lambda\":1000000,\
+     \"algo\":\"fpa\",\"max_iters\":40,\"target\":0,\"tag\":\"stall\"}"
+}
+
+fn healthy_spec(i: usize) -> String {
+    format!(
+        "{{\"problem\":\"lasso\",\"rows\":25,\"cols\":75,\"seed\":7,\"algo\":\"fpa\",\
+         \"max_iters\":40,\"target\":0,\"tag\":\"watch-{i}\"}}"
+    )
+}
+
+/// First sample whose series starts with `prefix` (handles labels).
+fn labeled_sample(text: &str, prefix: &str) -> f64 {
+    text.lines()
+        .find(|l| l.starts_with(prefix) && !l.starts_with('#'))
+        .and_then(|l| l.rsplit_once(' '))
+        .and_then(|(_, v)| v.trim().parse().ok())
+        .unwrap_or_else(|| panic!("no `{prefix}` sample in:\n{text}"))
+}
+
+fn alerts_of<'a>(doc: &'a Json, key: &str) -> &'a [Json] {
+    match doc.get(key) {
+        Some(Json::Arr(items)) => items,
+        other => panic!("`{key}` must be an array, got {other:?}"),
+    }
+}
+
+/// Tentpole acceptance: the deterministic stall fires exactly one
+/// `stall` alert, visible while firing nowhere (the job is too fast)
+/// but pinned in `recent` after terminal resolution, counted in
+/// `/metrics`, replayed as an SSE `warning` event, and the convergence
+/// series serves the whole trajectory with NaN `rel_err` as `null`.
+#[test]
+fn stalling_job_fires_stall_across_all_surfaces() {
+    let serve = ServeConfig::default()
+        .with_workers(1)
+        .with_watch(DetectorConfig { stall_window: 5, ..DetectorConfig::default() });
+    let server = spawn(HttpConfig { access_log: false, ..HttpConfig::default() }, serve);
+    let addr = server.addr().to_string();
+    let job = post_job(&addr, stall_spec());
+    wait_finished(&addr, job);
+
+    // /v1/alerts: the stall is resolved (terminal resolves the scope)
+    // and sits in `recent` with both timestamps.
+    let (status, body) = req(&addr, "GET", "/v1/alerts", None);
+    assert_eq!(status, 200, "{body}");
+    let doc = Json::parse(&body).expect("alerts JSON must parse");
+    let scope = format!("job:{job}");
+    assert!(
+        !alerts_of(&doc, "active")
+            .iter()
+            .any(|a| a.get("scope").and_then(Json::as_str) == Some(scope.as_str())),
+        "terminal must resolve the job's alerts: {body}"
+    );
+    let stall = alerts_of(&doc, "recent")
+        .iter()
+        .find(|a| {
+            a.get("kind").and_then(Json::as_str) == Some("stall")
+                && a.get("scope").and_then(Json::as_str) == Some(scope.as_str())
+        })
+        .unwrap_or_else(|| panic!("no resolved stall for {scope} in recent: {body}"));
+    assert!(stall.get("resolved_us").and_then(Json::as_f64).is_some(), "{body}");
+    assert!(stall.get("since_us").and_then(Json::as_f64).is_some(), "{body}");
+    let message = stall.get("message").and_then(Json::as_str).expect("message");
+    assert!(message.contains("iteration"), "message names the iteration: {message}");
+
+    // /metrics: monotone total counted, nothing left active.
+    let (_, metrics) = req(&addr, "GET", "/metrics", None);
+    assert!(labeled_sample(&metrics, "flexa_alerts_total{kind=\"stall\"}") >= 1.0, "{metrics}");
+    assert_eq!(labeled_sample(&metrics, "flexa_alerts_active{kind=\"stall\"}"), 0.0, "{metrics}");
+    assert!(metrics.contains("# TYPE flexa_alerts_total counter"), "{metrics}");
+    assert!(metrics.contains("# TYPE flexa_alerts_active gauge"), "{metrics}");
+
+    // SSE replay carries the warning edge (firing, then resolution).
+    let (status, sse) = req(&addr, "GET", &format!("/v1/jobs/{job}/events"), None);
+    assert_eq!(status, 200);
+    assert!(sse.contains("event: warning"), "no warning event in SSE replay:\n{sse}");
+    assert!(sse.contains("\"kind\":\"stall\""), "{sse}");
+    assert!(sse.contains("\"resolved\":false"), "the firing edge streams: {sse}");
+
+    // Convergence series: whole trajectory recorded, NaN rel_err (the
+    // λ-override drops V*) rendered as null, document fully parseable.
+    let (status, conv) = req(&addr, "GET", &format!("/v1/jobs/{job}/convergence"), None);
+    assert_eq!(status, 200, "{conv}");
+    let series = Json::parse(&conv).expect("convergence JSON must parse");
+    assert_eq!(series.get("job").and_then(Json::as_f64), Some(job as f64));
+    assert_eq!(series.get("state").and_then(Json::as_str), Some("done"), "{conv}");
+    assert_eq!(series.get("solver").and_then(Json::as_str), Some("fpa"), "{conv}");
+    assert_eq!(series.get("recorded").and_then(Json::as_f64), Some(40.0), "{conv}");
+    assert!(conv.contains("\"rel_err\":null"), "NaN must render as null: {conv}");
+    let Some(Json::Arr(points)) = series.get("points") else { panic!("{conv}") };
+    assert!(!points.is_empty(), "{conv}");
+    for p in points {
+        assert!(p.get("objective").and_then(Json::as_f64).is_some(), "{conv}");
+        assert!(p.get("iter").and_then(Json::as_f64).is_some(), "{conv}");
+    }
+    server.shutdown().expect("clean shutdown");
+}
+
+/// Healthy fixed-budget jobs (40 iterations, default 25-iteration stall
+/// window needing ≥ 50 iterations) never alert: both alert lists stay
+/// empty and every per-kind counter reads zero.
+#[test]
+fn healthy_short_jobs_raise_no_alerts() {
+    let server = spawn(
+        HttpConfig { access_log: false, ..HttpConfig::default() },
+        ServeConfig::default().with_workers(2),
+    );
+    let addr = server.addr().to_string();
+    let jobs: Vec<u64> = (0..3).map(|i| post_job(&addr, &healthy_spec(i))).collect();
+    for job in &jobs {
+        wait_finished(&addr, *job);
+    }
+
+    let (status, body) = req(&addr, "GET", "/v1/alerts", None);
+    assert_eq!(status, 200);
+    let doc = Json::parse(&body).expect("alerts JSON must parse");
+    assert!(alerts_of(&doc, "active").is_empty(), "{body}");
+    assert!(alerts_of(&doc, "recent").is_empty(), "{body}");
+
+    let (_, metrics) = req(&addr, "GET", "/metrics", None);
+    for kind in ["stall", "divergence", "deadline-risk", "slo-burn"] {
+        assert_eq!(
+            labeled_sample(&metrics, &format!("flexa_alerts_total{{kind=\"{kind}\"}}")),
+            0.0,
+            "{metrics}"
+        );
+    }
+
+    // The healthy job's series is still served, with finite rel_err
+    // (the planted V* survives — no λ override).
+    let (status, conv) = req(&addr, "GET", &format!("/v1/jobs/{}/convergence", jobs[0]), None);
+    assert_eq!(status, 200);
+    let series = Json::parse(&conv).expect("convergence JSON must parse");
+    assert_eq!(series.get("recorded").and_then(Json::as_f64), Some(40.0), "{conv}");
+    let last = series.get("last").expect("live frontier present");
+    assert!(last.get("rel_err").and_then(Json::as_f64).is_some(), "{conv}");
+    server.shutdown().expect("clean shutdown");
+}
+
+/// Endpoint contract: unknown job → 404 with a JSON error; wrong
+/// method → 405; `/v1/slo` without `--slo` reports unconfigured.
+#[test]
+fn convergence_and_slo_endpoint_contracts() {
+    let server = spawn(
+        HttpConfig { access_log: false, ..HttpConfig::default() },
+        ServeConfig::default().with_workers(1),
+    );
+    let addr = server.addr().to_string();
+    let (status, body) = req(&addr, "GET", "/v1/jobs/99999/convergence", None);
+    assert_eq!(status, 404, "{body}");
+    let (status, _) = req(&addr, "POST", "/v1/jobs/1/convergence", Some("{}"));
+    assert_eq!(status, 405);
+    let (status, _) = req(&addr, "DELETE", "/v1/alerts", None);
+    assert_eq!(status, 405);
+    let (status, body) = req(&addr, "GET", "/v1/slo", None);
+    assert_eq!(status, 200);
+    let doc = Json::parse(&body).expect("slo JSON must parse");
+    assert_eq!(doc.get("configured").and_then(Json::as_bool), Some(false), "{body}");
+    server.shutdown().expect("clean shutdown");
+}
+
+/// Generous SLO targets: the sampler populates `/v1/slo` with all
+/// three targets meeting their objectives, and no `slo-burn` fires.
+#[test]
+fn slo_sampler_reports_attainment_without_burning() {
+    let server = spawn_with_slo(
+        "[slo]\nwindow_seconds = 60\nsample_interval_ms = 25\nburn_alert_threshold = 10\n\
+         [slo.service]\np99_ms = 60000\nobjective = 0.5\n\
+         [slo.shed]\nmax_rate = 0.99\n\
+         [slo.errors]\nmax_rate = 0.99\n",
+    );
+    let addr = server.addr().to_string();
+    for i in 0..3 {
+        let job = post_job(&addr, &healthy_spec(i));
+        wait_finished(&addr, job);
+    }
+    // Let the 25 ms sampler take enough snapshots to leave the vacuous
+    // (< 2 samples) regime and observe the finished jobs.
+    let deadline = Instant::now() + Duration::from_secs(30);
+    let doc = loop {
+        let (status, body) = req(&addr, "GET", "/v1/slo", None);
+        assert_eq!(status, 200, "{body}");
+        let doc = Json::parse(&body).expect("slo JSON must parse");
+        let samples = doc.get("samples").and_then(Json::as_f64).unwrap_or(0.0);
+        let events: f64 = match doc.get("targets") {
+            Some(Json::Arr(ts)) => {
+                ts.iter().filter_map(|t| t.get("events").and_then(Json::as_f64)).sum()
+            }
+            _ => 0.0,
+        };
+        if samples >= 2.0 && events > 0.0 {
+            break doc;
+        }
+        assert!(Instant::now() < deadline, "sampler never observed traffic: {body}");
+        std::thread::sleep(Duration::from_millis(20));
+    };
+    assert_eq!(doc.get("configured").and_then(Json::as_bool), Some(true));
+    assert_eq!(doc.get("window_seconds").and_then(Json::as_f64), Some(60.0));
+    let Some(Json::Arr(targets)) = doc.get("targets") else { panic!("targets array") };
+    let names: Vec<&str> = targets.iter().filter_map(|t| t.get("name").and_then(Json::as_str)).collect();
+    assert_eq!(names, ["service_latency", "shed_rate", "error_rate"], "{names:?}");
+    for t in targets {
+        let name = t.get("name").and_then(Json::as_str).unwrap();
+        assert_eq!(t.get("meeting").and_then(Json::as_bool), Some(true), "{name} not meeting");
+        let burn = t.get("burn_rate").and_then(Json::as_f64).unwrap_or(f64::NAN);
+        assert!(burn <= 10.0, "{name} burn {burn} above threshold");
+    }
+    let (_, alerts) = req(&addr, "GET", "/v1/alerts", None);
+    assert!(!alerts.contains("\"kind\":\"slo-burn\""), "{alerts}");
+    server.shutdown().expect("clean shutdown");
+}
+
+/// An unattainable latency objective (p99 ≤ 1 µs): every served job is
+/// a bad event, the burn rate explodes past the threshold, and the
+/// sampler raises an `slo-burn` alert scoped to the target.
+#[test]
+fn impossible_latency_slo_fires_burn_alert() {
+    let server = spawn_with_slo(
+        "[slo]\nwindow_seconds = 60\nsample_interval_ms = 25\nburn_alert_threshold = 1.0\n\
+         [slo.service]\np99_ms = 0.001\nobjective = 0.5\n",
+    );
+    let addr = server.addr().to_string();
+    let job = post_job(&addr, &healthy_spec(0));
+    wait_finished(&addr, job);
+
+    let deadline = Instant::now() + Duration::from_secs(30);
+    loop {
+        let (status, body) = req(&addr, "GET", "/v1/alerts", None);
+        assert_eq!(status, 200, "{body}");
+        let doc = Json::parse(&body).expect("alerts JSON must parse");
+        let fired = alerts_of(&doc, "active").iter().any(|a| {
+            a.get("kind").and_then(Json::as_str) == Some("slo-burn")
+                && a.get("scope").and_then(Json::as_str) == Some("slo:service_latency")
+        });
+        if fired {
+            break;
+        }
+        assert!(Instant::now() < deadline, "slo-burn never fired: {body}");
+        std::thread::sleep(Duration::from_millis(20));
+    }
+    let (_, slo) = req(&addr, "GET", "/v1/slo", None);
+    let doc = Json::parse(&slo).expect("slo JSON must parse");
+    let Some(Json::Arr(targets)) = doc.get("targets") else { panic!("{slo}") };
+    let svc = targets
+        .iter()
+        .find(|t| t.get("name").and_then(Json::as_str) == Some("service_latency"))
+        .unwrap_or_else(|| panic!("{slo}"));
+    assert_eq!(svc.get("meeting").and_then(Json::as_bool), Some(false), "{slo}");
+    assert!(svc.get("burn_rate").and_then(Json::as_f64).unwrap_or(0.0) > 1.0, "{slo}");
+    let (_, metrics) = req(&addr, "GET", "/metrics", None);
+    assert!(labeled_sample(&metrics, "flexa_alerts_total{kind=\"slo-burn\"}") >= 1.0, "{metrics}");
+    assert!(labeled_sample(&metrics, "flexa_alerts_active{kind=\"slo-burn\"}") >= 1.0, "{metrics}");
+    server.shutdown().expect("clean shutdown");
+}
+
+/// Retention under concurrent finishers (the scheduler's worker pool in
+/// miniature): 4 threads drive disjoint job ids through enqueue →
+/// iterate → terminal against one shared `JobWatch` + `ProfileStore`;
+/// both stores end bounded by retention with no lost updates or panics.
+#[test]
+fn series_and_profile_stores_prune_under_concurrent_finishers() {
+    use flexa::obs::ProfileStore;
+    use flexa::watch::JobWatch;
+    use std::sync::Arc;
+
+    const RETENTION: usize = 8;
+    const THREADS: u64 = 4;
+    const JOBS_PER_THREAD: u64 = 50;
+    let watch = Arc::new(JobWatch::new(RETENTION, DetectorConfig::default()));
+    let profiles = Arc::new(ProfileStore::new(RETENTION));
+
+    let handles: Vec<_> = (0..THREADS)
+        .map(|t| {
+            let watch = Arc::clone(&watch);
+            let profiles = Arc::clone(&profiles);
+            std::thread::spawn(move || {
+                for i in 0..JOBS_PER_THREAD {
+                    let id = t * 1000 + i;
+                    watch.enqueued(id, "default", None, 0.0);
+                    profiles.enqueued(id, "default", flexa::obs::now_us());
+                    watch.started(id, "fpa");
+                    for iter in 0..6usize {
+                        let event = flexa::api::IterEvent {
+                            iter,
+                            gamma: 0.9,
+                            tau: f64::NAN,
+                            updated_blocks: 4,
+                            objective: 10.0 - iter as f64,
+                            rel_err: f64::NAN,
+                            time_s: iter as f64 * 1e-4,
+                            sim_time_s: 0.0,
+                        };
+                        watch.observe(id, &event);
+                        profiles.with(id, |p| p.add_iteration(100, 1));
+                    }
+                    let now = flexa::obs::now_us();
+                    watch.terminal(id, "done", now);
+                    profiles.terminal(id, "done", now);
+                }
+            })
+        })
+        .collect();
+    for h in handles {
+        h.join().expect("finisher thread");
+    }
+
+    let mut series_kept = 0usize;
+    let mut profiles_kept = 0usize;
+    for t in 0..THREADS {
+        for i in 0..JOBS_PER_THREAD {
+            let id = t * 1000 + i;
+            if let Some(snap) = watch.series.snapshot(id) {
+                series_kept += 1;
+                assert_eq!(snap.state, "done", "job {id}");
+                assert_eq!(snap.recorded, 6, "job {id}");
+            }
+            if let Some(p) = profiles.get(id) {
+                profiles_kept += 1;
+                assert_eq!(p.iterations.count, 6, "job {id}");
+            }
+        }
+    }
+    assert!(
+        (1..=RETENTION).contains(&series_kept),
+        "series retention violated: {series_kept} kept"
+    );
+    assert!(
+        (1..=RETENTION).contains(&profiles_kept),
+        "profile retention violated: {profiles_kept} kept"
+    );
+    // Nothing lingers in the alert store either: every job resolved.
+    for (_, _, active) in watch.alerts.counts() {
+        assert_eq!(active, 0);
+    }
+}
+
+/// Cluster rollup acceptance: killing a backend drives `backend-down`
+/// onto the router's `/v1/alerts`, into the `/v1/cluster` topology
+/// (which also embeds the healthy backend's alert + SLO documents),
+/// and into the aggregated `/metrics`.
+#[test]
+fn killed_backend_rolls_up_backend_down_alert() {
+    let a = {
+        let http = HttpConfig { access_log: false, ..HttpConfig::default() };
+        HttpServer::bind("127.0.0.1:0", http, ServeConfig::default().with_workers(1), flexa::api::Registry::with_defaults())
+            .expect("bind backend a")
+            .spawn()
+    };
+    let b = {
+        let http = HttpConfig { access_log: false, ..HttpConfig::default() };
+        HttpServer::bind("127.0.0.1:0", http, ServeConfig::default().with_workers(1), flexa::api::Registry::with_defaults())
+            .expect("bind backend b")
+            .spawn()
+    };
+    let specs = vec![
+        BackendSpec { id: "b0".into(), addr: a.addr().to_string() },
+        BackendSpec { id: "b1".into(), addr: b.addr().to_string() },
+    ];
+    let config = ClusterConfig {
+        access_log: false,
+        health: HealthConfig {
+            interval: Duration::from_millis(100),
+            timeout: Duration::from_millis(500),
+            failure_threshold: 2,
+        },
+        ..ClusterConfig::default()
+    };
+    let cluster: SpawnedCluster =
+        ClusterServer::bind("127.0.0.1:0", specs, config).expect("bind cluster router").spawn();
+    let addr = cluster.addr().to_string();
+
+    a.shutdown().expect("backend a shutdown");
+
+    // Prober (~2 × 100 ms) flips b0 unhealthy; the 500 ms watch sweep
+    // then raises the alert.
+    let deadline = Instant::now() + Duration::from_secs(20);
+    loop {
+        let (status, body) = req(&addr, "GET", "/v1/alerts", None);
+        assert_eq!(status, 200, "{body}");
+        let doc = Json::parse(&body).expect("cluster alerts JSON must parse");
+        let down = alerts_of(&doc, "active").iter().any(|al| {
+            al.get("kind").and_then(Json::as_str) == Some("backend-down")
+                && al.get("scope").and_then(Json::as_str) == Some("backend:b0")
+        });
+        if down {
+            break;
+        }
+        assert!(Instant::now() < deadline, "backend-down never fired: {body}");
+        std::thread::sleep(Duration::from_millis(50));
+    }
+
+    // Topology rollup: router-level alerts plus the healthy backend's
+    // embedded alert/SLO documents, all inside one parseable document.
+    let (status, topo) = req(&addr, "GET", "/v1/cluster", None);
+    assert_eq!(status, 200, "{topo}");
+    let doc = Json::parse(&topo).expect("topology JSON must parse");
+    assert!(topo.contains("\"kind\":\"backend-down\""), "{topo}");
+    assert!(topo.contains("\"transitions\":"), "{topo}");
+    assert!(
+        topo.contains("\"slo\":{\"configured\":false}"),
+        "healthy backend's SLO doc must be embedded: {topo}"
+    );
+    let Some(Json::Arr(backends)) = doc.get("backends") else { panic!("{topo}") };
+    let b1 = backends
+        .iter()
+        .find(|x| x.get("id").and_then(Json::as_str) == Some("b1"))
+        .unwrap_or_else(|| panic!("{topo}"));
+    assert_eq!(b1.get("healthy").and_then(Json::as_bool), Some(true), "{topo}");
+    assert!(b1.get("alerts").is_some(), "healthy backend embeds its alerts: {topo}");
+
+    let (_, metrics) = req(&addr, "GET", "/metrics", None);
+    assert!(
+        labeled_sample(&metrics, "flexa_cluster_alerts_total{kind=\"backend-down\"}") >= 1.0,
+        "{metrics}"
+    );
+    assert!(
+        labeled_sample(&metrics, "flexa_cluster_alerts_active{kind=\"backend-down\"}") >= 1.0,
+        "{metrics}"
+    );
+    assert!(metrics.contains("# TYPE flexa_cluster_alerts_total counter"), "{metrics}");
+
+    cluster.shutdown().expect("router shutdown");
+    b.shutdown().expect("backend b shutdown");
+}
